@@ -1,0 +1,110 @@
+//! E5/E9 — §5.3: train a 1D-ARC NCA on one task and watch it "reason":
+//! prints the space-time evolution as colored text and saves the Fig. 8
+//! diagram, then reports exact-match accuracy vs the paper's GPT-4 row.
+//!
+//!   cargo run --release --example arc_1d -- [--task move-1] [--steps N]
+//!       [--seed S] [--out DIR]
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use cax::coordinator::trainer::TrainCfg;
+use cax::coordinator::{evaluator, experiments};
+use cax::datasets::arc1d::{one_hot_batch, Task};
+use cax::runtime::{Engine, Value};
+use cax::viz::spacetime;
+
+fn arg(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn main() -> Result<()> {
+    let task_name = arg("--task").unwrap_or_else(|| "move-1".into());
+    let steps: usize =
+        arg("--steps").map(|s| s.parse()).transpose()?.unwrap_or(300);
+    let seed: u64 = arg("--seed").map(|s| s.parse()).transpose()?.unwrap_or(7);
+    let out = PathBuf::from(arg("--out").unwrap_or_else(|| "out".into()));
+    std::fs::create_dir_all(&out)?;
+
+    let Some(task) = Task::ALL.iter().copied().find(|t| {
+        t.name().eq_ignore_ascii_case(&task_name)
+            || t.name().to_lowercase().replace(' ', "-")
+                == task_name.to_lowercase()
+    }) else {
+        bail!(
+            "unknown task {task_name:?}; available: {}",
+            Task::ALL
+                .iter()
+                .map(|t| t.name().to_lowercase().replace(' ', "-"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    };
+
+    let artifacts = std::env::var("CAX_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    let engine = Engine::load(std::path::Path::new(&artifacts))
+        .context("run `make artifacts` first")?;
+
+    println!("== 1D-ARC NCA on {:?} ({} train steps) ==", task.name(), steps);
+    let (train_set, test_set) =
+        experiments::arc_split(&engine, task, 160, 50, seed)?;
+    let cfg = TrainCfg { steps, seed: seed as u32, log_every: 25,
+                         out_dir: None };
+    let run = experiments::train_arc(&engine, &cfg, task, &train_set)?;
+
+    // Evaluate: the paper's exact-match criterion.
+    let acc = evaluator::arc_accuracy(&engine, &run.state.params, &test_set)?;
+    let pix =
+        evaluator::arc_pixel_accuracy(&engine, &run.state.params, &test_set)?;
+    println!(
+        "\n{}: exact-match {:.1}%  per-pixel {:.1}%  (paper NCA {:.0}%, \
+         GPT-4 {:.0}%)",
+        task.name(), 100.0 * acc, 100.0 * pix, task.paper_nca_accuracy(),
+        task.gpt4_accuracy()
+    );
+
+    // Space-time diagram of one held-out example (Fig. 8).
+    let info = engine.manifest().artifact("arc_traj")?;
+    let w = info.inputs[1].shape[0];
+    let e = &test_set[0];
+    let input1h =
+        one_hot_batch(&[e.input.as_slice()], w).index_axis0(0);
+    let o = engine.execute(
+        "arc_traj",
+        &[Value::F32(run.state.params.clone()), Value::F32(input1h)],
+    )?;
+    let traj = &o[0]; // [T, W, COLORS]
+
+    // Terminal rendering: input row, a few intermediate rows, output row.
+    let glyph = |c: u8| match c {
+        0 => ' ',
+        c => (b'0' + c) as char,
+    };
+    let row_str = |row: &[u8]| -> String {
+        row.iter().map(|&c| glyph(c)).collect()
+    };
+    println!("\ninput  |{}|", row_str(&e.input));
+    let t_len = traj.shape()[0];
+    for k in [t_len / 4, t_len / 2, 3 * t_len / 4] {
+        let frame = traj.index_axis0(k);
+        let pred = cax::datasets::arc1d::argmax_colors(
+            &cax::Tensor::stack(&[frame])?,
+        );
+        println!("t={k:<4} |{}|", row_str(&pred[0]));
+    }
+    let last = traj.index_axis0(t_len - 1);
+    let pred =
+        cax::datasets::arc1d::argmax_colors(&cax::Tensor::stack(&[last])?);
+    println!("output |{}|", row_str(&pred[0]));
+    println!("target |{}|", row_str(&e.target));
+
+    let img = spacetime::render_spacetime_arc(traj)?;
+    let slug = task.name().to_lowercase().replace(' ', "-");
+    let path = out.join(format!("fig8_{slug}.ppm"));
+    img.upscale(6).write_ppm(&path)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

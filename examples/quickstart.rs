@@ -1,0 +1,66 @@
+//! Quickstart: the 60-second tour of the CAX-RS public API.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Loads the AOT artifacts, lists the Table-1 registry, runs each classic
+//! CA on the fused path, and takes a handful of NCA training steps —
+//! everything a new user needs to see to know the stack is alive.
+
+use anyhow::Result;
+
+use cax::automata::WolframRule;
+use cax::coordinator::trainer::TrainCfg;
+use cax::coordinator::{experiments, registry, Path, Simulator};
+use cax::runtime::Engine;
+use cax::util::rng::Rng;
+use cax::util::timer::Timer;
+
+fn main() -> Result<()> {
+    // 1. Load the artifacts produced by `make artifacts`.
+    let artifacts = std::env::var("CAX_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    let engine = Engine::load(std::path::Path::new(&artifacts))?;
+    println!("engine up on {} — {} artifacts\n", engine.platform(),
+             engine.manifest().artifacts.len());
+
+    // 2. The Table-1 catalogue.
+    println!("Table 1 registry:");
+    for e in registry::table1() {
+        println!("  {:<12} {:<46} {:<10} {}", e.key, e.label,
+                 e.ca_type.name(), e.dimensions);
+    }
+
+    // 3. Classic CAs on the fused path (one XLA program per rollout).
+    let sim = Simulator::new(&engine);
+    let mut rng = Rng::new(0);
+    println!("\nclassic CAs (fused path):");
+    for (ca, artifact) in [("eca", "eca_rollout"), ("life", "life_rollout"),
+                           ("lenia", "lenia_rollout")] {
+        let steps = engine.manifest().artifact(artifact)?
+            .meta_usize("steps").unwrap_or(64);
+        let state = sim.random_state(artifact, &mut rng)?;
+        let t = Timer::start();
+        let out = match ca {
+            "eca" => sim.run_eca(Path::Fused, &state, WolframRule::new(30),
+                                 steps)?,
+            "life" => sim.run_life(Path::Fused, &state, steps)?,
+            _ => sim.run_lenia(Path::Fused, &state, steps)?,
+        };
+        println!("  {ca:<6} {steps:>4} steps in {:>8.1} ms  (mean state \
+                  {:.4})", t.elapsed_ms(), out.mean());
+    }
+
+    // 4. A few NCA training steps (growing NCA + sample pool).
+    println!("\ngrowing NCA — 10 fused train steps with the sample pool:");
+    let cfg = TrainCfg { steps: 10, seed: 0, log_every: 5, out_dir: None };
+    let (run, pool) = experiments::train_growing(&engine, &cfg, 32)?;
+    println!("  loss {:.5} -> {:.5}  (pool writes: {})",
+             run.history.values()[0],
+             run.history.last().unwrap(),
+             pool.writes());
+
+    println!("\nnext steps:");
+    println!("  cax list / cax sim life --render / cax train growing");
+    println!("  cax-tables all --quick   # regenerate the paper's tables");
+    Ok(())
+}

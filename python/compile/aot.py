@@ -1,0 +1,178 @@
+"""AOT compiler: lower every Layer-2 artifact to HLO text + manifest.
+
+This is the ONLY Python entry point of the build (`make artifacts`). It
+lowers each artifact function with ``jax.jit(...).lower(...)``, converts the
+StableHLO module to an XlaComputation, and writes **HLO text** — NOT
+``.serialize()``: jax >= 0.5 emits protos with 64-bit instruction ids which
+the runtime's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs in ``artifacts/``:
+- ``<name>.hlo.txt``   — one per artifact
+- ``<name>.bin``       — initial parameter / constant blobs (little-endian f32)
+- ``manifest.json``    — machine-readable signatures the Rust runtime loads
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--preset test|paper]
+[--only name1,name2]``
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import configs
+from compile.models import (arc, autoenc3d, classic, conditional, diffusing,
+                            growing, mnist_classify, vae)
+
+_DTYPES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32",
+           jnp.uint32.dtype: "u32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format).
+
+    ``as_hlo_text(True)`` = print_large_constants: the default printer
+    ELIDES literals over ~10 elements as ``constant({...})``, which the
+    runtime's text parser silently re-parses as ZEROS — wiping perception
+    kernels and masks. Guarded here and by tests/test_aot.py.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(True)
+    if "constant({...})" in text or "{ ... }" in text:
+        raise RuntimeError("HLO text contains elided constants — they would "
+                           "silently become zeros at parse time")
+    return text
+
+
+def dtype_name(dt) -> str:
+    if dt not in _DTYPES:
+        raise ValueError(f"unsupported artifact dtype {dt}")
+    return _DTYPES[dt]
+
+
+def collect_artifacts(preset: str, seed: int = 0) -> list[dict]:
+    """All artifact descriptors across every model family."""
+    cfgs = configs.get_preset(preset)
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 8)
+    arts = []
+    arts += classic.artifacts(cfgs["classic"])
+    arts += growing.artifacts(cfgs["growing"], keys[0])
+    arts += conditional.artifacts(cfgs["conditional"], keys[1])
+    arts += vae.artifacts(cfgs["vae"], keys[2])
+    arts += mnist_classify.artifacts(cfgs["mnist"], keys[3])
+    arts += diffusing.artifacts(cfgs["diffusing"], keys[4])
+    arts += autoenc3d.artifacts(cfgs["autoenc3d"], keys[5])
+    arts += arc.artifacts(cfgs["arc"], keys[6])
+    names = [a["name"] for a in arts]
+    if len(names) != len(set(names)):
+        raise RuntimeError(f"duplicate artifact names: {sorted(names)}")
+    return arts
+
+
+def lower_artifact(art: dict, out_dir: str) -> dict:
+    """Lower one artifact; returns its manifest entry."""
+    name, fn = art["name"], art["fn"]
+    arg_specs = [s for (_, s) in art["args"]]
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    out_shapes = jax.eval_shape(fn, *arg_specs)
+    outputs = [
+        {"dtype": dtype_name(o.dtype), "shape": list(o.shape)}
+        for o in jax.tree_util.tree_leaves(out_shapes)
+    ]
+    entry = {
+        "name": name,
+        "file": fname,
+        "inputs": [
+            {"name": arg_name, "dtype": dtype_name(s.dtype),
+             "shape": list(s.shape)}
+            for (arg_name, s) in art["args"]
+        ],
+        "outputs": outputs,
+        "meta": art.get("meta", {}),
+    }
+    print(f"  {name}: {len(text)} chars, {len(outputs)} outputs, "
+          f"{time.time() - t0:.1f}s")
+    return entry
+
+
+def write_blobs(arts: list[dict], out_dir: str) -> list[dict]:
+    entries = []
+    for art in arts:
+        for bname, arr in art.get("blobs", {}).items():
+            arr = np.asarray(arr, dtype=np.float32)
+            fname = f"{bname}.bin"
+            arr.astype("<f4").tofile(os.path.join(out_dir, fname))
+            entries.append({"name": bname, "file": fname, "dtype": "f32",
+                            "shape": list(arr.shape)})
+            print(f"  blob {bname}: shape {list(arr.shape)}")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="test", choices=["test", "paper"])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to (re)lower")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    print(f"collecting artifacts (preset={args.preset}) ...")
+    arts = collect_artifacts(args.preset, args.seed)
+    if args.only:
+        keep = set(args.only.split(","))
+        missing = keep - {a["name"] for a in arts}
+        if missing:
+            raise SystemExit(f"unknown artifact(s): {sorted(missing)}")
+        arts = [a for a in arts if a["name"] in keep]
+
+    print(f"lowering {len(arts)} artifacts ...")
+    entries = [lower_artifact(a, args.out_dir) for a in arts]
+    blob_entries = write_blobs(arts, args.out_dir)
+
+    if args.only:
+        # Partial rebuild: merge into the existing manifest (replace the
+        # re-lowered names, keep everything else).
+        man_path = os.path.join(args.out_dir, "manifest.json")
+        if os.path.exists(man_path):
+            with open(man_path) as f:
+                old = json.load(f)
+            new_names = {e["name"] for e in entries}
+            entries = [e for e in old.get("artifacts", [])
+                       if e["name"] not in new_names] + entries
+            new_blobs = {e["name"] for e in blob_entries}
+            blob_entries = [e for e in old.get("blobs", [])
+                            if e["name"] not in new_blobs] + blob_entries
+
+    manifest = {
+        "preset": args.preset,
+        "seed": args.seed,
+        "jax_version": jax.__version__,
+        "artifacts": entries,
+        "blobs": blob_entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} artifacts + {len(blob_entries)} blobs + "
+          f"manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Scale presets for every artifact CAX-RS lowers.
+
+Two presets:
+
+- ``test``  — small shapes so the full stack (pytest, cargo test, benches,
+  examples) runs in minutes on the CPU PJRT backend. This is the default.
+- ``paper`` — the hyperparameters of the paper's Appendix A (Tables 3-5) and
+  the classic-CA benchmark sizes of Figure 3. Lowering produces the same HLO
+  structure with bigger shapes; running them on CPU is expensive, so they are
+  emitted for completeness and used by the paper-scale bench rows only.
+
+Every entry is consumed by ``aot.py`` (lowering) and mirrored into
+``artifacts/manifest.json`` so the Rust coordinator can introspect shapes.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass
+class ClassicCfg:
+    """Classic discrete/continuous CA rollout shapes (Fig. 3 left)."""
+
+    eca_batch: int = 4
+    eca_width: int = 256
+    eca_steps: int = 256
+    eca_traj_width: int = 128
+    eca_traj_steps: int = 128
+
+    life_batch: int = 4
+    life_height: int = 64
+    life_width: int = 64
+    life_steps: int = 256
+    life_traj_steps: int = 64
+
+    lenia_batch: int = 1
+    lenia_size: int = 64
+    lenia_steps: int = 64
+    lenia_radius: int = 10
+    lenia_dt: float = 0.1
+    lenia_mu: float = 0.15
+    lenia_sigma: float = 0.017
+
+    # Bench-scale shapes (Fig. 3 at sizes where vectorization matters; the
+    # tiny `test` shapes above keep the *correctness* suite fast instead).
+    bench_eca_batch: int = 8
+    bench_eca_width: int = 4096
+    bench_eca_steps: int = 512
+    bench_life_batch: int = 4
+    bench_life_size: int = 192
+    bench_life_steps: int = 256
+
+
+@dataclass
+class NcaCfg:
+    """One neural-CA experiment's shapes/hyperparameters."""
+
+    height: int = 32
+    width: int = 32
+    depth: int = 0            # >0 => 3D
+    channels: int = 12
+    hidden: int = 64
+    batch: int = 4
+    steps: int = 24
+    dropout: float = 0.5
+    lr: float = 1e-3
+    lr_end_frac: float = 0.1  # linear schedule end = lr * frac
+    lr_steps: int = 2000
+    extra: dict = field(default_factory=dict)
+
+
+def test_preset() -> dict:
+    """Small shapes; everything runnable on CPU in minutes."""
+    return {
+        "classic": ClassicCfg(),
+        "growing": NcaCfg(height=32, width=32, channels=12, hidden=64,
+                          batch=4, steps=24, lr=2e-3),
+        "conditional": NcaCfg(height=24, width=24, channels=12, hidden=64,
+                              batch=6, steps=16, extra={"num_goals": 3}),
+        "vae": NcaCfg(height=16, width=16, channels=12, hidden=64, batch=4,
+                      steps=16, extra={"latent": 8, "enc_hidden": 64,
+                                       "kl_weight": 1e-3}),
+        "mnist": NcaCfg(height=16, width=16, channels=16, hidden=64, batch=4,
+                        steps=16, extra={"num_classes": 10}),
+        # noise_lo = 0: the NCA must also learn that the clean target is a
+        # FIXED POINT — without level-0 samples the attractor basin of
+        # Fig. 5 has a hole at its centre and light damage diverges.
+        # The diffusing NCA is deliberately the largest test-preset model
+        # (16ch / hidden 128 / 32 steps): hole-filling regeneration (Fig. 5)
+        # needs capacity + horizon, mirroring the paper where it is the
+        # biggest configuration (App. A Table 3: 64ch / 256 / 128 steps).
+        "diffusing": NcaCfg(height=24, width=24, channels=16, hidden=128,
+                            batch=4, steps=32, extra={"noise_lo": 0.0,
+                                                      "noise_hi": 1.0}),
+        "autoenc3d": NcaCfg(height=12, width=12, depth=8, channels=12,
+                            hidden=48, batch=4, steps=24),
+        # steps == width, matching the paper's Table-5 geometry (128/128):
+        # information must be able to cross the whole row (pattern copy,
+        # move-towards) within the rollout's light cone.
+        "arc": NcaCfg(height=1, width=32, channels=16, hidden=64, batch=8,
+                      steps=32, extra={"num_colors": 10}),
+    }
+
+
+def paper_preset() -> dict:
+    """Appendix A hyperparameters (Tables 3-5) + App. B notebook values."""
+    return {
+        "classic": ClassicCfg(eca_batch=8, eca_width=1024, eca_steps=1024,
+                              life_batch=8, life_height=128, life_width=128,
+                              life_steps=1024, lenia_size=128,
+                              lenia_radius=13, lenia_steps=256),
+        # App. B notebook: 40px target + 16 padding => 72x72, 16 channels.
+        "growing": NcaCfg(height=72, width=72, channels=16, hidden=128,
+                          batch=8, steps=128, lr=2e-3),
+        "conditional": NcaCfg(height=72, width=72, channels=16, hidden=128,
+                              batch=8, steps=64, extra={"num_goals": 3}),
+        "vae": NcaCfg(height=28, width=28, channels=16, hidden=128, batch=8,
+                      steps=64, extra={"latent": 16, "enc_hidden": 256,
+                                       "kl_weight": 1e-3}),
+        "mnist": NcaCfg(height=28, width=28, channels=20, hidden=128, batch=8,
+                        steps=20, extra={"num_classes": 10}),
+        # Table 3: 72x72, 64 ch, hidden 256, batch 8, 128 steps, lr 1e-3.
+        "diffusing": NcaCfg(height=72, width=72, channels=64, hidden=256,
+                            batch=8, steps=128, lr=1e-3,
+                            extra={"noise_lo": 0.0, "noise_hi": 1.0}),
+        # Table 4: (16, 16, 32) spatial, hidden 256, batch 8, 96 steps.
+        "autoenc3d": NcaCfg(height=16, width=16, depth=32, channels=16,
+                            hidden=256, batch=8, steps=96, lr=1e-3),
+        # Table 5: width 128, 32 ch, hidden 256, batch 8, 128 steps, lr 1e-3.
+        "arc": NcaCfg(height=1, width=128, channels=32, hidden=256, batch=8,
+                      steps=128, lr=1e-3, extra={"num_colors": 10}),
+    }
+
+
+PRESETS = {"test": test_preset, "paper": paper_preset}
+
+
+def get_preset(name: str) -> dict:
+    if name not in PRESETS:
+        raise ValueError(f"unknown preset {name!r}; options: {list(PRESETS)}")
+    return PRESETS[name]()
+
+
+def preset_as_dict(name: str) -> dict:
+    return {k: asdict(v) for k, v in get_preset(name).items()}

@@ -1,0 +1,16 @@
+"""Layer 1 — Pallas kernels for the CA compute hot-spots.
+
+Each kernel ships with a pure-jnp oracle in ``ref.py``; pytest + hypothesis
+enforce agreement. All kernels run ``interpret=True`` (CPU-PJRT constraint,
+see DESIGN.md §5).
+"""
+
+from compile.kernels.dwconv import dwconv, perception_kernels
+from compile.kernels.eca import eca_step, rule_to_table
+from compile.kernels.life import life_step
+from compile.kernels.lenia import lenia_step, ring_kernel
+
+__all__ = [
+    "dwconv", "perception_kernels", "eca_step", "rule_to_table",
+    "life_step", "lenia_step", "ring_kernel",
+]

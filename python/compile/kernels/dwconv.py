@@ -1,0 +1,157 @@
+"""Pallas kernel: depthwise 3x3 perception convolution — THE NCA hot-spot.
+
+This is the CAX ``DepthwiseConvPerceive`` module (paper §3.1.1): every neural
+CA in the paper perceives its neighbourhood by convolving each state channel
+with K fixed or learned 3x3 kernels (identity + Sobel-x + Sobel-y [+
+Laplacian]) and feeding the concatenated K*C features to the update MLP.
+
+The kernel is gridded over row-tiles: each program owns ``block_h`` rows of
+the (periodically padded) grid plus a one-row halo on each side, all channels.
+VMEM per program ~= (block_h + 2) * W * C * 4 bytes in + block_h * W * C * K
+out; at paper scale (72 x 72 x 16, K=4) a 8-row tile is ~82 KiB — deep inside
+VMEM, leaving the MXU free to chew on the update MLP that consumes this
+output (DESIGN.md §5).
+
+``interpret=True``: see eca.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dwconv_kernel(padded_ref, kernels_ref, out_ref, *, block_h: int):
+    """Program body: one row-tile.
+
+    padded_ref: f32[1, block_h + 2, W + 2, C] — input tile with halo.
+    kernels_ref: f32[3, 3, K].
+    out_ref: f32[1, block_h, W, C*K].
+    """
+    tile = padded_ref[0, ...]
+    kern = kernels_ref[...]
+    _, wp, c = tile.shape
+    k = kern.shape[-1]
+    w = wp - 2
+    acc = jnp.zeros((block_h, w, c, k), dtype=tile.dtype)
+    for ky in range(3):
+        for kx in range(3):
+            win = tile[ky : ky + block_h, kx : kx + w, :]
+            acc = acc + win[..., None] * kern[ky, kx][None, None, None, :]
+    out_ref[0, ...] = acc.reshape(block_h, w, c * k)
+
+
+def _pick_block_h(h: int) -> int:
+    """Largest divisor of h that is <= 8 (keeps tiles VMEM-sized)."""
+    for cand in (8, 6, 4, 3, 2, 1):
+        if h % cand == 0:
+            return cand
+    return 1
+
+
+@jax.custom_vjp
+def dwconv(state: jnp.ndarray, kernels: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise 3x3 perception via the Pallas kernel (periodic padding).
+
+    Differentiable: interpret-mode ``pallas_call`` has no reverse-mode rule,
+    so ``dwconv`` carries a ``custom_vjp`` whose backward pass is *also* the
+    Pallas kernel — d/dstate of a periodic depthwise convolution is the same
+    convolution with spatially flipped kernels, summed over K; d/dkernels is
+    a small correlation reduction done in jnp.
+
+    Args:
+        state: f32[H, W, C].
+        kernels: f32[3, 3, K].
+
+    Returns:
+        f32[H, W, C*K]; output channel ``c*K + k`` = kernel k on channel c.
+    """
+    return _dwconv_impl(state, kernels)
+
+
+def _dwconv_fwd(state, kernels):
+    return _dwconv_impl(state, kernels), (state, kernels)
+
+
+def _dwconv_bwd(res, g):
+    state, kernels = res
+    h, w, c = state.shape
+    k = kernels.shape[-1]
+    g4 = g.reshape(h, w, c, k)
+    flipped = kernels[::-1, ::-1, :]  # f32[3, 3, K]
+    # dstate[., ., c] = sum_k conv(g[., ., c, k], flip(kern_k)) — one Pallas
+    # dwconv per perception kernel with K=1.
+    dstate = jnp.zeros_like(state)
+    for kk in range(k):
+        dstate = dstate + _dwconv_impl(g4[..., kk], flipped[..., kk : kk + 1])
+    # dkern[ky, kx, k] = sum_{y,x,c} state[y+ky-1, x+kx-1, c] * g4[y, x, c, k]
+    dkern = jnp.zeros_like(kernels)
+    for ky in range(3):
+        for kx in range(3):
+            shifted = jnp.roll(state, (1 - ky, 1 - kx), axis=(0, 1))
+            dkern = dkern.at[ky, kx].set(
+                jnp.einsum("yxc,yxck->k", shifted, g4)
+            )
+    return dstate, dkern
+
+
+def _dwconv_impl(state: jnp.ndarray, kernels: jnp.ndarray) -> jnp.ndarray:
+    """Forward implementation (see ``dwconv``)."""
+    h, w, c = state.shape
+    k = kernels.shape[-1]
+    block_h = _pick_block_h(h)
+
+    # Periodic halo. Rows need halo across tiles, so we pad by 1 everywhere
+    # and hand each program an overlapping (block_h + 2)-row window. Overlap
+    # is expressed by element-indexed maps (Pallas blocks are element-strided
+    # through index_map * block_shape, so we use a stride-block_h map over a
+    # (block_h + 2)-row block via explicit dynamic slicing of a padded array).
+    padded = jnp.pad(state, ((1, 1), (1, 1), (0, 0)), mode="wrap")
+
+    # Pallas block starts are block-shape-strided, which cannot express the
+    # 2-row overlap directly; instead we pre-gather the overlapping windows
+    # into a [num_tiles, block_h + 2, W + 2, C] array and grid over tiles.
+    grid = (h // block_h,)
+    num_tiles = h // block_h
+    starts = jnp.arange(num_tiles) * block_h
+    windows = jax.vmap(
+        lambda s: jax.lax.dynamic_slice(
+            padded, (s, 0, 0), (block_h + 2, w + 2, c)
+        )
+    )(starts)
+
+    out = pl.pallas_call(
+        functools.partial(_dwconv_kernel, block_h=block_h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_h + 2, w + 2, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, k), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_h, w, c * k), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_tiles, block_h, w, c * k), state.dtype),
+        interpret=True,
+    )(windows, kernels)
+    return out.reshape(h, w, c * k)
+
+
+def perception_kernels(num_kernels: int) -> jnp.ndarray:
+    """The canonical NCA perception stack: identity, Sobel-x, Sobel-y, Laplacian.
+
+    Args:
+        num_kernels: 1..4 — how many of the stack to take.
+
+    Returns:
+        f32[3, 3, num_kernels].
+    """
+    ident = jnp.array([[0, 0, 0], [0, 1, 0], [0, 0, 0]], dtype=jnp.float32)
+    sobel_x = jnp.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], dtype=jnp.float32) / 8.0
+    sobel_y = sobel_x.T
+    lap = jnp.array([[1, 2, 1], [2, -12, 2], [1, 2, 1]], dtype=jnp.float32) / 16.0
+    stack = jnp.stack([ident, sobel_x, sobel_y, lap], axis=-1)
+    if not 1 <= num_kernels <= 4:
+        raise ValueError(f"num_kernels must be in [1, 4], got {num_kernels}")
+    return stack[..., :num_kernels]
+
+
+dwconv.defvjp(_dwconv_fwd, _dwconv_bwd)

@@ -1,0 +1,70 @@
+"""Pallas kernel: one elementary-cellular-automaton step.
+
+Layer-1 hot-spot for the 1D discrete CAs (paper Table 1 row 1, Fig. 3 left).
+The kernel is gridded over the batch dimension: each program instance owns one
+full row of cells (rows are small enough to fit VMEM comfortably — W*4 bytes;
+at the paper's benchmark scale W=1024 that is 4 KiB in, 4 KiB out, plus the
+32 B rule table).
+
+``interpret=True`` is mandatory: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO ops that travel through
+the HLO-text AOT bridge unchanged.
+
+On a real TPU the natural adaptation keeps the same BlockSpec (one row per
+program) but pads W up to lane multiples (128); the rule gather becomes an
+8-way select to stay on the VPU. See DESIGN.md §5.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _eca_kernel(state_ref, rule_ref, out_ref):
+    """Program body: one batch row. state_ref: f32[1, W]; rule_ref: f32[8]."""
+    row = state_ref[0, :]
+    left = jnp.roll(row, 1)
+    right = jnp.roll(row, -1)
+    idx = (4.0 * left + 2.0 * row + right).astype(jnp.int32)
+    # Rule gather as an 8-way masked sum: VPU-friendly (no dynamic gather),
+    # and exact because idx is one-hot over 0..7.
+    out = jnp.zeros_like(row)
+    for pattern in range(8):
+        out = out + jnp.where(idx == pattern, rule_ref[pattern], 0.0)
+    out_ref[0, :] = out
+
+
+@functools.partial(jax.jit, static_argnames=())
+def eca_step(state: jnp.ndarray, rule: jnp.ndarray) -> jnp.ndarray:
+    """One ECA step via the Pallas kernel.
+
+    Args:
+        state: f32[B, W] of {0., 1.}.
+        rule: f32[8] Wolfram rule table (index = 4*left + 2*center + right).
+
+    Returns:
+        f32[B, W] next state.
+    """
+    b, w = state.shape
+    return pl.pallas_call(
+        _eca_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i: (i, 0)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, w), state.dtype),
+        interpret=True,
+    )(state, rule)
+
+
+def rule_to_table(rule_number: int) -> jnp.ndarray:
+    """Wolfram rule number -> f32[8] table (bit i of the number = table[i])."""
+    if not 0 <= rule_number <= 255:
+        raise ValueError(f"rule number must be in [0, 255], got {rule_number}")
+    return jnp.array(
+        [(rule_number >> i) & 1 for i in range(8)], dtype=jnp.float32
+    )

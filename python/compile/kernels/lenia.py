@@ -1,0 +1,89 @@
+"""Pallas kernel: Lenia neighbourhood convolution + growth update.
+
+Layer-1 hot-spot for the continuous CA (paper Table 1 row 3). Lenia's local
+rule is ``A' = clip(A + dt * G(K * A), 0, 1)`` where K is a smooth ring
+kernel of radius R and G a Gaussian-bump growth mapping (Chan 2019).
+
+The Pallas kernel implements the *direct* convolution (tap-accumulate over
+the (2R+1)^2 stencil) — the form a TPU would tile through VMEM. The L2 model
+(``models/lenia.py``) uses the mathematically identical FFT path for large
+grids; both are validated against ``ref.lenia_step_ref`` and against each
+other in pytest.
+
+``interpret=True``: see eca.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _lenia_kernel(state_ref, kernel_ref, out_ref, *, mu: float, sigma: float,
+                  dt: float, radius: int):
+    """Program body: one board. state_ref: f32[1, H, W]."""
+    board = state_ref[0, :, :]
+    kern = kernel_ref[...]
+    u = jnp.zeros_like(board)
+    ksz = 2 * radius + 1
+    for ky in range(ksz):
+        for kx in range(ksz):
+            u = u + kern[ky, kx] * jnp.roll(
+                board, (radius - ky, radius - kx), axis=(0, 1)
+            )
+    growth = 2.0 * jnp.exp(-0.5 * ((u - mu) / sigma) ** 2) - 1.0
+    out_ref[0, :, :] = jnp.clip(board + dt * growth, 0.0, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("mu", "sigma", "dt", "radius"))
+def lenia_step(state: jnp.ndarray, kernel: jnp.ndarray, *, mu: float,
+               sigma: float, dt: float, radius: int) -> jnp.ndarray:
+    """One Lenia step via the Pallas direct-convolution kernel.
+
+    Args:
+        state: f32[B, H, W] in [0, 1].
+        kernel: f32[2R+1, 2R+1] ring kernel, normalized to sum 1.
+        mu, sigma: growth-bump centre/width.
+        dt: integration step.
+        radius: R (static; must match kernel shape).
+
+    Returns:
+        f32[B, H, W] next state.
+    """
+    b, h, w = state.shape
+    ksz = 2 * radius + 1
+    if kernel.shape != (ksz, ksz):
+        raise ValueError(f"kernel shape {kernel.shape} != ({ksz}, {ksz})")
+    return pl.pallas_call(
+        functools.partial(_lenia_kernel, mu=mu, sigma=sigma, dt=dt,
+                          radius=radius),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((ksz, ksz), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w), state.dtype),
+        interpret=True,
+    )(state, kernel)
+
+
+def ring_kernel(radius: int) -> np.ndarray:
+    """The standard Lenia ring kernel: exp bump over normalized radius.
+
+    K(r) = exp(4 - 1 / (r * (1 - r)))   for 0 < r < 1, else 0,
+    normalized to sum 1. (Chan 2019, "Lenia — Biology of Artificial Life".)
+
+    Returns:
+        f32[2*radius+1, 2*radius+1], sum == 1.
+    """
+    y, x = np.mgrid[-radius : radius + 1, -radius : radius + 1]
+    r = np.sqrt(x * x + y * y) / radius
+    with np.errstate(divide="ignore", over="ignore", invalid="ignore"):
+        k = np.where(
+            (r > 0) & (r < 1), np.exp(4.0 - 1.0 / np.maximum(r * (1 - r), 1e-9)), 0.0
+        )
+    k = k / k.sum()
+    return k.astype(np.float32)

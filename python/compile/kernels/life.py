@@ -1,0 +1,49 @@
+"""Pallas kernel: one Conway's Game of Life step (Moore neighbourhood, wrap).
+
+Layer-1 hot-spot for the 2D discrete CA (paper Table 1 row 2, Fig. 3 left).
+Gridded over the batch: each program owns one full H x W board. At the paper's
+benchmark scale (128 x 128) a board is 64 KiB f32 — comfortably inside a TPU
+core's ~16 MiB VMEM with room for the 8 shifted copies; larger boards would
+tile rows with a 1-row halo exchanged via two extra block rows (DESIGN.md §5).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _life_kernel(state_ref, out_ref):
+    """Program body: one board. state_ref: f32[1, H, W]."""
+    board = state_ref[0, :, :]
+    n = jnp.zeros_like(board)
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            if dy == 0 and dx == 0:
+                continue
+            n = n + jnp.roll(board, (dy, dx), axis=(0, 1))
+    birth = (board == 0.0) & (n == 3.0)
+    survive = (board == 1.0) & ((n == 2.0) | (n == 3.0))
+    out_ref[0, :, :] = jnp.where(birth | survive, 1.0, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def life_step(state: jnp.ndarray) -> jnp.ndarray:
+    """One Game of Life step via the Pallas kernel.
+
+    Args:
+        state: f32[B, H, W] of {0., 1.}.
+
+    Returns:
+        f32[B, H, W] next state.
+    """
+    b, h, w = state.shape
+    return pl.pallas_call(
+        _life_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w), state.dtype),
+        interpret=True,
+    )(state)

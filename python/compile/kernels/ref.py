@@ -1,0 +1,134 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal of Layer 1: each Pallas kernel in
+``dwconv.py`` / ``eca.py`` / ``life.py`` / ``lenia.py`` must agree with the
+corresponding function here (exactly for the discrete CAs, to float tolerance
+for the continuous ones). pytest + hypothesis sweep shapes, rules and random
+states against these references.
+
+All references use **periodic (wrap) boundary conditions**, matching both the
+paper's implementations and the Rust naive simulators.
+"""
+
+import jax.numpy as jnp
+
+
+def eca_step_ref(state: jnp.ndarray, rule: jnp.ndarray) -> jnp.ndarray:
+    """One elementary-CA step.
+
+    Args:
+        state: f32[B, W] of {0., 1.}.
+        rule: f32[8] — Wolfram rule table; ``rule[i]`` is the output for the
+            neighbourhood pattern with value ``i = 4*left + 2*center + right``.
+
+    Returns:
+        f32[B, W] next state.
+    """
+    left = jnp.roll(state, 1, axis=-1)
+    right = jnp.roll(state, -1, axis=-1)
+    idx = (4.0 * left + 2.0 * state + right).astype(jnp.int32)
+    return jnp.take(rule, idx)
+
+
+def life_step_ref(state: jnp.ndarray) -> jnp.ndarray:
+    """One Conway's Game of Life step (Moore neighbourhood, wrap).
+
+    Args:
+        state: f32[B, H, W] of {0., 1.}.
+
+    Returns:
+        f32[B, H, W] next state.
+    """
+    n = jnp.zeros_like(state)
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            if dy == 0 and dx == 0:
+                continue
+            n = n + jnp.roll(state, (dy, dx), axis=(-2, -1))
+    birth = (state == 0.0) & (n == 3.0)
+    survive = (state == 1.0) & ((n == 2.0) | (n == 3.0))
+    return jnp.where(birth | survive, 1.0, 0.0)
+
+
+def dwconv_ref(state: jnp.ndarray, kernels: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise 3x3 perception convolution (NCA perceive module).
+
+    Applies each of the K 3x3 kernels to every channel independently
+    (periodic padding), concatenating along the channel axis — exactly the
+    CAX ``DepthwiseConvPerceive`` with ``num_kernels = K``.
+
+    Args:
+        state: f32[H, W, C].
+        kernels: f32[3, 3, K].
+
+    Returns:
+        f32[H, W, C*K] perception; output channel ``c*K + k`` is kernel k
+        applied to input channel c.
+    """
+    h, w, c = state.shape
+    k = kernels.shape[-1]
+    out = jnp.zeros((h, w, c * k), dtype=state.dtype)
+    for ky in range(3):
+        for kx in range(3):
+            # shifted[y, x, c] == state[y + ky - 1, x + kx - 1, c] (wrapped)
+            shifted = jnp.roll(state, (1 - ky, 1 - kx), axis=(0, 1))
+            contrib = shifted[:, :, :, None] * kernels[ky, kx][None, None, None, :]
+            out = out + contrib.reshape(h, w, c * k)
+    return out
+
+
+def lenia_conv_ref(state: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """Direct (non-FFT) periodic convolution with a (2R+1)^2 kernel.
+
+    Args:
+        state: f32[H, W].
+        kernel: f32[2R+1, 2R+1], already normalized to sum 1.
+
+    Returns:
+        f32[H, W] neighbourhood potential U.
+    """
+    ksz = kernel.shape[0]
+    r = ksz // 2
+    out = jnp.zeros_like(state)
+    for ky in range(ksz):
+        for kx in range(ksz):
+            out = out + kernel[ky, kx] * jnp.roll(
+                state, (r - ky, r - kx), axis=(0, 1)
+            )
+    return out
+
+
+def lenia_growth_ref(u: jnp.ndarray, mu: float, sigma: float) -> jnp.ndarray:
+    """Lenia exponential growth mapping G(u) = 2*exp(-((u-mu)/sigma)^2/2) - 1."""
+    return 2.0 * jnp.exp(-0.5 * ((u - mu) / sigma) ** 2) - 1.0
+
+
+def lenia_step_ref(state, kernel, mu, sigma, dt):
+    """One Lenia step: clip(A + dt * G(K*A), 0, 1)."""
+    u = lenia_conv_ref(state, kernel)
+    return jnp.clip(state + dt * lenia_growth_ref(u, mu, sigma), 0.0, 1.0)
+
+
+def lenia_fft_conv_ref(state: jnp.ndarray, kernel_fft: jnp.ndarray) -> jnp.ndarray:
+    """FFT-based periodic convolution (the L2 fast path for Lenia).
+
+    Args:
+        state: f32[H, W].
+        kernel_fft: c64[H, W] — FFT of the kernel already centred at (0, 0)
+            (i.e. ``jnp.fft.fft2(jnp.fft.ifftshift(padded_kernel))``).
+    """
+    return jnp.real(jnp.fft.ifft2(jnp.fft.fft2(state) * kernel_fft))
+
+
+def nca_update_mlp_ref(perception, w1, b1, w2, b2):
+    """The NCA update MLP applied per cell: relu(p @ w1 + b1) @ w2 + b2.
+
+    Args:
+        perception: f32[..., P].
+        w1: f32[P, H]; b1: f32[H]; w2: f32[H, C]; b2: f32[C].
+
+    Returns:
+        f32[..., C] residual update (before stochastic cell dropout).
+    """
+    h = jnp.maximum(perception @ w1 + b1, 0.0)
+    return h @ w2 + b2

@@ -1,0 +1,1 @@
+"""Layer 2 — JAX compute graphs for every CA in the paper's Table 1."""

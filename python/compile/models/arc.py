@@ -1,0 +1,114 @@
+"""1D-ARC Neural Cellular Automata (paper §5.3, Table 2, Fig. 8).
+
+A one-dimensional NCA is trained per task to transform an input row of
+colored pixels into the target row after a fixed number of steps. Colors are
+one-hot over 10 channels (ARC palette); the remaining channels are hidden.
+
+Artifacts:
+- ``arc_train_step`` — batch of (input, target) one-hot rows; CE at the
+  final step; fused BPTT + Adam.
+- ``arc_eval``       — deterministic rollout; final color logits [B, W, 10]
+  (the Rust evaluator argmaxes and scores exact-match, Table 2).
+- ``arc_traj``       — one sample's color-argmax trajectory for the Fig. 8
+  space-time diagrams.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models import common, nca
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def init_params(key, cfg):
+    kernels = nca.perception_kernels_1d(3)
+    perc = cfg.channels * kernels.shape[-1]
+    return {"update": nca.init_update_params(key, perc, cfg.hidden,
+                                             cfg.channels)}
+
+
+def init_state(inputs1h, c):
+    """inputs1h f32[B, W, 10] -> state [B, W, C] with colors in ch 0-9."""
+    b, w, ncol = inputs1h.shape
+    state = jnp.zeros((b, w, c), dtype=jnp.float32)
+    return state.at[..., :ncol].set(inputs1h)
+
+
+def _step(params, state, key, cfg, dropout=None):
+    return nca.nca_step_1d(
+        params["update"], state, key,
+        kernels=nca.perception_kernels_1d(3),
+        dropout=cfg.dropout if dropout is None else dropout,
+    )
+
+
+def artifacts(cfg, key) -> list[dict]:
+    w, c, b, t = cfg.width, cfg.channels, cfg.batch, cfg.steps
+    ncol = cfg.extra["num_colors"]
+    params = init_params(key, cfg)
+    params_flat, unravel = common.flatten_params(params)
+    n = params_flat.shape[0]
+
+    def ce(state, targets1h):
+        logp = jax.nn.log_softmax(state[..., :ncol], axis=-1)
+        return -jnp.mean(jnp.sum(logp * targets1h, axis=-1))
+
+    def loss_fn(p, inputs1h, targets1h, key):
+        state = init_state(inputs1h, c)
+
+        def body(carry, i):
+            return _step(p, carry, jax.random.fold_in(key, i), cfg), None
+
+        fin, _ = jax.lax.scan(body, state, jnp.arange(t))
+        return ce(fin, targets1h), ()
+
+    train_step = common.make_train_step(loss_fn, unravel, cfg)
+
+    def eval_fn(pf, inputs1h):
+        p = unravel(pf)
+        key = jax.random.PRNGKey(0)
+        state = init_state(inputs1h, c)
+
+        def body(carry, i):
+            # Keep the cell dropout at evaluation (fixed key -> repeatable):
+            # the learned dynamics are update-rate-dependent, so running
+            # dropout-free doubles each cell's effective step count and
+            # overshoots (e.g. Move-1 shifts too far).
+            return _step(p, carry, jax.random.fold_in(key, i), cfg), None
+
+        fin, _ = jax.lax.scan(body, state, jnp.arange(t))
+        return (fin[..., :ncol],)
+
+    def traj_fn(pf, input1h):
+        p = unravel(pf)
+        key = jax.random.PRNGKey(0)
+        state = init_state(input1h[None], c)
+
+        def body(carry, i):
+            st = _step(p, carry, jax.random.fold_in(key, i), cfg)
+            return st, st[..., :ncol]
+
+        _, traj = jax.lax.scan(body, state, jnp.arange(t))
+        return (traj[:, 0],)  # [T, W, 10]
+
+    meta = {"kind": "nca", "ca": "arc", "width": w, "channels": c,
+            "batch": b, "steps": t, "hidden": cfg.hidden,
+            "num_colors": ncol, "param_count": int(n)}
+    return [
+        dict(name="arc_train_step", fn=train_step,
+             args=[("params", spec(n)), ("m", spec(n)), ("v", spec(n)),
+                   ("step", spec(dtype=jnp.int32)),
+                   ("inputs", spec(b, w, ncol)),
+                   ("targets", spec(b, w, ncol)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta, blobs={"arc_params": params_flat}),
+        dict(name="arc_eval", fn=eval_fn,
+             args=[("params", spec(n)), ("inputs", spec(b, w, ncol))],
+             meta=meta),
+        dict(name="arc_traj", fn=traj_fn,
+             args=[("params", spec(n)), ("input", spec(w, ncol))],
+             meta=meta),
+    ]

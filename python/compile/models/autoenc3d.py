@@ -1,0 +1,104 @@
+"""Self-autoencoding MNIST digits in 3D (paper §5.2, Fig. 6 & 7).
+
+A 3D NCA with the digit written (frozen) on the z=0 face, a wall of
+non-updatable cells at z=D/2 with a single-cell hole in its centre, and a
+reconstruction objective on the z=D-1 face. The identical per-cell rule must
+learn to *encode* the digit, squeeze the code through the one-cell channel,
+and *decode* it on the far side.
+
+Artifacts: ``autoenc3d_train_step``, ``autoenc3d_eval`` (reconstructed face).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models import common, nca
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def init_params(key, cfg):
+    perc = cfg.channels * 4  # identity + 3 axis gradients (perceive3d)
+    return {"update": nca.init_update_params(key, perc, cfg.hidden,
+                                             cfg.channels)}
+
+
+def wall_mask(d: int, h: int, w: int) -> jnp.ndarray:
+    """f32[D, H, W, 1]: 1 where cells may update, 0 on the wall (z = D/2)
+    except a single-cell hole at the face centre."""
+    mask = jnp.ones((d, h, w), dtype=jnp.float32)
+    mask = mask.at[d // 2].set(0.0)
+    mask = mask.at[d // 2, h // 2, w // 2].set(1.0)
+    return mask[..., None]
+
+
+def input_freeze(digits, d, c):
+    """Frozen mask + initial state: digit intensity on face z=0, channel 0."""
+    b, h, w = digits.shape
+    state = jnp.zeros((b, d, h, w, c), dtype=jnp.float32)
+    state = state.at[:, 0, :, :, 0].set(digits)
+    frozen = jnp.zeros((b, d, h, w, c), dtype=jnp.float32)
+    frozen = frozen.at[:, 0, :, :, 0].set(1.0)
+    return state, frozen
+
+
+def _step(params, state, key, frozen, mask, cfg):
+    return nca.nca_step_3d(
+        params["update"], state, key, dropout=cfg.dropout,
+        frozen=frozen, update_mask=mask,
+    )
+
+
+def artifacts(cfg, key) -> list[dict]:
+    d, h, w = cfg.depth, cfg.height, cfg.width
+    c, b, t = cfg.channels, cfg.batch, cfg.steps
+    params = init_params(key, cfg)
+    params_flat, unravel = common.flatten_params(params)
+    n = params_flat.shape[0]
+    mask = wall_mask(d, h, w)
+
+    def loss_fn(p, digits, key):
+        state, frozen = input_freeze(digits, d, c)
+
+        def body(carry, i):
+            st = _step(p, carry, jax.random.fold_in(key, i), frozen, mask,
+                       cfg)
+            return st, None
+
+        fin, _ = jax.lax.scan(body, state, jnp.arange(t))
+        recon = fin[:, d - 1, :, :, 0]
+        loss = jnp.mean(jnp.square(recon - digits))
+        return loss, ()
+
+    train_step = common.make_train_step(loss_fn, unravel, cfg)
+
+    def eval_fn(pf, digits, seed):
+        p = unravel(pf)
+        key = jax.random.PRNGKey(seed)
+        state, frozen = input_freeze(digits, d, c)
+
+        def body(carry, i):
+            st = _step(p, carry, jax.random.fold_in(key, i), frozen, mask,
+                       cfg)
+            return st, None
+
+        fin, _ = jax.lax.scan(body, state, jnp.arange(t))
+        return (fin[:, d - 1, :, :, 0],)
+
+    meta = {"kind": "nca", "ca": "autoenc3d", "depth": d, "height": h,
+            "width": w, "channels": c, "batch": b, "steps": t,
+            "hidden": cfg.hidden, "param_count": int(n)}
+    return [
+        dict(name="autoenc3d_train_step", fn=train_step,
+             args=[("params", spec(n)), ("m", spec(n)), ("v", spec(n)),
+                   ("step", spec(dtype=jnp.int32)),
+                   ("digits", spec(b, h, w)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta, blobs={"autoenc3d_params": params_flat}),
+        dict(name="autoenc3d_eval", fn=eval_fn,
+             args=[("params", spec(n)), ("digits", spec(b, h, w)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta),
+    ]

@@ -1,0 +1,205 @@
+"""Layer-2 models for the classic CAs: Elementary CA, Game of Life, Lenia.
+
+Paper Table 1 rows 1-3 and the Figure-3-left benchmark subjects. Each model
+comes in three artifact flavours:
+
+- ``*_step``     — a single global-rule application. This is the *stepwise
+  dispatch* baseline of E1/E2: the Rust harness calls it T times with a host
+  round-trip per step, reproducing the cost structure the paper attributes
+  to CellPyLib-style per-step execution.
+- ``*_rollout``  — T steps fused in one ``lax.scan`` program, returning only
+  the final state. This is the CAX fast path (paper §3.2.1).
+- ``*_traj``     — fused rollout that also returns the whole trajectory, for
+  space-time rendering and cross-layer equivalence tests.
+
+The scan body calls the Layer-1 Pallas kernels, so the fused artifacts carry
+the Pallas compute through the HLO-text bridge.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import eca_step, life_step, ring_kernel
+from compile.kernels.ref import lenia_growth_ref
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _scan_steps(step_fn, state, num_steps, with_traj):
+    def body(carry, _):
+        nxt = step_fn(carry)
+        return nxt, (nxt if with_traj else None)
+
+    final, traj = jax.lax.scan(body, state, None, length=num_steps)
+    return (final, traj) if with_traj else final
+
+
+def lenia_fft_kernel(size: int, radius: int) -> np.ndarray:
+    """Precompute the FFT of the ring kernel on a size x size torus.
+
+    Returned as interleaved (real, imag) f32[2, H, W] so it stays f32 across
+    the artifact boundary (the manifest interchange is all-f32).
+    """
+    k = ring_kernel(radius)
+    padded = np.zeros((size, size), dtype=np.float32)
+    ksz = 2 * radius + 1
+    padded[:ksz, :ksz] = k
+    padded = np.roll(padded, (-radius, -radius), axis=(0, 1))
+    kf = np.fft.fft2(padded)
+    return np.stack([kf.real, kf.imag]).astype(np.float32)
+
+
+def lenia_step_fft(state, kfft_ri, mu, sigma, dt):
+    """One Lenia step via FFT convolution. state f32[B, H, W]."""
+    kfft = kfft_ri[0] + 1j * kfft_ri[1]
+    u = jnp.real(jnp.fft.ifft2(jnp.fft.fft2(state) * kfft[None]))
+    return jnp.clip(state + dt * lenia_growth_ref(u, mu, sigma), 0.0, 1.0)
+
+
+def artifacts(cfg) -> list[dict]:
+    """Build all classic-CA artifact descriptors for ``aot.py``.
+
+    Args:
+        cfg: a ``configs.ClassicCfg``.
+    """
+    arts = []
+
+    # ---------------- Elementary CA ----------------
+    b, w, t = cfg.eca_batch, cfg.eca_width, cfg.eca_steps
+
+    def eca_one(state, rule):
+        return (eca_step(state, rule),)
+
+    def eca_rollout(state, rule):
+        return (_scan_steps(lambda s: eca_step(s, rule), state, t, False),)
+
+    tw, tt = cfg.eca_traj_width, cfg.eca_traj_steps
+
+    def eca_traj(state, rule):
+        final, traj = _scan_steps(
+            lambda s: eca_step(s, rule), state, tt, True
+        )
+        return final, traj
+
+    arts += [
+        dict(name="eca_step", fn=eca_one,
+             args=[("state", spec(b, w)), ("rule", spec(8))],
+             meta={"kind": "classic", "ca": "eca", "batch": b, "width": w}),
+        dict(name="eca_rollout", fn=eca_rollout,
+             args=[("state", spec(b, w)), ("rule", spec(8))],
+             meta={"kind": "classic", "ca": "eca", "batch": b, "width": w,
+                   "steps": t}),
+        dict(name="eca_traj", fn=eca_traj,
+             args=[("state", spec(b, tw)), ("rule", spec(8))],
+             meta={"kind": "classic", "ca": "eca", "batch": b, "width": tw,
+                   "steps": tt}),
+    ]
+
+    # ---------------- Game of Life ----------------
+    lb, lh, lw, lt = cfg.life_batch, cfg.life_height, cfg.life_width, cfg.life_steps
+
+    def life_one(state):
+        return (life_step(state),)
+
+    def life_rollout(state):
+        return (_scan_steps(life_step, state, lt, False),)
+
+    ltt = cfg.life_traj_steps
+
+    def life_traj(state):
+        final, traj = _scan_steps(life_step, state, ltt, True)
+        return final, traj
+
+    arts += [
+        dict(name="life_step", fn=life_one,
+             args=[("state", spec(lb, lh, lw))],
+             meta={"kind": "classic", "ca": "life", "batch": lb,
+                   "height": lh, "width": lw}),
+        dict(name="life_rollout", fn=life_rollout,
+             args=[("state", spec(lb, lh, lw))],
+             meta={"kind": "classic", "ca": "life", "batch": lb,
+                   "height": lh, "width": lw, "steps": lt}),
+        dict(name="life_traj", fn=life_traj,
+             args=[("state", spec(lb, lh, lw))],
+             meta={"kind": "classic", "ca": "life", "batch": lb,
+                   "height": lh, "width": lw, "steps": ltt}),
+    ]
+
+    # ---------------- Lenia ----------------
+    nb, n, nt = cfg.lenia_batch, cfg.lenia_size, cfg.lenia_steps
+    mu, sigma, dt = cfg.lenia_mu, cfg.lenia_sigma, cfg.lenia_dt
+
+    def lenia_one(state, kfft):
+        return (lenia_step_fft(state, kfft, mu, sigma, dt),)
+
+    def lenia_rollout(state, kfft):
+        return (
+            _scan_steps(
+                lambda s: lenia_step_fft(s, kfft, mu, sigma, dt), state, nt,
+                False,
+            ),
+        )
+
+    def lenia_traj(state, kfft):
+        final, traj = _scan_steps(
+            lambda s: lenia_step_fft(s, kfft, mu, sigma, dt), state, nt, True
+        )
+        return final, traj
+
+    # ---------------- bench-scale variants (Fig. 3) ----------------
+    # Same rules at sizes where vectorization wins; used only by the bench
+    # harness (fig3_classic / cax-tables fig3), never by the test suite.
+    bb, bw, bt = cfg.bench_eca_batch, cfg.bench_eca_width, cfg.bench_eca_steps
+
+    def eca_step_bench(state, rule):
+        return (eca_step(state, rule),)
+
+    def eca_rollout_bench(state, rule):
+        return (_scan_steps(lambda s: eca_step(s, rule), state, bt, False),)
+
+    glb, gls, glt = (cfg.bench_life_batch, cfg.bench_life_size,
+                     cfg.bench_life_steps)
+
+    def life_step_bench(state):
+        return (life_step(state),)
+
+    def life_rollout_bench(state):
+        return (_scan_steps(life_step, state, glt, False),)
+
+    arts += [
+        dict(name="eca_step_bench", fn=eca_step_bench,
+             args=[("state", spec(bb, bw)), ("rule", spec(8))],
+             meta={"kind": "classic", "ca": "eca", "batch": bb, "width": bw}),
+        dict(name="eca_rollout_bench", fn=eca_rollout_bench,
+             args=[("state", spec(bb, bw)), ("rule", spec(8))],
+             meta={"kind": "classic", "ca": "eca", "batch": bb, "width": bw,
+                   "steps": bt}),
+        dict(name="life_step_bench", fn=life_step_bench,
+             args=[("state", spec(glb, gls, gls))],
+             meta={"kind": "classic", "ca": "life", "batch": glb,
+                   "height": gls, "width": gls}),
+        dict(name="life_rollout_bench", fn=life_rollout_bench,
+             args=[("state", spec(glb, gls, gls))],
+             meta={"kind": "classic", "ca": "life", "batch": glb,
+                   "height": gls, "width": gls, "steps": glt}),
+    ]
+
+    kf_blob = lenia_fft_kernel(n, cfg.lenia_radius)
+    lmeta = {"kind": "classic", "ca": "lenia", "batch": nb, "height": n,
+             "width": n, "steps": nt, "radius": cfg.lenia_radius,
+             "mu": mu, "sigma": sigma, "dt": dt}
+    arts += [
+        dict(name="lenia_step", fn=lenia_one,
+             args=[("state", spec(nb, n, n)), ("kfft", spec(2, n, n))],
+             meta=lmeta, blobs={"lenia_kfft": kf_blob}),
+        dict(name="lenia_rollout", fn=lenia_rollout,
+             args=[("state", spec(nb, n, n)), ("kfft", spec(2, n, n))],
+             meta=lmeta),
+        dict(name="lenia_traj", fn=lenia_traj,
+             args=[("state", spec(nb, n, n)), ("kfft", spec(2, n, n))],
+             meta=lmeta),
+    ]
+    return arts

@@ -1,0 +1,104 @@
+"""Shared Layer-2 machinery: parameter init, flat-vector interchange, Adam.
+
+The Rust coordinator owns parameters and optimizer state as opaque flat f32
+vectors; every train-step artifact takes ``(params, m, v, step, ...)`` and
+returns the updated triple. Adam (with global-norm clipping and the paper's
+linear learning-rate schedule) runs **in-graph**, so the request path never
+needs Python.
+
+No flax/optax in this environment — everything here is pure JAX.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+def dense_init(key, fan_in: int, fan_out: int, scale: float | None = None):
+    """He-normal dense layer init. Returns dict(w=[in,out], b=[out])."""
+    if scale is None:
+        scale = (2.0 / fan_in) ** 0.5
+    w = scale * jax.random.normal(key, (fan_in, fan_out), dtype=jnp.float32)
+    return {"w": w, "b": jnp.zeros((fan_out,), dtype=jnp.float32)}
+
+
+def dense_zeros(fan_in: int, fan_out: int):
+    """Zero-init dense layer — the NCA output layer starts as the identity
+    residual (Mordvintsev et al. 2020)."""
+    return {
+        "w": jnp.zeros((fan_in, fan_out), dtype=jnp.float32),
+        "b": jnp.zeros((fan_out,), dtype=jnp.float32),
+    }
+
+
+def dense(params, x):
+    """Apply a dense layer to the trailing axis."""
+    return x @ params["w"] + params["b"]
+
+
+def flatten_params(params):
+    """Pytree -> (flat f32 vector, unravel closure)."""
+    flat, unravel = ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel
+
+
+def global_norm_clip(grads_flat: jnp.ndarray, max_norm: float = 1.0):
+    """Clip a flat gradient vector by global norm (optax-equivalent)."""
+    norm = jnp.sqrt(jnp.sum(grads_flat * grads_flat) + 1e-12)
+    scale = jnp.minimum(1.0, max_norm / norm)
+    return grads_flat * scale
+
+
+def linear_lr(step, init_lr: float, end_lr: float, transition_steps: int):
+    """optax.linear_schedule equivalent (step may be traced)."""
+    frac = jnp.clip(step.astype(jnp.float32) / float(transition_steps), 0.0, 1.0)
+    return init_lr + (end_lr - init_lr) * frac
+
+
+def adam_update(params, m, v, grads, step, lr, *, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step on flat vectors; ``step`` is the 0-based step index.
+
+    Returns (params', m', v'). Bias correction uses step+1.
+    """
+    t = step.astype(jnp.float32) + 1.0
+    m = b1 * m + (1.0 - b1) * grads
+    v = b2 * v + (1.0 - b2) * grads * grads
+    m_hat = m / (1.0 - b1**t)
+    v_hat = v / (1.0 - b2**t)
+    params = params - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return params, m, v
+
+
+def make_train_step(loss_fn, unravel, cfg):
+    """Build the canonical in-graph train step around a loss function.
+
+    Args:
+        loss_fn: ``(params_pytree, *batch, key) -> (loss, aux)``.
+        unravel: flat-vector -> pytree closure from :func:`flatten_params`.
+        cfg: NcaCfg with lr / lr_end_frac / lr_steps.
+
+    Returns:
+        ``step_fn(params, m, v, step, *batch, seed) ->
+        (params', m', v', loss, *aux)`` operating on flat f32 vectors.
+    """
+
+    def step_fn(params_flat, m, v, step, *batch_and_seed):
+        *batch, seed = batch_and_seed
+        key = jax.random.PRNGKey(seed)
+        key = jax.random.fold_in(key, step)
+
+        def flat_loss(pf):
+            loss, aux = loss_fn(unravel(pf), *batch, key)
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(flat_loss, has_aux=True)(
+            params_flat
+        )
+        grads = global_norm_clip(grads, 1.0)
+        lr = linear_lr(step, cfg.lr, cfg.lr * cfg.lr_end_frac, cfg.lr_steps)
+        params_flat, m, v = adam_update(params_flat, m, v, grads, step, lr)
+        if isinstance(aux, (tuple, list)):
+            return (params_flat, m, v, loss, *aux)
+        return params_flat, m, v, loss, aux
+
+    return step_fn

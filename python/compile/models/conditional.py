@@ -1,0 +1,93 @@
+"""Growing Conditional NCA (Sudhakaran et al. 2022) — Table 1 row 5.
+
+The controllable-CA instantiation (paper §2.2): a goal one-hot vector is
+broadcast to every cell as an external input at every step, and a single rule
+grows a *different* target sprite per goal from the same seed.
+
+Artifacts: ``conditional_train_step``, ``conditional_grow`` (final state for
+a given goal).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models import common, nca
+from compile.models.growing import seed_state
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def init_params(key, cfg):
+    kernels = nca.default_kernels_2d(3)
+    ng = cfg.extra["num_goals"]
+    perc = cfg.channels * kernels.shape[-1] + ng  # + goal input per cell
+    return {"update": nca.init_update_params(key, perc, cfg.hidden,
+                                             cfg.channels)}
+
+
+def _step(params, state, key, goals1h, cfg):
+    b, h, w, _ = state.shape
+    ng = goals1h.shape[-1]
+    ext = jnp.broadcast_to(goals1h[:, None, None, :], (b, h, w, ng))
+    return nca.nca_step_2d(
+        params["update"], state, key, kernels=nca.default_kernels_2d(3),
+        dropout=cfg.dropout, alive_masking=True, ext_input=ext,
+    )
+
+
+def artifacts(cfg, key) -> list[dict]:
+    h, w, c, b, t = cfg.height, cfg.width, cfg.channels, cfg.batch, cfg.steps
+    ng = cfg.extra["num_goals"]
+    params = init_params(key, cfg)
+    params_flat, unravel = common.flatten_params(params)
+    n = params_flat.shape[0]
+
+    def loss_fn(p, targets, goals1h, key):
+        # targets: [K, H, W, 4]; goals1h: [B, K] — sample b grows target
+        # argmax(goals1h[b]).
+        state = jnp.broadcast_to(seed_state(h, w, c)[None],
+                                 (b, h, w, c))
+
+        def body(carry, i):
+            st = _step(p, carry, jax.random.fold_in(key, i), goals1h, cfg)
+            return st, None
+
+        fin, _ = jax.lax.scan(body, state, jnp.arange(t))
+        per_goal_target = goals1h @ targets.reshape(ng, -1)
+        per_goal_target = per_goal_target.reshape(b, h, w, 4)
+        loss = jnp.mean(jnp.square(fin[..., :4] - per_goal_target))
+        return loss, ()
+
+    train_step = common.make_train_step(loss_fn, unravel, cfg)
+
+    def grow(pf, goal1h, seed):
+        p = unravel(pf)
+        key = jax.random.PRNGKey(seed)
+        state = seed_state(h, w, c)[None]
+
+        def body(carry, i):
+            st = _step(p, carry, jax.random.fold_in(key, i), goal1h[None],
+                       cfg)
+            return st, None
+
+        fin, _ = jax.lax.scan(body, state, jnp.arange(t))
+        return (fin[0],)
+
+    meta = {"kind": "nca", "ca": "conditional", "height": h, "width": w,
+            "channels": c, "batch": b, "steps": t, "hidden": cfg.hidden,
+            "num_goals": ng, "param_count": int(n)}
+    return [
+        dict(name="conditional_train_step", fn=train_step,
+             args=[("params", spec(n)), ("m", spec(n)), ("v", spec(n)),
+                   ("step", spec(dtype=jnp.int32)),
+                   ("targets", spec(ng, h, w, 4)),
+                   ("goals1h", spec(b, ng)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta, blobs={"conditional_params": params_flat}),
+        dict(name="conditional_grow", fn=grow,
+             args=[("params", spec(n)), ("goal1h", spec(ng)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta),
+    ]

@@ -1,0 +1,94 @@
+"""Diffusing Neural Cellular Automata (paper §5.1, Fig. 4 & 5).
+
+Instead of growing from a seed with a sample pool, the NCA learns to *denoise*:
+the RGBA part of the state is initialized to a convex mixture of the target
+and pure noise (per-sample noise level ~ U[lo, hi], hi = 1 covering the
+pure-noise start of Fig. 4), then rolled out for a fixed number of steps and
+trained with MSE to the target. No pool, no alive-masking — the paper's
+point is that this objective builds a wide attractor basin around the target
+(hence the emergent regeneration of Fig. 5, which the Rust ``damage``
+protocol probes by cutting a region and re-rolling out).
+
+Artifacts: ``diffusing_train_step``, ``diffusing_rollout`` (trajectory).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models import common, nca
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def init_params(key, cfg):
+    kernels = nca.default_kernels_2d(3)
+    perc = cfg.channels * kernels.shape[-1]
+    return {"update": nca.init_update_params(key, perc, cfg.hidden,
+                                             cfg.channels)}
+
+
+def _step(params, state, key, cfg):
+    return nca.nca_step_2d(
+        params["update"], state, key, kernels=nca.default_kernels_2d(3),
+        dropout=cfg.dropout, alive_masking=False,
+    )
+
+
+def noisy_init(key, target, b, h, w, c, lo, hi):
+    """Per-sample noise level in [lo, hi]; RGBA = mix(target, noise)."""
+    lkey, nkey = jax.random.split(key)
+    levels = jax.random.uniform(lkey, (b, 1, 1, 1), minval=lo, maxval=hi)
+    noise = jax.random.uniform(nkey, (b, h, w, 4))
+    rgba = (1.0 - levels) * target[None] + levels * noise
+    state = jnp.zeros((b, h, w, c), dtype=jnp.float32)
+    return state.at[..., :4].set(rgba)
+
+
+def artifacts(cfg, key) -> list[dict]:
+    h, w, c, b, t = cfg.height, cfg.width, cfg.channels, cfg.batch, cfg.steps
+    lo, hi = cfg.extra["noise_lo"], cfg.extra["noise_hi"]
+    params = init_params(key, cfg)
+    params_flat, unravel = common.flatten_params(params)
+    n = params_flat.shape[0]
+
+    def loss_fn(p, target, key):
+        ikey, rkey = jax.random.split(key)
+        state = noisy_init(ikey, target, b, h, w, c, lo, hi)
+
+        def body(carry, i):
+            return _step(p, carry, jax.random.fold_in(rkey, i), cfg), None
+
+        fin, _ = jax.lax.scan(body, state, jnp.arange(t))
+        loss = jnp.mean(jnp.square(fin[..., :4] - target[None]))
+        return loss, ()
+
+    train_step = common.make_train_step(loss_fn, unravel, cfg)
+
+    def rollout(pf, state, seed):
+        p = unravel(pf)
+        key = jax.random.PRNGKey(seed)
+
+        def body(carry, i):
+            st = _step(p, carry, jax.random.fold_in(key, i), cfg)
+            return st, st
+
+        final, traj = jax.lax.scan(body, state[None], jnp.arange(t))
+        return final[0], traj[:, 0]
+
+    meta = {"kind": "nca", "ca": "diffusing", "height": h, "width": w,
+            "channels": c, "batch": b, "steps": t, "hidden": cfg.hidden,
+            "noise_lo": lo, "noise_hi": hi, "param_count": int(n)}
+    return [
+        dict(name="diffusing_train_step", fn=train_step,
+             args=[("params", spec(n)), ("m", spec(n)), ("v", spec(n)),
+                   ("step", spec(dtype=jnp.int32)),
+                   ("target", spec(h, w, 4)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta, blobs={"diffusing_params": params_flat}),
+        dict(name="diffusing_rollout", fn=rollout,
+             args=[("params", spec(n)), ("state", spec(h, w, c)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta),
+    ]

@@ -1,0 +1,112 @@
+"""Growing Neural Cellular Automata (Mordvintsev et al. 2020) — Table 1 row 4.
+
+State: f32[H, W, C]; channels 0-3 are RGBA, the rest hidden. A single seed
+cell grows into a target RGBA sprite; alive-masking on the alpha channel
+keeps dead regions inert; training samples a pool of intermediate states and
+replaces the worst batch element with a fresh seed (App. B notebook).
+
+Artifacts:
+- ``growing_train_step`` — full in-graph step: worst-of-batch reseeding,
+  per-sample random rollout length in [T/2, T], MSE-to-target, BPTT, Adam.
+  The Rust pool writes back the returned post-rollout states.
+- ``growing_rollout``    — T-step trajectory of one state (viz, Fig. 5
+  damage protocol: Rust mutates the state, then calls this).
+- ``growing_seed``       — the canonical single-seed initial state.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models import common, nca
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def seed_state(h: int, w: int, c: int) -> jnp.ndarray:
+    """Single live cell in the centre, alpha+hidden = 1 (App. B notebook)."""
+    state = jnp.zeros((h, w, c), dtype=jnp.float32)
+    return state.at[h // 2, w // 2, 3:].set(1.0)
+
+
+def init_params(key, cfg):
+    kernels = nca.default_kernels_2d(3)
+    perc = cfg.channels * kernels.shape[-1]
+    return {"update": nca.init_update_params(key, perc, cfg.hidden,
+                                             cfg.channels)}
+
+
+def _step(params, state, key, cfg):
+    return nca.nca_step_2d(
+        params["update"], state, key, kernels=nca.default_kernels_2d(3),
+        dropout=cfg.dropout, alive_masking=True,
+    )
+
+
+def rgba_loss(state, target):
+    """Per-sample MSE between state RGBA and target. state [B,H,W,C]."""
+    return jnp.mean(
+        jnp.square(state[..., :4] - target[None]), axis=(1, 2, 3)
+    )
+
+
+def artifacts(cfg, key) -> list[dict]:
+    h, w, c, b, t = cfg.height, cfg.width, cfg.channels, cfg.batch, cfg.steps
+    params = init_params(key, cfg)
+    params_flat, unravel = common.flatten_params(params)
+    n = params_flat.shape[0]
+
+    def loss_fn(p, states, target, key):
+        # Replace the worst batch element (highest loss) with a fresh seed —
+        # the App. B pool strategy, done in-graph.
+        pre = rgba_loss(states, target)
+        worst = jnp.argmax(pre)
+        states = states.at[worst].set(seed_state(h, w, c))
+
+        # Per-sample random rollout length in [T/2, T): run T steps, keep
+        # each sample's state at its own sampled index.
+        tkey, rkey = jax.random.split(key)
+        lengths = jax.random.randint(rkey, (b,), t // 2, t)
+
+        def body(carry, i):
+            st = _step(p, carry, jax.random.fold_in(tkey, i), cfg)
+            return st, st
+
+        _, traj = jax.lax.scan(body, states, jnp.arange(t))
+        picked = traj[lengths, jnp.arange(b)]  # [B, H, W, C]
+        loss = jnp.mean(rgba_loss(picked, target))
+        return loss, picked
+
+    train_step = common.make_train_step(loss_fn, unravel, cfg)
+
+    def rollout(pf, state, seed):
+        p = unravel(pf)
+        key = jax.random.PRNGKey(seed)
+
+        def body(carry, i):
+            st = _step(p, carry, jax.random.fold_in(key, i), cfg)
+            return st, st
+
+        final, traj = jax.lax.scan(body, state[None], jnp.arange(t))
+        return final[0], traj[:, 0]
+
+    def seed_art():
+        return (seed_state(h, w, c),)
+
+    meta = {"kind": "nca", "ca": "growing", "height": h, "width": w,
+            "channels": c, "batch": b, "steps": t, "hidden": cfg.hidden,
+            "param_count": int(n)}
+    return [
+        dict(name="growing_train_step", fn=train_step,
+             args=[("params", spec(n)), ("m", spec(n)), ("v", spec(n)),
+                   ("step", spec(dtype=jnp.int32)),
+                   ("states", spec(b, h, w, c)), ("target", spec(h, w, 4)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta, blobs={"growing_params": params_flat}),
+        dict(name="growing_rollout", fn=rollout,
+             args=[("params", spec(n)), ("state", spec(h, w, c)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta),
+        dict(name="growing_seed", fn=seed_art, args=[], meta=meta),
+    ]

@@ -1,0 +1,161 @@
+"""Self-classifying MNIST digits (Randazzo et al. 2020) — Table 1 row 7,
+and the Figure-3-right benchmark subject.
+
+Each alive cell (a digit pixel) must locally agree on the digit's class:
+channel 0 carries the (frozen) pixel intensity, the last 10 channels are
+per-cell class logits. Cross-entropy is averaged over alive cells at the
+final and half-way steps (consensus must form *and persist*).
+
+Artifacts:
+- ``mnist_train_step`` — fused whole-rollout BPTT train step (the CAX path).
+- ``mnist_eval``       — deterministic rollout returning per-cell logits.
+- ``mnist_step_fwd``   — ONE forward step (stepwise-dispatch baseline, E3).
+- ``mnist_step_vjp``   — VJP of one step given the upstream cotangent; the
+  Rust harness chains T of these to do host-driven BPTT, reproducing the
+  per-step-dispatch cost structure of the TensorFlow reference (Fig. 3
+  right) on identical hardware.
+- ``mnist_final_grad`` — loss + d(loss)/d(state) at the readout, seeding the
+  host-driven BPTT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models import common, nca
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def init_params(key, cfg):
+    kernels = nca.default_kernels_2d(3)
+    perc = cfg.channels * kernels.shape[-1]
+    return {"update": nca.init_update_params(key, perc, cfg.hidden,
+                                             cfg.channels)}
+
+
+def init_state(digits, c):
+    """Digit intensity in channel 0, everything else zero. digits [B,H,W]."""
+    b, h, w = digits.shape
+    state = jnp.zeros((b, h, w, c), dtype=jnp.float32)
+    return state.at[..., 0].set(digits)
+
+
+def _frozen_mask(digits, c):
+    """Channel 0 is frozen input. [B, H, W, C] {0,1}."""
+    b, h, w = digits.shape
+    frozen = jnp.zeros((b, h, w, c), dtype=jnp.float32)
+    return frozen.at[..., 0].set(1.0)
+
+
+def _step(params, state, key, digits, cfg):
+    # Updates only happen where there is ink (alive = digit pixel).
+    alive = (digits > 0.1).astype(jnp.float32)[..., None]
+    return nca.nca_step_2d(
+        params["update"], state, key, kernels=nca.default_kernels_2d(3),
+        dropout=cfg.dropout, frozen=_frozen_mask(digits, cfg.channels),
+        update_mask=alive,
+    )
+
+
+def _cell_ce(state, digits, labels1h, nc):
+    """Mean cross-entropy of per-cell logits over alive cells."""
+    logits = state[..., -nc:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.sum(logp * labels1h[:, None, None, :], axis=-1)  # [B,H,W]
+    alive = (digits > 0.1).astype(jnp.float32)
+    return jnp.sum(ce * alive) / jnp.maximum(jnp.sum(alive), 1.0)
+
+
+def artifacts(cfg, key) -> list[dict]:
+    h, w, c, b, t = cfg.height, cfg.width, cfg.channels, cfg.batch, cfg.steps
+    nc = cfg.extra["num_classes"]
+    params = init_params(key, cfg)
+    params_flat, unravel = common.flatten_params(params)
+    n = params_flat.shape[0]
+
+    def loss_fn(p, digits, labels1h, key):
+        state = init_state(digits, c)
+
+        def body(carry, i):
+            st = _step(p, carry, jax.random.fold_in(key, i), digits, cfg)
+            return st, None
+
+        mid, _ = jax.lax.scan(body, state, jnp.arange(t // 2))
+        fin, _ = jax.lax.scan(
+            body, mid, jnp.arange(t // 2, t)
+        )
+        loss = 0.5 * (_cell_ce(mid, digits, labels1h, nc)
+                      + _cell_ce(fin, digits, labels1h, nc))
+        return loss, ()
+
+    train_step = common.make_train_step(loss_fn, unravel, cfg)
+
+    def eval_fn(pf, digits, seed):
+        p = unravel(pf)
+        key = jax.random.PRNGKey(seed)
+        state = init_state(digits, c)
+
+        def body(carry, i):
+            st = _step(p, carry, jax.random.fold_in(key, i), digits, cfg)
+            return st, None
+
+        fin, _ = jax.lax.scan(body, state, jnp.arange(t))
+        return (fin[..., -nc:],)
+
+    def step_fwd(pf, state, digits, seed):
+        p = unravel(pf)
+        key = jax.random.PRNGKey(seed)
+        return (_step(p, state, key, digits, cfg),)
+
+    def step_vjp(pf, state, digits, seed, ct):
+        # Recomputes the step (same seed => same dropout mask) and pulls the
+        # cotangent back through it.
+        key = jax.random.PRNGKey(seed)
+
+        def f(pf_, st_):
+            p = unravel(pf_)
+            return _step(p, st_, key, digits, cfg)
+
+        _, vjp = jax.vjp(f, pf, state)
+        dpf, dstate = vjp(ct)
+        return dpf, dstate
+
+    def final_grad(state, digits, labels1h):
+        def f(st):
+            return _cell_ce(st, digits, labels1h, nc)
+
+        loss, grad = jax.value_and_grad(f)(state)
+        return loss, grad
+
+    meta = {"kind": "nca", "ca": "mnist", "height": h, "width": w,
+            "channels": c, "batch": b, "steps": t, "hidden": cfg.hidden,
+            "num_classes": nc, "param_count": int(n)}
+    st_spec = spec(b, h, w, c)
+    return [
+        dict(name="mnist_train_step", fn=train_step,
+             args=[("params", spec(n)), ("m", spec(n)), ("v", spec(n)),
+                   ("step", spec(dtype=jnp.int32)),
+                   ("digits", spec(b, h, w)), ("labels1h", spec(b, nc)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta, blobs={"mnist_params": params_flat}),
+        dict(name="mnist_eval", fn=eval_fn,
+             args=[("params", spec(n)), ("digits", spec(b, h, w)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta),
+        dict(name="mnist_step_fwd", fn=step_fwd,
+             args=[("params", spec(n)), ("state", st_spec),
+                   ("digits", spec(b, h, w)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta),
+        dict(name="mnist_step_vjp", fn=step_vjp,
+             args=[("params", spec(n)), ("state", st_spec),
+                   ("digits", spec(b, h, w)),
+                   ("seed", spec(dtype=jnp.uint32)), ("ct", st_spec)],
+             meta=meta),
+        dict(name="mnist_final_grad", fn=final_grad,
+             args=[("state", st_spec), ("digits", spec(b, h, w)),
+                   ("labels1h", spec(b, nc))],
+             meta=meta),
+    ]

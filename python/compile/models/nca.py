@@ -1,0 +1,217 @@
+"""The CAX modular NCA core: perceive -> update (paper §3.1).
+
+Mirrors the paper's two-component local rule:
+
+- **perceive**: depthwise convolution of every channel with K fixed kernels
+  (identity + gradients [+ Laplacian]). The 2D path calls the Layer-1 Pallas
+  kernel (``kernels.dwconv``) so it lowers into the same HLO as the rest of
+  the graph; the 1D and 3D paths are jnp roll-based (same math, dimensions
+  the Pallas kernel doesn't cover — see DESIGN.md §4.1).
+- **update**: a per-cell MLP producing a residual update, gated by stochastic
+  per-cell dropout, optionally with alive-masking (growing models) and an
+  external per-cell input (controllable CA, paper §2.2).
+
+All state layouts are channel-last: [B, W, C] (1D), [B, H, W, C] (2D),
+[B, D, H, W, C] (3D).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import dwconv, perception_kernels
+from compile.models import common
+
+
+# --------------------------------------------------------------------------
+# Perceive
+# --------------------------------------------------------------------------
+
+def perceive2d(state: jnp.ndarray, kernels: jnp.ndarray) -> jnp.ndarray:
+    """Batched 2D perception via the Pallas dwconv kernel.
+
+    Args:
+        state: f32[B, H, W, C]; kernels: f32[3, 3, K].
+
+    Returns:
+        f32[B, H, W, C*K].
+    """
+    return jax.vmap(lambda s: dwconv(s, kernels))(state)
+
+
+def perception_kernels_1d(num_kernels: int = 2) -> jnp.ndarray:
+    """1D stack: identity, central gradient[, second difference]. f32[3, K]."""
+    ident = jnp.array([0.0, 1.0, 0.0])
+    grad = jnp.array([-0.5, 0.0, 0.5])
+    lap = jnp.array([1.0, -2.0, 1.0])
+    stack = jnp.stack([ident, grad, lap], axis=-1).astype(jnp.float32)
+    return stack[:, :num_kernels]
+
+
+def perceive1d(state: jnp.ndarray, kernels: jnp.ndarray) -> jnp.ndarray:
+    """Batched 1D perception (periodic). state f32[B, W, C], kernels f32[3, K].
+
+    Returns f32[B, W, C*K]; channel c*K + k = kernel k on channel c.
+    """
+    b, w, c = state.shape
+    k = kernels.shape[-1]
+    out = jnp.zeros((b, w, c, k), dtype=state.dtype)
+    for tap in range(3):
+        shifted = jnp.roll(state, 1 - tap, axis=1)
+        out = out + shifted[..., None] * kernels[tap][None, None, None, :]
+    return out.reshape(b, w, c * k)
+
+
+def perceive3d(state: jnp.ndarray) -> jnp.ndarray:
+    """Batched 3D perception: identity + central gradient along each axis.
+
+    state f32[B, D, H, W, C] -> f32[B, D, H, W, C*4] (identity, dz, dy, dx).
+    This is ``grad_kernel(ndim=3)`` + identity of the CAX notebook.
+    """
+    grads = [state]
+    for axis in (1, 2, 3):
+        fwd = jnp.roll(state, -1, axis=axis)
+        bwd = jnp.roll(state, 1, axis=axis)
+        grads.append(0.5 * (fwd - bwd))
+    b, d, h, w, c = state.shape
+    return jnp.stack(grads, axis=-1).reshape(b, d, h, w, c * 4)
+
+
+# --------------------------------------------------------------------------
+# Update
+# --------------------------------------------------------------------------
+
+def init_update_params(key, perception_size: int, hidden: int, channels: int):
+    """The NCA update MLP: perception -> hidden (relu) -> residual update.
+
+    Output layer zero-init so training starts from the identity dynamics.
+    """
+    k1, _ = jax.random.split(key)
+    return {
+        "fc1": common.dense_init(k1, perception_size, hidden),
+        "fc2": common.dense_zeros(hidden, channels),
+    }
+
+
+def update_mlp(params, perception: jnp.ndarray) -> jnp.ndarray:
+    """Per-cell residual update from perception features (trailing axis)."""
+    h = jnp.maximum(common.dense(params["fc1"], perception), 0.0)
+    return common.dense(params["fc2"], h)
+
+
+def cell_dropout(key, update: jnp.ndarray, rate: float) -> jnp.ndarray:
+    """Per-cell stochastic update mask ("per-cell dropout", Mordvintsev 2020).
+
+    Masks whole cells (all channels together); no rescaling — the NCA is a
+    dynamical system, not an expectation model.
+    """
+    if rate <= 0.0:
+        return update
+    keep = jax.random.bernoulli(key, 1.0 - rate, update.shape[:-1])
+    return update * keep[..., None].astype(update.dtype)
+
+
+def alive_mask_2d(state: jnp.ndarray, alpha_channel: int = 3,
+                  threshold: float = 0.1) -> jnp.ndarray:
+    """Growing-NCA alive masking: a cell is alive if any neighbour (3x3) has
+    alpha > threshold. state f32[B, H, W, C] -> f32[B, H, W, 1]."""
+    alpha = state[..., alpha_channel]
+    neigh_max = alpha
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            if dy == 0 and dx == 0:
+                continue
+            neigh_max = jnp.maximum(
+                neigh_max, jnp.roll(alpha, (dy, dx), axis=(-2, -1))
+            )
+    return (neigh_max > threshold).astype(state.dtype)[..., None]
+
+
+# --------------------------------------------------------------------------
+# Step (the paper's CA.step: state -> perceive -> update -> state')
+# --------------------------------------------------------------------------
+
+def nca_step_2d(params, state, key, *, kernels, dropout: float,
+                alive_masking: bool = False, frozen: jnp.ndarray | None = None,
+                ext_input: jnp.ndarray | None = None,
+                update_mask: jnp.ndarray | None = None):
+    """One 2D NCA step.
+
+    Args:
+        params: update-MLP params.
+        state: f32[B, H, W, C].
+        key: dropout PRNG key.
+        kernels: perception kernels f32[3, 3, K].
+        dropout: per-cell dropout rate.
+        alive_masking: apply growing-NCA alive gating on channel 3.
+        frozen: optional f32[B, H, W, C] {0,1} mask of channels/cells that
+            must NOT change (e.g. the MNIST input channel).
+        ext_input: optional f32[B, H, W, E] controllable input, concatenated
+            to the perception features (paper §2.2).
+        update_mask: optional f32 broadcastable to [B, H, W, 1] — cells where
+            updates are disabled entirely (autoencoding wall).
+
+    Returns:
+        f32[B, H, W, C] next state.
+    """
+    if alive_masking:
+        pre_alive = alive_mask_2d(state)
+    perception = perceive2d(state, kernels)
+    if ext_input is not None:
+        perception = jnp.concatenate([perception, ext_input], axis=-1)
+    upd = update_mlp(params, perception)
+    upd = cell_dropout(key, upd, dropout)
+    if update_mask is not None:
+        upd = upd * update_mask
+    new_state = state + upd
+    if alive_masking:
+        post_alive = alive_mask_2d(new_state)
+        new_state = new_state * (pre_alive * post_alive)
+    if frozen is not None:
+        new_state = jnp.where(frozen > 0.5, state, new_state)
+    return new_state
+
+
+def nca_step_1d(params, state, key, *, kernels, dropout: float,
+                frozen: jnp.ndarray | None = None):
+    """One 1D NCA step. state f32[B, W, C]; kernels f32[3, K]."""
+    perception = perceive1d(state, kernels)
+    upd = update_mlp(params, perception)
+    upd = cell_dropout(key, upd, dropout)
+    new_state = state + upd
+    if frozen is not None:
+        new_state = jnp.where(frozen > 0.5, state, new_state)
+    return new_state
+
+
+def nca_step_3d(params, state, key, *, dropout: float,
+                frozen: jnp.ndarray | None = None,
+                update_mask: jnp.ndarray | None = None):
+    """One 3D NCA step. state f32[B, D, H, W, C]."""
+    perception = perceive3d(state)
+    upd = update_mlp(params, perception)
+    upd = cell_dropout(key, upd, dropout)
+    if update_mask is not None:
+        upd = upd * update_mask
+    new_state = state + upd
+    if frozen is not None:
+        new_state = jnp.where(frozen > 0.5, state, new_state)
+    return new_state
+
+
+def rollout(step_fn, state, key, num_steps: int, with_traj: bool = False):
+    """Scan ``step_fn(state, key) -> state`` for ``num_steps`` (paper §3.2.1).
+
+    Returns final state, or (final, traj[T, ...]) when ``with_traj``.
+    """
+
+    def body(carry, i):
+        st = step_fn(carry, jax.random.fold_in(key, i))
+        return st, (st if with_traj else None)
+
+    final, traj = jax.lax.scan(body, state, jnp.arange(num_steps))
+    return (final, traj) if with_traj else final
+
+
+def default_kernels_2d(num_kernels: int = 3) -> jnp.ndarray:
+    """Identity + Sobel-x + Sobel-y (+ Laplacian) from the L1 kernel stack."""
+    return perception_kernels(num_kernels)

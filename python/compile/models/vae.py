@@ -1,0 +1,117 @@
+"""Growing Unsupervised NCA — Variational Neural Cellular Automata
+(Palm et al. 2021) — Table 1 row 6.
+
+A dense VAE encoder maps a digit image to a latent code; the code is planted
+in the hidden channels of the centre seed cell; the NCA decodes by *growing*
+the reconstruction in channel 0. ELBO = reconstruction BCE + KL. This is the
+paper's §3.2.2 "variational autoencoder implementation" utility exercised
+end-to-end.
+
+Artifacts: ``vae_train_step``, ``vae_reconstruct``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models import common, nca
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def init_params(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    kernels = nca.default_kernels_2d(3)
+    perc = cfg.channels * kernels.shape[-1]
+    hw = cfg.height * cfg.width
+    latent = cfg.extra["latent"]
+    enc_h = cfg.extra["enc_hidden"]
+    return {
+        "enc1": common.dense_init(k1, hw, enc_h),
+        "enc_mu": common.dense_init(k2, enc_h, latent, scale=0.01),
+        "enc_logvar": common.dense_init(k3, enc_h, latent, scale=0.01),
+        "update": nca.init_update_params(k4, perc, cfg.hidden, cfg.channels),
+    }
+
+
+def encode(params, digits):
+    """digits [B, H, W] -> (mu, logvar) [B, L]."""
+    b = digits.shape[0]
+    hidden = jnp.tanh(common.dense(params["enc1"], digits.reshape(b, -1)))
+    return (common.dense(params["enc_mu"], hidden),
+            common.dense(params["enc_logvar"], hidden))
+
+
+def seed_from_latent(z, h, w, c):
+    """Latent planted in the centre cell's trailing channels; alpha-ish
+    channel 1 set to 1 so the update has signal to propagate."""
+    b, latent = z.shape
+    state = jnp.zeros((b, h, w, c), dtype=jnp.float32)
+    state = state.at[:, h // 2, w // 2, 1].set(1.0)
+    state = state.at[:, h // 2, w // 2, c - latent:].set(z)
+    return state
+
+
+def _step(params, state, key, cfg):
+    return nca.nca_step_2d(
+        params["update"], state, key, kernels=nca.default_kernels_2d(3),
+        dropout=cfg.dropout, alive_masking=False,
+    )
+
+
+def artifacts(cfg, key) -> list[dict]:
+    h, w, c, b, t = cfg.height, cfg.width, cfg.channels, cfg.batch, cfg.steps
+    latent = cfg.extra["latent"]
+    klw = cfg.extra["kl_weight"]
+    params = init_params(key, cfg)
+    params_flat, unravel = common.flatten_params(params)
+    n = params_flat.shape[0]
+
+    def decode_rollout(p, z, key):
+        state = seed_from_latent(z, h, w, c)
+
+        def body(carry, i):
+            return _step(p, carry, jax.random.fold_in(key, i), cfg), None
+
+        fin, _ = jax.lax.scan(body, state, jnp.arange(t))
+        return fin
+
+    def loss_fn(p, digits, key):
+        zkey, rkey = jax.random.split(key)
+        mu, logvar = encode(p, digits)
+        eps = jax.random.normal(zkey, mu.shape)
+        z = mu + jnp.exp(0.5 * logvar) * eps
+        fin = decode_rollout(p, z, rkey)
+        recon = jax.nn.sigmoid(fin[..., 0])
+        bce = -jnp.mean(
+            digits * jnp.log(recon + 1e-7)
+            + (1.0 - digits) * jnp.log(1.0 - recon + 1e-7)
+        )
+        kl = -0.5 * jnp.mean(1.0 + logvar - mu**2 - jnp.exp(logvar))
+        return bce + klw * kl, (bce, kl)
+
+    train_step = common.make_train_step(loss_fn, unravel, cfg)
+
+    def reconstruct(pf, digits, seed):
+        p = unravel(pf)
+        key = jax.random.PRNGKey(seed)
+        mu, _ = encode(p, digits)
+        fin = decode_rollout(p, mu, key)
+        return (jax.nn.sigmoid(fin[..., 0]),)
+
+    meta = {"kind": "nca", "ca": "vae", "height": h, "width": w,
+            "channels": c, "batch": b, "steps": t, "hidden": cfg.hidden,
+            "latent": latent, "param_count": int(n)}
+    return [
+        dict(name="vae_train_step", fn=train_step,
+             args=[("params", spec(n)), ("m", spec(n)), ("v", spec(n)),
+                   ("step", spec(dtype=jnp.int32)),
+                   ("digits", spec(b, h, w)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta, blobs={"vae_params": params_flat}),
+        dict(name="vae_reconstruct", fn=reconstruct,
+             args=[("params", spec(n)), ("digits", spec(b, h, w)),
+                   ("seed", spec(dtype=jnp.uint32))],
+             meta=meta),
+    ]

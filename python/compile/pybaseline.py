@@ -1,0 +1,105 @@
+"""Pure-Python per-cell CA baseline — the CellPyLib cost model, measured.
+
+CellPyLib (Antunes 2021), the paper's Fig. 3 comparator, evaluates a Python
+rule function per cell per step. The Rust `automata::*` baselines are far
+faster than that (compiled scalar loops), which makes the Rust-reported
+speedups conservative. This script measures the *actual* pure-Python
+per-cell dispatch cost on this machine — a faithful CellPyLib-role number —
+and records it in ``artifacts/py_baseline.json`` for `cax-tables fig3` /
+`cargo bench` to report against.
+
+Run by ``make artifacts`` (build time only; never on the request path):
+
+    python -m compile.pybaseline --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import time
+
+
+def eca_rule30_step(row: list[int]) -> list[int]:
+    """One ECA step, CellPyLib-style: a Python function call per cell."""
+    w = len(row)
+
+    def rule(left: int, center: int, right: int) -> int:
+        # Rule 30 lookup, as a per-cell Python callable (the cost model).
+        idx = (left << 2) | (center << 1) | right
+        return (30 >> idx) & 1
+
+    return [rule(row[(x - 1) % w], row[x], row[(x + 1) % w])
+            for x in range(w)]
+
+
+def life_step(grid: list[list[int]]) -> list[list[int]]:
+    """One Game-of-Life step with a per-cell Python rule call."""
+    h, w = len(grid), len(grid[0])
+
+    def rule(alive: int, neighbors: int) -> int:
+        return 1 if neighbors == 3 or (alive and neighbors == 2) else 0
+
+    out = [[0] * w for _ in range(h)]
+    for y in range(h):
+        ym, yp = (y - 1) % h, (y + 1) % h
+        for x in range(w):
+            xm, xp = (x - 1) % w, (x + 1) % w
+            n = (grid[ym][xm] + grid[ym][x] + grid[ym][xp]
+                 + grid[y][xm] + grid[y][xp]
+                 + grid[yp][xm] + grid[yp][x] + grid[yp][xp])
+            out[y][x] = rule(grid[y][x], n)
+    return out
+
+
+def measure_eca(width: int, steps: int) -> float:
+    """Cell updates per second of the pure-Python ECA."""
+    import random
+    random.seed(0)
+    row = [random.randint(0, 1) for _ in range(width)]
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        row = eca_rule30_step(row)
+    dt = time.perf_counter() - t0
+    return width * steps / dt
+
+
+def measure_life(size: int, steps: int) -> float:
+    import random
+    random.seed(0)
+    grid = [[random.randint(0, 1) for _ in range(size)] for _ in range(size)]
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        grid = life_step(grid)
+    dt = time.perf_counter() - t0
+    return size * size * steps / dt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--eca-width", type=int, default=4096)
+    ap.add_argument("--eca-steps", type=int, default=40)
+    ap.add_argument("--life-size", type=int, default=192)
+    ap.add_argument("--life-steps", type=int, default=4)
+    args = ap.parse_args()
+
+    eca_ups = measure_eca(args.eca_width, args.eca_steps)
+    life_ups = measure_life(args.life_size, args.life_steps)
+    report = {
+        "description": "pure-Python per-cell baseline (CellPyLib cost "
+                       "model), cell updates per second",
+        "eca_updates_per_s": eca_ups,
+        "life_updates_per_s": life_ups,
+        "eca_width": args.eca_width,
+        "life_size": args.life_size,
+    }
+    import os
+    path = os.path.join(args.out_dir, "py_baseline.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"eca  {eca_ups:.3e} cell-updates/s (pure Python)")
+    print(f"life {life_ups:.3e} cell-updates/s (pure Python)")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

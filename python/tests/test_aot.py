@@ -1,0 +1,121 @@
+"""AOT pipeline integrity: artifact collection, lowering, manifest schema."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs
+
+
+def test_presets_exist():
+    for name in ("test", "paper"):
+        preset = configs.get_preset(name)
+        assert set(preset) == {"classic", "growing", "conditional", "vae",
+                               "mnist", "diffusing", "autoenc3d", "arc"}
+
+
+def test_unknown_preset_raises():
+    with pytest.raises(ValueError):
+        configs.get_preset("huge")
+
+
+def test_paper_preset_matches_appendix_a():
+    p = configs.get_preset("paper")
+    # Table 3 (diffusing): 72x72, 64ch, hidden 256, batch 8, 128 steps.
+    d = p["diffusing"]
+    assert (d.height, d.width, d.channels, d.hidden, d.batch, d.steps) == \
+        (72, 72, 64, 256, 8, 128)
+    assert d.lr == 1e-3 and d.dropout == 0.5
+    # Table 4 (autoenc3d): (16, 16, 32) spatial, hidden 256, 96 steps.
+    z = p["autoenc3d"]
+    assert (z.height, z.width, z.depth, z.hidden, z.steps) == \
+        (16, 16, 32, 256, 96)
+    # Table 5 (arc): width 128, 32 ch, hidden 256, batch 8, 128 steps.
+    a = p["arc"]
+    assert (a.width, a.channels, a.hidden, a.batch, a.steps) == \
+        (128, 32, 256, 8, 128)
+
+
+def test_collect_artifacts_unique_and_complete():
+    arts = aot.collect_artifacts("test")
+    names = {a["name"] for a in arts}
+    # Table 1 coverage: every CA family present.
+    for family in ("eca", "life", "lenia", "growing", "conditional", "vae",
+                   "mnist", "arc", "diffusing", "autoenc3d"):
+        assert any(family in n for n in names), f"missing family {family}"
+    assert len(names) == len(arts)
+    for a in arts:
+        for (arg_name, s) in a["args"]:
+            assert isinstance(arg_name, str)
+            aot.dtype_name(s.dtype)  # must not raise
+
+
+def test_dtype_name_rejects_unknown():
+    with pytest.raises(ValueError):
+        aot.dtype_name(jnp.float64.dtype)
+
+
+def test_lower_artifact_roundtrip(tmp_path):
+    """Lower one small artifact and validate manifest entry + HLO header."""
+    arts = aot.collect_artifacts("test")
+    art = next(a for a in arts if a["name"] == "eca_step")
+    entry = aot.lower_artifact(art, str(tmp_path))
+    assert entry["name"] == "eca_step"
+    assert entry["inputs"][0] == {"name": "state", "dtype": "f32",
+                                  "shape": [4, 256]}
+    assert entry["outputs"][0]["shape"] == [4, 256]
+    text = (tmp_path / "eca_step.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_existing_manifest_consistent():
+    """If `make artifacts` has run, the manifest must describe real files."""
+    mpath = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                         "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built yet")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    base = os.path.dirname(mpath)
+    assert manifest["preset"] in ("test", "paper")
+    for a in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(base, a["file"])), a["name"]
+        assert a["inputs"] is not None and a["outputs"]
+    for b in manifest["blobs"]:
+        path = os.path.join(base, b["file"])
+        assert os.path.exists(path)
+        expected = 4
+        for dim in b["shape"]:
+            expected *= dim
+        assert os.path.getsize(path) == expected
+
+
+def test_blob_params_finite():
+    arts = aot.collect_artifacts("test")
+    import numpy as np
+    for a in arts:
+        for name, blob in a.get("blobs", {}).items():
+            arr = np.asarray(blob)
+            assert np.isfinite(arr).all(), name
+
+
+def test_no_elided_constants_in_artifacts():
+    """The HLO printer must include large literals: elided ``{...}``
+    constants re-parse as zeros in the runtime (silently breaking
+    perception kernels and masks)."""
+    import glob
+    import os
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..",
+                           "artifacts")
+    files = glob.glob(os.path.join(art_dir, "*.hlo.txt"))
+    if not files:
+        import pytest
+        pytest.skip("artifacts not built")
+    for f in files:
+        text = open(f).read()
+        assert "constant({...})" not in text and "{ ... }" not in text, \
+            f"{os.path.basename(f)} contains elided constants"

@@ -1,0 +1,218 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes, rules, and random states; discrete CAs must match
+EXACTLY, continuous ones to float tolerance. This is the core correctness
+signal of the kernel layer (see DESIGN.md §6).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (dwconv, eca_step, life_step, lenia_step,
+                             perception_kernels, ring_kernel, rule_to_table)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand_state(seed, shape, binary=False):
+    rng = np.random.default_rng(seed)
+    x = rng.random(shape).astype(np.float32)
+    if binary:
+        return (x < 0.5).astype(np.float32)
+    return x
+
+
+# ---------------------------------------------------------------- ECA
+
+@settings(**SETTINGS)
+@given(st.integers(0, 255), st.integers(1, 6), st.integers(3, 96),
+       st.integers(0, 2**31 - 1))
+def test_eca_matches_ref_exactly(rule_num, b, w, seed):
+    state = jnp.array(rand_state(seed, (b, w), binary=True))
+    rule = rule_to_table(rule_num)
+    out = eca_step(state, rule)
+    expect = ref.eca_step_ref(state, rule)
+    assert out.shape == (b, w)
+    np.testing.assert_array_equal(np.array(out), np.array(expect))
+
+
+def test_eca_rule_table_bits():
+    # Rule 110 = 0b01101110: patterns 111->0, 110->1, 101->1, 100->0,
+    # 011->1, 010->1, 001->1, 000->0 (table index = pattern value).
+    table = np.array(rule_to_table(110))
+    assert table.tolist() == [0, 1, 1, 1, 0, 1, 1, 0]
+
+
+def test_eca_rule_number_bounds():
+    with pytest.raises(ValueError):
+        rule_to_table(256)
+    with pytest.raises(ValueError):
+        rule_to_table(-1)
+
+
+def test_eca_rule0_kills_everything():
+    state = jnp.ones((2, 16), dtype=jnp.float32)
+    out = eca_step(state, rule_to_table(0))
+    assert float(jnp.sum(out)) == 0.0
+
+
+def test_eca_rule204_is_identity():
+    # Rule 204's table is exactly "copy the centre cell".
+    state = jnp.array(rand_state(7, (3, 33), binary=True))
+    out = eca_step(state, rule_to_table(204))
+    np.testing.assert_array_equal(np.array(out), np.array(state))
+
+
+# ---------------------------------------------------------------- Life
+
+@settings(**SETTINGS)
+@given(st.integers(1, 4), st.integers(3, 24), st.integers(3, 24),
+       st.integers(0, 2**31 - 1))
+def test_life_matches_ref_exactly(b, h, w, seed):
+    state = jnp.array(rand_state(seed, (b, h, w), binary=True))
+    out = life_step(state)
+    expect = ref.life_step_ref(state)
+    np.testing.assert_array_equal(np.array(out), np.array(expect))
+
+
+def test_life_block_is_still():
+    """A 2x2 block is a still life."""
+    state = np.zeros((1, 8, 8), dtype=np.float32)
+    state[0, 3:5, 3:5] = 1.0
+    out = life_step(jnp.array(state))
+    np.testing.assert_array_equal(np.array(out), state)
+
+
+def test_life_blinker_oscillates():
+    """A period-2 blinker returns to itself after two steps."""
+    state = np.zeros((1, 8, 8), dtype=np.float32)
+    state[0, 4, 3:6] = 1.0
+    s1 = life_step(jnp.array(state))
+    s2 = life_step(s1)
+    assert not np.array_equal(np.array(s1), state)
+    np.testing.assert_array_equal(np.array(s2), state)
+
+
+def test_life_glider_translates():
+    """The glider returns to itself shifted by (1, 1) after 4 steps (wrap)."""
+    state = np.zeros((1, 16, 16), dtype=np.float32)
+    glider = np.array([[0, 1, 0], [0, 0, 1], [1, 1, 1]], dtype=np.float32)
+    state[0, 2:5, 2:5] = glider
+    s = jnp.array(state)
+    for _ in range(4):
+        s = life_step(s)
+    np.testing.assert_array_equal(
+        np.array(s), np.roll(state, (1, 1), axis=(1, 2))
+    )
+
+
+# ---------------------------------------------------------------- dwconv
+
+@settings(**SETTINGS)
+@given(st.integers(2, 24), st.integers(2, 24), st.integers(1, 8),
+       st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_dwconv_matches_ref(h, w, c, k, seed):
+    state = jnp.array(rand_state(seed, (h, w, c)))
+    kernels = jnp.array(rand_state(seed + 1, (3, 3, k)) - 0.5)
+    out = dwconv(state, kernels)
+    expect = ref.dwconv_ref(state, kernels)
+    assert out.shape == (h, w, c * k)
+    np.testing.assert_allclose(np.array(out), np.array(expect), atol=1e-5)
+
+
+def test_dwconv_identity_kernel_is_identity():
+    state = jnp.array(rand_state(3, (10, 12, 5)))
+    out = dwconv(state, perception_kernels(1))
+    np.testing.assert_allclose(np.array(out), np.array(state), atol=1e-6)
+
+
+def test_dwconv_sobel_zero_on_constant():
+    """Gradient kernels must vanish on a constant field (periodic)."""
+    state = jnp.ones((8, 8, 3), dtype=jnp.float32) * 0.7
+    out = np.array(dwconv(state, perception_kernels(4)))
+    out4 = out.reshape(8, 8, 3, 4)
+    np.testing.assert_allclose(out4[..., 1:], 0.0, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 12), st.integers(1, 5),
+       st.integers(1, 3), st.integers(0, 2**31 - 1))
+def test_dwconv_grad_matches_ref(h, w, c, k, seed):
+    state = jnp.array(rand_state(seed, (h, w, c)))
+    kernels = jnp.array(rand_state(seed + 1, (3, 3, k)) - 0.5)
+
+    def f(s, kk):
+        return jnp.sum(jnp.tanh(dwconv(s, kk)))
+
+    def f_ref(s, kk):
+        return jnp.sum(jnp.tanh(ref.dwconv_ref(s, kk)))
+
+    g = jax.grad(f, argnums=(0, 1))(state, kernels)
+    gr = jax.grad(f_ref, argnums=(0, 1))(state, kernels)
+    # dkern accumulates over H*W*C f32 products: scale tolerance with the
+    # magnitude of the reference (pure-atol fails for large reductions).
+    np.testing.assert_allclose(np.array(g[0]), np.array(gr[0]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(g[1]), np.array(gr[1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_perception_kernels_bounds():
+    with pytest.raises(ValueError):
+        perception_kernels(0)
+    with pytest.raises(ValueError):
+        perception_kernels(5)
+
+
+# ---------------------------------------------------------------- Lenia
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.integers(12, 32), st.integers(2, 5),
+       st.integers(0, 2**31 - 1))
+def test_lenia_matches_ref(b, size, radius, seed):
+    state = jnp.array(rand_state(seed, (b, size, size)))
+    kern = jnp.array(ring_kernel(radius))
+    out = lenia_step(state, kern, mu=0.15, sigma=0.017, dt=0.1,
+                     radius=radius)
+    expect = jax.vmap(
+        lambda s: ref.lenia_step_ref(s, kern, 0.15, 0.017, 0.1)
+    )(state)
+    np.testing.assert_allclose(np.array(out), np.array(expect), atol=1e-5)
+
+
+def test_ring_kernel_normalized():
+    for r in (3, 5, 10, 13):
+        k = ring_kernel(r)
+        assert abs(k.sum() - 1.0) < 1e-5
+        assert k.min() >= 0.0
+        # Centre of the ring kernel is 0 (r=0 excluded).
+        assert k[r, r] == 0.0
+
+
+def test_lenia_fft_equals_direct():
+    """The L2 FFT path and the L1 Pallas direct path must agree."""
+    from compile.models.classic import lenia_fft_kernel, lenia_step_fft
+
+    size, radius = 32, 5
+    state = jnp.array(rand_state(11, (2, size, size)))
+    kfft = jnp.array(lenia_fft_kernel(size, radius))
+    out_fft = lenia_step_fft(state, kfft, 0.15, 0.017, 0.1)
+    kern = jnp.array(ring_kernel(radius))
+    out_direct = lenia_step(state, kern, mu=0.15, sigma=0.017, dt=0.1,
+                            radius=radius)
+    np.testing.assert_allclose(np.array(out_fft), np.array(out_direct),
+                               atol=1e-4)
+
+
+def test_lenia_state_stays_in_unit_interval():
+    state = jnp.array(rand_state(5, (1, 24, 24)))
+    kern = jnp.array(ring_kernel(4))
+    for _ in range(5):
+        state = lenia_step(state, kern, mu=0.15, sigma=0.017, dt=0.1,
+                           radius=4)
+    arr = np.array(state)
+    assert arr.min() >= 0.0 and arr.max() <= 1.0

@@ -1,0 +1,275 @@
+"""Layer-2 correctness: model semantics, shapes, and trainability.
+
+Each NCA family gets (a) shape/structure checks and (b) a short *real*
+training run through its train-step function asserting the loss decreases —
+the same function that is lowered to the HLO artifact the Rust trainer runs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs
+from compile.models import (arc, autoenc3d, common, conditional, diffusing,
+                            growing, mnist_classify, nca, vae)
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+    return configs.get_preset("test")
+
+
+def tiny(cfg, **kw):
+    """Shrink a config for fast in-test training."""
+    import dataclasses
+    return dataclasses.replace(cfg, **kw)
+
+
+def rand_digits(seed, b, h, w):
+    rng = np.random.default_rng(seed)
+    d = np.zeros((b, h, w), dtype=np.float32)
+    # blobby "digits": a few random rectangles of ink
+    for i in range(b):
+        for _ in range(3):
+            y0, x0 = rng.integers(0, h - 2), rng.integers(0, w - 2)
+            d[i, y0:y0 + rng.integers(2, 4), x0:x0 + rng.integers(2, 4)] = 1.0
+    return jnp.array(d)
+
+
+# ------------------------------------------------------------- core NCA
+
+def test_perceive1d_matches_manual():
+    state = jnp.array(np.random.default_rng(0).random((2, 8, 3)),
+                      dtype=jnp.float32)
+    kernels = nca.perception_kernels_1d(2)
+    out = nca.perceive1d(state, kernels)
+    assert out.shape == (2, 8, 6)
+    # identity kernel -> channel c*2 reproduces channel c
+    np.testing.assert_allclose(np.array(out[..., 0::2]), np.array(state),
+                               atol=1e-6)
+
+
+def test_perceive3d_identity_and_gradient():
+    state = jnp.array(np.random.default_rng(1).random((1, 4, 5, 6, 2)),
+                      dtype=jnp.float32)
+    out = nca.perceive3d(state)
+    assert out.shape == (1, 4, 5, 6, 8)
+    np.testing.assert_allclose(np.array(out[..., 0::4]), np.array(state),
+                               atol=1e-6)
+    # gradient of a constant field is zero
+    const = jnp.ones((1, 3, 3, 3, 1))
+    g = nca.perceive3d(const)
+    np.testing.assert_allclose(np.array(g[..., 1:]), 0.0, atol=1e-6)
+
+
+def test_alive_mask_spreads_one_cell():
+    state = jnp.zeros((1, 7, 7, 5))
+    state = state.at[0, 3, 3, 3].set(1.0)
+    mask = np.array(nca.alive_mask_2d(state))[0, :, :, 0]
+    assert mask.sum() == 9  # 3x3 neighbourhood of the live cell
+    assert mask[3, 3] == 1 and mask[0, 0] == 0
+
+
+def test_cell_dropout_masks_whole_cells():
+    upd = jnp.ones((2, 6, 6, 4))
+    out = np.array(nca.cell_dropout(jax.random.PRNGKey(0), upd, 0.5))
+    per_cell = out.sum(axis=-1)
+    assert set(np.unique(per_cell)).issubset({0.0, 4.0})
+    assert 0.0 < (per_cell == 4.0).mean() < 1.0
+
+
+def test_update_mlp_zero_init_is_identity_dynamics():
+    params = nca.init_update_params(jax.random.PRNGKey(0), 12, 16, 4)
+    perc = jnp.array(np.random.default_rng(2).random((3, 3, 12)),
+                     dtype=jnp.float32)
+    np.testing.assert_allclose(np.array(nca.update_mlp(params, perc)), 0.0)
+
+
+def test_adam_reduces_quadratic():
+    x = jnp.array([5.0, -3.0])
+    m = jnp.zeros(2)
+    v = jnp.zeros(2)
+    for step in range(200):
+        g = 2.0 * x
+        x, m, v = common.adam_update(x, m, v, g, jnp.int32(step), 0.1)
+    assert float(jnp.abs(x).max()) < 0.5
+
+
+def test_global_norm_clip():
+    g = jnp.array([3.0, 4.0])  # norm 5
+    clipped = common.global_norm_clip(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped)) - 1.0) < 1e-5
+    small = jnp.array([0.3, 0.4])
+    np.testing.assert_allclose(np.array(common.global_norm_clip(small, 1.0)),
+                               np.array(small), atol=1e-6)
+
+
+def test_linear_lr_schedule():
+    lr0 = common.linear_lr(jnp.int32(0), 1e-3, 1e-4, 100)
+    lr_mid = common.linear_lr(jnp.int32(50), 1e-3, 1e-4, 100)
+    lr_end = common.linear_lr(jnp.int32(1000), 1e-3, 1e-4, 100)
+    assert abs(float(lr0) - 1e-3) < 1e-9
+    assert abs(float(lr_mid) - 5.5e-4) < 1e-6
+    assert abs(float(lr_end) - 1e-4) < 1e-9
+
+
+# ------------------------------------------------------------- training
+
+def run_train(art_list, name, inputs, steps=30):
+    """Drive a train-step artifact function directly (pre-lowering)."""
+    art = next(a for a in art_list if a["name"] == name)
+    fn = jax.jit(art["fn"])
+    n = art["args"][0][1].shape[0]
+    blob_name = next(iter(art["blobs"]))
+    params = jnp.array(art["blobs"][blob_name])
+    m = jnp.zeros(n)
+    v = jnp.zeros(n)
+    losses = []
+    extra_state = None
+    for i in range(steps):
+        out = fn(params, m, v, jnp.int32(i), *inputs(i, extra_state),
+                 jnp.uint32(1234))
+        params, m, v, loss = out[0], out[1], out[2], out[3]
+        if len(out) > 4:
+            extra_state = out[4:]
+        losses.append(float(loss))
+    return losses
+
+
+def test_growing_trains(cfgs):
+    cfg = tiny(cfgs["growing"], height=16, width=16, channels=8, hidden=32,
+               batch=4, steps=12)
+    arts = growing.artifacts(cfg, jax.random.PRNGKey(0))
+    target = jnp.zeros((16, 16, 4)).at[5:11, 5:11, :].set(0.8)
+    states = jnp.broadcast_to(
+        growing.seed_state(16, 16, 8)[None], (4, 16, 16, 8)
+    )
+    holder = {"states": states}
+
+    def inputs(i, extra):
+        if extra is not None:
+            holder["states"] = extra[0]  # pool write-back
+        return holder["states"], target
+
+    # Pool write-back + per-sample random rollout lengths make the loss
+    # noisy; compare window means rather than endpoints.
+    losses = run_train(arts, "growing_train_step", inputs, steps=48)
+    first, last = np.mean(losses[:8]), np.mean(losses[-8:])
+    assert last < first * 0.9, (first, last, losses[::12])
+
+
+def test_mnist_trains(cfgs):
+    cfg = tiny(cfgs["mnist"], height=12, width=12, channels=14, hidden=32,
+               batch=4, steps=8)
+    arts = mnist_classify.artifacts(cfg, jax.random.PRNGKey(1))
+    digits = rand_digits(0, 4, 12, 12)
+    labels = jax.nn.one_hot(jnp.array([0, 1, 2, 3]), 10)
+    losses = run_train(arts, "mnist_train_step",
+                       lambda i, e: (digits, labels), steps=40)
+    assert losses[-1] < losses[0] * 0.9, losses[::10]
+
+
+def test_arc_trains_move1(cfgs):
+    cfg = tiny(cfgs["arc"], width=16, channels=12, hidden=32, batch=8,
+               steps=8)
+    arts = arc.artifacts(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(3)
+
+    def make_batch():
+        x = np.zeros((8, 16), dtype=np.int64)
+        for i in range(8):
+            start = rng.integers(0, 10)
+            x[i, start:start + 3] = rng.integers(1, 10)
+        y = np.roll(x, 1, axis=1)  # Move-1 task
+        return (jax.nn.one_hot(jnp.array(x), 10),
+                jax.nn.one_hot(jnp.array(y), 10))
+
+    batches = [make_batch() for _ in range(8)]
+    losses = run_train(arts, "arc_train_step",
+                       lambda i, e: batches[i % 8], steps=48)
+    assert losses[-1] < losses[0] * 0.7, losses[::12]
+
+
+def test_diffusing_trains(cfgs):
+    cfg = tiny(cfgs["diffusing"], height=12, width=12, channels=8,
+               hidden=32, batch=4, steps=8)
+    arts = diffusing.artifacts(cfg, jax.random.PRNGKey(3))
+    target = jnp.zeros((12, 12, 4)).at[3:9, 3:9, :].set(0.7)
+    # Each step draws a fresh noise level, so per-step loss is noisy;
+    # compare first/last window means over a longer run instead.
+    losses = run_train(arts, "diffusing_train_step",
+                       lambda i, e: (target,), steps=120)
+    first = sum(losses[:12]) / 12
+    last = sum(losses[-12:]) / 12
+    assert last < first * 0.8, (first, last, losses[::16])
+
+
+def test_autoenc3d_trains(cfgs):
+    cfg = tiny(cfgs["autoenc3d"], depth=6, height=8, width=8, channels=8,
+               hidden=24, batch=4, steps=12)
+    arts = autoenc3d.artifacts(cfg, jax.random.PRNGKey(4))
+    digits = rand_digits(5, 4, 8, 8)
+    losses = run_train(arts, "autoenc3d_train_step",
+                       lambda i, e: (digits,), steps=40)
+    assert losses[-1] < losses[0], losses[::10]
+
+
+def test_conditional_trains(cfgs):
+    cfg = tiny(cfgs["conditional"], height=12, width=12, channels=8,
+               hidden=32, batch=6, steps=8)
+    arts = conditional.artifacts(cfg, jax.random.PRNGKey(5))
+    targets = jnp.stack([
+        jnp.zeros((12, 12, 4)).at[3:9, 3:9, :].set(v)
+        for v in (0.3, 0.6, 0.9)
+    ])
+    goals = jax.nn.one_hot(jnp.array([0, 1, 2, 0, 1, 2]), 3)
+    losses = run_train(arts, "conditional_train_step",
+                       lambda i, e: (targets, goals), steps=40)
+    assert losses[-1] < losses[0] * 0.9, losses[::10]
+
+
+def test_vae_trains(cfgs):
+    cfg = tiny(cfgs["vae"], height=10, width=10, channels=10, hidden=32,
+               batch=4, steps=8,
+               extra={"latent": 4, "enc_hidden": 32, "kl_weight": 1e-3})
+    arts = vae.artifacts(cfg, jax.random.PRNGKey(6))
+    digits = rand_digits(7, 4, 10, 10)
+    losses = run_train(arts, "vae_train_step",
+                       lambda i, e: (digits,), steps=40)
+    assert losses[-1] < losses[0], losses[::10]
+
+
+# ------------------------------------------------------------- structure
+
+def test_growing_seed_state():
+    s = np.array(growing.seed_state(9, 9, 6))
+    assert s[4, 4, 3:].tolist() == [1.0, 1.0, 1.0]
+    assert s.sum() == 3.0
+
+
+def test_autoenc3d_wall_mask():
+    m = np.array(autoenc3d.wall_mask(8, 6, 6))[..., 0]
+    assert m[4].sum() == 1.0          # wall layer: only the hole
+    assert m[4, 3, 3] == 1.0          # the hole
+    assert m[0].sum() == 36.0         # other layers fully updatable
+
+
+def test_mnist_frozen_channel_stays():
+    cfg = tiny(configs.get_preset("test")["mnist"], height=8, width=8,
+               channels=12, hidden=16, batch=2, steps=4)
+    params = mnist_classify.init_params(jax.random.PRNGKey(0), cfg)
+    digits = rand_digits(8, 2, 8, 8)
+    state = mnist_classify.init_state(digits, 12)
+    out = mnist_classify._step(params, state, jax.random.PRNGKey(1), digits,
+                               cfg)
+    np.testing.assert_allclose(np.array(out[..., 0]), np.array(digits))
+
+
+def test_vae_encode_shapes():
+    cfg = tiny(configs.get_preset("test")["vae"], height=10, width=10,
+               channels=10, hidden=16, batch=3, steps=4,
+               extra={"latent": 4, "enc_hidden": 16, "kl_weight": 1e-3})
+    params = vae.init_params(jax.random.PRNGKey(0), cfg)
+    mu, logvar = vae.encode(params, rand_digits(9, 3, 10, 10))
+    assert mu.shape == (3, 4) and logvar.shape == (3, 4)

@@ -1,0 +1,101 @@
+//! Ablation — the sample pool (paper §3.2.2 / App. B).
+//!
+//! The paper credits the pool with stabilizing growing-NCA training: the
+//! NCA keeps seeing its own developed states, making the target an
+//! attractor rather than a waypoint. Ablation: train the same artifact
+//! (a) with the Layer-3 pool (sample + write-back) and (b) with a fresh
+//! seed batch every step, then compare the training losses AND the
+//! stability metric that actually matters — MSE after rolling out PAST the
+//! trained horizon (2x chained rollouts).
+//!
+//! Run: cargo bench --bench ablation_pool [-- --quick]
+
+use cax::coordinator::experiments;
+use cax::coordinator::trainer::{train_loop, TrainCfg, TrainState};
+use cax::runtime::Value;
+use cax::tensor::Tensor;
+
+mod bench_util;
+use bench_util::{engine, header, quick};
+
+fn rgba_mse(state: &Tensor, target: &Tensor) -> f64 {
+    let (h, w) = (target.shape()[0], target.shape()[1]);
+    let mut sum = 0.0;
+    for y in 0..h {
+        for x in 0..w {
+            for c in 0..4 {
+                let d = (state.at(&[y, x, c]) - target.at(&[y, x, c])) as f64;
+                sum += d * d;
+            }
+        }
+    }
+    sum / (h * w * 4) as f64
+}
+
+fn main() -> () {
+    let engine = engine();
+    let steps = if quick() { 120 } else { 400 };
+    let seed = 7u32;
+    let cfg = TrainCfg { steps, seed, log_every: 0, out_dir: None };
+    let target = experiments::growing_target(&engine).unwrap();
+    let seed_state = experiments::growing_seed(&engine).unwrap();
+
+    header(&format!("ablation: sample pool vs fresh seeds ({steps} steps)"));
+
+    // (a) With the pool.
+    let (pool_run, _pool) =
+        experiments::train_growing(&engine, &cfg, 64).unwrap();
+    let (pf, pl_) = pool_run.history.window_means(20);
+
+    // (b) Without the pool: fresh single-seed batch every step.
+    let info = engine.manifest().artifact("growing_train_step").unwrap();
+    let batch = info.inputs[4].shape[0];
+    let fresh_batch = Tensor::stack(
+        &(0..batch).map(|_| seed_state.clone()).collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let mut st = TrainState::from_blob(&engine, "growing_params").unwrap();
+    let history = train_loop(
+        &engine,
+        "growing_train_step",
+        &mut st,
+        &cfg,
+        |_| Ok(vec![Value::F32(fresh_batch.clone()),
+                    Value::F32(target.clone())]),
+        |_| Ok(()),
+    )
+    .unwrap();
+    let (ff, fl) = history.window_means(20);
+
+    println!("{:<22} {:>12} {:>12}", "variant", "loss first", "loss last");
+    println!("{:<22} {:>12.5} {:>12.5}", "with-pool", pf, pl_);
+    println!("{:<22} {:>12.5} {:>12.5}", "fresh-seeds", ff, fl);
+
+    // Stability probe: chain 2 rollouts (2x the trained horizon) from the
+    // seed and measure final MSE — the pool-trained NCA should hold the
+    // pattern better (attractor), the no-pool one typically overshoots.
+    let probe = |params: &Tensor, tag: &str| {
+        let mut state = seed_state.clone();
+        for r in 0..2 {
+            let mut out = engine
+                .execute(
+                    "growing_rollout",
+                    &[Value::F32(params.clone()), Value::F32(state),
+                      Value::U32(100 + r)],
+                )
+                .unwrap();
+            out.truncate(1);
+            state = out.pop().unwrap();
+        }
+        let mse = rgba_mse(&state, &target);
+        println!("{:<22} 2x-horizon rollout MSE {:.5}", tag, mse);
+        mse
+    };
+    header("stability past the trained horizon (lower = stabler)");
+    let with_pool = probe(&pool_run.state.params, "with-pool");
+    let without = probe(&st.params, "fresh-seeds");
+    println!(
+        "\npool stability advantage: {:.2}x lower MSE at 2x horizon",
+        without / with_pool.max(1e-12)
+    );
+}

@@ -1,0 +1,54 @@
+//! Minimal bench harness shared by the `cargo bench` targets (criterion is
+//! not available offline; this prints comparable median/mean/p95 rows and
+//! honors the same warmup/measure protocol everywhere).
+
+use std::path::PathBuf;
+
+use cax::runtime::Engine;
+use cax::util::timer::{Stats, Timer};
+
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("CAX_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn engine() -> Engine {
+    Engine::load(&artifacts_dir()).expect("run `make artifacts` first")
+}
+
+/// Quick mode trims iteration counts (CAX_BENCH_QUICK=1 or `--quick`).
+pub fn quick() -> bool {
+    std::env::var("CAX_BENCH_QUICK").is_ok()
+        || std::env::args().any(|a| a == "--quick")
+}
+
+/// Time `f` with warmup; returns wall-clock stats over `iters` runs.
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_secs());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Print one result row: name, median, mean, p95, throughput.
+#[allow(dead_code)]
+pub fn row(name: &str, stats: &Stats, items: f64) {
+    println!(
+        "{:<40} median {:>10.4}s  mean {:>10.4}s  p95 {:>10.4}s  {:>12.3e}/s",
+        name, stats.median, stats.mean, stats.p95,
+        items / stats.median.max(1e-12)
+    );
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

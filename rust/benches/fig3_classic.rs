@@ -1,0 +1,158 @@
+//! E1/E2 — Figure 3 (left): classic-CA simulation speed, CAX-fused vs
+//! per-step dispatch vs the naive per-cell baseline (the CellPyLib role).
+//!
+//! The paper reports 1,400x (ECA) and 2,000x (Life) over CellPyLib on an
+//! A6000. Here all paths share one CPU, so the measured ratio isolates the
+//! paper's mechanism (vectorization + one fused scan program); see
+//! DESIGN.md §3 and EXPERIMENTS.md for the interpretation.
+
+use cax::automata::WolframRule;
+use cax::coordinator::{Path, Simulator};
+use cax::runtime::Engine;
+use cax::util::rng::Rng;
+
+mod bench_util;
+use bench_util::{bench, engine, header, quick, row};
+
+/// Prefer the bench-scale artifact when the manifest carries it.
+fn pick<'a>(engine: &Engine, bench_name: &'a str, fallback: &'a str)
+            -> &'a str {
+    if engine.manifest().artifacts.contains_key(bench_name) {
+        bench_name
+    } else {
+        fallback
+    }
+}
+
+fn main() {
+    let engine = engine();
+    let sim = Simulator::new(&engine);
+    let mut rng = Rng::new(42);
+    let (warm, iters) = if quick() { (1, 3) } else { (2, 10) };
+
+    let eca_roll = pick(&engine, "eca_rollout_bench", "eca_rollout");
+    let eca_step = pick(&engine, "eca_step_bench", "eca_step");
+    let life_roll = pick(&engine, "life_rollout_bench", "life_rollout");
+    let life_step = pick(&engine, "life_step_bench", "life_step");
+
+    {
+        let info = engine.manifest().artifact(eca_roll).unwrap();
+        let steps = info.meta_usize("steps").unwrap();
+        let (b, w) = (info.meta_usize("batch").unwrap(),
+                      info.meta_usize("width").unwrap());
+        header(&format!("Fig. 3 left — ECA rule 30 ({b}x{w}, {steps} steps)"));
+        let state = sim.random_state(eca_roll, &mut rng).unwrap();
+        let updates = sim.cell_updates(eca_roll, steps).unwrap();
+        let rule = WolframRule::new(30);
+
+        let fused = bench(warm, iters, || {
+            sim.run_eca_named(eca_step, eca_roll, Path::Fused, &state, rule,
+                              steps)
+                .unwrap();
+        });
+        let stepwise = bench(warm.min(1), iters.min(5), || {
+            sim.run_eca_named(eca_step, eca_roll, Path::Stepwise, &state,
+                              rule, steps)
+                .unwrap();
+        });
+        let naive = bench(warm, iters, || {
+            sim.run_eca_named(eca_step, eca_roll, Path::Naive, &state, rule,
+                              steps)
+                .unwrap();
+        });
+        row("eca/cax-fused", &fused, updates);
+        row("eca/xla-stepwise", &stepwise, updates);
+        row("eca/naive-baseline", &naive, updates);
+        println!(
+            "  speedup: fused is {:.1}x vs naive, {:.1}x vs stepwise \
+             (paper: 1400x vs CellPyLib on GPU)",
+            naive.median / fused.median,
+            stepwise.median / fused.median
+        );
+        if let Some(py) =
+            cax::metrics::read_py_baseline(&bench_util::artifacts_dir())
+        {
+            println!(
+                "  vs pure-Python per-cell baseline ({:.2e} upd/s): {:.0}x",
+                py.eca_updates_per_s,
+                (updates / fused.median) / py.eca_updates_per_s
+            );
+        }
+    }
+
+    {
+        let info = engine.manifest().artifact(life_roll).unwrap();
+        let steps = info.meta_usize("steps").unwrap();
+        let (h, w) = (info.meta_usize("height").unwrap(),
+                      info.meta_usize("width").unwrap());
+        header(&format!("Fig. 3 left — Game of Life ({h}x{w}, {steps} \
+                         steps)"));
+        let state = sim.random_state(life_roll, &mut rng).unwrap();
+        let updates = sim.cell_updates(life_roll, steps).unwrap();
+
+        let fused = bench(warm, iters, || {
+            sim.run_life_named(life_step, life_roll, Path::Fused, &state,
+                               steps)
+                .unwrap();
+        });
+        let stepwise = bench(warm.min(1), iters.min(5), || {
+            sim.run_life_named(life_step, life_roll, Path::Stepwise, &state,
+                               steps)
+                .unwrap();
+        });
+        let naive = bench(warm.min(1), iters.min(4), || {
+            sim.run_life_named(life_step, life_roll, Path::Naive, &state,
+                               steps)
+                .unwrap();
+        });
+        row("life/cax-fused", &fused, updates);
+        row("life/xla-stepwise", &stepwise, updates);
+        row("life/naive-baseline", &naive, updates);
+        println!(
+            "  speedup: fused is {:.1}x vs naive, {:.1}x vs stepwise \
+             (paper: 2000x vs CellPyLib on GPU)",
+            naive.median / fused.median,
+            stepwise.median / fused.median
+        );
+        if let Some(py) =
+            cax::metrics::read_py_baseline(&bench_util::artifacts_dir())
+        {
+            println!(
+                "  vs pure-Python per-cell baseline ({:.2e} upd/s): {:.0}x",
+                py.life_updates_per_s,
+                (updates / fused.median) / py.life_updates_per_s
+            );
+        }
+    }
+
+    header("Fig. 3 left — Lenia (continuous, FFT vs direct conv)");
+    {
+        let steps = engine
+            .manifest()
+            .artifact("lenia_rollout")
+            .unwrap()
+            .meta_usize("steps")
+            .unwrap();
+        let state = sim.random_state("lenia_rollout", &mut rng).unwrap();
+        let updates = sim.cell_updates("lenia_rollout", steps).unwrap();
+
+        let fused = bench(warm, iters, || {
+            sim.run_lenia(Path::Fused, &state, steps).unwrap();
+        });
+        let stepwise = bench(warm, iters.min(5), || {
+            sim.run_lenia(Path::Stepwise, &state, steps).unwrap();
+        });
+        let naive = bench(0, 2.min(iters), || {
+            sim.run_lenia(Path::Naive, &state, steps).unwrap();
+        });
+        row("lenia/cax-fused", &fused, updates);
+        row("lenia/xla-stepwise", &stepwise, updates);
+        row("lenia/naive-baseline", &naive, updates);
+        println!(
+            "  speedup: fused is {:.1}x vs naive (direct O(R^2) conv), \
+             {:.1}x vs stepwise",
+            naive.median / fused.median,
+            stepwise.median / fused.median
+        );
+    }
+}

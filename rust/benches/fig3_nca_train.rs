@@ -1,0 +1,92 @@
+//! E3 — Figure 3 (right): NCA training speed on self-classifying MNIST.
+//!
+//! CAX path: ONE fused XLA program per training step (rollout + BPTT +
+//! Adam in-graph). Baseline ("TF-proxy"): host-driven per-step dispatch —
+//! T forward executions, T VJP executions, host Adam — the cost structure
+//! the paper attributes to the official TensorFlow implementation.
+//! Paper: 1.5x speedup.
+
+use cax::coordinator::stepwise::mnist_stepwise_train_step;
+use cax::coordinator::trainer::TrainState;
+use cax::datasets::mnist::{self, MnistConfig};
+use cax::runtime::Value;
+
+mod bench_util;
+use bench_util::{bench, engine, header, quick, row};
+
+fn main() {
+    let engine = engine();
+    let info = engine.manifest().artifact("mnist_train_step").unwrap();
+    let spec = &info.inputs[4];
+    let (b, h, w) = (spec.shape[0], spec.shape[1], spec.shape[2]);
+    let rollout_steps = info.meta_usize("steps").unwrap();
+    let digits = mnist::dataset(b, &MnistConfig::for_grid(h, w), 42);
+    let refs: Vec<&mnist::Digit> = digits.iter().collect();
+    let images = mnist::batch_images(&refs);
+    let labels = mnist::batch_labels(&refs);
+    let (warm, iters) = if quick() { (1, 3) } else { (2, 12) };
+
+    header(&format!(
+        "Fig. 3 right — MNIST NCA train step (batch {b}, {h}x{w}, \
+         {rollout_steps} rollout steps + BPTT)"
+    ));
+
+    // Fused: one artifact execution per train step.
+    let mut st = TrainState::from_blob(&engine, "mnist_params").unwrap();
+    let mut seed = 0u32;
+    let fused = bench(warm, iters, || {
+        seed = seed.wrapping_add(1);
+        let out = engine
+            .execute(
+                "mnist_train_step",
+                &[
+                    Value::F32(st.params.clone()),
+                    Value::F32(st.m.clone()),
+                    Value::F32(st.v.clone()),
+                    Value::I32(st.step),
+                    Value::F32(images.clone()),
+                    Value::F32(labels.clone()),
+                    Value::U32(seed),
+                ],
+            )
+            .unwrap();
+        let mut it = out.into_iter();
+        st.params = it.next().unwrap();
+        st.m = it.next().unwrap();
+        st.v = it.next().unwrap();
+        st.step += 1;
+    });
+
+    // Stepwise: 2T+1 artifact executions + host reductions per train step.
+    let mut st2 = TrainState::from_blob(&engine, "mnist_params").unwrap();
+    let mut seed2 = 0u32;
+    let stepwise = bench(warm.min(1), iters.min(6), || {
+        seed2 = seed2.wrapping_add(1);
+        mnist_stepwise_train_step(
+            &engine, &mut st2.params, &mut st2.m, &mut st2.v, st2.step,
+            &images, &labels, 1e-3, seed2,
+        )
+        .unwrap();
+        st2.step += 1;
+    });
+
+    row("mnist-train/cax-fused (1 dispatch)", &fused, 1.0);
+    row(
+        &format!("mnist-train/stepwise ({} dispatches)",
+                 2 * rollout_steps + 1),
+        &stepwise,
+        1.0,
+    );
+    println!(
+        "  fused speedup: {:.2}x (paper reports 1.5x over the official \
+         TensorFlow implementation)",
+        stepwise.median / fused.median
+    );
+    let s = engine.stats();
+    println!(
+        "  engine totals: {} executions, {:.1}s execute, {:.1} MB out",
+        s.executions,
+        s.execute_secs,
+        s.bytes_out as f64 / 1e6
+    );
+}

@@ -1,0 +1,103 @@
+//! Runtime micro-benchmarks — the L3 hot path itself (DESIGN.md §7).
+//!
+//! Separates where each microsecond of an artifact call goes: compile
+//! (once), literal marshalling in, execution, literal marshalling out.
+//! The per-dispatch overhead measured here is exactly what the fused path
+//! of Fig. 3 amortizes away; it also bounds how much the L3 coordinator
+//! can matter relative to XLA compute.
+
+use cax::runtime::{Engine, Value};
+use cax::tensor::Tensor;
+use cax::util::timer::Timer;
+
+mod bench_util;
+use bench_util::{bench, engine, header, quick, row};
+
+fn main() {
+    let engine = engine();
+    let iters = if quick() { 20 } else { 200 };
+
+    header("artifact compile cost (cold, one-time)");
+    {
+        // A fresh engine per artifact so every compile is cold.
+        for name in ["eca_step", "life_step", "lenia_step",
+                     "mnist_train_step"] {
+            let cold = bench_util::engine();
+            let t = Timer::start();
+            cold.ensure_compiled(name).unwrap();
+            println!("{:<40} {:>10.1} ms", name, t.elapsed_ms());
+        }
+    }
+
+    header("per-dispatch overhead (tiny artifact, state reused)");
+    {
+        let info = engine.manifest().artifact("eca_step").unwrap();
+        let state = Tensor::zeros(&info.inputs[0].shape.clone());
+        let rule = Tensor::zeros(&[8]);
+        let stats = bench(20, iters, || {
+            engine
+                .execute("eca_step",
+                         &[Value::F32(state.clone()), Value::F32(rule.clone())])
+                .unwrap();
+        });
+        row("eca_step single dispatch", &stats, state.numel() as f64);
+        println!(
+            "  -> per-dispatch floor ~{:.0} us; a T-step stepwise rollout \
+             pays it T times, the fused path once",
+            stats.median * 1e6
+        );
+    }
+
+    header("marshalling cost vs payload size (life_step)");
+    {
+        let info = engine.manifest().artifact("life_step").unwrap();
+        let shape = info.inputs[0].shape.clone();
+        let numel: usize = shape.iter().product();
+        let state = Tensor::zeros(&shape);
+        let stats = bench(10, iters, || {
+            engine.execute("life_step", &[Value::F32(state.clone())]).unwrap();
+        });
+        row(&format!("life_step dispatch ({numel} f32 in/out)"), &stats,
+            numel as f64);
+    }
+
+    header("train-step dispatch (params round-trip)");
+    {
+        let params = engine.load_params("mnist_params").unwrap();
+        let n = params.numel();
+        let info = engine.manifest().artifact("mnist_train_step").unwrap();
+        let dspec = &info.inputs[4];
+        let lspec = &info.inputs[5];
+        let digits = Tensor::zeros(&dspec.shape.clone());
+        let labels = Tensor::zeros(&lspec.shape.clone());
+        let m = Tensor::zeros(&[n]);
+        let v = Tensor::zeros(&[n]);
+        let stats = bench(2, (iters / 10).max(3), || {
+            engine
+                .execute(
+                    "mnist_train_step",
+                    &[
+                        Value::F32(params.clone()),
+                        Value::F32(m.clone()),
+                        Value::F32(v.clone()),
+                        Value::I32(0),
+                        Value::F32(digits.clone()),
+                        Value::F32(labels.clone()),
+                        Value::U32(1),
+                    ],
+                )
+                .unwrap();
+        });
+        row(&format!("mnist_train_step ({n} params x3 buffers)"), &stats, 1.0);
+    }
+
+    let s: cax::runtime::EngineStats = engine.stats();
+    header("engine cumulative stats");
+    println!(
+        "compiles {}  executions {}  compile {:.2}s  execute {:.2}s  \
+         in {:.1} MB  out {:.1} MB",
+        s.compiles, s.executions, s.compile_secs, s.execute_secs,
+        s.bytes_in as f64 / 1e6, s.bytes_out as f64 / 1e6
+    );
+    let _: &Engine = &engine;
+}

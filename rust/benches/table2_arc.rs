@@ -1,0 +1,68 @@
+//! E5 — Table 2 benchmark: end-to-end 1D-ARC pipeline cost.
+//!
+//! Times the three phases the Table-2 harness is built from — dataset
+//! generation, per-task training, exact-match evaluation — so the
+//! `cax-tables table2` wall-clock budget is understood, and reports a
+//! mini-Table-2 (3 representative tasks) as a smoke of the full run.
+
+use cax::coordinator::trainer::TrainCfg;
+use cax::coordinator::{evaluator, experiments};
+use cax::datasets::arc1d::Task;
+
+mod bench_util;
+use bench_util::{bench, engine, header, quick, row};
+
+fn main() {
+    let engine = engine();
+    let (train_steps, train_n, test_n) =
+        if quick() { (40, 48, 16) } else { (120, 96, 32) };
+    let tasks = [Task::Move1, Task::Denoise, Task::Fill];
+
+    header("Table 2 — dataset generation throughput");
+    {
+        let stats = bench(1, 5, || {
+            for &t in Task::ALL.iter() {
+                let _ = t.dataset(32, 64, 16, 7);
+            }
+        });
+        row("arc1d/generate (18 tasks x 80 ex)", &stats,
+            18.0 * 80.0);
+    }
+
+    header(&format!(
+        "Table 2 — per-task train ({train_steps} steps) + eval pipeline"
+    ));
+    let mut printed: Vec<(Task, f64, f64)> = vec![];
+    for &task in &tasks {
+        let (train_set, test_set) = experiments::arc_split(
+            &engine, task, train_n, test_n, 7,
+        )
+        .unwrap();
+        let cfg = TrainCfg { steps: train_steps, seed: 7, log_every: 0,
+                             out_dir: None };
+        let mut acc = 0.0;
+        let t_train = bench(0, 1, || {
+            let run = experiments::train_arc(&engine, &cfg, task, &train_set)
+                .unwrap();
+            acc = evaluator::arc_accuracy(&engine, &run.state.params,
+                                          &test_set)
+                .unwrap();
+        });
+        row(&format!("arc/train+eval/{}", task.name()), &t_train,
+            train_steps as f64);
+        printed.push((task, acc, t_train.median));
+    }
+
+    header("mini Table 2 (3 tasks, short training)");
+    println!("{:<28} {:>7} {:>7} {:>9}", "Task", "GPT-4", "NCA", "paper-NCA");
+    for (task, acc, _) in &printed {
+        println!(
+            "{:<28} {:>6.0}% {:>6.1}% {:>8.0}%",
+            task.name(),
+            task.gpt4_accuracy(),
+            100.0 * acc,
+            task.paper_nca_accuracy()
+        );
+    }
+    println!("(full 18-task table: `cax-tables table2`)");
+}

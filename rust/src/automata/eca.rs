@@ -1,0 +1,179 @@
+//! Naive elementary-CA simulator (periodic boundary).
+//!
+//! Semantics identical to the `eca_*` artifacts; deliberately per-cell
+//! scalar code — this is the Figure-3 baseline and the bit-exactness oracle.
+
+use crate::automata::rule::WolframRule;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Batched 1D CA over {0,1} states stored as f32 for interchange parity.
+#[derive(Clone, Debug)]
+pub struct EcaSim {
+    pub rule: WolframRule,
+    /// Current state bits, one row per batch element.
+    rows: Vec<Vec<u8>>,
+}
+
+impl EcaSim {
+    /// Start from an explicit f32 {0,1} batch tensor [B, W].
+    pub fn from_tensor(rule: WolframRule, state: &Tensor) -> EcaSim {
+        assert_eq!(state.shape().len(), 2, "EcaSim wants [B, W]");
+        let (b, w) = (state.shape()[0], state.shape()[1]);
+        let rows = (0..b)
+            .map(|i| {
+                (0..w)
+                    .map(|j| if state.at(&[i, j]) > 0.5 { 1u8 } else { 0u8 })
+                    .collect()
+            })
+            .collect();
+        EcaSim { rule, rows }
+    }
+
+    /// Random initial condition with density 0.5.
+    pub fn random(rule: WolframRule, batch: usize, width: usize,
+                  rng: &mut Rng) -> EcaSim {
+        let rows = (0..batch)
+            .map(|_| (0..width).map(|_| rng.bernoulli(0.5) as u8).collect())
+            .collect();
+        EcaSim { rule, rows }
+    }
+
+    /// Single-cell-seed initial condition (the classic rule-30/110 picture).
+    pub fn single_seed(rule: WolframRule, batch: usize, width: usize) -> EcaSim {
+        let mut rows = vec![vec![0u8; width]; batch];
+        for row in &mut rows {
+            row[width / 2] = 1;
+        }
+        EcaSim { rule, rows }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn width(&self) -> usize {
+        self.rows.first().map_or(0, |r| r.len())
+    }
+
+    /// One global-rule application, per cell (the naive hot loop).
+    pub fn step(&mut self) {
+        for row in &mut self.rows {
+            let w = row.len();
+            let prev = row.clone();
+            for x in 0..w {
+                let left = prev[(x + w - 1) % w];
+                let right = prev[(x + 1) % w];
+                row[x] = self.rule.apply(left, prev[x], right);
+            }
+        }
+    }
+
+    /// Run `steps` applications.
+    pub fn run(&mut self, steps: usize) {
+        for _ in 0..steps {
+            self.step();
+        }
+    }
+
+    /// Current state as the artifact-layout tensor [B, W].
+    pub fn to_tensor(&self) -> Tensor {
+        let (b, w) = (self.batch(), self.width());
+        let mut data = Vec::with_capacity(b * w);
+        for row in &self.rows {
+            data.extend(row.iter().map(|&bit| bit as f32));
+        }
+        Tensor::new(vec![b, w], data).unwrap()
+    }
+
+    /// Space-time diagram of batch element `i`: runs `steps`, returning
+    /// [steps+1, W] including the initial row.
+    pub fn spacetime(&mut self, i: usize, steps: usize) -> Tensor {
+        let w = self.width();
+        let mut data = Vec::with_capacity((steps + 1) * w);
+        data.extend(self.rows[i].iter().map(|&b| b as f32));
+        for _ in 0..steps {
+            self.step();
+            data.extend(self.rows[i].iter().map(|&b| b as f32));
+        }
+        Tensor::new(vec![steps + 1, w], data).unwrap()
+    }
+
+    /// Population (number of live cells) across the batch.
+    pub fn population(&self) -> usize {
+        self.rows.iter().map(|r| r.iter().map(|&b| b as usize).sum::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule0_extinguishes() {
+        let mut rng = Rng::new(1);
+        let mut sim = EcaSim::random(WolframRule::new(0), 2, 32, &mut rng);
+        sim.step();
+        assert_eq!(sim.population(), 0);
+    }
+
+    #[test]
+    fn rule204_is_static() {
+        let mut rng = Rng::new(2);
+        let mut sim = EcaSim::random(WolframRule::new(204), 2, 32, &mut rng);
+        let before = sim.to_tensor();
+        sim.run(5);
+        assert!(before.bit_eq(&sim.to_tensor()));
+    }
+
+    #[test]
+    fn rule30_single_seed_growth() {
+        // After t steps the light cone spans at most 2t+1 cells and rule 30
+        // keeps the centre column alive.
+        let mut sim = EcaSim::single_seed(WolframRule::new(30), 1, 64);
+        sim.run(4);
+        let t = sim.to_tensor();
+        assert!(sim.population() > 1);
+        for x in 0..64usize {
+            let dist = (x as i64 - 32).unsigned_abs() as usize;
+            if dist > 4 {
+                assert_eq!(t.at(&[0, x]), 0.0, "outside light cone at {x}");
+            }
+        }
+        assert_eq!(t.at(&[0, 32]), 1.0);
+    }
+
+    #[test]
+    fn wraps_periodically() {
+        // Rule 2: cell becomes 1 iff pattern 001 (right neighbour alive).
+        // A live cell at x=0 must light x=W-1 through the wrap.
+        let mut state = Tensor::zeros(&[1, 8]);
+        state.set(&[0, 0], 1.0);
+        let mut sim = EcaSim::from_tensor(WolframRule::new(2), &state);
+        sim.step();
+        let t = sim.to_tensor();
+        assert_eq!(t.at(&[0, 7]), 1.0);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let mut rng = Rng::new(3);
+        let sim = EcaSim::random(WolframRule::new(110), 3, 16, &mut rng);
+        let t = sim.to_tensor();
+        let sim2 = EcaSim::from_tensor(WolframRule::new(110), &t);
+        assert!(t.bit_eq(&sim2.to_tensor()));
+    }
+
+    #[test]
+    fn spacetime_shape_and_first_row() {
+        let mut sim = EcaSim::single_seed(WolframRule::new(90), 1, 16);
+        let first = sim.to_tensor();
+        let st = sim.spacetime(0, 10);
+        assert_eq!(st.shape(), &[11, 16]);
+        for x in 0..16 {
+            assert_eq!(st.at(&[0, x]), first.at(&[0, x]));
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Naive Lenia simulator: direct ring-kernel convolution, per-cell loops.
+//!
+//! Semantics match the `lenia_*` artifacts (same ring kernel, growth
+//! mapping, clip) up to float accumulation order — integration tests allow
+//! 1e-4. Quadratic per-step cost in kernel size: exactly the cost profile a
+//! non-FFT CPU implementation has, which is the baseline story of Fig. 3
+//! extended to continuous CA.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Lenia world parameters (Chan 2019).
+#[derive(Clone, Copy, Debug)]
+pub struct LeniaParams {
+    pub radius: usize,
+    pub mu: f32,
+    pub sigma: f32,
+    pub dt: f32,
+}
+
+impl Default for LeniaParams {
+    fn default() -> Self {
+        LeniaParams { radius: 10, mu: 0.15, sigma: 0.017, dt: 0.1 }
+    }
+}
+
+/// The standard Lenia ring kernel, normalized to sum 1 — identical to
+/// `kernels/lenia.py::ring_kernel`.
+pub fn ring_kernel(radius: usize) -> Tensor {
+    let size = 2 * radius + 1;
+    let mut data = vec![0.0f32; size * size];
+    let mut sum = 0.0f64;
+    for y in 0..size {
+        for x in 0..size {
+            let dy = y as f64 - radius as f64;
+            let dx = x as f64 - radius as f64;
+            let r = (dx * dx + dy * dy).sqrt() / radius as f64;
+            if r > 0.0 && r < 1.0 {
+                let v = (4.0 - 1.0 / (r * (1.0 - r)).max(1e-9)).exp();
+                data[y * size + x] = v as f32;
+                sum += v;
+            }
+        }
+    }
+    for v in &mut data {
+        *v = (*v as f64 / sum) as f32;
+    }
+    Tensor::new(vec![size, size], data).unwrap()
+}
+
+/// Single-board continuous CA in [0,1].
+#[derive(Clone, Debug)]
+pub struct LeniaSim {
+    pub params: LeniaParams,
+    kernel: Tensor,
+    state: Tensor, // [H, W]
+}
+
+impl LeniaSim {
+    pub fn new(params: LeniaParams, state: Tensor) -> LeniaSim {
+        assert_eq!(state.shape().len(), 2, "LeniaSim wants [H, W]");
+        LeniaSim { kernel: ring_kernel(params.radius), params, state }
+    }
+
+    /// Random soup in a centred patch (a standard Lenia starting condition).
+    pub fn random_patch(params: LeniaParams, size: usize, patch: usize,
+                        rng: &mut Rng) -> LeniaSim {
+        let mut state = Tensor::zeros(&[size, size]);
+        let start = (size - patch) / 2;
+        for y in start..start + patch {
+            for x in start..start + patch {
+                state.set(&[y, x], rng.next_f32());
+            }
+        }
+        LeniaSim::new(params, state)
+    }
+
+    pub fn state(&self) -> &Tensor {
+        &self.state
+    }
+
+    /// One step: direct convolution + growth + clip (naive hot loop).
+    pub fn step(&mut self) {
+        let (h, w) = (self.state.shape()[0], self.state.shape()[1]);
+        let r = self.params.radius;
+        let ksz = 2 * r + 1;
+        let mut next = Tensor::zeros(&[h, w]);
+        for y in 0..h {
+            for x in 0..w {
+                let mut u = 0.0f32;
+                for ky in 0..ksz {
+                    for kx in 0..ksz {
+                        let sy = (y + h + r - ky) % h;
+                        let sx = (x + w + r - kx) % w;
+                        u += self.kernel.at(&[ky, kx])
+                            * self.state.at(&[sy, sx]);
+                    }
+                }
+                let z = (u - self.params.mu) / self.params.sigma;
+                let growth = 2.0 * (-0.5 * z * z).exp() - 1.0;
+                let v = self.state.at(&[y, x]) + self.params.dt * growth;
+                next.set(&[y, x], v.clamp(0.0, 1.0));
+            }
+        }
+        self.state = next;
+    }
+
+    pub fn run(&mut self, steps: usize) {
+        for _ in 0..steps {
+            self.step();
+        }
+    }
+
+    /// Total mass (sum of the field) — Lenia's standard health metric.
+    pub fn mass(&self) -> f32 {
+        self.state.data().iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_kernel_normalized_and_hollow() {
+        for r in [3usize, 5, 10] {
+            let k = ring_kernel(r);
+            let sum: f32 = k.data().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "sum {sum}");
+            assert_eq!(k.at(&[r, r]), 0.0, "centre must be 0");
+            assert!(k.data().iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn empty_world_stays_empty_enough() {
+        // u = 0 everywhere -> growth = 2*exp(-mu^2/(2 sigma^2)) - 1 ~ -1,
+        // so an empty world stays clamped at 0.
+        let mut sim = LeniaSim::new(LeniaParams::default(),
+                                    Tensor::zeros(&[32, 32]));
+        sim.run(3);
+        assert_eq!(sim.mass(), 0.0);
+    }
+
+    #[test]
+    fn state_stays_in_unit_interval() {
+        let mut rng = Rng::new(5);
+        let mut sim = LeniaSim::random_patch(
+            LeniaParams { radius: 4, ..Default::default() }, 24, 12, &mut rng,
+        );
+        sim.run(5);
+        for &v in sim.state().data() {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn saturated_world_decays() {
+        // u ~ 1 >> mu -> growth ~ -1 -> mass must fall.
+        let mut sim = LeniaSim::new(
+            LeniaParams { radius: 4, ..Default::default() },
+            Tensor::full(&[24, 24], 1.0),
+        );
+        let m0 = sim.mass();
+        sim.step();
+        assert!(sim.mass() < m0);
+    }
+
+    #[test]
+    fn convolution_is_translation_equivariant() {
+        let params = LeniaParams { radius: 3, ..Default::default() };
+        let mut a = Tensor::zeros(&[16, 16]);
+        a.set(&[4, 4], 0.8);
+        a.set(&[5, 5], 0.6);
+        let mut sim_a = LeniaSim::new(params, a.clone());
+        // Shift the input by (2, 3) with wrap.
+        let mut b = Tensor::zeros(&[16, 16]);
+        for y in 0..16 {
+            for x in 0..16 {
+                b.set(&[(y + 2) % 16, (x + 3) % 16], a.at(&[y, x]));
+            }
+        }
+        let mut sim_b = LeniaSim::new(params, b);
+        sim_a.step();
+        sim_b.step();
+        for y in 0..16 {
+            for x in 0..16 {
+                let va = sim_a.state().at(&[y, x]);
+                let vb = sim_b.state().at(&[(y + 2) % 16, (x + 3) % 16]);
+                assert!((va - vb).abs() < 1e-6);
+            }
+        }
+    }
+}

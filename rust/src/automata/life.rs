@@ -1,0 +1,203 @@
+//! Naive Game-of-Life simulator (Moore neighbourhood, periodic boundary).
+//!
+//! Same semantics as the `life_*` artifacts; per-cell scalar loops — the
+//! Figure-3 baseline and bit-exactness oracle for 2D.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Batched Life over {0,1} boards.
+#[derive(Clone, Debug)]
+pub struct LifeSim {
+    boards: Vec<Vec<u8>>, // row-major H*W per batch element
+    pub height: usize,
+    pub width: usize,
+}
+
+impl LifeSim {
+    pub fn from_tensor(state: &Tensor) -> LifeSim {
+        assert_eq!(state.shape().len(), 3, "LifeSim wants [B, H, W]");
+        let (b, h, w) = (state.shape()[0], state.shape()[1], state.shape()[2]);
+        let boards = (0..b)
+            .map(|i| {
+                let mut board = Vec::with_capacity(h * w);
+                for y in 0..h {
+                    for x in 0..w {
+                        board.push((state.at(&[i, y, x]) > 0.5) as u8);
+                    }
+                }
+                board
+            })
+            .collect();
+        LifeSim { boards, height: h, width: w }
+    }
+
+    pub fn random(batch: usize, height: usize, width: usize, density: f32,
+                  rng: &mut Rng) -> LifeSim {
+        let boards = (0..batch)
+            .map(|_| {
+                (0..height * width)
+                    .map(|_| rng.bernoulli(density) as u8)
+                    .collect()
+            })
+            .collect();
+        LifeSim { boards, height, width }
+    }
+
+    /// Empty boards with a glider in the top-left of each.
+    pub fn gliders(batch: usize, height: usize, width: usize) -> LifeSim {
+        assert!(height >= 5 && width >= 5);
+        let mut sim = LifeSim {
+            boards: vec![vec![0u8; height * width]; batch],
+            height,
+            width,
+        };
+        let cells = [(0usize, 1usize), (1, 2), (2, 0), (2, 1), (2, 2)];
+        for board in &mut sim.boards {
+            for &(y, x) in &cells {
+                board[(y + 1) * width + (x + 1)] = 1;
+            }
+        }
+        sim
+    }
+
+    pub fn batch(&self) -> usize {
+        self.boards.len()
+    }
+
+    /// One step: per-cell neighbour count (the naive hot loop).
+    pub fn step(&mut self) {
+        let (h, w) = (self.height, self.width);
+        for board in &mut self.boards {
+            let prev = board.clone();
+            for y in 0..h {
+                for x in 0..w {
+                    let mut n = 0u8;
+                    for dy in [h - 1, 0, 1] {
+                        for dx in [w - 1, 0, 1] {
+                            if dy == 0 && dx == 0 {
+                                continue;
+                            }
+                            n += prev[((y + dy) % h) * w + (x + dx) % w];
+                        }
+                    }
+                    let alive = prev[y * w + x] == 1;
+                    board[y * w + x] =
+                        ((alive && (n == 2 || n == 3)) || (!alive && n == 3))
+                            as u8;
+                }
+            }
+        }
+    }
+
+    pub fn run(&mut self, steps: usize) {
+        for _ in 0..steps {
+            self.step();
+        }
+    }
+
+    pub fn to_tensor(&self) -> Tensor {
+        let (b, h, w) = (self.batch(), self.height, self.width);
+        let mut data = Vec::with_capacity(b * h * w);
+        for board in &self.boards {
+            data.extend(board.iter().map(|&bit| bit as f32));
+        }
+        Tensor::new(vec![b, h, w], data).unwrap()
+    }
+
+    pub fn population(&self) -> usize {
+        self.boards
+            .iter()
+            .map(|b| b.iter().map(|&x| x as usize).sum::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn board_from(cells: &[(usize, usize)], h: usize, w: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[1, h, w]);
+        for &(y, x) in cells {
+            t.set(&[0, y, x], 1.0);
+        }
+        t
+    }
+
+    #[test]
+    fn block_is_still_life() {
+        let t = board_from(&[(3, 3), (3, 4), (4, 3), (4, 4)], 8, 8);
+        let mut sim = LifeSim::from_tensor(&t);
+        sim.run(3);
+        assert!(sim.to_tensor().bit_eq(&t));
+    }
+
+    #[test]
+    fn blinker_period_two() {
+        let t = board_from(&[(4, 3), (4, 4), (4, 5)], 9, 9);
+        let mut sim = LifeSim::from_tensor(&t);
+        sim.step();
+        assert!(!sim.to_tensor().bit_eq(&t));
+        sim.step();
+        assert!(sim.to_tensor().bit_eq(&t));
+    }
+
+    #[test]
+    fn glider_moves_diagonally() {
+        let mut sim = LifeSim::gliders(1, 16, 16);
+        let before = sim.to_tensor();
+        sim.run(4);
+        let after = sim.to_tensor();
+        assert_eq!(sim.population(), 5);
+        // After 4 steps the glider pattern translates by (1, 1).
+        for y in 0..16 {
+            for x in 0..16 {
+                assert_eq!(
+                    after.at(&[0, (y + 1) % 16, (x + 1) % 16]),
+                    before.at(&[0, y, x]),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn underpopulation_dies() {
+        let t = board_from(&[(2, 2)], 6, 6);
+        let mut sim = LifeSim::from_tensor(&t);
+        sim.step();
+        assert_eq!(sim.population(), 0);
+    }
+
+    #[test]
+    fn wraps_periodically() {
+        // Blinker straddling the edge: cells at x = {7, 0, 1} on row 4.
+        let t = board_from(&[(4, 7), (4, 0), (4, 1)], 9, 8);
+        let mut sim = LifeSim::from_tensor(&t);
+        sim.step();
+        sim.step();
+        assert!(sim.to_tensor().bit_eq(&t));
+    }
+
+    #[test]
+    fn batch_elements_independent() {
+        let mut rng = Rng::new(9);
+        let mut sim = LifeSim::random(3, 12, 12, 0.4, &mut rng);
+        let solo: Vec<LifeSim> = (0..3)
+            .map(|i| {
+                LifeSim::from_tensor(
+                    &Tensor::stack(&[sim.to_tensor().index_axis0(i)]).unwrap(),
+                )
+            })
+            .collect();
+        sim.run(5);
+        for (i, mut s) in solo.into_iter().enumerate() {
+            s.run(5);
+            assert!(
+                s.to_tensor().index_axis0(0)
+                    .bit_eq(&sim.to_tensor().index_axis0(i)),
+                "batch element {i} diverged"
+            );
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Naive per-cell CA simulators — the CellPyLib-role baseline substrate.
+//!
+//! These implement the *same semantics* as the XLA artifacts (periodic
+//! boundaries, identical rule encodings) with deliberately straightforward
+//! per-cell scalar loops and per-step dispatch. They serve two purposes:
+//!
+//! 1. **Figure-3 baseline** (E1/E2): the cost structure of a conventional
+//!    CPU CA library, against which the fused XLA rollouts are measured.
+//! 2. **Correctness oracle**: integration tests require the XLA ECA/Life
+//!    artifacts to match these bit-exactly over random states and rules,
+//!    closing the loop across all three layers.
+
+pub mod eca;
+pub mod lenia;
+pub mod life;
+pub mod rule;
+
+pub use eca::EcaSim;
+pub use lenia::LeniaSim;
+pub use life::LifeSim;
+pub use rule::WolframRule;

@@ -1,0 +1,100 @@
+//! Wolfram rule tables for elementary cellular automata.
+
+use anyhow::{bail, Result};
+
+/// An ECA rule: the 8-entry lookup table of a Wolfram rule number.
+///
+/// `table[i]` is the next state for the neighbourhood pattern with value
+/// `i = 4*left + 2*center + right` — the same encoding the Layer-1 Pallas
+/// kernel uses, so tables serialize directly into artifact inputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WolframRule {
+    pub number: u8,
+    table: [u8; 8],
+}
+
+impl WolframRule {
+    pub fn new(number: u8) -> WolframRule {
+        let mut table = [0u8; 8];
+        for (i, slot) in table.iter_mut().enumerate() {
+            *slot = (number >> i) & 1;
+        }
+        WolframRule { number, table }
+    }
+
+    /// Next state for (left, center, right) bits.
+    #[inline]
+    pub fn apply(&self, left: u8, center: u8, right: u8) -> u8 {
+        self.table[(4 * left + 2 * center + right) as usize]
+    }
+
+    /// The table as f32s — the artifact input layout.
+    pub fn table_f32(&self) -> [f32; 8] {
+        let mut out = [0.0f32; 8];
+        for (o, &t) in out.iter_mut().zip(&self.table) {
+            *o = t as f32;
+        }
+        out
+    }
+
+    /// Parse from a decimal string (CLI surface).
+    pub fn parse(text: &str) -> Result<WolframRule> {
+        match text.trim().parse::<u16>() {
+            Ok(n) if n <= 255 => Ok(WolframRule::new(n as u8)),
+            _ => bail!("invalid Wolfram rule number {text:?} (want 0-255)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_110_table() {
+        let r = WolframRule::new(110);
+        // 110 = 0b01101110
+        let expected = [0, 1, 1, 1, 0, 1, 1, 0];
+        for (i, &e) in expected.iter().enumerate() {
+            let (l, c, rr) = ((i >> 2) as u8 & 1, (i >> 1) as u8 & 1, i as u8 & 1);
+            assert_eq!(r.apply(l, c, rr), e, "pattern {i}");
+        }
+    }
+
+    #[test]
+    fn rule_0_and_255() {
+        let zero = WolframRule::new(0);
+        let all = WolframRule::new(255);
+        for i in 0..8u8 {
+            let (l, c, r) = (i >> 2 & 1, i >> 1 & 1, i & 1);
+            assert_eq!(zero.apply(l, c, r), 0);
+            assert_eq!(all.apply(l, c, r), 1);
+        }
+    }
+
+    #[test]
+    fn rule_204_is_identity() {
+        let r = WolframRule::new(204);
+        for i in 0..8u8 {
+            let (l, c, rr) = (i >> 2 & 1, i >> 1 & 1, i & 1);
+            assert_eq!(r.apply(l, c, rr), c);
+        }
+    }
+
+    #[test]
+    fn table_f32_matches() {
+        let r = WolframRule::new(30);
+        let t = r.table_f32();
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[1], 1.0); // 30 = 0b00011110
+        assert_eq!(t[4], 1.0);
+        assert_eq!(t[5], 0.0);
+    }
+
+    #[test]
+    fn parse_validates() {
+        assert_eq!(WolframRule::parse("110").unwrap().number, 110);
+        assert!(WolframRule::parse("256").is_err());
+        assert!(WolframRule::parse("x").is_err());
+    }
+}

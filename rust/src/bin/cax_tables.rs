@@ -1,0 +1,526 @@
+//! `cax-tables` — regenerate every table and figure of the paper's
+//! evaluation (DESIGN.md §2 experiment index).
+//!
+//!   cax-tables fig3     Fig. 3 left+right: fused vs stepwise vs naive
+//!   cax-tables table1   Table 1: the CA coverage matrix (registry status)
+//!   cax-tables table2   Table 2: 1D-ARC accuracy, NCA vs GPT-4 constants
+//!   cax-tables fig5     Fig. 5: damage/regeneration, growing vs diffusing
+//!   cax-tables fig8     Fig. 8: per-task space-time diagrams (PPM files)
+//!   cax-tables all      everything above
+//!
+//! Flags: --artifacts DIR  --out DIR  --seed N  --quick (smaller sweeps)
+//!        --train-steps N  --tasks move-1,fill,...  (table2/fig8 subset)
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use cax::automata::WolframRule;
+use cax::coordinator::trainer::TrainCfg;
+use cax::coordinator::damage::{self, DamageMode};
+use cax::coordinator::{evaluator, experiments, registry};
+use cax::coordinator::{Path as SimPath, Simulator};
+use cax::datasets::arc1d::Task;
+use cax::datasets::targets::Sprite;
+use cax::metrics::BenchRow;
+use cax::runtime::{Engine, Value};
+use cax::util::rng::Rng;
+use cax::util::timer::{fmt_duration, Stats, Timer};
+use cax::viz::spacetime;
+
+struct Opt {
+    artifacts: PathBuf,
+    out: PathBuf,
+    seed: u64,
+    quick: bool,
+    train_steps: Option<usize>,
+    tasks: Option<Vec<String>>,
+    cmd: String,
+}
+
+fn parse_opt() -> Result<Opt> {
+    let mut opt = Opt {
+        artifacts: std::env::var("CAX_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts")),
+        out: PathBuf::from("out"),
+        seed: 42,
+        quick: false,
+        train_steps: None,
+        tasks: None,
+        cmd: String::new(),
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--artifacts" => {
+                opt.artifacts =
+                    PathBuf::from(it.next().context("--artifacts value")?)
+            }
+            "--out" => {
+                opt.out = PathBuf::from(it.next().context("--out value")?)
+            }
+            "--seed" => opt.seed = it.next().context("--seed value")?.parse()?,
+            "--quick" => opt.quick = true,
+            "--train-steps" => {
+                opt.train_steps =
+                    Some(it.next().context("--train-steps value")?.parse()?)
+            }
+            "--tasks" => {
+                opt.tasks = Some(
+                    it.next()
+                        .context("--tasks value")?
+                        .split(',')
+                        .map(|s| s.trim().to_string())
+                        .collect(),
+                )
+            }
+            other if opt.cmd.is_empty() => opt.cmd = other.to_string(),
+            other => bail!("unexpected argument {other:?}"),
+        }
+    }
+    if opt.cmd.is_empty() {
+        bail!("usage: cax-tables <fig3|table1|table2|fig5|fig8|all> \
+               [--quick] [--seed N] [--out DIR] [--train-steps N]");
+    }
+    Ok(opt)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let opt = parse_opt()?;
+    let engine = Engine::load(&opt.artifacts).with_context(|| {
+        format!("loading artifacts from {}", opt.artifacts.display())
+    })?;
+    std::fs::create_dir_all(&opt.out)?;
+    match opt.cmd.as_str() {
+        "fig3" => fig3(&engine, &opt)?,
+        "table1" => table1(&engine)?,
+        "table2" => table2(&engine, &opt)?,
+        "fig5" => fig5(&engine, &opt)?,
+        "fig8" => fig8(&engine, &opt)?,
+        "all" => {
+            table1(&engine)?;
+            fig3(&engine, &opt)?;
+            fig5(&engine, &opt)?;
+            table2(&engine, &opt)?;
+            fig8(&engine, &opt)?;
+        }
+        other => bail!("unknown report {other:?}"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- helpers
+
+/// Measure a closure `iters` times after `warmup` runs; seconds per call.
+fn measure<F: FnMut() -> Result<()>>(warmup: usize, iters: usize, mut f: F)
+                                     -> Result<Stats> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f()?;
+        samples.push(t.elapsed_secs());
+    }
+    Ok(Stats::from_samples(&samples))
+}
+
+// ------------------------------------------------------------------ fig3
+
+/// Fig. 3: simulation-speed comparison across the three execution paths.
+fn fig3(engine: &Engine, opt: &Opt) -> Result<()> {
+    let sim = Simulator::new(engine);
+    let mut rng = Rng::new(opt.seed);
+    let (warm, iters) = if opt.quick { (1, 3) } else { (2, 8) };
+
+    println!("\n=== Figure 3 (left): classic-CA simulation speed ===");
+    println!("{:<8} {:<16} {:>10} {:>14} {:>10}", "CA", "path", "median s",
+             "cell-upd/s", "speedup");
+    let mut rows: Vec<BenchRow> = vec![];
+
+    // Prefer the bench-scale artifacts when the manifest carries them
+    // (the tiny test-preset grids sit below the vectorization crossover).
+    let has = |n: &str| engine.manifest().artifacts.contains_key(n);
+    let eca_arts = if has("eca_rollout_bench") {
+        ("eca_step_bench", "eca_rollout_bench")
+    } else {
+        ("eca_step", "eca_rollout")
+    };
+    let life_arts = if has("life_rollout_bench") {
+        ("life_step_bench", "life_rollout_bench")
+    } else {
+        ("life_step", "life_rollout")
+    };
+
+    for (ca, step_art, artifact) in [
+        ("eca", eca_arts.0, eca_arts.1),
+        ("life", life_arts.0, life_arts.1),
+        ("lenia", "lenia_step", "lenia_rollout"),
+    ] {
+        let steps = engine
+            .manifest()
+            .artifact(artifact)?
+            .meta_usize("steps")
+            .unwrap_or(256);
+        let state = sim.random_state(artifact, &mut rng)?;
+        let updates = sim.cell_updates(artifact, steps)?;
+        let rule = WolframRule::new(30);
+
+        let mut path_time = [0.0f64; 3];
+        for (pi, path) in
+            [SimPath::Fused, SimPath::Stepwise, SimPath::Naive]
+                .into_iter()
+                .enumerate()
+        {
+            // Naive Lenia is O(R^2) per cell and the bench-scale stepwise
+            // paths pay T dispatches; trim their iteration counts.
+            let it = if path == SimPath::Naive && ca == "lenia" {
+                iters.min(2)
+            } else if path == SimPath::Stepwise {
+                iters.min(4)
+            } else {
+                iters
+            };
+            let stats = measure(warm.min(1), it, || {
+                match ca {
+                    "eca" => sim.run_eca_named(step_art, artifact, path,
+                                               &state, rule, steps)?,
+                    "life" => sim.run_life_named(step_art, artifact, path,
+                                                 &state, steps)?,
+                    _ => sim.run_lenia(path, &state, steps)?,
+                };
+                Ok(())
+            })?;
+            path_time[pi] = stats.median;
+            let speedup = path_time[0] / stats.median.max(1e-12);
+            println!(
+                "{:<8} {:<16} {:>10.4} {:>14.3e} {:>9.1}x",
+                ca, path.name(), stats.median, updates / stats.median,
+                1.0 / speedup.max(1e-12)
+            );
+            rows.push(BenchRow {
+                label: format!("{ca}/{}", path.name()),
+                items_per_iter: updates,
+                stats,
+            });
+        }
+        println!(
+            "  -> CAX-fused speedup: {:.0}x vs naive, {:.1}x vs stepwise",
+            path_time[2] / path_time[0].max(1e-12),
+            path_time[1] / path_time[0].max(1e-12)
+        );
+        // The paper's actual comparator is CellPyLib (pure-Python per-cell
+        // dispatch), measured at build time by compile/pybaseline.py.
+        if let Some(py) = cax::metrics::read_py_baseline(&opt.artifacts) {
+            let py_ups = match ca {
+                "eca" => Some(py.eca_updates_per_s),
+                "life" => Some(py.life_updates_per_s),
+                _ => None,
+            };
+            if let Some(py_ups) = py_ups {
+                let fused_ups = updates / path_time[0].max(1e-12);
+                println!(
+                    "  -> vs pure-Python per-cell baseline (CellPyLib cost \
+                     model, {py_ups:.2e} upd/s): {:.0}x",
+                    fused_ups / py_ups
+                );
+            }
+        }
+    }
+
+    println!("\n=== Figure 3 (right): NCA training speed (MNIST) ===");
+    let train_steps = opt.train_steps.unwrap_or(if opt.quick { 4 } else { 12 });
+    let fused = measure(1, train_steps, fig3_fused_step(engine, opt.seed)?)?;
+    let stepw =
+        measure(1, train_steps.min(6), fig3_stepwise_step(engine, opt.seed)?)?;
+    println!("{:<24} {:>12} {:>12}", "path", "median s/step", "speedup");
+    println!("{:<24} {:>12.4} {:>11.2}x", "cax-fused", fused.median, 1.0);
+    println!("{:<24} {:>12.4} {:>11.2}x", "stepwise-dispatch (TF-proxy)",
+             stepw.median, stepw.median / fused.median.max(1e-12));
+    println!("(paper reports 1.5x over the official TensorFlow impl)");
+
+    rows.push(BenchRow { label: "mnist-train/fused".into(),
+                         items_per_iter: 1.0, stats: fused });
+    rows.push(BenchRow { label: "mnist-train/stepwise".into(),
+                         items_per_iter: 1.0, stats: stepw });
+    cax::metrics::write_bench_report("fig3", &rows,
+                                     &opt.out.join("fig3.json"))?;
+    println!("wrote {}", opt.out.join("fig3.json").display());
+    Ok(())
+}
+
+/// Closure running one fused MNIST train step (fresh state per call is
+/// amortized into the closure's captured buffers).
+fn fig3_fused_step(engine: &Engine, seed: u64)
+                   -> Result<impl FnMut() -> Result<()> + '_> {
+    use cax::coordinator::trainer::TrainState;
+    use cax::datasets::mnist::{self, MnistConfig};
+    let info = engine.manifest().artifact("mnist_train_step")?;
+    let spec = &info.inputs[4];
+    let (b, h, w) = (spec.shape[0], spec.shape[1], spec.shape[2]);
+    let digits = mnist::dataset(b, &MnistConfig::for_grid(h, w), seed);
+    let refs: Vec<&mnist::Digit> = digits.iter().collect();
+    let images = mnist::batch_images(&refs);
+    let labels = mnist::batch_labels(&refs);
+    let mut st = TrainState::from_blob(engine, "mnist_params")?;
+    let mut seed_ctr = seed as u32;
+    Ok(move || {
+        seed_ctr = seed_ctr.wrapping_add(1);
+        let out = engine.execute(
+            "mnist_train_step",
+            &[
+                Value::F32(st.params.clone()),
+                Value::F32(st.m.clone()),
+                Value::F32(st.v.clone()),
+                Value::I32(st.step),
+                Value::F32(images.clone()),
+                Value::F32(labels.clone()),
+                Value::U32(seed_ctr),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        st.params = it.next().unwrap();
+        st.m = it.next().unwrap();
+        st.v = it.next().unwrap();
+        st.step += 1;
+        Ok(())
+    })
+}
+
+/// Closure running one host-driven BPTT step (the TF-proxy baseline).
+fn fig3_stepwise_step(engine: &Engine, seed: u64)
+                      -> Result<impl FnMut() -> Result<()> + '_> {
+    use cax::coordinator::stepwise::mnist_stepwise_train_step;
+    use cax::coordinator::trainer::TrainState;
+    use cax::datasets::mnist::{self, MnistConfig};
+    let info = engine.manifest().artifact("mnist_step_fwd")?;
+    let spec = &info.inputs[1];
+    let (b, h, w) = (spec.shape[0], spec.shape[1], spec.shape[2]);
+    let digits = mnist::dataset(b, &MnistConfig::for_grid(h, w), seed);
+    let refs: Vec<&mnist::Digit> = digits.iter().collect();
+    let images = mnist::batch_images(&refs);
+    let labels = mnist::batch_labels(&refs);
+    let mut st = TrainState::from_blob(engine, "mnist_params")?;
+    let mut seed_ctr = seed as u32;
+    Ok(move || {
+        seed_ctr = seed_ctr.wrapping_add(1);
+        mnist_stepwise_train_step(
+            engine, &mut st.params, &mut st.m, &mut st.v, st.step, &images,
+            &labels, 1e-3, seed_ctr,
+        )?;
+        st.step += 1;
+        Ok(())
+    })
+}
+
+// ---------------------------------------------------------------- table1
+
+fn table1(engine: &Engine) -> Result<()> {
+    println!("\n=== Table 1: implemented cellular automata ===");
+    println!("{:<46} {:<11} {:<5} {}", "Cellular Automata", "Type", "Dims",
+             "artifacts");
+    let missing = registry::missing_artifacts(engine.manifest());
+    for e in registry::table1() {
+        let ok = !missing.iter().any(|m| m.starts_with(&format!("{}:", e.key)));
+        println!("{:<46} {:<11} {:<5} {}", e.label, e.ca_type.name(),
+                 e.dimensions, if ok { "ready" } else { "MISSING" });
+    }
+    if !missing.is_empty() {
+        bail!("missing artifacts: {missing:?}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- table2
+
+fn selected_tasks(opt: &Opt) -> Vec<Task> {
+    match &opt.tasks {
+        None => Task::ALL.to_vec(),
+        Some(names) => Task::ALL
+            .iter()
+            .copied()
+            .filter(|t| {
+                let slug = t.name().to_lowercase().replace(' ', "-");
+                names.iter().any(|n| {
+                    n.to_lowercase() == slug
+                        || t.name().eq_ignore_ascii_case(n)
+                })
+            })
+            .collect(),
+    }
+}
+
+/// Table 2: per-task 1D-ARC accuracy. One NCA trained per task from the
+/// shared initialization, evaluated by exact match on a held-out split.
+fn table2(engine: &Engine, opt: &Opt) -> Result<()> {
+    let tasks = selected_tasks(opt);
+    let (train_n, test_n, steps) = if opt.quick {
+        (64, 25, opt.train_steps.unwrap_or(200))
+    } else {
+        // 1200 steps ~ the knee of the accuracy/time curve on this CPU;
+        // the long-range tasks (pattern copy, move-towards) keep improving
+        // to the 2000-step lr-schedule horizon (see EXPERIMENTS.md E5).
+        (160, 50, opt.train_steps.unwrap_or(1200))
+    };
+    println!("\n=== Table 2: 1D-ARC accuracy (NCA vs GPT-4) ===");
+    println!("({} tasks, {} train / {} test examples, {} train steps)",
+             tasks.len(), train_n, test_n, steps);
+    println!("{:<28} {:>7} {:>7} {:>7}", "Task", "GPT-4", "NCA",
+             "paper-NCA");
+
+    let total_t = Timer::start();
+    let mut gpt_sum = 0.0;
+    let mut nca_sum = 0.0;
+    let mut paper_sum = 0.0;
+    let mut csv = String::from("task,gpt4,nca,paper_nca\n");
+    for &task in &tasks {
+        let cfg = TrainCfg {
+            steps,
+            seed: opt.seed as u32,
+            log_every: 0,
+            out_dir: None,
+        };
+        let (train_set, test_set) =
+            experiments::arc_split(engine, task, train_n, test_n, opt.seed)?;
+        let run = experiments::train_arc(engine, &cfg, task, &train_set)?;
+        let acc =
+            evaluator::arc_accuracy(engine, &run.state.params, &test_set)?
+                * 100.0;
+        println!("{:<28} {:>6.0}% {:>6.1}% {:>6.0}%", task.name(),
+                 task.gpt4_accuracy(), acc, task.paper_nca_accuracy());
+        gpt_sum += task.gpt4_accuracy();
+        nca_sum += acc;
+        paper_sum += task.paper_nca_accuracy();
+        csv.push_str(&format!("{},{},{:.2},{}\n", task.name(),
+                              task.gpt4_accuracy(), acc,
+                              task.paper_nca_accuracy()));
+    }
+    let n = tasks.len() as f64;
+    println!("{:<28} {:>6.2}% {:>6.2}% {:>6.2}%", "Total", gpt_sum / n,
+             nca_sum / n, paper_sum / n);
+    println!("(paper Table 2 totals: GPT-4 41.56%, NCA 60.12%; ran in {})",
+             fmt_duration(total_t.elapsed_secs()));
+    csv.push_str(&format!("Total,{:.2},{:.2},{:.2}\n", gpt_sum / n,
+                          nca_sum / n, paper_sum / n));
+    let path = opt.out.join("table2.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+// ------------------------------------------------------------------ fig5
+
+/// Fig. 5: train growing + diffusing NCAs on the same lizard target, then
+/// amputate the tail and compare recovery.
+fn fig5(engine: &Engine, opt: &Opt) -> Result<()> {
+    let steps = opt.train_steps.unwrap_or(if opt.quick { 150 } else { 2000 });
+    println!("\n=== Figure 5: damage / regeneration ===");
+    println!("(training both NCAs for {steps} steps first)");
+    let cfg = TrainCfg {
+        steps,
+        seed: opt.seed as u32,
+        log_every: 0,
+        out_dir: None,
+    };
+
+    // Growing NCA: develop from the seed cell.
+    let (grow_run, _pool) = experiments::train_growing(engine, &cfg, 64)?;
+    let seed_state = experiments::growing_seed(engine)?;
+    let grow_info = engine.manifest().artifact("growing_rollout")?;
+    let gshape = &grow_info.inputs[1].shape;
+    let grow_target = Sprite::Lizard.render(gshape[0], gshape[1]);
+    // Growing: several rollouts to develop from the seed cell, then the
+    // same horizon to (attempt to) recover.
+    let grow_rounds = if opt.quick { 2 } else { 4 };
+    let grow_report = damage::run_damage_trial(
+        engine, "growing_rollout", &grow_run.state.params, seed_state,
+        &grow_target, grow_rounds, grow_rounds, false, DamageMode::Noise,
+        opt.seed as u32,
+    )?;
+
+    // Diffusing NCA: the Fig.-5 claim is about the attractor around the
+    // *developed* pattern. Develop with one denoising pass from a
+    // moderately-noised target (level 0.4, inside the training
+    // distribution — full from-noise generation needs paper-scale
+    // channels/steps), then amputate and run two recovery passes.
+    let diff_run = experiments::train_diffusing(engine, &cfg)?;
+    let diff_info = engine.manifest().artifact("diffusing_rollout")?;
+    let dshape = &diff_info.inputs[1].shape;
+    let diff_target = Sprite::Lizard.render(dshape[0], dshape[1]);
+    let mixed = experiments::diffusing_mixed_state(engine, &diff_target,
+                                                   0.4, opt.seed)?;
+    let diff_report = damage::run_damage_trial(
+        engine, "diffusing_rollout", &diff_run.state.params, mixed,
+        &diff_target, 1, 2, true, DamageMode::Noise, opt.seed as u32,
+    )?;
+
+    println!("{:<12} {:>12} {:>12} {:>12} {:>10}", "NCA", "pre-dmg MSE",
+             "post-dmg MSE", "recovered", "healed");
+    for (name, r) in [("growing", &grow_report), ("diffusing", &diff_report)] {
+        println!("{:<12} {:>12.5} {:>12.5} {:>12.5} {:>9.0}%", name,
+                 r.pre_damage_mse, r.post_damage_mse, r.recovered_mse,
+                 100.0 * r.recovery_fraction());
+    }
+    println!("(paper claim: diffusing heals, plain growing is unstable)");
+
+    let mut csv = String::from("nca,step,mse\n");
+    for (name, r) in [("growing", &grow_report), ("diffusing", &diff_report)] {
+        for (i, v) in r.curve.iter().enumerate() {
+            csv.push_str(&format!("{name},{i},{v:.6}\n"));
+        }
+    }
+    let path = opt.out.join("fig5_recovery.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+// ------------------------------------------------------------------ fig8
+
+/// Fig. 8: space-time diagrams of trained ARC NCAs, one PPM per task.
+fn fig8(engine: &Engine, opt: &Opt) -> Result<()> {
+    let tasks = selected_tasks(opt);
+    let steps = opt.train_steps.unwrap_or(if opt.quick { 200 } else { 800 });
+    println!("\n=== Figure 8: 1D-ARC space-time diagrams ===");
+    let info = engine.manifest().artifact("arc_traj")?;
+    let w = info.inputs[1].shape[0];
+
+    for &task in &tasks {
+        let cfg = TrainCfg {
+            steps,
+            seed: opt.seed as u32,
+            log_every: 0,
+            out_dir: None,
+        };
+        let (train_set, test_set) =
+            experiments::arc_split(engine, task, 96, 4, opt.seed)?;
+        let run = experiments::train_arc(engine, &cfg, task, &train_set)?;
+        let example = &test_set[0];
+        let rows: Vec<&[u8]> = vec![example.input.as_slice()];
+        let input1h = cax::datasets::arc1d::one_hot_batch(&rows, w)
+            .index_axis0(0);
+        let out = engine.execute(
+            "arc_traj",
+            &[Value::F32(run.state.params.clone()), Value::F32(input1h)],
+        )?;
+        let img = spacetime::render_spacetime_arc(&out[0])?;
+        let slug = task.name().to_lowercase().replace(' ', "-");
+        let path = opt.out.join(format!("fig8_{slug}.ppm"));
+        img.upscale(6).write_ppm(&path)?;
+        println!("  {:<28} -> {}", task.name(), path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! Experiment configuration: typed configs loadable from TOML files
+//! (`configs/*.toml`), with CLI-friendly defaults.
+//!
+//! The config system covers what the *coordinator* controls (training
+//! length, seeds, pool size, output locations, bench iteration counts).
+//! Everything baked into the artifacts at lowering time (grid sizes,
+//! channels, hyperparameters) is introspected from the manifest instead —
+//! one source of truth per layer.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::toml;
+
+/// Top-level runtime configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    /// Where the AOT artifacts live.
+    pub artifacts_dir: PathBuf,
+    /// Where reports/images/checkpoints are written.
+    pub out_dir: PathBuf,
+    /// Master seed for all coordinator-side randomness.
+    pub seed: u64,
+    pub train: TrainSection,
+    pub pool: PoolSection,
+    pub bench: BenchSection,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainSection {
+    pub steps: usize,
+    pub log_every: usize,
+    /// Checkpoint + loss CSV output on/off.
+    pub write_outputs: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolSection {
+    pub size: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchSection {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("out"),
+            seed: 42,
+            train: TrainSection { steps: 300, log_every: 25,
+                                  write_outputs: true },
+            pool: PoolSection { size: 64 },
+            bench: BenchSection { warmup_iters: 2, measure_iters: 10 },
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML file, overlaying the defaults.
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text)
+            .with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    /// Parse from TOML text, overlaying the defaults.
+    pub fn from_toml(text: &str) -> Result<Config> {
+        let doc = toml::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = Config::default();
+
+        if let Some(v) = doc.get_str("", "artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.get_str("", "out_dir") {
+            cfg.out_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.get_usize("", "seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_usize("train", "steps") {
+            cfg.train.steps = v;
+        }
+        if let Some(v) = doc.get_usize("train", "log_every") {
+            cfg.train.log_every = v;
+        }
+        if let Some(v) = doc.get_bool("train", "write_outputs") {
+            cfg.train.write_outputs = v;
+        }
+        if let Some(v) = doc.get_usize("pool", "size") {
+            cfg.pool.size = v;
+        }
+        if let Some(v) = doc.get_usize("bench", "warmup_iters") {
+            cfg.bench.warmup_iters = v;
+        }
+        if let Some(v) = doc.get_usize("bench", "measure_iters") {
+            cfg.bench.measure_iters = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.train.steps == 0 {
+            bail!("train.steps must be positive");
+        }
+        if self.pool.size == 0 {
+            bail!("pool.size must be positive");
+        }
+        if self.bench.measure_iters == 0 {
+            bail!("bench.measure_iters must be positive");
+        }
+        Ok(())
+    }
+
+    /// Resolve the artifacts dir against the environment override
+    /// `CAX_ARTIFACTS` (useful for tests and CI).
+    pub fn resolved_artifacts_dir(&self) -> PathBuf {
+        std::env::var("CAX_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| self.artifacts_dir.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overlay() {
+        let cfg = Config::from_toml(
+            r#"
+            seed = 7
+            out_dir = "results"
+
+            [train]
+            steps = 50
+            log_every = 5
+
+            [pool]
+            size = 16
+
+            [bench]
+            measure_iters = 3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.out_dir, PathBuf::from("results"));
+        assert_eq!(cfg.train.steps, 50);
+        assert_eq!(cfg.train.log_every, 5);
+        assert_eq!(cfg.pool.size, 16);
+        assert_eq!(cfg.bench.measure_iters, 3);
+        // Unset fields keep defaults.
+        assert_eq!(cfg.bench.warmup_iters, 2);
+        assert!(cfg.train.write_outputs);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(Config::from_toml("[train]\nsteps = 0\n").is_err());
+        assert!(Config::from_toml("[pool]\nsize = 0\n").is_err());
+        assert!(Config::from_toml("not toml at all").is_err());
+    }
+
+    #[test]
+    fn empty_toml_is_defaults() {
+        assert_eq!(Config::from_toml("").unwrap(), Config::default());
+    }
+}

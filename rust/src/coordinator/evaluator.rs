@@ -1,0 +1,174 @@
+//! Evaluators: 1D-ARC exact-match accuracy (Table 2) and self-classifying
+//! MNIST majority-vote accuracy (Fig. 3 right's subject).
+
+use anyhow::{bail, Result};
+
+use crate::datasets::arc1d::{argmax_colors, one_hot_batch, Example};
+use crate::datasets::mnist::Digit;
+use crate::runtime::{Engine, Value};
+use crate::tensor::Tensor;
+
+/// Exact-match accuracy of an ARC NCA on a test set.
+///
+/// The `arc_eval` artifact has a fixed batch B; the test set is run in
+/// chunks (padded with repeats, padding excluded from scoring). A test case
+/// counts as solved only if EVERY pixel matches the target — the paper's
+/// task-success criterion (§5.3).
+pub fn arc_accuracy(engine: &Engine, params: &Tensor, test: &[Example])
+                    -> Result<f64> {
+    if test.is_empty() {
+        bail!("arc_accuracy: empty test set");
+    }
+    let info = engine.manifest().artifact("arc_eval")?;
+    let (b, w) = (info.inputs[1].shape[0], info.inputs[1].shape[1]);
+    let mut solved = 0usize;
+
+    for chunk in test.chunks(b) {
+        let rows: Vec<&[u8]> = chunk
+            .iter()
+            .map(|e| e.input.as_slice())
+            .chain(std::iter::repeat(test[0].input.as_slice()))
+            .take(b)
+            .collect();
+        for e in chunk {
+            if e.input.len() != w {
+                bail!("arc_accuracy: example width {} != artifact width {w}",
+                      e.input.len());
+            }
+        }
+        let inputs = one_hot_batch(&rows, w);
+        let out = engine.execute(
+            "arc_eval",
+            &[Value::F32(params.clone()), Value::F32(inputs)],
+        )?;
+        let predictions = argmax_colors(&out[0]);
+        for (i, e) in chunk.iter().enumerate() {
+            if predictions[i] == e.target {
+                solved += 1;
+            }
+        }
+    }
+    Ok(solved as f64 / test.len() as f64)
+}
+
+/// Per-pixel agreement rate (softer diagnostic than exact match).
+pub fn arc_pixel_accuracy(engine: &Engine, params: &Tensor, test: &[Example])
+                          -> Result<f64> {
+    let info = engine.manifest().artifact("arc_eval")?;
+    let (b, w) = (info.inputs[1].shape[0], info.inputs[1].shape[1]);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for chunk in test.chunks(b) {
+        let rows: Vec<&[u8]> = chunk
+            .iter()
+            .map(|e| e.input.as_slice())
+            .chain(std::iter::repeat(test[0].input.as_slice()))
+            .take(b)
+            .collect();
+        let inputs = one_hot_batch(&rows, w);
+        let out = engine.execute(
+            "arc_eval",
+            &[Value::F32(params.clone()), Value::F32(inputs)],
+        )?;
+        let predictions = argmax_colors(&out[0]);
+        for (i, e) in chunk.iter().enumerate() {
+            correct += predictions[i]
+                .iter()
+                .zip(&e.target)
+                .filter(|(p, t)| p == t)
+                .count();
+            total += w;
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Majority-vote classification accuracy of the self-classifying MNIST NCA:
+/// each alive cell votes its argmax logit; the image's prediction is the
+/// plurality vote (Randazzo et al. 2020's readout).
+pub fn mnist_accuracy(engine: &Engine, params: &Tensor, digits: &[&Digit],
+                      seed: u32) -> Result<f64> {
+    if digits.is_empty() {
+        bail!("mnist_accuracy: empty evaluation set");
+    }
+    let info = engine.manifest().artifact("mnist_eval")?;
+    let b = info.inputs[1].shape[0];
+    let (h, w) = (info.inputs[1].shape[1], info.inputs[1].shape[2]);
+    let mut correct = 0usize;
+
+    for chunk in digits.chunks(b) {
+        let imgs: Vec<Tensor> = chunk
+            .iter()
+            .map(|d| d.image.clone())
+            .chain(std::iter::repeat(digits[0].image.clone()))
+            .take(b)
+            .collect();
+        let batch = Tensor::stack(&imgs)?;
+        let out = engine.execute(
+            "mnist_eval",
+            &[Value::F32(params.clone()), Value::F32(batch.clone()),
+              Value::U32(seed)],
+        )?;
+        let logits = &out[0]; // [B, H, W, 10]
+        let nc = logits.shape()[3];
+        for (i, d) in chunk.iter().enumerate() {
+            let mut votes = vec![0usize; nc];
+            for y in 0..h {
+                for x in 0..w {
+                    if batch.at(&[i, y, x]) <= 0.1 {
+                        continue; // only alive (ink) cells vote
+                    }
+                    let mut best = 0usize;
+                    let mut best_v = f32::NEG_INFINITY;
+                    for c in 0..nc {
+                        let v = logits.at(&[i, y, x, c]);
+                        if v > best_v {
+                            best_v = v;
+                            best = c;
+                        }
+                    }
+                    votes[best] += 1;
+                }
+            }
+            let pred = votes
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &n)| n)
+                .map(|(c, _)| c)
+                .unwrap();
+            if pred == d.label as usize {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / digits.len() as f64)
+}
+
+/// Reconstruction MSE of the 3D self-autoencoding NCA on a digit batch.
+pub fn autoenc3d_recon_mse(engine: &Engine, params: &Tensor,
+                           digits: &[&Digit], seed: u32) -> Result<f64> {
+    let info = engine.manifest().artifact("autoenc3d_eval")?;
+    let b = info.inputs[1].shape[0];
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for chunk in digits.chunks(b) {
+        let imgs: Vec<Tensor> = chunk
+            .iter()
+            .map(|d| d.image.clone())
+            .chain(std::iter::repeat(digits[0].image.clone()))
+            .take(b)
+            .collect();
+        let batch = Tensor::stack(&imgs)?;
+        let out = engine.execute(
+            "autoenc3d_eval",
+            &[Value::F32(params.clone()), Value::F32(batch.clone()),
+              Value::U32(seed)],
+        )?;
+        let recon = &out[0]; // [B, H, W]
+        for (i, _) in chunk.iter().enumerate() {
+            total += recon.index_axis0(i).mse(&batch.index_axis0(i))? as f64;
+            count += 1;
+        }
+    }
+    Ok(total / count.max(1) as f64)
+}

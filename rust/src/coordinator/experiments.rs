@@ -1,0 +1,326 @@
+//! High-level experiment drivers — one function per paper experiment.
+//!
+//! These compose the generic [`train_loop`](crate::coordinator::trainer)
+//! with each artifact's batch contract (manifest-introspected shapes) and
+//! the dataset substrates. They are the single implementation shared by the
+//! `cax` CLI, the `cax-tables` report generator, the examples and the
+//! integration tests.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::trainer::{train_loop, TrainCfg, TrainState};
+use crate::datasets::arc1d::{one_hot_batch, Example, Task};
+use crate::datasets::mnist::{self, MnistConfig};
+use crate::datasets::targets::Sprite;
+use crate::metrics::History;
+use crate::pool::SamplePool;
+use crate::runtime::{Engine, Value};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Result of one experiment training run.
+pub struct TrainRun {
+    pub state: TrainState,
+    pub history: History,
+}
+
+impl TrainRun {
+    /// Final-window mean loss (convergence check).
+    pub fn final_loss(&self) -> f64 {
+        let (_, last) = self.history.window_means(10);
+        last
+    }
+
+    /// True iff the last-window loss improved on the first-window loss.
+    pub fn improved(&self) -> bool {
+        let (first, last) = self.history.window_means(10);
+        last < first
+    }
+}
+
+/// Render the growing-NCA target sprite at the artifact's grid size.
+pub fn growing_target(engine: &Engine) -> Result<Tensor> {
+    let info = engine.manifest().artifact("growing_train_step")?;
+    let spec = &info.inputs[5]; // target [H, W, 4]
+    Ok(Sprite::Lizard.render(spec.shape[0], spec.shape[1]))
+}
+
+/// The single-seed-cell initial state from the `growing_seed` artifact.
+pub fn growing_seed(engine: &Engine) -> Result<Tensor> {
+    let out = engine.execute("growing_seed", &[])?;
+    Ok(out.into_iter().next().unwrap())
+}
+
+/// §App. B: growing NCA with the sample-pool recipe (the e2e driver).
+///
+/// Pool bookkeeping lives here in Layer 3: sample a batch, hand it to the
+/// fused train-step artifact (rollout + BPTT + worst-of-batch reseed +
+/// Adam, all in-graph), write the evolved states back.
+pub fn train_growing(engine: &Engine, cfg: &TrainCfg, pool_size: usize)
+                     -> Result<(TrainRun, SamplePool)> {
+    let info = engine.manifest().artifact("growing_train_step")?;
+    let batch = info.inputs[4].shape[0];
+    let target = growing_target(engine)?;
+    let seed_state = growing_seed(engine)?;
+
+    let mut state = TrainState::from_blob(engine, "growing_params")?;
+    // Both closures need the pool (sample in batch_fn, write-back in the
+    // observer); RefCell gives them disjoint dynamic borrows.
+    let pool = std::cell::RefCell::new(SamplePool::new(pool_size,
+                                                       &seed_state));
+    let rng = std::cell::RefCell::new(Rng::new(cfg.seed as u64)
+        .fold_in(0x6402));
+    let sampled: std::cell::RefCell<Vec<usize>> =
+        std::cell::RefCell::new(vec![]);
+
+    let history = train_loop(
+        engine,
+        "growing_train_step",
+        &mut state,
+        cfg,
+        |_step| {
+            let (idx, states) =
+                pool.borrow().sample(batch, &mut rng.borrow_mut());
+            *sampled.borrow_mut() = idx;
+            Ok(vec![Value::F32(states), Value::F32(target.clone())])
+        },
+        |outcome| {
+            // extra[0] = evolved batch states (worst slot reseeded
+            // in-graph); write them back to the sampled slots.
+            if let Some(states) = outcome.extra.first() {
+                pool.borrow_mut().write_back(&sampled.borrow(), states);
+            }
+            Ok(())
+        },
+    )?;
+    Ok((TrainRun { state, history }, pool.into_inner()))
+}
+
+/// A pure-noise initial state for the diffusing NCA, matching the training
+/// distribution: RGBA channels ~ U[0,1), hidden channels zero (training
+/// always starts from `noisy_init`, which only noises the first 4
+/// channels — full-channel noise is out of distribution).
+pub fn diffusing_noise_state(engine: &Engine, seed: u64) -> Result<Tensor> {
+    let info = engine.manifest().artifact("diffusing_rollout")?;
+    let shape = info.inputs[1].shape.clone(); // [H, W, C]
+    let (h, w, c) = (shape[0], shape[1], shape[2]);
+    let mut rng = Rng::new(seed).fold_in(0xD1FF);
+    let mut state = Tensor::zeros(&shape);
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..4.min(c) {
+                state.set(&[y, x, ch], rng.next_f32());
+            }
+        }
+    }
+    Ok(state)
+}
+
+/// A partially-noised diffusing-NCA state: RGBA = (1-level)*target +
+/// level*noise, hidden channels zero — exactly the training distribution
+/// of `noisy_init` at a chosen noise level.
+pub fn diffusing_mixed_state(engine: &Engine, target: &Tensor, level: f32,
+                             seed: u64) -> Result<Tensor> {
+    let info = engine.manifest().artifact("diffusing_rollout")?;
+    let shape = info.inputs[1].shape.clone(); // [H, W, C]
+    let (h, w, c) = (shape[0], shape[1], shape[2]);
+    let mut rng = Rng::new(seed).fold_in(0x312D);
+    let mut state = Tensor::zeros(&shape);
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..4.min(c) {
+                let t = target.at(&[y, x, ch]);
+                state.set(&[y, x, ch],
+                          (1.0 - level) * t + level * rng.next_f32());
+            }
+        }
+    }
+    Ok(state)
+}
+
+/// §5.1: diffusing NCA — no pool needed (the paper's selling point).
+pub fn train_diffusing(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
+    let info = engine.manifest().artifact("diffusing_train_step")?;
+    let spec = &info.inputs[4]; // target [H, W, 4]
+    let target = Sprite::Lizard.render(spec.shape[0], spec.shape[1]);
+    let mut state = TrainState::from_blob(engine, "diffusing_params")?;
+    let history = train_loop(
+        engine,
+        "diffusing_train_step",
+        &mut state,
+        cfg,
+        |_| Ok(vec![Value::F32(target.clone())]),
+        |_| Ok(()),
+    )?;
+    Ok(TrainRun { state, history })
+}
+
+/// Goal-conditioned growing NCA (Sudhakaran et al. 2022).
+pub fn train_conditional(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
+    let info = engine.manifest().artifact("conditional_train_step")?;
+    let tgt_spec = &info.inputs[4]; // [G, H, W, 4]
+    let goal_spec = &info.inputs[5]; // [B, G]
+    let (goals, h, w) = (tgt_spec.shape[0], tgt_spec.shape[1],
+                         tgt_spec.shape[2]);
+    let (b, g) = (goal_spec.shape[0], goal_spec.shape[1]);
+    let sprites = [Sprite::Lizard, Sprite::Heart, Sprite::Square];
+    let targets = Tensor::stack(
+        &sprites.iter().take(goals).map(|s| s.render(h, w)).collect::<Vec<_>>(),
+    )?;
+    let mut rng = Rng::new(cfg.seed as u64).fold_in(0xC0D);
+    let mut state = TrainState::from_blob(engine, "conditional_params")?;
+    let history = train_loop(
+        engine,
+        "conditional_train_step",
+        &mut state,
+        cfg,
+        |_| {
+            let mut goals1h = Tensor::zeros(&[b, g]);
+            for i in 0..b {
+                goals1h.set(&[i, rng.range(0, g)], 1.0);
+            }
+            Ok(vec![Value::F32(targets.clone()), Value::F32(goals1h)])
+        },
+        |_| Ok(()),
+    )?;
+    Ok(TrainRun { state, history })
+}
+
+/// Digit batch + one-hot label batch at an artifact's grid size.
+fn digit_batches(engine: &Engine, artifact: &str, input_idx: usize,
+                 n: usize, seed: u64)
+                 -> Result<(Vec<Tensor>, Vec<Tensor>, usize)> {
+    let info = engine.manifest().artifact(artifact)?;
+    let spec = &info.inputs[input_idx]; // digits [B, H, W]
+    let (b, h, w) = (spec.shape[0], spec.shape[1], spec.shape[2]);
+    let cfg = MnistConfig::for_grid(h, w);
+    let digits = mnist::dataset(n.max(b), &cfg, seed);
+    let mut images = vec![];
+    let mut labels = vec![];
+    for chunk in digits.chunks(b) {
+        if chunk.len() < b {
+            break;
+        }
+        let refs: Vec<&mnist::Digit> = chunk.iter().collect();
+        images.push(mnist::batch_images(&refs));
+        labels.push(mnist::batch_labels(&refs));
+    }
+    Ok((images, labels, b))
+}
+
+/// Self-classifying MNIST (Randazzo et al. 2020) — fused train path.
+pub fn train_mnist(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
+    let (images, labels, _) =
+        digit_batches(engine, "mnist_train_step", 4, cfg.steps * 4,
+                      cfg.seed as u64)?;
+    let mut state = TrainState::from_blob(engine, "mnist_params")?;
+    let n = images.len();
+    let history = train_loop(
+        engine,
+        "mnist_train_step",
+        &mut state,
+        cfg,
+        |step| {
+            let i = step % n;
+            Ok(vec![Value::F32(images[i].clone()),
+                    Value::F32(labels[i].clone())])
+        },
+        |_| Ok(()),
+    )?;
+    Ok(TrainRun { state, history })
+}
+
+/// Unsupervised VAE-NCA (Palm et al. 2021).
+pub fn train_vae(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
+    let (images, _, _) =
+        digit_batches(engine, "vae_train_step", 4, cfg.steps * 4,
+                      cfg.seed as u64)?;
+    let mut state = TrainState::from_blob(engine, "vae_params")?;
+    let n = images.len();
+    let history = train_loop(
+        engine,
+        "vae_train_step",
+        &mut state,
+        cfg,
+        |step| Ok(vec![Value::F32(images[step % n].clone())]),
+        |_| Ok(()),
+    )?;
+    Ok(TrainRun { state, history })
+}
+
+/// §5.2: 3D self-autoencoding MNIST through the 1-cell bottleneck.
+pub fn train_autoenc3d(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
+    let (images, _, _) =
+        digit_batches(engine, "autoenc3d_train_step", 4, cfg.steps * 4,
+                      cfg.seed as u64)?;
+    let mut state = TrainState::from_blob(engine, "autoenc3d_params")?;
+    let n = images.len();
+    let history = train_loop(
+        engine,
+        "autoenc3d_train_step",
+        &mut state,
+        cfg,
+        |step| Ok(vec![Value::F32(images[step % n].clone())]),
+        |_| Ok(()),
+    )?;
+    Ok(TrainRun { state, history })
+}
+
+/// §5.3: train the 1D-ARC NCA on one task's training split.
+pub fn train_arc(engine: &Engine, cfg: &TrainCfg, task: Task,
+                 train_set: &[Example]) -> Result<TrainRun> {
+    let info = engine.manifest().artifact("arc_train_step")?;
+    let spec = &info.inputs[4]; // inputs [B, W, COLORS]
+    let (b, w) = (spec.shape[0], spec.shape[1]);
+    anyhow::ensure!(!train_set.is_empty(), "empty ARC train set for {task:?}");
+    let mut rng = Rng::new(cfg.seed as u64).fold_in(task as u64);
+    let mut state = TrainState::from_blob(engine, "arc_params")?;
+    let history = train_loop(
+        engine,
+        "arc_train_step",
+        &mut state,
+        cfg,
+        |_| {
+            let mut ins: Vec<&[u8]> = Vec::with_capacity(b);
+            let mut tgts: Vec<&[u8]> = Vec::with_capacity(b);
+            for _ in 0..b {
+                let e = &train_set[rng.range(0, train_set.len())];
+                ins.push(&e.input);
+                tgts.push(&e.target);
+            }
+            Ok(vec![Value::F32(one_hot_batch(&ins, w)),
+                    Value::F32(one_hot_batch(&tgts, w))])
+        },
+        |_| Ok(()),
+    )
+    .with_context(|| format!("training ARC task {}", task.name()))?;
+    Ok(TrainRun { state, history })
+}
+
+/// Generate a train/test split sized for the `arc_eval` artifact width.
+pub fn arc_split(engine: &Engine, task: Task, train: usize, test: usize,
+                 seed: u64) -> Result<(Vec<Example>, Vec<Example>)> {
+    let info = engine.manifest().artifact("arc_eval")?;
+    let w = info.inputs[1].shape[1];
+    Ok(task.dataset(w, train, test, seed))
+}
+
+/// Dispatch a training run by registry key. Returns None for classic
+/// (non-trained) CAs.
+pub fn train_by_key(engine: &Engine, key: &str, cfg: &TrainCfg,
+                    pool_size: usize) -> Result<Option<TrainRun>> {
+    Ok(match key {
+        "growing" => Some(train_growing(engine, cfg, pool_size)?.0),
+        "conditional" => Some(train_conditional(engine, cfg)?),
+        "vae" => Some(train_vae(engine, cfg)?),
+        "mnist" => Some(train_mnist(engine, cfg)?),
+        "diffusing" => Some(train_diffusing(engine, cfg)?),
+        "autoenc3d" => Some(train_autoenc3d(engine, cfg)?),
+        "arc" => {
+            let (train_set, _) = arc_split(engine, Task::Denoise, 64, 0,
+                                           cfg.seed as u64)?;
+            Some(train_arc(engine, cfg, Task::Denoise, &train_set)?)
+        }
+        _ => None,
+    })
+}

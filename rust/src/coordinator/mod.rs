@@ -1,0 +1,21 @@
+//! Coordinator — the paper's framework layer in Rust.
+//!
+//! - [`registry`]: the Table-1 CA catalogue and artifact requirements.
+//! - [`sim`]: classic-CA drivers over the three execution paths of Fig. 3
+//!   (fused / stepwise / naive baseline).
+//! - [`trainer`]: the generic fused-train-step loop + checkpoints.
+//! - [`stepwise`]: host-driven BPTT (the Fig. 3-right TF-proxy baseline).
+//! - [`evaluator`]: Table-2 ARC accuracy, MNIST majority vote, 3D recon.
+//! - [`damage`]: the Fig. 5 amputation/regeneration protocol.
+//! - [`experiments`]: one high-level driver per paper experiment.
+
+pub mod damage;
+pub mod evaluator;
+pub mod experiments;
+pub mod registry;
+pub mod sim;
+pub mod stepwise;
+pub mod trainer;
+
+pub use sim::{Path, Simulator};
+pub use trainer::{train_loop, StepOutcome, TrainCfg, TrainState};

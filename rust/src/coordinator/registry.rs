@@ -1,0 +1,197 @@
+//! CA registry — the Table-1 catalogue as a first-class runtime object.
+//!
+//! Each entry names the CA family, its paper row (type/dimensions), and the
+//! artifacts it needs. `cax list` prints it; the table1_coverage test
+//! asserts every entry's artifacts exist in the manifest.
+
+use crate::runtime::Manifest;
+
+/// CA class, mirroring paper Table 1's "Type" column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CaType {
+    Discrete,
+    Continuous,
+    Neural,
+}
+
+impl CaType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CaType::Discrete => "Discrete",
+            CaType::Continuous => "Continuous",
+            CaType::Neural => "Neural",
+        }
+    }
+}
+
+/// One Table-1 row.
+#[derive(Clone, Debug)]
+pub struct CaEntry {
+    /// Registry key (CLI name).
+    pub key: &'static str,
+    /// Paper Table 1 row label.
+    pub label: &'static str,
+    pub ca_type: CaType,
+    pub dimensions: &'static str,
+    /// Artifacts this CA needs at runtime.
+    pub artifacts: &'static [&'static str],
+    /// Initial-parameter blob, for neural CAs.
+    pub params_blob: Option<&'static str>,
+}
+
+/// The full Table 1 (paper order), including the three novel experiments.
+pub fn table1() -> Vec<CaEntry> {
+    vec![
+        CaEntry {
+            key: "eca",
+            label: "Elementary Cellular Automata",
+            ca_type: CaType::Discrete,
+            dimensions: "1D",
+            artifacts: &["eca_step", "eca_rollout", "eca_traj"],
+            params_blob: None,
+        },
+        CaEntry {
+            key: "life",
+            label: "Conway's Game of Life",
+            ca_type: CaType::Discrete,
+            dimensions: "2D",
+            artifacts: &["life_step", "life_rollout", "life_traj"],
+            params_blob: None,
+        },
+        CaEntry {
+            key: "lenia",
+            label: "Lenia",
+            ca_type: CaType::Continuous,
+            dimensions: "ND",
+            artifacts: &["lenia_step", "lenia_rollout", "lenia_traj"],
+            params_blob: None,
+        },
+        CaEntry {
+            key: "growing",
+            label: "Growing Neural Cellular Automata",
+            ca_type: CaType::Neural,
+            dimensions: "2D",
+            artifacts: &["growing_train_step", "growing_rollout",
+                         "growing_seed"],
+            params_blob: Some("growing_params"),
+        },
+        CaEntry {
+            key: "conditional",
+            label: "Growing Conditional Neural Cellular Automata",
+            ca_type: CaType::Neural,
+            dimensions: "2D",
+            artifacts: &["conditional_train_step", "conditional_grow"],
+            params_blob: Some("conditional_params"),
+        },
+        CaEntry {
+            key: "vae",
+            label: "Growing Unsupervised Neural Cellular Automata",
+            ca_type: CaType::Neural,
+            dimensions: "2D",
+            artifacts: &["vae_train_step", "vae_reconstruct"],
+            params_blob: Some("vae_params"),
+        },
+        CaEntry {
+            key: "mnist",
+            label: "Self-classifying MNIST Digits",
+            ca_type: CaType::Neural,
+            dimensions: "2D",
+            artifacts: &["mnist_train_step", "mnist_eval", "mnist_step_fwd",
+                         "mnist_step_vjp", "mnist_final_grad"],
+            params_blob: Some("mnist_params"),
+        },
+        CaEntry {
+            key: "diffusing",
+            label: "Diffusing Neural Cellular Automata",
+            ca_type: CaType::Neural,
+            dimensions: "2D",
+            artifacts: &["diffusing_train_step", "diffusing_rollout"],
+            params_blob: Some("diffusing_params"),
+        },
+        CaEntry {
+            key: "autoenc3d",
+            label: "Self-autoencoding MNIST Digits",
+            ca_type: CaType::Neural,
+            dimensions: "3D",
+            artifacts: &["autoenc3d_train_step", "autoenc3d_eval"],
+            params_blob: Some("autoenc3d_params"),
+        },
+        CaEntry {
+            key: "arc",
+            label: "1D-ARC Neural Cellular Automata",
+            ca_type: CaType::Neural,
+            dimensions: "1D",
+            artifacts: &["arc_train_step", "arc_eval", "arc_traj"],
+            params_blob: Some("arc_params"),
+        },
+    ]
+}
+
+/// Look up a registry entry by CLI key.
+pub fn find(key: &str) -> Option<CaEntry> {
+    table1().into_iter().find(|e| e.key == key)
+}
+
+/// Names of registry artifacts missing from a manifest (empty = complete).
+pub fn missing_artifacts(manifest: &Manifest) -> Vec<String> {
+    let mut missing = vec![];
+    for entry in table1() {
+        for &art in entry.artifacts {
+            if !manifest.artifacts.contains_key(art) {
+                missing.push(format!("{}:{}", entry.key, art));
+            }
+        }
+        if let Some(blob) = entry.params_blob {
+            if !manifest.blobs.contains_key(blob) {
+                missing.push(format!("{}:blob:{}", entry.key, blob));
+            }
+        }
+    }
+    missing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_rows_like_the_paper() {
+        assert_eq!(table1().len(), 10);
+    }
+
+    #[test]
+    fn keys_unique() {
+        let mut keys: Vec<_> = table1().iter().map(|e| e.key).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 10);
+    }
+
+    #[test]
+    fn type_distribution_matches_table1() {
+        let t = table1();
+        let count = |ty: CaType| t.iter().filter(|e| e.ca_type == ty).count();
+        assert_eq!(count(CaType::Discrete), 2);
+        assert_eq!(count(CaType::Continuous), 1);
+        assert_eq!(count(CaType::Neural), 7);
+    }
+
+    #[test]
+    fn neural_cas_have_param_blobs() {
+        for e in table1() {
+            assert_eq!(
+                e.params_blob.is_some(),
+                e.ca_type == CaType::Neural,
+                "{}", e.key
+            );
+            assert!(!e.artifacts.is_empty(), "{}", e.key);
+        }
+    }
+
+    #[test]
+    fn find_by_key() {
+        assert_eq!(find("arc").unwrap().dimensions, "1D");
+        assert_eq!(find("autoenc3d").unwrap().dimensions, "3D");
+        assert!(find("nope").is_none());
+    }
+}

@@ -1,0 +1,224 @@
+//! Simulation engine: drives the classic-CA artifacts (fused and stepwise)
+//! and the naive Rust baselines behind one interface — the comparison
+//! surface of Figure 3.
+
+use anyhow::Result;
+
+use crate::automata::{EcaSim, LeniaSim, LifeSim, WolframRule};
+use crate::automata::lenia::LeniaParams;
+use crate::runtime::{Engine, Value};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Which execution path a classic-CA run takes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Path {
+    /// Fused `lax.scan` rollout in one XLA program (the CAX fast path).
+    Fused,
+    /// One XLA execution per step, host round-trip between steps
+    /// (per-step-dispatch cost structure).
+    Stepwise,
+    /// Naive per-cell Rust loops (the CellPyLib-role baseline).
+    Naive,
+}
+
+impl Path {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Path::Fused => "cax-fused",
+            Path::Stepwise => "xla-stepwise",
+            Path::Naive => "naive-baseline",
+        }
+    }
+}
+
+/// Classic-CA simulation driver over an [`Engine`].
+pub struct Simulator<'e> {
+    pub engine: &'e Engine,
+}
+
+impl<'e> Simulator<'e> {
+    pub fn new(engine: &'e Engine) -> Simulator<'e> {
+        Simulator { engine }
+    }
+
+    /// Random {0,1} state matching an artifact's `state` input shape.
+    pub fn random_state(&self, artifact: &str, rng: &mut Rng) -> Result<Tensor> {
+        let info = self.engine.manifest().artifact(artifact)?;
+        let spec = &info.inputs[0];
+        let data = rng.binary_vec(spec.numel(), 0.5);
+        Tensor::new(spec.shape.clone(), data)
+    }
+
+    // ------------------------------------------------------------ ECA
+
+    /// Run ECA for the artifact-configured number of steps on `path`.
+    /// `steps` only applies to Stepwise/Naive (Fused bakes T in-graph).
+    pub fn run_eca(&self, path: Path, state: &Tensor, rule: WolframRule,
+                   steps: usize) -> Result<Tensor> {
+        self.run_eca_named("eca_step", "eca_rollout", path, state, rule,
+                           steps)
+    }
+
+    /// As [`run_eca`](Self::run_eca) with explicit artifact names (the
+    /// bench harness uses the `*_bench`-scale variants).
+    pub fn run_eca_named(&self, step_art: &str, rollout_art: &str,
+                         path: Path, state: &Tensor, rule: WolframRule,
+                         steps: usize) -> Result<Tensor> {
+        let rule_t =
+            Tensor::new(vec![8], rule.table_f32().to_vec()).unwrap();
+        match path {
+            Path::Fused => {
+                let out = self.engine.execute(
+                    rollout_art,
+                    &[Value::F32(state.clone()), Value::F32(rule_t)],
+                )?;
+                Ok(out.into_iter().next().unwrap())
+            }
+            Path::Stepwise => {
+                let mut cur = state.clone();
+                for _ in 0..steps {
+                    let out = self.engine.execute(
+                        step_art,
+                        &[Value::F32(cur), Value::F32(rule_t.clone())],
+                    )?;
+                    cur = out.into_iter().next().unwrap();
+                }
+                Ok(cur)
+            }
+            Path::Naive => {
+                let mut sim = EcaSim::from_tensor(rule, state);
+                sim.run(steps);
+                Ok(sim.to_tensor())
+            }
+        }
+    }
+
+    /// ECA trajectory [T, B, W] via the fused traj artifact.
+    pub fn eca_traj(&self, state: &Tensor, rule: WolframRule)
+                    -> Result<(Tensor, Tensor)> {
+        let rule_t = Tensor::new(vec![8], rule.table_f32().to_vec()).unwrap();
+        let mut out = self.engine.execute(
+            "eca_traj", &[Value::F32(state.clone()), Value::F32(rule_t)],
+        )?;
+        let traj = out.pop().unwrap();
+        let final_state = out.pop().unwrap();
+        Ok((final_state, traj))
+    }
+
+    // ------------------------------------------------------------ Life
+
+    pub fn run_life(&self, path: Path, state: &Tensor, steps: usize)
+                    -> Result<Tensor> {
+        self.run_life_named("life_step", "life_rollout", path, state, steps)
+    }
+
+    /// As [`run_life`](Self::run_life) with explicit artifact names.
+    pub fn run_life_named(&self, step_art: &str, rollout_art: &str,
+                          path: Path, state: &Tensor, steps: usize)
+                          -> Result<Tensor> {
+        match path {
+            Path::Fused => {
+                let out = self
+                    .engine
+                    .execute(rollout_art, &[Value::F32(state.clone())])?;
+                Ok(out.into_iter().next().unwrap())
+            }
+            Path::Stepwise => {
+                let mut cur = state.clone();
+                for _ in 0..steps {
+                    let out =
+                        self.engine.execute(step_art, &[Value::F32(cur)])?;
+                    cur = out.into_iter().next().unwrap();
+                }
+                Ok(cur)
+            }
+            Path::Naive => {
+                let mut sim = LifeSim::from_tensor(state);
+                sim.run(steps);
+                Ok(sim.to_tensor())
+            }
+        }
+    }
+
+    pub fn life_traj(&self, state: &Tensor) -> Result<(Tensor, Tensor)> {
+        let mut out =
+            self.engine.execute("life_traj", &[Value::F32(state.clone())])?;
+        let traj = out.pop().unwrap();
+        let final_state = out.pop().unwrap();
+        Ok((final_state, traj))
+    }
+
+    // ------------------------------------------------------------ Lenia
+
+    /// The FFT'd ring kernel the Lenia artifacts expect, from the manifest
+    /// blob.
+    pub fn lenia_kernel(&self) -> Result<Tensor> {
+        let info = self.engine.manifest().artifact("lenia_step")?;
+        let spec = &info.inputs[1];
+        let data = self.engine.manifest().load_blob("lenia_kfft")?;
+        Tensor::new(spec.shape.clone(), data)
+    }
+
+    pub fn run_lenia(&self, path: Path, state: &Tensor, steps: usize)
+                     -> Result<Tensor> {
+        match path {
+            Path::Fused => {
+                let kfft = self.lenia_kernel()?;
+                let out = self.engine.execute(
+                    "lenia_rollout",
+                    &[Value::F32(state.clone()), Value::F32(kfft)],
+                )?;
+                Ok(out.into_iter().next().unwrap())
+            }
+            Path::Stepwise => {
+                let kfft = self.lenia_kernel()?;
+                let mut cur = state.clone();
+                for _ in 0..steps {
+                    let out = self.engine.execute(
+                        "lenia_step",
+                        &[Value::F32(cur), Value::F32(kfft.clone())],
+                    )?;
+                    cur = out.into_iter().next().unwrap();
+                }
+                Ok(cur)
+            }
+            Path::Naive => {
+                let info = self.engine.manifest().artifact("lenia_step")?;
+                let params = LeniaParams {
+                    radius: info.meta_usize("radius").unwrap_or(10),
+                    mu: info.meta_f64("mu").unwrap_or(0.15) as f32,
+                    sigma: info.meta_f64("sigma").unwrap_or(0.017) as f32,
+                    dt: info.meta_f64("dt").unwrap_or(0.1) as f32,
+                };
+                // Naive sim is single-board; run each batch element.
+                let b = state.shape()[0];
+                let mut outs = Vec::with_capacity(b);
+                for i in 0..b {
+                    let mut sim =
+                        LeniaSim::new(params, state.index_axis0(i));
+                    sim.run(steps);
+                    outs.push(sim.state().clone());
+                }
+                Tensor::stack(&outs)
+            }
+        }
+    }
+
+    pub fn lenia_traj(&self, state: &Tensor) -> Result<(Tensor, Tensor)> {
+        let kfft = self.lenia_kernel()?;
+        let mut out = self.engine.execute(
+            "lenia_traj", &[Value::F32(state.clone()), Value::F32(kfft)],
+        )?;
+        let traj = out.pop().unwrap();
+        let final_state = out.pop().unwrap();
+        Ok((final_state, traj))
+    }
+
+    /// Cell updates per full run for an artifact (throughput denominators).
+    pub fn cell_updates(&self, artifact: &str, steps: usize) -> Result<f64> {
+        let info = self.engine.manifest().artifact(artifact)?;
+        let cells: usize = info.inputs[0].numel();
+        Ok(cells as f64 * steps as f64)
+    }
+}

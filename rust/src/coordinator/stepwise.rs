@@ -1,0 +1,162 @@
+//! Host-driven BPTT — the Figure-3-right baseline (TF-proxy).
+//!
+//! The CAX fast path fuses the whole rollout + backward pass into ONE XLA
+//! program (`mnist_train_step`). The baseline here reproduces the cost
+//! structure the paper attributes to the per-step-dispatch implementation:
+//! T forward executions (`mnist_step_fwd`) storing the trajectory on the
+//! host, a loss/cotangent execution (`mnist_final_grad`), then T VJP
+//! executions (`mnist_step_vjp`) accumulating parameter gradients on the
+//! host, and finally a host-side Adam update. Identical math, per-step
+//! dispatch + host round-trips — the measured gap isolates exactly the
+//! fusion mechanism (DESIGN.md §3).
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, Value};
+use crate::tensor::Tensor;
+
+/// Host-side Adam (matches `models/common.py::adam_update`).
+pub fn adam_update(params: &mut [f32], m: &mut [f32], v: &mut [f32],
+                   grads: &[f32], step: i32, lr: f32) {
+    let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+    let t = step as f32 + 1.0;
+    let bc1 = 1.0 - b1.powf(t);
+    let bc2 = 1.0 - b2.powf(t);
+    for i in 0..params.len() {
+        m[i] = b1 * m[i] + (1.0 - b1) * grads[i];
+        v[i] = b2 * v[i] + (1.0 - b2) * grads[i] * grads[i];
+        let m_hat = m[i] / bc1;
+        let v_hat = v[i] / bc2;
+        params[i] -= lr * m_hat / (v_hat.sqrt() + eps);
+    }
+}
+
+/// Clip a gradient vector to max global norm 1.0 (matches the artifact).
+pub fn clip_global_norm(grads: &mut [f32]) {
+    let norm: f32 =
+        grads.iter().map(|g| g * g).sum::<f32>().sqrt().max(1e-6);
+    if norm > 1.0 {
+        let scale = 1.0 / norm;
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+    }
+}
+
+/// One stepwise (host-driven) MNIST training step. Returns the loss.
+///
+/// `init_state` builds the initial NCA state from the digit batch on the
+/// host (channel 0 = digit, rest zero), mirroring `mnist_classify.init_state`.
+pub fn mnist_stepwise_train_step(
+    engine: &Engine,
+    params: &mut Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    step: i32,
+    digits: &Tensor,
+    labels1h: &Tensor,
+    lr: f32,
+    seed: u32,
+) -> Result<f64> {
+    let info = engine.manifest().artifact("mnist_step_fwd")?;
+    let state_spec = &info.inputs[1];
+    let (b, h, w, c) = (
+        state_spec.shape[0], state_spec.shape[1], state_spec.shape[2],
+        state_spec.shape[3],
+    );
+    let steps = info.meta_usize("steps").expect("mnist meta.steps");
+
+    // Host-side init_state: digit -> channel 0.
+    let mut state = Tensor::zeros(&[b, h, w, c]);
+    for i in 0..b {
+        for y in 0..h {
+            for x in 0..w {
+                state.set(&[i, y, x, 0], digits.at(&[i, y, x]));
+            }
+        }
+    }
+
+    // Forward: T dispatches, trajectory stored host-side.
+    let mut trajectory = Vec::with_capacity(steps + 1);
+    trajectory.push(state.clone());
+    for t in 0..steps {
+        let out = engine.execute(
+            "mnist_step_fwd",
+            &[
+                Value::F32(params.clone()),
+                Value::F32(state),
+                Value::F32(digits.clone()),
+                Value::U32(seed.wrapping_add(t as u32)),
+            ],
+        )?;
+        state = out.into_iter().next().unwrap();
+        trajectory.push(state.clone());
+    }
+
+    // Loss + readout cotangent.
+    let out = engine.execute(
+        "mnist_final_grad",
+        &[
+            Value::F32(trajectory[steps].clone()),
+            Value::F32(digits.clone()),
+            Value::F32(labels1h.clone()),
+        ],
+    )?;
+    let loss = out[0].data()[0] as f64;
+    let mut cotangent = out[1].clone();
+
+    // Backward: T VJP dispatches, accumulating parameter grads on host.
+    let n = params.numel();
+    let mut grads = vec![0.0f32; n];
+    for t in (0..steps).rev() {
+        let out = engine.execute(
+            "mnist_step_vjp",
+            &[
+                Value::F32(params.clone()),
+                Value::F32(trajectory[t].clone()),
+                Value::F32(digits.clone()),
+                Value::U32(seed.wrapping_add(t as u32)),
+                Value::F32(cotangent),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let dparams = it.next().unwrap();
+        cotangent = it.next().unwrap();
+        for (g, d) in grads.iter_mut().zip(dparams.data()) {
+            *g += d;
+        }
+    }
+
+    clip_global_norm(&mut grads);
+    adam_update(params.data_mut(), m.data_mut(), v.data_mut(), &grads, step,
+                lr);
+    Ok(loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_reduces_quadratic() {
+        let mut p = vec![5.0f32, -3.0];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        for step in 0..300 {
+            let g: Vec<f32> = p.iter().map(|x| 2.0 * x).collect();
+            adam_update(&mut p, &mut m, &mut v, &g, step, 0.1);
+        }
+        assert!(p.iter().all(|x| x.abs() < 0.5), "{p:?}");
+    }
+
+    #[test]
+    fn clip_caps_norm_at_one() {
+        let mut g = vec![3.0f32, 4.0];
+        clip_global_norm(&mut g);
+        let norm: f32 = g.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+        let mut small = vec![0.3f32, 0.4];
+        clip_global_norm(&mut small);
+        assert_eq!(small, vec![0.3, 0.4]);
+    }
+}

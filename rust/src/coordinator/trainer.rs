@@ -1,0 +1,208 @@
+//! Training orchestrator: drives the fused train-step artifacts.
+//!
+//! The artifact owns forward rollout, BPTT, gradient clipping, the lr
+//! schedule and Adam (all in-graph, DESIGN.md §4.2); this module owns
+//! everything around it: parameter/optimizer buffers, batch assembly, the
+//! sample pool, logging, checkpoints — the Layer-3 half of the paper's
+//! App. B training loop.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::History;
+use crate::runtime::{Engine, Value};
+use crate::tensor::Tensor;
+
+/// Train-loop configuration.
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub seed: u32,
+    pub log_every: usize,
+    /// Where to write loss CSV / checkpoints (None = no files).
+    pub out_dir: Option<PathBuf>,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg { steps: 200, seed: 0, log_every: 25, out_dir: None }
+    }
+}
+
+/// Parameters + Adam state, as the artifacts expect them.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub params: Tensor,
+    pub m: Tensor,
+    pub v: Tensor,
+    pub step: i32,
+}
+
+impl TrainState {
+    /// Fresh state from an initial-parameter blob.
+    pub fn from_blob(engine: &Engine, blob: &str) -> Result<TrainState> {
+        let params = engine.load_params(blob)?;
+        let n = params.numel();
+        Ok(TrainState {
+            params,
+            m: Tensor::zeros(&[n]),
+            v: Tensor::zeros(&[n]),
+            step: 0,
+        })
+    }
+
+    /// Save parameters as little-endian f32 (the blob format).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut bytes = Vec::with_capacity(self.params.numel() * 4);
+        for &v in self.params.data() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load parameters saved by [`TrainState::save`] (Adam state resets).
+    pub fn load(path: &Path) -> Result<TrainState> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("checkpoint {} has non-f32 size", path.display());
+        }
+        let params: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let n = params.len();
+        Ok(TrainState {
+            params: Tensor::new(vec![n], params)?,
+            m: Tensor::zeros(&[n]),
+            v: Tensor::zeros(&[n]),
+            step: 0,
+        })
+    }
+}
+
+/// One step's result handed to the observer callback.
+pub struct StepOutcome<'a> {
+    pub step: usize,
+    pub loss: f64,
+    /// Outputs beyond (params, m, v, loss) — e.g. pool write-back states.
+    pub extra: &'a [Tensor],
+}
+
+/// The generic fused-train-step driver.
+///
+/// Artifact contract: inputs `(params, m, v, step, <batch...>, seed)`,
+/// outputs `(params', m', v', loss, <extra...>)`. `batch_fn` supplies the
+/// per-step batch values; `observer` sees every step's loss and extra
+/// outputs (pool write-back etc.).
+pub fn train_loop<B, O>(
+    engine: &Engine,
+    artifact: &str,
+    state: &mut TrainState,
+    cfg: &TrainCfg,
+    mut batch_fn: B,
+    mut observer: O,
+) -> Result<History>
+where
+    B: FnMut(usize) -> Result<Vec<Value>>,
+    O: FnMut(StepOutcome<'_>) -> Result<()>,
+{
+    let info = engine.manifest().artifact(artifact)?;
+    if info.outputs.len() < 4 {
+        bail!("artifact {artifact} is not a train step (needs >= 4 outputs)");
+    }
+    let mut history = History::new(&format!("{artifact}/loss"));
+
+    for local in 0..cfg.steps {
+        let mut inputs = vec![
+            Value::F32(state.params.clone()),
+            Value::F32(state.m.clone()),
+            Value::F32(state.v.clone()),
+            Value::I32(state.step),
+        ];
+        inputs.extend(batch_fn(local)?);
+        inputs.push(Value::U32(cfg.seed.wrapping_add(local as u32)));
+
+        let mut out = engine
+            .execute(artifact, &inputs)
+            .with_context(|| format!("train step {local} of {artifact}"))?;
+        let extra = out.split_off(4);
+        let loss = out[3].data()[0] as f64;
+        if !loss.is_finite() {
+            bail!("{artifact}: loss diverged (step {local}: {loss})");
+        }
+        // out = [params', m', v', loss]; consume back-to-front.
+        out.pop(); // loss tensor already read
+        state.v = out.pop().unwrap();
+        state.m = out.pop().unwrap();
+        state.params = out.pop().unwrap();
+        state.step += 1;
+
+        history.push(state.step as u64, loss);
+        observer(StepOutcome { step: local, loss, extra: &extra })?;
+
+        if cfg.log_every > 0
+            && (local % cfg.log_every == 0 || local + 1 == cfg.steps)
+        {
+            let ema = history.ema(0.1);
+            println!(
+                "  [{artifact}] step {:>5}  loss {loss:.6}  (ema {:.6})",
+                state.step,
+                ema.last().copied().unwrap_or(loss),
+            );
+        }
+    }
+
+    if let Some(dir) = &cfg.out_dir {
+        history.write_csv(&dir.join(format!("{artifact}.loss.csv")))?;
+        state.save(&dir.join(format!("{artifact}.params.bin")))?;
+    }
+    Ok(history)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip_bits() {
+        let dir = std::env::temp_dir()
+            .join(format!("cax_trainer_{}", std::process::id()));
+        let path = dir.join("ck.bin");
+        let state = TrainState {
+            params: Tensor::new(vec![3], vec![1.5, -2.25, 0.0]).unwrap(),
+            m: Tensor::zeros(&[3]),
+            v: Tensor::zeros(&[3]),
+            step: 7,
+        };
+        state.save(&path).unwrap();
+        let loaded = TrainState::load(&path).unwrap();
+        assert!(loaded.params.bit_eq(&state.params));
+        assert_eq!(loaded.step, 0, "optimizer state resets");
+        assert_eq!(loaded.m.numel(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_non_f32_sized_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("cax_trainer_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 7]).unwrap();
+        assert!(TrainState::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn default_cfg_is_sane() {
+        let cfg = TrainCfg::default();
+        assert!(cfg.steps > 0 && cfg.log_every > 0);
+        assert!(cfg.out_dir.is_none());
+    }
+}

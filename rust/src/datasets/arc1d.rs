@@ -1,0 +1,787 @@
+//! Procedural 1D-ARC task generators — all 18 task types of Table 2.
+//!
+//! The real 1D-ARC dataset (Xu et al. 2024) is not redistributable here;
+//! these generators produce train/test splits for the same 18 task names
+//! with the same structure: rows of colored pixels (0 = background, 1-9 =
+//! colors), a deterministic input -> target transformation per task, and
+//! disjoint seeds between splits so solving the test set requires learning
+//! the *rule*, not memorizing examples (DESIGN.md §3).
+//!
+//! Conventions shared by every generator: block = maximal run of a single
+//! non-background color; generated examples always fit the row with at
+//! least one background cell of margin where the task needs room to move.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub const NUM_COLORS: usize = 10; // 0 = background + 9 palette colors
+
+/// One input/target example.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Example {
+    pub input: Vec<u8>,
+    pub target: Vec<u8>,
+}
+
+/// The 18 task types of paper Table 2, in its row order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    Move1,
+    Move2,
+    Move3,
+    MoveDynamic,
+    Move2Towards,
+    Fill,
+    PaddedFill,
+    Hollow,
+    Flip,
+    Mirror,
+    Denoise,
+    DenoiseMulticolor,
+    PatternCopy,
+    PatternCopyMulticolor,
+    RecolorOddEven,
+    RecolorSize,
+    RecolorSizeCmp,
+    Scaling,
+}
+
+impl Task {
+    pub const ALL: [Task; 18] = [
+        Task::Move1,
+        Task::Move2,
+        Task::Move3,
+        Task::MoveDynamic,
+        Task::Move2Towards,
+        Task::Fill,
+        Task::PaddedFill,
+        Task::Hollow,
+        Task::Flip,
+        Task::Mirror,
+        Task::Denoise,
+        Task::DenoiseMulticolor,
+        Task::PatternCopy,
+        Task::PatternCopyMulticolor,
+        Task::RecolorOddEven,
+        Task::RecolorSize,
+        Task::RecolorSizeCmp,
+        Task::Scaling,
+    ];
+
+    /// Paper Table 2 row label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Move1 => "Move 1",
+            Task::Move2 => "Move 2",
+            Task::Move3 => "Move 3",
+            Task::MoveDynamic => "Move Dynamic",
+            Task::Move2Towards => "Move 2 Towards",
+            Task::Fill => "Fill",
+            Task::PaddedFill => "Padded Fill",
+            Task::Hollow => "Hollow",
+            Task::Flip => "Flip",
+            Task::Mirror => "Mirror",
+            Task::Denoise => "Denoise",
+            Task::DenoiseMulticolor => "Denoise Multicolor",
+            Task::PatternCopy => "Pattern Copy",
+            Task::PatternCopyMulticolor => "Pattern Copy Multicolor",
+            Task::RecolorOddEven => "Recolor by Odd Even",
+            Task::RecolorSize => "Recolor by Size",
+            Task::RecolorSizeCmp => "Recolor by Size Comparison",
+            Task::Scaling => "Scaling",
+        }
+    }
+
+    /// GPT-4 direct-grid accuracy (%), copied from the paper's Table 2
+    /// (itself from Xu et al. 2024 Appendix A).
+    pub fn gpt4_accuracy(&self) -> f64 {
+        match self {
+            Task::Move1 => 66.0,
+            Task::Move2 => 26.0,
+            Task::Move3 => 24.0,
+            Task::MoveDynamic => 22.0,
+            Task::Move2Towards => 34.0,
+            Task::Fill => 66.0,
+            Task::PaddedFill => 26.0,
+            Task::Hollow => 56.0,
+            Task::Flip => 70.0,
+            Task::Mirror => 20.0,
+            Task::Denoise => 36.0,
+            Task::DenoiseMulticolor => 60.0,
+            Task::PatternCopy => 36.0,
+            Task::PatternCopyMulticolor => 38.0,
+            Task::RecolorOddEven => 32.0,
+            Task::RecolorSize => 28.0,
+            Task::RecolorSizeCmp => 20.0,
+            Task::Scaling => 88.0,
+        }
+    }
+
+    /// NCA accuracy (%) the paper reports (Table 2), for shape comparison.
+    pub fn paper_nca_accuracy(&self) -> f64 {
+        match self {
+            Task::Move1 => 100.0,
+            Task::Move2 => 100.0,
+            Task::Move3 => 100.0,
+            Task::MoveDynamic => 12.0,
+            Task::Move2Towards => 98.0,
+            Task::Fill => 66.0,
+            Task::PaddedFill => 28.0,
+            Task::Hollow => 98.0,
+            Task::Flip => 28.0,
+            Task::Mirror => 6.0,
+            Task::Denoise => 100.0,
+            Task::DenoiseMulticolor => 58.0,
+            Task::PatternCopy => 100.0,
+            Task::PatternCopyMulticolor => 100.0,
+            Task::RecolorOddEven => 0.0,
+            Task::RecolorSize => 0.0,
+            Task::RecolorSizeCmp => 0.0,
+            Task::Scaling => 88.0,
+        }
+    }
+
+    /// Generate one example on a row of `width` cells.
+    pub fn generate(&self, width: usize, rng: &mut Rng) -> Example {
+        assert!(width >= 16, "1D-ARC rows need width >= 16, got {width}");
+        match self {
+            Task::Move1 => gen_move(width, 1, rng),
+            Task::Move2 => gen_move(width, 2, rng),
+            Task::Move3 => gen_move(width, 3, rng),
+            Task::MoveDynamic => gen_move_dynamic(width, rng),
+            Task::Move2Towards => gen_move_towards(width, rng),
+            Task::Fill => gen_fill(width, rng),
+            Task::PaddedFill => gen_padded_fill(width, rng),
+            Task::Hollow => gen_hollow(width, rng),
+            Task::Flip => gen_flip(width, rng),
+            Task::Mirror => gen_mirror(width, rng),
+            Task::Denoise => gen_denoise(width, false, rng),
+            Task::DenoiseMulticolor => gen_denoise(width, true, rng),
+            Task::PatternCopy => gen_pattern_copy(width, false, rng),
+            Task::PatternCopyMulticolor => gen_pattern_copy(width, true, rng),
+            Task::RecolorOddEven => gen_recolor_odd_even(width, rng),
+            Task::RecolorSize => gen_recolor_size(width, rng),
+            Task::RecolorSizeCmp => gen_recolor_size_cmp(width, rng),
+            Task::Scaling => gen_scaling(width, rng),
+        }
+    }
+
+    /// A train/test split with disjoint RNG streams.
+    pub fn dataset(&self, width: usize, train: usize, test: usize,
+                   seed: u64) -> (Vec<Example>, Vec<Example>) {
+        let mut train_rng = Rng::new(seed).fold_in(0xA11CE);
+        let mut test_rng = Rng::new(seed).fold_in(0xB0B);
+        let train_set =
+            (0..train).map(|_| self.generate(width, &mut train_rng)).collect();
+        let test_set =
+            (0..test).map(|_| self.generate(width, &mut test_rng)).collect();
+        (train_set, test_set)
+    }
+}
+
+fn color(rng: &mut Rng) -> u8 {
+    rng.range(1, NUM_COLORS) as u8
+}
+
+fn color_except(rng: &mut Rng, avoid: u8) -> u8 {
+    loop {
+        let c = color(rng);
+        if c != avoid {
+            return c;
+        }
+    }
+}
+
+// -------------------------------------------------------------- movement
+
+fn gen_move(width: usize, shift: usize, rng: &mut Rng) -> Example {
+    let len = rng.range(2, 6);
+    let start = rng.range(0, width - len - shift);
+    let c = color(rng);
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    for i in 0..len {
+        input[start + i] = c;
+        target[start + shift + i] = c;
+    }
+    Example { input, target }
+}
+
+/// Block slides right until it touches a marker pixel.
+fn gen_move_dynamic(width: usize, rng: &mut Rng) -> Example {
+    let len = rng.range(2, 5);
+    let start = rng.range(0, width / 2 - len);
+    let gap = rng.range(2, width - (start + len) - 1 - 1);
+    let marker_pos = start + len + gap;
+    let c = color(rng);
+    let mc = color_except(rng, c);
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    for i in 0..len {
+        input[start + i] = c;
+        target[marker_pos - len + i] = c; // flush against the marker
+    }
+    input[marker_pos] = mc;
+    target[marker_pos] = mc;
+    Example { input, target }
+}
+
+/// Block moves 2 cells toward a marker (either side).
+fn gen_move_towards(width: usize, rng: &mut Rng) -> Example {
+    let len = rng.range(2, 5);
+    let c = color(rng);
+    let mc = color_except(rng, c);
+    let marker_right = rng.bool();
+    // Marker within a short range of the block (the original 1D-ARC rows
+    // are narrow; the direction cue is local-ish).
+    let (start, marker_pos) = if marker_right {
+        let start = rng.range(1, (width - len - 9).max(2));
+        let marker = (start + len + rng.range(3, 9)).min(width - 1);
+        (start, marker)
+    } else {
+        let marker = rng.range(0, (width - len - 12).max(1));
+        let start = marker + rng.range(3, 9);
+        (start, marker)
+    };
+    let shift: isize = if marker_right { 2 } else { -2 };
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    for i in 0..len {
+        input[start + i] = c;
+        target[(start as isize + shift) as usize + i] = c;
+    }
+    input[marker_pos] = mc;
+    target[marker_pos] = mc;
+    Example { input, target }
+}
+
+// -------------------------------------------------------------- fill family
+
+fn gen_fill(width: usize, rng: &mut Rng) -> Example {
+    let len = rng.range(4, 9);
+    let start = rng.range(0, width - len);
+    let c = color(rng);
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    input[start] = c;
+    input[start + len - 1] = c;
+    for i in 0..len {
+        target[start + i] = c;
+    }
+    Example { input, target }
+}
+
+/// Two hollow segments; only the *inside* of each is filled.
+fn gen_padded_fill(width: usize, rng: &mut Rng) -> Example {
+    let c = color(rng);
+    let len1 = rng.range(3, 6);
+    let len2 = rng.range(3, 6);
+    let start1 = rng.range(0, width / 2 - len1);
+    let start2 = rng.range(width / 2 + 1, width - len2);
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    for (start, len) in [(start1, len1), (start2, len2)] {
+        input[start] = c;
+        input[start + len - 1] = c;
+        for i in 1..len - 1 {
+            target[start + i] = c; // interior only: endpoints stay hollow
+        }
+    }
+    Example { input, target }
+}
+
+fn gen_hollow(width: usize, rng: &mut Rng) -> Example {
+    let len = rng.range(4, 9);
+    let start = rng.range(0, width - len);
+    let c = color(rng);
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    for i in 0..len {
+        input[start + i] = c;
+    }
+    target[start] = c;
+    target[start + len - 1] = c;
+    Example { input, target }
+}
+
+// -------------------------------------------------------------- symmetry
+
+/// A two-color block (head of one color, body of another) reverses in place.
+fn gen_flip(width: usize, rng: &mut Rng) -> Example {
+    let len = rng.range(3, 7);
+    let start = rng.range(0, width - len);
+    let head = color(rng);
+    let body = color_except(rng, head);
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    input[start] = head;
+    target[start + len - 1] = head;
+    for i in 1..len {
+        input[start + i] = body;
+        target[start + i - 1] = body;
+    }
+    Example { input, target }
+}
+
+/// The whole row is mirrored around a fixed pivot marker.
+fn gen_mirror(width: usize, rng: &mut Rng) -> Example {
+    let pivot = width / 2;
+    let mc = 5u8;
+    let len = rng.range(2, 5);
+    let side_left = rng.bool();
+    let c = color_except(rng, mc);
+    let offset = rng.range(2, pivot - len);
+    let start = if side_left { pivot - offset - len } else { pivot + offset };
+    let mut input = vec![0u8; width];
+    input[pivot] = mc;
+    for i in 0..len {
+        input[start + i] = c;
+    }
+    let mut target = vec![0u8; width];
+    target[pivot] = mc;
+    for (x, &v) in input.iter().enumerate() {
+        if v != 0 && x != pivot {
+            let mirrored = (2 * pivot) as isize - x as isize;
+            if mirrored >= 0 && (mirrored as usize) < width {
+                target[mirrored as usize] = v;
+            }
+        }
+    }
+    Example { input, target }
+}
+
+// -------------------------------------------------------------- denoise
+
+fn gen_denoise(width: usize, multicolor: bool, rng: &mut Rng) -> Example {
+    let len = rng.range(4, 8);
+    let start = rng.range(2, width - len - 2);
+    let c = color(rng);
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    for i in 0..len {
+        input[start + i] = c;
+        target[start + i] = c;
+    }
+    // Scatter isolated noise pixels away from the block.
+    let noise_n = rng.range(2, 5);
+    let mut placed = 0;
+    let mut guard = 0;
+    while placed < noise_n && guard < 100 {
+        guard += 1;
+        let pos = rng.range(0, width);
+        let clear = input[pos] == 0
+            && (pos == 0 || input[pos - 1] == 0)
+            && (pos + 1 >= width || input[pos + 1] == 0);
+        // keep noise detached from the block so "isolated pixel" stays true
+        if clear && (pos + 1 < start || pos > start + len) {
+            input[pos] = if multicolor { color_except(rng, c) } else { c };
+            placed += 1;
+        }
+    }
+    Example { input, target }
+}
+
+// -------------------------------------------------------------- patterns
+
+fn gen_pattern_copy(width: usize, multicolor: bool, rng: &mut Rng) -> Example {
+    let len = rng.range(3, 6);
+    let c = color_except(rng, 5); // 5 is reserved for the marker
+    let pattern: Vec<u8> = (0..len)
+        .map(|_| if multicolor { color_except(rng, 5) } else { c })
+        .collect();
+    // The original 1D-ARC rows are ~10-20 px with the destination marker a
+    // short gap after the pattern; keep that geometry (gap 2..6) rather
+    // than scattering the marker across the row. Clamp for narrow rows.
+    let len = len.min(width.saturating_sub(8) / 2).max(2);
+    let gap = rng.range(2, 7);
+    let start = rng.range(0, (width - 2 * len - gap).max(1));
+    let dst = start + len + gap;
+    let marker = 5u8;
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    for i in 0..len {
+        input[start + i] = pattern[i];
+        target[start + i] = pattern[i];
+        target[dst + i] = pattern[i];
+    }
+    input[dst] = marker; // destination marker
+    Example { input, target }
+}
+
+// -------------------------------------------------------------- recolor
+
+/// Blocks recolored by length parity: odd -> color 1, even -> color 2.
+fn gen_recolor_odd_even(width: usize, rng: &mut Rng) -> Example {
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    let mut x = rng.range(0, 3);
+    let c = color(rng);
+    while x + 4 < width {
+        let len = rng.range(1, 5);
+        if x + len >= width {
+            break;
+        }
+        for i in 0..len {
+            input[x + i] = c;
+            target[x + i] = if len % 2 == 1 { 1 } else { 2 };
+        }
+        x += len + rng.range(2, 5);
+    }
+    Example { input, target }
+}
+
+/// Blocks recolored by absolute size: 1 -> color 1, 2 -> 2, ..., 4 -> 4.
+fn gen_recolor_size(width: usize, rng: &mut Rng) -> Example {
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    let mut x = rng.range(0, 3);
+    let c = color(rng);
+    while x + 5 < width {
+        let len = rng.range(1, 5);
+        if x + len >= width {
+            break;
+        }
+        for i in 0..len {
+            input[x + i] = c;
+            target[x + i] = len as u8;
+        }
+        x += len + rng.range(2, 5);
+    }
+    Example { input, target }
+}
+
+/// Exactly two blocks; the longer one -> color 3, the shorter -> color 6.
+fn gen_recolor_size_cmp(width: usize, rng: &mut Rng) -> Example {
+    let len_a = rng.range(2, 7);
+    let len_b = loop {
+        let l = rng.range(2, 7);
+        if l != len_a {
+            break l;
+        }
+    };
+    let c = color(rng);
+    let start_a = rng.range(0, width / 2 - len_a);
+    let start_b = rng.range(width / 2 + 1, width - len_b);
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    for i in 0..len_a {
+        input[start_a + i] = c;
+        target[start_a + i] = if len_a > len_b { 3 } else { 6 };
+    }
+    for i in 0..len_b {
+        input[start_b + i] = c;
+        target[start_b + i] = if len_b > len_a { 3 } else { 6 };
+    }
+    Example { input, target }
+}
+
+/// Block length doubles, anchored at its left edge.
+fn gen_scaling(width: usize, rng: &mut Rng) -> Example {
+    let len = rng.range(2, 6);
+    let start = rng.range(0, width - 2 * len);
+    let c = color(rng);
+    let mut input = vec![0u8; width];
+    let mut target = vec![0u8; width];
+    for i in 0..len {
+        input[start + i] = c;
+    }
+    for i in 0..2 * len {
+        target[start + i] = c;
+    }
+    Example { input, target }
+}
+
+// -------------------------------------------------------------- encoding
+
+/// One-hot encode a batch of rows into the artifact layout [B, W, 10].
+pub fn one_hot_batch(rows: &[&[u8]], width: usize) -> Tensor {
+    let b = rows.len();
+    let mut t = Tensor::zeros(&[b, width, NUM_COLORS]);
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.len(), width);
+        for (x, &c) in row.iter().enumerate() {
+            t.set(&[i, x, c as usize], 1.0);
+        }
+    }
+    t
+}
+
+/// Decode per-cell color logits [B, W, 10] back to color rows by argmax.
+pub fn argmax_colors(logits: &Tensor) -> Vec<Vec<u8>> {
+    let (b, w, nc) =
+        (logits.shape()[0], logits.shape()[1], logits.shape()[2]);
+    (0..b)
+        .map(|i| {
+            (0..w)
+                .map(|x| {
+                    let mut best = 0usize;
+                    let mut best_v = f32::NEG_INFINITY;
+                    for c in 0..nc {
+                        let v = logits.at(&[i, x, c]);
+                        if v > best_v {
+                            best_v = v;
+                            best = c;
+                        }
+                    }
+                    best as u8
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blocks(row: &[u8]) -> Vec<(usize, usize, u8)> {
+        // (start, len, color) of maximal non-zero runs
+        let mut out = vec![];
+        let mut i = 0;
+        while i < row.len() {
+            if row[i] != 0 {
+                let c = row[i];
+                let start = i;
+                while i < row.len() && row[i] == c {
+                    i += 1;
+                }
+                out.push((start, i - start, c));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn all_tasks_generate_valid_examples() {
+        let mut rng = Rng::new(1);
+        for task in Task::ALL {
+            for _ in 0..50 {
+                let ex = task.generate(32, &mut rng);
+                assert_eq!(ex.input.len(), 32, "{}", task.name());
+                assert_eq!(ex.target.len(), 32, "{}", task.name());
+                assert!(ex.input.iter().any(|&c| c != 0), "{}", task.name());
+                assert!(
+                    ex.input.iter().all(|&c| (c as usize) < NUM_COLORS),
+                    "{}", task.name()
+                );
+                assert!(
+                    ex.target.iter().all(|&c| (c as usize) < NUM_COLORS),
+                    "{}", task.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn move_tasks_shift_exactly() {
+        let mut rng = Rng::new(2);
+        for (task, shift) in [(Task::Move1, 1usize), (Task::Move2, 2),
+                              (Task::Move3, 3)] {
+            for _ in 0..30 {
+                let ex = task.generate(32, &mut rng);
+                let mut shifted = vec![0u8; 32];
+                for (i, &c) in ex.input.iter().enumerate() {
+                    if c != 0 {
+                        shifted[i + shift] = c;
+                    }
+                }
+                assert_eq!(shifted, ex.target, "{}", task.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fill_produces_solid_block() {
+        let mut rng = Rng::new(3);
+        for _ in 0..30 {
+            let ex = Task::Fill.generate(32, &mut rng);
+            let ib = blocks(&ex.input);
+            let tb = blocks(&ex.target);
+            assert_eq!(ib.len(), 2); // two endpoints
+            assert_eq!(tb.len(), 1); // one solid block
+            let (start, len, c) = tb[0];
+            assert_eq!(ib[0].0, start);
+            assert_eq!(ib[1].0 + ib[1].1, start + len);
+            assert_eq!(ib[0].2, c);
+        }
+    }
+
+    #[test]
+    fn hollow_keeps_only_endpoints() {
+        let mut rng = Rng::new(4);
+        for _ in 0..30 {
+            let ex = Task::Hollow.generate(32, &mut rng);
+            let ib = blocks(&ex.input);
+            assert_eq!(ib.len(), 1);
+            let (start, len, c) = ib[0];
+            let live: Vec<usize> = ex
+                .target
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0)
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(live, vec![start, start + len - 1]);
+            assert_eq!(ex.target[start], c);
+        }
+    }
+
+    #[test]
+    fn denoise_removes_isolated_pixels() {
+        let mut rng = Rng::new(5);
+        for multicolor in [false, true] {
+            let task = if multicolor { Task::DenoiseMulticolor }
+                       else { Task::Denoise };
+            for _ in 0..30 {
+                let ex = task.generate(32, &mut rng);
+                let tb = blocks(&ex.target);
+                assert_eq!(tb.len(), 1, "target must be just the block");
+                assert!(tb[0].1 >= 4);
+                // The block survives unchanged.
+                let (start, len, c) = tb[0];
+                for i in 0..len {
+                    assert_eq!(ex.input[start + i], c);
+                }
+                // Input must actually contain noise.
+                let in_blocks = blocks(&ex.input);
+                assert!(in_blocks.len() > 1, "no noise generated");
+            }
+        }
+    }
+
+    #[test]
+    fn mirror_is_involution_about_pivot() {
+        let mut rng = Rng::new(6);
+        for _ in 0..30 {
+            let ex = Task::Mirror.generate(33, &mut rng);
+            let pivot = 16usize;
+            assert_eq!(ex.input[pivot], ex.target[pivot]);
+            for x in 0..33usize {
+                if x == pivot {
+                    continue;
+                }
+                let m = 2 * pivot as isize - x as isize;
+                if m >= 0 && (m as usize) < 33 {
+                    assert_eq!(ex.input[x], ex.target[m as usize]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flip_reverses_block() {
+        let mut rng = Rng::new(7);
+        for _ in 0..30 {
+            let ex = Task::Flip.generate(32, &mut rng);
+            let ib = blocks_span(&ex.input);
+            let tb = blocks_span(&ex.target);
+            assert_eq!(ib, tb, "span must not move");
+            let (s, e) = ib;
+            let rev: Vec<u8> = ex.input[s..e].iter().rev().copied().collect();
+            assert_eq!(&ex.target[s..e], &rev[..]);
+        }
+    }
+
+    fn blocks_span(row: &[u8]) -> (usize, usize) {
+        let first = row.iter().position(|&c| c != 0).unwrap();
+        let last = row.iter().rposition(|&c| c != 0).unwrap();
+        (first, last + 1)
+    }
+
+    #[test]
+    fn pattern_copy_duplicates_pattern() {
+        let mut rng = Rng::new(8);
+        for multicolor in [false, true] {
+            let task = if multicolor { Task::PatternCopyMulticolor }
+                       else { Task::PatternCopy };
+            for _ in 0..30 {
+                let ex = task.generate(32, &mut rng);
+                // Target contains the input pattern twice.
+                let tb = blocks(&ex.target);
+                assert!(tb.len() >= 2 || multicolor,
+                        "expected two copies: {:?}", ex.target);
+            }
+        }
+    }
+
+    #[test]
+    fn recolor_size_cmp_two_blocks_distinct_colors() {
+        let mut rng = Rng::new(9);
+        for _ in 0..30 {
+            let ex = Task::RecolorSizeCmp.generate(32, &mut rng);
+            let ib = blocks(&ex.input);
+            let tb = blocks(&ex.target);
+            assert_eq!(ib.len(), 2);
+            assert_eq!(tb.len(), 2);
+            // Same geometry.
+            assert_eq!((ib[0].0, ib[0].1), (tb[0].0, tb[0].1));
+            assert_eq!((ib[1].0, ib[1].1), (tb[1].0, tb[1].1));
+            // Longer -> 3, shorter -> 6.
+            let (long, short) = if ib[0].1 > ib[1].1 { (0, 1) } else { (1, 0) };
+            assert_eq!(tb[long].2, 3);
+            assert_eq!(tb[short].2, 6);
+        }
+    }
+
+    #[test]
+    fn recolor_odd_even_parity() {
+        let mut rng = Rng::new(10);
+        for _ in 0..30 {
+            let ex = Task::RecolorOddEven.generate(32, &mut rng);
+            let ib = blocks(&ex.input);
+            let tb = blocks(&ex.target);
+            assert_eq!(ib.len(), tb.len());
+            for (i, t) in ib.iter().zip(&tb) {
+                assert_eq!(t.2, if i.1 % 2 == 1 { 1 } else { 2 });
+            }
+        }
+    }
+
+    #[test]
+    fn scaling_doubles_length() {
+        let mut rng = Rng::new(11);
+        for _ in 0..30 {
+            let ex = Task::Scaling.generate(32, &mut rng);
+            let ib = blocks(&ex.input);
+            let tb = blocks(&ex.target);
+            assert_eq!(ib.len(), 1);
+            assert_eq!(tb.len(), 1);
+            assert_eq!(tb[0].1, 2 * ib[0].1);
+            assert_eq!(tb[0].0, ib[0].0);
+            assert_eq!(tb[0].2, ib[0].2);
+        }
+    }
+
+    #[test]
+    fn datasets_deterministic_and_disjoint() {
+        let (tr1, te1) = Task::Move2.dataset(32, 10, 10, 42);
+        let (tr2, te2) = Task::Move2.dataset(32, 10, 10, 42);
+        assert_eq!(tr1, tr2);
+        assert_eq!(te1, te2);
+        let (tr3, _) = Task::Move2.dataset(32, 10, 10, 43);
+        assert_ne!(tr1, tr3);
+        // Train and test streams differ.
+        assert_ne!(tr1, te1);
+    }
+
+    #[test]
+    fn one_hot_roundtrip() {
+        let rows: Vec<Vec<u8>> = vec![vec![0, 3, 3, 0, 7], vec![1, 0, 0, 9, 0]];
+        let refs: Vec<&[u8]> = rows.iter().map(|r| r.as_slice()).collect();
+        let t = one_hot_batch(&refs, 5);
+        assert_eq!(t.shape(), &[2, 5, 10]);
+        let decoded = argmax_colors(&t);
+        assert_eq!(decoded, rows);
+    }
+
+    #[test]
+    fn gpt4_total_matches_paper() {
+        let total: f64 = Task::ALL.iter().map(|t| t.gpt4_accuracy()).sum();
+        assert!((total / 18.0 - 41.56).abs() < 0.5,
+                "GPT-4 mean {}", total / 18.0);
+        let nca: f64 = Task::ALL.iter().map(|t| t.paper_nca_accuracy()).sum();
+        assert!((nca / 18.0 - 60.12).abs() < 0.5, "NCA mean {}", nca / 18.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Synthetic MNIST-role digit corpus (DESIGN.md §3 substitution).
+//!
+//! No network access, so we synthesize a labelled 10-class digit-shaped
+//! corpus: a 5x7 glyph font rendered into H x W with random scale, offset,
+//! stroke dilation and pixel noise. The self-classifying / auto-encoding
+//! NCAs only need visually-varied digit shapes with labels; class-boundary
+//! topology (loops in 0/6/8/9, strokes elsewhere) is preserved.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// 5x7 bitmap font, row-major, one string per digit.
+const GLYPHS: [[&str; 7]; 10] = [
+    [
+        "01110", "10001", "10011", "10101", "11001", "10001", "01110",
+    ], // 0
+    [
+        "00100", "01100", "00100", "00100", "00100", "00100", "01110",
+    ], // 1
+    [
+        "01110", "10001", "00001", "00110", "01000", "10000", "11111",
+    ], // 2
+    [
+        "11110", "00001", "00001", "01110", "00001", "00001", "11110",
+    ], // 3
+    [
+        "00010", "00110", "01010", "10010", "11111", "00010", "00010",
+    ], // 4
+    [
+        "11111", "10000", "11110", "00001", "00001", "10001", "01110",
+    ], // 5
+    [
+        "00110", "01000", "10000", "11110", "10001", "10001", "01110",
+    ], // 6
+    [
+        "11111", "00001", "00010", "00100", "01000", "01000", "01000",
+    ], // 7
+    [
+        "01110", "10001", "10001", "01110", "10001", "10001", "01110",
+    ], // 8
+    [
+        "01110", "10001", "10001", "01111", "00001", "00010", "01100",
+    ], // 9
+];
+
+/// One labelled digit image.
+#[derive(Clone, Debug)]
+pub struct Digit {
+    /// f32[H, W] intensities in [0, 1].
+    pub image: Tensor,
+    pub label: u8,
+}
+
+/// Generator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MnistConfig {
+    pub height: usize,
+    pub width: usize,
+    /// Max random translation (cells) applied to the glyph.
+    pub max_shift: usize,
+    /// Probability of stroke dilation (thicker digits).
+    pub dilate_prob: f32,
+    /// Per-pixel noise amplitude.
+    pub noise: f32,
+}
+
+impl MnistConfig {
+    pub fn for_grid(height: usize, width: usize) -> MnistConfig {
+        MnistConfig {
+            height,
+            width,
+            max_shift: (height.min(width) / 8).max(1),
+            dilate_prob: 0.4,
+            noise: 0.05,
+        }
+    }
+}
+
+/// Render one digit with random augmentations.
+pub fn render_digit(label: u8, cfg: &MnistConfig, rng: &mut Rng) -> Digit {
+    assert!(label < 10);
+    assert!(cfg.height >= 8 && cfg.width >= 8, "grid too small for glyphs");
+    let glyph = &GLYPHS[label as usize];
+
+    // Base scale: fill ~70% of the grid.
+    let scale_y = (cfg.height as f32 * 0.75) / 7.0;
+    let scale_x = (cfg.width as f32 * 0.75) / 5.0;
+    let scale = scale_y.min(scale_x) * (0.85 + 0.3 * rng.next_f32());
+    let gh = (7.0 * scale).round() as usize;
+    let gw = (5.0 * scale).round() as usize;
+    let gh = gh.clamp(6, cfg.height);
+    let gw = gw.clamp(4, cfg.width);
+
+    let max_dy = (cfg.height - gh).min(cfg.max_shift * 2);
+    let max_dx = (cfg.width - gw).min(cfg.max_shift * 2);
+    let y0 = (cfg.height - gh) / 2
+        + if max_dy > 0 { rng.range(0, max_dy + 1) } else { 0 }
+        - max_dy / 2;
+    let x0 = (cfg.width - gw) / 2
+        + if max_dx > 0 { rng.range(0, max_dx + 1) } else { 0 }
+        - max_dx / 2;
+
+    let mut img = Tensor::zeros(&[cfg.height, cfg.width]);
+    for gy in 0..gh {
+        for gx in 0..gw {
+            let sy = (gy * 7) / gh;
+            let sx = (gx * 5) / gw;
+            if glyph[sy].as_bytes()[sx] == b'1' {
+                img.set(&[y0 + gy, x0 + gx], 1.0);
+            }
+        }
+    }
+
+    // Optional stroke dilation.
+    if rng.bernoulli(cfg.dilate_prob) {
+        let src = img.clone();
+        for y in 0..cfg.height {
+            for x in 0..cfg.width.saturating_sub(1) {
+                if src.at(&[y, x]) > 0.5 {
+                    img.set(&[y, x + 1], 1.0);
+                }
+            }
+        }
+    }
+
+    // Intensity jitter + noise on ink pixels only (background stays 0 so
+    // alive-masking still works).
+    for y in 0..cfg.height {
+        for x in 0..cfg.width {
+            let v = img.at(&[y, x]);
+            if v > 0.0 {
+                let jitter = 1.0 - cfg.noise * rng.next_f32();
+                img.set(&[y, x], (v * jitter).clamp(0.2, 1.0));
+            }
+        }
+    }
+
+    Digit { image: img, label }
+}
+
+/// A deterministic labelled dataset.
+pub fn dataset(n: usize, cfg: &MnistConfig, seed: u64) -> Vec<Digit> {
+    let mut rng = Rng::new(seed).fold_in(0xD161);
+    (0..n)
+        .map(|i| render_digit((i % 10) as u8, cfg, &mut rng))
+        .collect()
+}
+
+/// Pack digit images into the artifact layout [B, H, W].
+pub fn batch_images(digits: &[&Digit]) -> Tensor {
+    let parts: Vec<Tensor> =
+        digits.iter().map(|d| d.image.clone()).collect();
+    Tensor::stack(&parts).expect("batch_images: inconsistent shapes")
+}
+
+/// One-hot labels [B, 10].
+pub fn batch_labels(digits: &[&Digit]) -> Tensor {
+    let mut t = Tensor::zeros(&[digits.len(), 10]);
+    for (i, d) in digits.iter().enumerate() {
+        t.set(&[i, d.label as usize], 1.0);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_digits() {
+        let cfg = MnistConfig::for_grid(16, 16);
+        let mut rng = Rng::new(1);
+        for label in 0..10u8 {
+            let d = render_digit(label, &cfg, &mut rng);
+            assert_eq!(d.image.shape(), &[16, 16]);
+            assert_eq!(d.label, label);
+            let ink: usize =
+                d.image.data().iter().filter(|&&v| v > 0.0).count();
+            assert!(ink >= 10, "digit {label} too sparse: {ink}");
+            assert!(ink < 200, "digit {label} too dense: {ink}");
+        }
+    }
+
+    #[test]
+    fn intensities_in_range() {
+        let cfg = MnistConfig::for_grid(20, 20);
+        let mut rng = Rng::new(2);
+        for label in 0..10u8 {
+            let d = render_digit(label, &cfg, &mut rng);
+            for &v in d.image.data() {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = MnistConfig::for_grid(16, 16);
+        let a = dataset(20, &cfg, 7);
+        let b = dataset(20, &cfg, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.image.bit_eq(&y.image));
+            assert_eq!(x.label, y.label);
+        }
+        let c = dataset(20, &cfg, 8);
+        assert!(a.iter().zip(&c).any(|(x, y)| !x.image.bit_eq(&y.image)));
+    }
+
+    #[test]
+    fn labels_cycle() {
+        let cfg = MnistConfig::for_grid(16, 16);
+        let d = dataset(25, &cfg, 3);
+        for (i, digit) in d.iter().enumerate() {
+            assert_eq!(digit.label as usize, i % 10);
+        }
+    }
+
+    #[test]
+    fn augmentation_varies_images() {
+        let cfg = MnistConfig::for_grid(16, 16);
+        let mut rng = Rng::new(4);
+        let a = render_digit(3, &cfg, &mut rng);
+        let b = render_digit(3, &cfg, &mut rng);
+        assert!(!a.image.bit_eq(&b.image), "augmentation had no effect");
+    }
+
+    #[test]
+    fn batching_layouts() {
+        let cfg = MnistConfig::for_grid(12, 12);
+        let ds = dataset(4, &cfg, 5);
+        let refs: Vec<&Digit> = ds.iter().collect();
+        let imgs = batch_images(&refs);
+        let labels = batch_labels(&refs);
+        assert_eq!(imgs.shape(), &[4, 12, 12]);
+        assert_eq!(labels.shape(), &[4, 10]);
+        for i in 0..4 {
+            assert_eq!(labels.at(&[i, i]), 1.0); // labels cycle 0,1,2,3
+            let row_sum: f32 =
+                (0..10).map(|c| labels.at(&[i, c])).sum();
+            assert_eq!(row_sum, 1.0);
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Procedural RGBA target sprites (the emoji-role substitution, DESIGN.md §3).
+//!
+//! The growing/conditional/diffusing NCAs need RGBA targets with an alpha
+//! mask; Fig. 5's damage protocol additionally needs an appendage to
+//! amputate. `lizard` is a gecko-like body + tail + legs blob; `heart` and
+//! `square` round out the conditional-NCA goal set.
+
+use crate::tensor::Tensor;
+
+/// Available sprites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sprite {
+    Lizard,
+    Heart,
+    Square,
+}
+
+impl Sprite {
+    pub const ALL: [Sprite; 3] = [Sprite::Lizard, Sprite::Heart, Sprite::Square];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Sprite::Lizard => "lizard",
+            Sprite::Heart => "heart",
+            Sprite::Square => "square",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Sprite> {
+        Sprite::ALL.iter().copied().find(|s| s.name() == name)
+    }
+
+    /// Render as RGBA f32[H, W, 4]; alpha in {0, 1}, premultiplied colors.
+    pub fn render(&self, h: usize, w: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[h, w, 4]);
+        let set_px = |t: &mut Tensor, y: usize, x: usize, rgb: [f32; 3]| {
+            if y < h && x < w {
+                t.set(&[y, x, 0], rgb[0]);
+                t.set(&[y, x, 1], rgb[1]);
+                t.set(&[y, x, 2], rgb[2]);
+                t.set(&[y, x, 3], 1.0);
+            }
+        };
+        let (cy, cx) = (h as f32 / 2.0, w as f32 / 2.0);
+        match self {
+            Sprite::Lizard => {
+                let green = [0.30, 0.65, 0.25];
+                let dark = [0.18, 0.42, 0.16];
+                // Body: ellipse in the upper-left 2/3.
+                let (by, bx) = (cy - h as f32 * 0.08, cx - w as f32 * 0.08);
+                let (ry, rx) = (h as f32 * 0.18, w as f32 * 0.26);
+                for y in 0..h {
+                    for x in 0..w {
+                        let dy = (y as f32 - by) / ry;
+                        let dx = (x as f32 - bx) / rx;
+                        if dy * dy + dx * dx <= 1.0 {
+                            set_px(&mut t, y, x, green);
+                        }
+                    }
+                }
+                // Head: smaller disc at the body's left end.
+                let (hy, hx) = (by - ry * 0.4, bx - rx * 1.05);
+                let hr = h as f32 * 0.10;
+                for y in 0..h {
+                    for x in 0..w {
+                        let dy = y as f32 - hy;
+                        let dx = x as f32 - hx;
+                        if dy * dy + dx * dx <= hr * hr {
+                            set_px(&mut t, y, x, green);
+                        }
+                    }
+                }
+                // Tail: tapering diagonal strip to the lower-right corner —
+                // the appendage Fig. 5 amputates.
+                let steps = (w as f32 * 0.45) as usize;
+                for i in 0..steps {
+                    let frac = i as f32 / steps as f32;
+                    let y = by + ry * 0.5 + frac * (h as f32 * 0.32);
+                    let x = bx + rx * 0.8 + frac * (w as f32 * 0.38);
+                    let thick = (2.5 * (1.0 - frac) + 0.7) as usize;
+                    for dy in 0..=thick {
+                        for dx in 0..=thick {
+                            set_px(&mut t, y as usize + dy, x as usize + dx,
+                                   dark);
+                        }
+                    }
+                }
+                // Legs: four short stubs.
+                for (sy, sx) in [(-0.9f32, -0.5f32), (-0.9, 0.5),
+                                 (0.9, -0.5), (0.9, 0.5)] {
+                    let ly = by + sy * ry;
+                    let lx = bx + sx * rx;
+                    for i in 0..(h / 10).max(2) {
+                        set_px(
+                            &mut t,
+                            (ly + sy.signum() * i as f32) as usize,
+                            lx as usize,
+                            dark,
+                        );
+                    }
+                }
+            }
+            Sprite::Heart => {
+                let red = [0.85, 0.15, 0.25];
+                // Implicit heart curve: (x^2 + y^2 - 1)^3 - x^2 y^3 <= 0.
+                for y in 0..h {
+                    for x in 0..w {
+                        let fx = (x as f32 - cx) / (w as f32 * 0.3);
+                        let fy = -(y as f32 - cy) / (h as f32 * 0.3);
+                        let a = fx * fx + fy * fy - 1.0;
+                        if a * a * a - fx * fx * fy * fy * fy <= 0.0 {
+                            set_px(&mut t, y, x, red);
+                        }
+                    }
+                }
+            }
+            Sprite::Square => {
+                let blue = [0.2, 0.35, 0.8];
+                let side = (h.min(w) as f32 * 0.5) as usize;
+                let y0 = (h - side) / 2;
+                let x0 = (w - side) / 2;
+                for y in y0..y0 + side {
+                    for x in x0..x0 + side {
+                        set_px(&mut t, y, x, blue);
+                    }
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Cut a rectangular region out of an RGBA or NCA-state tensor [H, W, C]
+/// (the Fig. 5 damage protocol): zero all channels inside the rectangle.
+pub fn damage_rect(state: &mut Tensor, y0: usize, x0: usize, dy: usize,
+                   dx: usize) {
+    let shape = state.shape().to_vec();
+    assert_eq!(shape.len(), 3, "damage_rect wants [H, W, C]");
+    let (h, w, c) = (shape[0], shape[1], shape[2]);
+    for y in y0..(y0 + dy).min(h) {
+        for x in x0..(x0 + dx).min(w) {
+            for ch in 0..c {
+                state.set(&[y, x, ch], 0.0);
+            }
+        }
+    }
+}
+
+/// Zero everything in the lower-right quadrant beyond the given fractions —
+/// "cut the tail of the gecko" (paper Fig. 5).
+pub fn amputate_tail(state: &mut Tensor) {
+    let shape = state.shape().to_vec();
+    let (h, w) = (shape[0], shape[1]);
+    damage_rect(state, h * 3 / 5, w * 3 / 5, h, w);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sprites_render_with_alpha() {
+        for sprite in Sprite::ALL {
+            let t = sprite.render(32, 32);
+            assert_eq!(t.shape(), &[32, 32, 4]);
+            let alive: usize = (0..32 * 32)
+                .filter(|&i| t.data()[i * 4 + 3] > 0.5)
+                .count();
+            assert!(alive > 40, "{} too small: {alive}", sprite.name());
+            assert!(alive < 32 * 32 / 2, "{} fills the grid", sprite.name());
+        }
+    }
+
+    #[test]
+    fn alpha_is_binary_and_rgb_masked() {
+        let t = Sprite::Heart.render(24, 24);
+        for i in 0..24 * 24 {
+            let a = t.data()[i * 4 + 3];
+            assert!(a == 0.0 || a == 1.0);
+            if a == 0.0 {
+                assert_eq!(t.data()[i * 4], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn lizard_has_tail_in_lower_right() {
+        let t = Sprite::Lizard.render(40, 40);
+        let mut tail = 0;
+        for y in 26..40 {
+            for x in 26..40 {
+                if t.at(&[y, x, 3]) > 0.5 {
+                    tail += 1;
+                }
+            }
+        }
+        assert!(tail > 5, "no tail to amputate ({tail} px)");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in Sprite::ALL {
+            assert_eq!(Sprite::parse(s.name()), Some(s));
+        }
+        assert_eq!(Sprite::parse("dragon"), None);
+    }
+
+    #[test]
+    fn damage_zeroes_rectangle() {
+        let mut t = Tensor::full(&[8, 8, 3], 1.0);
+        damage_rect(&mut t, 2, 3, 2, 2);
+        assert_eq!(t.at(&[2, 3, 0]), 0.0);
+        assert_eq!(t.at(&[3, 4, 2]), 0.0);
+        assert_eq!(t.at(&[1, 3, 0]), 1.0);
+        assert_eq!(t.at(&[4, 3, 0]), 1.0);
+        // Out-of-range damage clips safely.
+        damage_rect(&mut t, 7, 7, 5, 5);
+        assert_eq!(t.at(&[7, 7, 0]), 0.0);
+    }
+
+    #[test]
+    fn amputation_removes_tail_pixels() {
+        let mut t = Sprite::Lizard.render(40, 40);
+        let before: f32 = t.data().iter().sum();
+        amputate_tail(&mut t);
+        let after: f32 = t.data().iter().sum();
+        assert!(after < before, "amputation removed nothing");
+        for y in 24..40 {
+            for x in 24..40 {
+                assert_eq!(t.at(&[y, x, 3]), 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! # CAX-RS — Cellular Automata Accelerated
+//!
+//! A production-grade reproduction of *CAX: Cellular Automata Accelerated
+//! in JAX* (Faldor & Cully, ICLR 2025) as a three-layer Rust + JAX + Pallas
+//! stack: Pallas kernels (L1) and JAX models (L2) are AOT-lowered to HLO
+//! text at build time; this crate (L3) is the deployable framework that
+//! loads, schedules, trains and benchmarks them via PJRT — plus every
+//! substrate the paper's evaluation needs (naive baselines, datasets,
+//! sample pool, visualization, metrics, config, CLI).
+//!
+//! See DESIGN.md for the architecture and experiment index, EXPERIMENTS.md
+//! for paper-vs-measured results.
+
+pub mod automata;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod metrics;
+pub mod pool;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod viz;
+
+pub use tensor::Tensor;

@@ -1,0 +1,371 @@
+//! `cax` — the CAX-RS launcher.
+//!
+//! Subcommands:
+//!   list                         print the Table-1 CA registry + status
+//!   info <artifact>              manifest signature of one artifact
+//!   check                        compile every registry artifact
+//!   sim <eca|life|lenia> ...     run a classic CA (fused/stepwise/naive)
+//!   train <ca> ...               train a neural CA end to end
+//!   eval <arc|mnist|autoenc3d>   evaluate a trained / fresh neural CA
+//!
+//! Global flags: --artifacts DIR  --out DIR  --seed N  --config FILE
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use cax::automata::WolframRule;
+use cax::config::Config;
+use cax::coordinator::evaluator;
+use cax::coordinator::trainer::TrainCfg;
+use cax::coordinator::{experiments, registry, Path as SimPath, Simulator};
+use cax::datasets::arc1d::Task;
+use cax::datasets::mnist::{self, MnistConfig};
+use cax::runtime::Engine;
+use cax::util::rng::Rng;
+use cax::util::timer::Timer;
+use cax::viz::spacetime;
+
+fn usage() -> &'static str {
+    "cax — Cellular Automata Accelerated (Rust coordinator)
+
+USAGE:
+    cax [--artifacts DIR] [--out DIR] [--seed N] [--config FILE] <COMMAND>
+
+COMMANDS:
+    list                      Table-1 registry and artifact status
+    info <artifact>           print one artifact's manifest signature
+    check                     compile every registry artifact
+    sim <eca|life|lenia>      run a classic CA
+        [--path fused|stepwise|naive] [--steps N] [--rule R] [--render]
+    train <ca-key>            train a neural CA (growing, conditional, vae,
+        [--steps N]           mnist, diffusing, autoenc3d, arc)
+    eval <arc|mnist|autoenc3d> [--train-steps N] [--task NAME]
+                              train briefly, then report the paper metric
+
+Run `cax list` first to see what the artifacts directory provides."
+}
+
+struct Cli {
+    cfg: Config,
+    args: Vec<String>,
+}
+
+impl Cli {
+    fn parse() -> Result<Cli> {
+        let mut cfg = Config::default();
+        let mut args = vec![];
+        let mut it = std::env::args().skip(1);
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--artifacts" => {
+                    cfg.artifacts_dir =
+                        PathBuf::from(next(&mut it, "--artifacts")?)
+                }
+                "--out" => cfg.out_dir = PathBuf::from(next(&mut it, "--out")?),
+                "--seed" => cfg.seed = next(&mut it, "--seed")?.parse()?,
+                "--config" => {
+                    let path = PathBuf::from(next(&mut it, "--config")?);
+                    cfg = Config::from_file(&path)?;
+                }
+                _ => args.push(a),
+            }
+        }
+        Ok(Cli { cfg, args })
+    }
+
+    /// Value of `--flag` within the subcommand args, if present.
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.args
+            .iter()
+            .position(|a| a == name)
+            .and_then(|i| self.args.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.args.iter().any(|a| a == name)
+    }
+}
+
+fn next(it: &mut impl Iterator<Item = String>, flag: &str) -> Result<String> {
+    it.next().with_context(|| format!("{flag} needs a value"))
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let cli = Cli::parse()?;
+    let Some(cmd) = cli.args.first().map(String::as_str) else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    match cmd {
+        "list" => cmd_list(&cli),
+        "info" => cmd_info(&cli),
+        "check" => cmd_check(&cli),
+        "sim" => cmd_sim(&cli),
+        "train" => cmd_train(&cli),
+        "eval" => cmd_eval(&cli),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{}", usage()),
+    }
+}
+
+fn engine(cli: &Cli) -> Result<Engine> {
+    let dir = cli.cfg.resolved_artifacts_dir();
+    Engine::load(&dir).with_context(|| {
+        format!("loading artifacts from {} (run `make artifacts` first?)",
+                dir.display())
+    })
+}
+
+// ------------------------------------------------------------------ list
+
+fn cmd_list(cli: &Cli) -> Result<()> {
+    let eng = engine(cli)?;
+    let missing = registry::missing_artifacts(eng.manifest());
+    println!("{:<12} {:<46} {:<11} {:<5} status", "KEY", "CELLULAR AUTOMATON",
+             "TYPE", "DIMS");
+    for e in registry::table1() {
+        let ok = !missing.iter().any(|m| m.starts_with(&format!("{}:", e.key)));
+        println!(
+            "{:<12} {:<46} {:<11} {:<5} {}",
+            e.key, e.label, e.ca_type.name(), e.dimensions,
+            if ok { "ready" } else { "MISSING ARTIFACTS" }
+        );
+    }
+    println!("\nplatform: {}   artifacts: {}", eng.platform(),
+             cli.cfg.resolved_artifacts_dir().display());
+    if !missing.is_empty() {
+        println!("missing: {missing:?}");
+    }
+    Ok(())
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let name = cli.args.get(1).context("info: which artifact?")?;
+    let eng = engine(cli)?;
+    let info = eng.manifest().artifact(name)?;
+    println!("artifact {name}");
+    for s in &info.inputs {
+        println!("  in  {:<10} {}{:?}", s.name, s.dtype.name(), s.shape);
+    }
+    for s in &info.outputs {
+        println!("  out {:<10} {}{:?}", s.name, s.dtype.name(), s.shape);
+    }
+    Ok(())
+}
+
+fn cmd_check(cli: &Cli) -> Result<()> {
+    let eng = engine(cli)?;
+    let missing = registry::missing_artifacts(eng.manifest());
+    if !missing.is_empty() {
+        bail!("manifest incomplete: {missing:?}");
+    }
+    let mut names: Vec<String> =
+        eng.manifest().artifacts.keys().cloned().collect();
+    names.sort();
+    for name in &names {
+        let t = Timer::start();
+        eng.ensure_compiled(name)
+            .with_context(|| format!("compiling {name}"))?;
+        println!("  compiled {name:<24} {:>8.1} ms", t.elapsed_ms());
+    }
+    println!("check: {}/{} artifacts compile on {}", names.len(),
+             names.len(), eng.platform());
+    Ok(())
+}
+
+// ------------------------------------------------------------------- sim
+
+fn cmd_sim(cli: &Cli) -> Result<()> {
+    let ca = cli.args.get(1).context("sim: which CA (eca|life|lenia)?")?;
+    let eng = engine(cli)?;
+    let sim = Simulator::new(&eng);
+    let path = match cli.flag("--path").unwrap_or("fused") {
+        "fused" => SimPath::Fused,
+        "stepwise" => SimPath::Stepwise,
+        "naive" => SimPath::Naive,
+        p => bail!("unknown --path {p:?}"),
+    };
+    let mut rng = Rng::new(cli.cfg.seed);
+
+    let (artifact, default_steps) = match ca.as_str() {
+        "eca" => ("eca_rollout", 256),
+        "life" => ("life_rollout", 256),
+        "lenia" => ("lenia_rollout", 64),
+        other => bail!("unknown CA {other:?}"),
+    };
+    let steps = match cli.flag("--steps") {
+        Some(s) => s.parse::<usize>()?,
+        None => eng
+            .manifest()
+            .artifact(artifact)
+            .ok()
+            .and_then(|i| i.meta_usize("steps"))
+            .unwrap_or(default_steps),
+    };
+
+    let state = sim.random_state(artifact, &mut rng)?;
+    let t = Timer::start();
+    let out = match ca.as_str() {
+        "eca" => {
+            let rule = WolframRule::parse(cli.flag("--rule").unwrap_or("30"))?;
+            sim.run_eca(path, &state, rule, steps)?
+        }
+        "life" => sim.run_life(path, &state, steps)?,
+        "lenia" => sim.run_lenia(path, &state, steps)?,
+        _ => unreachable!(),
+    };
+    let dt = t.elapsed_secs();
+    let updates = sim.cell_updates(artifact, steps)?;
+    println!(
+        "{ca} [{}] {} steps: {:.3}s  ({:.2e} cell updates/s)  final mean {:.4}",
+        path.name(), steps, dt, updates / dt.max(1e-12), out.mean()
+    );
+
+    if cli.has("--render") {
+        std::fs::create_dir_all(&cli.cfg.out_dir)?;
+        let img = match ca.as_str() {
+            "eca" => {
+                let rule =
+                    WolframRule::parse(cli.flag("--rule").unwrap_or("30"))?;
+                let (_, traj) = sim.eca_traj(&state, rule)?;
+                // traj [T, B, W]: render batch element 0 as [T, W].
+                let (t_len, w) = (traj.shape()[0], traj.shape()[2]);
+                let mut flat = cax::Tensor::zeros(&[t_len, w]);
+                for ti in 0..t_len {
+                    for x in 0..w {
+                        flat.set(&[ti, x], traj.at(&[ti, 0, x]));
+                    }
+                }
+                spacetime::render_spacetime_1d(&flat)?
+            }
+            _ => spacetime::render_field(&out.index_axis0(0))?,
+        };
+        let path_out = cli.cfg.out_dir.join(format!("{ca}.ppm"));
+        img.upscale(4).write_ppm(&path_out)?;
+        println!("wrote {}", path_out.display());
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- train
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let key = cli
+        .args
+        .get(1)
+        .context("train: which CA key? (see `cax list`)")?;
+    let entry = registry::find(key)
+        .with_context(|| format!("no registry entry {key:?}"))?;
+    if entry.params_blob.is_none() {
+        bail!("{key} is a classic CA — use `cax sim {key}`");
+    }
+    let eng = engine(cli)?;
+    let steps = match cli.flag("--steps") {
+        Some(s) => s.parse::<usize>()?,
+        None => cli.cfg.train.steps,
+    };
+    let cfg = TrainCfg {
+        steps,
+        seed: cli.cfg.seed as u32,
+        log_every: cli.cfg.train.log_every,
+        out_dir: cli.cfg.train.write_outputs.then(|| cli.cfg.out_dir.clone()),
+    };
+    println!("training {key} for {steps} steps (seed {})...", cfg.seed);
+    let t = Timer::start();
+    let run = experiments::train_by_key(&eng, key, &cfg, cli.cfg.pool.size)?
+        .expect("neural CA");
+    let (first, last) = run.history.window_means(10);
+    println!(
+        "{key}: {steps} steps in {:.1}s — loss first-window {first:.5} -> \
+         last-window {last:.5}{}",
+        t.elapsed_secs(),
+        if run.improved() { "" } else { "  (WARNING: no improvement)" },
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------------ eval
+
+fn cmd_eval(cli: &Cli) -> Result<()> {
+    let what = cli.args.get(1).context("eval: arc|mnist|autoenc3d")?;
+    let eng = engine(cli)?;
+    let steps = match cli.flag("--train-steps") {
+        Some(s) => s.parse::<usize>()?,
+        None => cli.cfg.train.steps,
+    };
+    let cfg = TrainCfg {
+        steps,
+        seed: cli.cfg.seed as u32,
+        log_every: cli.cfg.train.log_every,
+        out_dir: None,
+    };
+    match what.as_str() {
+        "arc" => {
+            let task_name = cli.flag("--task").unwrap_or("Denoise");
+            let task = Task::ALL
+                .iter()
+                .copied()
+                .find(|t| {
+                    t.name().eq_ignore_ascii_case(task_name)
+                        || t.name().to_lowercase().replace(' ', "-")
+                            == task_name.to_lowercase()
+                })
+                .with_context(|| format!("unknown ARC task {task_name:?}"))?;
+            let (train_set, test_set) =
+                experiments::arc_split(&eng, task, 128, 50, cli.cfg.seed)?;
+            let run = experiments::train_arc(&eng, &cfg, task, &train_set)?;
+            let acc =
+                evaluator::arc_accuracy(&eng, &run.state.params, &test_set)?;
+            let pix = evaluator::arc_pixel_accuracy(&eng, &run.state.params,
+                                                    &test_set)?;
+            println!(
+                "ARC {:<28} exact-match {:.1}%  per-pixel {:.1}%  (paper \
+                 NCA: {:.0}%, GPT-4: {:.0}%)",
+                task.name(), 100.0 * acc, 100.0 * pix,
+                task.paper_nca_accuracy(), task.gpt4_accuracy()
+            );
+        }
+        "mnist" => {
+            let run = experiments::train_mnist(&eng, &cfg)?;
+            let info = eng.manifest().artifact("mnist_eval")?;
+            let (h, w) = (info.inputs[1].shape[1], info.inputs[1].shape[2]);
+            let digits = mnist::dataset(100, &MnistConfig::for_grid(h, w),
+                                        cli.cfg.seed ^ 0xEA1);
+            let refs: Vec<&mnist::Digit> = digits.iter().collect();
+            let acc = evaluator::mnist_accuracy(&eng, &run.state.params,
+                                                &refs, cfg.seed)?;
+            println!("self-classifying MNIST: majority-vote accuracy {:.1}% \
+                      on 100 held-out digits", 100.0 * acc);
+        }
+        "autoenc3d" => {
+            let run = experiments::train_autoenc3d(&eng, &cfg)?;
+            let info = eng.manifest().artifact("autoenc3d_eval")?;
+            let (h, w) = (info.inputs[1].shape[1], info.inputs[1].shape[2]);
+            let digits = mnist::dataset(32, &MnistConfig::for_grid(h, w),
+                                        cli.cfg.seed ^ 0x3D);
+            let refs: Vec<&mnist::Digit> = digits.iter().collect();
+            let mse = evaluator::autoenc3d_recon_mse(&eng, &run.state.params,
+                                                     &refs, cfg.seed)?;
+            println!("self-autoencoding MNIST (3D): reconstruction MSE \
+                      {mse:.5} on 32 held-out digits");
+        }
+        other => bail!("unknown eval target {other:?}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,284 @@
+//! Metrics: loss histories, throughput counters, CSV/JSON reports.
+//!
+//! Every trainer/simulator run records into a [`History`]; reports land in
+//! `out/` as CSV (for plotting) and JSON (for EXPERIMENTS.md extraction).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+use crate::util::timer::Stats;
+
+/// A named scalar time series (e.g. per-step training loss).
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub name: String,
+    steps: Vec<u64>,
+    values: Vec<f64>,
+}
+
+impl History {
+    pub fn new(name: &str) -> History {
+        History { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.steps.push(step);
+        self.values.push(value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.values.last().copied()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Mean of the first `k` and last `k` values — the improvement summary
+    /// used by trainer smoke tests.
+    pub fn window_means(&self, k: usize) -> (f64, f64) {
+        assert!(!self.is_empty());
+        let k = k.min(self.values.len());
+        let head: f64 = self.values[..k].iter().sum::<f64>() / k as f64;
+        let tail: f64 =
+            self.values[self.values.len() - k..].iter().sum::<f64>() / k as f64;
+        (head, tail)
+    }
+
+    /// Exponential moving average of the series (smoothing for reports).
+    pub fn ema(&self, alpha: f64) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.values.len());
+        let mut acc = None;
+        for &v in &self.values {
+            let next = match acc {
+                None => v,
+                Some(prev) => alpha * v + (1.0 - alpha) * prev,
+            };
+            out.push(next);
+            acc = Some(next);
+        }
+        out
+    }
+
+    /// Write `step,value` CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::from("step,value\n");
+        for (s, v) in self.steps.iter().zip(&self.values) {
+            out.push_str(&format!("{s},{v}\n"));
+        }
+        std::fs::write(path, out)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("steps", Json::Arr(
+                self.steps.iter().map(|&s| Json::from(s as usize)).collect(),
+            )),
+            ("values", Json::Arr(
+                self.values.iter().map(|&v| Json::Num(v)).collect(),
+            )),
+        ])
+    }
+}
+
+/// Throughput aggregator: items (cells, steps, requests) per second.
+#[derive(Clone, Debug, Default)]
+pub struct Throughput {
+    items: f64,
+    seconds: f64,
+}
+
+impl Throughput {
+    pub fn record(&mut self, items: f64, seconds: f64) {
+        self.items += items;
+        self.seconds += seconds;
+    }
+
+    pub fn per_second(&self) -> f64 {
+        if self.seconds == 0.0 {
+            0.0
+        } else {
+            self.items / self.seconds
+        }
+    }
+
+    pub fn total_items(&self) -> f64 {
+        self.items
+    }
+}
+
+/// A benchmark row: label + timing stats + derived throughput.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub label: String,
+    pub stats: Stats,
+    /// Work items (e.g. cell updates) per iteration, for throughput.
+    pub items_per_iter: f64,
+}
+
+impl BenchRow {
+    pub fn throughput(&self) -> f64 {
+        if self.stats.mean == 0.0 {
+            0.0
+        } else {
+            self.items_per_iter / self.stats.mean
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", Json::from(self.label.as_str())),
+            ("mean_s", Json::Num(self.stats.mean)),
+            ("median_s", Json::Num(self.stats.median)),
+            ("p95_s", Json::Num(self.stats.p95)),
+            ("n", Json::from(self.stats.n)),
+            ("items_per_iter", Json::Num(self.items_per_iter)),
+            ("throughput_per_s", Json::Num(self.throughput())),
+        ])
+    }
+}
+
+/// Write a named set of bench rows as a JSON report.
+pub fn write_bench_report(name: &str, rows: &[BenchRow], path: &Path)
+                          -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let json = obj(vec![
+        ("bench", Json::from(name)),
+        ("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
+    ]);
+    std::fs::write(path, json.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_push_and_windows() {
+        let mut h = History::new("loss");
+        for i in 0..10u64 {
+            h.push(i, 10.0 - i as f64);
+        }
+        assert_eq!(h.len(), 10);
+        assert_eq!(h.last(), Some(1.0));
+        let (head, tail) = h.window_means(3);
+        assert_eq!(head, 9.0);
+        assert_eq!(tail, 2.0);
+    }
+
+    #[test]
+    fn ema_smooths_monotonically_for_constant() {
+        let mut h = History::new("x");
+        for i in 0..5u64 {
+            h.push(i, 2.0);
+        }
+        assert!(h.ema(0.3).iter().all(|&v| (v - 2.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("cax_metrics_test");
+        let path = dir.join("loss.csv");
+        let mut h = History::new("loss");
+        h.push(0, 1.5);
+        h.push(10, 0.5);
+        h.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,value\n0,1.5\n10,0.5\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut t = Throughput::default();
+        t.record(100.0, 2.0);
+        t.record(300.0, 2.0);
+        assert_eq!(t.per_second(), 100.0);
+        assert_eq!(t.total_items(), 400.0);
+        assert_eq!(Throughput::default().per_second(), 0.0);
+    }
+
+    #[test]
+    fn bench_row_json() {
+        let row = BenchRow {
+            label: "fused".into(),
+            stats: Stats::from_samples(&[0.5, 0.5]),
+            items_per_iter: 50.0,
+        };
+        assert_eq!(row.throughput(), 100.0);
+        let json = row.to_json();
+        assert_eq!(json.get("label").unwrap().as_str(), Some("fused"));
+        assert_eq!(json.get("throughput_per_s").unwrap().as_f64(),
+                   Some(100.0));
+    }
+
+    #[test]
+    fn history_json_shape() {
+        let mut h = History::new("loss");
+        h.push(1, 0.25);
+        let j = h.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("loss"));
+        assert_eq!(j.get("values").unwrap().as_arr().unwrap().len(), 1);
+    }
+}
+
+/// The pure-Python per-cell baseline measured at build time by
+/// `python/compile/pybaseline.py` (the CellPyLib cost model of Fig. 3).
+#[derive(Clone, Copy, Debug)]
+pub struct PyBaseline {
+    /// ECA cell updates per second in pure Python.
+    pub eca_updates_per_s: f64,
+    /// Game-of-Life cell updates per second in pure Python.
+    pub life_updates_per_s: f64,
+}
+
+/// Load `<artifacts>/py_baseline.json` if the build produced it.
+pub fn read_py_baseline(artifacts_dir: &Path) -> Option<PyBaseline> {
+    let text =
+        std::fs::read_to_string(artifacts_dir.join("py_baseline.json")).ok()?;
+    let json = Json::parse(&text).ok()?;
+    Some(PyBaseline {
+        eca_updates_per_s: json.get("eca_updates_per_s")?.as_f64()?,
+        life_updates_per_s: json.get("life_updates_per_s")?.as_f64()?,
+    })
+}
+
+#[cfg(test)]
+mod py_baseline_tests {
+    use super::*;
+
+    #[test]
+    fn parses_build_output_format() {
+        let dir = std::env::temp_dir()
+            .join(format!("cax_pybl_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("py_baseline.json"),
+            r#"{"eca_updates_per_s": 2.1e6, "life_updates_per_s": 1.8e6}"#,
+        )
+        .unwrap();
+        let b = read_py_baseline(&dir).unwrap();
+        assert!(b.eca_updates_per_s > 2e6 && b.life_updates_per_s > 1e6);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(read_py_baseline(std::path::Path::new("/nonexistent"))
+            .is_none());
+    }
+}

@@ -1,0 +1,215 @@
+//! Sample pool — the paper's §3.2.2 training utility, owned by Layer 3.
+//!
+//! The growing-NCA recipe (Mordvintsev et al. 2020, App. B notebook) keeps a
+//! pool of intermediate states, samples a batch each step, trains on it, and
+//! writes the post-rollout states back. Worst-of-batch reseeding happens
+//! *in-graph* inside the train-step artifact; the pool's job here is exact
+//! bookkeeping: sampling without replacement, write-back, and staleness
+//! accounting.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Fixed-capacity state pool over tensors of identical shape.
+#[derive(Clone, Debug)]
+pub struct SamplePool {
+    states: Tensor,       // [P, ...state shape]
+    ages: Vec<u64>,       // training steps since last write-back
+    writes: u64,
+}
+
+impl SamplePool {
+    /// Initialize every slot with (a copy of) `seed_state`.
+    pub fn new(capacity: usize, seed_state: &Tensor) -> SamplePool {
+        assert!(capacity > 0, "pool capacity must be positive");
+        let parts: Vec<Tensor> = (0..capacity).map(|_| seed_state.clone())
+            .collect();
+        SamplePool {
+            states: Tensor::stack(&parts).unwrap(),
+            ages: vec![0; capacity],
+            writes: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ages.len()
+    }
+
+    /// Shape of one pool entry.
+    pub fn entry_shape(&self) -> &[usize] {
+        &self.states.shape()[1..]
+    }
+
+    /// Sample `batch` distinct indices and the stacked batch tensor
+    /// [batch, ...state shape].
+    pub fn sample(&self, batch: usize, rng: &mut Rng) -> (Vec<usize>, Tensor) {
+        assert!(batch <= self.capacity(),
+                "batch {batch} > pool capacity {}", self.capacity());
+        let idx = rng.sample_indices(self.capacity(), batch);
+        let parts: Vec<Tensor> =
+            idx.iter().map(|&i| self.states.index_axis0(i)).collect();
+        (idx.clone(), Tensor::stack(&parts).unwrap())
+    }
+
+    /// Write a batch back to the slots it was sampled from.
+    pub fn write_back(&mut self, indices: &[usize], batch: &Tensor) {
+        assert_eq!(batch.shape()[0], indices.len(),
+                   "write_back: batch size mismatch");
+        assert_eq!(&batch.shape()[1..], self.entry_shape(),
+                   "write_back: entry shape mismatch");
+        for age in &mut self.ages {
+            *age += 1;
+        }
+        for (k, &i) in indices.iter().enumerate() {
+            assert!(i < self.capacity(), "write_back: index {i} out of range");
+            let sub = batch.index_axis0(k);
+            self.states.set_axis0(i, &sub);
+            self.ages[i] = 0;
+        }
+        self.writes += 1;
+    }
+
+    /// Overwrite one slot with a fresh state (explicit reseed).
+    pub fn reseed(&mut self, index: usize, state: &Tensor) {
+        assert_eq!(state.shape(), self.entry_shape());
+        self.states.set_axis0(index, state);
+        self.ages[index] = 0;
+    }
+
+    /// The slot that has gone longest without a write-back.
+    pub fn stalest(&self) -> usize {
+        self.ages
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &a)| a)
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    pub fn entry(&self, index: usize) -> Tensor {
+        self.states.index_axis0(index)
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Mean age across slots (staleness metric).
+    pub fn mean_age(&self) -> f64 {
+        self.ages.iter().sum::<u64>() as f64 / self.capacity() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Gen};
+    use crate::prop_assert;
+
+    fn seed_state() -> Tensor {
+        let mut t = Tensor::zeros(&[4, 4, 2]);
+        t.set(&[2, 2, 1], 1.0);
+        t
+    }
+
+    #[test]
+    fn initialized_with_seed_everywhere() {
+        let pool = SamplePool::new(8, &seed_state());
+        for i in 0..8 {
+            assert!(pool.entry(i).bit_eq(&seed_state()));
+        }
+        assert_eq!(pool.capacity(), 8);
+        assert_eq!(pool.entry_shape(), &[4, 4, 2]);
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_batch_matches() {
+        let pool = SamplePool::new(16, &seed_state());
+        let mut rng = Rng::new(1);
+        let (idx, batch) = pool.sample(6, &mut rng);
+        assert_eq!(idx.len(), 6);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 6);
+        assert_eq!(batch.shape(), &[6, 4, 4, 2]);
+        for (k, &i) in idx.iter().enumerate() {
+            assert!(batch.index_axis0(k).bit_eq(&pool.entry(i)));
+        }
+    }
+
+    #[test]
+    fn write_back_updates_only_sampled_slots() {
+        let mut pool = SamplePool::new(8, &seed_state());
+        let mut rng = Rng::new(2);
+        let (idx, mut batch) = pool.sample(3, &mut rng);
+        batch.data_mut().iter_mut().for_each(|v| *v = 9.0);
+        pool.write_back(&idx, &batch);
+        for i in 0..8 {
+            if idx.contains(&i) {
+                assert_eq!(pool.entry(i).at(&[0, 0, 0]), 9.0);
+            } else {
+                assert!(pool.entry(i).bit_eq(&seed_state()));
+            }
+        }
+    }
+
+    #[test]
+    fn ages_track_staleness() {
+        let mut pool = SamplePool::new(4, &seed_state());
+        let batch = Tensor::stack(&[seed_state()]).unwrap();
+        pool.write_back(&[0], &batch);
+        pool.write_back(&[1], &batch);
+        pool.write_back(&[1], &batch);
+        // Slot 2/3 never written: stalest. Slot 0 older than 1.
+        let stalest = pool.stalest();
+        assert!(stalest == 2 || stalest == 3);
+        assert!(pool.mean_age() > 0.0);
+        assert_eq!(pool.writes(), 3);
+    }
+
+    #[test]
+    fn reseed_resets_slot() {
+        let mut pool = SamplePool::new(4, &seed_state());
+        let mut other = seed_state();
+        other.set(&[0, 0, 0], 5.0);
+        pool.reseed(2, &other);
+        assert!(pool.entry(2).bit_eq(&other));
+        assert!(pool.entry(1).bit_eq(&seed_state()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_batch_panics() {
+        let pool = SamplePool::new(4, &seed_state());
+        let mut rng = Rng::new(3);
+        pool.sample(5, &mut rng);
+    }
+
+    #[test]
+    fn pool_invariants_property() {
+        // Property: after arbitrary sample/write-back sequences the pool
+        // capacity never changes, all entries keep the entry shape, and a
+        // write-back is faithfully readable.
+        check(0xC0FFEE, 100, |g: &mut Gen| {
+            let cap = g.usize_in(2, 12);
+            let mut pool = SamplePool::new(cap, &seed_state());
+            for round in 0..g.usize_in(1, 8) {
+                let b = g.usize_in(1, cap + 1).min(cap);
+                let (idx, mut batch) = pool.sample(b, &mut g.rng);
+                let stamp = round as f32 + 1.0;
+                batch.data_mut().iter_mut().for_each(|v| *v = stamp);
+                pool.write_back(&idx, &batch);
+                prop_assert!(pool.capacity() == cap, "capacity changed");
+                for &i in &idx {
+                    prop_assert!(
+                        pool.entry(i).at(&[0, 0, 0]) == stamp,
+                        "write-back not visible at slot {i}"
+                    );
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}

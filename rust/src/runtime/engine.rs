@@ -1,0 +1,254 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute
+//! from the Layer-3 hot path.
+//!
+//! The `xla` crate wraps the PJRT C API; HLO **text** is the interchange
+//! format (see aot.py / DESIGN.md §4.2). Executables are compiled lazily on
+//! first use and cached for the process lifetime; every call is validated
+//! against the manifest signature before any FFI happens, so shape bugs
+//! surface as precise Rust errors rather than XLA aborts.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactInfo, Dtype, Manifest};
+use crate::tensor::Tensor;
+
+/// A typed input value for an artifact call.
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// Dense f32 tensor (the common case).
+    F32(Tensor),
+    /// i32 scalar (train-step counters).
+    I32(i32),
+    /// u32 scalar (PRNG seeds).
+    U32(u32),
+}
+
+impl Value {
+    fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(_) => Dtype::F32,
+            Value::I32(_) => Dtype::I32,
+            Value::U32(_) => Dtype::U32,
+        }
+    }
+
+    fn shape(&self) -> Vec<usize> {
+        match self {
+            Value::F32(t) => t.shape().to_vec(),
+            Value::I32(_) | Value::U32(_) => vec![],
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Value::F32(t) => {
+                // Single copy host->literal (vec1 + reshape would copy
+                // twice — measurable on train-step params buffers).
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        t.data().as_ptr() as *const u8,
+                        t.data().len() * 4,
+                    )
+                };
+                Ok(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    t.shape(),
+                    bytes,
+                )?)
+            }
+            Value::I32(v) => Ok(xla::Literal::scalar(*v)),
+            Value::U32(v) => Ok(xla::Literal::scalar(*v)),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+}
+
+/// Cumulative execution statistics (perf instrumentation, DESIGN.md §7).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// The engine. All PJRT state is created and used on the owning thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            compiled: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.borrow()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.compiled.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.compiles += 1;
+            stats.compile_secs += dt;
+        }
+        self.compiled.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Validate inputs against the manifest signature.
+    fn validate(&self, info: &ArtifactInfo, inputs: &[Value]) -> Result<()> {
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs ({}), got {}",
+                info.name,
+                info.inputs.len(),
+                info.inputs
+                    .iter()
+                    .map(|s| s.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                inputs.len()
+            );
+        }
+        for (value, spec) in inputs.iter().zip(&info.inputs) {
+            if value.dtype() != spec.dtype {
+                bail!(
+                    "artifact {} input {:?}: dtype {} != manifest {}",
+                    info.name, spec.name,
+                    value.dtype().name(), spec.dtype.name()
+                );
+            }
+            if value.shape() != spec.shape {
+                bail!(
+                    "artifact {} input {:?}: shape {:?} != manifest {:?}",
+                    info.name, spec.name, value.shape(), spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact; returns one `Tensor` per manifest output.
+    pub fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        // Borrow (not clone) the signature: this runs on every dispatch.
+        let info = self.manifest.artifact(name)?;
+        self.validate(info, inputs)?;
+        self.ensure_compiled(name)?;
+
+        let literals = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+
+        let t0 = std::time::Instant::now();
+        let compiled = self.compiled.borrow();
+        let exe = compiled.get(name).expect("ensure_compiled filled cache");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact {name}"))?;
+        // aot.py lowers with return_tuple=True: one tuple literal out.
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        let dt = t0.elapsed().as_secs_f64();
+
+        if parts.len() != info.outputs.len() {
+            bail!(
+                "artifact {name}: runtime returned {} outputs, manifest says {}",
+                parts.len(),
+                info.outputs.len()
+            );
+        }
+        let mut outputs = Vec::with_capacity(parts.len());
+        let mut bytes_out = 0u64;
+        for (part, spec) in parts.into_iter().zip(&info.outputs) {
+            let data: Vec<f32> = match spec.dtype {
+                Dtype::F32 => part.to_vec::<f32>()?,
+                // All current artifacts return f32; keep the door open.
+                Dtype::I32 => part
+                    .to_vec::<i32>()?
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect(),
+                Dtype::U32 => part
+                    .to_vec::<u32>()?
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect(),
+            };
+            bytes_out += (data.len() * 4) as u64;
+            outputs.push(Tensor::new(spec.shape.clone(), data).with_context(
+                || format!("artifact {name}: output shape mismatch"),
+            )?);
+        }
+
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.execute_secs += dt;
+        stats.bytes_in += inputs
+            .iter()
+            .map(|v| match v {
+                Value::F32(t) => (t.numel() * 4) as u64,
+                _ => 4,
+            })
+            .sum::<u64>();
+        stats.bytes_out += bytes_out;
+        Ok(outputs)
+    }
+
+    /// Load an initial-parameter blob as a rank-1 tensor.
+    pub fn load_params(&self, blob: &str) -> Result<Tensor> {
+        let data = self.manifest.load_blob(blob)?;
+        let n = data.len();
+        Tensor::new(vec![n], data)
+    }
+}

@@ -1,0 +1,334 @@
+//! `artifacts/manifest.json` — the Layer-2 -> Layer-3 contract.
+//!
+//! The AOT compiler (python/compile/aot.py) records every artifact's file,
+//! typed input/output signature and experiment metadata, plus the initial
+//! parameter blobs. This module parses it (via the in-tree JSON substrate)
+//! into typed structures the engine validates calls against.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element dtype crossing the artifact boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "u32" => Ok(Dtype::U32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+            Dtype::U32 => "u32",
+        }
+    }
+}
+
+/// One typed argument or result slot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Spec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl Spec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<Spec>,
+    pub outputs: Vec<Spec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactInfo {
+    /// Metadata integer (steps, batch, channels, ...).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str())
+    }
+}
+
+/// An initial-parameter (or constant) blob.
+#[derive(Clone, Debug)]
+pub struct BlobInfo {
+    pub name: String,
+    pub file: String,
+    pub shape: Vec<usize>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub blobs: BTreeMap<String, BlobInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let preset = root
+            .get("preset")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+
+        let mut artifacts = BTreeMap::new();
+        for item in required_arr(&root, "artifacts")? {
+            let info = parse_artifact(item)?;
+            if artifacts.insert(info.name.clone(), info.clone()).is_some() {
+                bail!("duplicate artifact {:?} in manifest", info.name);
+            }
+        }
+
+        let mut blobs = BTreeMap::new();
+        for item in root.get("blobs").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            let name = required_str(item, "name")?.to_string();
+            let blob = BlobInfo {
+                name: name.clone(),
+                file: required_str(item, "file")?.to_string(),
+                shape: parse_shape(item.get("shape"))?,
+            };
+            blobs.insert(name, blob);
+        }
+
+        Ok(Manifest { preset, dir: dir.to_path_buf(), artifacts, blobs })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Load a parameter blob as a flat f32 vector.
+    pub fn load_blob(&self, name: &str) -> Result<Vec<f32>> {
+        let blob = self
+            .blobs
+            .get(name)
+            .ok_or_else(|| anyhow!("blob {name:?} not in manifest"))?;
+        let path = self.dir.join(&blob.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let expected: usize = blob.shape.iter().product::<usize>() * 4;
+        if bytes.len() != expected {
+            bail!(
+                "blob {name:?}: file has {} bytes, manifest shape {:?} wants {}",
+                bytes.len(), blob.shape, expected
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn required_arr<'a>(v: &'a Json, key: &str) -> Result<&'a [Json]> {
+    v.get(key)
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow!("manifest missing array {key:?}"))
+}
+
+fn required_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow!("manifest missing string {key:?}"))
+}
+
+fn parse_shape(v: Option<&Json>) -> Result<Vec<usize>> {
+    let arr = v
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow!("missing shape array"))?;
+    arr.iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim {d:?}")))
+        .collect()
+}
+
+fn parse_spec(v: &Json, with_name: bool) -> Result<Spec> {
+    Ok(Spec {
+        name: if with_name {
+            required_str(v, "name")?.to_string()
+        } else {
+            String::new()
+        },
+        dtype: Dtype::parse(required_str(v, "dtype")?)?,
+        shape: parse_shape(v.get("shape"))?,
+    })
+}
+
+fn parse_artifact(v: &Json) -> Result<ArtifactInfo> {
+    let name = required_str(v, "name")?.to_string();
+    let inputs = required_arr(v, "inputs")?
+        .iter()
+        .map(|s| parse_spec(s, true))
+        .collect::<Result<Vec<_>>>()
+        .with_context(|| format!("artifact {name}: inputs"))?;
+    let outputs = required_arr(v, "outputs")?
+        .iter()
+        .map(|s| parse_spec(s, false))
+        .collect::<Result<Vec<_>>>()
+        .with_context(|| format!("artifact {name}: outputs"))?;
+    let meta = match v.get("meta") {
+        Some(Json::Obj(m)) => m.clone().into_iter().collect(),
+        _ => BTreeMap::new(),
+    };
+    Ok(ArtifactInfo {
+        name,
+        file: required_str(v, "file")?.to_string(),
+        inputs,
+        outputs,
+        meta,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": "test",
+      "artifacts": [
+        {"name": "eca_step", "file": "eca_step.hlo.txt",
+         "inputs": [
+            {"name": "state", "dtype": "f32", "shape": [4, 256]},
+            {"name": "rule", "dtype": "f32", "shape": [8]}],
+         "outputs": [{"dtype": "f32", "shape": [4, 256]}],
+         "meta": {"ca": "eca", "steps": 256}},
+        {"name": "t", "file": "t.hlo.txt",
+         "inputs": [{"name": "seed", "dtype": "u32", "shape": []}],
+         "outputs": [{"dtype": "f32", "shape": []}],
+         "meta": {}}
+      ],
+      "blobs": [
+        {"name": "p", "file": "p.bin", "dtype": "f32", "shape": [3]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.preset, "test");
+        assert_eq!(m.artifacts.len(), 2);
+        let eca = m.artifact("eca_step").unwrap();
+        assert_eq!(eca.inputs.len(), 2);
+        assert_eq!(eca.inputs[0].name, "state");
+        assert_eq!(eca.inputs[0].dtype, Dtype::F32);
+        assert_eq!(eca.inputs[0].shape, vec![4, 256]);
+        assert_eq!(eca.inputs[0].numel(), 1024);
+        assert_eq!(eca.outputs[0].shape, vec![4, 256]);
+        assert_eq!(eca.meta_usize("steps"), Some(256));
+        assert_eq!(eca.meta_str("ca"), Some("eca"));
+        let t = m.artifact("t").unwrap();
+        assert_eq!(t.inputs[0].dtype, Dtype::U32);
+        assert_eq!(t.inputs[0].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn missing_artifact_lists_names() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let err = m.artifact("nope").unwrap_err().to_string();
+        assert!(err.contains("eca_step"), "{err}");
+    }
+
+    #[test]
+    fn artifact_path_joins_dir() {
+        let m = Manifest::parse(SAMPLE, Path::new("/data/artifacts")).unwrap();
+        assert_eq!(
+            m.artifact_path("eca_step").unwrap(),
+            Path::new("/data/artifacts/eca_step.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let dir = std::env::temp_dir().join("cax_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let floats: [f32; 3] = [1.5, -2.0, 0.25];
+        let mut bytes = Vec::new();
+        for f in floats {
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        std::fs::write(dir.join("p.bin"), &bytes).unwrap();
+        let m = Manifest::parse(SAMPLE, &dir).unwrap();
+        assert_eq!(m.load_blob("p").unwrap(), floats.to_vec());
+        assert!(m.load_blob("missing").is_err());
+        // Truncated file is rejected.
+        std::fs::write(dir.join("p.bin"), &bytes[..8]).unwrap();
+        assert!(m.load_blob("p").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        assert!(Manifest::parse("{}", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("not json", Path::new("/tmp")).is_err());
+        let dup = r#"{"preset":"test","artifacts":[
+            {"name":"a","file":"a","inputs":[],"outputs":[],"meta":{}},
+            {"name":"a","file":"b","inputs":[],"outputs":[],"meta":{}}
+        ],"blobs":[]}"#;
+        assert!(Manifest::parse(dup, Path::new("/tmp")).is_err());
+        let bad_dtype = r#"{"preset":"t","artifacts":[
+            {"name":"a","file":"a","inputs":[{"name":"x","dtype":"f64","shape":[]}],
+             "outputs":[],"meta":{}}],"blobs":[]}"#;
+        assert!(Manifest::parse(bad_dtype, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("i32").unwrap().name(), "i32");
+        assert!(Dtype::parse("f16").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime: the PJRT bridge. Loads `artifacts/*.hlo.txt` (lowered once by
+//! `make artifacts`) and executes them on the CPU PJRT client with typed,
+//! manifest-validated signatures. Python is never on this path.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineStats, Value};
+pub use manifest::{ArtifactInfo, BlobInfo, Dtype, Manifest, Spec};

@@ -1,0 +1,253 @@
+//! Dense f32 tensor — the host-side data currency of the whole coordinator.
+//!
+//! Deliberately minimal: shape + contiguous row-major `Vec<f32>`. Everything
+//! crossing the PJRT boundary (states, parameters, batches, trajectories) is
+//! a `Tensor`; integer/seed scalars cross as dedicated literal types in
+//! `runtime::engine`.
+
+use anyhow::{bail, Result};
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape + data (length must match).
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            bail!(
+                "Tensor::new: shape {:?} wants {} elements, got {}",
+                shape, numel, data.len()
+            );
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; numel] }
+    }
+
+    /// Filled with a constant.
+    pub fn full(shape: &[usize], value: f32) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![value; numel] }
+    }
+
+    /// A scalar (rank-0) tensor.
+    pub fn scalar(value: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![value] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != self.data.len() {
+            bail!("reshape: {:?} incompatible with {} elements", shape,
+                  self.data.len());
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Flat offset of a multi-index (length must equal rank).
+    pub fn offset(&self, index: &[usize]) -> usize {
+        debug_assert_eq!(index.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &dim)) in index.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < dim, "index {ix} out of bounds at axis {i}");
+            off = off * dim + ix;
+        }
+        off
+    }
+
+    pub fn at(&self, index: &[usize]) -> f32 {
+        self.data[self.offset(index)]
+    }
+
+    pub fn set(&mut self, index: &[usize], value: f32) {
+        let off = self.offset(index);
+        self.data[off] = value;
+    }
+
+    /// Slice out sub-tensor `i` along axis 0 (shares nothing; copies).
+    pub fn index_axis0(&self, i: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let sub: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * sub..(i + 1) * sub].to_vec(),
+        }
+    }
+
+    /// Overwrite sub-tensor `i` along axis 0.
+    pub fn set_axis0(&mut self, i: usize, sub: &Tensor) {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let n: usize = self.shape[1..].iter().product();
+        assert_eq!(sub.numel(), n, "set_axis0: size mismatch");
+        self.data[i * n..(i + 1) * n].copy_from_slice(sub.data());
+    }
+
+    /// Stack equal-shaped tensors along a new axis 0.
+    pub fn stack(parts: &[Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("stack: empty input");
+        }
+        let inner = parts[0].shape.clone();
+        let mut data = Vec::with_capacity(parts.len() * parts[0].numel());
+        for p in parts {
+            if p.shape != inner {
+                bail!("stack: shape mismatch {:?} vs {:?}", p.shape, inner);
+            }
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(&inner);
+        Ok(Tensor { shape, data })
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Mean squared difference against another tensor of identical shape.
+    pub fn mse(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("mse: shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let sum: f32 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        Ok(sum / self.data.len().max(1) as f32)
+    }
+
+    /// Largest absolute element difference (for equivalence tests).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("max_abs_diff: shape mismatch {:?} vs {:?}", self.shape,
+                  other.shape);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+
+    /// True iff every element is bit-identical.
+    pub fn bit_eq(&self, other: &Tensor) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_length() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect())
+            .unwrap();
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn set_and_get() {
+        let mut t = Tensor::zeros(&[3, 4]);
+        t.set(&[2, 1], 7.5);
+        assert_eq!(t.at(&[2, 1]), 7.5);
+        assert_eq!(t.data().iter().filter(|&&x| x != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn axis0_roundtrip() {
+        let t = Tensor::new(vec![2, 2, 2], (0..8).map(|i| i as f32).collect())
+            .unwrap();
+        let sub = t.index_axis0(1);
+        assert_eq!(sub.shape(), &[2, 2]);
+        assert_eq!(sub.data(), &[4.0, 5.0, 6.0, 7.0]);
+        let mut t2 = t.clone();
+        t2.set_axis0(0, &sub);
+        assert_eq!(t2.index_axis0(0), sub);
+    }
+
+    #[test]
+    fn stack_and_reshape() {
+        let a = Tensor::full(&[2], 1.0);
+        let b = Tensor::full(&[2], 2.0);
+        let s = Tensor::stack(&[a, b]).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        let r = s.reshape(vec![4]).unwrap();
+        assert_eq!(r.data(), &[1.0, 1.0, 2.0, 2.0]);
+        assert!(r.clone().reshape(vec![3]).is_err());
+        assert!(Tensor::stack(&[]).is_err());
+        let c = Tensor::full(&[3], 0.0);
+        assert!(Tensor::stack(&[Tensor::full(&[2], 0.0), c]).is_err());
+    }
+
+    #[test]
+    fn metrics() {
+        let a = Tensor::new(vec![4], vec![0.0, 1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![4], vec![1.0, 1.0, 2.0, 5.0]).unwrap();
+        assert_eq!(a.mean(), 1.5);
+        assert!((a.mse(&b).unwrap() - (1.0 + 4.0) / 4.0).abs() < 1e-6);
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 2.0);
+        assert!(!a.bit_eq(&b));
+        assert!(a.bit_eq(&a.clone()));
+        assert!(a.mse(&Tensor::zeros(&[2])).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let s = Tensor::scalar(2.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.numel(), 1);
+    }
+}

@@ -1,0 +1,170 @@
+//! Mini property-testing framework (the proptest role, built in-tree).
+//!
+//! A property is a closure over a [`Gen`] (a seeded random source with
+//! convenience generators). [`check`] runs it across many seeds and, on
+//! failure, re-reports the failing seed so the case can be replayed
+//! deterministically with [`replay`]. Shrinking is seed-based: the failing
+//! seed is printed, and generators are size-parameterized so smaller `size`
+//! values produce structurally smaller cases.
+
+use crate::util::rng::Rng;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Structural size knob: generators should scale with it.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    /// usize in [lo, hi).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    /// A vector of f32 in [0,1) with length in [1, max_len].
+    pub fn vec_f32(&mut self, max_len: usize) -> Vec<f32> {
+        let len = self.usize_in(1, max_len.max(2));
+        self.rng.vec_f32(len)
+    }
+
+    /// A binary (0.0/1.0) vector of exactly `len`.
+    pub fn binary_vec(&mut self, len: usize) -> Vec<f32> {
+        self.rng.binary_vec(len, 0.5)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+}
+
+/// Outcome of a [`check`] run.
+#[derive(Debug)]
+pub struct CheckFailure {
+    pub seed: u64,
+    pub case: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for CheckFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed on case {} (replay seed {:#x}): {}",
+            self.case, self.seed, self.message
+        )
+    }
+}
+
+/// Run `prop` across `cases` generated inputs. Properties return
+/// `Err(message)` to fail, `Ok(())` to pass.
+///
+/// The per-case seed is derived from `base_seed` and the case index;
+/// failures report it for deterministic replay.
+pub fn check<F>(base_seed: u64, cases: usize, mut prop: F)
+                -> Result<(), CheckFailure>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // Grow structural size with case index: early cases are small
+        // (cheap shrink-like behaviour), later ones larger.
+        let size = 2 + (case * 30) / cases.max(1);
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut gen = Gen::new(seed, size);
+        if let Err(message) = prop(&mut gen) {
+            return Err(CheckFailure { seed, case, message });
+        }
+    }
+    Ok(())
+}
+
+/// Re-run a property on the exact seed a failure reported.
+pub fn replay<F>(seed: u64, size: usize, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut gen = Gen::new(seed, size);
+    prop(&mut gen)
+}
+
+/// Assert-style helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, |g| {
+            let v = g.vec_f32(g.size + 2);
+            prop_assert!(!v.is_empty(), "empty");
+            prop_assert!(
+                v.iter().all(|x| (0.0..1.0).contains(x)),
+                "out of range"
+            );
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn failing_property_reports_seed_and_replays() {
+        let fail = check(2, 500, |g| {
+            let n = g.usize_in(0, 100);
+            prop_assert!(n != 37, "hit 37");
+            Ok(())
+        });
+        let failure = fail.expect_err("should eventually hit 37");
+        // Replay must reproduce the same failure.
+        let replayed = replay(failure.seed, 0, |g| {
+            let n = g.usize_in(0, 100);
+            prop_assert!(n != 37, "hit 37");
+            Ok(())
+        });
+        assert!(replayed.is_err());
+        assert!(failure.to_string().contains("hit 37"));
+    }
+
+    #[test]
+    fn sizes_grow_over_cases() {
+        let mut max_seen = 0usize;
+        let _ = check(3, 100, |g| {
+            max_seen = max_seen.max(g.size);
+            Ok(())
+        });
+        assert!(max_seen >= 20, "size should grow, saw max {max_seen}");
+    }
+
+    #[test]
+    fn binary_vec_is_binary() {
+        check(4, 50, |g| {
+            let v = g.binary_vec(64);
+            prop_assert!(
+                v.iter().all(|&x| x == 0.0 || x == 1.0),
+                "non-binary value"
+            );
+            Ok(())
+        })
+        .unwrap();
+    }
+}

@@ -1,0 +1,9 @@
+//! Hand-rolled substrates: the offline environment provides only the `xla`
+//! crate, so the JSON/TOML/RNG/property-test/timing layers live here.
+//! See DESIGN.md §4.4.
+
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod timer;
+pub mod toml;

@@ -1,0 +1,279 @@
+//! Minimal TOML subset parser for experiment config files.
+//!
+//! Supports exactly what `configs/*.toml` uses: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! bool / homogeneous-array values, `#` comments, and blank lines. Nested
+//! inline tables and multi-line strings are intentionally out of scope.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A TOML scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted-path section -> key -> value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Value at (`section`, `key`); the root section is "".
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|m| m.get(key))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(|v| v.as_str())
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key).and_then(|v| v.as_usize())
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).and_then(|v| v.as_bool())
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TOML error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a config document.
+pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    doc.sections.entry(String::new()).or_default();
+    let mut section = String::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = name.to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        doc.sections
+            .get_mut(&section)
+            .unwrap()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn err(lineno: usize, msg: &str) -> TomlError {
+    TomlError { line: lineno + 1, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<TomlValue, TomlError> {
+    if text.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quote in string"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|part| parse_value(part.trim(), lineno))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if text.contains('.') || text.contains('e') || text.contains('E') {
+        if let Ok(f) = text.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = text.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    Err(err(lineno, &format!("cannot parse value {text:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = parse(
+            r#"
+            # experiment config
+            name = "growing"
+            seed = 42
+
+            [train]
+            steps = 500
+            lr = 2e-3
+            log_every = 10   # inline comment
+            resume = false
+
+            [pool]
+            size = 64
+            shape = [32, 32, 12]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("growing"));
+        assert_eq!(doc.get_usize("", "seed"), Some(42));
+        assert_eq!(doc.get_usize("train", "steps"), Some(500));
+        assert_eq!(doc.get_f64("train", "lr"), Some(2e-3));
+        assert_eq!(doc.get_bool("train", "resume"), Some(false));
+        let shape = doc.get("pool", "shape").unwrap();
+        assert_eq!(
+            shape,
+            &TomlValue::Arr(vec![
+                TomlValue::Int(32),
+                TomlValue::Int(32),
+                TomlValue::Int(12)
+            ])
+        );
+    }
+
+    #[test]
+    fn dotted_sections() {
+        let doc = parse("[a.b]\nx = 1\n").unwrap();
+        assert_eq!(doc.get_usize("a.b", "x"), Some(1));
+    }
+
+    #[test]
+    fn int_as_f64() {
+        let doc = parse("x = 3\n").unwrap();
+        assert_eq!(doc.get_f64("", "x"), Some(3.0));
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let doc = parse("n = 1_024\n").unwrap();
+        assert_eq!(doc.get_usize("", "n"), Some(1024));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("", "s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("x = \"open\n").is_err());
+        assert!(parse("x = [1, 2\n").is_err());
+        assert!(parse("x = what\n").is_err());
+    }
+
+    #[test]
+    fn missing_lookups_are_none() {
+        let doc = parse("x = 1\n").unwrap();
+        assert_eq!(doc.get("nope", "x"), None);
+        assert_eq!(doc.get("", "y"), None);
+        assert_eq!(doc.get_bool("", "x"), None);
+    }
+}

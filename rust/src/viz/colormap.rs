@@ -1,0 +1,103 @@
+//! Color palettes: grayscale, a viridis-like continuous map, and the ARC
+//! 10-color palette used by the Fig. 8 space-time diagrams.
+
+/// Map v in [0,1] to grayscale.
+pub fn gray(v: f32) -> [u8; 3] {
+    let g = (v.clamp(0.0, 1.0) * 255.0) as u8;
+    [g, g, g]
+}
+
+/// Map v in [0,1] through a compact viridis-like gradient
+/// (piecewise-linear through 5 anchor colors).
+pub fn viridis(v: f32) -> [u8; 3] {
+    const ANCHORS: [[f32; 3]; 5] = [
+        [0.267, 0.005, 0.329],
+        [0.229, 0.322, 0.546],
+        [0.127, 0.566, 0.551],
+        [0.369, 0.789, 0.383],
+        [0.993, 0.906, 0.144],
+    ];
+    let v = v.clamp(0.0, 1.0) * (ANCHORS.len() - 1) as f32;
+    let lo = (v.floor() as usize).min(ANCHORS.len() - 2);
+    let frac = v - lo as f32;
+    let mut rgb = [0u8; 3];
+    for (i, out) in rgb.iter_mut().enumerate() {
+        let c = ANCHORS[lo][i] * (1.0 - frac) + ANCHORS[lo + 1][i] * frac;
+        *out = (c * 255.0) as u8;
+    }
+    rgb
+}
+
+/// The ARC palette (10 colors, index 0 = background black).
+pub fn arc_color(index: u8) -> [u8; 3] {
+    const PALETTE: [[u8; 3]; 10] = [
+        [0, 0, 0],        // 0 background
+        [0, 116, 217],    // 1 blue
+        [255, 65, 54],    // 2 red
+        [46, 204, 64],    // 3 green
+        [255, 220, 0],    // 4 yellow
+        [170, 170, 170],  // 5 grey
+        [240, 18, 190],   // 6 magenta
+        [255, 133, 27],   // 7 orange
+        [127, 219, 255],  // 8 light blue
+        [135, 12, 37],    // 9 maroon
+    ];
+    PALETTE[(index as usize).min(9)]
+}
+
+/// Composite an RGBA cell (premultiplied-ish, alpha in [0,1]) over white —
+/// the paper's figures render growing-NCA states on white.
+pub fn rgba_over_white(rgba: [f32; 4]) -> [u8; 3] {
+    let a = rgba[3].clamp(0.0, 1.0);
+    let mut out = [0u8; 3];
+    for (i, o) in out.iter_mut().enumerate() {
+        let c = rgba[i].clamp(0.0, 1.0) * a + (1.0 - a);
+        *o = (c * 255.0) as u8;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gray_endpoints() {
+        assert_eq!(gray(0.0), [0, 0, 0]);
+        assert_eq!(gray(1.0), [255, 255, 255]);
+        assert_eq!(gray(2.0), [255, 255, 255]); // clamps
+        assert_eq!(gray(-1.0), [0, 0, 0]);
+    }
+
+    #[test]
+    fn viridis_monotone_luminance() {
+        let lum = |rgb: [u8; 3]| {
+            0.2126 * rgb[0] as f32 + 0.7152 * rgb[1] as f32
+                + 0.0722 * rgb[2] as f32
+        };
+        let mut prev = lum(viridis(0.0));
+        for i in 1..=10 {
+            let cur = lum(viridis(i as f32 / 10.0));
+            assert!(cur >= prev - 1.0, "luminance dipped at {i}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn arc_palette_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10u8 {
+            assert!(seen.insert(arc_color(i)), "duplicate color {i}");
+        }
+        assert_eq!(arc_color(0), [0, 0, 0]);
+        assert_eq!(arc_color(200), arc_color(9)); // clamps
+    }
+
+    #[test]
+    fn rgba_compositing() {
+        assert_eq!(rgba_over_white([0.0, 0.0, 0.0, 0.0]), [255, 255, 255]);
+        assert_eq!(rgba_over_white([1.0, 0.0, 0.0, 1.0]), [255, 0, 0]);
+        let half = rgba_over_white([0.0, 0.0, 0.0, 0.5]);
+        assert!(half[0] > 100 && half[0] < 150);
+    }
+}

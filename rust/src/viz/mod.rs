@@ -1,0 +1,6 @@
+//! Visualization stack: PPM images, palettes, space-time diagrams (Fig. 8)
+//! and RGBA state rendering (Fig. 4/5/7).
+
+pub mod colormap;
+pub mod ppm;
+pub mod spacetime;

@@ -1,0 +1,135 @@
+//! Binary PPM (P6) image writer — zero-dependency raster output.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// RGB8 raster image.
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    /// Row-major RGB triples.
+    pub pixels: Vec<[u8; 3]>,
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Image {
+        Image { width, height, pixels: vec![[0, 0, 0]; width * height] }
+    }
+
+    pub fn set(&mut self, y: usize, x: usize, rgb: [u8; 3]) {
+        debug_assert!(y < self.height && x < self.width);
+        self.pixels[y * self.width + x] = rgb;
+    }
+
+    pub fn get(&self, y: usize, x: usize) -> [u8; 3] {
+        self.pixels[y * self.width + x]
+    }
+
+    /// Nearest-neighbour upscale (crisp cell boundaries for CA renders).
+    pub fn upscale(&self, factor: usize) -> Image {
+        assert!(factor >= 1);
+        let mut out = Image::new(self.width * factor, self.height * factor);
+        for y in 0..out.height {
+            for x in 0..out.width {
+                out.set(y, x, self.get(y / factor, x / factor));
+            }
+        }
+        out
+    }
+
+    /// Write binary P6.
+    pub fn write_ppm(&self, path: &Path) -> Result<()> {
+        if self.width == 0 || self.height == 0 {
+            bail!("write_ppm: empty image");
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        let mut buf =
+            Vec::with_capacity(32 + self.pixels.len() * 3);
+        write!(buf, "P6\n{} {}\n255\n", self.width, self.height)?;
+        for px in &self.pixels {
+            buf.extend_from_slice(px);
+        }
+        std::fs::write(path, buf)
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Horizontal strip of images separated by 1px dividers (Fig. 7 layout).
+    pub fn hstrip(images: &[Image], divider: [u8; 3]) -> Image {
+        assert!(!images.is_empty());
+        let h = images.iter().map(|i| i.height).max().unwrap();
+        let w: usize =
+            images.iter().map(|i| i.width).sum::<usize>() + images.len() - 1;
+        let mut out = Image::new(w, h);
+        for px in &mut out.pixels {
+            *px = divider;
+        }
+        let mut x0 = 0;
+        for img in images {
+            for y in 0..img.height {
+                for x in 0..img.width {
+                    out.set(y, x0 + x, img.get(y, x));
+                }
+            }
+            x0 += img.width + 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppm_header_and_size() {
+        let dir = std::env::temp_dir().join("cax_ppm_test");
+        let path = dir.join("img.ppm");
+        let mut img = Image::new(3, 2);
+        img.set(0, 0, [255, 0, 0]);
+        img.set(1, 2, [0, 0, 255]);
+        img.write_ppm(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P6\n3 2\n255\n"));
+        assert_eq!(bytes.len(), "P6\n3 2\n255\n".len() + 18);
+        assert_eq!(&bytes[11..14], &[255, 0, 0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn upscale_replicates_pixels() {
+        let mut img = Image::new(2, 1);
+        img.set(0, 0, [1, 2, 3]);
+        img.set(0, 1, [4, 5, 6]);
+        let big = img.upscale(3);
+        assert_eq!(big.width, 6);
+        assert_eq!(big.height, 3);
+        assert_eq!(big.get(2, 2), [1, 2, 3]);
+        assert_eq!(big.get(0, 3), [4, 5, 6]);
+    }
+
+    #[test]
+    fn hstrip_concatenates_with_divider() {
+        let a = Image::new(2, 2);
+        let mut b = Image::new(3, 1);
+        b.set(0, 0, [9, 9, 9]);
+        let strip = Image::hstrip(&[a, b], [7, 7, 7]);
+        assert_eq!(strip.width, 2 + 1 + 3);
+        assert_eq!(strip.height, 2);
+        assert_eq!(strip.get(0, 2), [7, 7, 7]); // divider column
+        assert_eq!(strip.get(0, 3), [9, 9, 9]);
+        assert_eq!(strip.get(1, 3), [7, 7, 7]); // below the short image
+    }
+
+    #[test]
+    fn empty_image_rejected() {
+        let img = Image::new(0, 0);
+        assert!(img.write_ppm(Path::new("/tmp/should_not_exist.ppm")).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Space-time diagram and state renderers for the paper's figures.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::viz::colormap;
+use crate::viz::ppm::Image;
+
+/// Render a binary/continuous 1D space-time tensor [T, W] (rows = time).
+pub fn render_spacetime_1d(traj: &Tensor) -> Result<Image> {
+    if traj.shape().len() != 2 {
+        bail!("render_spacetime_1d wants [T, W], got {:?}", traj.shape());
+    }
+    let (t, w) = (traj.shape()[0], traj.shape()[1]);
+    let mut img = Image::new(w, t);
+    for y in 0..t {
+        for x in 0..w {
+            img.set(y, x, colormap::gray(1.0 - traj.at(&[y, x])));
+        }
+    }
+    Ok(img)
+}
+
+/// Render an ARC color-logit trajectory [T, W, 10] as a Fig. 8 diagram:
+/// per-cell argmax color per row of time.
+pub fn render_spacetime_arc(traj: &Tensor) -> Result<Image> {
+    if traj.shape().len() != 3 {
+        bail!("render_spacetime_arc wants [T, W, C], got {:?}", traj.shape());
+    }
+    let (t, w, c) = (traj.shape()[0], traj.shape()[1], traj.shape()[2]);
+    let mut img = Image::new(w, t);
+    for y in 0..t {
+        for x in 0..w {
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for ch in 0..c {
+                let v = traj.at(&[y, x, ch]);
+                if v > best_v {
+                    best_v = v;
+                    best = ch;
+                }
+            }
+            img.set(y, x, colormap::arc_color(best as u8));
+        }
+    }
+    Ok(img)
+}
+
+/// Render one ARC row (colors, not logits) as a 1-pixel-tall strip.
+pub fn render_arc_row(row: &[u8]) -> Image {
+    let mut img = Image::new(row.len(), 1);
+    for (x, &c) in row.iter().enumerate() {
+        img.set(0, x, colormap::arc_color(c));
+    }
+    img
+}
+
+/// Render an NCA state's RGBA channels [H, W, C>=4] over white.
+pub fn render_rgba_state(state: &Tensor) -> Result<Image> {
+    if state.shape().len() != 3 || state.shape()[2] < 4 {
+        bail!("render_rgba_state wants [H, W, C>=4], got {:?}", state.shape());
+    }
+    let (h, w) = (state.shape()[0], state.shape()[1]);
+    let mut img = Image::new(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            let rgba = [
+                state.at(&[y, x, 0]),
+                state.at(&[y, x, 1]),
+                state.at(&[y, x, 2]),
+                state.at(&[y, x, 3]),
+            ];
+            img.set(y, x, colormap::rgba_over_white(rgba));
+        }
+    }
+    Ok(img)
+}
+
+/// Render a grayscale field [H, W] with the viridis map (Lenia frames).
+pub fn render_field(field: &Tensor) -> Result<Image> {
+    if field.shape().len() != 2 {
+        bail!("render_field wants [H, W], got {:?}", field.shape());
+    }
+    let (h, w) = (field.shape()[0], field.shape()[1]);
+    let mut img = Image::new(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            img.set(y, x, colormap::viridis(field.at(&[y, x])));
+        }
+    }
+    Ok(img)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spacetime_1d_dimensions_and_polarity() {
+        let mut traj = Tensor::zeros(&[4, 8]);
+        traj.set(&[1, 3], 1.0);
+        let img = render_spacetime_1d(&traj).unwrap();
+        assert_eq!((img.width, img.height), (8, 4));
+        assert_eq!(img.get(1, 3), [0, 0, 0]); // live cell = black ink
+        assert_eq!(img.get(0, 0), [255, 255, 255]);
+        assert!(render_spacetime_1d(&Tensor::zeros(&[2])).is_err());
+    }
+
+    #[test]
+    fn spacetime_arc_argmax_colors() {
+        let mut traj = Tensor::zeros(&[2, 3, 10]);
+        traj.set(&[0, 0, 2], 5.0); // red wins
+        traj.set(&[1, 2, 4], 1.0); // yellow wins
+        let img = render_spacetime_arc(&traj).unwrap();
+        assert_eq!(img.get(0, 0), colormap::arc_color(2));
+        assert_eq!(img.get(1, 2), colormap::arc_color(4));
+        assert_eq!(img.get(0, 1), colormap::arc_color(0));
+    }
+
+    #[test]
+    fn rgba_state_render() {
+        let mut state = Tensor::zeros(&[2, 2, 6]);
+        state.set(&[0, 0, 0], 1.0); // red
+        state.set(&[0, 0, 3], 1.0); // opaque
+        let img = render_rgba_state(&state).unwrap();
+        assert_eq!(img.get(0, 0), [255, 0, 0]);
+        assert_eq!(img.get(1, 1), [255, 255, 255]); // transparent -> white
+        assert!(render_rgba_state(&Tensor::zeros(&[2, 2, 3])).is_err());
+    }
+
+    #[test]
+    fn arc_row_strip() {
+        let img = render_arc_row(&[0, 1, 2]);
+        assert_eq!((img.width, img.height), (3, 1));
+        assert_eq!(img.get(0, 1), colormap::arc_color(1));
+    }
+
+    #[test]
+    fn field_render_shape() {
+        let img = render_field(&Tensor::full(&[3, 5], 0.5)).unwrap();
+        assert_eq!((img.width, img.height), (5, 3));
+    }
+}

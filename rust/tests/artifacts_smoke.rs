@@ -1,0 +1,152 @@
+//! Smoke tests: every artifact in the manifest loads, compiles and executes
+//! with manifest-shaped inputs, and returns manifest-shaped outputs.
+//!
+//! This is the L3 half of the build contract — aot.py promises signatures
+//! in manifest.json; these tests hold the runtime to them.
+
+use cax::runtime::{Engine, Value};
+use cax::tensor::Tensor;
+use cax::util::rng::Rng;
+
+mod common;
+use common::engine;
+
+/// Build plausible inputs for an artifact straight from its manifest spec.
+fn synth_inputs(engine: &Engine, name: &str, rng: &mut Rng) -> Vec<Value> {
+    let info = engine.manifest().artifact(name).unwrap();
+    info.inputs
+        .iter()
+        .map(|spec| match spec.dtype {
+            cax::runtime::Dtype::F32 => {
+                // Parameters come from their blob when one exists (random
+                // parameters can NaN out some train steps); states/batches
+                // are random in [0, 1).
+                if spec.name == "params" {
+                    for e in cax::coordinator::registry::table1() {
+                        if e.artifacts.contains(&name) {
+                            if let Some(blob) = e.params_blob {
+                                return Value::F32(
+                                    engine.load_params(blob).unwrap(),
+                                );
+                            }
+                        }
+                    }
+                }
+                Value::F32(
+                    Tensor::new(spec.shape.clone(), rng.vec_f32(spec.numel()))
+                        .unwrap(),
+                )
+            }
+            cax::runtime::Dtype::I32 => Value::I32(0),
+            cax::runtime::Dtype::U32 => Value::U32(7),
+        })
+        .collect()
+}
+
+#[test]
+fn every_artifact_executes_with_manifest_shapes() {
+    let engine = engine();
+    let names: Vec<String> =
+        engine.manifest().artifacts.keys().cloned().collect();
+    assert!(names.len() >= 25, "expected >=25 artifacts, got {}",
+            names.len());
+    let mut rng = Rng::new(0xA57);
+    for name in &names {
+        let inputs = synth_inputs(&engine, name, &mut rng);
+        let outputs = engine
+            .execute(name, &inputs)
+            .unwrap_or_else(|e| panic!("executing {name}: {e:#}"));
+        let info = engine.manifest().artifact(name).unwrap();
+        assert_eq!(outputs.len(), info.outputs.len(), "{name}: output arity");
+        for (o, spec) in outputs.iter().zip(&info.outputs) {
+            assert_eq!(o.shape(), &spec.shape[..], "{name}: output shape");
+            assert!(
+                o.data().iter().all(|v| v.is_finite()),
+                "{name}: non-finite output"
+            );
+        }
+    }
+}
+
+#[test]
+fn wrong_shape_is_rejected_before_ffi() {
+    let engine = engine();
+    let bad = Tensor::zeros(&[3, 3]);
+    let err = engine
+        .execute("life_step", &[Value::F32(bad)])
+        .expect_err("shape mismatch must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shape"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let engine = engine();
+    let err = engine.execute("life_step", &[]).expect_err("arity");
+    assert!(format!("{err:#}").contains("inputs"));
+}
+
+#[test]
+fn wrong_dtype_is_rejected() {
+    let engine = engine();
+    let info = engine.manifest().artifact("life_step").unwrap();
+    let spec = &info.inputs[0];
+    let _shape = spec.shape.clone();
+    let err = engine
+        .execute("life_step", &[Value::I32(1)])
+        .expect_err("dtype mismatch must fail");
+    assert!(format!("{err:#}").contains("dtype"));
+}
+
+#[test]
+fn unknown_artifact_errors_cleanly() {
+    let engine = engine();
+    assert!(engine.execute("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn params_blobs_match_param_counts() {
+    let engine = engine();
+    for e in cax::coordinator::registry::table1() {
+        let Some(blob) = e.params_blob else { continue };
+        let params = engine.load_params(blob).unwrap();
+        // Every artifact of the family taking `params` must agree.
+        for &art in e.artifacts {
+            let info = engine.manifest().artifact(art).unwrap();
+            if let Some(spec) =
+                info.inputs.iter().find(|s| s.name == "params")
+            {
+                assert_eq!(spec.numel(), params.numel(),
+                           "{art} disagrees with blob {blob}");
+            }
+            if let Some(n) = info.meta_usize("param_count") {
+                assert_eq!(n, params.numel(), "{art} meta.param_count");
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_stats_accumulate() {
+    let engine = engine();
+    let before = engine.stats();
+    let info = engine.manifest().artifact("eca_step").unwrap();
+    let state = Tensor::zeros(&info.inputs[0].shape.clone());
+    let rule = Tensor::zeros(&[8]);
+    engine
+        .execute("eca_step", &[Value::F32(state), Value::F32(rule)])
+        .unwrap();
+    let after = engine.stats();
+    assert_eq!(after.executions, before.executions + 1);
+    assert!(after.bytes_in > before.bytes_in);
+    assert!(after.execute_secs >= before.execute_secs);
+}
+
+#[test]
+fn compile_cache_hits_on_second_call() {
+    let engine = engine();
+    engine.ensure_compiled("eca_step").unwrap();
+    let compiles = engine.stats().compiles;
+    engine.ensure_compiled("eca_step").unwrap();
+    assert_eq!(engine.stats().compiles, compiles, "cache miss on re-compile");
+}

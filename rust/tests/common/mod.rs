@@ -1,0 +1,26 @@
+//! Shared test scaffolding: locate the artifacts directory and build an
+//! [`Engine`] exactly as the CLI does.
+
+use std::path::PathBuf;
+
+use cax::runtime::Engine;
+
+/// The artifacts directory: `CAX_ARTIFACTS` override, else `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("CAX_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A fresh engine over the build's artifacts. Panics with a pointer to
+/// `make artifacts` if they are missing.
+pub fn engine() -> Engine {
+    let dir = artifacts_dir();
+    Engine::load(&dir).unwrap_or_else(|e| {
+        panic!(
+            "cannot load artifacts from {} — run `make artifacts` first\n{e:#}",
+            dir.display()
+        )
+    })
+}

@@ -1,0 +1,275 @@
+//! Property-based tests over coordinator invariants (routing of examples
+//! into batches, pool state management, dataset generator semantics) using
+//! the in-tree `util::check` shrinking property harness.
+
+use cax::datasets::arc1d::{argmax_colors, one_hot_batch, Task};
+use cax::datasets::mnist::{self, MnistConfig};
+use cax::pool::SamplePool;
+use cax::prop_assert;
+use cax::tensor::Tensor;
+use cax::util::check::{check, Gen};
+use cax::util::rng::Rng;
+
+// ----------------------------------------------------------------- arc1d
+
+#[test]
+fn prop_arc_examples_well_formed() {
+    // Every generated example, for every task: input/target same width,
+    // colors < 10, and input differs from target only when the task demands
+    // a transformation (never empty rows).
+    check(0x1DA, 150, |g: &mut Gen| {
+        let width = g.usize_in(16, 64);
+        let task = Task::ALL[g.usize_in(0, Task::ALL.len())];
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let e = task.generate(width, &mut rng);
+        prop_assert!(e.input.len() == width, "input width");
+        prop_assert!(e.target.len() == width, "target width");
+        prop_assert!(e.input.iter().all(|&c| c < 10), "input colors");
+        prop_assert!(e.target.iter().all(|&c| c < 10), "target colors");
+        prop_assert!(e.input.iter().any(|&c| c != 0), "input non-empty");
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_move_tasks_shift_exactly() {
+    // The Move-k family: target is the input circularly shifted k cells
+    // right (k = 1, 2, 3) — checked against the generator's own output.
+    check(0x11E, 100, |g: &mut Gen| {
+        let width = g.usize_in(16, 48);
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        for (task, k) in
+            [(Task::Move1, 1usize), (Task::Move2, 2), (Task::Move3, 3)]
+        {
+            let e = task.generate(width, &mut rng);
+            let mut shifted = vec![0u8; width];
+            for (i, &c) in e.input.iter().enumerate() {
+                if c != 0 {
+                    shifted[i + k] = c;
+                }
+            }
+            prop_assert!(shifted == e.target, "move-{k} mismatch");
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_denoise_target_is_the_clean_block() {
+    check(0xDE01, 100, |g: &mut Gen| {
+        let width = g.usize_in(16, 48);
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let e = Task::Denoise.generate(width, &mut rng);
+        // Target: one contiguous block of a single color.
+        let nz: Vec<usize> =
+            (0..width).filter(|&i| e.target[i] != 0).collect();
+        prop_assert!(!nz.is_empty(), "empty denoise target");
+        let color = e.target[nz[0]];
+        prop_assert!(nz.windows(2).all(|w| w[1] == w[0] + 1),
+                     "target not contiguous");
+        prop_assert!(nz.iter().all(|&i| e.target[i] == color),
+                     "target not single-colored");
+        // Input contains the block plus noise pixels.
+        prop_assert!(nz.iter().all(|&i| e.input[i] == color),
+                     "block must survive in input");
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_dataset_split_deterministic_and_disjoint_streams() {
+    check(0x5EED, 40, |g: &mut Gen| {
+        let width = g.usize_in(16, 40);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let task = Task::ALL[g.usize_in(0, Task::ALL.len())];
+        let (tr1, te1) = task.dataset(width, 8, 8, seed);
+        let (tr2, te2) = task.dataset(width, 8, 8, seed);
+        prop_assert!(tr1 == tr2 && te1 == te2, "dataset not deterministic");
+        // Train and test streams must differ somewhere (disjoint RNG).
+        prop_assert!(tr1 != te1, "train/test streams identical");
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_one_hot_argmax_roundtrip() {
+    check(0xA007, 100, |g: &mut Gen| {
+        let width = g.usize_in(4, 40);
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let row: Vec<u8> =
+            (0..width).map(|_| rng.range(0, 10) as u8).collect();
+        let batch = one_hot_batch(&[&row], width);
+        prop_assert!(batch.shape() == [1, width, 10], "one-hot shape");
+        // Exactly one 1 per cell.
+        for x in 0..width {
+            let s: f32 = (0..10).map(|c| batch.at(&[0, x, c])).sum();
+            prop_assert!((s - 1.0).abs() < 1e-6, "not one-hot at {x}");
+        }
+        let back = argmax_colors(&batch);
+        prop_assert!(back[0] == row, "argmax(one_hot(row)) != row");
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ------------------------------------------------------------------ pool
+
+#[test]
+fn prop_pool_sample_writeback_cycle_preserves_untouched_slots() {
+    check(0x9001, 80, |g: &mut Gen| {
+        let cap = g.usize_in(2, 10);
+        let shape = [g.usize_in(1, 4), g.usize_in(1, 4)];
+        let seed_state = Tensor::full(&shape, 0.5);
+        let mut pool = SamplePool::new(cap, &seed_state);
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let rounds = g.usize_in(1, 6);
+        let mut last_written: Vec<Option<f32>> = vec![None; cap];
+        for round in 0..rounds {
+            let b = g.usize_in(1, cap + 1).min(cap);
+            let (idx, mut batch) = pool.sample(b, &mut rng);
+            let stamp = (round + 1) as f32;
+            batch.data_mut().iter_mut().for_each(|v| *v = stamp);
+            pool.write_back(&idx, &batch);
+            for &i in &idx {
+                last_written[i] = Some(stamp);
+            }
+            for i in 0..cap {
+                let expect = last_written[i].unwrap_or(0.5);
+                prop_assert!(
+                    pool.entry(i).at(&[0, 0]) == expect,
+                    "slot {i} expected {expect}"
+                );
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ----------------------------------------------------------------- mnist
+
+#[test]
+fn prop_digit_corpus_labeled_and_normalized() {
+    check(0xD161, 60, |g: &mut Gen| {
+        let h = g.usize_in(12, 20);
+        let w = g.usize_in(12, 20);
+        let cfg = MnistConfig::for_grid(h, w);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let digits = mnist::dataset(10, &cfg, seed);
+        prop_assert!(digits.len() == 10, "corpus size");
+        for d in &digits {
+            prop_assert!(d.label < 10, "label range");
+            prop_assert!(d.image.shape() == [h, w], "image shape");
+            let (mut lo, mut hi, mut ink) = (f32::MAX, f32::MIN, 0);
+            for &v in d.image.data() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+                if v > 0.1 {
+                    ink += 1;
+                }
+            }
+            prop_assert!(lo >= 0.0 && hi <= 1.0, "pixel range");
+            prop_assert!(ink > 5, "digit has almost no ink");
+            prop_assert!(ink < h * w / 2, "digit floods the grid");
+        }
+        // All ten classes appear (dataset cycles labels).
+        let mut seen = [false; 10];
+        for d in &digits {
+            seen[d.label as usize] = true;
+        }
+        prop_assert!(seen.iter().all(|&s| s), "not all classes present");
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_batching_helpers_agree_with_sources() {
+    check(0xBA7C, 60, |g: &mut Gen| {
+        let cfg = MnistConfig::for_grid(12, 12);
+        let digits = mnist::dataset(6, &cfg, g.usize_in(0, 1 << 20) as u64);
+        let refs: Vec<&mnist::Digit> = digits.iter().collect();
+        let images = mnist::batch_images(&refs);
+        let labels = mnist::batch_labels(&refs);
+        prop_assert!(images.shape() == [6, 12, 12], "image batch shape");
+        prop_assert!(labels.shape() == [6, 10], "label batch shape");
+        for (i, d) in digits.iter().enumerate() {
+            prop_assert!(images.index_axis0(i).bit_eq(&d.image),
+                         "image {i} corrupted by batching");
+            let onehot_sum: f32 =
+                (0..10).map(|c| labels.at(&[i, c])).sum();
+            prop_assert!((onehot_sum - 1.0).abs() < 1e-6, "label one-hot");
+            prop_assert!(labels.at(&[i, d.label as usize]) == 1.0,
+                         "label position");
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ------------------------------------------------------------------- rng
+
+#[test]
+fn prop_rng_streams_fold_in_independent() {
+    check(0xF01D, 60, |g: &mut Gen| {
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let mut a = Rng::new(seed).fold_in(1);
+        let mut b = Rng::new(seed).fold_in(2);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        prop_assert!(xs != ys, "fold_in streams collide");
+        // Determinism.
+        let mut a2 = Rng::new(seed).fold_in(1);
+        let xs2: Vec<u64> = (0..8).map(|_| a2.next_u64()).collect();
+        prop_assert!(xs == xs2, "stream not reproducible");
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_sample_indices_distinct_in_range() {
+    check(0x5A3B, 100, |g: &mut Gen| {
+        let n = g.usize_in(1, 50);
+        let k = g.usize_in(0, n + 1).min(n);
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let idx = rng.sample_indices(n, k);
+        prop_assert!(idx.len() == k, "wrong count");
+        prop_assert!(idx.iter().all(|&i| i < n), "out of range");
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        prop_assert!(sorted.len() == k, "duplicates");
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------- tensor
+
+#[test]
+fn prop_tensor_stack_index_roundtrip() {
+    check(0x7E50, 80, |g: &mut Gen| {
+        let n = g.usize_in(1, 6);
+        let shape = [g.usize_in(1, 5), g.usize_in(1, 5)];
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let parts: Vec<Tensor> = (0..n)
+            .map(|_| {
+                Tensor::new(shape.to_vec(),
+                            rng.vec_f32(shape.iter().product()))
+                    .unwrap()
+            })
+            .collect();
+        let stacked = Tensor::stack(&parts).unwrap();
+        for (i, p) in parts.iter().enumerate() {
+            prop_assert!(stacked.index_axis0(i).bit_eq(p),
+                         "roundtrip failed at {i}");
+        }
+        Ok(())
+    })
+    .unwrap();
+}

@@ -1,0 +1,117 @@
+//! E4 — Table 1 coverage: every CA row of the paper's Table 1 is present,
+//! complete (all artifacts + parameter blobs in the manifest), and
+//! instantiable through the registry.
+
+use cax::coordinator::registry::{self, CaType};
+
+mod common;
+use common::engine;
+
+#[test]
+fn registry_matches_manifest_completely() {
+    let engine = engine();
+    let missing = registry::missing_artifacts(engine.manifest());
+    assert!(missing.is_empty(), "missing artifacts: {missing:?}");
+}
+
+#[test]
+fn table1_has_paper_rows() {
+    let rows = registry::table1();
+    assert_eq!(rows.len(), 10, "paper Table 1 has 10 rows");
+    let labels: Vec<&str> = rows.iter().map(|e| e.label).collect();
+    for expected in [
+        "Elementary Cellular Automata",
+        "Conway's Game of Life",
+        "Lenia",
+        "Growing Neural Cellular Automata",
+        "Growing Conditional Neural Cellular Automata",
+        "Growing Unsupervised Neural Cellular Automata",
+        "Self-classifying MNIST Digits",
+        "Diffusing Neural Cellular Automata",
+        "Self-autoencoding MNIST Digits",
+        "1D-ARC Neural Cellular Automata",
+    ] {
+        assert!(labels.contains(&expected), "missing row {expected:?}");
+    }
+}
+
+#[test]
+fn dimensions_column_matches_paper() {
+    for (key, dims) in [
+        ("eca", "1D"),
+        ("life", "2D"),
+        ("lenia", "ND"),
+        ("growing", "2D"),
+        ("conditional", "2D"),
+        ("vae", "2D"),
+        ("mnist", "2D"),
+        ("diffusing", "2D"),
+        ("autoenc3d", "3D"),
+        ("arc", "1D"),
+    ] {
+        assert_eq!(registry::find(key).unwrap().dimensions, dims, "{key}");
+    }
+}
+
+#[test]
+fn all_registry_artifacts_compile() {
+    let engine = engine();
+    for entry in registry::table1() {
+        for &art in entry.artifacts {
+            engine
+                .ensure_compiled(art)
+                .unwrap_or_else(|e| panic!("{}: {art}: {e:#}", entry.key));
+        }
+    }
+}
+
+#[test]
+fn neural_rows_have_train_steps_with_adam_contract() {
+    // Train-step artifacts all share the (params, m, v, step, ..., seed) ->
+    // (params', m', v', loss, ...) contract the trainer depends on.
+    let engine = engine();
+    for entry in registry::table1() {
+        if entry.ca_type != CaType::Neural {
+            continue;
+        }
+        let train = entry
+            .artifacts
+            .iter()
+            .find(|a| a.ends_with("_train_step"))
+            .unwrap_or_else(|| panic!("{} has no train step", entry.key));
+        let info = engine.manifest().artifact(train).unwrap();
+        assert!(info.inputs.len() >= 5, "{train}: too few inputs");
+        assert_eq!(info.inputs[0].name, "params", "{train}");
+        assert_eq!(info.inputs[1].name, "m", "{train}");
+        assert_eq!(info.inputs[2].name, "v", "{train}");
+        assert_eq!(info.inputs[3].name, "step", "{train}");
+        assert_eq!(info.inputs.last().unwrap().name, "seed", "{train}");
+        assert!(info.outputs.len() >= 4, "{train}: too few outputs");
+        // params/m/v round-trip shapes.
+        for i in 0..3 {
+            assert_eq!(info.outputs[i].shape, info.inputs[i].shape,
+                       "{train}: output {i} shape");
+        }
+        // loss is a scalar.
+        assert!(info.outputs[3].shape.is_empty(), "{train}: loss not scalar");
+    }
+}
+
+#[test]
+fn meta_dimensions_consistent_with_input_shapes() {
+    let engine = engine();
+    for (name, info) in &engine.manifest().artifacts {
+        if let (Some(h), Some(w)) =
+            (info.meta_usize("height"), info.meta_usize("width"))
+        {
+            // Some f32 input or output must mention H and W in its shape
+            // (generators like conditional_grow only carry it on outputs).
+            let found = info
+                .inputs
+                .iter()
+                .chain(&info.outputs)
+                .any(|s| s.shape.windows(2).any(|win| win == [h, w]));
+            assert!(found, "{name}: no input/output carries meta {h}x{w}");
+        }
+    }
+}
