@@ -4,9 +4,9 @@
 
 use std::path::PathBuf;
 
-use cax::runtime::Engine;
 use cax::util::timer::{Stats, Timer};
 
+#[allow(dead_code)]
 pub fn artifacts_dir() -> PathBuf {
     if let Ok(dir) = std::env::var("CAX_ARTIFACTS") {
         return PathBuf::from(dir);
@@ -14,8 +14,12 @@ pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-pub fn engine() -> Engine {
-    Engine::load(&artifacts_dir()).expect("run `make artifacts` first")
+/// A fresh PJRT engine over the build's artifacts (pjrt-only benches).
+#[cfg(feature = "pjrt")]
+#[allow(dead_code)]
+pub fn engine() -> cax::runtime::Engine {
+    cax::runtime::Engine::load(&artifacts_dir())
+        .expect("run `make artifacts` first")
 }
 
 /// Quick mode trims iteration counts (CAX_BENCH_QUICK=1 or `--quick`).

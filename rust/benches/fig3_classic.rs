@@ -60,14 +60,22 @@ fn main() {
                               steps)
                 .unwrap();
         });
+        let native = bench(warm, iters, || {
+            sim.run_eca_named(eca_step, eca_roll, Path::Native, &state,
+                              rule, steps)
+                .unwrap();
+        });
         row("eca/cax-fused", &fused, updates);
         row("eca/xla-stepwise", &stepwise, updates);
         row("eca/naive-baseline", &naive, updates);
+        row("eca/native-bitpacked", &native, updates);
         println!(
-            "  speedup: fused is {:.1}x vs naive, {:.1}x vs stepwise \
+            "  speedup: fused is {:.1}x vs naive, {:.1}x vs stepwise; \
+             native-bitpacked is {:.1}x vs naive \
              (paper: 1400x vs CellPyLib on GPU)",
             naive.median / fused.median,
-            stepwise.median / fused.median
+            stepwise.median / fused.median,
+            naive.median / native.median
         );
         if let Some(py) =
             cax::metrics::read_py_baseline(&bench_util::artifacts_dir())
@@ -105,14 +113,22 @@ fn main() {
                                steps)
                 .unwrap();
         });
+        let native = bench(warm, iters, || {
+            sim.run_life_named(life_step, life_roll, Path::Native, &state,
+                               steps)
+                .unwrap();
+        });
         row("life/cax-fused", &fused, updates);
         row("life/xla-stepwise", &stepwise, updates);
         row("life/naive-baseline", &naive, updates);
+        row("life/native-bitpacked", &native, updates);
         println!(
-            "  speedup: fused is {:.1}x vs naive, {:.1}x vs stepwise \
+            "  speedup: fused is {:.1}x vs naive, {:.1}x vs stepwise; \
+             native-bitpacked is {:.1}x vs naive \
              (paper: 2000x vs CellPyLib on GPU)",
             naive.median / fused.median,
-            stepwise.median / fused.median
+            stepwise.median / fused.median,
+            naive.median / native.median
         );
         if let Some(py) =
             cax::metrics::read_py_baseline(&bench_util::artifacts_dir())
@@ -145,14 +161,19 @@ fn main() {
         let naive = bench(0, 2.min(iters), || {
             sim.run_lenia(Path::Naive, &state, steps).unwrap();
         });
+        let native = bench(warm, iters.min(4), || {
+            sim.run_lenia(Path::Native, &state, steps).unwrap();
+        });
         row("lenia/cax-fused", &fused, updates);
         row("lenia/xla-stepwise", &stepwise, updates);
         row("lenia/naive-baseline", &naive, updates);
+        row("lenia/native-tiled", &native, updates);
         println!(
             "  speedup: fused is {:.1}x vs naive (direct O(R^2) conv), \
-             {:.1}x vs stepwise",
+             {:.1}x vs stepwise; native-tiled is {:.1}x vs naive",
             naive.median / fused.median,
-            stepwise.median / fused.median
+            stepwise.median / fused.median,
+            naive.median / native.median
         );
     }
 }

@@ -1,0 +1,191 @@
+//! Fig. 3 (left) on the native backend — naive per-cell baselines vs the
+//! bit-packed/tiled multi-threaded kernels, with no artifacts, XLA or
+//! Python anywhere. When built with `--features pjrt` AND artifacts are
+//! present, fused XLA rows are appended for the three-way comparison.
+//!
+//! Emits `BENCH_native.json` (cells/sec per row) so the performance
+//! trajectory of the native path is tracked from this PR on.
+//!
+//! Run: cargo bench --bench fig3_native [-- --quick]
+//! Acceptance anchor: bit-packed Life >= 20x LifeSim on 256x256 x batch 32.
+
+use cax::automata::lenia::LeniaParams;
+use cax::automata::{EcaSim, LeniaSim, LifeSim, WolframRule};
+use cax::backend::native::nca::NcaModel;
+use cax::backend::{Backend, CaProgram, NativeBackend};
+use cax::metrics::{write_bench_report, BenchRow};
+use cax::tensor::Tensor;
+use cax::util::rng::Rng;
+
+mod bench_util;
+use bench_util::{bench, header, quick, row};
+
+fn push(rows: &mut Vec<BenchRow>, label: &str,
+        stats: &cax::util::timer::Stats, updates: f64) {
+    row(label, stats, updates);
+    rows.push(BenchRow {
+        label: label.to_string(),
+        stats: stats.clone(),
+        items_per_iter: updates,
+    });
+}
+
+fn main() {
+    let backend = NativeBackend::new();
+    let mut rng = Rng::new(42);
+    let mut rows: Vec<BenchRow> = vec![];
+    let (warm, iters) = if quick() { (1, 3) } else { (2, 8) };
+    println!("native backend: {} worker threads", backend.threads());
+
+    // ----------------------------------------------------------- ECA
+    {
+        let (b, w, steps) = if quick() { (8, 512, 64) } else {
+            (32, 1024, 256)
+        };
+        header(&format!("Fig. 3 left — ECA rule 30 ({b}x{w}, {steps} steps, \
+                         native)"));
+        let state =
+            Tensor::new(vec![b, w], rng.binary_vec(b * w, 0.5)).unwrap();
+        let updates = (b * w * steps) as f64;
+        let rule = WolframRule::new(30);
+        let prog = CaProgram::Eca { rule };
+
+        let naive = bench(warm.min(1), iters.min(4), || {
+            let mut sim = EcaSim::from_tensor(rule, &state);
+            sim.run(steps);
+        });
+        let native = bench(warm, iters, || {
+            backend.rollout(&prog, &state, steps).unwrap();
+        });
+        push(&mut rows, "eca/naive-baseline", &naive, updates);
+        push(&mut rows, "eca/native-bitpacked", &native, updates);
+        println!("  speedup: native-bitpacked is {:.1}x vs naive",
+                 naive.median / native.median);
+    }
+
+    // ---------------------------------------------------------- Life
+    {
+        let (b, h, w) = (32, 256, 256);
+        let steps = if quick() { 4 } else { 16 };
+        header(&format!("Fig. 3 left — Game of Life ({b}x{h}x{w}, {steps} \
+                         steps, native)"));
+        let state = Tensor::new(vec![b, h, w],
+                                rng.binary_vec(b * h * w, 0.4))
+            .unwrap();
+        let updates = (b * h * w * steps) as f64;
+
+        let naive = bench(0, 2.min(iters), || {
+            let mut sim = LifeSim::from_tensor(&state);
+            sim.run(steps);
+        });
+        let native = bench(warm, iters, || {
+            backend.rollout(&CaProgram::Life, &state, steps).unwrap();
+        });
+        push(&mut rows, "life/naive-baseline", &naive, updates);
+        push(&mut rows, "life/native-bitpacked", &native, updates);
+        let speedup = naive.median / native.median;
+        println!(
+            "  speedup: native-bitpacked is {speedup:.1}x vs naive \
+             (acceptance target: >= 20x on this very grid)"
+        );
+    }
+
+    // --------------------------------------------------------- Lenia
+    {
+        let (b, size) = if quick() { (2, 64) } else { (4, 128) };
+        let steps = if quick() { 4 } else { 16 };
+        let params = LeniaParams::default();
+        header(&format!("Fig. 3 left — Lenia ({b}x{size}x{size}, R={}, \
+                         {steps} steps, native)", params.radius));
+        let mut boards = Vec::new();
+        for _ in 0..b {
+            let sim = LeniaSim::random_patch(params, size, size / 2,
+                                             &mut rng);
+            boards.push(sim.state().clone());
+        }
+        let state = Tensor::stack(&boards).unwrap();
+        let updates = (b * size * size * steps) as f64;
+
+        let naive = bench(0, 2.min(iters), || {
+            for i in 0..b {
+                let mut sim = LeniaSim::new(params, state.index_axis0(i));
+                sim.run(steps);
+            }
+        });
+        let native = bench(warm.min(1), iters.min(4), || {
+            backend
+                .rollout(&CaProgram::Lenia { params }, &state, steps)
+                .unwrap();
+        });
+        push(&mut rows, "lenia/naive-baseline", &naive, updates);
+        push(&mut rows, "lenia/native-tiled", &native, updates);
+        println!("  speedup: native-tiled is {:.1}x vs naive",
+                 naive.median / native.median);
+    }
+
+    // ----------------------------------------------------------- NCA
+    {
+        let (b, size, c, hidden) = if quick() { (2, 32, 8, 32) } else {
+            (4, 64, 16, 64)
+        };
+        let steps = if quick() { 2 } else { 8 };
+        header(&format!("NCA forward cell ({b}x{size}x{size}x{c}, hidden \
+                         {hidden}, {steps} steps, native)"));
+        let model = NcaModel::random(c, hidden, &mut rng);
+        let state = Tensor::new(vec![b, size, size, c],
+                                rng.vec_f32(b * size * size * c))
+            .unwrap();
+        let updates = (b * size * size * steps) as f64;
+        let prog = CaProgram::Nca(model);
+        let native = bench(warm.min(1), iters.min(4), || {
+            backend.rollout(&prog, &state, steps).unwrap();
+        });
+        push(&mut rows, "nca/native-depthwise", &native, updates);
+    }
+
+    // Fused XLA rows ride along when the build + artifacts allow it.
+    #[cfg(feature = "pjrt")]
+    {
+        use cax::coordinator::{Path, Simulator};
+        if let Ok(engine) =
+            cax::runtime::Engine::load(&bench_util::artifacts_dir())
+        {
+            let sim = Simulator::new(&engine);
+            header("Fig. 3 left — fused XLA rows (pjrt)");
+            for (ca, artifact) in
+                [("eca", "eca_rollout"), ("life", "life_rollout"),
+                 ("lenia", "lenia_rollout")]
+            {
+                let Ok(info) = engine.manifest().artifact(artifact) else {
+                    continue;
+                };
+                let steps = info.meta_usize("steps").unwrap_or(64);
+                let state = sim.random_state(artifact, &mut rng).unwrap();
+                let updates = sim.cell_updates(artifact, steps).unwrap();
+                let rule = WolframRule::new(30);
+                let stats = bench(warm.min(1), iters.min(4), || {
+                    match ca {
+                        "eca" => sim
+                            .run_eca(Path::Fused, &state, rule, steps)
+                            .unwrap(),
+                        "life" => {
+                            sim.run_life(Path::Fused, &state, steps).unwrap()
+                        }
+                        _ => {
+                            sim.run_lenia(Path::Fused, &state, steps)
+                                .unwrap()
+                        }
+                    };
+                });
+                push(&mut rows, &format!("{ca}/cax-fused"), &stats, updates);
+            }
+        } else {
+            println!("\n(pjrt enabled but no artifacts found; skipping \
+                      fused rows)");
+        }
+    }
+
+    let out = std::path::Path::new("BENCH_native.json");
+    write_bench_report("fig3_native", &rows, out).unwrap();
+    println!("\nwrote {}", out.display());
+}

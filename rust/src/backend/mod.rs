@@ -1,0 +1,268 @@
+//! `cax::backend` — pluggable execution backends.
+//!
+//! The paper's framing is "one modular library, many substrates". This
+//! module is that boundary in Rust: coordinators describe *what* to run
+//! ([`CaProgram`] for classic CAs, named manifest programs for neural
+//! CAs) and backends decide *how*:
+//!
+//! - [`NativeBackend`] (always available): pure-Rust kernels —
+//!   bit-packed u64 SWAR for the discrete CAs (64 cells per word),
+//!   cache-tiled f32 for the continuous/neural paths — parallelized
+//!   across batch elements with a scoped-thread [`workers::WorkerPool`].
+//! - `PjrtBackend` (`pjrt` feature): wraps `runtime::Engine`,
+//!   executing AOT-lowered HLO artifacts through PJRT.
+//!
+//! Two traits split the surface:
+//!
+//! - [`Backend`]: "execute a classic-CA program on a batch of states"
+//!   (step / rollout) plus an optional named train-step hook.
+//! - [`ProgramBackend`]: "execute a named, manifest-described program" —
+//!   the contract the trainer/evaluator/experiment layers dispatch
+//!   through; implemented by `Engine` when the `pjrt` feature is on.
+//!
+//! See `rust/README.md` for the layer diagram and the backend feature
+//! matrix.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod workers;
+
+use anyhow::{bail, Result};
+
+use crate::automata::lenia::LeniaParams;
+use crate::automata::WolframRule;
+use crate::runtime::manifest::{Dtype, Manifest};
+use crate::tensor::Tensor;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+pub use workers::WorkerPool;
+
+/// A typed input value for a program call (formerly `runtime::Value`;
+/// re-exported there for compatibility).
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// Dense f32 tensor (the common case).
+    F32(Tensor),
+    /// i32 scalar (train-step counters).
+    I32(i32),
+    /// u32 scalar (PRNG seeds).
+    U32(u32),
+}
+
+impl Value {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(_) => Dtype::F32,
+            Value::I32(_) => Dtype::I32,
+            Value::U32(_) => Dtype::U32,
+        }
+    }
+
+    pub fn shape(&self) -> Vec<usize> {
+        match self {
+            Value::F32(t) => t.shape().to_vec(),
+            Value::I32(_) | Value::U32(_) => vec![],
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+}
+
+/// A classic-CA program: everything a backend needs to run one of the
+/// Table-1 non-neural scenarios, independent of any artifact manifest.
+#[derive(Clone, Debug)]
+pub enum CaProgram {
+    /// Elementary CA on `[B, W]` {0,1} states, periodic boundary.
+    Eca { rule: WolframRule },
+    /// Conway's Game of Life on `[B, H, W]` {0,1} states, periodic.
+    Life,
+    /// Lenia on `[B, H, W]` states in `[0,1]`, periodic.
+    Lenia { params: LeniaParams },
+    /// A neural-CA forward cell (depthwise perceive + per-cell MLP) on
+    /// `[B, H, W, C]` states — the native NCA inference path.
+    Nca(native::nca::NcaModel),
+}
+
+impl CaProgram {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CaProgram::Eca { .. } => "eca",
+            CaProgram::Life => "life",
+            CaProgram::Lenia { .. } => "lenia",
+            CaProgram::Nca(_) => "nca",
+        }
+    }
+
+    /// Tensor rank a state for this program must have (batch included).
+    pub fn state_rank(&self) -> usize {
+        match self {
+            CaProgram::Eca { .. } => 2,
+            CaProgram::Life | CaProgram::Lenia { .. } => 3,
+            CaProgram::Nca(_) => 4,
+        }
+    }
+}
+
+/// An execution backend for classic-CA programs.
+///
+/// `step`/`rollout` take and return batched f32 tensors (the host data
+/// currency); backends are free to run any internal representation —
+/// the native backend packs discrete states 64 cells to a word and only
+/// converts at the boundary, so `rollout` is much cheaper than `steps`
+/// calls to `step`.
+pub trait Backend {
+    /// Short stable name (CLI surface, bench rows).
+    fn name(&self) -> &'static str;
+
+    /// Whether this backend can run `prog` at all.
+    fn supports(&self, prog: &CaProgram) -> bool;
+
+    /// One update of every cell in the batch.
+    fn step(&self, prog: &CaProgram, state: &Tensor) -> Result<Tensor> {
+        self.rollout(prog, state, 1)
+    }
+
+    /// `steps` updates; backends may fuse the loop internally.
+    fn rollout(&self, prog: &CaProgram, state: &Tensor, steps: usize)
+        -> Result<Tensor>;
+
+    /// Execute a named train-step program. Only artifact-backed backends
+    /// support this; the default refuses with a clear error.
+    fn train_step(&self, program: &str, _inputs: &[Value])
+        -> Result<Vec<Tensor>> {
+        bail!(
+            "backend {:?} cannot run train-step program {program:?} \
+             (train steps need an artifact-backed backend; rebuild with \
+             --features pjrt)",
+            self.name()
+        )
+    }
+}
+
+/// A backend that executes *named* programs described by an artifact
+/// [`Manifest`] — the contract the trainer, evaluators and experiment
+/// drivers dispatch through. `runtime::Engine` implements this when the
+/// `pjrt` feature is enabled.
+pub trait ProgramBackend {
+    /// The manifest describing every program this backend can run.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute a named program; returns one tensor per manifest output.
+    fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>>;
+
+    /// Load an initial-parameter blob as a rank-1 tensor.
+    fn load_params(&self, blob: &str) -> Result<Tensor> {
+        let data = self.manifest().load_blob(blob)?;
+        let n = data.len();
+        Tensor::new(vec![n], data)
+    }
+}
+
+/// The FFT'd Lenia ring kernel the `lenia_*` artifacts expect, shaped
+/// from the manifest (shared by the Simulator and the PJRT adapter).
+pub fn lenia_kernel_fft(program: &dyn ProgramBackend) -> Result<Tensor> {
+    let info = program.manifest().artifact("lenia_step")?;
+    let spec = &info.inputs[1];
+    let data = program.manifest().load_blob("lenia_kfft")?;
+    Tensor::new(spec.shape.clone(), data)
+}
+
+/// Validate a state tensor against a program before dispatch, so shape
+/// bugs surface as precise errors rather than kernel panics.
+pub fn validate_state(prog: &CaProgram, state: &Tensor) -> Result<()> {
+    let rank = prog.state_rank();
+    if state.shape().len() != rank {
+        bail!(
+            "program {:?} wants a rank-{rank} batched state, got shape {:?}",
+            prog.name(),
+            state.shape()
+        );
+    }
+    if state.shape().iter().any(|&d| d == 0) {
+        bail!(
+            "program {:?}: empty dimension in state shape {:?}",
+            prog.name(),
+            state.shape()
+        );
+    }
+    match prog {
+        CaProgram::Nca(model) => {
+            let c = *state.shape().last().unwrap();
+            if c != model.channels {
+                bail!(
+                    "nca model has {} channels but state shape {:?} \
+                     carries {c}",
+                    model.channels,
+                    state.shape()
+                );
+            }
+        }
+        CaProgram::Lenia { params } => {
+            // The wrap index `(y + h + r - ky) % h` (shared with the
+            // naive oracle) needs h, w >= radius to stay non-negative.
+            let (h, w) = (state.shape()[1], state.shape()[2]);
+            if h < params.radius || w < params.radius {
+                bail!(
+                    "lenia radius {r} needs a board of at least {r}x{r}, \
+                     got {h}x{w}",
+                    r = params.radius
+                );
+            }
+        }
+        CaProgram::Eca { .. } | CaProgram::Life => {}
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_dtypes_and_shapes() {
+        let t = Tensor::zeros(&[2, 3]);
+        let v: Value = t.into();
+        assert_eq!(v.dtype(), Dtype::F32);
+        assert_eq!(v.shape(), vec![2, 3]);
+        assert_eq!(Value::I32(4).dtype(), Dtype::I32);
+        assert_eq!(Value::U32(4).dtype(), Dtype::U32);
+        assert!(Value::I32(0).shape().is_empty());
+    }
+
+    #[test]
+    fn program_ranks() {
+        assert_eq!(CaProgram::Eca { rule: WolframRule::new(30) }.state_rank(),
+                   2);
+        assert_eq!(CaProgram::Life.state_rank(), 3);
+        assert_eq!(
+            CaProgram::Lenia { params: LeniaParams::default() }.state_rank(),
+            3
+        );
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        let prog = CaProgram::Life;
+        assert!(validate_state(&prog, &Tensor::zeros(&[2, 8, 8])).is_ok());
+        assert!(validate_state(&prog, &Tensor::zeros(&[2, 8])).is_err());
+        assert!(validate_state(&prog, &Tensor::zeros(&[0, 8, 8])).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_lenia_radius_larger_than_board() {
+        let prog = CaProgram::Lenia {
+            params: LeniaParams { radius: 10, ..Default::default() },
+        };
+        let err =
+            validate_state(&prog, &Tensor::zeros(&[1, 8, 8])).unwrap_err();
+        assert!(format!("{err}").contains("radius 10"));
+        assert!(validate_state(&prog, &Tensor::zeros(&[1, 32, 32])).is_ok());
+    }
+}

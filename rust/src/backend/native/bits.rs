@@ -1,0 +1,155 @@
+//! Bit-packed row substrate for the discrete-CA SWAR kernels.
+//!
+//! A row of W binary cells is stored LSB-first in `ceil(W/64)` u64
+//! words: cell `x` lives in word `x / 64`, bit `x % 64`. All rotations
+//! treat the row as one W-bit ring (periodic boundary), and every
+//! operation keeps the tail bits (positions `>= W` of the last word)
+//! zero — the invariant the neighbour-count logic relies on.
+
+/// Words needed for a `w`-cell row.
+#[inline]
+pub fn words_for(w: usize) -> usize {
+    w.div_ceil(64)
+}
+
+/// Pack f32 {0,1} cells (threshold 0.5, matching the naive sims) into
+/// `out`, which must hold exactly `words_for(cells.len())` words.
+pub fn pack_row(cells: &[f32], out: &mut [u64]) {
+    debug_assert_eq!(out.len(), words_for(cells.len()));
+    for word in out.iter_mut() {
+        *word = 0;
+    }
+    for (x, &v) in cells.iter().enumerate() {
+        if v > 0.5 {
+            out[x / 64] |= 1u64 << (x % 64);
+        }
+    }
+}
+
+/// Unpack a row back to f32 {0.0, 1.0} cells.
+pub fn unpack_row(words: &[u64], cells: &mut [f32]) {
+    debug_assert_eq!(words.len(), words_for(cells.len()));
+    for (x, cell) in cells.iter_mut().enumerate() {
+        *cell = ((words[x / 64] >> (x % 64)) & 1) as f32;
+    }
+}
+
+/// Zero the bits at positions `>= w` in the last word.
+#[inline]
+pub fn mask_tail(words: &mut [u64], w: usize) {
+    let rem = w % 64;
+    if rem != 0 {
+        let last = words.len() - 1;
+        words[last] &= (1u64 << rem) - 1;
+    }
+}
+
+/// `dst[x] = src[(x + w - 1) % w]` — every cell reads its LEFT
+/// neighbour, i.e. the ring rotated one position toward higher indices.
+pub fn rot_up(src: &[u64], dst: &mut [u64], w: usize) {
+    debug_assert_eq!(src.len(), words_for(w));
+    debug_assert_eq!(dst.len(), src.len());
+    let nw = src.len();
+    let top = (w - 1) % 64; // bit position of cell w-1 in the last word
+    let mut carry = (src[nw - 1] >> top) & 1;
+    for i in 0..nw {
+        let next_carry = src[i] >> 63;
+        dst[i] = (src[i] << 1) | carry;
+        carry = next_carry;
+    }
+    mask_tail(dst, w);
+}
+
+/// `dst[x] = src[(x + 1) % w]` — every cell reads its RIGHT neighbour,
+/// i.e. the ring rotated one position toward lower indices.
+pub fn rot_down(src: &[u64], dst: &mut [u64], w: usize) {
+    debug_assert_eq!(src.len(), words_for(w));
+    debug_assert_eq!(dst.len(), src.len());
+    let nw = src.len();
+    let top = (w - 1) % 64;
+    let wrap = src[0] & 1; // cell 0 becomes cell w-1's right neighbour
+    for i in 0..nw {
+        let hi = if i + 1 < nw { src[i + 1] & 1 } else { 0 };
+        dst[i] = (src[i] >> 1) | (hi << 63);
+    }
+    dst[nw - 1] |= wrap << top;
+    mask_tail(dst, w);
+}
+
+/// Number of live cells in a packed row.
+pub fn popcount(words: &[u64]) -> usize {
+    words.iter().map(|w| w.count_ones() as usize).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pack_bits(bits: &[u8]) -> Vec<u64> {
+        let cells: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
+        let mut out = vec![0u64; words_for(bits.len())];
+        pack_row(&cells, &mut out);
+        out
+    }
+
+    fn unpack_bits(words: &[u64], w: usize) -> Vec<u8> {
+        let mut cells = vec![0.0f32; w];
+        unpack_row(words, &mut cells);
+        cells.iter().map(|&c| c as u8).collect()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_odd_widths() {
+        for w in [1usize, 5, 63, 64, 65, 100, 128, 130, 200] {
+            let bits: Vec<u8> =
+                (0..w).map(|x| ((x * 7 + 3) % 5 == 0) as u8).collect();
+            let packed = pack_bits(&bits);
+            assert_eq!(packed.len(), words_for(w));
+            assert_eq!(unpack_bits(&packed, w), bits, "width {w}");
+            assert_eq!(popcount(&packed),
+                       bits.iter().map(|&b| b as usize).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn rotations_match_index_arithmetic() {
+        for w in [1usize, 2, 7, 63, 64, 65, 127, 128, 129, 190] {
+            let bits: Vec<u8> =
+                (0..w).map(|x| ((x * 13 + 1) % 3 == 0) as u8).collect();
+            let src = pack_bits(&bits);
+            let mut up = vec![0u64; src.len()];
+            let mut down = vec![0u64; src.len()];
+            rot_up(&src, &mut up, w);
+            rot_down(&src, &mut down, w);
+            let up_bits = unpack_bits(&up, w);
+            let down_bits = unpack_bits(&down, w);
+            for x in 0..w {
+                assert_eq!(up_bits[x], bits[(x + w - 1) % w],
+                           "rot_up w={w} x={x}");
+                assert_eq!(down_bits[x], bits[(x + 1) % w],
+                           "rot_down w={w} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotations_keep_tail_clean() {
+        let w = 70;
+        let bits: Vec<u8> = (0..w).map(|_| 1u8).collect();
+        let src = pack_bits(&bits);
+        let mut out = vec![0u64; src.len()];
+        rot_up(&src, &mut out, w);
+        assert_eq!(out[1] >> (w % 64), 0, "tail bits leaked (rot_up)");
+        rot_down(&src, &mut out, w);
+        assert_eq!(out[1] >> (w % 64), 0, "tail bits leaked (rot_down)");
+    }
+
+    #[test]
+    fn mask_tail_noop_on_exact_words() {
+        let mut words = vec![u64::MAX, u64::MAX];
+        mask_tail(&mut words, 128);
+        assert_eq!(words, vec![u64::MAX, u64::MAX]);
+        mask_tail(&mut words, 100);
+        assert_eq!(words[1], (1u64 << 36) - 1);
+    }
+}

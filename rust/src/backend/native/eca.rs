@@ -1,0 +1,103 @@
+//! Bit-packed elementary-CA kernel (SWAR, 64 cells per word).
+//!
+//! The rule table is applied as boolean algebra over three whole-row
+//! bitboards (left-neighbour, centre, right-neighbour): for every
+//! pattern `p = 4l + 2c + r` with rule bit set, OR in the AND of the
+//! three (possibly complemented) boards. At most 8 AND3/OR terms per
+//! word — ~0.5 ops per cell versus the naive simulator's table lookup,
+//! index arithmetic and bounds checks per cell. Bit-exact with
+//! [`crate::automata::EcaSim`] by construction (same encoding:
+//! `table[4l + 2c + r]`, periodic boundary).
+
+use crate::automata::WolframRule;
+use crate::backend::native::bits;
+
+/// One rule application on a packed row; `left`/`right` are scratch
+/// buffers of the same word length.
+pub fn step_row(
+    rule: &WolframRule,
+    row: &mut [u64],
+    left: &mut [u64],
+    right: &mut [u64],
+    w: usize,
+) {
+    bits::rot_up(row, left, w);
+    bits::rot_down(row, right, w);
+    let number = rule.number;
+    for i in 0..row.len() {
+        let (l, c, r) = (left[i], row[i], right[i]);
+        let mut next = 0u64;
+        for p in 0..8u8 {
+            if (number >> p) & 1 == 1 {
+                let a = if p & 4 != 0 { l } else { !l };
+                let b = if p & 2 != 0 { c } else { !c };
+                let d = if p & 1 != 0 { r } else { !r };
+                next |= a & b & d;
+            }
+        }
+        row[i] = next;
+    }
+    // Complemented boards set tail bits; restore the invariant.
+    bits::mask_tail(row, w);
+}
+
+/// Run `steps` rule applications on one packed row.
+pub fn rollout_row(rule: &WolframRule, row: &mut [u64], w: usize,
+                   steps: usize) {
+    let mut left = vec![0u64; row.len()];
+    let mut right = vec![0u64; row.len()];
+    for _ in 0..steps {
+        step_row(rule, row, &mut left, &mut right, w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::EcaSim;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn packed_vs_naive(rule_no: u8, w: usize, steps: usize, seed: u64) {
+        let rule = WolframRule::new(rule_no);
+        let mut rng = Rng::new(seed);
+        let cells = rng.binary_vec(w, 0.5);
+        let state = Tensor::new(vec![1, w], cells.clone()).unwrap();
+
+        let mut sim = EcaSim::from_tensor(rule, &state);
+        sim.run(steps);
+        let expect = sim.to_tensor();
+
+        let mut row = vec![0u64; bits::words_for(w)];
+        bits::pack_row(&cells, &mut row);
+        rollout_row(&rule, &mut row, w, steps);
+        let mut got = vec![0.0f32; w];
+        bits::unpack_row(&row, &mut got);
+
+        assert_eq!(got, expect.data(),
+                   "rule {rule_no} w={w} steps={steps} diverged");
+    }
+
+    #[test]
+    fn matches_naive_across_rules_and_widths() {
+        for (i, &rule) in [30u8, 90, 110, 184, 45, 250].iter().enumerate() {
+            for &w in &[8usize, 63, 64, 65, 130, 256] {
+                packed_vs_naive(rule, w, 12, 100 + i as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn rule_2_wraps_periodically() {
+        // Rule 2: cell lights iff only the right neighbour is alive; a
+        // single live cell at x=0 must light x=w-1 through the wrap.
+        let w = 67;
+        let mut row = vec![0u64; bits::words_for(w)];
+        row[0] = 1;
+        rollout_row(&WolframRule::new(2), &mut row, w, 1);
+        let mut cells = vec![0.0f32; w];
+        bits::unpack_row(&row, &mut cells);
+        assert_eq!(cells[w - 1], 1.0);
+        assert_eq!(cells.iter().filter(|&&c| c == 1.0).count(), 1);
+    }
+}

@@ -1,0 +1,156 @@
+//! Cache-tiled Lenia kernel.
+//!
+//! Semantics are *identical* to [`crate::automata::LeniaSim`] — same
+//! ring kernel, growth mapping and clip, and crucially the same f32
+//! accumulation order (kernel-row-major taps) — so results are
+//! bit-exact with the naive oracle. The speed comes from three
+//! mechanical changes, none of which alter the math:
+//!
+//! - zero-weight kernel taps are skipped (the ring kernel is ~2/3
+//!   zeros; adding `0.0 * s` never changes a non-negative f32 sum),
+//! - direct slice indexing instead of per-element tensor offset
+//!   arithmetic,
+//! - the output is walked in cache-sized tiles so the wrapped input
+//!   rows a tile touches stay resident.
+//!
+//! Batch elements are independent; the backend parallelizes across
+//! them with the worker pool.
+
+use crate::automata::lenia::{ring_kernel, LeniaParams};
+
+/// Precomputed sparse ring kernel + growth parameters.
+#[derive(Clone, Debug)]
+pub struct LeniaKernel {
+    pub params: LeniaParams,
+    /// Non-zero taps as (ky, kx, weight), kernel-row-major — the same
+    /// accumulation order as the naive oracle.
+    taps: Vec<(usize, usize, f32)>,
+}
+
+/// Output tile edge (f32 cells); 32x32 keeps tile + touched input rows
+/// well under typical L1/L2 sizes for paper-scale grids.
+const TILE: usize = 32;
+
+impl LeniaKernel {
+    pub fn new(params: LeniaParams) -> LeniaKernel {
+        let kernel = ring_kernel(params.radius);
+        let ksz = 2 * params.radius + 1;
+        let mut taps = Vec::new();
+        for ky in 0..ksz {
+            for kx in 0..ksz {
+                let weight = kernel.at(&[ky, kx]);
+                if weight != 0.0 {
+                    taps.push((ky, kx, weight));
+                }
+            }
+        }
+        LeniaKernel { params, taps }
+    }
+
+    pub fn taps(&self) -> usize {
+        self.taps.len()
+    }
+
+    /// One step on a single `[H, W]` board held as a row-major slice.
+    pub fn step(&self, state: &[f32], next: &mut [f32], h: usize, w: usize) {
+        debug_assert_eq!(state.len(), h * w);
+        debug_assert_eq!(next.len(), h * w);
+        let r = self.params.radius;
+        let (mu, sigma, dt) = (self.params.mu, self.params.sigma,
+                               self.params.dt);
+        let mut ty = 0;
+        while ty < h {
+            let y_end = (ty + TILE).min(h);
+            let mut tx = 0;
+            while tx < w {
+                let x_end = (tx + TILE).min(w);
+                for y in ty..y_end {
+                    for x in tx..x_end {
+                        let mut u = 0.0f32;
+                        for &(ky, kx, weight) in &self.taps {
+                            let sy = (y + h + r - ky) % h;
+                            let sx = (x + w + r - kx) % w;
+                            u += weight * state[sy * w + sx];
+                        }
+                        let z = (u - mu) / sigma;
+                        let growth = 2.0 * (-0.5 * z * z).exp() - 1.0;
+                        let v = state[y * w + x] + dt * growth;
+                        next[y * w + x] = v.clamp(0.0, 1.0);
+                    }
+                }
+                tx = x_end;
+            }
+            ty = y_end;
+        }
+    }
+
+    /// Run `steps` updates in place on one board; `scratch` must be the
+    /// same length as `board`.
+    pub fn rollout(&self, board: &mut [f32], scratch: &mut [f32], h: usize,
+                   w: usize, steps: usize) {
+        for _ in 0..steps {
+            self.step(board, scratch, h, w);
+            board.copy_from_slice(scratch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::LeniaSim;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn skips_only_zero_taps() {
+        let kernel = LeniaKernel::new(LeniaParams {
+            radius: 5,
+            ..Default::default()
+        });
+        let dense = ring_kernel(5);
+        let nonzero = dense.data().iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(kernel.taps(), nonzero);
+        assert!(kernel.taps() < dense.numel(), "ring kernel has zeros");
+    }
+
+    #[test]
+    fn bit_exact_with_naive_oracle() {
+        let params = LeniaParams { radius: 4, ..Default::default() };
+        let (h, w) = (33, 29); // deliberately non-round
+        let mut rng = Rng::new(77);
+        let mut sim = LeniaSim::random_patch(params, h.max(w), 16, &mut rng);
+        // random_patch builds square boards; rebuild rectangular by hand.
+        let mut board = Tensor::zeros(&[h, w]);
+        for y in 0..h {
+            for x in 0..w {
+                board.set(&[y, x], sim.state().at(&[y.min(h - 1), x % w]));
+            }
+        }
+        sim = LeniaSim::new(params, board.clone());
+
+        let kernel = LeniaKernel::new(params);
+        let mut data = board.data().to_vec();
+        let mut scratch = vec![0.0f32; h * w];
+        kernel.rollout(&mut data, &mut scratch, h, w, 5);
+
+        sim.run(5);
+        let expect = sim.state();
+        for (i, (&a, &b)) in data.iter().zip(expect.data()).enumerate() {
+            assert!(a.to_bits() == b.to_bits(),
+                    "cell {i}: tiled {a} != naive {b}");
+        }
+    }
+
+    #[test]
+    fn tiled_result_in_unit_interval() {
+        let params = LeniaParams { radius: 3, ..Default::default() };
+        let kernel = LeniaKernel::new(params);
+        let mut rng = Rng::new(3);
+        let (h, w) = (40, 40);
+        let mut board = rng.vec_f32(h * w);
+        let mut scratch = vec![0.0f32; h * w];
+        kernel.rollout(&mut board, &mut scratch, h, w, 6);
+        assert!(board.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+}

@@ -1,0 +1,187 @@
+//! The native execution backend: pure-Rust kernels, no XLA, no Python.
+//!
+//! - [`bits`]: bit-packed row substrate (64 cells per u64, periodic).
+//! - [`eca`]: SWAR elementary-CA kernel.
+//! - [`life`]: SWAR Game-of-Life kernel (carry-save neighbour counts).
+//! - [`lenia`]: cache-tiled sparse-tap Lenia kernel.
+//! - [`nca`]: depthwise-conv + per-cell-MLP neural-CA forward kernel.
+//!
+//! [`NativeBackend`] packs/unpacks at the tensor boundary ONCE per
+//! rollout and parallelizes across batch elements with the scoped
+//! worker pool, so `rollout(prog, state, T)` costs far less than `T`
+//! boundary crossings.
+
+pub mod bits;
+pub mod eca;
+pub mod lenia;
+pub mod life;
+pub mod nca;
+
+use anyhow::Result;
+
+use crate::backend::workers::WorkerPool;
+use crate::backend::{validate_state, Backend, CaProgram};
+use crate::tensor::Tensor;
+
+/// Pure-Rust multi-threaded backend. Always available; the default
+/// execution path of the hermetic build.
+#[derive(Clone, Debug, Default)]
+pub struct NativeBackend {
+    pool: WorkerPool,
+}
+
+impl NativeBackend {
+    /// Backend sized to the machine.
+    pub fn new() -> NativeBackend {
+        NativeBackend { pool: WorkerPool::new() }
+    }
+
+    /// Backend with an explicit worker count (1 = sequential).
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        NativeBackend { pool: WorkerPool::with_threads(threads) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    fn eca_rollout(&self, rule: &crate::automata::WolframRule,
+                   state: &Tensor, steps: usize) -> Result<Tensor> {
+        let (b, w) = (state.shape()[0], state.shape()[1]);
+        let nw = bits::words_for(w);
+        let mut packed = vec![0u64; b * nw];
+        for i in 0..b {
+            bits::pack_row(&state.data()[i * w..(i + 1) * w],
+                           &mut packed[i * nw..(i + 1) * nw]);
+        }
+        self.pool.for_each_chunk(&mut packed, nw, |_, row| {
+            eca::rollout_row(rule, row, w, steps);
+        });
+        let mut out = vec![0.0f32; b * w];
+        for i in 0..b {
+            bits::unpack_row(&packed[i * nw..(i + 1) * nw],
+                             &mut out[i * w..(i + 1) * w]);
+        }
+        Tensor::new(vec![b, w], out)
+    }
+
+    fn life_rollout(&self, state: &Tensor, steps: usize) -> Result<Tensor> {
+        let (b, h, w) =
+            (state.shape()[0], state.shape()[1], state.shape()[2]);
+        let wpr = bits::words_for(w);
+        let words = h * wpr;
+        let mut packed = vec![0u64; b * words];
+        for i in 0..b {
+            life::pack_board(&state.data()[i * h * w..(i + 1) * h * w], h, w,
+                             &mut packed[i * words..(i + 1) * words]);
+        }
+        self.pool.for_each_chunk(&mut packed, words, |_, grid| {
+            let mut kern = life::LifeKernel::new(h, w);
+            kern.rollout(grid, steps);
+        });
+        let mut out = vec![0.0f32; b * h * w];
+        for i in 0..b {
+            life::unpack_board(&packed[i * words..(i + 1) * words], h, w,
+                               &mut out[i * h * w..(i + 1) * h * w]);
+        }
+        Tensor::new(vec![b, h, w], out)
+    }
+
+    fn lenia_rollout(&self, params: crate::automata::lenia::LeniaParams,
+                     state: &Tensor, steps: usize) -> Result<Tensor> {
+        let (b, h, w) =
+            (state.shape()[0], state.shape()[1], state.shape()[2]);
+        let kernel = lenia::LeniaKernel::new(params);
+        let mut data = state.data().to_vec();
+        self.pool.for_each_chunk(&mut data, h * w, |_, board| {
+            let mut scratch = vec![0.0f32; h * w];
+            kernel.rollout(board, &mut scratch, h, w, steps);
+        });
+        Tensor::new(vec![b, h, w], data)
+    }
+
+    fn nca_rollout(&self, model: &nca::NcaModel, state: &Tensor,
+                   steps: usize) -> Result<Tensor> {
+        let shape = state.shape();
+        let (b, h, w, c) = (shape[0], shape[1], shape[2], shape[3]);
+        let mut data = state.data().to_vec();
+        self.pool.for_each_chunk(&mut data, h * w * c, |_, board| {
+            let mut scratch = vec![0.0f32; h * w * c];
+            model.rollout(board, &mut scratch, h, w, steps);
+        });
+        Tensor::new(shape.to_vec(), data)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports(&self, _prog: &CaProgram) -> bool {
+        true
+    }
+
+    fn rollout(&self, prog: &CaProgram, state: &Tensor, steps: usize)
+        -> Result<Tensor> {
+        validate_state(prog, state)?;
+        match prog {
+            CaProgram::Eca { rule } => self.eca_rollout(rule, state, steps),
+            CaProgram::Life => self.life_rollout(state, steps),
+            CaProgram::Lenia { params } => {
+                self.lenia_rollout(*params, state, steps)
+            }
+            CaProgram::Nca(model) => self.nca_rollout(model, state, steps),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::WolframRule;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zero_steps_is_identity_and_step_is_rollout_1() {
+        let backend = NativeBackend::with_threads(2);
+        let mut rng = Rng::new(8);
+        let state =
+            Tensor::new(vec![3, 70], rng.binary_vec(3 * 70, 0.5)).unwrap();
+        let prog = CaProgram::Eca { rule: WolframRule::new(110) };
+        let same = backend.rollout(&prog, &state, 0).unwrap();
+        assert!(same.bit_eq(&state));
+        let one = backend.step(&prog, &state).unwrap();
+        let roll = backend.rollout(&prog, &state, 1).unwrap();
+        assert!(one.bit_eq(&roll));
+    }
+
+    #[test]
+    fn thread_counts_do_not_change_results() {
+        let mut rng = Rng::new(12);
+        let state =
+            Tensor::new(vec![5, 9, 33], rng.binary_vec(5 * 9 * 33, 0.4))
+                .unwrap();
+        let a = NativeBackend::with_threads(1)
+            .rollout(&CaProgram::Life, &state, 7)
+            .unwrap();
+        let b = NativeBackend::with_threads(8)
+            .rollout(&CaProgram::Life, &state, 7)
+            .unwrap();
+        assert!(a.bit_eq(&b));
+    }
+
+    #[test]
+    fn train_step_refused_with_pointer_to_pjrt() {
+        let backend = NativeBackend::new();
+        let err = backend.train_step("growing_train_step", &[]).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
+    }
+
+    #[test]
+    fn rejects_wrong_rank() {
+        let backend = NativeBackend::new();
+        let state = Tensor::zeros(&[4, 4]);
+        assert!(backend.rollout(&CaProgram::Life, &state, 1).is_err());
+    }
+}

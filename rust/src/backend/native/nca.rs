@@ -1,0 +1,193 @@
+//! Native neural-CA forward cell: depthwise 3x3 perceive + per-cell MLP.
+//!
+//! The standard NCA update (Mordvintsev et al. 2020, the cell every
+//! Table-1 neural row builds on): each channel is filtered with the
+//! identity, Sobel-x and Sobel-y kernels (depthwise — no cross-channel
+//! mixing in the conv), the 3C perception vector goes through a shared
+//! two-layer MLP per cell, and the result is added to the state. The
+//! kernel walks the grid row-by-row with precomputed wrapped row
+//! indices, so the three input rows a sweep touches stay in cache —
+//! the depthwise-conv/update analogue of the tiled Lenia path.
+
+use crate::util::rng::Rng;
+
+/// Sobel-x, normalized by 8 as in the reference NCA perceive step.
+const SOBEL_X: [[f32; 3]; 3] = [
+    [-0.125, 0.0, 0.125],
+    [-0.25, 0.0, 0.25],
+    [-0.125, 0.0, 0.125],
+];
+
+/// Weights of a native NCA cell.
+#[derive(Clone, Debug)]
+pub struct NcaModel {
+    pub channels: usize,
+    pub hidden: usize,
+    /// `[3*channels, hidden]` row-major: perception -> hidden.
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    /// `[hidden, channels]` row-major: hidden -> state delta.
+    pub w2: Vec<f32>,
+    /// Update scale (the residual step size).
+    pub dt: f32,
+}
+
+impl NcaModel {
+    /// Random small-weight model (test/bench substrate; trained weights
+    /// would come from a checkpoint).
+    pub fn random(channels: usize, hidden: usize, rng: &mut Rng) -> NcaModel {
+        assert!(channels > 0 && hidden > 0);
+        let fan_in = 3 * channels;
+        let scale1 = 1.0 / (fan_in as f32).sqrt();
+        let scale2 = 0.1 / (hidden as f32).sqrt();
+        NcaModel {
+            channels,
+            hidden,
+            w1: (0..fan_in * hidden)
+                .map(|_| rng.normal() * scale1)
+                .collect(),
+            b1: vec![0.0; hidden],
+            w2: (0..hidden * channels)
+                .map(|_| rng.normal() * scale2)
+                .collect(),
+            dt: 0.5,
+        }
+    }
+
+    /// One forward update of a `[H, W, C]` channels-last board.
+    pub fn step(&self, state: &[f32], next: &mut [f32], h: usize, w: usize) {
+        let c = self.channels;
+        debug_assert_eq!(state.len(), h * w * c);
+        debug_assert_eq!(next.len(), state.len());
+        let mut perception = vec![0.0f32; 3 * c];
+        let mut hidden = vec![0.0f32; self.hidden];
+
+        for y in 0..h {
+            let ym = (y + h - 1) % h;
+            let yp = (y + 1) % h;
+            let rows = [ym, y, yp];
+            for x in 0..w {
+                let xm = (x + w - 1) % w;
+                let xp = (x + 1) % w;
+                let cols = [xm, x, xp];
+
+                // Depthwise perceive: identity, Sobel-x, Sobel-y.
+                for ch in 0..c {
+                    let mut gx = 0.0f32;
+                    let mut gy = 0.0f32;
+                    for (ky, &sy) in rows.iter().enumerate() {
+                        for (kx, &sx) in cols.iter().enumerate() {
+                            let v = state[(sy * w + sx) * c + ch];
+                            gx += SOBEL_X[ky][kx] * v;
+                            // Sobel-y is the transpose of Sobel-x.
+                            gy += SOBEL_X[kx][ky] * v;
+                        }
+                    }
+                    perception[ch * 3] = state[(y * w + x) * c + ch];
+                    perception[ch * 3 + 1] = gx;
+                    perception[ch * 3 + 2] = gy;
+                }
+
+                // Per-cell MLP: relu(p . W1 + b1) . W2, residual add.
+                for (j, slot) in hidden.iter_mut().enumerate() {
+                    let mut acc = self.b1[j];
+                    for (k, &p) in perception.iter().enumerate() {
+                        acc += p * self.w1[k * self.hidden + j];
+                    }
+                    *slot = acc.max(0.0);
+                }
+                for ch in 0..c {
+                    let mut delta = 0.0f32;
+                    for (j, &hv) in hidden.iter().enumerate() {
+                        delta += hv * self.w2[j * c + ch];
+                    }
+                    let idx = (y * w + x) * c + ch;
+                    next[idx] = state[idx] + self.dt * delta;
+                }
+            }
+        }
+    }
+
+    /// Run `steps` updates in place; `scratch` must match `board`'s length.
+    pub fn rollout(&self, board: &mut [f32], scratch: &mut [f32], h: usize,
+                   w: usize, steps: usize) {
+        for _ in 0..steps {
+            self.step(board, scratch, h, w);
+            board.copy_from_slice(scratch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> NcaModel {
+        NcaModel::random(4, 8, &mut Rng::new(9))
+    }
+
+    #[test]
+    fn step_is_finite_and_shaped() {
+        let m = model();
+        let (h, w) = (7, 9);
+        let mut rng = Rng::new(1);
+        let board = rng.vec_f32(h * w * m.channels);
+        let mut next = vec![0.0f32; board.len()];
+        m.step(&board, &mut next, h, w);
+        assert!(next.iter().all(|v| v.is_finite()));
+        assert_ne!(board, next, "random model should move the state");
+    }
+
+    #[test]
+    fn uniform_state_has_zero_gradients() {
+        // On a constant field both Sobel responses vanish, so every cell
+        // computes the identical update: the state stays uniform.
+        let m = model();
+        let (h, w) = (6, 6);
+        let board = vec![0.3f32; h * w * m.channels];
+        let mut next = vec![0.0f32; board.len()];
+        m.step(&board, &mut next, h, w);
+        for ch in 0..m.channels {
+            let v0 = next[ch];
+            for cell in 0..h * w {
+                let v = next[cell * m.channels + ch];
+                assert!((v - v0).abs() < 1e-6,
+                        "cell {cell} ch {ch}: {v} vs {v0}");
+            }
+        }
+    }
+
+    #[test]
+    fn translation_equivariant_on_torus() {
+        let m = model();
+        let (h, w) = (8, 8);
+        let c = m.channels;
+        let mut rng = Rng::new(4);
+        let board = rng.vec_f32(h * w * c);
+        // Shift input by (2, 3) with wrap.
+        let mut shifted = vec![0.0f32; board.len()];
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    shifted[(((y + 2) % h) * w + (x + 3) % w) * c + ch] =
+                        board[(y * w + x) * c + ch];
+                }
+            }
+        }
+        let mut out_a = vec![0.0f32; board.len()];
+        let mut out_b = vec![0.0f32; board.len()];
+        m.step(&board, &mut out_a, h, w);
+        m.step(&shifted, &mut out_b, h, w);
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    let a = out_a[(y * w + x) * c + ch];
+                    let b = out_b
+                        [(((y + 2) % h) * w + (x + 3) % w) * c + ch];
+                    assert!((a - b).abs() < 1e-5,
+                            "equivariance broke at ({y},{x},{ch})");
+                }
+            }
+        }
+    }
+}

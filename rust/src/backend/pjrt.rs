@@ -1,0 +1,102 @@
+//! PJRT-backed execution (`pjrt` feature): adapts [`Engine`] to the
+//! backend traits so coordinators can dispatch XLA artifacts and native
+//! kernels through one interface.
+
+use anyhow::{bail, Result};
+
+use crate::backend::{Backend, CaProgram, ProgramBackend, Value};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+impl ProgramBackend for Engine {
+    fn manifest(&self) -> &Manifest {
+        // Inherent methods win resolution; these delegate, not recurse.
+        Engine::manifest(self)
+    }
+
+    fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        Engine::execute(self, name, inputs)
+    }
+
+    fn load_params(&self, blob: &str) -> Result<Tensor> {
+        Engine::load_params(self, blob)
+    }
+}
+
+/// Classic-CA execution over the per-step XLA artifacts. The fused
+/// (whole-rollout-in-one-program) paths stay on
+/// [`crate::coordinator::Simulator`], which knows the artifact naming
+/// scheme; this adapter is the generic per-step route.
+pub struct PjrtBackend<'e> {
+    engine: &'e Engine,
+}
+
+impl<'e> PjrtBackend<'e> {
+    pub fn new(engine: &'e Engine) -> PjrtBackend<'e> {
+        PjrtBackend { engine }
+    }
+
+    pub fn engine(&self) -> &'e Engine {
+        self.engine
+    }
+}
+
+impl Backend for PjrtBackend<'_> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn supports(&self, prog: &CaProgram) -> bool {
+        !matches!(prog, CaProgram::Nca(_))
+    }
+
+    fn rollout(&self, prog: &CaProgram, state: &Tensor, steps: usize)
+        -> Result<Tensor> {
+        crate::backend::validate_state(prog, state)?;
+        let mut current = state.clone();
+        match prog {
+            CaProgram::Eca { rule } => {
+                let rule_t =
+                    Tensor::new(vec![8], rule.table_f32().to_vec()).unwrap();
+                for _ in 0..steps {
+                    let out = self.engine.execute(
+                        "eca_step",
+                        &[Value::F32(current), Value::F32(rule_t.clone())],
+                    )?;
+                    current = out.into_iter().next().unwrap();
+                }
+            }
+            CaProgram::Life => {
+                for _ in 0..steps {
+                    let out = self
+                        .engine
+                        .execute("life_step", &[Value::F32(current)])?;
+                    current = out.into_iter().next().unwrap();
+                }
+            }
+            CaProgram::Lenia { .. } => {
+                let kfft = crate::backend::lenia_kernel_fft(self.engine)?;
+                for _ in 0..steps {
+                    let out = self.engine.execute(
+                        "lenia_step",
+                        &[Value::F32(current), Value::F32(kfft.clone())],
+                    )?;
+                    current = out.into_iter().next().unwrap();
+                }
+            }
+            CaProgram::Nca(_) => {
+                bail!(
+                    "PjrtBackend has no generic NCA program; use the named \
+                     rollout artifacts via ProgramBackend::execute"
+                )
+            }
+        }
+        Ok(current)
+    }
+
+    fn train_step(&self, program: &str, inputs: &[Value])
+        -> Result<Vec<Tensor>> {
+        self.engine.execute(program, inputs)
+    }
+}

@@ -1,0 +1,136 @@
+//! Scoped-thread worker pool for batch-parallel kernels.
+//!
+//! Batch elements of a CA are independent, so every native kernel
+//! parallelizes the same way: split the state buffer into one contiguous
+//! chunk per batch element and let a small crew of scoped threads pull
+//! chunks off a shared queue. `std::thread::scope` keeps borrows safe
+//! (kernels capture `&self` state like kernel taps) with zero unsafe.
+
+use std::sync::Mutex;
+
+/// A fixed-width crew of scoped worker threads.
+#[derive(Clone, Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::new()
+    }
+}
+
+impl WorkerPool {
+    /// Pool sized to the machine (`available_parallelism`).
+    pub fn new() -> WorkerPool {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        WorkerPool { threads }
+    }
+
+    /// Pool with an explicit thread count (min 1). `with_threads(1)`
+    /// degrades to sequential execution — handy for determinism checks.
+    pub fn with_threads(threads: usize) -> WorkerPool {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i, chunk_i)` over consecutive `chunk`-sized pieces of
+    /// `data`, in parallel. `data.len()` must be a multiple of `chunk`;
+    /// chunk `i` covers `data[i*chunk .. (i+1)*chunk]`.
+    ///
+    /// Chunks are disjoint `&mut` borrows, so workers never contend on
+    /// the data itself — only on the (cheap) chunk queue.
+    pub fn for_each_chunk<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk > 0, "for_each_chunk: zero chunk size");
+        assert_eq!(
+            data.len() % chunk,
+            0,
+            "for_each_chunk: {} not a multiple of chunk {chunk}",
+            data.len()
+        );
+        let jobs = data.len() / chunk;
+        let threads = self.threads.min(jobs);
+        if threads <= 1 {
+            for (i, piece) in data.chunks_mut(chunk).enumerate() {
+                f(i, piece);
+            }
+            return;
+        }
+        let queue = Mutex::new(data.chunks_mut(chunk).enumerate());
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let job = queue.lock().expect("worker queue").next();
+                    match job {
+                        Some((i, piece)) => f(i, piece),
+                        None => break,
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_chunk_exactly_once() {
+        let pool = WorkerPool::with_threads(4);
+        let mut data = vec![0u32; 64];
+        pool.for_each_chunk(&mut data, 8, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1 + i as u32;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, 1 + (i / 8) as u32, "cell {i}");
+        }
+    }
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let work = |i: usize, chunk: &mut [u64]| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (i * 1_000 + j) as u64;
+            }
+        };
+        let mut a = vec![0u64; 300];
+        let mut b = vec![0u64; 300];
+        WorkerPool::with_threads(1).for_each_chunk(&mut a, 50, work);
+        WorkerPool::with_threads(8).for_each_chunk(&mut b, 50, work);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn handles_fewer_jobs_than_threads_and_empty_input() {
+        let pool = WorkerPool::with_threads(16);
+        let mut one = vec![0u8; 4];
+        pool.for_each_chunk(&mut one, 4, |_, c| c.fill(7));
+        assert_eq!(one, vec![7; 4]);
+        let mut empty: Vec<u8> = vec![];
+        pool.for_each_chunk(&mut empty, 4, |_, _| panic!("no chunks"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_misaligned_lengths() {
+        WorkerPool::with_threads(2).for_each_chunk(&mut [0u8; 5], 2,
+                                                   |_, _| {});
+    }
+
+    #[test]
+    fn default_pool_has_threads() {
+        assert!(WorkerPool::new().threads() >= 1);
+    }
+}

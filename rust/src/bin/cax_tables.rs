@@ -1,5 +1,5 @@
 //! `cax-tables` — regenerate every table and figure of the paper's
-//! evaluation (DESIGN.md §2 experiment index).
+//! evaluation (rust/README.md experiment index).
 //!
 //!   cax-tables fig3     Fig. 3 left+right: fused vs stepwise vs naive
 //!   cax-tables table1   Table 1: the CA coverage matrix (registry status)
@@ -179,11 +179,15 @@ fn fig3(engine: &Engine, opt: &Opt) -> Result<()> {
         let updates = sim.cell_updates(artifact, steps)?;
         let rule = WolframRule::new(30);
 
-        let mut path_time = [0.0f64; 3];
-        for (pi, path) in
-            [SimPath::Fused, SimPath::Stepwise, SimPath::Naive]
-                .into_iter()
-                .enumerate()
+        let mut path_time = [0.0f64; 4];
+        for (pi, path) in [
+            SimPath::Fused,
+            SimPath::Stepwise,
+            SimPath::Naive,
+            SimPath::Native,
+        ]
+        .into_iter()
+        .enumerate()
         {
             // Naive Lenia is O(R^2) per cell and the bench-scale stepwise
             // paths pay T dispatches; trim their iteration counts.
@@ -218,9 +222,11 @@ fn fig3(engine: &Engine, opt: &Opt) -> Result<()> {
             });
         }
         println!(
-            "  -> CAX-fused speedup: {:.0}x vs naive, {:.1}x vs stepwise",
+            "  -> CAX-fused speedup: {:.0}x vs naive, {:.1}x vs stepwise; \
+             native-bitpacked: {:.0}x vs naive",
             path_time[2] / path_time[0].max(1e-12),
-            path_time[1] / path_time[0].max(1e-12)
+            path_time[1] / path_time[0].max(1e-12),
+            path_time[2] / path_time[3].max(1e-12)
         );
         // The paper's actual comparator is CellPyLib (pure-Python per-cell
         // dispatch), measured at build time by compile/pybaseline.py.

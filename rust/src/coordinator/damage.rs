@@ -8,8 +8,8 @@
 
 use anyhow::Result;
 
+use crate::backend::{ProgramBackend, Value};
 use crate::datasets::targets;
-use crate::runtime::{Engine, Value};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -98,7 +98,7 @@ fn zero_hidden(state: &mut Tensor) {
 /// denoising passes restart them — the diffusion-model "renoise and rerun"
 /// analogue.
 pub fn run_damage_trial(
-    engine: &Engine,
+    engine: &dyn ProgramBackend,
     rollout_artifact: &str,
     params: &Tensor,
     develop_state: Tensor,

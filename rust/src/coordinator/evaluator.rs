@@ -3,9 +3,9 @@
 
 use anyhow::{bail, Result};
 
+use crate::backend::{ProgramBackend, Value};
 use crate::datasets::arc1d::{argmax_colors, one_hot_batch, Example};
 use crate::datasets::mnist::Digit;
-use crate::runtime::{Engine, Value};
 use crate::tensor::Tensor;
 
 /// Exact-match accuracy of an ARC NCA on a test set.
@@ -14,7 +14,7 @@ use crate::tensor::Tensor;
 /// chunks (padded with repeats, padding excluded from scoring). A test case
 /// counts as solved only if EVERY pixel matches the target — the paper's
 /// task-success criterion (§5.3).
-pub fn arc_accuracy(engine: &Engine, params: &Tensor, test: &[Example])
+pub fn arc_accuracy(engine: &dyn ProgramBackend, params: &Tensor, test: &[Example])
                     -> Result<f64> {
     if test.is_empty() {
         bail!("arc_accuracy: empty test set");
@@ -52,7 +52,7 @@ pub fn arc_accuracy(engine: &Engine, params: &Tensor, test: &[Example])
 }
 
 /// Per-pixel agreement rate (softer diagnostic than exact match).
-pub fn arc_pixel_accuracy(engine: &Engine, params: &Tensor, test: &[Example])
+pub fn arc_pixel_accuracy(engine: &dyn ProgramBackend, params: &Tensor, test: &[Example])
                           -> Result<f64> {
     let info = engine.manifest().artifact("arc_eval")?;
     let (b, w) = (info.inputs[1].shape[0], info.inputs[1].shape[1]);
@@ -86,7 +86,7 @@ pub fn arc_pixel_accuracy(engine: &Engine, params: &Tensor, test: &[Example])
 /// Majority-vote classification accuracy of the self-classifying MNIST NCA:
 /// each alive cell votes its argmax logit; the image's prediction is the
 /// plurality vote (Randazzo et al. 2020's readout).
-pub fn mnist_accuracy(engine: &Engine, params: &Tensor, digits: &[&Digit],
+pub fn mnist_accuracy(engine: &dyn ProgramBackend, params: &Tensor, digits: &[&Digit],
                       seed: u32) -> Result<f64> {
     if digits.is_empty() {
         bail!("mnist_accuracy: empty evaluation set");
@@ -145,7 +145,7 @@ pub fn mnist_accuracy(engine: &Engine, params: &Tensor, digits: &[&Digit],
 }
 
 /// Reconstruction MSE of the 3D self-autoencoding NCA on a digit batch.
-pub fn autoenc3d_recon_mse(engine: &Engine, params: &Tensor,
+pub fn autoenc3d_recon_mse(engine: &dyn ProgramBackend, params: &Tensor,
                            digits: &[&Digit], seed: u32) -> Result<f64> {
     let info = engine.manifest().artifact("autoenc3d_eval")?;
     let b = info.inputs[1].shape[0];

@@ -8,13 +8,13 @@
 
 use anyhow::{Context, Result};
 
+use crate::backend::{ProgramBackend, Value};
 use crate::coordinator::trainer::{train_loop, TrainCfg, TrainState};
 use crate::datasets::arc1d::{one_hot_batch, Example, Task};
 use crate::datasets::mnist::{self, MnistConfig};
 use crate::datasets::targets::Sprite;
 use crate::metrics::History;
 use crate::pool::SamplePool;
-use crate::runtime::{Engine, Value};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -39,14 +39,14 @@ impl TrainRun {
 }
 
 /// Render the growing-NCA target sprite at the artifact's grid size.
-pub fn growing_target(engine: &Engine) -> Result<Tensor> {
+pub fn growing_target(engine: &dyn ProgramBackend) -> Result<Tensor> {
     let info = engine.manifest().artifact("growing_train_step")?;
     let spec = &info.inputs[5]; // target [H, W, 4]
     Ok(Sprite::Lizard.render(spec.shape[0], spec.shape[1]))
 }
 
 /// The single-seed-cell initial state from the `growing_seed` artifact.
-pub fn growing_seed(engine: &Engine) -> Result<Tensor> {
+pub fn growing_seed(engine: &dyn ProgramBackend) -> Result<Tensor> {
     let out = engine.execute("growing_seed", &[])?;
     Ok(out.into_iter().next().unwrap())
 }
@@ -56,7 +56,7 @@ pub fn growing_seed(engine: &Engine) -> Result<Tensor> {
 /// Pool bookkeeping lives here in Layer 3: sample a batch, hand it to the
 /// fused train-step artifact (rollout + BPTT + worst-of-batch reseed +
 /// Adam, all in-graph), write the evolved states back.
-pub fn train_growing(engine: &Engine, cfg: &TrainCfg, pool_size: usize)
+pub fn train_growing(engine: &dyn ProgramBackend, cfg: &TrainCfg, pool_size: usize)
                      -> Result<(TrainRun, SamplePool)> {
     let info = engine.manifest().artifact("growing_train_step")?;
     let batch = info.inputs[4].shape[0];
@@ -100,7 +100,7 @@ pub fn train_growing(engine: &Engine, cfg: &TrainCfg, pool_size: usize)
 /// distribution: RGBA channels ~ U[0,1), hidden channels zero (training
 /// always starts from `noisy_init`, which only noises the first 4
 /// channels — full-channel noise is out of distribution).
-pub fn diffusing_noise_state(engine: &Engine, seed: u64) -> Result<Tensor> {
+pub fn diffusing_noise_state(engine: &dyn ProgramBackend, seed: u64) -> Result<Tensor> {
     let info = engine.manifest().artifact("diffusing_rollout")?;
     let shape = info.inputs[1].shape.clone(); // [H, W, C]
     let (h, w, c) = (shape[0], shape[1], shape[2]);
@@ -119,7 +119,7 @@ pub fn diffusing_noise_state(engine: &Engine, seed: u64) -> Result<Tensor> {
 /// A partially-noised diffusing-NCA state: RGBA = (1-level)*target +
 /// level*noise, hidden channels zero — exactly the training distribution
 /// of `noisy_init` at a chosen noise level.
-pub fn diffusing_mixed_state(engine: &Engine, target: &Tensor, level: f32,
+pub fn diffusing_mixed_state(engine: &dyn ProgramBackend, target: &Tensor, level: f32,
                              seed: u64) -> Result<Tensor> {
     let info = engine.manifest().artifact("diffusing_rollout")?;
     let shape = info.inputs[1].shape.clone(); // [H, W, C]
@@ -139,7 +139,7 @@ pub fn diffusing_mixed_state(engine: &Engine, target: &Tensor, level: f32,
 }
 
 /// §5.1: diffusing NCA — no pool needed (the paper's selling point).
-pub fn train_diffusing(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
+pub fn train_diffusing(engine: &dyn ProgramBackend, cfg: &TrainCfg) -> Result<TrainRun> {
     let info = engine.manifest().artifact("diffusing_train_step")?;
     let spec = &info.inputs[4]; // target [H, W, 4]
     let target = Sprite::Lizard.render(spec.shape[0], spec.shape[1]);
@@ -156,7 +156,7 @@ pub fn train_diffusing(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
 }
 
 /// Goal-conditioned growing NCA (Sudhakaran et al. 2022).
-pub fn train_conditional(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
+pub fn train_conditional(engine: &dyn ProgramBackend, cfg: &TrainCfg) -> Result<TrainRun> {
     let info = engine.manifest().artifact("conditional_train_step")?;
     let tgt_spec = &info.inputs[4]; // [G, H, W, 4]
     let goal_spec = &info.inputs[5]; // [B, G]
@@ -187,7 +187,7 @@ pub fn train_conditional(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
 }
 
 /// Digit batch + one-hot label batch at an artifact's grid size.
-fn digit_batches(engine: &Engine, artifact: &str, input_idx: usize,
+fn digit_batches(engine: &dyn ProgramBackend, artifact: &str, input_idx: usize,
                  n: usize, seed: u64)
                  -> Result<(Vec<Tensor>, Vec<Tensor>, usize)> {
     let info = engine.manifest().artifact(artifact)?;
@@ -209,7 +209,7 @@ fn digit_batches(engine: &Engine, artifact: &str, input_idx: usize,
 }
 
 /// Self-classifying MNIST (Randazzo et al. 2020) — fused train path.
-pub fn train_mnist(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
+pub fn train_mnist(engine: &dyn ProgramBackend, cfg: &TrainCfg) -> Result<TrainRun> {
     let (images, labels, _) =
         digit_batches(engine, "mnist_train_step", 4, cfg.steps * 4,
                       cfg.seed as u64)?;
@@ -231,7 +231,7 @@ pub fn train_mnist(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
 }
 
 /// Unsupervised VAE-NCA (Palm et al. 2021).
-pub fn train_vae(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
+pub fn train_vae(engine: &dyn ProgramBackend, cfg: &TrainCfg) -> Result<TrainRun> {
     let (images, _, _) =
         digit_batches(engine, "vae_train_step", 4, cfg.steps * 4,
                       cfg.seed as u64)?;
@@ -249,7 +249,7 @@ pub fn train_vae(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
 }
 
 /// §5.2: 3D self-autoencoding MNIST through the 1-cell bottleneck.
-pub fn train_autoenc3d(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
+pub fn train_autoenc3d(engine: &dyn ProgramBackend, cfg: &TrainCfg) -> Result<TrainRun> {
     let (images, _, _) =
         digit_batches(engine, "autoenc3d_train_step", 4, cfg.steps * 4,
                       cfg.seed as u64)?;
@@ -267,7 +267,7 @@ pub fn train_autoenc3d(engine: &Engine, cfg: &TrainCfg) -> Result<TrainRun> {
 }
 
 /// §5.3: train the 1D-ARC NCA on one task's training split.
-pub fn train_arc(engine: &Engine, cfg: &TrainCfg, task: Task,
+pub fn train_arc(engine: &dyn ProgramBackend, cfg: &TrainCfg, task: Task,
                  train_set: &[Example]) -> Result<TrainRun> {
     let info = engine.manifest().artifact("arc_train_step")?;
     let spec = &info.inputs[4]; // inputs [B, W, COLORS]
@@ -298,7 +298,7 @@ pub fn train_arc(engine: &Engine, cfg: &TrainCfg, task: Task,
 }
 
 /// Generate a train/test split sized for the `arc_eval` artifact width.
-pub fn arc_split(engine: &Engine, task: Task, train: usize, test: usize,
+pub fn arc_split(engine: &dyn ProgramBackend, task: Task, train: usize, test: usize,
                  seed: u64) -> Result<(Vec<Example>, Vec<Example>)> {
     let info = engine.manifest().artifact("arc_eval")?;
     let w = info.inputs[1].shape[1];
@@ -307,7 +307,7 @@ pub fn arc_split(engine: &Engine, task: Task, train: usize, test: usize,
 
 /// Dispatch a training run by registry key. Returns None for classic
 /// (non-trained) CAs.
-pub fn train_by_key(engine: &Engine, key: &str, cfg: &TrainCfg,
+pub fn train_by_key(engine: &dyn ProgramBackend, key: &str, cfg: &TrainCfg,
                     pool_size: usize) -> Result<Option<TrainRun>> {
     Ok(match key {
         "growing" => Some(train_growing(engine, cfg, pool_size)?.0),

@@ -1,8 +1,9 @@
 //! Coordinator — the paper's framework layer in Rust.
 //!
 //! - [`registry`]: the Table-1 CA catalogue and artifact requirements.
-//! - [`sim`]: classic-CA drivers over the three execution paths of Fig. 3
-//!   (fused / stepwise / naive baseline).
+//! - [`sim`]: classic-CA drivers over the execution paths of Fig. 3
+//!   (fused / stepwise / naive baseline / native bit-packed), dispatched
+//!   through the [`crate::backend`] traits.
 //! - [`trainer`]: the generic fused-train-step loop + checkpoints.
 //! - [`stepwise`]: host-driven BPTT (the Fig. 3-right TF-proxy baseline).
 //! - [`evaluator`]: Table-2 ARC accuracy, MNIST majority vote, 3D recon.

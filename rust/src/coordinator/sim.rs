@@ -1,12 +1,20 @@
-//! Simulation engine: drives the classic-CA artifacts (fused and stepwise)
-//! and the naive Rust baselines behind one interface — the comparison
-//! surface of Figure 3.
+//! Simulation engine: drives the classic CAs over every execution path
+//! — the comparison surface of Figure 3, now dispatching through the
+//! pluggable backend layer.
+//!
+//! Paths:
+//! - [`Path::Fused`]: whole rollout as ONE XLA program (`pjrt` feature).
+//! - [`Path::Stepwise`]: one XLA execution per step, host round-trips.
+//! - [`Path::Naive`]: per-cell scalar Rust loops (the CellPyLib role).
+//! - [`Path::Native`]: the multi-threaded bit-packed/tiled
+//!   [`NativeBackend`] — the hermetic fast path; no artifacts needed.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::automata::{EcaSim, LeniaSim, LifeSim, WolframRule};
 use crate::automata::lenia::LeniaParams;
-use crate::runtime::{Engine, Value};
+use crate::automata::{EcaSim, LeniaSim, LifeSim, WolframRule};
+use crate::backend::{Backend, CaProgram, NativeBackend, ProgramBackend,
+                     Value};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -20,6 +28,8 @@ pub enum Path {
     Stepwise,
     /// Naive per-cell Rust loops (the CellPyLib-role baseline).
     Naive,
+    /// Bit-packed / cache-tiled multi-threaded native backend.
+    Native,
 }
 
 impl Path {
@@ -28,32 +38,84 @@ impl Path {
             Path::Fused => "cax-fused",
             Path::Stepwise => "xla-stepwise",
             Path::Naive => "naive-baseline",
+            Path::Native => "native-bitpacked",
         }
+    }
+
+    /// Parse a CLI `--path` value.
+    pub fn parse(text: &str) -> Result<Path> {
+        match text {
+            "fused" => Ok(Path::Fused),
+            "stepwise" => Ok(Path::Stepwise),
+            "naive" => Ok(Path::Naive),
+            "native" => Ok(Path::Native),
+            other => Err(anyhow!(
+                "unknown path {other:?} (want fused|stepwise|naive|native)"
+            )),
+        }
+    }
+
+    /// Whether this path needs an artifact-backed program backend.
+    pub fn needs_programs(&self) -> bool {
+        matches!(self, Path::Fused | Path::Stepwise)
     }
 }
 
-/// Classic-CA simulation driver over an [`Engine`].
+/// Classic-CA simulation driver over the backend layer.
+///
+/// Holds an optional [`ProgramBackend`] (the XLA paths and manifest
+/// introspection need one) plus an always-present [`NativeBackend`].
 pub struct Simulator<'e> {
-    pub engine: &'e Engine,
+    program: Option<&'e dyn ProgramBackend>,
+    native: NativeBackend,
 }
 
 impl<'e> Simulator<'e> {
-    pub fn new(engine: &'e Engine) -> Simulator<'e> {
-        Simulator { engine }
+    /// Simulator over an artifact-backed program backend (all paths).
+    pub fn new(program: &'e dyn ProgramBackend) -> Simulator<'e> {
+        Simulator { program: Some(program), native: NativeBackend::new() }
+    }
+
+    /// Simulator with only the native + naive paths (no artifacts).
+    pub fn native_only() -> Simulator<'static> {
+        Simulator { program: None, native: NativeBackend::new() }
+    }
+
+    /// The native backend (e.g. to query its worker count).
+    pub fn native(&self) -> &NativeBackend {
+        &self.native
+    }
+
+    fn program(&self) -> Result<&'e dyn ProgramBackend> {
+        self.program.ok_or_else(|| {
+            anyhow!(
+                "this Simulator has no program backend: the fused/stepwise \
+                 XLA paths need artifacts (build with --features pjrt and \
+                 run `make artifacts`); use --path native instead"
+            )
+        })
     }
 
     /// Random {0,1} state matching an artifact's `state` input shape.
-    pub fn random_state(&self, artifact: &str, rng: &mut Rng) -> Result<Tensor> {
-        let info = self.engine.manifest().artifact(artifact)?;
+    pub fn random_state(&self, artifact: &str, rng: &mut Rng)
+                        -> Result<Tensor> {
+        let program = self.program()?;
+        let info = program.manifest().artifact(artifact)?;
         let spec = &info.inputs[0];
         let data = rng.binary_vec(spec.numel(), 0.5);
         Tensor::new(spec.shape.clone(), data)
     }
 
+    /// Random {0,1} state of an explicit shape (artifact-free paths).
+    pub fn random_binary_state(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor::new(shape.to_vec(), rng.binary_vec(numel, 0.5)).unwrap()
+    }
+
     // ------------------------------------------------------------ ECA
 
-    /// Run ECA for the artifact-configured number of steps on `path`.
-    /// `steps` only applies to Stepwise/Naive (Fused bakes T in-graph).
+    /// Run ECA for `steps` on `path` (`steps` is baked in-graph for
+    /// Fused; it applies to the other paths).
     pub fn run_eca(&self, path: Path, state: &Tensor, rule: WolframRule,
                    steps: usize) -> Result<Tensor> {
         self.run_eca_named("eca_step", "eca_rollout", path, state, rule,
@@ -65,20 +127,23 @@ impl<'e> Simulator<'e> {
     pub fn run_eca_named(&self, step_art: &str, rollout_art: &str,
                          path: Path, state: &Tensor, rule: WolframRule,
                          steps: usize) -> Result<Tensor> {
-        let rule_t =
-            Tensor::new(vec![8], rule.table_f32().to_vec()).unwrap();
         match path {
             Path::Fused => {
-                let out = self.engine.execute(
+                let rule_t =
+                    Tensor::new(vec![8], rule.table_f32().to_vec()).unwrap();
+                let out = self.program()?.execute(
                     rollout_art,
                     &[Value::F32(state.clone()), Value::F32(rule_t)],
                 )?;
                 Ok(out.into_iter().next().unwrap())
             }
             Path::Stepwise => {
+                let rule_t =
+                    Tensor::new(vec![8], rule.table_f32().to_vec()).unwrap();
+                let program = self.program()?;
                 let mut cur = state.clone();
                 for _ in 0..steps {
-                    let out = self.engine.execute(
+                    let out = program.execute(
                         step_art,
                         &[Value::F32(cur), Value::F32(rule_t.clone())],
                     )?;
@@ -91,6 +156,9 @@ impl<'e> Simulator<'e> {
                 sim.run(steps);
                 Ok(sim.to_tensor())
             }
+            Path::Native => {
+                self.native.rollout(&CaProgram::Eca { rule }, state, steps)
+            }
         }
     }
 
@@ -98,7 +166,7 @@ impl<'e> Simulator<'e> {
     pub fn eca_traj(&self, state: &Tensor, rule: WolframRule)
                     -> Result<(Tensor, Tensor)> {
         let rule_t = Tensor::new(vec![8], rule.table_f32().to_vec()).unwrap();
-        let mut out = self.engine.execute(
+        let mut out = self.program()?.execute(
             "eca_traj", &[Value::F32(state.clone()), Value::F32(rule_t)],
         )?;
         let traj = out.pop().unwrap();
@@ -120,15 +188,16 @@ impl<'e> Simulator<'e> {
         match path {
             Path::Fused => {
                 let out = self
-                    .engine
+                    .program()?
                     .execute(rollout_art, &[Value::F32(state.clone())])?;
                 Ok(out.into_iter().next().unwrap())
             }
             Path::Stepwise => {
+                let program = self.program()?;
                 let mut cur = state.clone();
                 for _ in 0..steps {
                     let out =
-                        self.engine.execute(step_art, &[Value::F32(cur)])?;
+                        program.execute(step_art, &[Value::F32(cur)])?;
                     cur = out.into_iter().next().unwrap();
                 }
                 Ok(cur)
@@ -138,12 +207,16 @@ impl<'e> Simulator<'e> {
                 sim.run(steps);
                 Ok(sim.to_tensor())
             }
+            Path::Native => {
+                self.native.rollout(&CaProgram::Life, state, steps)
+            }
         }
     }
 
     pub fn life_traj(&self, state: &Tensor) -> Result<(Tensor, Tensor)> {
-        let mut out =
-            self.engine.execute("life_traj", &[Value::F32(state.clone())])?;
+        let mut out = self
+            .program()?
+            .execute("life_traj", &[Value::F32(state.clone())])?;
         let traj = out.pop().unwrap();
         let final_state = out.pop().unwrap();
         Ok((final_state, traj))
@@ -154,10 +227,26 @@ impl<'e> Simulator<'e> {
     /// The FFT'd ring kernel the Lenia artifacts expect, from the manifest
     /// blob.
     pub fn lenia_kernel(&self) -> Result<Tensor> {
-        let info = self.engine.manifest().artifact("lenia_step")?;
-        let spec = &info.inputs[1];
-        let data = self.engine.manifest().load_blob("lenia_kfft")?;
-        Tensor::new(spec.shape.clone(), data)
+        crate::backend::lenia_kernel_fft(self.program()?)
+    }
+
+    /// Lenia world parameters: manifest metadata when a program backend
+    /// is attached, the paper defaults otherwise.
+    pub fn lenia_params(&self) -> LeniaParams {
+        let defaults = LeniaParams::default();
+        let Some(program) = self.program else {
+            return defaults;
+        };
+        let Ok(info) = program.manifest().artifact("lenia_step") else {
+            return defaults;
+        };
+        LeniaParams {
+            radius: info.meta_usize("radius").unwrap_or(defaults.radius),
+            mu: info.meta_f64("mu").unwrap_or(defaults.mu as f64) as f32,
+            sigma: info.meta_f64("sigma").unwrap_or(defaults.sigma as f64)
+                as f32,
+            dt: info.meta_f64("dt").unwrap_or(defaults.dt as f64) as f32,
+        }
     }
 
     pub fn run_lenia(&self, path: Path, state: &Tensor, steps: usize)
@@ -165,7 +254,7 @@ impl<'e> Simulator<'e> {
         match path {
             Path::Fused => {
                 let kfft = self.lenia_kernel()?;
-                let out = self.engine.execute(
+                let out = self.program()?.execute(
                     "lenia_rollout",
                     &[Value::F32(state.clone()), Value::F32(kfft)],
                 )?;
@@ -173,9 +262,10 @@ impl<'e> Simulator<'e> {
             }
             Path::Stepwise => {
                 let kfft = self.lenia_kernel()?;
+                let program = self.program()?;
                 let mut cur = state.clone();
                 for _ in 0..steps {
-                    let out = self.engine.execute(
+                    let out = program.execute(
                         "lenia_step",
                         &[Value::F32(cur), Value::F32(kfft.clone())],
                     )?;
@@ -184,13 +274,11 @@ impl<'e> Simulator<'e> {
                 Ok(cur)
             }
             Path::Naive => {
-                let info = self.engine.manifest().artifact("lenia_step")?;
-                let params = LeniaParams {
-                    radius: info.meta_usize("radius").unwrap_or(10),
-                    mu: info.meta_f64("mu").unwrap_or(0.15) as f32,
-                    sigma: info.meta_f64("sigma").unwrap_or(0.017) as f32,
-                    dt: info.meta_f64("dt").unwrap_or(0.1) as f32,
-                };
+                let params = self.lenia_params();
+                // Same wrap-index precondition the native backend checks.
+                crate::backend::validate_state(
+                    &CaProgram::Lenia { params }, state,
+                )?;
                 // Naive sim is single-board; run each batch element.
                 let b = state.shape()[0];
                 let mut outs = Vec::with_capacity(b);
@@ -202,12 +290,17 @@ impl<'e> Simulator<'e> {
                 }
                 Tensor::stack(&outs)
             }
+            Path::Native => {
+                let params = self.lenia_params();
+                self.native
+                    .rollout(&CaProgram::Lenia { params }, state, steps)
+            }
         }
     }
 
     pub fn lenia_traj(&self, state: &Tensor) -> Result<(Tensor, Tensor)> {
         let kfft = self.lenia_kernel()?;
-        let mut out = self.engine.execute(
+        let mut out = self.program()?.execute(
             "lenia_traj", &[Value::F32(state.clone()), Value::F32(kfft)],
         )?;
         let traj = out.pop().unwrap();
@@ -217,8 +310,78 @@ impl<'e> Simulator<'e> {
 
     /// Cell updates per full run for an artifact (throughput denominators).
     pub fn cell_updates(&self, artifact: &str, steps: usize) -> Result<f64> {
-        let info = self.engine.manifest().artifact(artifact)?;
+        let info = self.program()?.manifest().artifact(artifact)?;
         let cells: usize = info.inputs[0].numel();
         Ok(cells as f64 * steps as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_names_and_parse() {
+        for (text, path) in [("fused", Path::Fused),
+                             ("stepwise", Path::Stepwise),
+                             ("naive", Path::Naive),
+                             ("native", Path::Native)] {
+            assert_eq!(Path::parse(text).unwrap(), path);
+        }
+        assert!(Path::parse("warp").is_err());
+        assert!(Path::Fused.needs_programs());
+        assert!(!Path::Native.needs_programs());
+        assert_eq!(Path::Native.name(), "native-bitpacked");
+    }
+
+    #[test]
+    fn native_only_simulator_runs_all_classic_cas() {
+        let sim = Simulator::native_only();
+        let mut rng = Rng::new(5);
+        let eca = Simulator::random_binary_state(&[2, 70], &mut rng);
+        let out = sim
+            .run_eca(Path::Native, &eca, WolframRule::new(30), 8)
+            .unwrap();
+        assert_eq!(out.shape(), &[2, 70]);
+
+        let life = Simulator::random_binary_state(&[2, 12, 12], &mut rng);
+        let out = sim.run_life(Path::Native, &life, 4).unwrap();
+        assert_eq!(out.shape(), &[2, 12, 12]);
+
+        let lenia = Simulator::random_binary_state(&[1, 32, 32], &mut rng);
+        let out = sim.run_lenia(Path::Native, &lenia, 2).unwrap();
+        assert_eq!(out.shape(), &[1, 32, 32]);
+    }
+
+    #[test]
+    fn native_only_simulator_refuses_xla_paths() {
+        let sim = Simulator::native_only();
+        let mut rng = Rng::new(6);
+        let state = Simulator::random_binary_state(&[1, 16], &mut rng);
+        let err = sim
+            .run_eca(Path::Fused, &state, WolframRule::new(30), 4)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("native"));
+        assert!(sim.cell_updates("eca_rollout", 4).is_err());
+    }
+
+    #[test]
+    fn native_path_matches_naive_paths() {
+        let sim = Simulator::native_only();
+        let mut rng = Rng::new(7);
+        let state = Simulator::random_binary_state(&[3, 65], &mut rng);
+        let rule = WolframRule::new(110);
+        let naive = sim.run_eca(Path::Naive, &state, rule, 9).unwrap();
+        let native = sim.run_eca(Path::Native, &state, rule, 9).unwrap();
+        assert!(naive.bit_eq(&native));
+    }
+
+    #[test]
+    fn lenia_params_default_without_manifest() {
+        let sim = Simulator::native_only();
+        let p = sim.lenia_params();
+        let d = LeniaParams::default();
+        assert_eq!(p.radius, d.radius);
+        assert_eq!(p.mu, d.mu);
     }
 }

@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 
-use crate::runtime::{Engine, Value};
+use crate::backend::{ProgramBackend, Value};
 use crate::tensor::Tensor;
 
 /// Host-side Adam (matches `models/common.py::adam_update`).
@@ -48,7 +48,7 @@ pub fn clip_global_norm(grads: &mut [f32]) {
 /// `init_state` builds the initial NCA state from the digit batch on the
 /// host (channel 0 = digit, rest zero), mirroring `mnist_classify.init_state`.
 pub fn mnist_stepwise_train_step(
-    engine: &Engine,
+    engine: &dyn ProgramBackend,
     params: &mut Tensor,
     m: &mut Tensor,
     v: &mut Tensor,

@@ -10,8 +10,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::{ProgramBackend, Value};
 use crate::metrics::History;
-use crate::runtime::{Engine, Value};
 use crate::tensor::Tensor;
 
 /// Train-loop configuration.
@@ -41,8 +41,9 @@ pub struct TrainState {
 
 impl TrainState {
     /// Fresh state from an initial-parameter blob.
-    pub fn from_blob(engine: &Engine, blob: &str) -> Result<TrainState> {
-        let params = engine.load_params(blob)?;
+    pub fn from_blob(backend: &dyn ProgramBackend, blob: &str)
+                     -> Result<TrainState> {
+        let params = backend.load_params(blob)?;
         let n = params.numel();
         Ok(TrainState {
             params,
@@ -101,7 +102,7 @@ pub struct StepOutcome<'a> {
 /// per-step batch values; `observer` sees every step's loss and extra
 /// outputs (pool write-back etc.).
 pub fn train_loop<B, O>(
-    engine: &Engine,
+    backend: &dyn ProgramBackend,
     artifact: &str,
     state: &mut TrainState,
     cfg: &TrainCfg,
@@ -112,7 +113,7 @@ where
     B: FnMut(usize) -> Result<Vec<Value>>,
     O: FnMut(StepOutcome<'_>) -> Result<()>,
 {
-    let info = engine.manifest().artifact(artifact)?;
+    let info = backend.manifest().artifact(artifact)?;
     if info.outputs.len() < 4 {
         bail!("artifact {artifact} is not a train step (needs >= 4 outputs)");
     }
@@ -128,7 +129,7 @@ where
         inputs.extend(batch_fn(local)?);
         inputs.push(Value::U32(cfg.seed.wrapping_add(local as u32)));
 
-        let mut out = engine
+        let mut out = backend
             .execute(artifact, &inputs)
             .with_context(|| format!("train step {local} of {artifact}"))?;
         let extra = out.split_off(4);

@@ -1,4 +1,4 @@
-//! Synthetic MNIST-role digit corpus (DESIGN.md §3 substitution).
+//! Synthetic MNIST-role digit corpus (rust/README.md; paper-data substitution).
 //!
 //! No network access, so we synthesize a labelled 10-class digit-shaped
 //! corpus: a 5x7 glyph font rendered into H x W with random scale, offset,

@@ -1,6 +1,6 @@
 //! Dataset substrates: synthetic digit corpus, 1D-ARC task generators,
 //! procedural RGBA target sprites. All deterministic from a `u64` seed.
-//! See DESIGN.md §3 for the paper-data -> synthetic-data substitutions.
+//! See rust/README.md for the paper-data -> synthetic-data substitutions.
 
 pub mod arc1d;
 pub mod mnist;

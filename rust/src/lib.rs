@@ -1,17 +1,24 @@
 //! # CAX-RS — Cellular Automata Accelerated
 //!
 //! A production-grade reproduction of *CAX: Cellular Automata Accelerated
-//! in JAX* (Faldor & Cully, ICLR 2025) as a three-layer Rust + JAX + Pallas
-//! stack: Pallas kernels (L1) and JAX models (L2) are AOT-lowered to HLO
-//! text at build time; this crate (L3) is the deployable framework that
-//! loads, schedules, trains and benchmarks them via PJRT — plus every
+//! in JAX* (Faldor & Cully, ICLR 2025) as a Rust framework with pluggable
+//! execution backends: a pure-Rust [`backend::NativeBackend`] (bit-packed
+//! SWAR kernels for the discrete CAs, cache-tiled f32 kernels for the
+//! continuous/neural paths, batch-parallel worker pool) that runs
+//! everywhere, and a PJRT engine (`pjrt` feature) that executes
+//! AOT-lowered HLO artifacts from the JAX/Pallas layers — plus every
 //! substrate the paper's evaluation needs (naive baselines, datasets,
 //! sample pool, visualization, metrics, config, CLI).
 //!
-//! See DESIGN.md for the architecture and experiment index, EXPERIMENTS.md
-//! for paper-vs-measured results.
+//! See `rust/README.md` for the architecture (layer diagram, backend
+//! feature matrix, how to enable `pjrt`) and the experiment index.
+
+// Tight index loops are the house style of the numeric kernels here;
+// iterator rewrites of 3-D stencils obscure the math they implement.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod automata;
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod datasets;
@@ -22,4 +29,5 @@ pub mod tensor;
 pub mod util;
 pub mod viz;
 
+pub use backend::{Backend, CaProgram, NativeBackend, ProgramBackend, Value};
 pub use tensor::Tensor;

@@ -3,12 +3,14 @@
 //! Subcommands:
 //!   list                         print the Table-1 CA registry + status
 //!   info <artifact>              manifest signature of one artifact
-//!   check                        compile every registry artifact
-//!   sim <eca|life|lenia> ...     run a classic CA (fused/stepwise/naive)
-//!   train <ca> ...               train a neural CA end to end
-//!   eval <arc|mnist|autoenc3d>   evaluate a trained / fresh neural CA
+//!   backends                     execution backends in this build
+//!   check                        compile every registry artifact [pjrt]
+//!   sim <eca|life|lenia> ...     run a classic CA on any backend path
+//!   train <ca> ...               train a neural CA end to end      [pjrt]
+//!   eval <arc|mnist|autoenc3d>   evaluate a trained neural CA      [pjrt]
 //!
 //! Global flags: --artifacts DIR  --out DIR  --seed N  --config FILE
+//!               --backend native|pjrt
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -16,35 +18,48 @@ use std::process::ExitCode;
 use anyhow::{bail, Context, Result};
 
 use cax::automata::WolframRule;
+use cax::backend::NativeBackend;
 use cax::config::Config;
-use cax::coordinator::evaluator;
-use cax::coordinator::trainer::TrainCfg;
-use cax::coordinator::{experiments, registry, Path as SimPath, Simulator};
-use cax::datasets::arc1d::Task;
-use cax::datasets::mnist::{self, MnistConfig};
-use cax::runtime::Engine;
+use cax::coordinator::{Path as SimPath, Simulator};
+use cax::runtime::Manifest;
 use cax::util::rng::Rng;
 use cax::util::timer::Timer;
 use cax::viz::spacetime;
+
+#[cfg(feature = "pjrt")]
+use cax::coordinator::evaluator;
+#[cfg(feature = "pjrt")]
+use cax::coordinator::trainer::TrainCfg;
+#[cfg(feature = "pjrt")]
+use cax::coordinator::{experiments, registry};
+#[cfg(feature = "pjrt")]
+use cax::datasets::arc1d::Task;
+#[cfg(feature = "pjrt")]
+use cax::datasets::mnist::{self, MnistConfig};
+#[cfg(feature = "pjrt")]
+use cax::runtime::Engine;
 
 fn usage() -> &'static str {
     "cax — Cellular Automata Accelerated (Rust coordinator)
 
 USAGE:
-    cax [--artifacts DIR] [--out DIR] [--seed N] [--config FILE] <COMMAND>
+    cax [--artifacts DIR] [--out DIR] [--seed N] [--config FILE]
+        [--backend native|pjrt] <COMMAND>
 
 COMMANDS:
     list                      Table-1 registry and artifact status
     info <artifact>           print one artifact's manifest signature
-    check                     compile every registry artifact
+    backends                  execution backends available in this build
+    check                     compile every registry artifact      [pjrt]
     sim <eca|life|lenia>      run a classic CA
-        [--path fused|stepwise|naive] [--steps N] [--rule R] [--render]
-    train <ca-key>            train a neural CA (growing, conditional, vae,
-        [--steps N]           mnist, diffusing, autoenc3d, arc)
-    eval <arc|mnist|autoenc3d> [--train-steps N] [--task NAME]
-                              train briefly, then report the paper metric
+        [--path fused|stepwise|naive|native] [--steps N] [--rule R]
+        [--batch B] [--width W] [--height H] [--render]
+    train <ca-key>            train a neural CA (growing, conditional,
+        [--steps N]           vae, mnist, diffusing, autoenc3d, arc) [pjrt]
+    eval <arc|mnist|autoenc3d> [--train-steps N] [--task NAME]      [pjrt]
 
-Run `cax list` first to see what the artifacts directory provides."
+The default build runs everything marked-free above hermetically on the
+native backend; [pjrt] commands need `--features pjrt` plus artifacts."
 }
 
 struct Cli {
@@ -87,6 +102,15 @@ impl Cli {
     fn has(&self, name: &str) -> bool {
         self.args.iter().any(|a| a == name)
     }
+
+    fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("{name} wants an integer, got {v:?}")),
+            None => Ok(default),
+        }
+    }
 }
 
 fn next(it: &mut impl Iterator<Item = String>, flag: &str) -> Result<String> {
@@ -112,6 +136,7 @@ fn run() -> Result<()> {
     match cmd {
         "list" => cmd_list(&cli),
         "info" => cmd_info(&cli),
+        "backends" => cmd_backends(&cli),
         "check" => cmd_check(&cli),
         "sim" => cmd_sim(&cli),
         "train" => cmd_train(&cli),
@@ -124,6 +149,15 @@ fn run() -> Result<()> {
     }
 }
 
+fn load_manifest(cli: &Cli) -> Result<Manifest> {
+    let dir = cli.cfg.resolved_artifacts_dir();
+    Manifest::load(&dir).with_context(|| {
+        format!("loading artifacts from {} (run `make artifacts` first?)",
+                dir.display())
+    })
+}
+
+#[cfg(feature = "pjrt")]
 fn engine(cli: &Cli) -> Result<Engine> {
     let dir = cli.cfg.resolved_artifacts_dir();
     Engine::load(&dir).with_context(|| {
@@ -135,30 +169,57 @@ fn engine(cli: &Cli) -> Result<Engine> {
 // ------------------------------------------------------------------ list
 
 fn cmd_list(cli: &Cli) -> Result<()> {
-    let eng = engine(cli)?;
-    let missing = registry::missing_artifacts(eng.manifest());
+    // Absent manifest -> native-only listing; present-but-broken
+    // manifest is a real error the user needs to see.
+    let dir = cli.cfg.resolved_artifacts_dir();
+    let manifest = if dir.join("manifest.json").exists() {
+        Some(load_manifest(cli)?)
+    } else {
+        None
+    };
+    let missing = manifest
+        .as_ref()
+        .map(|m| cax::coordinator::registry::missing_artifacts(m));
     println!("{:<12} {:<46} {:<11} {:<5} status", "KEY", "CELLULAR AUTOMATON",
              "TYPE", "DIMS");
-    for e in registry::table1() {
-        let ok = !missing.iter().any(|m| m.starts_with(&format!("{}:", e.key)));
+    for e in cax::coordinator::registry::table1() {
+        let status = match &missing {
+            Some(miss) => {
+                let prefix = format!("{}:", e.key);
+                if miss.iter().any(|m| m.starts_with(&prefix)) {
+                    "MISSING ARTIFACTS"
+                } else {
+                    "ready"
+                }
+            }
+            None => {
+                // No artifacts on disk: the classic rows still run on
+                // the native backend.
+                if matches!(e.key, "eca" | "life" | "lenia") {
+                    "ready (native)"
+                } else {
+                    "needs artifacts"
+                }
+            }
+        };
         println!(
-            "{:<12} {:<46} {:<11} {:<5} {}",
+            "{:<12} {:<46} {:<11} {:<5} {status}",
             e.key, e.label, e.ca_type.name(), e.dimensions,
-            if ok { "ready" } else { "MISSING ARTIFACTS" }
         );
     }
-    println!("\nplatform: {}   artifacts: {}", eng.platform(),
-             cli.cfg.resolved_artifacts_dir().display());
-    if !missing.is_empty() {
-        println!("missing: {missing:?}");
+    println!("\nartifacts: {}", cli.cfg.resolved_artifacts_dir().display());
+    if let Some(miss) = missing {
+        if !miss.is_empty() {
+            println!("missing: {miss:?}");
+        }
     }
     Ok(())
 }
 
 fn cmd_info(cli: &Cli) -> Result<()> {
     let name = cli.args.get(1).context("info: which artifact?")?;
-    let eng = engine(cli)?;
-    let info = eng.manifest().artifact(name)?;
+    let manifest = load_manifest(cli)?;
+    let info = manifest.artifact(name)?;
     println!("artifact {name}");
     for s in &info.inputs {
         println!("  in  {:<10} {}{:?}", s.name, s.dtype.name(), s.shape);
@@ -169,6 +230,24 @@ fn cmd_info(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+fn cmd_backends(_cli: &Cli) -> Result<()> {
+    let native = NativeBackend::new();
+    println!("{:<8} {:<10} detail", "BACKEND", "STATUS");
+    println!(
+        "{:<8} {:<10} bit-packed SWAR (ECA/Life), tiled f32 (Lenia/NCA), \
+         {} worker threads",
+        "native", "ready", native.threads()
+    );
+    #[cfg(feature = "pjrt")]
+    println!("{:<8} {:<10} XLA artifacts via PJRT (needs `make artifacts`)",
+             "pjrt", "compiled");
+    #[cfg(not(feature = "pjrt"))]
+    println!("{:<8} {:<10} rebuild with `--features pjrt` to enable",
+             "pjrt", "off");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_check(cli: &Cli) -> Result<()> {
     let eng = engine(cli)?;
     let missing = registry::missing_artifacts(eng.manifest());
@@ -189,21 +268,120 @@ fn cmd_check(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_check(_cli: &Cli) -> Result<()> {
+    bail!("`cax check` compiles XLA artifacts; rebuild with --features pjrt")
+}
+
 // ------------------------------------------------------------------- sim
 
+/// Default state shape for artifact-free runs, per CA.
+fn local_shape(cli: &Cli, ca: &str) -> Result<Vec<usize>> {
+    Ok(match ca {
+        "eca" => vec![
+            cli.flag_usize("--batch", 32)?,
+            cli.flag_usize("--width", 1024)?,
+        ],
+        "life" => vec![
+            cli.flag_usize("--batch", 8)?,
+            cli.flag_usize("--height", 256)?,
+            cli.flag_usize("--width", 256)?,
+        ],
+        "lenia" => vec![
+            cli.flag_usize("--batch", 4)?,
+            cli.flag_usize("--height", 128)?,
+            cli.flag_usize("--width", 128)?,
+        ],
+        other => bail!("unknown CA {other:?}"),
+    })
+}
+
 fn cmd_sim(cli: &Cli) -> Result<()> {
-    let ca = cli.args.get(1).context("sim: which CA (eca|life|lenia)?")?;
+    let ca = cli
+        .args
+        .get(1)
+        .context("sim: which CA (eca|life|lenia)?")?
+        .clone();
+    let backend_flag = cli.flag("--backend");
+    let default_path = match backend_flag {
+        Some("native") => "native",
+        Some("pjrt") => "fused",
+        Some(other) => bail!("unknown --backend {other:?} (native|pjrt)"),
+        None if cfg!(feature = "pjrt") => "fused",
+        None => "native",
+    };
+    let path = SimPath::parse(cli.flag("--path").unwrap_or(default_path))?;
+
+    if path.needs_programs() {
+        #[cfg(feature = "pjrt")]
+        return cmd_sim_xla(cli, &ca, path);
+        #[cfg(not(feature = "pjrt"))]
+        bail!(
+            "--path {} needs the pjrt feature; this build runs \
+             --path native|naive",
+            path.name()
+        );
+    }
+    cmd_sim_local(cli, &ca, path)
+}
+
+/// Native/naive simulation — no artifacts, no XLA; shapes from flags.
+fn cmd_sim_local(cli: &Cli, ca: &str, path: SimPath) -> Result<()> {
+    let sim = Simulator::native_only();
+    let mut rng = Rng::new(cli.cfg.seed);
+    let shape = local_shape(cli, ca)?;
+    let default_steps = match ca {
+        "lenia" => 64,
+        _ => 256,
+    };
+    let steps = cli.flag_usize("--steps", default_steps)?;
+    let state = Simulator::random_binary_state(&shape, &mut rng);
+    let rule = WolframRule::parse(cli.flag("--rule").unwrap_or("30"))?;
+
+    let t = Timer::start();
+    let out = match ca {
+        "eca" => sim.run_eca(path, &state, rule, steps)?,
+        "life" => sim.run_life(path, &state, steps)?,
+        "lenia" => sim.run_lenia(path, &state, steps)?,
+        _ => unreachable!(),
+    };
+    let dt = t.elapsed_secs();
+    let updates = state.numel() as f64 * steps as f64;
+    println!(
+        "{ca} [{}] {steps} steps on {:?}: {:.3}s  ({:.2e} cell updates/s)  \
+         final mean {:.4}",
+        path.name(), shape, dt, updates / dt.max(1e-12), out.mean()
+    );
+
+    if cli.has("--render") {
+        std::fs::create_dir_all(&cli.cfg.out_dir)?;
+        let img = match ca {
+            "eca" => {
+                // Space-time diagram of batch element 0 via the naive sim
+                // (rendering is not the hot path).
+                let one = cax::Tensor::stack(&[state.index_axis0(0)])?;
+                let mut esim =
+                    cax::automata::EcaSim::from_tensor(rule, &one);
+                let st = esim.spacetime(0, steps.min(512));
+                spacetime::render_spacetime_1d(&st)?
+            }
+            _ => spacetime::render_field(&out.index_axis0(0))?,
+        };
+        let path_out = cli.cfg.out_dir.join(format!("{ca}.ppm"));
+        img.upscale(4).write_ppm(&path_out)?;
+        println!("wrote {}", path_out.display());
+    }
+    Ok(())
+}
+
+/// Fused/stepwise simulation over the PJRT engine (artifact shapes).
+#[cfg(feature = "pjrt")]
+fn cmd_sim_xla(cli: &Cli, ca: &str, path: SimPath) -> Result<()> {
     let eng = engine(cli)?;
     let sim = Simulator::new(&eng);
-    let path = match cli.flag("--path").unwrap_or("fused") {
-        "fused" => SimPath::Fused,
-        "stepwise" => SimPath::Stepwise,
-        "naive" => SimPath::Naive,
-        p => bail!("unknown --path {p:?}"),
-    };
     let mut rng = Rng::new(cli.cfg.seed);
 
-    let (artifact, default_steps) = match ca.as_str() {
+    let (artifact, default_steps) = match ca {
         "eca" => ("eca_rollout", 256),
         "life" => ("life_rollout", 256),
         "lenia" => ("lenia_rollout", 64),
@@ -221,7 +399,7 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
 
     let state = sim.random_state(artifact, &mut rng)?;
     let t = Timer::start();
-    let out = match ca.as_str() {
+    let out = match ca {
         "eca" => {
             let rule = WolframRule::parse(cli.flag("--rule").unwrap_or("30"))?;
             sim.run_eca(path, &state, rule, steps)?
@@ -239,7 +417,7 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
 
     if cli.has("--render") {
         std::fs::create_dir_all(&cli.cfg.out_dir)?;
-        let img = match ca.as_str() {
+        let img = match ca {
             "eca" => {
                 let rule =
                     WolframRule::parse(cli.flag("--rule").unwrap_or("30"))?;
@@ -265,6 +443,7 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
 
 // ----------------------------------------------------------------- train
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(cli: &Cli) -> Result<()> {
     let key = cli
         .args
@@ -300,8 +479,18 @@ fn cmd_train(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_cli: &Cli) -> Result<()> {
+    bail!(
+        "`cax train` runs fused XLA train-step artifacts; rebuild with \
+         --features pjrt (the native backend covers the classic CAs: \
+         `cax sim eca|life|lenia`)"
+    )
+}
+
 // ------------------------------------------------------------------ eval
 
+#[cfg(feature = "pjrt")]
 fn cmd_eval(cli: &Cli) -> Result<()> {
     let what = cli.args.get(1).context("eval: arc|mnist|autoenc3d")?;
     let eng = engine(cli)?;
@@ -368,4 +557,12 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
         other => bail!("unknown eval target {other:?}"),
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval(_cli: &Cli) -> Result<()> {
+    bail!(
+        "`cax eval` needs trained neural-CA artifacts; rebuild with \
+         --features pjrt"
+    )
 }

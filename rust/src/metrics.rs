@@ -1,7 +1,7 @@
 //! Metrics: loss histories, throughput counters, CSV/JSON reports.
 //!
 //! Every trainer/simulator run records into a [`History`]; reports land in
-//! `out/` as CSV (for plotting) and JSON (for EXPERIMENTS.md extraction).
+//! `out/` as CSV (for plotting) and JSON (for experiment-report extraction).
 
 use std::path::Path;
 

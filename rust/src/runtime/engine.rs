@@ -13,36 +13,17 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::Value;
 use crate::runtime::manifest::{ArtifactInfo, Dtype, Manifest};
 use crate::tensor::Tensor;
 
-/// A typed input value for an artifact call.
-#[derive(Clone, Debug)]
-pub enum Value {
-    /// Dense f32 tensor (the common case).
-    F32(Tensor),
-    /// i32 scalar (train-step counters).
-    I32(i32),
-    /// u32 scalar (PRNG seeds).
-    U32(u32),
+/// XLA-literal marshalling for [`Value`] (defined in `backend`; the
+/// PJRT-specific conversion lives with the PJRT code).
+trait ToLiteral {
+    fn to_literal(&self) -> Result<xla::Literal>;
 }
 
-impl Value {
-    fn dtype(&self) -> Dtype {
-        match self {
-            Value::F32(_) => Dtype::F32,
-            Value::I32(_) => Dtype::I32,
-            Value::U32(_) => Dtype::U32,
-        }
-    }
-
-    fn shape(&self) -> Vec<usize> {
-        match self {
-            Value::F32(t) => t.shape().to_vec(),
-            Value::I32(_) | Value::U32(_) => vec![],
-        }
-    }
-
+impl ToLiteral for Value {
     fn to_literal(&self) -> Result<xla::Literal> {
         match self {
             Value::F32(t) => {
@@ -63,12 +44,6 @@ impl Value {
             Value::I32(v) => Ok(xla::Literal::scalar(*v)),
             Value::U32(v) => Ok(xla::Literal::scalar(*v)),
         }
-    }
-}
-
-impl From<Tensor> for Value {
-    fn from(t: Tensor) -> Value {
-        Value::F32(t)
     }
 }
 

@@ -1,9 +1,18 @@
-//! Runtime: the PJRT bridge. Loads `artifacts/*.hlo.txt` (lowered once by
-//! `make artifacts`) and executes them on the CPU PJRT client with typed,
-//! manifest-validated signatures. Python is never on this path.
+//! Runtime: the PJRT bridge. The [`manifest`] contract (artifact
+//! signatures, parameter blobs) is always available; the [`engine`]
+//! that compiles and executes `artifacts/*.hlo.txt` on a PJRT client is
+//! gated behind the off-by-default `pjrt` cargo feature so the default
+//! build is hermetic (no XLA runtime, no artifacts, no Python). See
+//! `rust/README.md` for the backend feature matrix.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{Engine, EngineStats, Value};
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, EngineStats};
 pub use manifest::{ArtifactInfo, BlobInfo, Dtype, Manifest, Spec};
+
+// `Value` moved to the backend layer with the pluggable-backend split;
+// re-exported here so `cax::runtime::Value` keeps working.
+pub use crate::backend::Value;

@@ -1,6 +1,6 @@
 //! Hand-rolled substrates: the offline environment provides only the `xla`
 //! crate, so the JSON/TOML/RNG/property-test/timing layers live here.
-//! See DESIGN.md §4.4.
+//! See rust/README.md.
 
 pub mod check;
 pub mod json;

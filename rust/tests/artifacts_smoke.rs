@@ -3,6 +3,9 @@
 //!
 //! This is the L3 half of the build contract — aot.py promises signatures
 //! in manifest.json; these tests hold the runtime to them.
+//!
+//! Needs the PJRT engine + artifacts: `cargo test --features pjrt`.
+#![cfg(feature = "pjrt")]
 
 use cax::runtime::{Engine, Value};
 use cax::tensor::Tensor;

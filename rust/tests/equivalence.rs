@@ -5,6 +5,11 @@
 //! three must agree bit-exactly; for Lenia (continuous, FFT vs direct
 //! convolution) the XLA paths agree bit-exactly with each other and the
 //! naive direct convolution agrees within float tolerance.
+//!
+//! Needs the PJRT engine + artifacts: `cargo test --features pjrt`.
+//! The artifact-free native-vs-naive equivalences live in
+//! `native_backend_props.rs` and run on default features.
+#![cfg(feature = "pjrt")]
 
 use cax::automata::WolframRule;
 use cax::coordinator::{Path, Simulator};
@@ -166,4 +171,28 @@ fn traj_artifacts_match_rollout_finals() {
     let k = t / 2;
     let mid = sim.run_eca(Path::Naive, &state, rule, k + 1).unwrap();
     assert!(mid.bit_eq(&traj.index_axis0(k)), "traj[{k}] != naive^{}", k + 1);
+}
+
+#[test]
+fn pjrt_backend_adapter_matches_simulator_stepwise() {
+    // The generic Backend adapter must tell the same story as the
+    // Simulator's artifact-named stepwise path.
+    use cax::backend::{Backend, CaProgram, PjrtBackend};
+    let engine = engine();
+    let backend = PjrtBackend::new(&engine);
+    let sim = Simulator::new(&engine);
+    let mut rng = Rng::new(71);
+
+    let rule = WolframRule::new(110);
+    let prog = CaProgram::Eca { rule };
+    assert!(backend.supports(&prog));
+    let state = sim.random_state("eca_step", &mut rng).unwrap();
+    let via_adapter = backend.rollout(&prog, &state, 3).unwrap();
+    let via_sim = sim.run_eca(Path::Stepwise, &state, rule, 3).unwrap();
+    assert!(via_adapter.bit_eq(&via_sim), "eca adapter != stepwise");
+
+    let life = sim.random_state("life_step", &mut rng).unwrap();
+    let a = backend.rollout(&CaProgram::Life, &life, 2).unwrap();
+    let b = sim.run_life(Path::Stepwise, &life, 2).unwrap();
+    assert!(a.bit_eq(&b), "life adapter != stepwise");
 }

@@ -2,11 +2,16 @@
 //! complete (all artifacts + parameter blobs in the manifest), and
 //! instantiable through the registry.
 
-use cax::coordinator::registry::{self, CaType};
+use cax::coordinator::registry;
+#[cfg(feature = "pjrt")]
+use cax::coordinator::registry::CaType;
 
+#[cfg(feature = "pjrt")]
 mod common;
+#[cfg(feature = "pjrt")]
 use common::engine;
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn registry_matches_manifest_completely() {
     let engine = engine();
@@ -53,6 +58,7 @@ fn dimensions_column_matches_paper() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn all_registry_artifacts_compile() {
     let engine = engine();
@@ -65,6 +71,7 @@ fn all_registry_artifacts_compile() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn neural_rows_have_train_steps_with_adam_contract() {
     // Train-step artifacts all share the (params, m, v, step, ..., seed) ->
@@ -97,6 +104,7 @@ fn neural_rows_have_train_steps_with_adam_contract() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn meta_dimensions_consistent_with_input_shapes() {
     let engine = engine();

@@ -1,6 +1,9 @@
 //! Training integration: each neural CA's fused train step actually learns
 //! (loss decreases over a short run), checkpoints round-trip, and the
 //! stepwise BPTT baseline computes the same math as the fused artifact.
+//!
+//! Needs the PJRT engine + artifacts: `cargo test --features pjrt`.
+#![cfg(feature = "pjrt")]
 
 use cax::coordinator::trainer::{TrainCfg, TrainState};
 use cax::coordinator::{experiments, stepwise};

@@ -1,0 +1,250 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build must be hermetic (no network, no registry), so the error
+//! substrate the whole crate uses lives in-tree. It reproduces the subset
+//! of `anyhow`'s API this workspace relies on:
+//!
+//! - [`Error`]: an opaque error carrying a context chain (outermost last).
+//! - [`Result`]: `Result<T, Error>` with a defaulted error type.
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` *and*
+//!   `Option`.
+//! - `anyhow!`, `bail!`, `ensure!` macros (format-string forms).
+//! - `From<E>` for every `E: std::error::Error + Send + Sync + 'static`,
+//!   so `?` converts foreign errors, preserving their `source()` chain.
+//!
+//! `Display` prints the outermost message; the alternate form (`{:#}`)
+//! prints the full chain joined with `": "`, matching anyhow's behaviour
+//! that the CLI error reporter depends on.
+
+use std::fmt::{self, Debug, Display};
+
+/// An error with a chain of context messages.
+///
+/// Internally `chain[0]` is the root cause and the last element the
+/// outermost context. Like `anyhow::Error`, this type deliberately does
+/// NOT implement `std::error::Error` — that is what makes the blanket
+/// `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context (the new outermost).
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The messages outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, msg) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.chain.last().expect("chain is never empty"))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.last().expect("chain is never empty"))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, msg) in self.chain.iter().rev().skip(1).enumerate() {
+                write!(f, "\n    {i}: {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `anyhow`-style result alias with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut sources = Vec::new();
+        let mut src = std::error::Error::source(&err);
+        while let Some(s) = src {
+            sources.push(s.to_string());
+            src = s.source();
+        }
+        // Root cause first, the error itself as the outermost message.
+        sources.reverse();
+        sources.push(err.to_string());
+        Error { chain: sources }
+    }
+}
+
+mod private {
+    use std::fmt::Display;
+
+    /// Sealed conversion into [`crate::Error`]. Implemented for every
+    /// std error *and* for `Error` itself — coherent because `Error`
+    /// does not implement `std::error::Error`.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+
+    /// Shared bound for context messages.
+    pub trait Msg: Display + Send + Sync + 'static {}
+    impl<T: Display + Send + Sync + 'static> Msg for T {}
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T> {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: private::Msg>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily-built context message.
+    fn with_context<C: private::Msg, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: private::Msg>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: private::Msg, F: FnOnce() -> C>(self, f: F)
+        -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: private::Msg>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: private::Msg, F: FnOnce() -> C>(self, f: F)
+        -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($args:tt)+) => {
+        $crate::Error::msg(::std::format!($($args)+))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($args:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($args)+))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($args:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($args)+);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_full_chain() {
+        let e = Error::msg("root").context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("missing file"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").contains("missing file"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("no value {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "no value 7");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(3).is_err());
+        assert!(format!("{}", f(11).unwrap_err()).contains("too big"));
+        let e = anyhow!("code {}", 42);
+        assert_eq!(format!("{e}"), "code 42");
+    }
+}

@@ -1,0 +1,152 @@
+//! API-compatible stub of the `xla` PJRT bindings used by `cax`'s
+//! `runtime::engine`.
+//!
+//! The offline build environment has no PJRT runtime, but the `pjrt`
+//! cargo feature must still *compile*. This crate mirrors exactly the
+//! type/function surface `engine.rs` touches; every entry point that
+//! would need a real XLA runtime returns an error. Deployments with the
+//! real `xla` crate available swap it in via a `[patch]` section or by
+//! replacing this path dependency — no `cax` source changes needed.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`'s role.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "no PJRT runtime in this build (in-tree `xla` stub); \
+         link the real `xla` crate to enable the pjrt backend"
+            .to_string(),
+    )
+}
+
+/// Element types crossing the literal boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+/// Scalar types `Literal::scalar` accepts.
+pub trait NativeType {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for u32 {}
+
+/// Host-side literal (stub: holds nothing).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client (stub). `cpu()` always fails: that is the single runtime
+/// gate — nothing downstream can be reached without a client.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_loudly() {
+        let err = PjRtClient::cpu().err().expect("stub must refuse");
+        assert!(err.to_string().contains("stub"));
+    }
+}
