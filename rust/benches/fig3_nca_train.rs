@@ -1,21 +1,129 @@
 //! E3 — Figure 3 (right): NCA training speed on self-classifying MNIST.
 //!
-//! CAX path: ONE fused XLA program per training step (rollout + BPTT +
-//! Adam in-graph). Baseline ("TF-proxy"): host-driven per-step dispatch —
-//! T forward executions, T VJP executions, host Adam — the cost structure
-//! the paper attributes to the official TensorFlow implementation.
-//! Paper: 1.5x speedup.
+//! Native arm (default features, always runs): the hand-rolled BPTT +
+//! Adam train step of `cax::backend::native::train`, multi-threaded
+//! across the batch, vs the same math forced onto one worker thread
+//! (the naive host baseline). Emits `BENCH_nca_train_native.json` with
+//! the native-vs-naive train-steps/s comparison.
+//!
+//! PJRT arm (`--features pjrt` + artifacts): ONE fused XLA program per
+//! training step (rollout + BPTT + Adam in-graph) vs host-driven
+//! per-step dispatch — the cost structure the paper attributes to the
+//! official TensorFlow implementation. Paper: 1.5x speedup.
 
-use cax::coordinator::stepwise::mnist_stepwise_train_step;
+use cax::backend::{NativeTrainBackend, ProgramBackend, Value};
 use cax::coordinator::trainer::TrainState;
 use cax::datasets::mnist::{self, MnistConfig};
-use cax::runtime::Value;
+use cax::metrics::{write_bench_report, BenchRow};
+use cax::tensor::Tensor;
 
 mod bench_util;
-use bench_util::{bench, engine, header, quick, row};
+use bench_util::{bench, header, quick, row};
+
+/// One native train step: execute + fold the updated (params, m, v)
+/// back into the state.
+fn native_step(backend: &NativeTrainBackend, st: &mut TrainState,
+               images: &Tensor, labels: &Tensor, seed: u32) {
+    let out = backend
+        .execute(
+            "mnist_train_step",
+            &[
+                Value::F32(st.params.clone()),
+                Value::F32(st.m.clone()),
+                Value::F32(st.v.clone()),
+                Value::I32(st.step),
+                Value::F32(images.clone()),
+                Value::F32(labels.clone()),
+                Value::U32(seed),
+            ],
+        )
+        .unwrap();
+    let mut it = out.into_iter();
+    st.params = it.next().unwrap();
+    st.m = it.next().unwrap();
+    st.v = it.next().unwrap();
+    st.step += 1;
+}
 
 fn main() {
-    let engine = engine();
+    let mut rows: Vec<BenchRow> = vec![];
+    let (warm, iters) = if quick() { (1, 3) } else { (2, 10) };
+
+    // ------------------------------------------------- native vs naive
+    let full = NativeTrainBackend::new();
+    let naive = NativeTrainBackend::with_threads(1);
+    let spec = full.mnist_spec().clone();
+    let digits = mnist::dataset(
+        spec.batch,
+        &MnistConfig::for_grid(spec.height, spec.width),
+        42,
+    );
+    let refs: Vec<&mnist::Digit> = digits.iter().collect();
+    let images = mnist::batch_images(&refs);
+    let labels = mnist::batch_labels(&refs);
+
+    header(&format!(
+        "Fig. 3 right — MNIST NCA train step, native BPTT (batch {}, \
+         {}x{}x{} state, hidden {}, {}..={} rollout steps)",
+        spec.batch, spec.height, spec.width, spec.channels, spec.hidden,
+        spec.rollout_min, spec.rollout_max
+    ));
+
+    let mut st = TrainState::from_blob(&full, "mnist_params").unwrap();
+    let mut seed = 0u32;
+    let threaded = bench(warm, iters, || {
+        seed = seed.wrapping_add(1);
+        native_step(&full, &mut st, &images, &labels, seed);
+    });
+
+    let mut st1 = TrainState::from_blob(&naive, "mnist_params").unwrap();
+    let mut seed1 = 0u32;
+    let single = bench(warm.min(1), iters, || {
+        seed1 = seed1.wrapping_add(1);
+        native_step(&naive, &mut st1, &images, &labels, seed1);
+    });
+
+    let threaded_label =
+        format!("nca-train/native-bptt ({} threads)", full.threads());
+    row(&threaded_label, &threaded, 1.0);
+    row("nca-train/naive-1thread", &single, 1.0);
+    println!(
+        "  native speedup: {:.2}x train-steps/s over the single-thread \
+         baseline ({} worker threads)",
+        single.median / threaded.median,
+        full.threads()
+    );
+    rows.push(BenchRow {
+        label: threaded_label,
+        stats: threaded.clone(),
+        items_per_iter: 1.0,
+    });
+    rows.push(BenchRow {
+        label: "nca-train/naive-1thread".to_string(),
+        stats: single.clone(),
+        items_per_iter: 1.0,
+    });
+
+    let out = std::path::Path::new("BENCH_nca_train_native.json");
+    write_bench_report("fig3_nca_train_native", &rows, out).unwrap();
+    println!("\nwrote {}", out.display());
+
+    // ------------------------------------- fused XLA arm (pjrt builds)
+    #[cfg(feature = "pjrt")]
+    pjrt_arm(warm, iters);
+}
+
+/// Fused-vs-stepwise XLA comparison; skipped when artifacts are absent.
+#[cfg(feature = "pjrt")]
+fn pjrt_arm(warm: usize, iters: usize) {
+    use cax::coordinator::stepwise::mnist_stepwise_train_step;
+
+    let Ok(engine) = cax::runtime::Engine::load(&bench_util::artifacts_dir())
+    else {
+        println!("\n(pjrt enabled but no artifacts found; skipping the \
+                  fused XLA arm)");
+        return;
+    };
     let info = engine.manifest().artifact("mnist_train_step").unwrap();
     let spec = &info.inputs[4];
     let (b, h, w) = (spec.shape[0], spec.shape[1], spec.shape[2]);
@@ -24,11 +132,10 @@ fn main() {
     let refs: Vec<&mnist::Digit> = digits.iter().collect();
     let images = mnist::batch_images(&refs);
     let labels = mnist::batch_labels(&refs);
-    let (warm, iters) = if quick() { (1, 3) } else { (2, 12) };
 
     header(&format!(
-        "Fig. 3 right — MNIST NCA train step (batch {b}, {h}x{w}, \
-         {rollout_steps} rollout steps + BPTT)"
+        "Fig. 3 right — MNIST NCA train step, fused XLA (batch {b}, \
+         {h}x{w}, {rollout_steps} rollout steps + BPTT)"
     ));
 
     // Fused: one artifact execution per train step.
@@ -57,7 +164,7 @@ fn main() {
         st.step += 1;
     });
 
-    // Stepwise: 2T+1 artifact executions + host reductions per train step.
+    // Stepwise: 2T+1 artifact executions + host reductions per step.
     let mut st2 = TrainState::from_blob(&engine, "mnist_params").unwrap();
     let mut seed2 = 0u32;
     let stepwise = bench(warm.min(1), iters.min(6), || {

@@ -9,16 +9,20 @@
 //!   bit-packed u64 SWAR for the discrete CAs (64 cells per word),
 //!   cache-tiled f32 for the continuous/neural paths — parallelized
 //!   across batch elements with a scoped-thread [`workers::WorkerPool`].
+//! - [`NativeTrainBackend`] (always available): hand-rolled BPTT +
+//!   Adam train-step programs for the growing-NCA and MNIST-classifier
+//!   workloads (`native::nca_grad` / `native::opt` / `native::train`).
 //! - `PjrtBackend` (`pjrt` feature): wraps `runtime::Engine`,
 //!   executing AOT-lowered HLO artifacts through PJRT.
 //!
 //! Two traits split the surface:
 //!
 //! - [`Backend`]: "execute a classic-CA program on a batch of states"
-//!   (step / rollout) plus an optional named train-step hook.
+//!   (step / rollout) plus a named train-step hook.
 //! - [`ProgramBackend`]: "execute a named, manifest-described program" —
 //!   the contract the trainer/evaluator/experiment layers dispatch
-//!   through; implemented by `Engine` when the `pjrt` feature is on.
+//!   through; implemented by `Engine` when the `pjrt` feature is on and
+//!   by [`NativeTrainBackend`] everywhere.
 //!
 //! See `rust/README.md` for the layer diagram and the backend feature
 //! matrix.
@@ -35,6 +39,7 @@ use crate::automata::WolframRule;
 use crate::runtime::manifest::{Dtype, Manifest};
 use crate::tensor::Tensor;
 
+pub use native::train::NativeTrainBackend;
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
@@ -133,14 +138,14 @@ pub trait Backend {
     fn rollout(&self, prog: &CaProgram, state: &Tensor, steps: usize)
         -> Result<Tensor>;
 
-    /// Execute a named train-step program. Only artifact-backed backends
-    /// support this; the default refuses with a clear error.
+    /// Execute a named train-step program. [`NativeBackend`] runs the
+    /// native NCA train steps (BPTT + Adam on the host); artifact-backed
+    /// backends run their fused in-graph equivalents; the default
+    /// refuses with a clear error.
     fn train_step(&self, program: &str, _inputs: &[Value])
         -> Result<Vec<Tensor>> {
         bail!(
-            "backend {:?} cannot run train-step program {program:?} \
-             (train steps need an artifact-backed backend; rebuild with \
-             --features pjrt)",
+            "backend {:?} cannot run train-step program {program:?}",
             self.name()
         )
     }

@@ -16,6 +16,7 @@
 //! Batch elements are independent; the backend parallelizes across
 //! them with the worker pool.
 
+use super::wrap_shift;
 use crate::automata::lenia::{ring_kernel, LeniaParams};
 
 /// Precomputed sparse ring kernel + growth parameters.
@@ -68,8 +69,8 @@ impl LeniaKernel {
                     for x in tx..x_end {
                         let mut u = 0.0f32;
                         for &(ky, kx, weight) in &self.taps {
-                            let sy = (y + h + r - ky) % h;
-                            let sx = (x + w + r - kx) % w;
+                            let sy = wrap_shift(y, h, r, ky);
+                            let sx = wrap_shift(x, w, r, kx);
                             u += weight * state[sy * w + sx];
                         }
                         let z = (u - mu) / sigma;

@@ -5,6 +5,10 @@
 //! - [`life`]: SWAR Game-of-Life kernel (carry-save neighbour counts).
 //! - [`lenia`]: cache-tiled sparse-tap Lenia kernel.
 //! - [`nca`]: depthwise-conv + per-cell-MLP neural-CA forward kernel.
+//! - [`nca_grad`]: reverse-mode BPTT through the NCA cell (training).
+//! - [`opt`]: Adam, gradient clipping and the lr schedule.
+//! - [`train`]: [`train::NativeTrainBackend`] — the native train-step
+//!   programs behind the [`crate::backend::ProgramBackend`] contract.
 //!
 //! [`NativeBackend`] packs/unpacks at the tensor boundary ONCE per
 //! rollout and parallelizes across batch elements with the scoped
@@ -16,12 +20,35 @@ pub mod eca;
 pub mod lenia;
 pub mod life;
 pub mod nca;
+pub mod nca_grad;
+pub mod opt;
+pub mod train;
 
 use anyhow::Result;
 
 use crate::backend::workers::WorkerPool;
-use crate::backend::{validate_state, Backend, CaProgram};
+use crate::backend::{
+    validate_state, Backend, CaProgram, ProgramBackend, Value,
+};
 use crate::tensor::Tensor;
+
+/// Wrapped (periodic-boundary) index `(i + plus - minus) mod n` without
+/// going negative, for `minus <= i + n + plus` (the Lenia kernel sweeps
+/// `minus` up to `2 * radius` with `radius <= n`). The single wrap rule
+/// shared by every f32 grid kernel (`lenia`, `nca`, `nca_grad`) — the
+/// `plus`/`minus` split keeps it in unsigned arithmetic on the hot paths.
+#[inline(always)]
+pub fn wrap_shift(i: usize, n: usize, plus: usize, minus: usize) -> usize {
+    debug_assert!(i < n && minus <= i + n + plus);
+    (i + n + plus - minus) % n
+}
+
+/// The wrapped 3-neighborhood `[i-1, i, i+1]` on an axis of length `n` —
+/// the row/column triple the 3x3 perceive stencils sweep.
+#[inline(always)]
+pub fn wrap3(i: usize, n: usize) -> [usize; 3] {
+    [wrap_shift(i, n, 0, 1), i, wrap_shift(i, n, 1, 0)]
+}
 
 /// Pure-Rust multi-threaded backend. Always available; the default
 /// execution path of the hermetic build.
@@ -134,6 +161,17 @@ impl Backend for NativeBackend {
             CaProgram::Nca(model) => self.nca_rollout(model, state, steps),
         }
     }
+
+    /// Hand-rolled BPTT + Adam on the host: the cell geometry is inferred
+    /// from the call's own tensors, hyperparameters are the
+    /// [`train::NcaTrainSpec`] defaults. Construct a
+    /// [`train::NativeTrainBackend`] directly to control them.
+    fn train_step(&self, program: &str, inputs: &[Value])
+        -> Result<Vec<Tensor>> {
+        let tb = train::NativeTrainBackend::for_call(
+            self.threads(), program, inputs)?;
+        tb.execute(program, inputs)
+    }
 }
 
 #[cfg(test)]
@@ -172,10 +210,32 @@ mod tests {
     }
 
     #[test]
-    fn train_step_refused_with_pointer_to_pjrt() {
+    fn train_step_rejects_unknown_programs() {
         let backend = NativeBackend::new();
-        let err = backend.train_step("growing_train_step", &[]).unwrap_err();
-        assert!(format!("{err}").contains("pjrt"));
+        let err = backend.train_step("frobnicate_train_step", &[])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("growing_train_step"),
+                "error should list the native train programs: {err:#}");
+    }
+
+    #[test]
+    fn wrap_helpers_cover_edges() {
+        // Decrement wraps 0 -> n-1, increment wraps n-1 -> 0.
+        assert_eq!(wrap3(0, 7), [6, 0, 1]);
+        assert_eq!(wrap3(6, 7), [5, 6, 0]);
+        assert_eq!(wrap3(3, 7), [2, 3, 4]);
+        // Single-cell axis: every neighbor is the cell itself.
+        assert_eq!(wrap3(0, 1), [0, 0, 0]);
+        // The Lenia form (y + h + r - ky) % h, incl. ky up to 2r > h.
+        assert_eq!(wrap_shift(0, 8, 5, 0), 5);
+        assert_eq!(wrap_shift(0, 8, 5, 10), 3); // 0 + 8 + 5 - 10 = 3
+        assert_eq!(wrap_shift(7, 8, 0, 1), 6);
+        assert_eq!(wrap_shift(7, 8, 1, 0), 0);
+        // Identity: no shift.
+        for i in 0..5 {
+            assert_eq!(wrap_shift(i, 5, 0, 0), i);
+            assert_eq!(wrap_shift(i, 5, 2, 2), i);
+        }
     }
 
     #[test]

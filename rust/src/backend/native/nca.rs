@@ -9,10 +9,12 @@
 //! indices, so the three input rows a sweep touches stay in cache —
 //! the depthwise-conv/update analogue of the tiled Lenia path.
 
+use super::wrap3;
 use crate::util::rng::Rng;
 
 /// Sobel-x, normalized by 8 as in the reference NCA perceive step.
-const SOBEL_X: [[f32; 3]; 3] = [
+/// Shared with the backward pass in [`super::nca_grad`].
+pub(crate) const SOBEL_X: [[f32; 3]; 3] = [
     [-0.125, 0.0, 0.125],
     [-0.25, 0.0, 0.25],
     [-0.125, 0.0, 0.125],
@@ -54,39 +56,64 @@ impl NcaModel {
         }
     }
 
+    /// Number of trainable parameters (`w1`, `b1`, `w2`) of a cell with
+    /// this geometry — the flat checkpoint/optimizer vector length.
+    pub fn param_count(channels: usize, hidden: usize) -> usize {
+        3 * channels * hidden + hidden + hidden * channels
+    }
+
+    /// Flatten the trainable parameters as `[w1, b1, w2]` — the layout of
+    /// the native train-step parameter vector and of
+    /// [`crate::coordinator::trainer::TrainState`] checkpoints.
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut flat =
+            Vec::with_capacity(Self::param_count(self.channels, self.hidden));
+        flat.extend_from_slice(&self.w1);
+        flat.extend_from_slice(&self.b1);
+        flat.extend_from_slice(&self.w2);
+        flat
+    }
+
+    /// Rebuild a model from the `[w1, b1, w2]` flat layout written by
+    /// [`NcaModel::flatten`].
+    pub fn from_flat(channels: usize, hidden: usize, dt: f32, flat: &[f32])
+                     -> NcaModel {
+        assert_eq!(flat.len(), Self::param_count(channels, hidden),
+                   "from_flat: {} params for a {channels}-channel, \
+                    {hidden}-hidden cell", flat.len());
+        let n1 = 3 * channels * hidden;
+        NcaModel {
+            channels,
+            hidden,
+            w1: flat[..n1].to_vec(),
+            b1: flat[n1..n1 + hidden].to_vec(),
+            w2: flat[n1 + hidden..].to_vec(),
+            dt,
+        }
+    }
+
     /// One forward update of a `[H, W, C]` channels-last board.
     pub fn step(&self, state: &[f32], next: &mut [f32], h: usize, w: usize) {
+        self.step_frozen(state, next, h, w, 0);
+    }
+
+    /// One forward update with the first `frozen` channels pinned: their
+    /// residual delta is zeroed, so they pass through unchanged (the
+    /// self-classifying-MNIST input channel). They still feed perception.
+    pub fn step_frozen(&self, state: &[f32], next: &mut [f32], h: usize,
+                       w: usize, frozen: usize) {
         let c = self.channels;
+        debug_assert!(frozen <= c);
         debug_assert_eq!(state.len(), h * w * c);
         debug_assert_eq!(next.len(), state.len());
         let mut perception = vec![0.0f32; 3 * c];
         let mut hidden = vec![0.0f32; self.hidden];
 
         for y in 0..h {
-            let ym = (y + h - 1) % h;
-            let yp = (y + 1) % h;
-            let rows = [ym, y, yp];
+            let rows = wrap3(y, h);
             for x in 0..w {
-                let xm = (x + w - 1) % w;
-                let xp = (x + 1) % w;
-                let cols = [xm, x, xp];
-
-                // Depthwise perceive: identity, Sobel-x, Sobel-y.
-                for ch in 0..c {
-                    let mut gx = 0.0f32;
-                    let mut gy = 0.0f32;
-                    for (ky, &sy) in rows.iter().enumerate() {
-                        for (kx, &sx) in cols.iter().enumerate() {
-                            let v = state[(sy * w + sx) * c + ch];
-                            gx += SOBEL_X[ky][kx] * v;
-                            // Sobel-y is the transpose of Sobel-x.
-                            gy += SOBEL_X[kx][ky] * v;
-                        }
-                    }
-                    perception[ch * 3] = state[(y * w + x) * c + ch];
-                    perception[ch * 3 + 1] = gx;
-                    perception[ch * 3 + 2] = gy;
-                }
+                let cols = wrap3(x, w);
+                perceive_cell(state, w, c, &rows, &cols, &mut perception);
 
                 // Per-cell MLP: relu(p . W1 + b1) . W2, residual add.
                 for (j, slot) in hidden.iter_mut().enumerate() {
@@ -97,11 +124,15 @@ impl NcaModel {
                     *slot = acc.max(0.0);
                 }
                 for ch in 0..c {
+                    let idx = (y * w + x) * c + ch;
+                    if ch < frozen {
+                        next[idx] = state[idx];
+                        continue;
+                    }
                     let mut delta = 0.0f32;
                     for (j, &hv) in hidden.iter().enumerate() {
                         delta += hv * self.w2[j * c + ch];
                     }
-                    let idx = (y * w + x) * c + ch;
                     next[idx] = state[idx] + self.dt * delta;
                 }
             }
@@ -118,12 +149,73 @@ impl NcaModel {
     }
 }
 
+/// Depthwise perceive at one cell: identity, Sobel-x, Sobel-y per
+/// channel, written into `out` as `[id, gx, gy]` triples. The single
+/// copy of the perceive arithmetic — the forward kernel above and the
+/// backward recompute in [`super::nca_grad`] both call it, so their
+/// accumulation order can never drift apart.
+#[inline]
+pub(crate) fn perceive_cell(state: &[f32], w: usize, c: usize,
+                            rows: &[usize; 3], cols: &[usize; 3],
+                            out: &mut [f32]) {
+    let (y, x) = (rows[1], cols[1]);
+    for ch in 0..c {
+        let mut gx = 0.0f32;
+        let mut gy = 0.0f32;
+        for (ky, &sy) in rows.iter().enumerate() {
+            for (kx, &sx) in cols.iter().enumerate() {
+                let v = state[(sy * w + sx) * c + ch];
+                gx += SOBEL_X[ky][kx] * v;
+                // Sobel-y is the transpose of Sobel-x.
+                gy += SOBEL_X[kx][ky] * v;
+            }
+        }
+        out[ch * 3] = state[(y * w + x) * c + ch];
+        out[ch * 3 + 1] = gx;
+        out[ch * 3 + 2] = gy;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn model() -> NcaModel {
         NcaModel::random(4, 8, &mut Rng::new(9))
+    }
+
+    #[test]
+    fn frozen_channels_pass_through_and_still_feed_perception() {
+        let m = model();
+        let (h, w) = (4, 4);
+        let mut rng = Rng::new(3);
+        let board = rng.vec_f32(h * w * m.channels);
+        let mut next = vec![0.0f32; board.len()];
+        m.step_frozen(&board, &mut next, h, w, 2);
+        for cell in 0..h * w {
+            for ch in 0..2 {
+                let idx = cell * m.channels + ch;
+                assert_eq!(next[idx], board[idx], "frozen ch {ch} moved");
+            }
+        }
+        assert_ne!(board, next, "free channels should still update");
+
+        // Freezing everything makes the update the identity.
+        let mut all = vec![0.0f32; board.len()];
+        m.step_frozen(&board, &mut all, h, w, m.channels);
+        assert_eq!(all, board);
+    }
+
+    #[test]
+    fn flat_roundtrip_is_exact() {
+        let m = model();
+        let flat = m.flatten();
+        assert_eq!(flat.len(), NcaModel::param_count(m.channels, m.hidden));
+        let back = NcaModel::from_flat(m.channels, m.hidden, m.dt, &flat);
+        assert_eq!(back.w1, m.w1);
+        assert_eq!(back.b1, m.b1);
+        assert_eq!(back.w2, m.w2);
+        assert_eq!(back.dt, m.dt);
     }
 
     #[test]

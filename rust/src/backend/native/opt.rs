@@ -1,0 +1,151 @@
+//! Host-side optimizer for the native train step: Adam, global-norm
+//! gradient clipping and the staircase lr schedule — the pieces the
+//! `pjrt` train-step artifacts run in-graph (DESIGN.md §4.2), rebuilt
+//! here so the default feature set can train.
+//!
+//! Everything is sequential and order-fixed, so a train step is
+//! bit-identical for any worker-thread count.
+
+/// Staircase-exponential learning rate: `base * decay^(step / every)`,
+/// the reference growing-NCA schedule (2e-3, x0.1 at step 2000).
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub decay: f32,
+    pub decay_every: usize,
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        LrSchedule { base: 2e-3, decay: 0.1, decay_every: 2000 }
+    }
+}
+
+impl LrSchedule {
+    /// Constant learning rate (no decay).
+    pub fn constant(base: f32) -> LrSchedule {
+        LrSchedule { base, decay: 1.0, decay_every: 1 }
+    }
+
+    /// Learning rate at a (0-based) optimizer step.
+    pub fn lr(&self, step: i32) -> f32 {
+        let k = step.max(0) as usize / self.decay_every.max(1);
+        self.base * self.decay.powi(k as i32)
+    }
+}
+
+/// Scale `grad` so its global L2 norm is at most `max_norm`; returns the
+/// pre-clip norm. The norm is accumulated in f64 in index order.
+pub fn clip_global_norm(grad: &mut [f32], max_norm: f32) -> f32 {
+    let norm = grad
+        .iter()
+        .map(|&g| g as f64 * g as f64)
+        .sum::<f64>()
+        .sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grad.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+#[derive(Clone, Copy, Debug)]
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for Adam {
+    fn default() -> Self {
+        Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+impl Adam {
+    /// One in-place update. `step` counts *completed* updates (0 on the
+    /// first call, as [`crate::coordinator::trainer::TrainState`] hands
+    /// it to the train-step program), so bias correction uses `step + 1`.
+    pub fn update(&self, params: &mut [f32], m: &mut [f32], v: &mut [f32],
+                  grad: &[f32], step: i32, lr: f32) {
+        assert_eq!(params.len(), grad.len(), "adam: param/grad length");
+        assert_eq!(params.len(), m.len(), "adam: param/m length");
+        assert_eq!(params.len(), v.len(), "adam: param/v length");
+        let t = step.max(0) + 1;
+        let bc1 = 1.0 - self.beta1.powi(t);
+        let bc2 = 1.0 - self.beta2.powi(t);
+        for i in 0..params.len() {
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * grad[i];
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let m_hat = m[i] / bc1;
+            let v_hat = v[i] / bc2;
+            params[i] -= lr * m_hat / (v_hat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_staircases() {
+        let s = LrSchedule { base: 1.0, decay: 0.1, decay_every: 100 };
+        assert_eq!(s.lr(0), 1.0);
+        assert_eq!(s.lr(99), 1.0);
+        assert!((s.lr(100) - 0.1).abs() < 1e-9);
+        assert!((s.lr(250) - 0.01).abs() < 1e-9);
+        let c = LrSchedule::constant(3e-3);
+        assert_eq!(c.lr(0), c.lr(10_000));
+    }
+
+    #[test]
+    fn clip_caps_large_norms_and_keeps_small_ones() {
+        let mut g = vec![3.0f32, 4.0]; // norm 5
+        let pre = clip_global_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        let post = (g[0] * g[0] + g[1] * g[1]).sqrt();
+        assert!((post - 1.0).abs() < 1e-6);
+        assert!((g[0] - 0.6).abs() < 1e-6);
+
+        let mut small = vec![0.3f32, 0.4]; // norm 0.5 <= 1
+        clip_global_norm(&mut small, 1.0);
+        assert_eq!(small, vec![0.3, 0.4]);
+
+        let mut zero = vec![0.0f32; 4];
+        assert_eq!(clip_global_norm(&mut zero, 1.0), 0.0);
+    }
+
+    #[test]
+    fn adam_minimizes_a_quadratic() {
+        // f(p) = sum (p_i - target_i)^2; grad = 2 (p - target).
+        let target = [1.0f32, -2.0, 0.5];
+        let mut p = vec![0.0f32; 3];
+        let mut m = vec![0.0f32; 3];
+        let mut v = vec![0.0f32; 3];
+        let adam = Adam::default();
+        // Decaying schedule so the iterates settle instead of cycling.
+        let sched = LrSchedule { base: 0.05, decay: 0.5, decay_every: 100 };
+        for step in 0..800 {
+            let grad: Vec<f32> =
+                p.iter().zip(&target).map(|(&a, &t)| 2.0 * (a - t)).collect();
+            adam.update(&mut p, &mut m, &mut v, &grad, step, sched.lr(step));
+        }
+        for (a, t) in p.iter().zip(&target) {
+            assert!((a - t).abs() < 0.05, "param {a} vs target {t}");
+        }
+    }
+
+    #[test]
+    fn adam_first_step_moves_by_about_lr() {
+        // With zero m/v, the bias-corrected first step is ~lr * sign(g).
+        let mut p = vec![0.0f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        Adam::default().update(&mut p, &mut m, &mut v, &[0.3], 0, 1e-2);
+        assert!((p[0] + 1e-2).abs() < 1e-4, "first step {}", p[0]);
+    }
+}

@@ -1,0 +1,808 @@
+//! Native NCA training: the train-step programs of the default build.
+//!
+//! [`NativeTrainBackend`] implements [`ProgramBackend`] — the same
+//! contract the `pjrt` engine offers — for a small family of *native*
+//! programs, so `coordinator::trainer`, `coordinator::experiments` and
+//! the sample pool drive growing-NCA and self-classifying-MNIST
+//! training on the default feature set with zero code changes above the
+//! trait:
+//!
+//! - `growing_seed`: the single-seed-cell initial state `[H, W, C]`.
+//! - `growing_train_step`: `(params, m, v, step, states[B,H,W,C],
+//!   target[H,W,4], seed) -> (params', m', v', loss, states')` — the
+//!   App. B recipe: worst-of-batch reseed, unrolled rollout, BPTT
+//!   ([`super::nca_grad`]), global-norm clip, Adam with the staircase
+//!   lr schedule ([`super::opt`]), evolved states out for pool
+//!   write-back.
+//! - `mnist_train_step`: `(params, m, v, step, images[B,H,W],
+//!   labels[B,10], seed) -> (params', m', v', loss)` — digit pinned in
+//!   channel 0 (frozen), per-cell logits in channels 1..=10, MSE to the
+//!   one-hot label over ink cells.
+//!
+//! Batch elements are independent, so the BPTT runs one scoped worker
+//! per sample; the gradient/loss reduction and the optimizer update are
+//! sequential in fixed order, which makes a train step bit-identical
+//! for any worker-thread count (asserted in
+//! `tests/native_train_props.rs`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use super::nca::NcaModel;
+use super::nca_grad::{self, NcaGrads};
+use super::opt::{clip_global_norm, Adam, LrSchedule};
+use crate::backend::workers::WorkerPool;
+use crate::backend::{ProgramBackend, Value};
+use crate::runtime::manifest::{
+    ArtifactInfo, BlobInfo, Dtype, Manifest, Spec,
+};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Hyperparameters of one natively-trained NCA scenario.
+#[derive(Clone, Debug)]
+pub struct NcaTrainSpec {
+    pub height: usize,
+    pub width: usize,
+    /// State channels (RGBA + hidden for growing; input + 10 logits +
+    /// hidden for MNIST).
+    pub channels: usize,
+    /// Hidden width of the per-cell MLP.
+    pub hidden: usize,
+    pub batch: usize,
+    /// Rollout length is drawn uniformly from `[rollout_min,
+    /// rollout_max]` per train step (the App. B unroll jitter),
+    /// deterministically from the step's seed input.
+    pub rollout_min: usize,
+    pub rollout_max: usize,
+    pub lr: LrSchedule,
+    /// Global L2 gradient clip.
+    pub clip_norm: f32,
+    /// Seed of the initial parameter draw (`load_params`).
+    pub param_seed: u64,
+    /// Residual update scale of the cell.
+    pub dt: f32,
+}
+
+impl NcaTrainSpec {
+    /// Growing-NCA defaults, sized for host execution.
+    pub fn growing() -> NcaTrainSpec {
+        NcaTrainSpec {
+            height: 16,
+            width: 16,
+            channels: 12,
+            hidden: 32,
+            batch: 8,
+            rollout_min: 16,
+            rollout_max: 28,
+            lr: LrSchedule::default(),
+            clip_norm: 1.0,
+            param_seed: 0x6402,
+            dt: 0.5,
+        }
+    }
+
+    /// Self-classifying-MNIST defaults (channel 0 input, 1..=10 logits).
+    pub fn mnist() -> NcaTrainSpec {
+        NcaTrainSpec {
+            height: 16,
+            width: 16,
+            channels: 16,
+            hidden: 48,
+            batch: 8,
+            rollout_min: 12,
+            rollout_max: 20,
+            lr: LrSchedule::default(),
+            clip_norm: 1.0,
+            param_seed: 0x3157,
+            dt: 0.5,
+        }
+    }
+
+    /// Flat parameter-vector length of this cell geometry.
+    pub fn param_count(&self) -> usize {
+        NcaModel::param_count(self.channels, self.hidden)
+    }
+
+    fn validate(&self, what: &str, min_channels: usize) {
+        assert!(self.height > 0 && self.width > 0, "{what}: empty grid");
+        assert!(self.channels >= min_channels,
+                "{what}: needs >= {min_channels} channels, has {}",
+                self.channels);
+        assert!(self.hidden > 0 && self.batch > 0, "{what}: empty cell");
+        assert!(self.rollout_min >= 1 && self.rollout_min <= self.rollout_max,
+                "{what}: bad rollout range [{}, {}]",
+                self.rollout_min, self.rollout_max);
+    }
+}
+
+/// Channels below this index are pinned in the MNIST cell (the digit
+/// input); logits live in `1..=10`.
+const MNIST_FROZEN: usize = 1;
+/// Ink threshold: cells whose input intensity exceeds this carry the
+/// classification loss.
+const MNIST_INK: f32 = 0.1;
+
+/// Pure-Rust training backend. Always available; see the module docs.
+#[derive(Clone, Debug)]
+pub struct NativeTrainBackend {
+    pool: WorkerPool,
+    growing: NcaTrainSpec,
+    mnist: NcaTrainSpec,
+    manifest: Manifest,
+}
+
+impl Default for NativeTrainBackend {
+    fn default() -> Self {
+        NativeTrainBackend::new()
+    }
+}
+
+impl NativeTrainBackend {
+    /// Default specs, pool sized to the machine.
+    pub fn new() -> NativeTrainBackend {
+        NativeTrainBackend::with_specs(
+            NcaTrainSpec::growing(),
+            NcaTrainSpec::mnist(),
+            WorkerPool::new().threads(),
+        )
+    }
+
+    /// Default specs with an explicit worker count (1 = sequential).
+    pub fn with_threads(threads: usize) -> NativeTrainBackend {
+        NativeTrainBackend::with_specs(
+            NcaTrainSpec::growing(),
+            NcaTrainSpec::mnist(),
+            threads,
+        )
+    }
+
+    /// Custom scenario hyperparameters (tests, benches, experiments).
+    pub fn with_specs(growing: NcaTrainSpec, mnist: NcaTrainSpec,
+                      threads: usize) -> NativeTrainBackend {
+        growing.validate("growing spec", 4);
+        mnist.validate("mnist spec", 11);
+        let manifest = build_manifest(&growing, &mnist);
+        NativeTrainBackend {
+            pool: WorkerPool::with_threads(threads),
+            growing,
+            mnist,
+            manifest,
+        }
+    }
+
+    /// Backend for one bare [`crate::backend::Backend::train_step`]
+    /// call: grid/batch geometry is inferred from the call's tensors,
+    /// the MLP width from the parameter count, everything else from the
+    /// scenario defaults.
+    pub fn for_call(threads: usize, program: &str, inputs: &[Value])
+                    -> Result<NativeTrainBackend> {
+        let mut growing = NcaTrainSpec::growing();
+        let mut mnist = NcaTrainSpec::mnist();
+        match program {
+            "growing_train_step" => {
+                let params = f32_arg(inputs, 0, "params")?;
+                let states = f32_arg(inputs, 4, "states")?;
+                ensure!(states.shape().len() == 4,
+                        "growing_train_step: states must be [B, H, W, C], \
+                         got {:?}", states.shape());
+                let s = states.shape();
+                ensure!(s.iter().all(|&d| d > 0) && s[3] >= 4,
+                        "growing_train_step: states shape {s:?} needs \
+                         non-empty dims and >= 4 (RGBA) channels");
+                growing.batch = s[0];
+                growing.height = s[1];
+                growing.width = s[2];
+                growing.channels = s[3];
+                growing.hidden =
+                    infer_hidden(params.numel(), growing.channels)?;
+            }
+            "mnist_train_step" => {
+                let params = f32_arg(inputs, 0, "params")?;
+                let images = f32_arg(inputs, 4, "images")?;
+                ensure!(images.shape().len() == 3,
+                        "mnist_train_step: images must be [B, H, W], \
+                         got {:?}", images.shape());
+                let s = images.shape();
+                ensure!(s.iter().all(|&d| d > 0),
+                        "mnist_train_step: empty dim in images shape {s:?}");
+                mnist.batch = s[0];
+                mnist.height = s[1];
+                mnist.width = s[2];
+                mnist.hidden = infer_hidden(params.numel(), mnist.channels)?;
+            }
+            "growing_seed" => {}
+            other => bail!(
+                "the native backend trains these programs: growing_seed, \
+                 growing_train_step, mnist_train_step — not {other:?}"
+            ),
+        }
+        Ok(NativeTrainBackend::with_specs(growing, mnist, threads))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    pub fn growing_spec(&self) -> &NcaTrainSpec {
+        &self.growing
+    }
+
+    pub fn mnist_spec(&self) -> &NcaTrainSpec {
+        &self.mnist
+    }
+
+    /// The single-seed-cell growing start state: alpha + hidden channels
+    /// lit at the center cell, everything else zero.
+    fn growing_seed_state(&self) -> Tensor {
+        let spec = &self.growing;
+        let mut t =
+            Tensor::zeros(&[spec.height, spec.width, spec.channels]);
+        let (cy, cx) = (spec.height / 2, spec.width / 2);
+        for ch in 3..spec.channels {
+            t.set(&[cy, cx, ch], 1.0);
+        }
+        t
+    }
+
+    fn growing_train_step(&self, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        let spec = &self.growing;
+        ensure!(inputs.len() == 7,
+                "growing_train_step wants 7 inputs (params, m, v, step, \
+                 states, target, seed), got {}", inputs.len());
+        let params = f32_arg(inputs, 0, "params")?;
+        let m = f32_arg(inputs, 1, "m")?;
+        let v = f32_arg(inputs, 2, "v")?;
+        let step = i32_arg(inputs, 3, "step")?;
+        let states = f32_arg(inputs, 4, "states")?;
+        let target = f32_arg(inputs, 5, "target")?;
+        let seed = u32_arg(inputs, 6, "seed")?;
+
+        let (b, h, w, c) =
+            (spec.batch, spec.height, spec.width, spec.channels);
+        check_opt_state(params, m, v, spec.param_count())?;
+        ensure!(states.shape() == &[b, h, w, c],
+                "growing_train_step: states shape {:?}, spec wants \
+                 [{b}, {h}, {w}, {c}]", states.shape());
+        ensure!(target.shape() == &[h, w, 4],
+                "growing_train_step: target shape {:?}, wants [{h}, {w}, 4]",
+                target.shape());
+
+        let model = NcaModel::from_flat(c, spec.hidden, spec.dt,
+                                        params.data());
+        let steps = rollout_steps(spec, step, seed);
+        let cell = h * w * c;
+
+        // Worst-of-batch reseed: the sample farthest from the target
+        // restarts from the seed state (keeps the pool anchored).
+        let mut boards: Vec<Vec<f32>> = (0..b)
+            .map(|i| states.data()[i * cell..(i + 1) * cell].to_vec())
+            .collect();
+        if b > 1 {
+            let losses: Vec<f64> = boards
+                .iter()
+                .map(|board| rgba_mse(board, target.data(), h * w, c))
+                .collect();
+            let worst = losses
+                .iter()
+                .enumerate()
+                .max_by(|(_, x), (_, y)| x.total_cmp(y))
+                .map(|(i, _)| i)
+                .unwrap();
+            boards[worst]
+                .copy_from_slice(self.growing_seed_state().data());
+        }
+
+        // Per-sample BPTT in parallel; reduction stays sequential.
+        let mut slots: Vec<Slot> = boards
+            .into_iter()
+            .map(|board| Slot {
+                board,
+                grads: NcaGrads::zeros(&model),
+                loss: 0.0,
+            })
+            .collect();
+        let tgt = target.data();
+        let denom = (h * w * 4) as f32 * b as f32;
+        self.pool.for_each_chunk(&mut slots, 1, |_, chunk| {
+            let slot = &mut chunk[0];
+            let tape =
+                nca_grad::rollout_tape(&model, &slot.board, h, w, steps, 0);
+            let fin = tape.last().unwrap();
+            let mut d_final = vec![0.0f32; cell];
+            let mut sum = 0.0f64;
+            for px in 0..h * w {
+                for ch in 0..4 {
+                    let d = fin[px * c + ch] - tgt[px * 4 + ch];
+                    sum += d as f64 * d as f64;
+                    d_final[px * c + ch] = 2.0 * d / denom;
+                }
+            }
+            slot.loss = sum / (h * w * 4) as f64;
+            let (grads, _) = nca_grad::backward(&model, &tape, h, w, 0,
+                                                &d_final);
+            slot.grads = grads;
+            slot.board.copy_from_slice(fin);
+        });
+
+        let (mut result, loss) =
+            self.finish_step(spec, params, m, v, step, &slots);
+        result.push(Tensor::scalar(loss));
+        let mut evolved = Vec::with_capacity(b * cell);
+        for slot in &slots {
+            evolved.extend_from_slice(&slot.board);
+        }
+        result.push(Tensor::new(vec![b, h, w, c], evolved)?);
+        Ok(result)
+    }
+
+    fn mnist_train_step(&self, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        let spec = &self.mnist;
+        ensure!(inputs.len() == 7,
+                "mnist_train_step wants 7 inputs (params, m, v, step, \
+                 images, labels, seed), got {}", inputs.len());
+        let params = f32_arg(inputs, 0, "params")?;
+        let m = f32_arg(inputs, 1, "m")?;
+        let v = f32_arg(inputs, 2, "v")?;
+        let step = i32_arg(inputs, 3, "step")?;
+        let images = f32_arg(inputs, 4, "images")?;
+        let labels = f32_arg(inputs, 5, "labels")?;
+        let seed = u32_arg(inputs, 6, "seed")?;
+
+        let (b, h, w, c) =
+            (spec.batch, spec.height, spec.width, spec.channels);
+        check_opt_state(params, m, v, spec.param_count())?;
+        ensure!(images.shape() == &[b, h, w],
+                "mnist_train_step: images shape {:?}, spec wants \
+                 [{b}, {h}, {w}]", images.shape());
+        ensure!(labels.shape() == &[b, 10],
+                "mnist_train_step: labels shape {:?}, wants [{b}, 10]",
+                labels.shape());
+
+        let model = NcaModel::from_flat(c, spec.hidden, spec.dt,
+                                        params.data());
+        let steps = rollout_steps(spec, step, seed);
+        let cell = h * w * c;
+
+        // State: digit pinned in channel 0, everything else zero.
+        let mut slots: Vec<Slot> = (0..b)
+            .map(|i| {
+                let img = &images.data()[i * h * w..(i + 1) * h * w];
+                let mut board = vec![0.0f32; cell];
+                for (px, &ink) in img.iter().enumerate() {
+                    board[px * c] = ink;
+                }
+                Slot { board, grads: NcaGrads::zeros(&model), loss: 0.0 }
+            })
+            .collect();
+        let label_data = labels.data();
+        self.pool.for_each_chunk(&mut slots, 1, |i, chunk| {
+            let slot = &mut chunk[0];
+            let tape = nca_grad::rollout_tape(&model, &slot.board, h, w,
+                                              steps, MNIST_FROZEN);
+            let fin = tape.last().unwrap();
+            let ink: Vec<usize> = (0..h * w)
+                .filter(|&px| fin[px * c] > MNIST_INK)
+                .collect();
+            if ink.is_empty() {
+                slot.loss = 0.0;
+                slot.board.copy_from_slice(fin);
+                return;
+            }
+            let denom = (ink.len() * 10) as f32 * b as f32;
+            let mut d_final = vec![0.0f32; cell];
+            let mut sum = 0.0f64;
+            for &px in &ink {
+                for cls in 0..10 {
+                    let d = fin[px * c + 1 + cls]
+                        - label_data[i * 10 + cls];
+                    sum += d as f64 * d as f64;
+                    d_final[px * c + 1 + cls] = 2.0 * d / denom;
+                }
+            }
+            slot.loss = sum / (ink.len() * 10) as f64;
+            let (grads, _) = nca_grad::backward(&model, &tape, h, w,
+                                                MNIST_FROZEN, &d_final);
+            slot.grads = grads;
+            slot.board.copy_from_slice(fin);
+        });
+
+        let (mut result, loss) =
+            self.finish_step(spec, params, m, v, step, &slots);
+        result.push(Tensor::scalar(loss));
+        Ok(result)
+    }
+
+    /// Shared tail of both train steps: fixed-order gradient reduction,
+    /// clip, Adam. Returns `[params', m', v']` and the mean loss.
+    fn finish_step(&self, spec: &NcaTrainSpec, params: &Tensor, m: &Tensor,
+                   v: &Tensor, step: i32, slots: &[Slot])
+                   -> (Vec<Tensor>, f32) {
+        let mut grad = NcaGrads {
+            w1: vec![0.0; 3 * spec.channels * spec.hidden],
+            b1: vec![0.0; spec.hidden],
+            w2: vec![0.0; spec.hidden * spec.channels],
+        };
+        let mut loss = 0.0f64;
+        for slot in slots {
+            grad.add(&slot.grads);
+            loss += slot.loss;
+        }
+        loss /= slots.len() as f64;
+
+        let mut gflat = grad.flatten();
+        clip_global_norm(&mut gflat, spec.clip_norm);
+        let mut new_params = params.data().to_vec();
+        let mut new_m = m.data().to_vec();
+        let mut new_v = v.data().to_vec();
+        Adam::default().update(&mut new_params, &mut new_m, &mut new_v,
+                               &gflat, step, spec.lr.lr(step));
+        let p = new_params.len();
+        (
+            vec![
+                Tensor::new(vec![p], new_params).unwrap(),
+                Tensor::new(vec![p], new_m).unwrap(),
+                Tensor::new(vec![p], new_v).unwrap(),
+            ],
+            loss as f32,
+        )
+    }
+}
+
+impl ProgramBackend for NativeTrainBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        match name {
+            "growing_seed" => Ok(vec![self.growing_seed_state()]),
+            "growing_train_step" => self.growing_train_step(inputs),
+            "mnist_train_step" => self.mnist_train_step(inputs),
+            other => bail!(
+                "native train backend has no program {other:?} (programs: \
+                 growing_seed, growing_train_step, mnist_train_step)"
+            ),
+        }
+    }
+
+    /// Initial parameters are drawn in memory (no blob files): the same
+    /// `NcaModel::random` init as the inference substrate, from the
+    /// spec's `param_seed`.
+    fn load_params(&self, blob: &str) -> Result<Tensor> {
+        let spec = match blob {
+            "growing_params" => &self.growing,
+            "mnist_params" => &self.mnist,
+            other => bail!(
+                "native train backend has no parameter blob {other:?} \
+                 (blobs: growing_params, mnist_params)"
+            ),
+        };
+        let model = NcaModel::random(spec.channels, spec.hidden,
+                                     &mut Rng::new(spec.param_seed));
+        let flat = model.flatten();
+        let n = flat.len();
+        Tensor::new(vec![n], flat)
+    }
+}
+
+/// Per-sample workspace of the parallel section.
+struct Slot {
+    board: Vec<f32>,
+    grads: NcaGrads,
+    loss: f64,
+}
+
+/// Mean squared RGBA error of one `[H*W, C]` board vs a `[H*W, 4]`
+/// target (both as flat slices).
+fn rgba_mse(board: &[f32], target: &[f32], pixels: usize, c: usize) -> f64 {
+    let mut sum = 0.0f64;
+    for px in 0..pixels {
+        for ch in 0..4 {
+            let d = board[px * c + ch] - target[px * 4 + ch];
+            sum += d as f64 * d as f64;
+        }
+    }
+    sum / (pixels * 4) as f64
+}
+
+/// Rollout length for one train step: uniform in `[rollout_min,
+/// rollout_max]`, deterministic in (step, seed).
+fn rollout_steps(spec: &NcaTrainSpec, step: i32, seed: u32) -> usize {
+    if spec.rollout_max <= spec.rollout_min {
+        return spec.rollout_min;
+    }
+    let mut rng = Rng::new(((step as i64 as u64) << 32) ^ seed as u64)
+        .fold_in(0x9CA);
+    rng.range(spec.rollout_min, spec.rollout_max + 1)
+}
+
+/// Solve `P = hidden * (4 * channels + 1)` for the MLP width.
+fn infer_hidden(param_count: usize, channels: usize) -> Result<usize> {
+    let per = 4 * channels + 1;
+    ensure!(param_count > 0 && param_count % per == 0,
+            "parameter vector of {param_count} does not factor as a \
+             {channels}-channel NCA cell (hidden * {per})");
+    Ok(param_count / per)
+}
+
+fn check_opt_state(params: &Tensor, m: &Tensor, v: &Tensor, p: usize)
+                   -> Result<()> {
+    ensure!(params.numel() == p,
+            "params: {} values, spec wants {p}", params.numel());
+    ensure!(m.numel() == p && v.numel() == p,
+            "optimizer state ({}, {}) does not match {p} params",
+            m.numel(), v.numel());
+    Ok(())
+}
+
+fn f32_arg<'a>(inputs: &'a [Value], i: usize, what: &str)
+               -> Result<&'a Tensor> {
+    match inputs.get(i) {
+        Some(Value::F32(t)) => Ok(t),
+        other => bail!(
+            "train-step input {i} ({what}): wanted an f32 tensor, \
+             got {other:?}"
+        ),
+    }
+}
+
+fn i32_arg(inputs: &[Value], i: usize, what: &str) -> Result<i32> {
+    match inputs.get(i) {
+        Some(Value::I32(x)) => Ok(*x),
+        other => bail!(
+            "train-step input {i} ({what}): wanted an i32 scalar, \
+             got {other:?}"
+        ),
+    }
+}
+
+fn u32_arg(inputs: &[Value], i: usize, what: &str) -> Result<u32> {
+    match inputs.get(i) {
+        Some(Value::U32(x)) => Ok(*x),
+        other => bail!(
+            "train-step input {i} ({what}): wanted a u32 scalar, \
+             got {other:?}"
+        ),
+    }
+}
+
+fn spec_in(name: &str, dtype: Dtype, shape: Vec<usize>) -> Spec {
+    Spec { name: name.to_string(), dtype, shape }
+}
+
+fn spec_out(shape: Vec<usize>) -> Spec {
+    Spec { name: String::new(), dtype: Dtype::F32, shape }
+}
+
+fn meta_for(ca: &str, spec: &NcaTrainSpec) -> BTreeMap<String, Json> {
+    let mut meta = BTreeMap::new();
+    meta.insert("ca".to_string(), Json::from(ca));
+    meta.insert("steps".to_string(), Json::from(spec.rollout_max));
+    meta.insert("channels".to_string(), Json::from(spec.channels));
+    meta.insert("hidden".to_string(), Json::from(spec.hidden));
+    meta.insert("batch".to_string(), Json::from(spec.batch));
+    meta
+}
+
+/// The in-memory manifest describing the native train programs — the
+/// same introspection surface (`inputs[4]` batch shapes, `meta`) the
+/// experiment drivers read off artifact manifests.
+fn build_manifest(growing: &NcaTrainSpec, mnist: &NcaTrainSpec)
+                  -> Manifest {
+    let mut artifacts = BTreeMap::new();
+    let gp = growing.param_count();
+    let (gb, gh, gw, gc) =
+        (growing.batch, growing.height, growing.width, growing.channels);
+    artifacts.insert(
+        "growing_seed".to_string(),
+        ArtifactInfo {
+            name: "growing_seed".to_string(),
+            file: "<native>".to_string(),
+            inputs: vec![],
+            outputs: vec![spec_out(vec![gh, gw, gc])],
+            meta: meta_for("growing", growing),
+        },
+    );
+    artifacts.insert(
+        "growing_train_step".to_string(),
+        ArtifactInfo {
+            name: "growing_train_step".to_string(),
+            file: "<native>".to_string(),
+            inputs: vec![
+                spec_in("params", Dtype::F32, vec![gp]),
+                spec_in("m", Dtype::F32, vec![gp]),
+                spec_in("v", Dtype::F32, vec![gp]),
+                spec_in("step", Dtype::I32, vec![]),
+                spec_in("states", Dtype::F32, vec![gb, gh, gw, gc]),
+                spec_in("target", Dtype::F32, vec![gh, gw, 4]),
+                spec_in("seed", Dtype::U32, vec![]),
+            ],
+            outputs: vec![
+                spec_out(vec![gp]),
+                spec_out(vec![gp]),
+                spec_out(vec![gp]),
+                spec_out(vec![]),
+                spec_out(vec![gb, gh, gw, gc]),
+            ],
+            meta: meta_for("growing", growing),
+        },
+    );
+    let mp = mnist.param_count();
+    let (mb, mh, mw) = (mnist.batch, mnist.height, mnist.width);
+    artifacts.insert(
+        "mnist_train_step".to_string(),
+        ArtifactInfo {
+            name: "mnist_train_step".to_string(),
+            file: "<native>".to_string(),
+            inputs: vec![
+                spec_in("params", Dtype::F32, vec![mp]),
+                spec_in("m", Dtype::F32, vec![mp]),
+                spec_in("v", Dtype::F32, vec![mp]),
+                spec_in("step", Dtype::I32, vec![]),
+                spec_in("images", Dtype::F32, vec![mb, mh, mw]),
+                spec_in("labels", Dtype::F32, vec![mb, 10]),
+                spec_in("seed", Dtype::U32, vec![]),
+            ],
+            outputs: vec![
+                spec_out(vec![mp]),
+                spec_out(vec![mp]),
+                spec_out(vec![mp]),
+                spec_out(vec![]),
+            ],
+            meta: meta_for("mnist", mnist),
+        },
+    );
+
+    let mut blobs = BTreeMap::new();
+    blobs.insert(
+        "growing_params".to_string(),
+        BlobInfo {
+            name: "growing_params".to_string(),
+            file: "<native>".to_string(),
+            shape: vec![gp],
+        },
+    );
+    blobs.insert(
+        "mnist_params".to_string(),
+        BlobInfo {
+            name: "mnist_params".to_string(),
+            file: "<native>".to_string(),
+            shape: vec![mp],
+        },
+    );
+
+    Manifest {
+        preset: "native-train".to_string(),
+        dir: std::path::PathBuf::new(),
+        artifacts,
+        blobs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> NativeTrainBackend {
+        let growing = NcaTrainSpec {
+            height: 6,
+            width: 6,
+            channels: 5,
+            hidden: 8,
+            batch: 2,
+            rollout_min: 2,
+            rollout_max: 3,
+            ..NcaTrainSpec::growing()
+        };
+        let mnist = NcaTrainSpec {
+            height: 8,
+            width: 8,
+            channels: 12,
+            hidden: 8,
+            batch: 2,
+            rollout_min: 2,
+            rollout_max: 3,
+            ..NcaTrainSpec::mnist()
+        };
+        NativeTrainBackend::with_specs(growing, mnist, 2)
+    }
+
+    fn train_inputs(backend: &NativeTrainBackend) -> Vec<Value> {
+        let spec = backend.growing_spec().clone();
+        let p = spec.param_count();
+        let params = backend.load_params("growing_params").unwrap();
+        let seed = backend.growing_seed_state();
+        let states =
+            Tensor::stack(&vec![seed; spec.batch]).unwrap();
+        let mut target = Tensor::zeros(&[spec.height, spec.width, 4]);
+        target.set(&[2, 2, 3], 1.0);
+        assert_eq!(params.numel(), p);
+        vec![
+            Value::F32(params),
+            Value::F32(Tensor::zeros(&[p])),
+            Value::F32(Tensor::zeros(&[p])),
+            Value::I32(0),
+            Value::F32(states),
+            Value::F32(target),
+            Value::U32(9),
+        ]
+    }
+
+    #[test]
+    fn manifest_describes_the_trainer_contract() {
+        let backend = tiny();
+        let info =
+            backend.manifest().artifact("growing_train_step").unwrap();
+        assert_eq!(info.inputs.len(), 7);
+        assert!(info.outputs.len() >= 4, "train_loop wants >= 4 outputs");
+        assert_eq!(info.inputs[4].shape[0], 2, "batch from inputs[4]");
+        assert_eq!(info.inputs[5].shape, vec![6, 6, 4], "target spec");
+        let m = backend.manifest().artifact("mnist_train_step").unwrap();
+        assert_eq!(m.inputs[4].shape, vec![2, 8, 8]);
+        assert_eq!(m.outputs.len(), 4);
+    }
+
+    #[test]
+    fn growing_step_moves_params_and_reports_finite_loss() {
+        let backend = tiny();
+        let inputs = train_inputs(&backend);
+        let out = backend.execute("growing_train_step", &inputs).unwrap();
+        assert_eq!(out.len(), 5);
+        let Value::F32(params0) = &inputs[0] else { unreachable!() };
+        assert!(out[0].max_abs_diff(params0).unwrap() > 0.0,
+                "params must move");
+        let loss = out[3].data()[0];
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        let spec = backend.growing_spec();
+        assert_eq!(out[4].shape(),
+                   &[spec.batch, spec.height, spec.width, spec.channels]);
+    }
+
+    #[test]
+    fn seed_state_is_single_cell() {
+        let backend = tiny();
+        let seed = backend.growing_seed_state();
+        let spec = backend.growing_spec();
+        let lit: usize =
+            seed.data().iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(lit, spec.channels - 3, "one cell, alpha+hidden lit");
+        assert_eq!(seed.at(&[3, 3, 3]), 1.0, "alpha at the center");
+        assert_eq!(seed.at(&[3, 3, 0]), 0.0, "rgb stays dark");
+    }
+
+    #[test]
+    fn unknown_programs_and_blobs_are_refused() {
+        let backend = tiny();
+        assert!(backend.execute("nope", &[]).is_err());
+        assert!(backend.load_params("nope_params").is_err());
+    }
+
+    #[test]
+    fn rollout_steps_deterministic_and_in_range() {
+        let spec = NcaTrainSpec::growing();
+        for step in 0..20 {
+            let a = rollout_steps(&spec, step, 7);
+            let b = rollout_steps(&spec, step, 7);
+            assert_eq!(a, b);
+            assert!((spec.rollout_min..=spec.rollout_max).contains(&a));
+        }
+        // Degenerate range pins the length.
+        let fixed = NcaTrainSpec {
+            rollout_min: 5,
+            rollout_max: 5,
+            ..NcaTrainSpec::growing()
+        };
+        assert_eq!(rollout_steps(&fixed, 3, 1), 5);
+    }
+
+    #[test]
+    fn infer_hidden_solves_the_layout() {
+        // P = hidden * (4c + 1).
+        assert_eq!(infer_hidden(8 * 21, 5).unwrap(), 8);
+        assert!(infer_hidden(100, 5).is_err());
+        assert!(infer_hidden(0, 5).is_err());
+    }
+}

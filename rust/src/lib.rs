@@ -29,5 +29,8 @@ pub mod tensor;
 pub mod util;
 pub mod viz;
 
-pub use backend::{Backend, CaProgram, NativeBackend, ProgramBackend, Value};
+pub use backend::{
+    Backend, CaProgram, NativeBackend, NativeTrainBackend, ProgramBackend,
+    Value,
+};
 pub use tensor::Tensor;

@@ -6,7 +6,8 @@
 //!   backends                     execution backends in this build
 //!   check                        compile every registry artifact [pjrt]
 //!   sim <eca|life|lenia> ...     run a classic CA on any backend path
-//!   train <ca> ...               train a neural CA end to end      [pjrt]
+//!   train <ca> ...               train a neural CA end to end (native:
+//!                                growing, mnist; every key with [pjrt])
 //!   eval <arc|mnist|autoenc3d>   evaluate a trained neural CA      [pjrt]
 //!
 //! Global flags: --artifacts DIR  --out DIR  --seed N  --config FILE
@@ -18,9 +19,10 @@ use std::process::ExitCode;
 use anyhow::{bail, Context, Result};
 
 use cax::automata::WolframRule;
-use cax::backend::NativeBackend;
+use cax::backend::{NativeBackend, NativeTrainBackend};
 use cax::config::Config;
-use cax::coordinator::{Path as SimPath, Simulator};
+use cax::coordinator::trainer::TrainCfg;
+use cax::coordinator::{experiments, Path as SimPath, Simulator};
 use cax::runtime::Manifest;
 use cax::util::rng::Rng;
 use cax::util::timer::Timer;
@@ -29,9 +31,7 @@ use cax::viz::spacetime;
 #[cfg(feature = "pjrt")]
 use cax::coordinator::evaluator;
 #[cfg(feature = "pjrt")]
-use cax::coordinator::trainer::TrainCfg;
-#[cfg(feature = "pjrt")]
-use cax::coordinator::{experiments, registry};
+use cax::coordinator::registry;
 #[cfg(feature = "pjrt")]
 use cax::datasets::arc1d::Task;
 #[cfg(feature = "pjrt")]
@@ -54,12 +54,15 @@ COMMANDS:
     sim <eca|life|lenia>      run a classic CA
         [--path fused|stepwise|naive|native] [--steps N] [--rule R]
         [--batch B] [--width W] [--height H] [--render]
-    train <ca-key>            train a neural CA (growing, conditional,
-        [--steps N]           vae, mnist, diffusing, autoenc3d, arc) [pjrt]
+    train <ca-key>            train a neural CA end to end
+        [--steps N]           --backend native: growing, mnist (hermetic,
+        [--backend native]    hand-rolled BPTT + Adam); --backend pjrt:
+                              all keys via fused artifacts        [pjrt]
     eval <arc|mnist|autoenc3d> [--train-steps N] [--task NAME]      [pjrt]
 
 The default build runs everything marked-free above hermetically on the
-native backend; [pjrt] commands need `--features pjrt` plus artifacts."
+native backend (incl. `train growing|mnist`); [pjrt] commands need
+`--features pjrt` plus artifacts."
 }
 
 struct Cli {
@@ -194,9 +197,12 @@ fn cmd_list(cli: &Cli) -> Result<()> {
             }
             None => {
                 // No artifacts on disk: the classic rows still run on
-                // the native backend.
+                // the native backend, and the growing/mnist rows train
+                // through the native BPTT train step.
                 if matches!(e.key, "eca" | "life" | "lenia") {
                     "ready (native)"
+                } else if matches!(e.key, "growing" | "mnist") {
+                    "trainable (native)"
                 } else {
                     "needs artifacts"
                 }
@@ -443,48 +449,94 @@ fn cmd_sim_xla(cli: &Cli, ca: &str, path: SimPath) -> Result<()> {
 
 // ----------------------------------------------------------------- train
 
-#[cfg(feature = "pjrt")]
+fn train_cfg(cli: &Cli) -> Result<TrainCfg> {
+    let steps = match cli.flag("--steps") {
+        Some(s) => s.parse::<usize>()?,
+        None => cli.cfg.train.steps,
+    };
+    Ok(TrainCfg {
+        steps,
+        seed: cli.cfg.seed as u32,
+        log_every: cli.cfg.train.log_every,
+        out_dir: cli.cfg.train.write_outputs.then(|| cli.cfg.out_dir.clone()),
+    })
+}
+
+fn print_train_summary(key: &str, run: &experiments::TrainRun, steps: usize,
+                       secs: f64) {
+    let (first, last) = run.history.window_means(10);
+    println!(
+        "{key}: {steps} steps in {secs:.1}s — loss first-window {first:.5} \
+         -> last-window {last:.5}{}",
+        if run.improved() { "" } else { "  (WARNING: no improvement)" },
+    );
+}
+
 fn cmd_train(cli: &Cli) -> Result<()> {
     let key = cli
         .args
         .get(1)
-        .context("train: which CA key? (see `cax list`)")?;
+        .context("train: which CA key? (see `cax list`)")?
+        .clone();
+    let backend = cli
+        .flag("--backend")
+        .unwrap_or(if cfg!(feature = "pjrt") { "pjrt" } else { "native" });
+    match backend {
+        "native" => cmd_train_native(cli, &key),
+        "pjrt" => cmd_train_pjrt(cli, &key),
+        other => bail!("unknown --backend {other:?} (native|pjrt)"),
+    }
+}
+
+/// Hand-rolled BPTT + Adam on the native backend — no artifacts, no XLA,
+/// no Python anywhere.
+fn cmd_train_native(cli: &Cli, key: &str) -> Result<()> {
+    if !matches!(key, "growing" | "mnist") {
+        bail!(
+            "the native backend trains `growing` and `mnist`; {key:?} \
+             needs the pjrt backend (rebuild with --features pjrt and run \
+             `make artifacts`)"
+        );
+    }
+    let backend = NativeTrainBackend::new();
+    let cfg = train_cfg(cli)?;
+    println!(
+        "training {key} natively for {} steps (seed {}, {} worker \
+         threads)...",
+        cfg.steps, cfg.seed, backend.threads()
+    );
+    let t = Timer::start();
+    let run =
+        experiments::train_by_key(&backend, key, &cfg, cli.cfg.pool.size)?
+            .expect("neural CA");
+    print_train_summary(key, &run, cfg.steps, t.elapsed_secs());
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_train_pjrt(cli: &Cli, key: &str) -> Result<()> {
     let entry = registry::find(key)
         .with_context(|| format!("no registry entry {key:?}"))?;
     if entry.params_blob.is_none() {
         bail!("{key} is a classic CA — use `cax sim {key}`");
     }
     let eng = engine(cli)?;
-    let steps = match cli.flag("--steps") {
-        Some(s) => s.parse::<usize>()?,
-        None => cli.cfg.train.steps,
-    };
-    let cfg = TrainCfg {
-        steps,
-        seed: cli.cfg.seed as u32,
-        log_every: cli.cfg.train.log_every,
-        out_dir: cli.cfg.train.write_outputs.then(|| cli.cfg.out_dir.clone()),
-    };
-    println!("training {key} for {steps} steps (seed {})...", cfg.seed);
+    let cfg = train_cfg(cli)?;
+    println!("training {key} for {} steps (seed {})...", cfg.steps,
+             cfg.seed);
     let t = Timer::start();
     let run = experiments::train_by_key(&eng, key, &cfg, cli.cfg.pool.size)?
         .expect("neural CA");
-    let (first, last) = run.history.window_means(10);
-    println!(
-        "{key}: {steps} steps in {:.1}s — loss first-window {first:.5} -> \
-         last-window {last:.5}{}",
-        t.elapsed_secs(),
-        if run.improved() { "" } else { "  (WARNING: no improvement)" },
-    );
+    print_train_summary(key, &run, cfg.steps, t.elapsed_secs());
     Ok(())
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_train(_cli: &Cli) -> Result<()> {
+fn cmd_train_pjrt(_cli: &Cli, key: &str) -> Result<()> {
     bail!(
-        "`cax train` runs fused XLA train-step artifacts; rebuild with \
-         --features pjrt (the native backend covers the classic CAs: \
-         `cax sim eca|life|lenia`)"
+        "`cax train --backend pjrt` runs fused XLA train-step artifacts \
+         and needs a --features pjrt build; this build trains natively: \
+         `cax train {key} --backend native`"
     )
 }
 

@@ -69,6 +69,39 @@ impl SamplePool {
         self.writes += 1;
     }
 
+    /// Damage injection (the regeneration-training half of the App. B
+    /// recipe): zero a square patch — all channels — in each listed
+    /// slot. The patch edge is `frac` of the shorter grid side (at
+    /// least 1 cell) and its position is drawn from `rng`, so a seeded
+    /// caller gets identical masks on every run. Entries must be at
+    /// least rank 2 (`[H, W, ...]`). Returns the `(y0, x0, edge)` mask
+    /// applied per slot.
+    pub fn inject_damage(&mut self, indices: &[usize], frac: f32,
+                         rng: &mut Rng) -> Vec<(usize, usize, usize)> {
+        let shape = self.entry_shape().to_vec();
+        assert!(shape.len() >= 2,
+                "inject_damage wants [H, W, ...] entries, got {shape:?}");
+        let (h, w) = (shape[0], shape[1]);
+        let rest: usize = shape[2..].iter().product();
+        let entry = h * w * rest;
+        let edge = ((h.min(w) as f32 * frac).round() as usize)
+            .clamp(1, h.min(w));
+        let mut masks = Vec::with_capacity(indices.len());
+        for &i in indices {
+            assert!(i < self.capacity(),
+                    "inject_damage: index {i} out of range");
+            let y0 = rng.range(0, h - edge + 1);
+            let x0 = rng.range(0, w - edge + 1);
+            let data = self.states.data_mut();
+            for y in y0..y0 + edge {
+                let row = i * entry + (y * w + x0) * rest;
+                data[row..row + edge * rest].fill(0.0);
+            }
+            masks.push((y0, x0, edge));
+        }
+        masks
+    }
+
     /// Overwrite one slot with a fresh state (explicit reseed).
     pub fn reseed(&mut self, index: usize, state: &Tensor) {
         assert_eq!(state.shape(), self.entry_shape());
@@ -176,6 +209,76 @@ mod tests {
         pool.reseed(2, &other);
         assert!(pool.entry(2).bit_eq(&other));
         assert!(pool.entry(1).bit_eq(&seed_state()));
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        // Same seed -> same batch indices AND same batch bits, across
+        // fresh Rngs and fresh pools.
+        let pool = SamplePool::new(16, &seed_state());
+        let (idx_a, batch_a) = pool.sample(5, &mut Rng::new(0xBEEF));
+        let (idx_b, batch_b) = pool.sample(5, &mut Rng::new(0xBEEF));
+        assert_eq!(idx_a, idx_b);
+        assert!(batch_a.bit_eq(&batch_b));
+        let differs = (0..4u64)
+            .any(|s| pool.sample(5, &mut Rng::new(0xBEE0 + s)).0 != idx_a);
+        assert!(differs, "other seeds should eventually differ");
+    }
+
+    #[test]
+    fn damage_masks_are_seed_deterministic() {
+        let mut a = SamplePool::new(8, &seed_state());
+        let mut b = SamplePool::new(8, &seed_state());
+        let masks_a = a.inject_damage(&[1, 4, 6], 0.5, &mut Rng::new(31));
+        let masks_b = b.inject_damage(&[1, 4, 6], 0.5, &mut Rng::new(31));
+        assert_eq!(masks_a, masks_b);
+        for i in 0..8 {
+            assert!(a.entry(i).bit_eq(&b.entry(i)), "slot {i} diverged");
+        }
+    }
+
+    #[test]
+    fn damage_zeros_only_the_patch_in_listed_slots() {
+        // A full-intensity pool makes the damaged region visible.
+        let full = Tensor::full(&[4, 4, 2], 1.0);
+        let mut pool = SamplePool::new(4, &full);
+        let mut rng = Rng::new(7);
+        let masks = pool.inject_damage(&[2], 0.5, &mut rng);
+        assert_eq!(masks.len(), 1);
+        let (y0, x0, edge) = masks[0];
+        assert_eq!(edge, 2, "0.5 of a 4x4 grid");
+        assert!(y0 + edge <= 4 && x0 + edge <= 4, "patch stays in bounds");
+        // Untouched slots keep every value.
+        for i in [0usize, 1, 3] {
+            assert!(pool.entry(i).bit_eq(&full), "slot {i} touched");
+        }
+        // Damaged slot: zeros exactly inside the patch (all channels).
+        let hit = pool.entry(2);
+        for y in 0..4 {
+            for x in 0..4 {
+                for ch in 0..2 {
+                    let inside = (y0..y0 + edge).contains(&y)
+                        && (x0..x0 + edge).contains(&x);
+                    let want = if inside { 0.0 } else { 1.0 };
+                    assert_eq!(hit.at(&[y, x, ch]), want,
+                               "({y},{x},{ch}) inside={inside}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn damage_keeps_pool_invariants_under_reuse() {
+        let mut pool = SamplePool::new(6, &seed_state());
+        let mut rng = Rng::new(17);
+        for round in 0..10u64 {
+            let (idx, batch) = pool.sample(3, &mut rng);
+            pool.write_back(&idx, &batch);
+            pool.inject_damage(&idx[..1], 0.4, &mut rng);
+            assert_eq!(pool.capacity(), 6, "round {round}");
+            assert_eq!(pool.entry_shape(), &[4, 4, 2]);
+            assert_eq!(pool.writes(), round + 1);
+        }
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Properties of the native NCA training path (default features, no
+//! artifacts): the BPTT backward pass is checked against central finite
+//! differences per parameter group, and the full train step is
+//! bit-identical for any worker-thread count.
+
+use cax::backend::native::nca::NcaModel;
+use cax::backend::native::nca_grad;
+use cax::backend::native::train::{NativeTrainBackend, NcaTrainSpec};
+use cax::backend::{ProgramBackend, Value};
+use cax::tensor::Tensor;
+use cax::util::rng::Rng;
+
+/// A small cell built for finite differences. The ReLU makes the loss
+/// only piecewise smooth, and with the default init the pre-activations
+/// crowd zero densely enough that some kink always lands inside the
+/// central-difference window, corrupting the comparison (empirically a
+/// few-percent error, independent of eps). So the check model pushes
+/// every pre-activation away from zero — large alternating biases
+/// (half the units active, half inactive: both ReLU branches stay
+/// covered), small `w1` so the data term cannot bridge the gap — and
+/// boosts `w2` so the gradients sit well above the f32 noise floor.
+/// None of the code paths under test change.
+fn check_model(channels: usize, hidden: usize, seed: u64) -> NcaModel {
+    let mut model = NcaModel::random(channels, hidden, &mut Rng::new(seed));
+    for w in model.w1.iter_mut() {
+        *w *= 0.15;
+    }
+    for (j, b) in model.b1.iter_mut().enumerate() {
+        *b = if j % 2 == 0 { 0.8 } else { -0.8 };
+    }
+    for w in model.w2.iter_mut() {
+        *w *= 2.0;
+    }
+    model
+}
+
+/// Mean-squared full-state loss of a `steps`-long rollout (f64 sum).
+fn rollout_loss(model: &NcaModel, board: &[f32], target: &[f32], h: usize,
+                w: usize, steps: usize, frozen: usize) -> f64 {
+    let tape = nca_grad::rollout_tape(model, board, h, w, steps, frozen);
+    let fin = tape.last().unwrap();
+    fin.iter()
+        .zip(target)
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / fin.len() as f64
+}
+
+/// Central finite differences over one parameter group, where `group`
+/// selects the vector to perturb on a clone of the model.
+#[allow(clippy::too_many_arguments)]
+fn fd_group(model: &NcaModel, board: &[f32], target: &[f32], h: usize,
+            w: usize, steps: usize, frozen: usize, len: usize,
+            group: fn(&mut NcaModel) -> &mut Vec<f32>) -> Vec<f64> {
+    let eps = 3e-3f32;
+    (0..len)
+        .map(|i| {
+            let mut plus = model.clone();
+            group(&mut plus)[i] += eps;
+            let lp = rollout_loss(&plus, board, target, h, w, steps, frozen);
+            let mut minus = model.clone();
+            group(&mut minus)[i] -= eps;
+            let lm =
+                rollout_loss(&minus, board, target, h, w, steps, frozen);
+            (lp - lm) / (2.0 * eps as f64)
+        })
+        .collect()
+}
+
+/// Group-norm relative error plus a per-parameter sanity bound.
+fn assert_group_matches(name: &str, analytic: &[f32], fd: &[f64]) {
+    assert_eq!(analytic.len(), fd.len());
+    let mut diff2 = 0.0f64;
+    let mut norm2 = 0.0f64;
+    for (i, (&a, &f)) in analytic.iter().zip(fd).enumerate() {
+        let a = a as f64;
+        diff2 += (a - f) * (a - f);
+        norm2 += f * f;
+        let denom = a.abs().max(f.abs()).max(1e-3);
+        let rel = (a - f).abs() / denom;
+        assert!(rel < 1e-2,
+                "{name}[{i}]: analytic {a:.6e} vs fd {f:.6e} (rel {rel:.2e})");
+    }
+    let rel = (diff2.sqrt()) / norm2.sqrt().max(1e-12);
+    assert!(rel < 1e-3,
+            "{name}: group-norm rel err {rel:.3e} (>= 1e-3), \
+             ||fd|| = {:.3e}", norm2.sqrt());
+    assert!(norm2 > 0.0, "{name}: degenerate all-zero fd gradient");
+}
+
+fn gradient_check(frozen: usize, seed: u64) {
+    // Small board, 2-step unroll — the ISSUE 2 acceptance geometry.
+    let (h, w, c, hid, steps) = (8, 8, 4, 8, 2);
+    let model = check_model(c, hid, seed);
+    let mut rng = Rng::new(seed ^ 0x51);
+    let board = rng.vec_f32(h * w * c);
+    let target = rng.vec_f32(h * w * c);
+
+    let tape = nca_grad::rollout_tape(&model, &board, h, w, steps, frozen);
+    let fin = tape.last().unwrap();
+    let n = fin.len() as f32;
+    let d_final: Vec<f32> = fin
+        .iter()
+        .zip(&target)
+        .map(|(&a, &b)| 2.0 * (a - b) / n)
+        .collect();
+    let (grads, _) =
+        nca_grad::backward(&model, &tape, h, w, frozen, &d_final);
+
+    let fd_w1 = fd_group(&model, &board, &target, h, w, steps, frozen,
+                         grads.w1.len(), |m| &mut m.w1);
+    assert_group_matches("w1", &grads.w1, &fd_w1);
+    let fd_b1 = fd_group(&model, &board, &target, h, w, steps, frozen,
+                         grads.b1.len(), |m| &mut m.b1);
+    assert_group_matches("b1", &grads.b1, &fd_b1);
+    let fd_w2 = fd_group(&model, &board, &target, h, w, steps, frozen,
+                         grads.w2.len(), |m| &mut m.w2);
+    assert_group_matches("w2", &grads.w2, &fd_w2);
+}
+
+#[test]
+fn bptt_gradients_match_finite_differences() {
+    gradient_check(0, 9);
+}
+
+#[test]
+fn bptt_gradients_match_finite_differences_with_frozen_channel() {
+    // The MNIST cell: channel 0 pinned, still feeding perception.
+    gradient_check(1, 23);
+}
+
+#[test]
+fn input_gradient_matches_finite_differences_too() {
+    // dL/d(state_0), the remaining backward output: perturb two board
+    // cells directly.
+    let (h, w, c, hid, steps) = (6, 6, 4, 6, 3);
+    let model = check_model(c, hid, 4);
+    let mut rng = Rng::new(40);
+    let board = rng.vec_f32(h * w * c);
+    let target = rng.vec_f32(h * w * c);
+    let tape = nca_grad::rollout_tape(&model, &board, h, w, steps, 0);
+    let fin = tape.last().unwrap();
+    let n = fin.len() as f32;
+    let d_final: Vec<f32> = fin
+        .iter()
+        .zip(&target)
+        .map(|(&a, &b)| 2.0 * (a - b) / n)
+        .collect();
+    let (_, d0) = nca_grad::backward(&model, &tape, h, w, 0, &d_final);
+
+    let eps = 3e-3f32;
+    for idx in [0usize, (h * w * c) / 2 + 1] {
+        let mut plus = board.clone();
+        plus[idx] += eps;
+        let lp = rollout_loss(&model, &plus, &target, h, w, steps, 0);
+        let mut minus = board.clone();
+        minus[idx] -= eps;
+        let lm = rollout_loss(&model, &minus, &target, h, w, steps, 0);
+        let fd = (lp - lm) / (2.0 * eps as f64);
+        let a = d0[idx] as f64;
+        let rel = (a - fd).abs() / a.abs().max(fd.abs()).max(1e-3);
+        assert!(rel < 1e-2,
+                "d_state0[{idx}]: analytic {a:.6e} vs fd {fd:.6e}");
+    }
+}
+
+fn tiny_backend(threads: usize) -> NativeTrainBackend {
+    let growing = NcaTrainSpec {
+        height: 8,
+        width: 8,
+        channels: 6,
+        hidden: 12,
+        batch: 4,
+        rollout_min: 3,
+        rollout_max: 5,
+        ..NcaTrainSpec::growing()
+    };
+    let mnist = NcaTrainSpec {
+        height: 10,
+        width: 10,
+        channels: 12,
+        hidden: 12,
+        batch: 3,
+        rollout_min: 3,
+        rollout_max: 4,
+        ..NcaTrainSpec::mnist()
+    };
+    NativeTrainBackend::with_specs(growing, mnist, threads)
+}
+
+fn growing_inputs(backend: &NativeTrainBackend) -> Vec<Value> {
+    let spec = backend.growing_spec().clone();
+    let p = spec.param_count();
+    let params = backend.load_params("growing_params").unwrap();
+    let mut rng = Rng::new(77);
+    let states = Tensor::new(
+        vec![spec.batch, spec.height, spec.width, spec.channels],
+        rng.vec_f32(spec.batch * spec.height * spec.width * spec.channels),
+    )
+    .unwrap();
+    let target = Tensor::new(
+        vec![spec.height, spec.width, 4],
+        rng.vec_f32(spec.height * spec.width * 4),
+    )
+    .unwrap();
+    vec![
+        Value::F32(params),
+        Value::F32(Tensor::zeros(&[p])),
+        Value::F32(Tensor::zeros(&[p])),
+        Value::I32(0),
+        Value::F32(states),
+        Value::F32(target),
+        Value::U32(5),
+    ]
+}
+
+#[test]
+fn train_step_is_bit_identical_across_thread_counts() {
+    let single = tiny_backend(1);
+    let many = tiny_backend(8);
+    let inputs = growing_inputs(&single);
+    let a = single.execute("growing_train_step", &inputs).unwrap();
+    let b = many.execute("growing_train_step", &inputs).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!(x.bit_eq(y), "output {i} differs between 1 and 8 workers");
+    }
+    // And the step is a pure function of its inputs.
+    let c = single.execute("growing_train_step", &inputs).unwrap();
+    for (x, y) in a.iter().zip(&c) {
+        assert!(x.bit_eq(y));
+    }
+}
+
+#[test]
+fn mnist_train_step_is_bit_identical_across_thread_counts() {
+    let single = tiny_backend(1);
+    let many = tiny_backend(8);
+    let spec = single.mnist_spec().clone();
+    let p = spec.param_count();
+    let params = single.load_params("mnist_params").unwrap();
+    let digits = cax::datasets::mnist::dataset(
+        spec.batch,
+        &cax::datasets::mnist::MnistConfig::for_grid(spec.height,
+                                                     spec.width),
+        3,
+    );
+    let refs: Vec<&cax::datasets::mnist::Digit> = digits.iter().collect();
+    let images = cax::datasets::mnist::batch_images(&refs);
+    let labels = cax::datasets::mnist::batch_labels(&refs);
+    let inputs = vec![
+        Value::F32(params),
+        Value::F32(Tensor::zeros(&[p])),
+        Value::F32(Tensor::zeros(&[p])),
+        Value::I32(0),
+        Value::F32(images),
+        Value::F32(labels),
+        Value::U32(11),
+    ];
+    let a = single.execute("mnist_train_step", &inputs).unwrap();
+    let b = many.execute("mnist_train_step", &inputs).unwrap();
+    assert_eq!(a.len(), 4);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!(x.bit_eq(y), "output {i} differs between 1 and 8 workers");
+    }
+    let loss = a[3].data()[0];
+    assert!(loss.is_finite() && loss > 0.0, "mnist loss {loss}");
+}
