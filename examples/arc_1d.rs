@@ -2,22 +2,52 @@
 //! prints the space-time evolution as colored text and saves the Fig. 8
 //! diagram, then reports exact-match accuracy vs the paper's GPT-4 row.
 //!
+//! Backend-selectable: the default build trains hermetically on the
+//! native BPTT backend (no artifacts, no XLA, no network); `--backend
+//! pjrt` drives the fused XLA artifacts instead (needs `--features
+//! pjrt` + `make artifacts`). Everything below the backend choice is
+//! one code path through the `ProgramBackend` trait.
+//!
 //!   cargo run --release --example arc_1d -- [--task move-1] [--steps N]
-//!       [--seed S] [--out DIR]
+//!       [--seed S] [--out DIR] [--backend native|pjrt]
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use cax::backend::{NativeTrainBackend, ProgramBackend, Value};
 use cax::coordinator::trainer::TrainCfg;
 use cax::coordinator::{evaluator, experiments};
 use cax::datasets::arc1d::{one_hot_batch, Task};
-use cax::runtime::{Engine, Value};
 use cax::viz::spacetime;
 
 fn arg(name: &str) -> Option<String> {
     let args: Vec<String> = std::env::args().collect();
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+/// The chosen execution backend behind the shared `ProgramBackend`
+/// contract.
+fn backend(choice: &str) -> Result<Box<dyn ProgramBackend>> {
+    match choice {
+        "native" => Ok(Box::new(NativeTrainBackend::new())),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => {
+            use anyhow::Context;
+            let artifacts = std::env::var("CAX_ARTIFACTS")
+                .unwrap_or_else(|_| "artifacts".into());
+            let engine =
+                cax::runtime::Engine::load(std::path::Path::new(&artifacts))
+                    .context("run `make artifacts` first")?;
+            Ok(Box::new(engine))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!(
+            "this build has no pjrt feature; use --backend native or \
+             rebuild with --features pjrt"
+        ),
+        other => bail!("unknown --backend {other:?} (native|pjrt)"),
+    }
 }
 
 fn main() -> Result<()> {
@@ -27,38 +57,38 @@ fn main() -> Result<()> {
     let seed: u64 = arg("--seed").map(|s| s.parse()).transpose()?.unwrap_or(7);
     let out = PathBuf::from(arg("--out").unwrap_or_else(|| "out".into()));
     std::fs::create_dir_all(&out)?;
+    let choice = arg("--backend").unwrap_or_else(|| {
+        if cfg!(feature = "pjrt") { "pjrt".into() } else { "native".into() }
+    });
 
-    let Some(task) = Task::ALL.iter().copied().find(|t| {
-        t.name().eq_ignore_ascii_case(&task_name)
-            || t.name().to_lowercase().replace(' ', "-")
-                == task_name.to_lowercase()
-    }) else {
+    let Some(task) = Task::find(&task_name) else {
         bail!(
             "unknown task {task_name:?}; available: {}",
             Task::ALL
                 .iter()
-                .map(|t| t.name().to_lowercase().replace(' ', "-"))
+                .map(|t| t.slug())
                 .collect::<Vec<_>>()
                 .join(", ")
         );
     };
 
-    let artifacts = std::env::var("CAX_ARTIFACTS")
-        .unwrap_or_else(|_| "artifacts".into());
-    let engine = Engine::load(std::path::Path::new(&artifacts))
-        .context("run `make artifacts` first")?;
+    let engine = backend(&choice)?;
+    let engine: &dyn ProgramBackend = engine.as_ref();
 
-    println!("== 1D-ARC NCA on {:?} ({} train steps) ==", task.name(), steps);
+    println!(
+        "== 1D-ARC NCA on {:?} ({} train steps, {} backend) ==",
+        task.name(), steps, choice
+    );
     let (train_set, test_set) =
-        experiments::arc_split(&engine, task, 160, 50, seed)?;
+        experiments::arc_split(engine, task, 160, 50, seed)?;
     let cfg = TrainCfg { steps, seed: seed as u32, log_every: 25,
                          out_dir: None };
-    let run = experiments::train_arc(&engine, &cfg, task, &train_set)?;
+    let run = experiments::train_arc(engine, &cfg, task, &train_set)?;
 
     // Evaluate: the paper's exact-match criterion.
-    let acc = evaluator::arc_accuracy(&engine, &run.state.params, &test_set)?;
+    let acc = evaluator::arc_accuracy(engine, &run.state.params, &test_set)?;
     let pix =
-        evaluator::arc_pixel_accuracy(&engine, &run.state.params, &test_set)?;
+        evaluator::arc_pixel_accuracy(engine, &run.state.params, &test_set)?;
     println!(
         "\n{}: exact-match {:.1}%  per-pixel {:.1}%  (paper NCA {:.0}%, \
          GPT-4 {:.0}%)",
@@ -102,8 +132,7 @@ fn main() -> Result<()> {
     println!("target |{}|", row_str(&e.target));
 
     let img = spacetime::render_spacetime_arc(traj)?;
-    let slug = task.name().to_lowercase().replace(' ', "-");
-    let path = out.join(format!("fig8_{slug}.ppm"));
+    let path = out.join(format!("fig8_{}.ppm", task.slug()));
     img.upscale(6).write_ppm(&path)?;
     println!("\nwrote {}", path.display());
     Ok(())

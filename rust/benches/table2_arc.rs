@@ -1,22 +1,67 @@
-//! E5 — Table 2 benchmark: end-to-end 1D-ARC pipeline cost.
+//! E5 — Table 2 benchmark: 1D-ARC pipeline cost.
 //!
-//! Times the three phases the Table-2 harness is built from — dataset
-//! generation, per-task training, exact-match evaluation — so the
-//! `cax-tables table2` wall-clock budget is understood, and reports a
-//! mini-Table-2 (3 representative tasks) as a smoke of the full run.
+//! Native arm (default features, always runs): dataset-generation
+//! throughput, then the native `arc_train_step` (BPTT over the 1D cell,
+//! multi-threaded across the batch) vs the same math forced onto one
+//! worker thread, plus `arc_eval` rollout throughput. Emits
+//! `BENCH_arc_native.json` with the native-vs-1-thread comparison.
+//!
+//! PJRT arm (`--features pjrt` + artifacts): the original end-to-end
+//! phase timing of the artifact-backed Table-2 harness — per-task
+//! train + exact-match eval over three representative tasks.
 
-use cax::coordinator::trainer::TrainCfg;
-use cax::coordinator::{evaluator, experiments};
-use cax::datasets::arc1d::Task;
+use cax::backend::{NativeTrainBackend, ProgramBackend, Value};
+use cax::coordinator::trainer::TrainState;
+use cax::datasets::arc1d::{one_hot_batch, Task};
+use cax::metrics::{write_bench_report, BenchRow};
+use cax::tensor::Tensor;
+use cax::util::rng::Rng;
 
 mod bench_util;
-use bench_util::{bench, engine, header, quick, row};
+use bench_util::{bench, header, quick, row};
+
+/// One native ARC train step: execute + fold (params, m, v) back.
+fn native_step(backend: &NativeTrainBackend, st: &mut TrainState,
+               ins: &Tensor, tgts: &Tensor, seed: u32) {
+    let out = backend
+        .execute(
+            "arc_train_step",
+            &[
+                Value::F32(st.params.clone()),
+                Value::F32(st.m.clone()),
+                Value::F32(st.v.clone()),
+                Value::I32(st.step),
+                Value::F32(ins.clone()),
+                Value::F32(tgts.clone()),
+                Value::U32(seed),
+            ],
+        )
+        .unwrap();
+    let mut it = out.into_iter();
+    st.params = it.next().unwrap();
+    st.m = it.next().unwrap();
+    st.v = it.next().unwrap();
+    st.step += 1;
+}
+
+/// A one-hot (inputs, targets) batch of one task at the spec geometry.
+fn task_batch(backend: &NativeTrainBackend, task: Task, seed: u64)
+              -> (Tensor, Tensor) {
+    let spec = backend.arc_spec();
+    let mut rng = Rng::new(seed);
+    let examples: Vec<_> = (0..spec.batch)
+        .map(|_| task.generate(spec.width, &mut rng))
+        .collect();
+    let ins: Vec<&[u8]> =
+        examples.iter().map(|e| e.input.as_slice()).collect();
+    let tgts: Vec<&[u8]> =
+        examples.iter().map(|e| e.target.as_slice()).collect();
+    (one_hot_batch(&ins, spec.width), one_hot_batch(&tgts, spec.width))
+}
 
 fn main() {
-    let engine = engine();
-    let (train_steps, train_n, test_n) =
-        if quick() { (40, 48, 16) } else { (120, 96, 32) };
-    let tasks = [Task::Move1, Task::Denoise, Task::Fill];
+    let mut rows: Vec<BenchRow> = vec![];
+    let (warm, iters) = if quick() { (1, 3) } else { (2, 10) };
 
     header("Table 2 — dataset generation throughput");
     {
@@ -25,12 +70,102 @@ fn main() {
                 let _ = t.dataset(32, 64, 16, 7);
             }
         });
-        row("arc1d/generate (18 tasks x 80 ex)", &stats,
-            18.0 * 80.0);
+        row("arc1d/generate (18 tasks x 80 ex)", &stats, 18.0 * 80.0);
     }
 
+    // ------------------------------------------------- native vs naive
+    let full = NativeTrainBackend::new();
+    let naive = NativeTrainBackend::with_threads(1);
+    let spec = full.arc_spec().clone();
+    let (ins, tgts) = task_batch(&full, Task::Denoise, 42);
+
     header(&format!(
-        "Table 2 — per-task train ({train_steps} steps) + eval pipeline"
+        "Table 2 — ARC train step, native BPTT (batch {}, width {}, \
+         {} channels, hidden {}, {}..={} rollout steps)",
+        spec.batch, spec.width, spec.channels(), spec.hidden,
+        spec.rollout_min, spec.rollout_max
+    ));
+
+    let mut st = TrainState::from_blob(&full, "arc_params").unwrap();
+    let mut seed = 0u32;
+    let threaded = bench(warm, iters, || {
+        seed = seed.wrapping_add(1);
+        native_step(&full, &mut st, &ins, &tgts, seed);
+    });
+
+    let mut st1 = TrainState::from_blob(&naive, "arc_params").unwrap();
+    let mut seed1 = 0u32;
+    let single = bench(warm.min(1), iters, || {
+        seed1 = seed1.wrapping_add(1);
+        native_step(&naive, &mut st1, &ins, &tgts, seed1);
+    });
+
+    let threaded_label =
+        format!("arc-train/native-bptt ({} threads)", full.threads());
+    row(&threaded_label, &threaded, 1.0);
+    row("arc-train/naive-1thread", &single, 1.0);
+    println!(
+        "  native speedup: {:.2}x train-steps/s over the single-thread \
+         baseline ({} worker threads)",
+        single.median / threaded.median,
+        full.threads()
+    );
+    rows.push(BenchRow {
+        label: threaded_label,
+        stats: threaded.clone(),
+        items_per_iter: 1.0,
+    });
+    rows.push(BenchRow {
+        label: "arc-train/naive-1thread".to_string(),
+        stats: single.clone(),
+        items_per_iter: 1.0,
+    });
+
+    // Eval rollouts: the exact-match scorer's inner program.
+    let eval = bench(warm, iters, || {
+        let out = full
+            .execute("arc_eval",
+                     &[Value::F32(st.params.clone()),
+                       Value::F32(ins.clone())])
+            .unwrap();
+        assert_eq!(out[0].shape()[0], spec.batch);
+    });
+    row("arc-eval/native rollout", &eval, spec.batch as f64);
+    rows.push(BenchRow {
+        label: "arc-eval/native".to_string(),
+        stats: eval,
+        items_per_iter: spec.batch as f64,
+    });
+
+    let out = std::path::Path::new("BENCH_arc_native.json");
+    write_bench_report("table2_arc_native", &rows, out).unwrap();
+    println!("\nwrote {}", out.display());
+
+    // ------------------------------------- artifact arm (pjrt builds)
+    #[cfg(feature = "pjrt")]
+    pjrt_arm();
+}
+
+/// End-to-end artifact-backed pipeline; skipped when artifacts are
+/// absent.
+#[cfg(feature = "pjrt")]
+fn pjrt_arm() {
+    use cax::coordinator::trainer::TrainCfg;
+    use cax::coordinator::{evaluator, experiments};
+
+    let Ok(engine) = cax::runtime::Engine::load(&bench_util::artifacts_dir())
+    else {
+        println!("\n(pjrt enabled but no artifacts found; skipping the \
+                  fused XLA arm)");
+        return;
+    };
+    let (train_steps, train_n, test_n) =
+        if quick() { (40, 48, 16) } else { (120, 96, 32) };
+    let tasks = [Task::Move1, Task::Denoise, Task::Fill];
+
+    header(&format!(
+        "Table 2 — per-task train ({train_steps} steps) + eval pipeline \
+         (pjrt)"
     ));
     let mut printed: Vec<(Task, f64, f64)> = vec![];
     for &task in &tasks {
@@ -64,5 +199,5 @@ fn main() {
             task.paper_nca_accuracy()
         );
     }
-    println!("(full 18-task table: `cax-tables table2`)");
+    println!("(full 18-task table: `cax eval arc --task all`)");
 }

@@ -10,8 +10,9 @@
 //!   cache-tiled f32 for the continuous/neural paths — parallelized
 //!   across batch elements with a scoped-thread [`workers::WorkerPool`].
 //! - [`NativeTrainBackend`] (always available): hand-rolled BPTT +
-//!   Adam train-step programs for the growing-NCA and MNIST-classifier
-//!   workloads (`native::nca_grad` / `native::opt` / `native::train`).
+//!   Adam train/eval programs for the growing-NCA, MNIST-classifier
+//!   and 1D-ARC workloads (`native::nca_grad` / `native::opt` /
+//!   `native::train`).
 //! - `PjrtBackend` (`pjrt` feature): wraps `runtime::Engine`,
 //!   executing AOT-lowered HLO artifacts through PJRT.
 //!
@@ -22,7 +23,8 @@
 //! - [`ProgramBackend`]: "execute a named, manifest-described program" —
 //!   the contract the trainer/evaluator/experiment layers dispatch
 //!   through; implemented by `Engine` when the `pjrt` feature is on and
-//!   by [`NativeTrainBackend`] everywhere.
+//!   by [`NativeTrainBackend`] everywhere. The named programs both
+//!   implementations serve are catalogued on the trait.
 //!
 //! See `rust/README.md` for the layer diagram and the backend feature
 //! matrix.
@@ -121,7 +123,9 @@ impl CaProgram {
 /// currency); backends are free to run any internal representation —
 /// the native backend packs discrete states 64 cells to a word and only
 /// converts at the boundary, so `rollout` is much cheaper than `steps`
-/// calls to `step`.
+/// calls to `step`. States are validated against the program
+/// ([`validate_state`]) before dispatch, so shape bugs surface as
+/// errors, not kernel panics.
 pub trait Backend {
     /// Short stable name (CLI surface, bench rows).
     fn name(&self) -> &'static str;
@@ -154,15 +158,53 @@ pub trait Backend {
 /// A backend that executes *named* programs described by an artifact
 /// [`Manifest`] — the contract the trainer, evaluators and experiment
 /// drivers dispatch through. `runtime::Engine` implements this when the
-/// `pjrt` feature is enabled.
+/// `pjrt` feature is enabled; [`NativeTrainBackend`] implements it on
+/// every build.
+///
+/// # Named program contract
+///
+/// Callers discover each program's geometry from
+/// [`manifest`](ProgramBackend::manifest) (batch shapes from the input
+/// specs, scenario metadata from `meta`) instead of hard-coding it, so
+/// the same coordinator code drives any implementation. Train-step
+/// programs share one calling convention, enforced by
+/// [`train_loop`](crate::coordinator::trainer::train_loop):
+///
+/// ```text
+/// inputs:  (params, m, v, step, <batch...>, seed)
+/// outputs: (params', m', v', loss, <extra...>)
+/// ```
+///
+/// The programs both backends serve today (shapes are the *default*
+/// specs; custom specs/artifacts re-shape them through the manifest):
+///
+/// | program | batch inputs | outputs beyond the contract |
+/// |---|---|---|
+/// | `growing_seed` | — | seed state `[H, W, C]` |
+/// | `growing_train_step` | `states [B,H,W,C]`, `target [H,W,4]` | evolved states `[B,H,W,C]` (pool write-back) |
+/// | `mnist_train_step` | `images [B,H,W]`, `labels [B,10]` | — |
+/// | `arc_train_step` | `inputs [B,W,10]`, `targets [B,W,10]` | — |
+/// | `arc_eval` | `(params, inputs [B,W,10])` only | logits `[B,W,10]` |
+/// | `arc_traj` | `(params, input [W,10])` only | logit frames `[T+1,W,10]` |
+///
+/// `arc_eval`/`arc_traj` are deterministic fixed-length rollouts, not
+/// train steps — they take no optimizer state and return no loss. The
+/// `pjrt` artifact set adds further scenarios (`diffusing_*`,
+/// `conditional_*`, `vae_*`, `autoenc3d_*`, `mnist_eval`, classic-CA
+/// rollouts) under the same discovery rules.
 pub trait ProgramBackend {
-    /// The manifest describing every program this backend can run.
+    /// The manifest describing every program this backend can run —
+    /// the introspection surface for batch shapes and metadata.
     fn manifest(&self) -> &Manifest;
 
     /// Execute a named program; returns one tensor per manifest output.
+    /// Unknown names and shape mismatches are errors, not panics.
     fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>>;
 
-    /// Load an initial-parameter blob as a rank-1 tensor.
+    /// Load an initial-parameter blob as a rank-1 tensor — the starting
+    /// point of [`TrainState`](crate::coordinator::trainer::TrainState).
+    /// Artifact backends read blob files; the native backend draws the
+    /// deterministic in-memory init.
     fn load_params(&self, blob: &str) -> Result<Tensor> {
         let data = self.manifest().load_blob(blob)?;
         let n = data.len();

@@ -4,11 +4,14 @@
 //! - [`eca`]: SWAR elementary-CA kernel.
 //! - [`life`]: SWAR Game-of-Life kernel (carry-save neighbour counts).
 //! - [`lenia`]: cache-tiled sparse-tap Lenia kernel.
-//! - [`nca`]: depthwise-conv + per-cell-MLP neural-CA forward kernel.
-//! - [`nca_grad`]: reverse-mode BPTT through the NCA cell (training).
+//! - [`nca`]: depthwise-conv + per-cell-MLP neural-CA forward kernel,
+//!   dimension-parametric over [`nca::Grid`] (2D torus, 1D ring).
+//! - [`nca_grad`]: reverse-mode BPTT through the NCA cell (training),
+//!   parametric over the same grid geometries.
 //! - [`opt`]: Adam, gradient clipping and the lr schedule.
-//! - [`train`]: [`train::NativeTrainBackend`] — the native train-step
-//!   programs behind the [`crate::backend::ProgramBackend`] contract.
+//! - [`train`]: [`train::NativeTrainBackend`] — the native train/eval
+//!   programs (growing, MNIST, 1D-ARC) behind the
+//!   [`crate::backend::ProgramBackend`] contract.
 //!
 //! [`NativeBackend`] packs/unpacks at the tensor boundary ONCE per
 //! rollout and parallelizes across batch elements with the scoped
@@ -52,6 +55,26 @@ pub fn wrap3(i: usize, n: usize) -> [usize; 3] {
 
 /// Pure-Rust multi-threaded backend. Always available; the default
 /// execution path of the hermetic build.
+///
+/// # Example
+///
+/// Run a rule-90 elementary CA for one step — no artifacts, no XLA:
+///
+/// ```
+/// use cax::automata::WolframRule;
+/// use cax::backend::{Backend, CaProgram, NativeBackend};
+/// use cax::Tensor;
+///
+/// let backend = NativeBackend::with_threads(1);
+/// let state = Tensor::new(
+///     vec![1, 8],
+///     vec![0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0],
+/// ).unwrap();
+/// let prog = CaProgram::Eca { rule: WolframRule::new(90) };
+/// let next = backend.rollout(&prog, &state, 1).unwrap();
+/// // Rule 90 XORs the neighbours: the single live cell splits in two.
+/// assert_eq!(next.data(), &[0.0, 0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0]);
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct NativeBackend {
     pool: WorkerPool,
@@ -164,8 +187,9 @@ impl Backend for NativeBackend {
 
     /// Hand-rolled BPTT + Adam on the host: the cell geometry is inferred
     /// from the call's own tensors, hyperparameters are the
-    /// [`train::NcaTrainSpec`] defaults. Construct a
-    /// [`train::NativeTrainBackend`] directly to control them.
+    /// [`train::NcaTrainSpec`] / [`train::ArcTrainSpec`] defaults.
+    /// Construct a [`train::NativeTrainBackend`] directly to control
+    /// them.
     fn train_step(&self, program: &str, inputs: &[Value])
         -> Result<Vec<Tensor>> {
         let tb = train::NativeTrainBackend::for_call(

@@ -1,13 +1,22 @@
-//! Native neural-CA forward cell: depthwise 3x3 perceive + per-cell MLP.
+//! Native neural-CA forward cell: depthwise perceive + per-cell MLP,
+//! parametric in the grid dimension.
 //!
 //! The standard NCA update (Mordvintsev et al. 2020, the cell every
-//! Table-1 neural row builds on): each channel is filtered with the
-//! identity, Sobel-x and Sobel-y kernels (depthwise — no cross-channel
-//! mixing in the conv), the 3C perception vector goes through a shared
-//! two-layer MLP per cell, and the result is added to the state. The
-//! kernel walks the grid row-by-row with precomputed wrapped row
-//! indices, so the three input rows a sweep touches stay in cache —
-//! the depthwise-conv/update analogue of the tiled Lenia path.
+//! Table-1 neural row builds on): each channel is filtered with a small
+//! bank of fixed depthwise kernels (no cross-channel mixing in the
+//! conv), the 3C perception vector goes through a shared two-layer MLP
+//! per cell, and the result is added to the state. The same cell runs
+//! on two geometries ([`Grid`]):
+//!
+//! - [`Grid::D2`]: identity + Sobel-x + Sobel-y over a wrapped 3x3
+//!   support — the growing/MNIST cell. The kernel walks the grid
+//!   row-by-row with precomputed wrapped row indices, so the three
+//!   input rows a sweep touches stay in cache — the
+//!   depthwise-conv/update analogue of the tiled Lenia path.
+//! - [`Grid::D1`]: identity + gradient + laplacian over a wrapped
+//!   3-tap support — the 1D-ARC cell (§5.3). Three features per
+//!   channel in both cases, so the `[3C, hidden]` weight layout (and
+//!   every checkpoint/optimizer shape) is dimension-independent.
 
 use super::wrap3;
 use crate::util::rng::Rng;
@@ -19,6 +28,37 @@ pub(crate) const SOBEL_X: [[f32; 3]; 3] = [
     [-0.25, 0.0, 0.25],
     [-0.125, 0.0, 0.125],
 ];
+
+/// 1D central-difference gradient `[left, center, right]`, normalized
+/// like the Sobel bank (|taps| sum to 1). Shared with the transposed
+/// scatter in [`super::nca_grad`].
+pub(crate) const GRAD_1D: [f32; 3] = [-0.5, 0.0, 0.5];
+
+/// 1D laplacian `[left, center, right]`, same normalization.
+pub(crate) const LAP_1D: [f32; 3] = [0.25, -0.5, 0.25];
+
+/// Periodic grid geometry of a native NCA board. The cell math is
+/// parametric in this: [`NcaModel::step_frozen_on`] and the BPTT sweep
+/// in [`super::nca_grad`] dispatch the perceive stencil (and its
+/// transpose) on the variant, everything else — MLP, residual, frozen
+/// channels, parameter layout — is shared.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Grid {
+    /// One periodic row of `w` cells; state layout `[W, C]`.
+    D1 { w: usize },
+    /// An `h` x `w` torus; state layout `[H, W, C]`.
+    D2 { h: usize, w: usize },
+}
+
+impl Grid {
+    /// Number of cells (the state holds `cells() * channels` floats).
+    pub fn cells(&self) -> usize {
+        match *self {
+            Grid::D1 { w } => w,
+            Grid::D2 { h, w } => h * w,
+        }
+    }
+}
 
 /// Weights of a native NCA cell.
 #[derive(Clone, Debug)]
@@ -99,7 +139,8 @@ impl NcaModel {
 
     /// One forward update with the first `frozen` channels pinned: their
     /// residual delta is zeroed, so they pass through unchanged (the
-    /// self-classifying-MNIST input channel). They still feed perception.
+    /// self-classifying-MNIST input channel, the 1D-ARC one-hot task
+    /// encoding). They still feed perception.
     pub fn step_frozen(&self, state: &[f32], next: &mut [f32], h: usize,
                        w: usize, frozen: usize) {
         let c = self.channels;
@@ -114,28 +155,67 @@ impl NcaModel {
             for x in 0..w {
                 let cols = wrap3(x, w);
                 perceive_cell(state, w, c, &rows, &cols, &mut perception);
-
-                // Per-cell MLP: relu(p . W1 + b1) . W2, residual add.
-                for (j, slot) in hidden.iter_mut().enumerate() {
-                    let mut acc = self.b1[j];
-                    for (k, &p) in perception.iter().enumerate() {
-                        acc += p * self.w1[k * self.hidden + j];
-                    }
-                    *slot = acc.max(0.0);
-                }
-                for ch in 0..c {
-                    let idx = (y * w + x) * c + ch;
-                    if ch < frozen {
-                        next[idx] = state[idx];
-                        continue;
-                    }
-                    let mut delta = 0.0f32;
-                    for (j, &hv) in hidden.iter().enumerate() {
-                        delta += hv * self.w2[j * c + ch];
-                    }
-                    next[idx] = state[idx] + self.dt * delta;
-                }
+                self.cell_update(state, next, (y * w + x) * c, &perception,
+                                 &mut hidden, frozen);
             }
+        }
+    }
+
+    /// One forward update of a `[W, C]` row with the first `frozen`
+    /// channels pinned — the 1D variant of [`NcaModel::step_frozen`]
+    /// (identity + gradient + laplacian perceive, same MLP).
+    pub fn step_frozen_1d(&self, state: &[f32], next: &mut [f32], w: usize,
+                          frozen: usize) {
+        let c = self.channels;
+        debug_assert!(frozen <= c);
+        debug_assert_eq!(state.len(), w * c);
+        debug_assert_eq!(next.len(), state.len());
+        let mut perception = vec![0.0f32; 3 * c];
+        let mut hidden = vec![0.0f32; self.hidden];
+
+        for x in 0..w {
+            let cols = wrap3(x, w);
+            perceive_cell_1d(state, c, &cols, &mut perception);
+            self.cell_update(state, next, x * c, &perception, &mut hidden,
+                             frozen);
+        }
+    }
+
+    /// One frozen-aware forward update on either geometry.
+    pub fn step_frozen_on(&self, grid: Grid, state: &[f32],
+                          next: &mut [f32], frozen: usize) {
+        match grid {
+            Grid::D1 { w } => self.step_frozen_1d(state, next, w, frozen),
+            Grid::D2 { h, w } => self.step_frozen(state, next, h, w, frozen),
+        }
+    }
+
+    /// The shared per-cell tail of every forward step: MLP
+    /// `relu(p . W1 + b1) . W2`, residual add, frozen pass-through.
+    /// `base` is the cell's channel-0 offset; `hidden` is a scratch
+    /// buffer of `self.hidden` floats.
+    #[inline]
+    fn cell_update(&self, state: &[f32], next: &mut [f32], base: usize,
+                   perception: &[f32], hidden: &mut [f32], frozen: usize) {
+        let c = self.channels;
+        for (j, slot) in hidden.iter_mut().enumerate() {
+            let mut acc = self.b1[j];
+            for (k, &p) in perception.iter().enumerate() {
+                acc += p * self.w1[k * self.hidden + j];
+            }
+            *slot = acc.max(0.0);
+        }
+        for ch in 0..c {
+            let idx = base + ch;
+            if ch < frozen {
+                next[idx] = state[idx];
+                continue;
+            }
+            let mut delta = 0.0f32;
+            for (j, &hv) in hidden.iter().enumerate() {
+                delta += hv * self.w2[j * c + ch];
+            }
+            next[idx] = state[idx] + self.dt * delta;
         }
     }
 
@@ -173,6 +253,28 @@ pub(crate) fn perceive_cell(state: &[f32], w: usize, c: usize,
         out[ch * 3] = state[(y * w + x) * c + ch];
         out[ch * 3 + 1] = gx;
         out[ch * 3 + 2] = gy;
+    }
+}
+
+/// Depthwise perceive at one 1D cell: identity, gradient, laplacian per
+/// channel, written into `out` as `[id, grad, lap]` triples. Like
+/// [`perceive_cell`], this is the single copy of the 1D perceive
+/// arithmetic — forward kernel and backward recompute share it.
+#[inline]
+pub(crate) fn perceive_cell_1d(state: &[f32], c: usize, cols: &[usize; 3],
+                               out: &mut [f32]) {
+    let x = cols[1];
+    for ch in 0..c {
+        let mut g = 0.0f32;
+        let mut l = 0.0f32;
+        for (k, &sx) in cols.iter().enumerate() {
+            let v = state[sx * c + ch];
+            g += GRAD_1D[k] * v;
+            l += LAP_1D[k] * v;
+        }
+        out[ch * 3] = state[x * c + ch];
+        out[ch * 3 + 1] = g;
+        out[ch * 3 + 2] = l;
     }
 }
 
@@ -247,6 +349,106 @@ mod tests {
                         "cell {cell} ch {ch}: {v} vs {v0}");
             }
         }
+    }
+
+    #[test]
+    fn grid_cells_and_dispatch() {
+        assert_eq!(Grid::D1 { w: 9 }.cells(), 9);
+        assert_eq!(Grid::D2 { h: 4, w: 5 }.cells(), 20);
+        // step_frozen_on routes to the matching kernel.
+        let m = model();
+        let mut rng = Rng::new(6);
+        let row = rng.vec_f32(7 * m.channels);
+        let mut a = vec![0.0f32; row.len()];
+        let mut b = vec![0.0f32; row.len()];
+        m.step_frozen_1d(&row, &mut a, 7, 1);
+        m.step_frozen_on(Grid::D1 { w: 7 }, &row, &mut b, 1);
+        assert_eq!(a, b);
+        let board = rng.vec_f32(4 * 5 * m.channels);
+        let mut c2 = vec![0.0f32; board.len()];
+        let mut d2 = vec![0.0f32; board.len()];
+        m.step_frozen(&board, &mut c2, 4, 5, 2);
+        m.step_frozen_on(Grid::D2 { h: 4, w: 5 }, &board, &mut d2, 2);
+        assert_eq!(c2, d2);
+    }
+
+    #[test]
+    fn frozen_channels_pass_through_in_1d_too() {
+        let m = model();
+        let w = 9;
+        let mut rng = Rng::new(13);
+        let row = rng.vec_f32(w * m.channels);
+        let mut next = vec![0.0f32; row.len()];
+        m.step_frozen_1d(&row, &mut next, w, 2);
+        for cell in 0..w {
+            for ch in 0..2 {
+                let idx = cell * m.channels + ch;
+                assert_eq!(next[idx], row[idx], "frozen ch {ch} moved");
+            }
+        }
+        assert_ne!(row, next, "free channels should still update");
+    }
+
+    #[test]
+    fn uniform_row_stays_uniform() {
+        // Gradient and laplacian vanish on a constant row, so every
+        // cell computes the identical update.
+        let m = model();
+        let w = 8;
+        let row = vec![0.4f32; w * m.channels];
+        let mut next = vec![0.0f32; row.len()];
+        m.step_frozen_1d(&row, &mut next, w, 0);
+        for ch in 0..m.channels {
+            let v0 = next[ch];
+            for cell in 0..w {
+                let v = next[cell * m.channels + ch];
+                assert!((v - v0).abs() < 1e-6, "cell {cell} ch {ch}");
+            }
+        }
+    }
+
+    #[test]
+    fn translation_equivariant_on_ring() {
+        let m = model();
+        let w = 11;
+        let c = m.channels;
+        let mut rng = Rng::new(21);
+        let row = rng.vec_f32(w * c);
+        let mut shifted = vec![0.0f32; row.len()];
+        for x in 0..w {
+            for ch in 0..c {
+                shifted[((x + 4) % w) * c + ch] = row[x * c + ch];
+            }
+        }
+        let mut out_a = vec![0.0f32; row.len()];
+        let mut out_b = vec![0.0f32; row.len()];
+        m.step_frozen_1d(&row, &mut out_a, w, 0);
+        m.step_frozen_1d(&shifted, &mut out_b, w, 0);
+        for x in 0..w {
+            for ch in 0..c {
+                let a = out_a[x * c + ch];
+                let b = out_b[((x + 4) % w) * c + ch];
+                assert!((a - b).abs() < 1e-5,
+                        "1D equivariance broke at ({x},{ch})");
+            }
+        }
+    }
+
+    #[test]
+    fn perceive_1d_recovers_known_stencils() {
+        // One channel, an impulse at x=2 on a 5-cell ring: id/grad/lap
+        // at each cell are the stencil taps themselves.
+        let state = [0.0f32, 0.0, 1.0, 0.0, 0.0];
+        let mut out = [0.0f32; 3];
+        // At x=1 the impulse is the right neighbour.
+        perceive_cell_1d(&state, 1, &wrap3(1, 5), &mut out);
+        assert_eq!(out, [0.0, 0.5, 0.25]);
+        // At x=2 it is the centre.
+        perceive_cell_1d(&state, 1, &wrap3(2, 5), &mut out);
+        assert_eq!(out, [1.0, 0.0, -0.5]);
+        // At x=3 it is the left neighbour.
+        perceive_cell_1d(&state, 1, &wrap3(3, 5), &mut out);
+        assert_eq!(out, [0.0, -0.5, 0.25]);
     }
 
     #[test]

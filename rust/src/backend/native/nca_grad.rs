@@ -1,30 +1,39 @@
-//! Reverse-mode BPTT through the native NCA cell.
+//! Reverse-mode BPTT through the native NCA cell, parametric in the
+//! grid dimension.
 //!
-//! The forward cell ([`NcaModel::step_frozen`]) is `s' = s + dt *
-//! relu(P(s) W1 + b1) W2`, where `P` is the linear depthwise perceive
-//! (identity, Sobel-x, Sobel-y). This module unrolls it:
-//! [`rollout_tape`] records every intermediate state, [`backward`]
+//! The forward cell ([`NcaModel::step_frozen_on`]) is `s' = s + dt *
+//! relu(P(s) W1 + b1) W2`, where `P` is the linear depthwise perceive —
+//! identity + Sobel-x + Sobel-y on a [`Grid::D2`] torus, identity +
+//! gradient + laplacian on a [`Grid::D1`] ring. This module unrolls it:
+//! [`rollout_tape_on`] records every intermediate state, [`backward_on`]
 //! walks the tape in reverse and accumulates exact parameter gradients
 //! — residual pass-through, the ReLU mask, and the transposed perceive
-//! stencil (a scatter with the same wrapped 3x3 support as the forward
-//! gather, sharing the forward's `perceive_cell` for the recompute).
+//! stencil (a scatter with the same wrapped support as the forward
+//! gather, sharing the forward's `perceive_cell`/`perceive_cell_1d` for
+//! the recompute). Only the perceive gather and its transposed scatter
+//! depend on the dimension; the per-cell MLP backward
+//! (`mlp_backward_cell`) is one shared implementation.
 //!
 //! The hidden activations are *recomputed* from the cached states during
 //! the backward sweep rather than stored: the tape then costs `(T+1) *
-//! H * W * C` floats instead of an extra `T * H * W * hidden`, and the
+//! cells * C` floats instead of an extra `T * cells * hidden`, and the
 //! recompute reuses the cache-resident input rows the scatter touches
 //! anyway.
 //!
 //! # Gradient-check invariant
 //!
-//! `tests/native_train_props.rs` verifies the gradients produced here
-//! against central finite differences on small boards (relative error
-//! `< 1e-3` per parameter group `w1`, `b1`, `w2`, for both the free and
-//! the frozen-channel cell). Change the math here only with that test
-//! in hand. All accumulation is sequential per board in a fixed order,
-//! so results are bit-identical for any worker-thread count.
+//! `tests/native_train_props.rs` (2D) and `tests/native_arc_props.rs`
+//! (1D) verify the gradients produced here against central finite
+//! differences on small boards (relative error `< 1e-3` per parameter
+//! group `w1`, `b1`, `w2`, for both the free and the frozen-channel
+//! cell). Change the math here only with those tests in hand. All
+//! accumulation is sequential per board in a fixed order, so results
+//! are bit-identical for any worker-thread count.
 
-use super::nca::{perceive_cell, NcaModel, SOBEL_X};
+use super::nca::{
+    perceive_cell, perceive_cell_1d, Grid, NcaModel, GRAD_1D, LAP_1D,
+    SOBEL_X,
+};
 use super::wrap3;
 
 /// Gradients of the trainable parameter groups of one [`NcaModel`].
@@ -74,41 +83,54 @@ impl NcaGrads {
     }
 }
 
-/// Roll out `steps` frozen-aware updates ([`NcaModel::step_frozen`]),
-/// recording every state: `tape[0]` is (a copy of) `board`,
-/// `tape[steps]` the final state.
+/// Roll out `steps` frozen-aware 2D updates, recording every state —
+/// see [`rollout_tape_on`].
 pub fn rollout_tape(model: &NcaModel, board: &[f32], h: usize, w: usize,
                     steps: usize, frozen: usize) -> Vec<Vec<f32>> {
-    debug_assert_eq!(board.len(), h * w * model.channels);
+    rollout_tape_on(model, board, Grid::D2 { h, w }, steps, frozen)
+}
+
+/// Roll out `steps` frozen-aware updates
+/// ([`NcaModel::step_frozen_on`]) on either geometry, recording every
+/// state: `tape[0]` is (a copy of) `board`, `tape[steps]` the final
+/// state.
+pub fn rollout_tape_on(model: &NcaModel, board: &[f32], grid: Grid,
+                       steps: usize, frozen: usize) -> Vec<Vec<f32>> {
+    debug_assert_eq!(board.len(), grid.cells() * model.channels);
     let mut tape = Vec::with_capacity(steps + 1);
     tape.push(board.to_vec());
     for t in 0..steps {
         let mut next = vec![0.0f32; board.len()];
-        model.step_frozen(&tape[t], &mut next, h, w, frozen);
+        model.step_frozen_on(grid, &tape[t], &mut next, frozen);
         tape.push(next);
     }
     tape
 }
 
-/// Backprop `d_final = dL/d(state_T)` through a [`rollout_tape`] tape.
-/// Returns the parameter gradients and `dL/d(state_0)`.
-///
-/// `frozen` must match the forward call. Frozen channels contribute no
-/// delta, so their only backward paths are the residual identity and
-/// the perceive stencil reading them.
+/// Backprop through a 2D [`rollout_tape`] tape — see [`backward_on`].
 pub fn backward(model: &NcaModel, tape: &[Vec<f32>], h: usize, w: usize,
                 frozen: usize, d_final: &[f32]) -> (NcaGrads, Vec<f32>) {
+    backward_on(model, tape, Grid::D2 { h, w }, frozen, d_final)
+}
+
+/// Backprop `d_final = dL/d(state_T)` through a [`rollout_tape_on`]
+/// tape. Returns the parameter gradients and `dL/d(state_0)`.
+///
+/// `grid` and `frozen` must match the forward call. Frozen channels
+/// contribute no delta, so their only backward paths are the residual
+/// identity and the perceive stencil reading them.
+pub fn backward_on(model: &NcaModel, tape: &[Vec<f32>], grid: Grid,
+                   frozen: usize, d_final: &[f32]) -> (NcaGrads, Vec<f32>) {
     let c = model.channels;
-    let hid = model.hidden;
     debug_assert!(!tape.is_empty());
-    debug_assert_eq!(d_final.len(), h * w * c);
+    debug_assert_eq!(d_final.len(), grid.cells() * c);
     debug_assert!(frozen <= c);
 
     let mut grads = NcaGrads::zeros(model);
     let mut g = d_final.to_vec();
     let mut perception = vec![0.0f32; 3 * c];
-    let mut pre = vec![0.0f32; hid];
-    let mut d_hidden = vec![0.0f32; hid];
+    let mut pre = vec![0.0f32; model.hidden];
+    let mut d_hidden = vec![0.0f32; model.hidden];
     let mut d_perc = vec![0.0f32; 3 * c];
 
     // tape = [s_0, .., s_T]; step t maps s_t -> s_{t+1}.
@@ -118,75 +140,66 @@ pub fn backward(model: &NcaModel, tape: &[Vec<f32>], h: usize, w: usize,
         // the perceive scatter below adds the stencil contributions.
         let mut g_prev = g.clone();
 
-        for y in 0..h {
-            let rows = wrap3(y, h);
-            for x in 0..w {
-                let cols = wrap3(x, w);
-                let cell = (y * w + x) * c;
-
-                // d(delta): dt * dL/ds_{t+1}, zero on frozen channels.
-                // Skip the cell early if nothing flows through its MLP.
-                let mut any = false;
-                for ch in frozen..c {
-                    if g[cell + ch] != 0.0 {
-                        any = true;
-                        break;
+        match grid {
+            Grid::D2 { h, w } => {
+                for y in 0..h {
+                    let rows = wrap3(y, h);
+                    for x in 0..w {
+                        let cols = wrap3(x, w);
+                        let cell = (y * w + x) * c;
+                        // Skip the cell early if nothing flows through
+                        // its MLP.
+                        if !any_grad(&g, cell, frozen, c) {
+                            continue;
+                        }
+                        perceive_cell(state, w, c, &rows, &cols,
+                                      &mut perception);
+                        mlp_backward_cell(model, &perception, &g, cell,
+                                          frozen, &mut grads, &mut pre,
+                                          &mut d_hidden, &mut d_perc);
+                        // Transposed perceive: scatter dL/d(perception)
+                        // back to the wrapped 3x3 input support.
+                        for ch in 0..c {
+                            g_prev[cell + ch] += d_perc[ch * 3];
+                            let dgx = d_perc[ch * 3 + 1];
+                            let dgy = d_perc[ch * 3 + 2];
+                            if dgx == 0.0 && dgy == 0.0 {
+                                continue;
+                            }
+                            for (ky, &sy) in rows.iter().enumerate() {
+                                for (kx, &sx) in cols.iter().enumerate() {
+                                    g_prev[(sy * w + sx) * c + ch] +=
+                                        SOBEL_X[ky][kx] * dgx
+                                        + SOBEL_X[kx][ky] * dgy;
+                                }
+                            }
+                        }
                     }
                 }
-                if !any {
-                    continue;
-                }
-
-                // Recompute perception and pre-activations.
-                perceive_cell(state, w, c, &rows, &cols, &mut perception);
-                for (j, slot) in pre.iter_mut().enumerate() {
-                    let mut acc = model.b1[j];
-                    for (k, &p) in perception.iter().enumerate() {
-                        acc += p * model.w1[k * hid + j];
-                    }
-                    *slot = acc;
-                }
-
-                // Through w2: grads and dL/d(hidden).
-                d_hidden.iter_mut().for_each(|v| *v = 0.0);
-                for ch in frozen..c {
-                    let dd = model.dt * g[cell + ch];
-                    if dd == 0.0 {
+            }
+            Grid::D1 { w } => {
+                for x in 0..w {
+                    let cols = wrap3(x, w);
+                    let cell = x * c;
+                    if !any_grad(&g, cell, frozen, c) {
                         continue;
                     }
-                    for j in 0..hid {
-                        grads.w2[j * c + ch] += pre[j].max(0.0) * dd;
-                        d_hidden[j] += model.w2[j * c + ch] * dd;
-                    }
-                }
-
-                // Through the ReLU and w1/b1: grads and dL/d(perception).
-                d_perc.iter_mut().for_each(|v| *v = 0.0);
-                for j in 0..hid {
-                    if pre[j] <= 0.0 || d_hidden[j] == 0.0 {
-                        continue;
-                    }
-                    let dp = d_hidden[j];
-                    grads.b1[j] += dp;
-                    for k in 0..3 * c {
-                        grads.w1[k * hid + j] += perception[k] * dp;
-                        d_perc[k] += model.w1[k * hid + j] * dp;
-                    }
-                }
-
-                // Transposed perceive: scatter dL/d(perception) back to
-                // the wrapped 3x3 input support.
-                for ch in 0..c {
-                    g_prev[cell + ch] += d_perc[ch * 3];
-                    let dgx = d_perc[ch * 3 + 1];
-                    let dgy = d_perc[ch * 3 + 2];
-                    if dgx == 0.0 && dgy == 0.0 {
-                        continue;
-                    }
-                    for (ky, &sy) in rows.iter().enumerate() {
-                        for (kx, &sx) in cols.iter().enumerate() {
-                            g_prev[(sy * w + sx) * c + ch] +=
-                                SOBEL_X[ky][kx] * dgx + SOBEL_X[kx][ky] * dgy;
+                    perceive_cell_1d(state, c, &cols, &mut perception);
+                    mlp_backward_cell(model, &perception, &g, cell, frozen,
+                                      &mut grads, &mut pre, &mut d_hidden,
+                                      &mut d_perc);
+                    // Transposed 1D perceive: scatter back to the
+                    // wrapped 3-tap support.
+                    for ch in 0..c {
+                        g_prev[cell + ch] += d_perc[ch * 3];
+                        let dg = d_perc[ch * 3 + 1];
+                        let dl = d_perc[ch * 3 + 2];
+                        if dg == 0.0 && dl == 0.0 {
+                            continue;
+                        }
+                        for (k, &sx) in cols.iter().enumerate() {
+                            g_prev[sx * c + ch] +=
+                                GRAD_1D[k] * dg + LAP_1D[k] * dl;
                         }
                     }
                 }
@@ -195,6 +208,60 @@ pub fn backward(model: &NcaModel, tape: &[Vec<f32>], h: usize, w: usize,
         g = g_prev;
     }
     (grads, g)
+}
+
+/// Does any non-frozen channel of this cell carry upstream gradient?
+#[inline]
+fn any_grad(g: &[f32], cell: usize, frozen: usize, c: usize) -> bool {
+    g[cell + frozen..cell + c].iter().any(|&v| v != 0.0)
+}
+
+/// The dimension-independent MLP backward at one cell: recompute the
+/// pre-activations from `perception`, accumulate the `w2`/`b1`/`w1`
+/// gradients from the upstream `dL/ds_{t+1}` slice at `cell`, and leave
+/// `dL/d(perception)` in `d_perc` for the caller's transposed scatter.
+/// `d(delta)` is `dt * dL/ds_{t+1}`, zero on frozen channels.
+#[inline]
+fn mlp_backward_cell(model: &NcaModel, perception: &[f32], g: &[f32],
+                     cell: usize, frozen: usize, grads: &mut NcaGrads,
+                     pre: &mut [f32], d_hidden: &mut [f32],
+                     d_perc: &mut [f32]) {
+    let c = model.channels;
+    let hid = model.hidden;
+    for (j, slot) in pre.iter_mut().enumerate() {
+        let mut acc = model.b1[j];
+        for (k, &p) in perception.iter().enumerate() {
+            acc += p * model.w1[k * hid + j];
+        }
+        *slot = acc;
+    }
+
+    // Through w2: grads and dL/d(hidden).
+    d_hidden.iter_mut().for_each(|v| *v = 0.0);
+    for ch in frozen..c {
+        let dd = model.dt * g[cell + ch];
+        if dd == 0.0 {
+            continue;
+        }
+        for j in 0..hid {
+            grads.w2[j * c + ch] += pre[j].max(0.0) * dd;
+            d_hidden[j] += model.w2[j * c + ch] * dd;
+        }
+    }
+
+    // Through the ReLU and w1/b1: grads and dL/d(perception).
+    d_perc.iter_mut().for_each(|v| *v = 0.0);
+    for j in 0..hid {
+        if pre[j] <= 0.0 || d_hidden[j] == 0.0 {
+            continue;
+        }
+        let dp = d_hidden[j];
+        grads.b1[j] += dp;
+        for k in 0..3 * c {
+            grads.w1[k * hid + j] += perception[k] * dp;
+            d_perc[k] += model.w1[k * hid + j] * dp;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -222,6 +289,25 @@ mod tests {
     }
 
     #[test]
+    fn tape_endpoints_match_rollout_1d() {
+        let m = model();
+        let (w, steps) = (9, 4);
+        let grid = Grid::D1 { w };
+        let mut rng = Rng::new(15);
+        let board = rng.vec_f32(w * m.channels);
+        let tape = rollout_tape_on(&m, &board, grid, steps, 1);
+        assert_eq!(tape.len(), steps + 1);
+        assert_eq!(tape[0], board);
+        let mut rolled = board.clone();
+        let mut scratch = vec![0.0f32; board.len()];
+        for _ in 0..steps {
+            m.step_frozen_1d(&rolled, &mut scratch, w, 1);
+            rolled.copy_from_slice(&scratch);
+        }
+        assert_eq!(tape[steps], rolled, "1D tape end != plain rollout");
+    }
+
+    #[test]
     fn zero_upstream_gradient_means_zero_grads() {
         let m = model();
         let (h, w) = (4, 4);
@@ -230,6 +316,21 @@ mod tests {
         let tape = rollout_tape(&m, &board, h, w, 3, 0);
         let d_final = vec![0.0f32; board.len()];
         let (grads, d0) = backward(&m, &tape, h, w, 0, &d_final);
+        assert!(grads.w1.iter().all(|&v| v == 0.0));
+        assert!(grads.b1.iter().all(|&v| v == 0.0));
+        assert!(grads.w2.iter().all(|&v| v == 0.0));
+        assert!(d0.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn zero_upstream_gradient_means_zero_grads_1d() {
+        let m = model();
+        let grid = Grid::D1 { w: 8 };
+        let mut rng = Rng::new(17);
+        let board = rng.vec_f32(8 * m.channels);
+        let tape = rollout_tape_on(&m, &board, grid, 3, 0);
+        let d_final = vec![0.0f32; board.len()];
+        let (grads, d0) = backward_on(&m, &tape, grid, 0, &d_final);
         assert!(grads.w1.iter().all(|&v| v == 0.0));
         assert!(grads.b1.iter().all(|&v| v == 0.0));
         assert!(grads.w2.iter().all(|&v| v == 0.0));

@@ -2,10 +2,10 @@
 //!
 //! [`NativeTrainBackend`] implements [`ProgramBackend`] — the same
 //! contract the `pjrt` engine offers — for a small family of *native*
-//! programs, so `coordinator::trainer`, `coordinator::experiments` and
-//! the sample pool drive growing-NCA and self-classifying-MNIST
-//! training on the default feature set with zero code changes above the
-//! trait:
+//! programs, so `coordinator::trainer`, `coordinator::experiments`,
+//! the evaluators and the sample pool drive growing-NCA,
+//! self-classifying-MNIST and 1D-ARC training on the default feature
+//! set with zero code changes above the trait:
 //!
 //! - `growing_seed`: the single-seed-cell initial state `[H, W, C]`.
 //! - `growing_train_step`: `(params, m, v, step, states[B,H,W,C],
@@ -18,22 +18,33 @@
 //!   labels[B,10], seed) -> (params', m', v', loss)` — digit pinned in
 //!   channel 0 (frozen), per-cell logits in channels 1..=10, MSE to the
 //!   one-hot label over ink cells.
+//! - `arc_train_step`: `(params, m, v, step, inputs[B,W,10],
+//!   targets[B,W,10], seed) -> (params', m', v', loss)` — the §5.3
+//!   1D-ARC cell on a [`Grid::D1`] ring: the one-hot task input pinned
+//!   in the first 10 (frozen) channels, per-cell color logits in the
+//!   next 10, MSE between the final logits and the one-hot target.
+//! - `arc_eval`: `(params, inputs[B,W,10]) -> logits[B,W,10]` — a
+//!   fixed-length deterministic rollout for the exact-match evaluator.
+//! - `arc_traj`: `(params, input[W,10]) -> logits[T+1,W,10]` — every
+//!   intermediate logit frame of one rollout (the Fig. 8 space-time
+//!   diagram).
 //!
 //! Batch elements are independent, so the BPTT runs one scoped worker
 //! per sample; the gradient/loss reduction and the optimizer update are
 //! sequential in fixed order, which makes a train step bit-identical
 //! for any worker-thread count (asserted in
-//! `tests/native_train_props.rs`).
+//! `tests/native_train_props.rs` and `tests/native_arc_props.rs`).
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Result};
 
-use super::nca::NcaModel;
+use super::nca::{Grid, NcaModel};
 use super::nca_grad::{self, NcaGrads};
 use super::opt::{clip_global_norm, Adam, LrSchedule};
 use crate::backend::workers::WorkerPool;
 use crate::backend::{ProgramBackend, Value};
+use crate::datasets::arc1d::NUM_COLORS;
 use crate::runtime::manifest::{
     ArtifactInfo, BlobInfo, Dtype, Manifest, Spec,
 };
@@ -118,12 +129,92 @@ impl NcaTrainSpec {
     }
 }
 
+/// Hyperparameters of the natively-trained 1D-ARC NCA (§5.3).
+///
+/// The cell state is `[W, C]` with `C = 2 * NUM_COLORS + extra`: the
+/// one-hot task input pinned in channels `0..10` (frozen — the cell
+/// reads the task at every step but cannot overwrite it), per-cell
+/// color logits in channels `10..20` (zero at t=0, decoded by argmax),
+/// and `extra` free hidden channels for intermediate computation.
+#[derive(Clone, Debug)]
+pub struct ArcTrainSpec {
+    /// Row width (the generators need >= 16).
+    pub width: usize,
+    /// Free hidden channels beyond the 10 input + 10 logit channels.
+    pub extra: usize,
+    /// Hidden width of the per-cell MLP.
+    pub hidden: usize,
+    pub batch: usize,
+    /// Training rollout length is drawn uniformly from `[rollout_min,
+    /// rollout_max]` per train step, deterministically from the step's
+    /// seed input (the same unroll jitter as the 2D cells).
+    pub rollout_min: usize,
+    pub rollout_max: usize,
+    /// Fixed rollout length of `arc_eval` / `arc_traj` (deterministic
+    /// evaluation; keep it inside the training range).
+    pub eval_steps: usize,
+    pub lr: LrSchedule,
+    /// Global L2 gradient clip.
+    pub clip_norm: f32,
+    /// Seed of the initial parameter draw (`load_params`).
+    pub param_seed: u64,
+    /// Residual update scale of the cell.
+    pub dt: f32,
+}
+
+impl Default for ArcTrainSpec {
+    /// Defaults sized for host training of all 18 Table-2 tasks
+    /// (prototype-validated: Move-1 reaches 100% exact match within
+    /// 200 train steps, Denoise ~90%).
+    fn default() -> ArcTrainSpec {
+        ArcTrainSpec {
+            width: 32,
+            extra: 4,
+            hidden: 48,
+            batch: 8,
+            rollout_min: 12,
+            rollout_max: 24,
+            eval_steps: 18,
+            lr: LrSchedule::default(),
+            clip_norm: 1.0,
+            param_seed: 0xA2C1D,
+            dt: 0.5,
+        }
+    }
+}
+
+impl ArcTrainSpec {
+    /// Total state channels: 10 frozen input + 10 logits + `extra`.
+    pub fn channels(&self) -> usize {
+        2 * NUM_COLORS + self.extra
+    }
+
+    /// Flat parameter-vector length of this cell geometry.
+    pub fn param_count(&self) -> usize {
+        NcaModel::param_count(self.channels(), self.hidden)
+    }
+
+    fn validate(&self) {
+        assert!(self.width >= 16,
+                "arc spec: 1D-ARC rows need width >= 16, got {}",
+                self.width);
+        assert!(self.hidden > 0 && self.batch > 0, "arc spec: empty cell");
+        assert!(self.rollout_min >= 1 && self.rollout_min <= self.rollout_max,
+                "arc spec: bad rollout range [{}, {}]",
+                self.rollout_min, self.rollout_max);
+        assert!(self.eval_steps >= 1, "arc spec: eval_steps must be >= 1");
+    }
+}
+
 /// Channels below this index are pinned in the MNIST cell (the digit
 /// input); logits live in `1..=10`.
 const MNIST_FROZEN: usize = 1;
 /// Ink threshold: cells whose input intensity exceeds this carry the
 /// classification loss.
 const MNIST_INK: f32 = 0.1;
+/// Channels below this index are pinned in the ARC cell (the one-hot
+/// task input); color logits live in `NUM_COLORS..2*NUM_COLORS`.
+const ARC_FROZEN: usize = NUM_COLORS;
 
 /// Pure-Rust training backend. Always available; see the module docs.
 #[derive(Clone, Debug)]
@@ -131,6 +222,7 @@ pub struct NativeTrainBackend {
     pool: WorkerPool,
     growing: NcaTrainSpec,
     mnist: NcaTrainSpec,
+    arc: ArcTrainSpec,
     manifest: Manifest,
 }
 
@@ -143,32 +235,49 @@ impl Default for NativeTrainBackend {
 impl NativeTrainBackend {
     /// Default specs, pool sized to the machine.
     pub fn new() -> NativeTrainBackend {
-        NativeTrainBackend::with_specs(
-            NcaTrainSpec::growing(),
-            NcaTrainSpec::mnist(),
-            WorkerPool::new().threads(),
-        )
+        NativeTrainBackend::with_threads(WorkerPool::new().threads())
     }
 
     /// Default specs with an explicit worker count (1 = sequential).
     pub fn with_threads(threads: usize) -> NativeTrainBackend {
-        NativeTrainBackend::with_specs(
+        NativeTrainBackend::with_all_specs(
             NcaTrainSpec::growing(),
             NcaTrainSpec::mnist(),
+            ArcTrainSpec::default(),
             threads,
         )
     }
 
-    /// Custom scenario hyperparameters (tests, benches, experiments).
+    /// Custom 2D scenario hyperparameters (tests, benches,
+    /// experiments); the ARC spec stays at its defaults.
     pub fn with_specs(growing: NcaTrainSpec, mnist: NcaTrainSpec,
                       threads: usize) -> NativeTrainBackend {
+        NativeTrainBackend::with_all_specs(growing, mnist,
+                                           ArcTrainSpec::default(), threads)
+    }
+
+    /// Custom 1D-ARC hyperparameters; the 2D specs stay at their
+    /// defaults.
+    pub fn with_arc_spec(arc: ArcTrainSpec, threads: usize)
+                         -> NativeTrainBackend {
+        NativeTrainBackend::with_all_specs(NcaTrainSpec::growing(),
+                                           NcaTrainSpec::mnist(), arc,
+                                           threads)
+    }
+
+    /// Every scenario's hyperparameters, explicitly.
+    pub fn with_all_specs(growing: NcaTrainSpec, mnist: NcaTrainSpec,
+                          arc: ArcTrainSpec, threads: usize)
+                          -> NativeTrainBackend {
         growing.validate("growing spec", 4);
         mnist.validate("mnist spec", 11);
-        let manifest = build_manifest(&growing, &mnist);
+        arc.validate();
+        let manifest = build_manifest(&growing, &mnist, &arc);
         NativeTrainBackend {
             pool: WorkerPool::with_threads(threads),
             growing,
             mnist,
+            arc,
             manifest,
         }
     }
@@ -181,7 +290,37 @@ impl NativeTrainBackend {
                     -> Result<NativeTrainBackend> {
         let mut growing = NcaTrainSpec::growing();
         let mut mnist = NcaTrainSpec::mnist();
+        let mut arc = ArcTrainSpec::default();
         match program {
+            "arc_train_step" | "arc_eval" => {
+                let params = f32_arg(inputs, 0, "params")?;
+                let idx = if program == "arc_train_step" { 4 } else { 1 };
+                let ins = f32_arg(inputs, idx, "inputs")?;
+                ensure!(ins.shape().len() == 3
+                        && ins.shape()[2] == NUM_COLORS,
+                        "{program}: inputs must be [B, W, {NUM_COLORS}], \
+                         got {:?}", ins.shape());
+                let s = ins.shape();
+                ensure!(s[0] > 0 && s[1] >= 16,
+                        "{program}: inputs shape {s:?} needs a non-empty \
+                         batch and width >= 16");
+                arc.batch = s[0];
+                arc.width = s[1];
+                arc.hidden =
+                    infer_hidden(params.numel(), arc.channels())?;
+            }
+            "arc_traj" => {
+                let params = f32_arg(inputs, 0, "params")?;
+                let input = f32_arg(inputs, 1, "input")?;
+                ensure!(input.shape().len() == 2
+                        && input.shape()[1] == NUM_COLORS
+                        && input.shape()[0] >= 16,
+                        "arc_traj: input must be [W >= 16, {NUM_COLORS}], \
+                         got {:?}", input.shape());
+                arc.width = input.shape()[0];
+                arc.hidden =
+                    infer_hidden(params.numel(), arc.channels())?;
+            }
             "growing_train_step" => {
                 let params = f32_arg(inputs, 0, "params")?;
                 let states = f32_arg(inputs, 4, "states")?;
@@ -216,10 +355,11 @@ impl NativeTrainBackend {
             "growing_seed" => {}
             other => bail!(
                 "the native backend trains these programs: growing_seed, \
-                 growing_train_step, mnist_train_step — not {other:?}"
+                 growing_train_step, mnist_train_step, arc_train_step, \
+                 arc_eval, arc_traj — not {other:?}"
             ),
         }
-        Ok(NativeTrainBackend::with_specs(growing, mnist, threads))
+        Ok(NativeTrainBackend::with_all_specs(growing, mnist, arc, threads))
     }
 
     pub fn threads(&self) -> usize {
@@ -232,6 +372,10 @@ impl NativeTrainBackend {
 
     pub fn mnist_spec(&self) -> &NcaTrainSpec {
         &self.mnist
+    }
+
+    pub fn arc_spec(&self) -> &ArcTrainSpec {
+        &self.arc
     }
 
     /// The single-seed-cell growing start state: alpha + hidden channels
@@ -272,7 +416,8 @@ impl NativeTrainBackend {
 
         let model = NcaModel::from_flat(c, spec.hidden, spec.dt,
                                         params.data());
-        let steps = rollout_steps(spec, step, seed);
+        let steps =
+            rollout_steps(spec.rollout_min, spec.rollout_max, step, seed);
         let cell = h * w * c;
 
         // Worst-of-batch reseed: the sample farthest from the target
@@ -328,7 +473,8 @@ impl NativeTrainBackend {
         });
 
         let (mut result, loss) =
-            self.finish_step(spec, params, m, v, step, &slots);
+            self.finish_step(c, spec.hidden, spec.clip_norm, &spec.lr,
+                             params, m, v, step, &slots);
         result.push(Tensor::scalar(loss));
         let mut evolved = Vec::with_capacity(b * cell);
         for slot in &slots {
@@ -363,7 +509,8 @@ impl NativeTrainBackend {
 
         let model = NcaModel::from_flat(c, spec.hidden, spec.dt,
                                         params.data());
-        let steps = rollout_steps(spec, step, seed);
+        let steps =
+            rollout_steps(spec.rollout_min, spec.rollout_max, step, seed);
         let cell = h * w * c;
 
         // State: digit pinned in channel 0, everything else zero.
@@ -410,20 +557,177 @@ impl NativeTrainBackend {
         });
 
         let (mut result, loss) =
-            self.finish_step(spec, params, m, v, step, &slots);
+            self.finish_step(c, spec.hidden, spec.clip_norm, &spec.lr,
+                             params, m, v, step, &slots);
         result.push(Tensor::scalar(loss));
         Ok(result)
     }
 
-    /// Shared tail of both train steps: fixed-order gradient reduction,
+    /// The `[W, C]` initial ARC board for one one-hot input row
+    /// (`[W, 10]` flat): task encoding pinned in the frozen channels,
+    /// logits and hidden channels zero.
+    fn arc_board(&self, onehot_row: &[f32]) -> Vec<f32> {
+        let (w, c) = (self.arc.width, self.arc.channels());
+        debug_assert_eq!(onehot_row.len(), w * NUM_COLORS);
+        let mut board = vec![0.0f32; w * c];
+        for x in 0..w {
+            board[x * c..x * c + NUM_COLORS].copy_from_slice(
+                &onehot_row[x * NUM_COLORS..(x + 1) * NUM_COLORS]);
+        }
+        board
+    }
+
+    fn arc_train_step(&self, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        let spec = &self.arc;
+        ensure!(inputs.len() == 7,
+                "arc_train_step wants 7 inputs (params, m, v, step, \
+                 inputs, targets, seed), got {}", inputs.len());
+        let params = f32_arg(inputs, 0, "params")?;
+        let m = f32_arg(inputs, 1, "m")?;
+        let v = f32_arg(inputs, 2, "v")?;
+        let step = i32_arg(inputs, 3, "step")?;
+        let ins = f32_arg(inputs, 4, "inputs")?;
+        let tgts = f32_arg(inputs, 5, "targets")?;
+        let seed = u32_arg(inputs, 6, "seed")?;
+
+        let (b, w, c) = (spec.batch, spec.width, spec.channels());
+        check_opt_state(params, m, v, spec.param_count())?;
+        ensure!(ins.shape() == &[b, w, NUM_COLORS],
+                "arc_train_step: inputs shape {:?}, spec wants \
+                 [{b}, {w}, {NUM_COLORS}]", ins.shape());
+        ensure!(tgts.shape() == &[b, w, NUM_COLORS],
+                "arc_train_step: targets shape {:?}, wants \
+                 [{b}, {w}, {NUM_COLORS}]", tgts.shape());
+
+        let model = NcaModel::from_flat(c, spec.hidden, spec.dt,
+                                        params.data());
+        let steps =
+            rollout_steps(spec.rollout_min, spec.rollout_max, step, seed);
+        let grid = Grid::D1 { w };
+        let row = w * NUM_COLORS;
+
+        let mut slots: Vec<Slot> = (0..b)
+            .map(|i| Slot {
+                board: self.arc_board(&ins.data()[i * row..(i + 1) * row]),
+                grads: NcaGrads::zeros(&model),
+                loss: 0.0,
+            })
+            .collect();
+        let tgt = tgts.data();
+        let denom = row as f32 * b as f32;
+        self.pool.for_each_chunk(&mut slots, 1, |i, chunk| {
+            let slot = &mut chunk[0];
+            let tape = nca_grad::rollout_tape_on(&model, &slot.board, grid,
+                                                 steps, ARC_FROZEN);
+            let fin = tape.last().unwrap();
+            let mut d_final = vec![0.0f32; w * c];
+            let mut sum = 0.0f64;
+            for x in 0..w {
+                for col in 0..NUM_COLORS {
+                    let d = fin[x * c + NUM_COLORS + col]
+                        - tgt[i * row + x * NUM_COLORS + col];
+                    sum += d as f64 * d as f64;
+                    d_final[x * c + NUM_COLORS + col] = 2.0 * d / denom;
+                }
+            }
+            slot.loss = sum / row as f64;
+            let (grads, _) = nca_grad::backward_on(&model, &tape, grid,
+                                                   ARC_FROZEN, &d_final);
+            slot.grads = grads;
+            // No board write-back: ARC training has no sample pool —
+            // every step re-embeds fresh one-hot inputs.
+        });
+
+        let (mut result, loss) =
+            self.finish_step(c, spec.hidden, spec.clip_norm, &spec.lr,
+                             params, m, v, step, &slots);
+        result.push(Tensor::scalar(loss));
+        Ok(result)
+    }
+
+    fn arc_eval(&self, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        let spec = &self.arc;
+        ensure!(inputs.len() == 2,
+                "arc_eval wants 2 inputs (params, inputs), got {}",
+                inputs.len());
+        let params = f32_arg(inputs, 0, "params")?;
+        let ins = f32_arg(inputs, 1, "inputs")?;
+        let (b, w, c) = (spec.batch, spec.width, spec.channels());
+        ensure!(params.numel() == spec.param_count(),
+                "arc_eval: params has {} values, spec wants {}",
+                params.numel(), spec.param_count());
+        ensure!(ins.shape() == &[b, w, NUM_COLORS],
+                "arc_eval: inputs shape {:?}, spec wants \
+                 [{b}, {w}, {NUM_COLORS}]", ins.shape());
+
+        let model = NcaModel::from_flat(c, spec.hidden, spec.dt,
+                                        params.data());
+        let row = w * NUM_COLORS;
+        let mut boards: Vec<f32> = Vec::with_capacity(b * w * c);
+        for i in 0..b {
+            boards.extend(
+                self.arc_board(&ins.data()[i * row..(i + 1) * row]));
+        }
+        self.pool.for_each_chunk(&mut boards, w * c, |_, board| {
+            let mut scratch = vec![0.0f32; board.len()];
+            for _ in 0..spec.eval_steps {
+                model.step_frozen_1d(board, &mut scratch, w, ARC_FROZEN);
+                board.copy_from_slice(&scratch);
+            }
+        });
+
+        // Slice the logit channels out as [B, W, 10].
+        let mut logits = Vec::with_capacity(b * row);
+        for i in 0..b {
+            for x in 0..w {
+                let base = (i * w + x) * c + NUM_COLORS;
+                logits.extend_from_slice(&boards[base..base + NUM_COLORS]);
+            }
+        }
+        Ok(vec![Tensor::new(vec![b, w, NUM_COLORS], logits)?])
+    }
+
+    fn arc_traj(&self, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        let spec = &self.arc;
+        ensure!(inputs.len() == 2,
+                "arc_traj wants 2 inputs (params, input), got {}",
+                inputs.len());
+        let params = f32_arg(inputs, 0, "params")?;
+        let input = f32_arg(inputs, 1, "input")?;
+        let (w, c) = (spec.width, spec.channels());
+        ensure!(params.numel() == spec.param_count(),
+                "arc_traj: params has {} values, spec wants {}",
+                params.numel(), spec.param_count());
+        ensure!(input.shape() == &[w, NUM_COLORS],
+                "arc_traj: input shape {:?}, spec wants \
+                 [{w}, {NUM_COLORS}]", input.shape());
+
+        let model = NcaModel::from_flat(c, spec.hidden, spec.dt,
+                                        params.data());
+        let board = self.arc_board(input.data());
+        let tape = nca_grad::rollout_tape_on(&model, &board,
+                                             Grid::D1 { w },
+                                             spec.eval_steps, ARC_FROZEN);
+        let mut traj = Vec::with_capacity(tape.len() * w * NUM_COLORS);
+        for state in &tape {
+            for x in 0..w {
+                let base = x * c + NUM_COLORS;
+                traj.extend_from_slice(&state[base..base + NUM_COLORS]);
+            }
+        }
+        Ok(vec![Tensor::new(vec![tape.len(), w, NUM_COLORS], traj)?])
+    }
+
+    /// Shared tail of every train step: fixed-order gradient reduction,
     /// clip, Adam. Returns `[params', m', v']` and the mean loss.
-    fn finish_step(&self, spec: &NcaTrainSpec, params: &Tensor, m: &Tensor,
-                   v: &Tensor, step: i32, slots: &[Slot])
-                   -> (Vec<Tensor>, f32) {
+    #[allow(clippy::too_many_arguments)]
+    fn finish_step(&self, channels: usize, hidden: usize, clip_norm: f32,
+                   lr: &LrSchedule, params: &Tensor, m: &Tensor, v: &Tensor,
+                   step: i32, slots: &[Slot]) -> (Vec<Tensor>, f32) {
         let mut grad = NcaGrads {
-            w1: vec![0.0; 3 * spec.channels * spec.hidden],
-            b1: vec![0.0; spec.hidden],
-            w2: vec![0.0; spec.hidden * spec.channels],
+            w1: vec![0.0; 3 * channels * hidden],
+            b1: vec![0.0; hidden],
+            w2: vec![0.0; hidden * channels],
         };
         let mut loss = 0.0f64;
         for slot in slots {
@@ -433,12 +737,12 @@ impl NativeTrainBackend {
         loss /= slots.len() as f64;
 
         let mut gflat = grad.flatten();
-        clip_global_norm(&mut gflat, spec.clip_norm);
+        clip_global_norm(&mut gflat, clip_norm);
         let mut new_params = params.data().to_vec();
         let mut new_m = m.data().to_vec();
         let mut new_v = v.data().to_vec();
         Adam::default().update(&mut new_params, &mut new_m, &mut new_v,
-                               &gflat, step, spec.lr.lr(step));
+                               &gflat, step, lr.lr(step));
         let p = new_params.len();
         (
             vec![
@@ -461,9 +765,13 @@ impl ProgramBackend for NativeTrainBackend {
             "growing_seed" => Ok(vec![self.growing_seed_state()]),
             "growing_train_step" => self.growing_train_step(inputs),
             "mnist_train_step" => self.mnist_train_step(inputs),
+            "arc_train_step" => self.arc_train_step(inputs),
+            "arc_eval" => self.arc_eval(inputs),
+            "arc_traj" => self.arc_traj(inputs),
             other => bail!(
                 "native train backend has no program {other:?} (programs: \
-                 growing_seed, growing_train_step, mnist_train_step)"
+                 growing_seed, growing_train_step, mnist_train_step, \
+                 arc_train_step, arc_eval, arc_traj)"
             ),
         }
     }
@@ -472,16 +780,19 @@ impl ProgramBackend for NativeTrainBackend {
     /// `NcaModel::random` init as the inference substrate, from the
     /// spec's `param_seed`.
     fn load_params(&self, blob: &str) -> Result<Tensor> {
-        let spec = match blob {
-            "growing_params" => &self.growing,
-            "mnist_params" => &self.mnist,
+        let (channels, hidden, seed) = match blob {
+            "growing_params" => (self.growing.channels, self.growing.hidden,
+                                 self.growing.param_seed),
+            "mnist_params" => (self.mnist.channels, self.mnist.hidden,
+                               self.mnist.param_seed),
+            "arc_params" => (self.arc.channels(), self.arc.hidden,
+                             self.arc.param_seed),
             other => bail!(
                 "native train backend has no parameter blob {other:?} \
-                 (blobs: growing_params, mnist_params)"
+                 (blobs: growing_params, mnist_params, arc_params)"
             ),
         };
-        let model = NcaModel::random(spec.channels, spec.hidden,
-                                     &mut Rng::new(spec.param_seed));
+        let model = NcaModel::random(channels, hidden, &mut Rng::new(seed));
         let flat = model.flatten();
         let n = flat.len();
         Tensor::new(vec![n], flat)
@@ -508,15 +819,15 @@ fn rgba_mse(board: &[f32], target: &[f32], pixels: usize, c: usize) -> f64 {
     sum / (pixels * 4) as f64
 }
 
-/// Rollout length for one train step: uniform in `[rollout_min,
-/// rollout_max]`, deterministic in (step, seed).
-fn rollout_steps(spec: &NcaTrainSpec, step: i32, seed: u32) -> usize {
-    if spec.rollout_max <= spec.rollout_min {
-        return spec.rollout_min;
+/// Rollout length for one train step: uniform in `[min, max]`,
+/// deterministic in (step, seed).
+fn rollout_steps(min: usize, max: usize, step: i32, seed: u32) -> usize {
+    if max <= min {
+        return min;
     }
     let mut rng = Rng::new(((step as i64 as u64) << 32) ^ seed as u64)
         .fold_in(0x9CA);
-    rng.range(spec.rollout_min, spec.rollout_max + 1)
+    rng.range(min, max + 1)
 }
 
 /// Solve `P = hidden * (4 * channels + 1)` for the MLP width.
@@ -590,8 +901,8 @@ fn meta_for(ca: &str, spec: &NcaTrainSpec) -> BTreeMap<String, Json> {
 /// The in-memory manifest describing the native train programs — the
 /// same introspection surface (`inputs[4]` batch shapes, `meta`) the
 /// experiment drivers read off artifact manifests.
-fn build_manifest(growing: &NcaTrainSpec, mnist: &NcaTrainSpec)
-                  -> Manifest {
+fn build_manifest(growing: &NcaTrainSpec, mnist: &NcaTrainSpec,
+                  arc: &ArcTrainSpec) -> Manifest {
     let mut artifacts = BTreeMap::new();
     let gp = growing.param_count();
     let (gb, gh, gw, gc) =
@@ -655,6 +966,64 @@ fn build_manifest(growing: &NcaTrainSpec, mnist: &NcaTrainSpec)
             meta: meta_for("mnist", mnist),
         },
     );
+    let ap = arc.param_count();
+    let (ab, aw) = (arc.batch, arc.width);
+    let mut arc_meta = BTreeMap::new();
+    arc_meta.insert("ca".to_string(), Json::from("arc"));
+    arc_meta.insert("steps".to_string(), Json::from(arc.eval_steps));
+    arc_meta.insert("channels".to_string(), Json::from(arc.channels()));
+    arc_meta.insert("hidden".to_string(), Json::from(arc.hidden));
+    arc_meta.insert("batch".to_string(), Json::from(arc.batch));
+    artifacts.insert(
+        "arc_train_step".to_string(),
+        ArtifactInfo {
+            name: "arc_train_step".to_string(),
+            file: "<native>".to_string(),
+            inputs: vec![
+                spec_in("params", Dtype::F32, vec![ap]),
+                spec_in("m", Dtype::F32, vec![ap]),
+                spec_in("v", Dtype::F32, vec![ap]),
+                spec_in("step", Dtype::I32, vec![]),
+                spec_in("inputs", Dtype::F32, vec![ab, aw, NUM_COLORS]),
+                spec_in("targets", Dtype::F32, vec![ab, aw, NUM_COLORS]),
+                spec_in("seed", Dtype::U32, vec![]),
+            ],
+            outputs: vec![
+                spec_out(vec![ap]),
+                spec_out(vec![ap]),
+                spec_out(vec![ap]),
+                spec_out(vec![]),
+            ],
+            meta: arc_meta.clone(),
+        },
+    );
+    artifacts.insert(
+        "arc_eval".to_string(),
+        ArtifactInfo {
+            name: "arc_eval".to_string(),
+            file: "<native>".to_string(),
+            inputs: vec![
+                spec_in("params", Dtype::F32, vec![ap]),
+                spec_in("inputs", Dtype::F32, vec![ab, aw, NUM_COLORS]),
+            ],
+            outputs: vec![spec_out(vec![ab, aw, NUM_COLORS])],
+            meta: arc_meta.clone(),
+        },
+    );
+    artifacts.insert(
+        "arc_traj".to_string(),
+        ArtifactInfo {
+            name: "arc_traj".to_string(),
+            file: "<native>".to_string(),
+            inputs: vec![
+                spec_in("params", Dtype::F32, vec![ap]),
+                spec_in("input", Dtype::F32, vec![aw, NUM_COLORS]),
+            ],
+            outputs: vec![spec_out(vec![arc.eval_steps + 1, aw,
+                                        NUM_COLORS])],
+            meta: arc_meta,
+        },
+    );
 
     let mut blobs = BTreeMap::new();
     blobs.insert(
@@ -671,6 +1040,14 @@ fn build_manifest(growing: &NcaTrainSpec, mnist: &NcaTrainSpec)
             name: "mnist_params".to_string(),
             file: "<native>".to_string(),
             shape: vec![mp],
+        },
+    );
+    blobs.insert(
+        "arc_params".to_string(),
+        BlobInfo {
+            name: "arc_params".to_string(),
+            file: "<native>".to_string(),
+            shape: vec![ap],
         },
     );
 
@@ -784,18 +1161,131 @@ mod tests {
     fn rollout_steps_deterministic_and_in_range() {
         let spec = NcaTrainSpec::growing();
         for step in 0..20 {
-            let a = rollout_steps(&spec, step, 7);
-            let b = rollout_steps(&spec, step, 7);
+            let a = rollout_steps(spec.rollout_min, spec.rollout_max,
+                                  step, 7);
+            let b = rollout_steps(spec.rollout_min, spec.rollout_max,
+                                  step, 7);
             assert_eq!(a, b);
             assert!((spec.rollout_min..=spec.rollout_max).contains(&a));
         }
         // Degenerate range pins the length.
-        let fixed = NcaTrainSpec {
-            rollout_min: 5,
-            rollout_max: 5,
-            ..NcaTrainSpec::growing()
-        };
-        assert_eq!(rollout_steps(&fixed, 3, 1), 5);
+        assert_eq!(rollout_steps(5, 5, 3, 1), 5);
+    }
+
+    fn tiny_arc() -> ArcTrainSpec {
+        ArcTrainSpec {
+            width: 16,
+            extra: 2,
+            hidden: 6,
+            batch: 2,
+            rollout_min: 2,
+            rollout_max: 3,
+            eval_steps: 3,
+            ..ArcTrainSpec::default()
+        }
+    }
+
+    #[test]
+    fn arc_manifest_describes_the_trainer_contract() {
+        let backend = NativeTrainBackend::with_arc_spec(tiny_arc(), 2);
+        let info = backend.manifest().artifact("arc_train_step").unwrap();
+        assert_eq!(info.inputs.len(), 7);
+        assert_eq!(info.outputs.len(), 4);
+        assert_eq!(info.inputs[4].shape, vec![2, 16, NUM_COLORS]);
+        assert_eq!(info.inputs[5].shape, vec![2, 16, NUM_COLORS]);
+        let eval = backend.manifest().artifact("arc_eval").unwrap();
+        assert_eq!(eval.inputs[1].shape, vec![2, 16, NUM_COLORS]);
+        assert_eq!(eval.outputs[0].shape, vec![2, 16, NUM_COLORS]);
+        let traj = backend.manifest().artifact("arc_traj").unwrap();
+        assert_eq!(traj.inputs[1].shape, vec![16, NUM_COLORS]);
+        assert_eq!(traj.outputs[0].shape, vec![4, 16, NUM_COLORS]);
+    }
+
+    #[test]
+    fn arc_board_pins_the_onehot_input() {
+        let backend = NativeTrainBackend::with_arc_spec(tiny_arc(), 1);
+        let spec = backend.arc_spec();
+        let (w, c) = (spec.width, spec.channels());
+        let mut row = vec![0.0f32; w * NUM_COLORS];
+        row[3 * NUM_COLORS + 7] = 1.0; // cell 3 is color 7
+        row[5 * NUM_COLORS] = 1.0; // cell 5 is background
+        let board = backend.arc_board(&row);
+        assert_eq!(board.len(), w * c);
+        assert_eq!(board[3 * c + 7], 1.0);
+        assert_eq!(board[5 * c], 1.0);
+        // Logit and hidden channels start dark.
+        for x in 0..w {
+            for ch in NUM_COLORS..c {
+                assert_eq!(board[x * c + ch], 0.0, "cell {x} ch {ch}");
+            }
+        }
+    }
+
+    #[test]
+    fn arc_train_step_moves_params_and_reports_finite_loss() {
+        let backend = NativeTrainBackend::with_arc_spec(tiny_arc(), 2);
+        let spec = backend.arc_spec().clone();
+        let p = spec.param_count();
+        let params = backend.load_params("arc_params").unwrap();
+        assert_eq!(params.numel(), p);
+        // One-hot batches: a colored cell per row, targets shifted by 1.
+        let (b, w) = (spec.batch, spec.width);
+        let mut ins = Tensor::zeros(&[b, w, NUM_COLORS]);
+        let mut tgts = Tensor::zeros(&[b, w, NUM_COLORS]);
+        for i in 0..b {
+            for x in 0..w {
+                let color = if x == 4 + i { 3 } else { 0 };
+                ins.set(&[i, x, color], 1.0);
+                let tcolor = if x == 5 + i { 3 } else { 0 };
+                tgts.set(&[i, x, tcolor], 1.0);
+            }
+        }
+        let inputs = vec![
+            Value::F32(params.clone()),
+            Value::F32(Tensor::zeros(&[p])),
+            Value::F32(Tensor::zeros(&[p])),
+            Value::I32(0),
+            Value::F32(ins),
+            Value::F32(tgts),
+            Value::U32(9),
+        ];
+        let out = backend.execute("arc_train_step", &inputs).unwrap();
+        assert_eq!(out.len(), 4);
+        assert!(out[0].max_abs_diff(&params).unwrap() > 0.0,
+                "params must move");
+        let loss = out[3].data()[0];
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    }
+
+    #[test]
+    fn arc_eval_and_traj_have_contract_shapes() {
+        let backend = NativeTrainBackend::with_arc_spec(tiny_arc(), 2);
+        let spec = backend.arc_spec().clone();
+        let params = backend.load_params("arc_params").unwrap();
+        let (b, w) = (spec.batch, spec.width);
+        let mut ins = Tensor::zeros(&[b, w, NUM_COLORS]);
+        for i in 0..b {
+            for x in 0..w {
+                ins.set(&[i, x, if x == 2 { 5 } else { 0 }], 1.0);
+            }
+        }
+        let out = backend
+            .execute("arc_eval",
+                     &[Value::F32(params.clone()), Value::F32(ins.clone())])
+            .unwrap();
+        assert_eq!(out[0].shape(), &[b, w, NUM_COLORS]);
+        assert!(out[0].data().iter().all(|v| v.is_finite()));
+
+        let one = ins.index_axis0(0);
+        let traj = backend
+            .execute("arc_traj", &[Value::F32(params), Value::F32(one)])
+            .unwrap();
+        assert_eq!(traj[0].shape(),
+                   &[spec.eval_steps + 1, w, NUM_COLORS]);
+        // Frame 0 is the zero-initialized logit state.
+        assert!(traj[0].data()[..w * NUM_COLORS]
+                    .iter()
+                    .all(|&v| v == 0.0));
     }
 
     #[test]

@@ -68,6 +68,22 @@ impl Task {
         Task::Scaling,
     ];
 
+    /// Look up a task by its Table-2 label, case-insensitively, with
+    /// spaces or dashes (`"Move 1"`, `"move-1"`). The single parser
+    /// behind every `--task` CLI/example flag.
+    pub fn find(name: &str) -> Option<Task> {
+        Task::ALL.iter().copied().find(|t| {
+            t.name().eq_ignore_ascii_case(name)
+                || t.name().to_lowercase().replace(' ', "-")
+                    == name.to_lowercase()
+        })
+    }
+
+    /// The dashed lowercase form [`Task::find`] accepts (`"move-1"`).
+    pub fn slug(&self) -> String {
+        self.name().to_lowercase().replace(' ', "-")
+    }
+
     /// Paper Table 2 row label.
     pub fn name(&self) -> &'static str {
         match self {
@@ -751,6 +767,19 @@ mod tests {
             assert_eq!(tb[0].1, 2 * ib[0].1);
             assert_eq!(tb[0].0, ib[0].0);
             assert_eq!(tb[0].2, ib[0].2);
+        }
+    }
+
+    #[test]
+    fn find_accepts_labels_and_slugs() {
+        assert_eq!(Task::find("Move 1"), Some(Task::Move1));
+        assert_eq!(Task::find("move-1"), Some(Task::Move1));
+        assert_eq!(Task::find("MOVE-1"), Some(Task::Move1));
+        assert_eq!(Task::find("recolor-by-size"), Some(Task::RecolorSize));
+        assert_eq!(Task::find("no-such-task"), None);
+        for t in Task::ALL {
+            assert_eq!(Task::find(&t.slug()), Some(t), "{}", t.name());
+            assert_eq!(Task::find(t.name()), Some(t), "{}", t.name());
         }
     }
 

@@ -10,6 +10,27 @@
 //! substrate the paper's evaluation needs (naive baselines, datasets,
 //! sample pool, visualization, metrics, config, CLI).
 //!
+//! ## The two execution contracts
+//!
+//! - [`backend::Backend`] runs *classic-CA programs*
+//!   ([`backend::CaProgram`]: ECA, Life, Lenia, the NCA forward cell)
+//!   on batched states — see the runnable example on
+//!   [`backend::NativeBackend`].
+//! - [`backend::ProgramBackend`] runs *named, manifest-described
+//!   programs* — the training and evaluation surface. The default build
+//!   trains the paper's growing-NCA (App. B), self-classifying-MNIST
+//!   and 1D-ARC (§5.3) experiments end to end through
+//!   [`backend::NativeTrainBackend`] (hand-rolled BPTT + Adam,
+//!   gradient-checked against finite differences); `pjrt` builds swap
+//!   in fused XLA train steps with zero coordinator changes. The named
+//!   program catalogue and its calling convention live on the
+//!   [`backend::ProgramBackend`] docs.
+//!
+//! Entry points: the `cax` CLI (`sim`, `train`, `eval`), the
+//! `examples/` directory (`native_rollout`, `native_train`, `arc_1d`),
+//! and the [`coordinator::experiments`] drivers the integration tests
+//! and benches share.
+//!
 //! See `rust/README.md` for the architecture (layer diagram, backend
 //! feature matrix, how to enable `pjrt`) and the experiment index.
 

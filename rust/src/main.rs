@@ -7,8 +7,9 @@
 //!   check                        compile every registry artifact [pjrt]
 //!   sim <eca|life|lenia> ...     run a classic CA on any backend path
 //!   train <ca> ...               train a neural CA end to end (native:
-//!                                growing, mnist; every key with [pjrt])
-//!   eval <arc|mnist|autoenc3d>   evaluate a trained neural CA      [pjrt]
+//!                                growing, mnist, arc; all keys [pjrt])
+//!   eval <arc|mnist|autoenc3d>   evaluate a trained neural CA (native:
+//!                                arc; the rest need [pjrt])
 //!
 //! Global flags: --artifacts DIR  --out DIR  --seed N  --config FILE
 //!               --backend native|pjrt
@@ -21,19 +22,17 @@ use anyhow::{bail, Context, Result};
 use cax::automata::WolframRule;
 use cax::backend::{NativeBackend, NativeTrainBackend};
 use cax::config::Config;
+use cax::coordinator::evaluator;
 use cax::coordinator::trainer::TrainCfg;
 use cax::coordinator::{experiments, Path as SimPath, Simulator};
+use cax::datasets::arc1d::Task;
 use cax::runtime::Manifest;
 use cax::util::rng::Rng;
 use cax::util::timer::Timer;
 use cax::viz::spacetime;
 
 #[cfg(feature = "pjrt")]
-use cax::coordinator::evaluator;
-#[cfg(feature = "pjrt")]
 use cax::coordinator::registry;
-#[cfg(feature = "pjrt")]
-use cax::datasets::arc1d::Task;
 #[cfg(feature = "pjrt")]
 use cax::datasets::mnist::{self, MnistConfig};
 #[cfg(feature = "pjrt")]
@@ -55,14 +54,19 @@ COMMANDS:
         [--path fused|stepwise|naive|native] [--steps N] [--rule R]
         [--batch B] [--width W] [--height H] [--render]
     train <ca-key>            train a neural CA end to end
-        [--steps N]           --backend native: growing, mnist (hermetic,
-        [--backend native]    hand-rolled BPTT + Adam); --backend pjrt:
-                              all keys via fused artifacts        [pjrt]
-    eval <arc|mnist|autoenc3d> [--train-steps N] [--task NAME]      [pjrt]
+        [--steps N]           --backend native: growing, mnist, arc
+        [--backend native]    (hermetic, hand-rolled BPTT + Adam);
+                              --backend pjrt: all keys via fused
+                              artifacts                           [pjrt]
+    eval <arc|mnist|autoenc3d> [--train-steps N] [--task NAME|all]
+                              --backend native: arc (per-task
+                              exact-match vs the paper's GPT-4 row;
+                              --task all reproduces Table 2);
+                              mnist/autoenc3d need                [pjrt]
 
 The default build runs everything marked-free above hermetically on the
-native backend (incl. `train growing|mnist`); [pjrt] commands need
-`--features pjrt` plus artifacts."
+native backend (incl. `train growing|mnist|arc` and `eval arc`); [pjrt]
+commands need `--features pjrt` plus artifacts."
 }
 
 struct Cli {
@@ -201,7 +205,7 @@ fn cmd_list(cli: &Cli) -> Result<()> {
                 // through the native BPTT train step.
                 if matches!(e.key, "eca" | "life" | "lenia") {
                     "ready (native)"
-                } else if matches!(e.key, "growing" | "mnist") {
+                } else if matches!(e.key, "growing" | "mnist" | "arc") {
                     "trainable (native)"
                 } else {
                     "needs artifacts"
@@ -491,11 +495,11 @@ fn cmd_train(cli: &Cli) -> Result<()> {
 /// Hand-rolled BPTT + Adam on the native backend — no artifacts, no XLA,
 /// no Python anywhere.
 fn cmd_train_native(cli: &Cli, key: &str) -> Result<()> {
-    if !matches!(key, "growing" | "mnist") {
+    if !matches!(key, "growing" | "mnist" | "arc") {
         bail!(
-            "the native backend trains `growing` and `mnist`; {key:?} \
-             needs the pjrt backend (rebuild with --features pjrt and run \
-             `make artifacts`)"
+            "the native backend trains `growing`, `mnist` and `arc`; \
+             {key:?} needs the pjrt backend (rebuild with --features pjrt \
+             and run `make artifacts`)"
         );
     }
     let backend = NativeTrainBackend::new();
@@ -542,9 +546,101 @@ fn cmd_train_pjrt(_cli: &Cli, key: &str) -> Result<()> {
 
 // ------------------------------------------------------------------ eval
 
-#[cfg(feature = "pjrt")]
+/// Train-then-evaluate one ARC task on any [`ProgramBackend`]; returns
+/// (exact-match, per-pixel) accuracy on the held-out split.
+fn arc_task_accuracy(backend: &dyn cax::backend::ProgramBackend,
+                     cfg: &TrainCfg, task: Task, seed: u64)
+                     -> Result<(f64, f64)> {
+    let (train_set, test_set) =
+        experiments::arc_split(backend, task, 160, 50, seed)?;
+    let run = experiments::train_arc(backend, cfg, task, &train_set)?;
+    let acc = evaluator::arc_accuracy(backend, &run.state.params,
+                                      &test_set)?;
+    let pix = evaluator::arc_pixel_accuracy(backend, &run.state.params,
+                                            &test_set)?;
+    Ok((acc, pix))
+}
+
+fn print_arc_row(task: Task, acc: f64, pix: f64) {
+    println!(
+        "ARC {:<28} exact-match {:>5.1}%  per-pixel {:>5.1}%  (paper \
+         NCA: {:.0}%, GPT-4: {:.0}%)",
+        task.name(), 100.0 * acc, 100.0 * pix,
+        task.paper_nca_accuracy(), task.gpt4_accuracy()
+    );
+}
+
 fn cmd_eval(cli: &Cli) -> Result<()> {
-    let what = cli.args.get(1).context("eval: arc|mnist|autoenc3d")?;
+    let what = cli.args.get(1).context("eval: arc|mnist|autoenc3d")?.clone();
+    let backend = cli
+        .flag("--backend")
+        .unwrap_or(if cfg!(feature = "pjrt") { "pjrt" } else { "native" });
+    match backend {
+        "native" => cmd_eval_native(cli, &what),
+        "pjrt" => cmd_eval_pjrt(cli, &what),
+        other => bail!("unknown --backend {other:?} (native|pjrt)"),
+    }
+}
+
+/// Hermetic §5.3 evaluation: train the 1D-ARC NCA per task with the
+/// native BPTT train step and score the paper's exact-match criterion.
+/// `--task all` (the default) reproduces the Table-2 sweep.
+fn cmd_eval_native(cli: &Cli, what: &str) -> Result<()> {
+    if what != "arc" {
+        bail!(
+            "the native backend evaluates `arc`; {what:?} needs the pjrt \
+             backend (rebuild with --features pjrt and run `make \
+             artifacts`)"
+        );
+    }
+    let backend = NativeTrainBackend::new();
+    let steps = match cli.flag("--train-steps") {
+        Some(s) => s.parse::<usize>()?,
+        None => cli.cfg.train.steps,
+    };
+    let task_flag = cli.flag("--task").unwrap_or("all");
+    let tasks: Vec<Task> = if task_flag.eq_ignore_ascii_case("all") {
+        Task::ALL.to_vec()
+    } else {
+        vec![Task::find(task_flag)
+            .with_context(|| format!("unknown ARC task {task_flag:?}"))?]
+    };
+    let cfg = TrainCfg {
+        steps,
+        seed: cli.cfg.seed as u32,
+        // Keep the per-task table readable on full sweeps.
+        log_every: if tasks.len() > 1 { 0 } else { cli.cfg.train.log_every },
+        out_dir: None,
+    };
+    println!(
+        "1D-ARC natively: {} task(s), {} train steps each (seed {}, {} \
+         worker threads)",
+        tasks.len(), cfg.steps, cfg.seed, backend.threads()
+    );
+    let t = Timer::start();
+    let mut mean_acc = 0.0;
+    for &task in &tasks {
+        let (acc, pix) = arc_task_accuracy(&backend, &cfg, task,
+                                           cli.cfg.seed)?;
+        print_arc_row(task, acc, pix);
+        mean_acc += acc;
+    }
+    if tasks.len() > 1 {
+        let n = tasks.len() as f64;
+        let gpt4: f64 = tasks.iter().map(|t| t.gpt4_accuracy()).sum();
+        let paper: f64 = tasks.iter().map(|t| t.paper_nca_accuracy()).sum();
+        println!(
+            "mean over {} tasks: exact-match {:.1}%  (paper NCA {:.1}%, \
+             GPT-4 {:.1}%)  [{:.1}s]",
+            tasks.len(), 100.0 * mean_acc / n, paper / n, gpt4 / n,
+            t.elapsed_secs()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_eval_pjrt(cli: &Cli, what: &str) -> Result<()> {
     let eng = engine(cli)?;
     let steps = match cli.flag("--train-steps") {
         Some(s) => s.parse::<usize>()?,
@@ -556,31 +652,14 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
         log_every: cli.cfg.train.log_every,
         out_dir: None,
     };
-    match what.as_str() {
+    match what {
         "arc" => {
             let task_name = cli.flag("--task").unwrap_or("Denoise");
-            let task = Task::ALL
-                .iter()
-                .copied()
-                .find(|t| {
-                    t.name().eq_ignore_ascii_case(task_name)
-                        || t.name().to_lowercase().replace(' ', "-")
-                            == task_name.to_lowercase()
-                })
+            let task = Task::find(task_name)
                 .with_context(|| format!("unknown ARC task {task_name:?}"))?;
-            let (train_set, test_set) =
-                experiments::arc_split(&eng, task, 128, 50, cli.cfg.seed)?;
-            let run = experiments::train_arc(&eng, &cfg, task, &train_set)?;
-            let acc =
-                evaluator::arc_accuracy(&eng, &run.state.params, &test_set)?;
-            let pix = evaluator::arc_pixel_accuracy(&eng, &run.state.params,
-                                                    &test_set)?;
-            println!(
-                "ARC {:<28} exact-match {:.1}%  per-pixel {:.1}%  (paper \
-                 NCA: {:.0}%, GPT-4: {:.0}%)",
-                task.name(), 100.0 * acc, 100.0 * pix,
-                task.paper_nca_accuracy(), task.gpt4_accuracy()
-            );
+            let (acc, pix) =
+                arc_task_accuracy(&eng, &cfg, task, cli.cfg.seed)?;
+            print_arc_row(task, acc, pix);
         }
         "mnist" => {
             let run = experiments::train_mnist(&eng, &cfg)?;
@@ -612,9 +691,10 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_eval(_cli: &Cli) -> Result<()> {
+fn cmd_eval_pjrt(_cli: &Cli, what: &str) -> Result<()> {
     bail!(
-        "`cax eval` needs trained neural-CA artifacts; rebuild with \
-         --features pjrt"
+        "`cax eval {what} --backend pjrt` needs trained neural-CA \
+         artifacts; rebuild with --features pjrt (this build evaluates \
+         natively: `cax eval arc --backend native`)"
     )
 }

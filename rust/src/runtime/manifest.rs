@@ -4,6 +4,18 @@
 //! typed input/output signature and experiment metadata, plus the initial
 //! parameter blobs. This module parses it (via the in-tree JSON substrate)
 //! into typed structures the engine validates calls against.
+//!
+//! A [`Manifest`] is not tied to artifact *files*: the native training
+//! backend builds one in memory (`file: "<native>"`) describing its own
+//! programs, so the coordinator layers introspect native and PJRT
+//! backends identically. Program names are the cross-backend currency —
+//! `growing_seed`, `growing_train_step`, `mnist_train_step`,
+//! `arc_train_step`, `arc_eval`, `arc_traj` carry the same signatures
+//! everywhere (see the contract table on
+//! [`ProgramBackend`](crate::backend::ProgramBackend)); callers read
+//! batch geometry from [`ArtifactInfo::inputs`] and scenario metadata
+//! (`"ca"`, `"steps"`, `"channels"`, `"hidden"`, `"batch"`) from
+//! [`ArtifactInfo::meta`] rather than hard-coding shapes.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -1,9 +1,9 @@
 //! Runtime: the PJRT bridge. The [`manifest`] contract (artifact
-//! signatures, parameter blobs) is always available; the [`engine`]
-//! that compiles and executes `artifacts/*.hlo.txt` on a PJRT client is
-//! gated behind the off-by-default `pjrt` cargo feature so the default
-//! build is hermetic (no XLA runtime, no artifacts, no Python). See
-//! `rust/README.md` for the backend feature matrix.
+//! signatures, parameter blobs) is always available; the `engine`
+//! module that compiles and executes `artifacts/*.hlo.txt` on a PJRT
+//! client is gated behind the off-by-default `pjrt` cargo feature so
+//! the default build is hermetic (no XLA runtime, no artifacts, no
+//! Python). See `rust/README.md` for the backend feature matrix.
 
 #[cfg(feature = "pjrt")]
 pub mod engine;

@@ -1,0 +1,348 @@
+//! Properties of the native 1D-ARC training path (default features, no
+//! artifacts): the 1D BPTT backward pass is checked against central
+//! finite differences per parameter group, the full `arc_train_step` is
+//! bit-identical for any worker-thread count, and the exact-match
+//! evaluator is verified against hand-computed rollouts.
+
+use cax::backend::native::nca::{Grid, NcaModel};
+use cax::backend::native::nca_grad;
+use cax::backend::native::train::{ArcTrainSpec, NativeTrainBackend};
+use cax::backend::{ProgramBackend, Value};
+use cax::coordinator::evaluator;
+use cax::datasets::arc1d::{one_hot_batch, Example, NUM_COLORS};
+use cax::tensor::Tensor;
+use cax::util::rng::Rng;
+
+/// A small cell built for finite differences — the same construction as
+/// `tests/native_train_props.rs`: the ReLU makes the loss only
+/// piecewise smooth, so the check model pushes every pre-activation
+/// away from zero (large alternating biases, small `w1`) and boosts
+/// `w2` so the gradients sit well above the f32 noise floor. None of
+/// the code paths under test change.
+fn check_model(channels: usize, hidden: usize, seed: u64) -> NcaModel {
+    let mut model = NcaModel::random(channels, hidden, &mut Rng::new(seed));
+    for w in model.w1.iter_mut() {
+        *w *= 0.15;
+    }
+    for (j, b) in model.b1.iter_mut().enumerate() {
+        *b = if j % 2 == 0 { 0.8 } else { -0.8 };
+    }
+    for w in model.w2.iter_mut() {
+        *w *= 2.0;
+    }
+    model
+}
+
+/// Mean-squared full-state loss of a `steps`-long 1D rollout (f64 sum).
+fn rollout_loss(model: &NcaModel, board: &[f32], target: &[f32], w: usize,
+                steps: usize, frozen: usize) -> f64 {
+    let tape = nca_grad::rollout_tape_on(model, board, Grid::D1 { w },
+                                         steps, frozen);
+    let fin = tape.last().unwrap();
+    fin.iter()
+        .zip(target)
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / fin.len() as f64
+}
+
+/// Central finite differences over one parameter group, where `group`
+/// selects the vector to perturb on a clone of the model.
+#[allow(clippy::too_many_arguments)]
+fn fd_group(model: &NcaModel, board: &[f32], target: &[f32], w: usize,
+            steps: usize, frozen: usize, len: usize,
+            group: fn(&mut NcaModel) -> &mut Vec<f32>) -> Vec<f64> {
+    let eps = 3e-3f32;
+    (0..len)
+        .map(|i| {
+            let mut plus = model.clone();
+            group(&mut plus)[i] += eps;
+            let lp = rollout_loss(&plus, board, target, w, steps, frozen);
+            let mut minus = model.clone();
+            group(&mut minus)[i] -= eps;
+            let lm = rollout_loss(&minus, board, target, w, steps, frozen);
+            (lp - lm) / (2.0 * eps as f64)
+        })
+        .collect()
+}
+
+/// Group-norm relative error plus a per-parameter sanity bound.
+fn assert_group_matches(name: &str, analytic: &[f32], fd: &[f64]) {
+    assert_eq!(analytic.len(), fd.len());
+    let mut diff2 = 0.0f64;
+    let mut norm2 = 0.0f64;
+    for (i, (&a, &f)) in analytic.iter().zip(fd).enumerate() {
+        let a = a as f64;
+        diff2 += (a - f) * (a - f);
+        norm2 += f * f;
+        let denom = a.abs().max(f.abs()).max(1e-3);
+        let rel = (a - f).abs() / denom;
+        assert!(rel < 1e-2,
+                "{name}[{i}]: analytic {a:.6e} vs fd {f:.6e} (rel {rel:.2e})");
+    }
+    let rel = (diff2.sqrt()) / norm2.sqrt().max(1e-12);
+    assert!(rel < 1e-3,
+            "{name}: group-norm rel err {rel:.3e} (>= 1e-3), \
+             ||fd|| = {:.3e}", norm2.sqrt());
+    assert!(norm2 > 0.0, "{name}: degenerate all-zero fd gradient");
+}
+
+fn gradient_check(frozen: usize, seed: u64) {
+    // Small ring, short unroll — the 1D analogue of the 2D check.
+    let (w, c, hid, steps) = (12, 4, 8, 2);
+    let model = check_model(c, hid, seed);
+    let mut rng = Rng::new(seed ^ 0x1D);
+    let board = rng.vec_f32(w * c);
+    let target = rng.vec_f32(w * c);
+
+    let grid = Grid::D1 { w };
+    let tape = nca_grad::rollout_tape_on(&model, &board, grid, steps,
+                                         frozen);
+    let fin = tape.last().unwrap();
+    let n = fin.len() as f32;
+    let d_final: Vec<f32> = fin
+        .iter()
+        .zip(&target)
+        .map(|(&a, &b)| 2.0 * (a - b) / n)
+        .collect();
+    let (grads, _) =
+        nca_grad::backward_on(&model, &tape, grid, frozen, &d_final);
+
+    let fd_w1 = fd_group(&model, &board, &target, w, steps, frozen,
+                         grads.w1.len(), |m| &mut m.w1);
+    assert_group_matches("w1", &grads.w1, &fd_w1);
+    let fd_b1 = fd_group(&model, &board, &target, w, steps, frozen,
+                         grads.b1.len(), |m| &mut m.b1);
+    assert_group_matches("b1", &grads.b1, &fd_b1);
+    let fd_w2 = fd_group(&model, &board, &target, w, steps, frozen,
+                         grads.w2.len(), |m| &mut m.w2);
+    assert_group_matches("w2", &grads.w2, &fd_w2);
+}
+
+#[test]
+fn bptt_1d_gradients_match_finite_differences() {
+    gradient_check(0, 31);
+}
+
+#[test]
+fn bptt_1d_gradients_match_finite_differences_with_frozen_channels() {
+    // The ARC layout in miniature: the first channels pinned, still
+    // feeding perception.
+    gradient_check(2, 47);
+}
+
+#[test]
+fn input_gradient_matches_finite_differences_too() {
+    // dL/d(state_0), the remaining backward output: perturb two board
+    // cells directly.
+    let (w, c, hid, steps) = (10, 4, 6, 3);
+    let model = check_model(c, hid, 8);
+    let mut rng = Rng::new(80);
+    let board = rng.vec_f32(w * c);
+    let target = rng.vec_f32(w * c);
+    let grid = Grid::D1 { w };
+    let tape = nca_grad::rollout_tape_on(&model, &board, grid, steps, 0);
+    let fin = tape.last().unwrap();
+    let n = fin.len() as f32;
+    let d_final: Vec<f32> = fin
+        .iter()
+        .zip(&target)
+        .map(|(&a, &b)| 2.0 * (a - b) / n)
+        .collect();
+    let (_, d0) = nca_grad::backward_on(&model, &tape, grid, 0, &d_final);
+
+    let eps = 3e-3f32;
+    for idx in [0usize, (w * c) / 2 + 1] {
+        let mut plus = board.clone();
+        plus[idx] += eps;
+        let lp = rollout_loss(&model, &plus, &target, w, steps, 0);
+        let mut minus = board.clone();
+        minus[idx] -= eps;
+        let lm = rollout_loss(&model, &minus, &target, w, steps, 0);
+        let fd = (lp - lm) / (2.0 * eps as f64);
+        let a = d0[idx] as f64;
+        let rel = (a - fd).abs() / a.abs().max(fd.abs()).max(1e-3);
+        assert!(rel < 1e-2,
+                "d_state0[{idx}]: analytic {a:.6e} vs fd {fd:.6e}");
+    }
+}
+
+fn tiny_spec() -> ArcTrainSpec {
+    ArcTrainSpec {
+        width: 16,
+        extra: 2,
+        hidden: 10,
+        batch: 3,
+        rollout_min: 3,
+        rollout_max: 5,
+        eval_steps: 4,
+        ..ArcTrainSpec::default()
+    }
+}
+
+fn train_inputs(backend: &NativeTrainBackend, seed: u64)
+                -> Vec<Value> {
+    let spec = backend.arc_spec().clone();
+    let p = spec.param_count();
+    let params = backend.load_params("arc_params").unwrap();
+    assert_eq!(params.numel(), p);
+    let mut rng = Rng::new(seed);
+    let examples: Vec<_> = (0..spec.batch)
+        .map(|_| cax::datasets::arc1d::Task::Move1
+            .generate(spec.width, &mut rng))
+        .collect();
+    let ins: Vec<&[u8]> =
+        examples.iter().map(|e| e.input.as_slice()).collect();
+    let tgts: Vec<&[u8]> =
+        examples.iter().map(|e| e.target.as_slice()).collect();
+    vec![
+        Value::F32(params),
+        Value::F32(Tensor::zeros(&[p])),
+        Value::F32(Tensor::zeros(&[p])),
+        Value::I32(0),
+        Value::F32(one_hot_batch(&ins, spec.width)),
+        Value::F32(one_hot_batch(&tgts, spec.width)),
+        Value::U32(5),
+    ]
+}
+
+#[test]
+fn arc_train_step_is_bit_identical_across_thread_counts() {
+    let single = NativeTrainBackend::with_arc_spec(tiny_spec(), 1);
+    let many = NativeTrainBackend::with_arc_spec(tiny_spec(), 8);
+    let inputs = train_inputs(&single, 7);
+    let a = single.execute("arc_train_step", &inputs).unwrap();
+    let b = many.execute("arc_train_step", &inputs).unwrap();
+    assert_eq!(a.len(), 4);
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!(x.bit_eq(y), "output {i} differs between 1 and 8 workers");
+    }
+    // And the step is a pure function of its inputs.
+    let c = single.execute("arc_train_step", &inputs).unwrap();
+    for (x, y) in a.iter().zip(&c) {
+        assert!(x.bit_eq(y));
+    }
+    let loss = a[3].data()[0];
+    assert!(loss.is_finite() && loss > 0.0, "arc loss {loss}");
+}
+
+#[test]
+fn arc_eval_is_bit_identical_across_thread_counts() {
+    let single = NativeTrainBackend::with_arc_spec(tiny_spec(), 1);
+    let many = NativeTrainBackend::with_arc_spec(tiny_spec(), 8);
+    let params = single.load_params("arc_params").unwrap();
+    let all = train_inputs(&single, 9);
+    let args = vec![Value::F32(params), all[4].clone()]; // one-hot batch
+    let a = single.execute("arc_eval", &args).unwrap();
+    let b = many.execute("arc_eval", &args).unwrap();
+    assert!(a[0].bit_eq(&b[0]),
+            "eval logits differ between 1 and 8 workers");
+}
+
+/// A cell whose rollout is hand-computable: `w1 = 0`, one always-on
+/// hidden unit (`b1[0] = 1`, ReLU passes 1.0 through), and `w2` wired
+/// so that unit feeds only the logit channel of `color`. Every step
+/// then adds exactly `dt * 1.0` to that logit at every cell, so after
+/// any positive number of eval steps the argmax prediction is `color`
+/// everywhere.
+fn constant_color_params(spec: &ArcTrainSpec, color: usize) -> Tensor {
+    let c = spec.channels();
+    let mut model = NcaModel {
+        channels: c,
+        hidden: spec.hidden,
+        w1: vec![0.0; 3 * c * spec.hidden],
+        b1: vec![0.0; spec.hidden],
+        w2: vec![0.0; spec.hidden * c],
+        dt: spec.dt,
+    };
+    model.b1[0] = 1.0;
+    model.w2[NUM_COLORS + color] = 1.0; // hidden unit 0 -> logit `color`
+    let flat = model.flatten();
+    let n = flat.len();
+    Tensor::new(vec![n], flat).unwrap()
+}
+
+#[test]
+fn evaluator_exact_match_agrees_with_hand_computed_rollouts() {
+    let spec = tiny_spec();
+    let backend = NativeTrainBackend::with_arc_spec(spec.clone(), 2);
+    let w = spec.width;
+    let params = constant_color_params(&spec, 4);
+
+    // The constant-color cell predicts color 4 at every pixel: solved
+    // exactly when the target row is all 4s. Three test cases on a
+    // batch of 3 exercises scoring; five exercises the padded chunking
+    // path too.
+    let all4 = Example { input: vec![0u8; w], target: vec![4u8; w] };
+    let mut near4 = all4.clone();
+    near4.target[w / 2] = 7; // one wrong pixel: not an exact match
+    let all0 = Example { input: vec![4u8; w], target: vec![0u8; w] };
+
+    let test = vec![all4.clone(), near4.clone(), all0.clone()];
+    let acc = evaluator::arc_accuracy(&backend, &params, &test).unwrap();
+    assert!((acc - 1.0 / 3.0).abs() < 1e-9, "exact-match {acc}");
+    let pix =
+        evaluator::arc_pixel_accuracy(&backend, &params, &test).unwrap();
+    // Hand count: w + (w-1) + 0 correct pixels of 3w.
+    let want = (2 * w - 1) as f64 / (3 * w) as f64;
+    assert!((pix - want).abs() < 1e-9, "per-pixel {pix} vs {want}");
+
+    // Padded chunk (5 examples, batch 3): padding must not be scored.
+    let test5 = vec![all4.clone(), all4.clone(), near4, all0, all4];
+    let acc5 = evaluator::arc_accuracy(&backend, &params, &test5).unwrap();
+    assert!((acc5 - 3.0 / 5.0).abs() < 1e-9, "padded exact-match {acc5}");
+}
+
+#[test]
+fn zero_params_predict_background_everywhere() {
+    // All-zero weights leave the logits at zero; argmax ties resolve to
+    // channel 0 = background. The paper's criterion then solves exactly
+    // the examples whose target is empty.
+    let spec = tiny_spec();
+    let backend = NativeTrainBackend::with_arc_spec(spec.clone(), 1);
+    let p = spec.param_count();
+    let params = Tensor::zeros(&[p]);
+    let w = spec.width;
+    let empty = Example { input: vec![3u8; w], target: vec![0u8; w] };
+    let full = Example { input: vec![0u8; w], target: vec![3u8; w] };
+    let acc = evaluator::arc_accuracy(&backend, &params,
+                                      &[empty, full]).unwrap();
+    assert!((acc - 0.5).abs() < 1e-9, "background prior accuracy {acc}");
+}
+
+#[test]
+fn for_call_infers_arc_geometry_from_tensors() {
+    // NativeBackend::train_step route: geometry from the call tensors.
+    use cax::backend::{Backend, NativeBackend};
+    let spec = ArcTrainSpec { width: 20, batch: 2,
+                              ..ArcTrainSpec::default() };
+    let donor = NativeTrainBackend::with_arc_spec(spec.clone(), 1);
+    let p = spec.param_count();
+    let params = donor.load_params("arc_params").unwrap();
+    let mut rng = Rng::new(3);
+    let examples: Vec<_> = (0..2)
+        .map(|_| cax::datasets::arc1d::Task::Fill.generate(20, &mut rng))
+        .collect();
+    let ins: Vec<&[u8]> =
+        examples.iter().map(|e| e.input.as_slice()).collect();
+    let tgts: Vec<&[u8]> =
+        examples.iter().map(|e| e.target.as_slice()).collect();
+    let inputs = vec![
+        Value::F32(params),
+        Value::F32(Tensor::zeros(&[p])),
+        Value::F32(Tensor::zeros(&[p])),
+        Value::I32(0),
+        Value::F32(one_hot_batch(&ins, 20)),
+        Value::F32(one_hot_batch(&tgts, 20)),
+        Value::U32(1),
+    ];
+    let out = NativeBackend::with_threads(2)
+        .train_step("arc_train_step", &inputs)
+        .unwrap();
+    assert_eq!(out.len(), 4);
+    assert!(out[3].data()[0].is_finite());
+}

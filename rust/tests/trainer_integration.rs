@@ -1,7 +1,8 @@
 //! Training integration.
 //!
 //! Default features: the native train path — growing NCA actually
-//! learns (hand-rolled BPTT + Adam, sample pool, no artifacts), and
+//! learns (hand-rolled BPTT + Adam, sample pool, no artifacts), the
+//! 1D-ARC NCA learns a Table-2 task to nonzero exact-match, and
 //! checkpoints round-trip through `TrainState`.
 //!
 //! With `--features pjrt` (+ artifacts): each neural CA's fused train
@@ -9,10 +10,13 @@
 //! computes the same math as the fused artifact.
 
 use cax::backend::native::opt::LrSchedule;
-use cax::backend::native::train::{NativeTrainBackend, NcaTrainSpec};
+use cax::backend::native::train::{
+    ArcTrainSpec, NativeTrainBackend, NcaTrainSpec,
+};
 use cax::backend::ProgramBackend;
-use cax::coordinator::experiments;
 use cax::coordinator::trainer::{train_loop, TrainCfg, TrainState};
+use cax::coordinator::{evaluator, experiments};
+use cax::datasets::arc1d::Task;
 use cax::datasets::mnist::{self, MnistConfig};
 use cax::runtime::Value;
 
@@ -65,6 +69,47 @@ fn native_growing_nca_loss_halves() {
              wanted <= {:.5}", 0.5 * initial);
     assert_eq!(pool.writes(), 200, "one pool write-back per step");
     assert!(pool.mean_age() < 16.0);
+}
+
+/// The 200-step native 1D-ARC acceptance run: the §5.3 pipeline —
+/// generate a split, train with `arc_train_step` through the shared
+/// experiments driver, score the paper's exact-match criterion — must
+/// halve the loss and solve held-out examples, hermetically. The
+/// prototype-validated margins are wide (loss ratio ~0.02-0.05 and
+/// exact-match ~1.0 on Move-1 across seeds for this geometry).
+#[test]
+fn native_arc_nca_learns_move1_to_nonzero_exact_match() {
+    let spec = ArcTrainSpec {
+        width: 16,
+        extra: 2,
+        hidden: 24,
+        batch: 4,
+        rollout_min: 8,
+        rollout_max: 12,
+        eval_steps: 10,
+        ..ArcTrainSpec::default()
+    };
+    let backend = NativeTrainBackend::with_arc_spec(spec, 4);
+    let task = Task::Move1;
+    let (train_set, test_set) =
+        experiments::arc_split(&backend, task, 64, 16, 11).unwrap();
+    assert_eq!(train_set[0].input.len(), 16, "split at the spec width");
+
+    let run = experiments::train_arc(&backend, &quick_cfg(200), task,
+                                     &train_set)
+        .unwrap();
+    let initial = run.history.values()[0];
+    let (_, last) = run.history.window_means(10);
+    assert!(last <= 0.5 * initial,
+            "arc (native): loss {initial:.5} -> {last:.5}, wanted <= {:.5}",
+            0.5 * initial);
+
+    let acc = evaluator::arc_accuracy(&backend, &run.state.params,
+                                      &test_set)
+        .unwrap();
+    assert!(acc > 0.0,
+            "Move-1 must solve at least one held-out example exactly \
+             (got {acc})");
 }
 
 #[test]
