@@ -43,6 +43,18 @@ pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
     Stats::from_samples(&samples)
 }
 
+/// Print one result row and collect it for the bench-report JSON.
+#[allow(dead_code)]
+pub fn push(rows: &mut Vec<cax::metrics::BenchRow>, label: &str,
+            stats: &Stats, items_per_iter: f64) {
+    row(label, stats, items_per_iter);
+    rows.push(cax::metrics::BenchRow {
+        label: label.to_string(),
+        stats: stats.clone(),
+        items_per_iter,
+    });
+}
+
 /// Print one result row: name, median, mean, p95, throughput.
 #[allow(dead_code)]
 pub fn row(name: &str, stats: &Stats, items: f64) {

@@ -1,0 +1,150 @@
+//! Fig. 3 extended to spectral Lenia: a radius sweep pitting the tiled
+//! sparse-tap kernel against the in-tree FFT kernel on a 256x256 board,
+//! plus Bluestein (non-power-of-two) and multi-kernel rows. Both arms
+//! run batch-parallel over the same worker pool, so the rows isolate
+//! the per-cell kernel cost — exactly the quantity the
+//! `select_path` crossover heuristic models (sparse ~ pi r^2 taps/cell,
+//! spectral ~ log2 hw butterflies/cell).
+//!
+//! Emits `BENCH_lenia_fft.json`. Acceptance anchor: the FFT kernel is
+//! >= 5x the sparse-tap kernel at radius >= 32 on this very board.
+//!
+//! Run: cargo bench --bench fig3_lenia [-- --quick]
+
+use cax::automata::lenia::{LeniaParams, LeniaWorld};
+use cax::backend::native::lenia::{
+    select_path, LeniaFft, LeniaKernel, LeniaPath,
+};
+use cax::backend::WorkerPool;
+use cax::metrics::{write_bench_report, BenchRow};
+use cax::tensor::Tensor;
+use cax::util::rng::Rng;
+
+mod bench_util;
+use bench_util::{bench, header, push, quick};
+
+/// Batch of soup boards as one `[B, H, W]` buffer.
+fn soup(b: usize, size: usize, rng: &mut Rng) -> Tensor {
+    Tensor::new(vec![b, size, size], rng.vec_f32(b * size * size)).unwrap()
+}
+
+fn main() {
+    let pool = WorkerPool::new();
+    let mut rng = Rng::new(42);
+    let mut rows: Vec<BenchRow> = vec![];
+    let (warm, iters) = if quick() { (0, 2) } else { (1, 4) };
+    let (b, size) = if quick() { (2, 128) } else { (4, 256) };
+    let steps = if quick() { 2 } else { 4 };
+    println!("worker pool: {} threads", pool.threads());
+
+    let radii: &[usize] =
+        if quick() { &[8, 32] } else { &[4, 8, 16, 32, 64] };
+    let mut at32 = (0.0f64, 0.0f64); // (sparse median, fft median)
+
+    for &radius in radii {
+        let params = LeniaParams { radius, ..Default::default() };
+        header(&format!(
+            "Lenia radius sweep — r={radius} ({b}x{size}x{size}, {steps} \
+             steps; crossover picks {})",
+            select_path(radius, size, size).name()
+        ));
+        let state = soup(b, size, &mut rng);
+        let updates = (b * size * size * steps) as f64;
+
+        let sparse_kernel = LeniaKernel::new(params);
+        let sparse = bench(warm, iters, || {
+            let mut data = state.data().to_vec();
+            pool.for_each_chunk(&mut data, size * size, |_, board| {
+                let mut scratch = vec![0.0f32; size * size];
+                sparse_kernel.rollout(board, &mut scratch, size, size,
+                                      steps);
+            });
+        });
+        let fft_kernel = LeniaFft::new(params, size, size).unwrap();
+        let fft = bench(warm, iters, || {
+            let mut data = state.data().to_vec();
+            pool.for_each_chunk(&mut data, size * size, |_, board| {
+                fft_kernel.rollout(board, steps);
+            });
+        });
+        push(&mut rows, &format!("lenia/r{radius}/sparse-tap"), &sparse,
+             updates);
+        push(&mut rows, &format!("lenia/r{radius}/fft"), &fft, updates);
+        let speedup = sparse.median / fft.median;
+        println!("  speedup: fft is {speedup:.1}x vs sparse-tap");
+        if radius == 32 {
+            at32 = (sparse.median, fft.median);
+        }
+    }
+
+    // Bluestein row: a non-power-of-two board at a spectral radius.
+    {
+        let radius = 32;
+        let nsize = if quick() { 100 } else { 250 };
+        let params = LeniaParams { radius, ..Default::default() };
+        header(&format!(
+            "Lenia Bluestein axes — r={radius} ({b}x{nsize}x{nsize}, \
+             {steps} steps)"
+        ));
+        let state = soup(b, nsize, &mut rng);
+        let updates = (b * nsize * nsize * steps) as f64;
+        let fft_kernel = LeniaFft::new(params, nsize, nsize).unwrap();
+        assert!(fft_kernel.is_bluestein());
+        let fft = bench(warm, iters, || {
+            let mut data = state.data().to_vec();
+            pool.for_each_chunk(&mut data, nsize * nsize, |_, board| {
+                fft_kernel.rollout(board, steps);
+            });
+        });
+        push(&mut rows, &format!("lenia/r{radius}/bluestein{nsize}"),
+             &fft, updates);
+    }
+
+    // Multi-kernel world row: 3 kernels on 2 channels, spectral only.
+    {
+        let kernels = 3;
+        let radius = if quick() { 16 } else { 32 };
+        let world = LeniaWorld::demo(kernels, radius);
+        header(&format!(
+            "Lenia multi-kernel world — K={kernels}, C={}, r={radius} \
+             ({b}x{size}x{size}, {steps} steps)",
+            world.channels
+        ));
+        let c = world.channels;
+        let state =
+            Tensor::new(vec![b, c, size, size],
+                        rng.vec_f32(b * c * size * size))
+                .unwrap();
+        let updates = (b * c * size * size * steps) as f64;
+        let plan = LeniaFft::for_world(world, size, size).unwrap();
+        let fft = bench(warm, iters, || {
+            let mut data = state.data().to_vec();
+            pool.for_each_chunk(&mut data, c * size * size, |_, board| {
+                plan.rollout(board, steps);
+            });
+        });
+        push(&mut rows, &format!("lenia/multi-k{kernels}-r{radius}/fft"),
+             &fft, updates);
+    }
+
+    if at32.1 > 0.0 {
+        let speedup = at32.0 / at32.1;
+        println!(
+            "\nacceptance: fft vs sparse-tap at r=32 on {size}x{size}: \
+             {speedup:.1}x (target >= 5x)"
+        );
+        assert!(
+            quick() || speedup >= 5.0,
+            "spectral Lenia below the 5x acceptance anchor: {speedup:.2}x"
+        );
+    }
+    // Verify the crossover constant tells the truth on this machine:
+    // the selected path must be the measured-faster one at the sweep's
+    // extremes (r=4 sparse, r=32+ fft on a 256 board).
+    assert_eq!(select_path(4, size, size), LeniaPath::SparseTap);
+    assert_eq!(select_path(64, size, size), LeniaPath::Fft);
+
+    let out = std::path::Path::new("BENCH_lenia_fft.json");
+    write_bench_report("fig3_lenia", &rows, out).unwrap();
+    println!("\nwrote {}", out.display());
+}

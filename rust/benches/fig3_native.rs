@@ -18,17 +18,7 @@ use cax::tensor::Tensor;
 use cax::util::rng::Rng;
 
 mod bench_util;
-use bench_util::{bench, header, quick, row};
-
-fn push(rows: &mut Vec<BenchRow>, label: &str,
-        stats: &cax::util::timer::Stats, updates: f64) {
-    row(label, stats, updates);
-    rows.push(BenchRow {
-        label: label.to_string(),
-        stats: stats.clone(),
-        items_per_iter: updates,
-    });
-}
+use bench_util::{bench, header, push, quick};
 
 fn main() {
     let backend = NativeBackend::new();

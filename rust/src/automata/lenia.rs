@@ -5,6 +5,14 @@
 //! 1e-4. Quadratic per-step cost in kernel size: exactly the cost profile a
 //! non-FFT CPU implementation has, which is the baseline story of Fig. 3
 //! extended to continuous CA.
+//!
+//! Besides the classic single-channel [`LeniaSim`], this module defines
+//! the generalized multi-channel / multi-kernel [`LeniaWorld`] (the
+//! Flow-Lenia-style parameter space) together with its scalar reference
+//! step — the oracle the spectral path in
+//! [`crate::backend::native::lenia`] is differentially tested against.
+
+use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -22,6 +30,16 @@ impl Default for LeniaParams {
     fn default() -> Self {
         LeniaParams { radius: 10, mu: 0.15, sigma: 0.017, dt: 0.1 }
     }
+}
+
+/// The Lenia growth mapping: a Gaussian bump over the neighborhood
+/// potential `u`, rescaled to `[-1, 1]`. One shared definition keeps the
+/// naive oracle, the sparse-tap kernel and the spectral path bit-identical
+/// in the growth stage (they may still differ in how they compute `u`).
+#[inline(always)]
+pub fn growth(u: f32, mu: f32, sigma: f32) -> f32 {
+    let z = (u - mu) / sigma;
+    2.0 * (-0.5 * z * z).exp() - 1.0
 }
 
 /// The standard Lenia ring kernel, normalized to sum 1 — identical to
@@ -96,9 +114,8 @@ impl LeniaSim {
                             * self.state.at(&[sy, sx]);
                     }
                 }
-                let z = (u - self.params.mu) / self.params.sigma;
-                let growth = 2.0 * (-0.5 * z * z).exp() - 1.0;
-                let v = self.state.at(&[y, x]) + self.params.dt * growth;
+                let g = growth(u, self.params.mu, self.params.sigma);
+                let v = self.state.at(&[y, x]) + self.params.dt * g;
                 next.set(&[y, x], v.clamp(0.0, 1.0));
             }
         }
@@ -114,6 +131,212 @@ impl LeniaSim {
     /// Total mass (sum of the field) — Lenia's standard health metric.
     pub fn mass(&self) -> f32 {
         self.state.data().iter().sum()
+    }
+}
+
+// ------------------------------------------- multi-channel / multi-kernel
+
+/// One convolution kernel of a [`LeniaWorld`]: a ring kernel of its own
+/// radius reading one source channel, with a per-kernel growth mapping
+/// and a row of the channel-mixing weight matrix.
+#[derive(Clone, Debug)]
+pub struct KernelSpec {
+    /// Channel this kernel convolves (`< world.channels`).
+    pub src: usize,
+    /// Ring-kernel radius (cells); must be `>= 2` — radius 1 has no
+    /// cells strictly inside the ring.
+    pub radius: usize,
+    /// Growth centre.
+    pub mu: f32,
+    /// Growth width.
+    pub sigma: f32,
+    /// Channel-mixing weights: `weights[c]` scales this kernel's growth
+    /// in channel `c`'s update (one row of the `K x C` mixing matrix).
+    pub weights: Vec<f32>,
+}
+
+/// Multi-channel, multi-kernel Lenia (the Flow-Lenia-style parameter
+/// space): `C` fields on one torus, `K` ring kernels each reading a
+/// source channel, per-kernel growth, and a `K x C` weight matrix mixing
+/// the growths into every channel's update:
+///
+/// ```text
+/// u_k      = ring(radius_k) * state[src_k]          (circular conv)
+/// g_k      = growth(u_k, mu_k, sigma_k)
+/// state[c] = clip(state[c] + dt * sum_k weights[k][c] * g_k, 0, 1)
+/// ```
+///
+/// [`LeniaWorld::single`] embeds the classic [`LeniaParams`] case as
+/// `C = 1, K = 1, weights = [1.0]` — every path that accepts a world
+/// reproduces the single-kernel behavior exactly on that embedding.
+#[derive(Clone, Debug)]
+pub struct LeniaWorld {
+    /// Number of state channels (fields on the torus).
+    pub channels: usize,
+    /// Shared integration step.
+    pub dt: f32,
+    /// The kernels, applied in order (growth accumulation is k-major,
+    /// so results are deterministic).
+    pub kernels: Vec<KernelSpec>,
+}
+
+impl LeniaWorld {
+    /// The classic single-channel world for `params` — the `1 x 1`
+    /// default every multi-kernel path must reproduce exactly.
+    pub fn single(params: LeniaParams) -> LeniaWorld {
+        LeniaWorld {
+            channels: 1,
+            dt: params.dt,
+            kernels: vec![KernelSpec {
+                src: 0,
+                radius: params.radius,
+                mu: params.mu,
+                sigma: params.sigma,
+                weights: vec![1.0],
+            }],
+        }
+    }
+
+    /// A deterministic K-kernel demo world for the CLI: one channel for
+    /// `K = 1`, two cross-mixed channels otherwise, growth centres and
+    /// widths spread smoothly over the kernels (the smooth-growth regime,
+    /// where trajectories are well-conditioned). Per-channel incoming
+    /// weight is normalized to 1 so `dt` keeps its single-kernel meaning.
+    pub fn demo(kernels: usize, radius: usize) -> LeniaWorld {
+        assert!(kernels >= 1, "LeniaWorld::demo: need at least one kernel");
+        let channels = if kernels == 1 { 1 } else { 2 };
+        let mut specs = Vec::with_capacity(kernels);
+        for k in 0..kernels {
+            let own = k % channels;
+            let mut weights = vec![0.0f32; channels];
+            if channels == 1 {
+                weights[0] = 1.0;
+            } else {
+                // Feed mostly the *other* channel so the demo world
+                // actually exercises channel mixing.
+                weights[own] = 0.3;
+                weights[(own + 1) % channels] = 0.7;
+            }
+            let t = k as f32 / kernels as f32;
+            specs.push(KernelSpec {
+                src: own,
+                radius,
+                mu: 0.25 + 0.10 * t,
+                sigma: 0.09 + 0.04 * t,
+                weights,
+            });
+        }
+        let mut incoming = vec![0.0f32; channels];
+        for spec in &specs {
+            for (acc, w) in incoming.iter_mut().zip(&spec.weights) {
+                *acc += w.abs();
+            }
+        }
+        for spec in &mut specs {
+            for (w, &total) in spec.weights.iter_mut().zip(&incoming) {
+                if total > 0.0 {
+                    *w /= total;
+                }
+            }
+        }
+        LeniaWorld { channels, dt: 0.1, kernels: specs }
+    }
+
+    /// Largest kernel radius (the board-size lower bound).
+    pub fn max_radius(&self) -> usize {
+        self.kernels.iter().map(|k| k.radius).max().unwrap_or(0)
+    }
+
+    /// Structural validation: non-empty, channels wired consistently,
+    /// radii usable. Shape-vs-board checks live in
+    /// [`crate::backend::validate_state`].
+    pub fn validate(&self) -> Result<()> {
+        if self.channels == 0 {
+            bail!("LeniaWorld: zero channels");
+        }
+        if self.kernels.is_empty() {
+            bail!("LeniaWorld: no kernels");
+        }
+        for (k, spec) in self.kernels.iter().enumerate() {
+            if spec.src >= self.channels {
+                bail!(
+                    "LeniaWorld: kernel {k} reads channel {} but the world \
+                     has {} channels",
+                    spec.src,
+                    self.channels
+                );
+            }
+            if spec.weights.len() != self.channels {
+                bail!(
+                    "LeniaWorld: kernel {k} carries {} mixing weights for \
+                     {} channels",
+                    spec.weights.len(),
+                    self.channels
+                );
+            }
+            if spec.radius < 2 {
+                bail!(
+                    "LeniaWorld: kernel {k} radius {} < 2 (the ring kernel \
+                     is empty below radius 2)",
+                    spec.radius
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// One scalar-reference step on a `[C, H, W]` board held as a
+    /// row-major slice — direct convolution, per-cell loops, f32
+    /// accumulation. This is the oracle the spectral path is tested
+    /// against; it is deliberately simple, not fast.
+    pub fn step_naive(&self, state: &[f32], next: &mut [f32], h: usize,
+                      w: usize) {
+        let hw = h * w;
+        assert_eq!(state.len(), self.channels * hw);
+        assert_eq!(next.len(), self.channels * hw);
+        // Per-kernel growth fields first (kernels may share channels).
+        let mut growths = vec![0.0f32; self.kernels.len() * hw];
+        for (k, spec) in self.kernels.iter().enumerate() {
+            let kernel = ring_kernel(spec.radius);
+            let r = spec.radius;
+            let ksz = 2 * r + 1;
+            let src = &state[spec.src * hw..(spec.src + 1) * hw];
+            let g = &mut growths[k * hw..(k + 1) * hw];
+            for y in 0..h {
+                for x in 0..w {
+                    let mut u = 0.0f32;
+                    for ky in 0..ksz {
+                        for kx in 0..ksz {
+                            let sy = (y + h + r - ky) % h;
+                            let sx = (x + w + r - kx) % w;
+                            u += kernel.at(&[ky, kx]) * src[sy * w + sx];
+                        }
+                    }
+                    g[y * w + x] = growth(u, spec.mu, spec.sigma);
+                }
+            }
+        }
+        for c in 0..self.channels {
+            for i in 0..hw {
+                let mut acc = 0.0f32;
+                for (k, spec) in self.kernels.iter().enumerate() {
+                    acc += spec.weights[c] * growths[k * hw + i];
+                }
+                next[c * hw + i] =
+                    (state[c * hw + i] + self.dt * acc).clamp(0.0, 1.0);
+            }
+        }
+    }
+
+    /// Run `steps` scalar-reference updates in place on one `[C, H, W]`
+    /// board.
+    pub fn rollout_naive(&self, board: &mut [f32], h: usize, w: usize,
+                         steps: usize) {
+        let mut scratch = vec![0.0f32; board.len()];
+        for _ in 0..steps {
+            self.step_naive(board, &mut scratch, h, w);
+            board.copy_from_slice(&scratch);
+        }
     }
 }
 
@@ -164,6 +387,77 @@ mod tests {
         let m0 = sim.mass();
         sim.step();
         assert!(sim.mass() < m0);
+    }
+
+    #[test]
+    fn world_single_step_naive_is_bit_exact_with_lenia_sim() {
+        // The 1x1 world's scalar reference walks the same taps in the
+        // same order with the same growth/update math as LeniaSim, so
+        // it must agree bit for bit.
+        let params = LeniaParams { radius: 4, ..Default::default() };
+        let mut rng = Rng::new(0x5111);
+        let mut sim = LeniaSim::random_patch(params, 24, 12, &mut rng);
+        let world = LeniaWorld::single(params);
+        let mut board = sim.state().data().to_vec();
+        world.rollout_naive(&mut board, 24, 24, 3);
+        sim.run(3);
+        for (i, (&a, &b)) in
+            board.iter().zip(sim.state().data()).enumerate()
+        {
+            assert!(a.to_bits() == b.to_bits(),
+                    "cell {i}: world {a} != sim {b}");
+        }
+    }
+
+    #[test]
+    fn world_validate_rejects_bad_wiring() {
+        let params = LeniaParams::default();
+        assert!(LeniaWorld::single(params).validate().is_ok());
+        let mut world = LeniaWorld::single(params);
+        world.kernels[0].src = 3;
+        assert!(world.validate().is_err(), "src out of range");
+        let mut world = LeniaWorld::single(params);
+        world.kernels[0].weights = vec![1.0, 0.5];
+        assert!(world.validate().is_err(), "weight row length");
+        let mut world = LeniaWorld::single(params);
+        world.kernels[0].radius = 1;
+        assert!(world.validate().is_err(), "radius 1 ring is empty");
+        let mut world = LeniaWorld::single(params);
+        world.kernels.clear();
+        assert!(world.validate().is_err(), "no kernels");
+    }
+
+    #[test]
+    fn demo_worlds_are_valid_and_normalized() {
+        for k in 1..=4 {
+            let world = LeniaWorld::demo(k, 6);
+            world.validate().unwrap();
+            assert_eq!(world.kernels.len(), k);
+            assert_eq!(world.channels, if k == 1 { 1 } else { 2 });
+            assert_eq!(world.max_radius(), 6);
+            // Every channel's incoming |weight| sums to ~1.
+            for c in 0..world.channels {
+                let total: f32 = world
+                    .kernels
+                    .iter()
+                    .map(|s| s.weights[c].abs())
+                    .sum();
+                assert!((total - 1.0).abs() < 1e-6,
+                        "k={k} channel {c} incoming {total}");
+            }
+        }
+    }
+
+    #[test]
+    fn world_step_keeps_unit_interval_and_mixes_channels() {
+        let world = LeniaWorld::demo(2, 3);
+        let (h, w) = (16, 16);
+        let mut rng = Rng::new(0x2C7);
+        let mut board = rng.vec_f32(world.channels * h * w);
+        let before = board.clone();
+        world.rollout_naive(&mut board, h, w, 2);
+        assert!(board.iter().all(|v| (0.0..=1.0).contains(v)));
+        assert!(board != before, "world should evolve");
     }
 
     #[test]

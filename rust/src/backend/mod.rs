@@ -7,8 +7,10 @@
 //!
 //! - [`NativeBackend`] (always available): pure-Rust kernels —
 //!   bit-packed u64 SWAR for the discrete CAs (64 cells per word),
-//!   cache-tiled f32 for the continuous/neural paths — parallelized
-//!   across batch elements with a scoped-thread [`workers::WorkerPool`].
+//!   cache-tiled f32 for the continuous/neural paths, spectral FFT
+//!   Lenia above the size crossover (in-tree transforms, no deps) —
+//!   parallelized across batch elements with a scoped-thread
+//!   [`workers::WorkerPool`].
 //! - [`NativeTrainBackend`] (always available): hand-rolled BPTT +
 //!   Adam train/eval programs for the growing-NCA, MNIST-classifier
 //!   and 1D-ARC workloads (`native::nca_grad` / `native::opt` /
@@ -36,7 +38,7 @@ pub mod workers;
 
 use anyhow::{bail, Result};
 
-use crate::automata::lenia::LeniaParams;
+use crate::automata::lenia::{LeniaParams, LeniaWorld};
 use crate::automata::WolframRule;
 use crate::runtime::manifest::{Dtype, Manifest};
 use crate::tensor::Tensor;
@@ -92,6 +94,9 @@ pub enum CaProgram {
     Life,
     /// Lenia on `[B, H, W]` states in `[0,1]`, periodic.
     Lenia { params: LeniaParams },
+    /// Generalized multi-channel / multi-kernel Lenia on `[B, C, H, W]`
+    /// states in `[0,1]`, periodic — runs the native spectral path.
+    LeniaMulti(LeniaWorld),
     /// A neural-CA forward cell (depthwise perceive + per-cell MLP) on
     /// `[B, H, W, C]` states — the native NCA inference path.
     Nca(native::nca::NcaModel),
@@ -103,6 +108,7 @@ impl CaProgram {
             CaProgram::Eca { .. } => "eca",
             CaProgram::Life => "life",
             CaProgram::Lenia { .. } => "lenia",
+            CaProgram::LeniaMulti(_) => "lenia-multi",
             CaProgram::Nca(_) => "nca",
         }
     }
@@ -112,7 +118,7 @@ impl CaProgram {
         match self {
             CaProgram::Eca { .. } => 2,
             CaProgram::Life | CaProgram::Lenia { .. } => 3,
-            CaProgram::Nca(_) => 4,
+            CaProgram::LeniaMulti(_) | CaProgram::Nca(_) => 4,
         }
     }
 }
@@ -252,6 +258,15 @@ pub fn validate_state(prog: &CaProgram, state: &Tensor) -> Result<()> {
             }
         }
         CaProgram::Lenia { params } => {
+            // The ring kernel has no cells strictly inside the ring
+            // below radius 2 — its zero sum would normalize to NaN.
+            if params.radius < 2 {
+                bail!(
+                    "lenia radius {} < 2 (the ring kernel is empty below \
+                     radius 2)",
+                    params.radius
+                );
+            }
             // The wrap index `(y + h + r - ky) % h` (shared with the
             // naive oracle) needs h, w >= radius to stay non-negative.
             let (h, w) = (state.shape()[1], state.shape()[2]);
@@ -260,6 +275,26 @@ pub fn validate_state(prog: &CaProgram, state: &Tensor) -> Result<()> {
                     "lenia radius {r} needs a board of at least {r}x{r}, \
                      got {h}x{w}",
                     r = params.radius
+                );
+            }
+        }
+        CaProgram::LeniaMulti(world) => {
+            world.validate()?;
+            let (c, h, w) =
+                (state.shape()[1], state.shape()[2], state.shape()[3]);
+            if c != world.channels {
+                bail!(
+                    "lenia world has {} channels but state shape {:?} \
+                     carries {c}",
+                    world.channels,
+                    state.shape()
+                );
+            }
+            let r = world.max_radius();
+            if h < r || w < r {
+                bail!(
+                    "lenia radius {r} needs a board of at least {r}x{r}, \
+                     got {h}x{w}"
                 );
             }
         }
@@ -303,6 +338,30 @@ mod tests {
     }
 
     #[test]
+    fn validate_checks_lenia_world_shape_and_wiring() {
+        let world = LeniaWorld::demo(2, 4);
+        let prog = CaProgram::LeniaMulti(world.clone());
+        assert_eq!(prog.state_rank(), 4);
+        assert_eq!(prog.name(), "lenia-multi");
+        assert!(validate_state(&prog, &Tensor::zeros(&[1, 2, 16, 16]))
+            .is_ok());
+        // Channel count must match the world.
+        assert!(validate_state(&prog, &Tensor::zeros(&[1, 3, 16, 16]))
+            .is_err());
+        // Board must fit the largest radius.
+        assert!(validate_state(&prog, &Tensor::zeros(&[1, 2, 3, 3]))
+            .is_err());
+        // Structural problems surface too.
+        let mut bad = world;
+        bad.kernels[0].src = 9;
+        assert!(validate_state(
+            &CaProgram::LeniaMulti(bad),
+            &Tensor::zeros(&[1, 2, 16, 16])
+        )
+        .is_err());
+    }
+
+    #[test]
     fn validate_rejects_lenia_radius_larger_than_board() {
         let prog = CaProgram::Lenia {
             params: LeniaParams { radius: 10, ..Default::default() },
@@ -311,5 +370,11 @@ mod tests {
             validate_state(&prog, &Tensor::zeros(&[1, 8, 8])).unwrap_err();
         assert!(format!("{err}").contains("radius 10"));
         assert!(validate_state(&prog, &Tensor::zeros(&[1, 32, 32])).is_ok());
+        // Radius < 2 would normalize the empty ring kernel to NaN.
+        let tiny = CaProgram::Lenia {
+            params: LeniaParams { radius: 1, ..Default::default() },
+        };
+        assert!(validate_state(&tiny, &Tensor::zeros(&[1, 32, 32]))
+            .is_err());
     }
 }

@@ -1,10 +1,11 @@
-//! Cache-tiled Lenia kernel.
+//! Native Lenia kernels: the cache-tiled sparse-tap path and the
+//! spectral FFT path, plus the size-adaptive crossover between them.
 //!
-//! Semantics are *identical* to [`crate::automata::LeniaSim`] — same
-//! ring kernel, growth mapping and clip, and crucially the same f32
-//! accumulation order (kernel-row-major taps) — so results are
-//! bit-exact with the naive oracle. The speed comes from three
-//! mechanical changes, none of which alter the math:
+//! **Sparse-tap** ([`LeniaKernel`]): semantics *identical* to
+//! [`crate::automata::LeniaSim`] — same ring kernel, growth mapping and
+//! clip, and crucially the same f32 accumulation order (kernel-row-major
+//! taps) — so results are bit-exact with the naive oracle. The speed
+//! comes from three mechanical changes, none of which alter the math:
 //!
 //! - zero-weight kernel taps are skipped (the ring kernel is ~2/3
 //!   zeros; adding `0.0 * s` never changes a non-negative f32 sum),
@@ -13,11 +14,29 @@
 //! - the output is walked in cache-sized tiles so the wrapped input
 //!   rows a tile touches stay resident.
 //!
+//! **Spectral** ([`LeniaFft`]): each ring kernel's torus-embedded
+//! spectrum is computed once; a step is then FFT → multiply → inverse
+//! FFT per kernel (f64 via [`super::fft`]) followed by the same f32
+//! growth/update stage. Per-cell cost is `O(log hw)` instead of
+//! `O(radius^2)`, which is the paper's Fig. 3 Lenia speedup mechanism.
+//! The spectral path also runs the generalized multi-channel /
+//! multi-kernel [`LeniaWorld`]s. Convolution in f64 is exact at f32
+//! resolution, so it matches the oracle to ~1e-6 per step; over long
+//! horizons the differential contract is 1e-4 (see
+//! `tests/native_fft_props.rs` for why trajectories in the
+//! narrow-growth regime cannot be compared much tighter).
+//!
+//! [`select_path`] picks between the two per (radius, board): sparse-tap
+//! below the measured crossover, FFT above it.
+//!
 //! Batch elements are independent; the backend parallelizes across
-//! them with the worker pool.
+//! them with the worker pool in both paths.
 
+use anyhow::{bail, Result};
+
+use super::fft::{Complex, Fft2};
 use super::wrap_shift;
-use crate::automata::lenia::{ring_kernel, LeniaParams};
+use crate::automata::lenia::{growth, ring_kernel, LeniaParams, LeniaWorld};
 
 /// Precomputed sparse ring kernel + growth parameters.
 #[derive(Clone, Debug)]
@@ -73,9 +92,8 @@ impl LeniaKernel {
                             let sx = wrap_shift(x, w, r, kx);
                             u += weight * state[sy * w + sx];
                         }
-                        let z = (u - mu) / sigma;
-                        let growth = 2.0 * (-0.5 * z * z).exp() - 1.0;
-                        let v = state[y * w + x] + dt * growth;
+                        let g = growth(u, mu, sigma);
+                        let v = state[y * w + x] + dt * g;
                         next[y * w + x] = v.clamp(0.0, 1.0);
                     }
                 }
@@ -92,6 +110,242 @@ impl LeniaKernel {
         for _ in 0..steps {
             self.step(board, scratch, h, w);
             board.copy_from_slice(scratch);
+        }
+    }
+}
+
+// ----------------------------------------------------- path selection
+
+/// Which kernel implementation the native backend runs for a Lenia
+/// radius on an `h x w` board.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeniaPath {
+    /// Cache-tiled direct convolution — bit-exact with the naive
+    /// oracle, `O(radius^2)` per cell.
+    SparseTap,
+    /// Spectral convolution — `O(log hw)` per cell, ~1e-6/step from
+    /// the oracle.
+    Fft,
+}
+
+impl LeniaPath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LeniaPath::SparseTap => "sparse-tap",
+            LeniaPath::Fft => "fft",
+        }
+    }
+}
+
+/// Crossover constant, calibrated with `benches/fig3_lenia.rs` (see the
+/// README's crossover note): per-cell sparse-tap cost is the tap count
+/// (~`pi r^2` f32 mul-adds), per-cell spectral cost is ~this many
+/// equivalent tap-ops per `log2` unit of transform length (f64 complex
+/// butterflies across forward + inverse, spread over the board).
+const FFT_COST_PER_LOG2: f64 = 48.0;
+
+/// Bluestein runs a chirp-modulated power-of-two convolution at ~2-4x
+/// the length, so non-power-of-two axes count this much extra.
+const BLUESTEIN_PENALTY: f64 = 4.0;
+
+/// Pick the cheaper Lenia path for one radius on an `h x w` board.
+///
+/// The decision depends only on the geometry — never on thread count or
+/// data — so results stay deterministic for a given state shape. The
+/// paper-default radius 10 stays on the bit-exact sparse-tap path for
+/// every paper-scale grid; the model's crossover sits at radius 16 on a
+/// 256x256 board (15 at 128x128) and radius 32 on a 250x250 Bluestein
+/// board. The constant is deliberately conservative: measured FFT
+/// per-step cost is usually below the model, so everything at or above
+/// the crossover is safely spectral.
+pub fn select_path(radius: usize, h: usize, w: usize) -> LeniaPath {
+    let taps = std::f64::consts::PI * (radius as f64) * (radius as f64);
+    let axis = |n: usize| {
+        let l = (n.max(2) as f64).log2();
+        if n.is_power_of_two() {
+            l
+        } else {
+            BLUESTEIN_PENALTY * l
+        }
+    };
+    if taps > FFT_COST_PER_LOG2 * (axis(h) + axis(w)) {
+        LeniaPath::Fft
+    } else {
+        LeniaPath::SparseTap
+    }
+}
+
+// ----------------------------------------------------- spectral kernel
+
+/// Spectral Lenia stepper over a [`LeniaWorld`] on a fixed `h x w`
+/// torus: every ring kernel's spectrum is precomputed once, each step
+/// does one forward FFT per *used* source channel and one multiply +
+/// inverse FFT per kernel, then the shared f32 growth/update stage.
+///
+/// The classic single-kernel case is [`LeniaFft::new`], which wraps the
+/// `1 x 1` [`LeniaWorld::single`] embedding — there is exactly one code
+/// path, so the multi-kernel engine reproduces single-kernel behavior
+/// bit for bit on that embedding.
+#[derive(Clone, Debug)]
+pub struct LeniaFft {
+    world: LeniaWorld,
+    h: usize,
+    w: usize,
+    fft: Fft2,
+    /// Per-kernel spectrum of the torus-embedded ring kernel.
+    khat: Vec<Vec<Complex>>,
+    /// Which channels at least one kernel reads (others skip their
+    /// forward transform).
+    src_used: Vec<bool>,
+}
+
+/// Reusable per-board scratch for [`LeniaFft::step_with`] — one
+/// spectrum per channel, one frequency workspace, one growth field per
+/// kernel. [`LeniaFft::rollout`] allocates it once per board.
+#[derive(Clone, Debug)]
+pub struct LeniaFftScratch {
+    chat: Vec<Vec<Complex>>,
+    freq: Vec<Complex>,
+    growths: Vec<f32>,
+}
+
+impl LeniaFftScratch {
+    pub fn new(plan: &LeniaFft) -> LeniaFftScratch {
+        let hw = plan.h * plan.w;
+        LeniaFftScratch {
+            chat: vec![vec![Complex::ZERO; hw]; plan.world.channels],
+            freq: vec![Complex::ZERO; hw],
+            growths: vec![0.0f32; plan.world.kernels.len() * hw],
+        }
+    }
+}
+
+impl LeniaFft {
+    /// Plan for the classic single-channel, single-kernel case.
+    pub fn new(params: LeniaParams, h: usize, w: usize) -> Result<LeniaFft> {
+        LeniaFft::for_world(LeniaWorld::single(params), h, w)
+    }
+
+    /// Plan for a generalized world on an `h x w` torus.
+    pub fn for_world(world: LeniaWorld, h: usize, w: usize)
+        -> Result<LeniaFft> {
+        world.validate()?;
+        let r = world.max_radius();
+        if h < r || w < r {
+            bail!(
+                "LeniaFft: radius {r} needs a board of at least {r}x{r}, \
+                 got {h}x{w}"
+            );
+        }
+        let fft = Fft2::new(h, w);
+        let mut khat = Vec::with_capacity(world.kernels.len());
+        let mut src_used = vec![false; world.channels];
+        for spec in &world.kernels {
+            src_used[spec.src] = true;
+            let dense = ring_kernel(spec.radius);
+            let ksz = 2 * spec.radius + 1;
+            let mut grid = vec![Complex::ZERO; h * w];
+            for ky in 0..ksz {
+                for kx in 0..ksz {
+                    let v = dense.at(&[ky, kx]) as f64;
+                    if v != 0.0 {
+                        // The oracle taps s[(y + r - ky) mod h], i.e.
+                        // kernel cell (ky, kx) convolves from offset
+                        // (ky - r, kx - r): embed it there on the torus.
+                        // Offsets that collide under wrap (2r >= h)
+                        // accumulate, exactly as the wrapped taps do.
+                        let ey = (ky + h - spec.radius) % h;
+                        let ex = (kx + w - spec.radius) % w;
+                        grid[ey * w + ex].re += v;
+                    }
+                }
+            }
+            fft.forward(&mut grid);
+            khat.push(grid);
+        }
+        Ok(LeniaFft { world, h, w, fft, khat, src_used })
+    }
+
+    pub fn world(&self) -> &LeniaWorld {
+        &self.world
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    /// Whether any axis runs the Bluestein (non-power-of-two) path.
+    pub fn is_bluestein(&self) -> bool {
+        !(self.h.is_power_of_two() && self.w.is_power_of_two())
+    }
+
+    /// The circular ring-kernel convolution `u_k` of kernel `k` over one
+    /// `[H, W]` field — the raw neighborhood potential, before growth
+    /// (the differential tests compare it directly against tap sums).
+    pub fn convolve(&self, k: usize, field: &[f32]) -> Vec<f32> {
+        assert_eq!(field.len(), self.h * self.w);
+        let mut freq = vec![Complex::ZERO; self.h * self.w];
+        self.fft.load_real(field, &mut freq);
+        self.fft.forward(&mut freq);
+        for (v, &kv) in freq.iter_mut().zip(&self.khat[k]) {
+            *v = *v * kv;
+        }
+        self.fft.inverse(&mut freq);
+        freq.iter().map(|c| c.re as f32).collect()
+    }
+
+    /// One spectral step on a `[C, H, W]` board, reusing `scratch`.
+    pub fn step_with(&self, state: &[f32], next: &mut [f32],
+                     scratch: &mut LeniaFftScratch) {
+        let hw = self.h * self.w;
+        let c = self.world.channels;
+        assert_eq!(state.len(), c * hw, "LeniaFft: state length");
+        assert_eq!(next.len(), c * hw, "LeniaFft: next length");
+        for ch in 0..c {
+            if !self.src_used[ch] {
+                continue;
+            }
+            let buf = &mut scratch.chat[ch];
+            self.fft.load_real(&state[ch * hw..(ch + 1) * hw], buf);
+            self.fft.forward(buf);
+        }
+        for (k, spec) in self.world.kernels.iter().enumerate() {
+            scratch.freq.copy_from_slice(&scratch.chat[spec.src]);
+            for (v, &kv) in scratch.freq.iter_mut().zip(&self.khat[k]) {
+                *v = *v * kv;
+            }
+            self.fft.inverse(&mut scratch.freq);
+            let g = &mut scratch.growths[k * hw..(k + 1) * hw];
+            for (gv, fv) in g.iter_mut().zip(&scratch.freq) {
+                *gv = growth(fv.re as f32, spec.mu, spec.sigma);
+            }
+        }
+        let dt = self.world.dt;
+        for ch in 0..c {
+            for i in 0..hw {
+                let mut acc = 0.0f32;
+                for (k, spec) in self.world.kernels.iter().enumerate() {
+                    acc += spec.weights[ch] * scratch.growths[k * hw + i];
+                }
+                next[ch * hw + i] =
+                    (state[ch * hw + i] + dt * acc).clamp(0.0, 1.0);
+            }
+        }
+    }
+
+    /// One spectral step with throwaway scratch.
+    pub fn step(&self, state: &[f32], next: &mut [f32]) {
+        let mut scratch = LeniaFftScratch::new(self);
+        self.step_with(state, next, &mut scratch);
+    }
+
+    /// Run `steps` spectral updates in place on one `[C, H, W]` board.
+    pub fn rollout(&self, board: &mut [f32], steps: usize) {
+        let mut scratch = LeniaFftScratch::new(self);
+        let mut next = vec![0.0f32; board.len()];
+        for _ in 0..steps {
+            self.step_with(board, &mut next, &mut scratch);
+            board.copy_from_slice(&next);
         }
     }
 }
@@ -153,5 +407,104 @@ mod tests {
         let mut scratch = vec![0.0f32; h * w];
         kernel.rollout(&mut board, &mut scratch, h, w, 6);
         assert!(board.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn select_path_crossover_is_sane() {
+        // Paper-default radius stays on the bit-exact path at paper
+        // scales; large radii go spectral.
+        assert_eq!(select_path(10, 128, 128), LeniaPath::SparseTap);
+        assert_eq!(select_path(10, 40, 40), LeniaPath::SparseTap);
+        assert_eq!(select_path(32, 256, 256), LeniaPath::Fft);
+        assert_eq!(select_path(32, 64, 64), LeniaPath::Fft);
+        assert_eq!(select_path(64, 250, 250), LeniaPath::Fft);
+        // Monotone in radius for a fixed board.
+        let mut seen_fft = false;
+        for r in 2..=64 {
+            let fft = select_path(r, 256, 256) == LeniaPath::Fft;
+            assert!(!seen_fft || fft, "path flipped back at radius {r}");
+            seen_fft = fft;
+        }
+        assert!(seen_fft);
+        assert_eq!(LeniaPath::SparseTap.name(), "sparse-tap");
+        assert_eq!(LeniaPath::Fft.name(), "fft");
+    }
+
+    #[test]
+    fn spectral_single_step_matches_naive_oracle() {
+        // One step in the sensitive growth regime: convolution in f64
+        // keeps the spectral path within ~1e-6 of the f32 tap sums.
+        let params = LeniaParams { radius: 5, ..Default::default() };
+        let (h, w) = (33, 29); // both Bluestein
+        let mut rng = Rng::new(0xFF7A);
+        let mut board = Tensor::zeros(&[h, w]);
+        for y in 8..25 {
+            for x in 6..22 {
+                board.set(&[y, x], rng.next_f32());
+            }
+        }
+        let mut sim = LeniaSim::new(params, board.clone());
+        let plan = LeniaFft::new(params, h, w).unwrap();
+        assert!(plan.is_bluestein());
+        let mut next = vec![0.0f32; h * w];
+        plan.step(board.data(), &mut next);
+        sim.step();
+        let mut worst = 0.0f32;
+        for (&a, &b) in next.iter().zip(sim.state().data()) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst <= 1e-5, "spectral drifted {worst} in one step");
+    }
+
+    #[test]
+    fn spectral_new_is_the_single_world_embedding_bitwise() {
+        let params = LeniaParams { radius: 4, ..Default::default() };
+        let (h, w) = (24, 24);
+        let single = LeniaFft::new(params, h, w).unwrap();
+        let world =
+            LeniaFft::for_world(LeniaWorld::single(params), h, w).unwrap();
+        let mut rng = Rng::new(0xE0);
+        let mut a = rng.vec_f32(h * w);
+        let mut b = a.clone();
+        single.rollout(&mut a, 4);
+        world.rollout(&mut b, 4);
+        assert!(
+            a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "LeniaFft::new must be exactly the 1x1 world embedding"
+        );
+    }
+
+    #[test]
+    fn spectral_rollout_stays_in_unit_interval_and_reuses_scratch() {
+        let world = LeniaWorld::demo(3, 4);
+        let (h, w) = (20, 18);
+        let plan = LeniaFft::for_world(world.clone(), h, w).unwrap();
+        let mut rng = Rng::new(0x5C);
+        let mut board = rng.vec_f32(world.channels * h * w);
+        let stepped = {
+            // step_with twice over one scratch == two fresh steps.
+            let mut scratch = LeniaFftScratch::new(&plan);
+            let mut cur = board.clone();
+            let mut next = vec![0.0f32; cur.len()];
+            for _ in 0..2 {
+                plan.step_with(&cur, &mut next, &mut scratch);
+                cur.copy_from_slice(&next);
+            }
+            cur
+        };
+        plan.rollout(&mut board, 2);
+        assert!(board.iter().all(|v| (0.0..=1.0).contains(v)));
+        assert!(
+            board.iter().zip(&stepped).all(|(x, y)| x.to_bits() == y.to_bits())
+        );
+    }
+
+    #[test]
+    fn spectral_rejects_bad_geometry() {
+        let params = LeniaParams { radius: 10, ..Default::default() };
+        assert!(LeniaFft::new(params, 8, 8).is_err(), "board < radius");
+        let mut world = LeniaWorld::single(params);
+        world.kernels[0].src = 5;
+        assert!(LeniaFft::for_world(world, 32, 32).is_err(), "bad wiring");
     }
 }

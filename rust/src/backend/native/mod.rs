@@ -3,7 +3,10 @@
 //! - [`bits`]: bit-packed row substrate (64 cells per u64, periodic).
 //! - [`eca`]: SWAR elementary-CA kernel.
 //! - [`life`]: SWAR Game-of-Life kernel (carry-save neighbour counts).
-//! - [`lenia`]: cache-tiled sparse-tap Lenia kernel.
+//! - [`fft`]: in-tree FFTs (iterative Cooley–Tukey + Bluestein).
+//! - [`lenia`]: cache-tiled sparse-tap Lenia kernel, the spectral
+//!   FFT kernel (single- and multi-kernel worlds), and the
+//!   size-adaptive crossover between them.
 //! - [`nca`]: depthwise-conv + per-cell-MLP neural-CA forward kernel,
 //!   dimension-parametric over [`nca::Grid`] (2D torus, 1D ring).
 //! - [`nca_grad`]: reverse-mode BPTT through the NCA cell (training),
@@ -20,6 +23,7 @@
 
 pub mod bits;
 pub mod eca;
+pub mod fft;
 pub mod lenia;
 pub mod life;
 pub mod nca;
@@ -137,17 +141,46 @@ impl NativeBackend {
         Tensor::new(vec![b, h, w], out)
     }
 
+    /// Size-adaptive Lenia: sparse-tap (bit-exact with the oracle) below
+    /// the [`lenia::select_path`] crossover, spectral FFT above it. The
+    /// choice depends only on (radius, h, w), so results are
+    /// deterministic for a given program + state shape.
     fn lenia_rollout(&self, params: crate::automata::lenia::LeniaParams,
                      state: &Tensor, steps: usize) -> Result<Tensor> {
         let (b, h, w) =
             (state.shape()[0], state.shape()[1], state.shape()[2]);
-        let kernel = lenia::LeniaKernel::new(params);
         let mut data = state.data().to_vec();
-        self.pool.for_each_chunk(&mut data, h * w, |_, board| {
-            let mut scratch = vec![0.0f32; h * w];
-            kernel.rollout(board, &mut scratch, h, w, steps);
-        });
+        match lenia::select_path(params.radius, h, w) {
+            lenia::LeniaPath::SparseTap => {
+                let kernel = lenia::LeniaKernel::new(params);
+                self.pool.for_each_chunk(&mut data, h * w, |_, board| {
+                    let mut scratch = vec![0.0f32; h * w];
+                    kernel.rollout(board, &mut scratch, h, w, steps);
+                });
+            }
+            lenia::LeniaPath::Fft => {
+                let plan = lenia::LeniaFft::new(params, h, w)?;
+                self.pool.for_each_chunk(&mut data, h * w, |_, board| {
+                    plan.rollout(board, steps);
+                });
+            }
+        }
         Tensor::new(vec![b, h, w], data)
+    }
+
+    /// Generalized multi-channel / multi-kernel Lenia on `[B, C, H, W]`
+    /// states — always spectral (the whole point of the multi form is
+    /// large/many kernels).
+    fn lenia_world_rollout(&self, world: &crate::automata::lenia::LeniaWorld,
+                           state: &Tensor, steps: usize) -> Result<Tensor> {
+        let shape = state.shape().to_vec();
+        let (c, h, w) = (shape[1], shape[2], shape[3]);
+        let plan = lenia::LeniaFft::for_world(world.clone(), h, w)?;
+        let mut data = state.data().to_vec();
+        self.pool.for_each_chunk(&mut data, c * h * w, |_, board| {
+            plan.rollout(board, steps);
+        });
+        Tensor::new(shape, data)
     }
 
     fn nca_rollout(&self, model: &nca::NcaModel, state: &Tensor,
@@ -180,6 +213,9 @@ impl Backend for NativeBackend {
             CaProgram::Life => self.life_rollout(state, steps),
             CaProgram::Lenia { params } => {
                 self.lenia_rollout(*params, state, steps)
+            }
+            CaProgram::LeniaMulti(world) => {
+                self.lenia_world_rollout(world, state, steps)
             }
             CaProgram::Nca(model) => self.nca_rollout(model, state, steps),
         }

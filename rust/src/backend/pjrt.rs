@@ -48,7 +48,7 @@ impl Backend for PjrtBackend<'_> {
     }
 
     fn supports(&self, prog: &CaProgram) -> bool {
-        !matches!(prog, CaProgram::Nca(_))
+        !matches!(prog, CaProgram::Nca(_) | CaProgram::LeniaMulti(_))
     }
 
     fn rollout(&self, prog: &CaProgram, state: &Tensor, steps: usize)
@@ -89,6 +89,12 @@ impl Backend for PjrtBackend<'_> {
                 bail!(
                     "PjrtBackend has no generic NCA program; use the named \
                      rollout artifacts via ProgramBackend::execute"
+                )
+            }
+            CaProgram::LeniaMulti(_) => {
+                bail!(
+                    "multi-kernel Lenia worlds run on the native spectral \
+                     path (`--backend native`); no artifact exists for them"
                 )
             }
         }

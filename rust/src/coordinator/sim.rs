@@ -11,7 +11,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::automata::lenia::LeniaParams;
+use crate::automata::lenia::{LeniaParams, LeniaWorld};
 use crate::automata::{EcaSim, LeniaSim, LifeSim, WolframRule};
 use crate::backend::{Backend, CaProgram, NativeBackend, ProgramBackend,
                      Value};
@@ -251,6 +251,14 @@ impl<'e> Simulator<'e> {
 
     pub fn run_lenia(&self, path: Path, state: &Tensor, steps: usize)
                      -> Result<Tensor> {
+        self.run_lenia_params(path, self.lenia_params(), state, steps)
+    }
+
+    /// As [`run_lenia`](Self::run_lenia) with explicit world parameters.
+    /// `params` drives the naive/native paths; the XLA paths always run
+    /// the kernel baked into their artifacts.
+    pub fn run_lenia_params(&self, path: Path, params: LeniaParams,
+                            state: &Tensor, steps: usize) -> Result<Tensor> {
         match path {
             Path::Fused => {
                 let kfft = self.lenia_kernel()?;
@@ -274,7 +282,6 @@ impl<'e> Simulator<'e> {
                 Ok(cur)
             }
             Path::Naive => {
-                let params = self.lenia_params();
                 // Same wrap-index precondition the native backend checks.
                 crate::backend::validate_state(
                     &CaProgram::Lenia { params }, state,
@@ -291,10 +298,48 @@ impl<'e> Simulator<'e> {
                 Tensor::stack(&outs)
             }
             Path::Native => {
-                let params = self.lenia_params();
                 self.native
                     .rollout(&CaProgram::Lenia { params }, state, steps)
             }
+        }
+    }
+
+    /// Which native kernel path [`Path::Native`] Lenia takes for this
+    /// radius and board — surfaced so the CLI/benches can report it.
+    pub fn lenia_native_path(params: LeniaParams, h: usize, w: usize)
+        -> &'static str {
+        crate::backend::native::lenia::select_path(params.radius, h, w)
+            .name()
+    }
+
+    /// Generalized multi-channel / multi-kernel Lenia on `[B, C, H, W]`
+    /// states. `Native` runs the spectral path; `Naive` runs the scalar
+    /// reference oracle; the XLA paths have no artifact for worlds.
+    pub fn run_lenia_world(&self, path: Path, world: &LeniaWorld,
+                           state: &Tensor, steps: usize) -> Result<Tensor> {
+        match path {
+            Path::Native => self.native.rollout(
+                &CaProgram::LeniaMulti(world.clone()),
+                state,
+                steps,
+            ),
+            Path::Naive => {
+                let prog = CaProgram::LeniaMulti(world.clone());
+                crate::backend::validate_state(&prog, state)?;
+                let shape = state.shape().to_vec();
+                let (h, w) = (shape[2], shape[3]);
+                let chw: usize = shape[1..].iter().product();
+                let mut data = state.data().to_vec();
+                for board in data.chunks_mut(chw) {
+                    world.rollout_naive(board, h, w, steps);
+                }
+                Tensor::new(shape, data)
+            }
+            Path::Fused | Path::Stepwise => Err(anyhow!(
+                "multi-kernel Lenia worlds run on --path native (spectral) \
+                 or --path naive (scalar reference); no XLA artifact \
+                 exists for them"
+            )),
         }
     }
 
@@ -374,6 +419,61 @@ mod tests {
         let naive = sim.run_eca(Path::Naive, &state, rule, 9).unwrap();
         let native = sim.run_eca(Path::Native, &state, rule, 9).unwrap();
         assert!(naive.bit_eq(&native));
+    }
+
+    #[test]
+    fn lenia_world_native_matches_naive_reference() {
+        let sim = Simulator::native_only();
+        let world = LeniaWorld::demo(2, 4);
+        let mut rng = Rng::new(0x77D);
+        let state = Tensor::new(
+            vec![2, world.channels, 24, 20],
+            rng.vec_f32(2 * world.channels * 24 * 20),
+        )
+        .unwrap();
+        let a = sim
+            .run_lenia_world(Path::Native, &world, &state, 4)
+            .unwrap();
+        let b = sim
+            .run_lenia_world(Path::Naive, &world, &state, 4)
+            .unwrap();
+        assert_eq!(a.shape(), state.shape());
+        let diff = a.max_abs_diff(&b).unwrap();
+        assert!(diff <= 1e-4, "world paths drifted {diff}");
+        let err = sim
+            .run_lenia_world(Path::Fused, &world, &state, 1)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("native"));
+    }
+
+    #[test]
+    fn lenia_custom_radius_spectral_path_matches_naive() {
+        // radius 32 on 64x64 sits above the crossover: Path::Native
+        // dispatches to the spectral kernel; the naive oracle stays on
+        // direct taps. Two steps keep the chaotic growth regime from
+        // amplifying the f32-vs-f64 convolution noise (see
+        // tests/native_fft_props.rs for the long-horizon contract).
+        let sim = Simulator::native_only();
+        let params = LeniaParams { radius: 32, ..Default::default() };
+        let mut rng = Rng::new(0xFF2);
+        let state = Simulator::random_binary_state(&[1, 64, 64], &mut rng);
+        let a = sim
+            .run_lenia_params(Path::Naive, params, &state, 2)
+            .unwrap();
+        let b = sim
+            .run_lenia_params(Path::Native, params, &state, 2)
+            .unwrap();
+        let diff = a.max_abs_diff(&b).unwrap();
+        assert!(diff <= 1e-4, "adaptive spectral drifted {diff}");
+    }
+
+    #[test]
+    fn lenia_native_path_reports_crossover() {
+        let small = LeniaParams { radius: 5, ..Default::default() };
+        let big = LeniaParams { radius: 48, ..Default::default() };
+        assert_eq!(Simulator::lenia_native_path(small, 128, 128),
+                   "sparse-tap");
+        assert_eq!(Simulator::lenia_native_path(big, 128, 128), "fft");
     }
 
     #[test]

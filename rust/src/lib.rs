@@ -13,7 +13,9 @@
 //! ## The two execution contracts
 //!
 //! - [`backend::Backend`] runs *classic-CA programs*
-//!   ([`backend::CaProgram`]: ECA, Life, Lenia, the NCA forward cell)
+//!   ([`backend::CaProgram`]: ECA, Life, Lenia — size-adaptive between
+//!   sparse-tap and in-tree spectral FFT kernels, including
+//!   multi-channel / multi-kernel worlds — and the NCA forward cell)
 //!   on batched states — see the runnable example on
 //!   [`backend::NativeBackend`].
 //! - [`backend::ProgramBackend`] runs *named, manifest-described

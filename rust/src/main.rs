@@ -19,6 +19,7 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
+use cax::automata::lenia::{LeniaParams, LeniaWorld};
 use cax::automata::WolframRule;
 use cax::backend::{NativeBackend, NativeTrainBackend};
 use cax::config::Config;
@@ -53,6 +54,10 @@ COMMANDS:
     sim <eca|life|lenia>      run a classic CA
         [--path fused|stepwise|naive|native] [--steps N] [--rule R]
         [--batch B] [--width W] [--height H] [--render]
+        lenia also takes [--radius R] [--size N] [--kernels K]; the
+        native path prints the selected kernel (sparse-tap vs fft)
+        and achieved cells/sec; K > 1 runs a multi-kernel spectral
+        world
     train <ca-key>            train a neural CA end to end
         [--steps N]           --backend native: growing, mnist, arc
         [--backend native]    (hermetic, hand-rolled BPTT + Adam);
@@ -297,11 +302,6 @@ fn local_shape(cli: &Cli, ca: &str) -> Result<Vec<usize>> {
             cli.flag_usize("--height", 256)?,
             cli.flag_usize("--width", 256)?,
         ],
-        "lenia" => vec![
-            cli.flag_usize("--batch", 4)?,
-            cli.flag_usize("--height", 128)?,
-            cli.flag_usize("--width", 128)?,
-        ],
         other => bail!("unknown CA {other:?}"),
     })
 }
@@ -335,16 +335,88 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
     cmd_sim_local(cli, &ca, path)
 }
 
+/// Native/naive Lenia with explicit geometry: `--radius`, `--size N`
+/// (square board; `--height`/`--width` override per axis) and
+/// `--kernels K` (K > 1 builds a multi-kernel spectral demo world).
+/// Prints the selected kernel path and achieved cells/sec so bench
+/// claims are reproducible straight from the CLI.
+fn cmd_sim_lenia_local(cli: &Cli, path: SimPath) -> Result<()> {
+    let sim = Simulator::native_only();
+    let mut rng = Rng::new(cli.cfg.seed);
+    let size = cli.flag_usize("--size", 128)?;
+    let h = cli.flag_usize("--height", size)?;
+    let w = cli.flag_usize("--width", size)?;
+    let b = cli.flag_usize("--batch", 4)?;
+    let steps = cli.flag_usize("--steps", 64)?;
+    let radius =
+        cli.flag_usize("--radius", LeniaParams::default().radius)?;
+    let kernels = cli.flag_usize("--kernels", 1)?;
+    let params = LeniaParams { radius, ..Default::default() };
+
+    let kpath = if kernels > 1 {
+        if path == SimPath::Native {
+            "fft (multi-kernel world)".to_string()
+        } else {
+            "naive per-cell (multi-kernel world)".to_string()
+        }
+    } else if path == SimPath::Native {
+        format!(
+            "{} (crossover-selected)",
+            Simulator::lenia_native_path(params, h, w)
+        )
+    } else {
+        "naive per-cell".to_string()
+    };
+
+    let state;
+    let out;
+    let t;
+    if kernels > 1 {
+        let world = LeniaWorld::demo(kernels, radius);
+        state = Simulator::random_binary_state(
+            &[b, world.channels, h, w],
+            &mut rng,
+        );
+        t = Timer::start();
+        out = sim.run_lenia_world(path, &world, &state, steps)?;
+    } else {
+        state = Simulator::random_binary_state(&[b, h, w], &mut rng);
+        t = Timer::start();
+        out = sim.run_lenia_params(path, params, &state, steps)?;
+    }
+    let dt = t.elapsed_secs();
+    let updates = state.numel() as f64 * steps as f64;
+    println!(
+        "lenia [{}] radius {radius}, {steps} steps on {:?}: {:.3}s  \
+         ({:.2e} cells/s)  kernel path: {kpath}  final mean {:.4}",
+        path.name(), state.shape(), dt, updates / dt.max(1e-12), out.mean()
+    );
+
+    if cli.has("--render") {
+        std::fs::create_dir_all(&cli.cfg.out_dir)?;
+        // Batch element 0; channel 0 of a multi-kernel world.
+        let field = if kernels > 1 {
+            out.index_axis0(0).index_axis0(0)
+        } else {
+            out.index_axis0(0)
+        };
+        let img = spacetime::render_field(&field)?;
+        let path_out = cli.cfg.out_dir.join("lenia.ppm");
+        img.upscale(4).write_ppm(&path_out)?;
+        println!("wrote {}", path_out.display());
+    }
+    Ok(())
+}
+
 /// Native/naive simulation — no artifacts, no XLA; shapes from flags.
 fn cmd_sim_local(cli: &Cli, ca: &str, path: SimPath) -> Result<()> {
+    if ca == "lenia" {
+        return cmd_sim_lenia_local(cli, path);
+    }
     let sim = Simulator::native_only();
     let mut rng = Rng::new(cli.cfg.seed);
     let shape = local_shape(cli, ca)?;
-    let default_steps = match ca {
-        "lenia" => 64,
-        _ => 256,
-    };
-    let steps = cli.flag_usize("--steps", default_steps)?;
+    let steps = cli.flag_usize("--steps", 256)?;
     let state = Simulator::random_binary_state(&shape, &mut rng);
     let rule = WolframRule::parse(cli.flag("--rule").unwrap_or("30"))?;
 
@@ -352,7 +424,6 @@ fn cmd_sim_local(cli: &Cli, ca: &str, path: SimPath) -> Result<()> {
     let out = match ca {
         "eca" => sim.run_eca(path, &state, rule, steps)?,
         "life" => sim.run_life(path, &state, steps)?,
-        "lenia" => sim.run_lenia(path, &state, steps)?,
         _ => unreachable!(),
     };
     let dt = t.elapsed_secs();

@@ -1,0 +1,567 @@
+//! The spectral-Lenia verification battery: property tests for the
+//! in-tree FFT primitive and the differential fuzz suite pitting the
+//! spectral kernel against the naive `LeniaSim` oracle. Runs on default
+//! features: no artifacts, no XLA, no network.
+//!
+//! # Why the long-horizon cases pin the smooth growth regime
+//!
+//! The spectral path computes the convolution in f64 (exact at f32
+//! resolution, ~1e-6 from the oracle's sequential f32 tap sums per
+//! step). But Lenia's growth is `2 exp(-z^2/2) - 1` with
+//! `z = (u - mu)/sigma`: its slope reaches `~1.2/sigma`, so at the
+//! paper's `sigma = 0.017` a state perturbation can grow by up to
+//! `1 + dt * 71` per step — the dynamics are chaotic, and over 50 steps
+//! *any* reordering of f32 arithmetic (not just ours) drifts past any
+//! useful tolerance. The long-horizon battery therefore draws
+//! parameters from the smooth regime (`sigma >= 0.09`), where the
+//! measured 50-step drift sits at 2e-6..4e-5 — comfortably inside the
+//! 1e-4 contract — while the paper-default narrow regime is covered at
+//! 10-step horizons (measured drift <= 4e-6) and by single-step
+//! convolution checks at 2e-5. Calibration numbers come from an
+//! f32-faithful prototype of both paths; the seeds here are fixed, so
+//! the suite is deterministic.
+
+use cax::automata::lenia::{
+    growth, ring_kernel, KernelSpec, LeniaParams, LeniaWorld,
+};
+use cax::automata::LeniaSim;
+use cax::backend::native::fft::{Complex, Fft, Fft2};
+use cax::backend::native::lenia::{select_path, LeniaFft, LeniaPath};
+use cax::backend::{Backend, CaProgram, NativeBackend};
+use cax::prop_assert;
+use cax::tensor::Tensor;
+use cax::util::check::{check, Gen};
+use cax::util::rng::Rng;
+
+/// Transform sizes exercising both kinds (40, 44, 96, 100, 250 run
+/// Bluestein; the rest run the power-of-two path).
+const FFT_SIZES: &[usize] = &[8, 40, 44, 64, 96, 100, 128, 250, 256];
+
+fn random_signal(n: usize, rng: &mut Rng) -> Vec<Complex> {
+    (0..n)
+        .map(|_| Complex::new(rng.next_f64() - 0.5, rng.next_f64() - 0.5))
+        .collect()
+}
+
+fn max_err(a: &[Complex], b: &[Complex]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x.re - y.re).abs().max((x.im - y.im).abs()))
+        .fold(0.0, f64::max)
+}
+
+// -------------------------------------------------- FFT primitive props
+
+#[test]
+fn fft_roundtrip_within_tolerance() {
+    let mut rng = Rng::new(0xF0F0);
+    for &n in FFT_SIZES {
+        let fft = Fft::new(n);
+        assert_eq!(fft.is_bluestein(), !n.is_power_of_two(), "n={n}");
+        let x = random_signal(n, &mut rng);
+        let mut buf = x.clone();
+        fft.forward(&mut buf);
+        fft.inverse(&mut buf);
+        let err = max_err(&buf, &x);
+        assert!(err < 1e-5, "n={n}: roundtrip err {err:.3e}");
+    }
+}
+
+#[test]
+fn fft_impulse_response_is_the_twiddle_spiral() {
+    // delta[0] -> flat spectrum of ones; delta[j] -> e^{-2 pi i jk/n}.
+    for &n in &[16usize, 40, 96, 250] {
+        let fft = Fft::new(n);
+        let mut flat = vec![Complex::ZERO; n];
+        flat[0] = Complex::ONE;
+        fft.forward(&mut flat);
+        for (k, v) in flat.iter().enumerate() {
+            assert!(
+                (v.re - 1.0).abs() < 1e-9 && v.im.abs() < 1e-9,
+                "n={n} bin {k}: {v:?}"
+            );
+        }
+        let j = 3.min(n - 1);
+        let mut spiral = vec![Complex::ZERO; n];
+        spiral[j] = Complex::ONE;
+        fft.forward(&mut spiral);
+        for (k, v) in spiral.iter().enumerate() {
+            let theta = -2.0 * std::f64::consts::PI * ((j * k) % n) as f64
+                / n as f64;
+            let expect = Complex::cis(theta);
+            assert!(
+                (v.re - expect.re).abs() < 1e-9
+                    && (v.im - expect.im).abs() < 1e-9,
+                "n={n} j={j} bin {k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fft_is_linear() {
+    check(0x11EA, 40, |g: &mut Gen| {
+        let n = FFT_SIZES[g.usize_in(0, FFT_SIZES.len())];
+        let a = g.f32_in(-2.0, 2.0) as f64;
+        let b = g.f32_in(-2.0, 2.0) as f64;
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let x = random_signal(n, &mut rng);
+        let y = random_signal(n, &mut rng);
+        let fft = Fft::new(n);
+        let mut combo: Vec<Complex> = x
+            .iter()
+            .zip(&y)
+            .map(|(&xv, &yv)| xv.scale(a) + yv.scale(b))
+            .collect();
+        fft.forward(&mut combo);
+        let mut fx = x;
+        fft.forward(&mut fx);
+        let mut fy = y;
+        fft.forward(&mut fy);
+        let expect: Vec<Complex> = fx
+            .iter()
+            .zip(&fy)
+            .map(|(&xv, &yv)| xv.scale(a) + yv.scale(b))
+            .collect();
+        let err = max_err(&combo, &expect);
+        prop_assert!(err < 1e-8, "n={n} a={a} b={b}: linearity err {err:.3e}");
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn fft_parseval_identity() {
+    // sum |x|^2 == (1/n) sum |X|^2 — energy is preserved.
+    let mut rng = Rng::new(0x9A125);
+    for &n in FFT_SIZES {
+        let x = random_signal(n, &mut rng);
+        let time: f64 = x.iter().map(|v| v.norm_sq()).sum();
+        let mut buf = x;
+        let fft = Fft::new(n);
+        fft.forward(&mut buf);
+        let freq: f64 =
+            buf.iter().map(|v| v.norm_sq()).sum::<f64>() / n as f64;
+        let rel = (time - freq).abs() / time.max(1e-12);
+        assert!(rel < 1e-10, "n={n}: Parseval rel err {rel:.3e}");
+    }
+}
+
+#[test]
+fn fft2_roundtrip_impulse_and_parseval() {
+    let (h, w) = (40, 96); // both Bluestein axes
+    let fft = Fft2::new(h, w);
+    assert_eq!(fft.shape(), (h, w));
+    let mut rng = Rng::new(0x2D2D);
+    let grid = random_signal(h * w, &mut rng);
+
+    let mut buf = grid.clone();
+    fft.forward(&mut buf);
+    let time: f64 = grid.iter().map(|v| v.norm_sq()).sum();
+    let freq: f64 =
+        buf.iter().map(|v| v.norm_sq()).sum::<f64>() / (h * w) as f64;
+    assert!((time - freq).abs() / time < 1e-10, "2D Parseval");
+    fft.inverse(&mut buf);
+    let err = max_err(&buf, &grid);
+    assert!(err < 1e-5, "2D roundtrip err {err:.3e}");
+
+    let mut impulse = vec![Complex::ZERO; h * w];
+    impulse[0] = Complex::ONE;
+    fft.forward(&mut impulse);
+    for (i, v) in impulse.iter().enumerate() {
+        assert!(
+            (v.re - 1.0).abs() < 1e-9 && v.im.abs() < 1e-9,
+            "2D impulse bin {i}"
+        );
+    }
+}
+
+// ------------------------------------------------- differential battery
+
+/// One differential case: spectral rollout vs the naive oracle from the
+/// same seeded random patch, `max |a - b| <= 1e-4` over every step's
+/// endpoint (asserted at the horizon, which the calibration showed is
+/// where the drift peaks).
+fn diff_case(radius: usize, size: usize, mu: f32, sigma: f32, dt: f32,
+             steps: usize, seed: u64) {
+    let params = LeniaParams { radius, mu, sigma, dt };
+    let mut rng = Rng::new(seed);
+    let mut sim = LeniaSim::random_patch(params, size, size / 2, &mut rng);
+    let plan = LeniaFft::new(params, size, size).unwrap();
+    let mut board = sim.state().data().to_vec();
+    plan.rollout(&mut board, steps);
+    sim.run(steps);
+    let mut worst = 0.0f32;
+    for (&a, &b) in board.iter().zip(sim.state().data()) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(
+        worst <= 1e-4,
+        "r={radius} size={size} mu={mu} sigma={sigma} dt={dt} \
+         steps={steps}: spectral drifted {worst:.3e} from the oracle"
+    );
+    if steps >= 50 {
+        // Long-horizon cases must stay dynamically alive, or the
+        // comparison degenerates to clamped constants.
+        let mean = board.iter().sum::<f32>() / board.len() as f32;
+        assert!(
+            (0.01..0.99).contains(&mean),
+            "r={radius}: degenerate field (mean {mean})"
+        );
+    }
+}
+
+#[test]
+fn diff_fuzz_small_radii_50_steps() {
+    // Smooth regime (sigma 0.12, dt 0.05): measured drift ~2e-6 over
+    // 50 steps — 50x inside the contract. Sizes 40/44/48 are all
+    // Bluestein; radius spans the sparse-tap regime so the FFT path is
+    // checked exactly where the crossover would not pick it.
+    diff_case(3, 40, 0.30, 0.12, 0.05, 50, 0xA11CE);
+    diff_case(5, 48, 0.30, 0.12, 0.05, 50, 0xB0B);
+    diff_case(8, 44, 0.30, 0.12, 0.05, 50, 0xCAFE);
+}
+
+#[test]
+fn diff_fuzz_paper_default_params_short_horizon() {
+    // The paper's narrow growth (sigma 0.017) at a 10-step horizon:
+    // measured drift <= 3e-6 (the chaotic amplification needs longer
+    // horizons to express itself; see module docs).
+    diff_case(10, 64, 0.15, 0.017, 0.1, 10, 0xDEFA);
+}
+
+#[test]
+fn prop_diff_fuzz_random_params_short_horizon() {
+    // Seeded-random radii/sizes/params, 8-step horizons: measured
+    // worst drift at 10 steps is <= 4e-6 even in the narrow regime, so
+    // 1e-4 holds with margin for any draw here.
+    check(0xF022, 8, |g: &mut Gen| {
+        let radius = g.usize_in(3, 13);
+        let size = g.usize_in(2 * radius + 2, 65).max(33);
+        let mu = g.f32_in(0.2, 0.35);
+        let sigma = g.f32_in(0.06, 0.15);
+        let dt = g.f32_in(0.04, 0.1);
+        let steps = g.usize_in(4, 9);
+        let params = LeniaParams { radius, mu, sigma, dt };
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let mut sim =
+            LeniaSim::random_patch(params, size, size / 2, &mut rng);
+        let plan = LeniaFft::new(params, size, size)
+            .map_err(|e| format!("plan: {e}"))?;
+        let mut board = sim.state().data().to_vec();
+        plan.rollout(&mut board, steps);
+        sim.run(steps);
+        let mut worst = 0.0f32;
+        for (&a, &b) in board.iter().zip(sim.state().data()) {
+            worst = worst.max((a - b).abs());
+        }
+        prop_assert!(
+            worst <= 1e-4,
+            "r={radius} size={size} mu={mu} sigma={sigma} dt={dt} \
+             steps={steps}: drifted {worst:.3e}"
+        );
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+#[ignore = "50-step large-radius sweeps: run with --release (CI does)"]
+fn diff_fuzz_release_battery() {
+    // The full radius range of the issue contract (3..=64), sizes
+    // including non-powers-of-two, 50-step horizons in the smooth
+    // regime plus paper-default params at 10 steps. Release-mode only
+    // because the *oracle* is quadratic in the kernel radius.
+    let cases: &[(usize, usize, f32, f32, f32, usize, u64)] = &[
+        (3, 40, 0.25, 0.09, 0.10, 50, 0x1000),
+        (5, 48, 0.30, 0.10, 0.10, 50, 0x1001),
+        (12, 64, 0.30, 0.10, 0.10, 50, 0x1002),
+        (16, 96, 0.30, 0.12, 0.05, 50, 0x1003),
+        (16, 96, 0.15, 0.017, 0.10, 10, 0x1004),
+        (24, 100, 0.30, 0.12, 0.05, 50, 0x1005),
+        (32, 128, 0.30, 0.12, 0.05, 50, 0x1006),
+        (32, 250, 0.30, 0.12, 0.05, 50, 0x1007),
+        (32, 96, 0.15, 0.017, 0.10, 10, 0x1008),
+        (48, 128, 0.30, 0.12, 0.05, 50, 0x1009),
+        (64, 144, 0.30, 0.12, 0.05, 50, 0x100A),
+    ];
+    for &(radius, size, mu, sigma, dt, steps, seed) in cases {
+        diff_case(radius, size, mu, sigma, dt, steps, seed);
+    }
+}
+
+#[test]
+fn single_step_convolution_contract_across_radii() {
+    // The raw neighborhood potential u (before growth) from the
+    // spectral path vs direct f32 tap sums: <= 2e-5 at every radius
+    // (measured <= 5e-6 at radius 64). This is the no-chaos check that
+    // covers the narrow growth regime at full radius range.
+    let mut rng = Rng::new(0x5EC7);
+    for &(radius, size) in
+        &[(3usize, 40usize), (8, 44), (16, 64), (32, 96)]
+    {
+        let params = LeniaParams { radius, ..Default::default() };
+        let field: Vec<f32> = rng.vec_f32(size * size);
+        let plan = LeniaFft::new(params, size, size).unwrap();
+        let u_fft = plan.convolve(0, &field);
+        let kernel = ring_kernel(radius);
+        let ksz = 2 * radius + 1;
+        let mut worst = 0.0f32;
+        for y in 0..size {
+            for x in 0..size {
+                let mut u = 0.0f32;
+                for ky in 0..ksz {
+                    for kx in 0..ksz {
+                        let sy = (y + size + radius - ky) % size;
+                        let sx = (x + size + radius - kx) % size;
+                        u += kernel.at(&[ky, kx]) * field[sy * size + sx];
+                    }
+                }
+                worst = worst.max((u - u_fft[y * size + x]).abs());
+            }
+        }
+        assert!(
+            worst <= 2e-5,
+            "r={radius} size={size}: convolution err {worst:.3e}"
+        );
+    }
+}
+
+// ------------------------------------------------ determinism / threads
+
+#[test]
+fn fft_path_is_bit_identical_across_thread_counts() {
+    // radius 32 on 64x64 dispatches to the spectral kernel; every
+    // board is processed by exactly one worker, so worker count can
+    // never change a bit.
+    let params = LeniaParams { radius: 32, ..Default::default() };
+    assert_eq!(select_path(32, 64, 64), LeniaPath::Fft);
+    let mut rng = Rng::new(0x7B17);
+    let state =
+        Tensor::new(vec![5, 64, 64], rng.vec_f32(5 * 64 * 64)).unwrap();
+    let prog = CaProgram::Lenia { params };
+    let seq = NativeBackend::with_threads(1)
+        .rollout(&prog, &state, 3)
+        .unwrap();
+    let par = NativeBackend::with_threads(8)
+        .rollout(&prog, &state, 3)
+        .unwrap();
+    assert!(seq.bit_eq(&par), "fft path changed under threading");
+
+    // Same for a multi-kernel world.
+    let world = LeniaWorld::demo(3, 16);
+    let wstate = Tensor::new(
+        vec![4, world.channels, 48, 48],
+        rng.vec_f32(4 * world.channels * 48 * 48),
+    )
+    .unwrap();
+    let wprog = CaProgram::LeniaMulti(world);
+    let seq = NativeBackend::with_threads(1)
+        .rollout(&wprog, &wstate, 2)
+        .unwrap();
+    let par = NativeBackend::with_threads(8)
+        .rollout(&wprog, &wstate, 2)
+        .unwrap();
+    assert!(seq.bit_eq(&par), "world path changed under threading");
+}
+
+// --------------------------------------------------- multi-kernel tests
+
+#[test]
+fn multi_k1_reproduces_single_kernel_spectral_bitwise() {
+    // A [B, H, W] single-kernel rollout above the crossover and the
+    // same boards as a [B, 1, H, W] 1x1 world must agree bit for bit —
+    // the multi-kernel engine *is* the single-kernel engine on the
+    // LeniaWorld::single embedding.
+    let params = LeniaParams { radius: 32, ..Default::default() };
+    assert_eq!(select_path(32, 64, 64), LeniaPath::Fft);
+    let backend = NativeBackend::with_threads(2);
+    let mut rng = Rng::new(0x171);
+    let state =
+        Tensor::new(vec![2, 64, 64], rng.vec_f32(2 * 64 * 64)).unwrap();
+    let single = backend
+        .rollout(&CaProgram::Lenia { params }, &state, 3)
+        .unwrap();
+    let multi_state =
+        state.clone().reshape(vec![2, 1, 64, 64]).unwrap();
+    let multi = backend
+        .rollout(
+            &CaProgram::LeniaMulti(LeniaWorld::single(params)),
+            &multi_state,
+            3,
+        )
+        .unwrap();
+    assert_eq!(multi.shape(), &[2, 1, 64, 64]);
+    assert!(
+        single
+            .data()
+            .iter()
+            .zip(multi.data())
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "K=1 world diverged from the single-kernel path"
+    );
+}
+
+#[test]
+fn two_channel_two_kernel_step_matches_scalar_reference() {
+    // A hand-checkable world: 2 channels, 2 kernels with distinct
+    // radii, growths and mixing rows. The reference below recomputes
+    // the step per cell from first principles (tap sums in oracle
+    // order, shared growth, k-major mixing); the staged
+    // LeniaWorld::step_naive must match it bit for bit, the spectral
+    // step within 1e-5 (single step, no chaotic amplification).
+    let (h, w) = (12, 10);
+    let world = LeniaWorld {
+        channels: 2,
+        dt: 0.1,
+        kernels: vec![
+            KernelSpec {
+                src: 0,
+                radius: 2,
+                mu: 0.30,
+                sigma: 0.10,
+                weights: vec![0.6, 0.4],
+            },
+            KernelSpec {
+                src: 1,
+                radius: 3,
+                mu: 0.25,
+                sigma: 0.12,
+                weights: vec![0.2, 0.8],
+            },
+        ],
+    };
+    world.validate().unwrap();
+    let hw = h * w;
+    let mut state = vec![0.0f32; 2 * hw];
+    for c in 0..2 {
+        for y in 0..h {
+            for x in 0..w {
+                state[c * hw + y * w + x] =
+                    ((c * 7 + y * 3 + x * 5) % 13) as f32 / 13.0;
+            }
+        }
+    }
+
+    // First-principles reference: u_k per kernel, then the mix.
+    let mut expect = vec![0.0f32; 2 * hw];
+    let kerns: Vec<Tensor> =
+        world.kernels.iter().map(|s| ring_kernel(s.radius)).collect();
+    for c in 0..2 {
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = 0.0f32;
+                for (k, spec) in world.kernels.iter().enumerate() {
+                    let r = spec.radius;
+                    let ksz = 2 * r + 1;
+                    let src = &state[spec.src * hw..(spec.src + 1) * hw];
+                    let mut u = 0.0f32;
+                    for ky in 0..ksz {
+                        for kx in 0..ksz {
+                            let sy = (y + h + r - ky) % h;
+                            let sx = (x + w + r - kx) % w;
+                            u += kerns[k].at(&[ky, kx])
+                                * src[sy * w + sx];
+                        }
+                    }
+                    acc +=
+                        spec.weights[c] * growth(u, spec.mu, spec.sigma);
+                }
+                expect[c * hw + y * w + x] = (state[c * hw + y * w + x]
+                    + world.dt * acc)
+                    .clamp(0.0, 1.0);
+            }
+        }
+    }
+
+    let mut staged = vec![0.0f32; 2 * hw];
+    world.step_naive(&state, &mut staged, h, w);
+    assert!(
+        staged
+            .iter()
+            .zip(&expect)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "step_naive disagrees with the first-principles reference"
+    );
+
+    let plan = LeniaFft::for_world(world, h, w).unwrap();
+    let mut spectral = vec![0.0f32; 2 * hw];
+    plan.step(&state, &mut spectral);
+    let mut worst = 0.0f32;
+    for (&a, &b) in spectral.iter().zip(&expect) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst <= 1e-5, "spectral 2x2 step drifted {worst:.3e}");
+}
+
+// ------------------------------------------------------- golden vector
+
+const GOLDEN: &str = include_str!("common/lenia_fft_golden.txt");
+
+fn golden_params() -> (LeniaParams, usize, usize) {
+    // 48x48 forces Bluestein on both axes; the smooth regime keeps the
+    // trajectory's libm sensitivity at the measured ~2e-7 level.
+    (LeniaParams { radius: 16, mu: 0.30, sigma: 0.12, dt: 0.05 }, 48, 10)
+}
+
+fn golden_state(size: usize) -> Vec<f32> {
+    let patch = size / 2;
+    let start = (size - patch) / 2;
+    let mut state = vec![0.0f32; size * size];
+    for y in start..start + patch {
+        for x in start..start + patch {
+            state[y * size + x] =
+                ((y * 31 + x * 17) % 101) as f32 / 101.0;
+        }
+    }
+    state
+}
+
+#[test]
+fn golden_vector_regression() {
+    let (params, size, steps) = golden_params();
+    let expect: Vec<f32> = GOLDEN
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+        .map(|l| l.trim().parse::<f32>().expect("golden parse"))
+        .collect();
+    assert_eq!(expect.len(), size * size, "golden file length");
+    let plan = LeniaFft::new(params, size, size).unwrap();
+    assert!(plan.is_bluestein());
+    let mut board = golden_state(size);
+    plan.rollout(&mut board, steps);
+    let mut worst = 0.0f32;
+    for (&a, &b) in board.iter().zip(&expect) {
+        worst = worst.max((a - b).abs());
+    }
+    // Not bitwise: libm exp/sin/cos may differ by an ulp per platform;
+    // the measured amplification over this trajectory is ~2e-7, so
+    // 5e-5 still flags any real regression (those land >= 1e-3).
+    assert!(worst <= 5e-5, "golden drifted {worst:.3e}");
+    // The trajectory must be non-trivial for the guard to mean much.
+    let mean = board.iter().sum::<f32>() / board.len() as f32;
+    assert!(mean > 0.05, "golden field died (mean {mean})");
+}
+
+#[test]
+#[ignore = "rewrites tests/common/lenia_fft_golden.txt from this build"]
+fn regen_golden_vector() {
+    let (params, size, steps) = golden_params();
+    let plan = LeniaFft::new(params, size, size).unwrap();
+    let mut board = golden_state(size);
+    plan.rollout(&mut board, steps);
+    let mut text = String::from(
+        "# Spectral-Lenia golden vector (regression guard for the FFT \
+         path).\n# Regenerated by `cargo test --release --test \
+         native_fft_props regen_golden -- --ignored`.\n# 48x48, radius \
+         16, mu 0.30, sigma 0.12, dt 0.05, 10 steps; see \
+         golden_state() for the deterministic initial patch.\n",
+    );
+    for v in &board {
+        text.push_str(&format!("{v:.9e}\n"));
+    }
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/common/lenia_fft_golden.txt");
+    std::fs::write(&path, text).unwrap();
+    println!("wrote {}", path.display());
+}
