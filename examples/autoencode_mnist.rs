@@ -3,11 +3,16 @@
 //! separates it from the opposite face; one uniform local rule must encode,
 //! squeeze through the bottleneck, and decode.
 //!
-//!   cargo run --release --example autoencode_mnist -- [--steps N]
-//!       [--seed S] [--out DIR]
+//!   cargo run --release --features pjrt --example autoencode_mnist --
+//!       [--steps N] [--seed S] [--out DIR]
 //!
 //! Writes out/fig7_reconstructions.ppm (originals over reconstructions,
 //! the paper's Fig. 7 strip) and prints reconstruction MSE.
+//!
+//! **pjrt-gated** (`required-features`): the 3D autoencoder scenario
+//! (`autoenc3d_train_step` / `autoenc3d_eval`) has no native
+//! implementation — the native train backend covers growing, MNIST and
+//! 1D-ARC only. See the examples table in `rust/README.md`.
 
 use std::path::PathBuf;
 

@@ -2,10 +2,16 @@
 //! 7 and the Fig. 3-right benchmark subject): every ink cell must agree on
 //! the digit's class purely through local message passing.
 //!
-//!   cargo run --release --example classify_mnist -- [--steps N] [--seed S]
+//!   cargo run --release --features pjrt --example classify_mnist --
+//!       [--steps N] [--seed S]
 //!
 //! Trains with the fused train-step artifact, then reports majority-vote
 //! accuracy on held-out synthetic digits and shows a per-digit vote map.
+//!
+//! **pjrt-gated** (`required-features`): training runs natively via
+//! `cax train mnist --backend native`, but the *vote-map evaluation*
+//! here needs the `mnist_eval` rollout program, which only the artifact
+//! backend serves today. See the examples table in `rust/README.md`.
 
 use anyhow::{Context, Result};
 

@@ -2,8 +2,13 @@
 //! render the noise→pattern sequence of Fig. 4, then run the Fig. 5
 //! damage/regeneration comparison against a growing NCA.
 //!
-//!   cargo run --release --example diffusing_nca -- [--steps N] [--seed S]
-//!       [--out DIR] [--skip-fig5]
+//!   cargo run --release --features pjrt --example diffusing_nca --
+//!       [--steps N] [--seed S] [--out DIR] [--skip-fig5]
+//!
+//! **pjrt-gated** (`required-features`): the diffusing scenario
+//! (`diffusing_train_step` / `diffusing_rollout`) and the Fig. 5 damage
+//! protocol run on artifact programs with no native equivalent yet.
+//! See the examples table in `rust/README.md`.
 
 use std::path::PathBuf;
 

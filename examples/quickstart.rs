@@ -1,21 +1,98 @@
 //! Quickstart: the 60-second tour of the CAX-RS public API.
 //!
-//!   cargo run --release --example quickstart
+//!   cargo run --release --example quickstart [-- --backend native|pjrt]
 //!
-//! Loads the AOT artifacts, lists the Table-1 registry, runs each classic
-//! CA on the fused path, and takes a handful of NCA training steps —
-//! everything a new user needs to see to know the stack is alive.
+//! Backend-selectable: the default build tours the hermetic native
+//! backend (Table-1 registry, classic CAs on the bit-packed/tiled
+//! kernels, a few native BPTT train steps with the sample pool — no
+//! artifacts, no XLA, no Python). `--backend pjrt` tours the AOT
+//! artifacts instead (needs `--features pjrt` + `make artifacts`).
 
 use anyhow::Result;
 
 use cax::automata::WolframRule;
 use cax::coordinator::trainer::TrainCfg;
 use cax::coordinator::{experiments, registry, Path, Simulator};
-use cax::runtime::Engine;
 use cax::util::rng::Rng;
 use cax::util::timer::Timer;
 
+fn arg(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
 fn main() -> Result<()> {
+    let choice = arg("--backend").unwrap_or_else(|| {
+        if cfg!(feature = "pjrt") { "pjrt".into() } else { "native".into() }
+    });
+    match choice.as_str() {
+        "native" => tour_native(),
+        "pjrt" => tour_pjrt(),
+        other => anyhow::bail!("unknown --backend {other:?} (native|pjrt)"),
+    }
+}
+
+/// The hermetic tour: everything below runs on the default feature set.
+fn tour_native() -> Result<()> {
+    // 1. The Table-1 catalogue.
+    println!("Table 1 registry:");
+    for e in registry::table1() {
+        println!("  {:<12} {:<46} {:<10} {}", e.key, e.label,
+                 e.ca_type.name(), e.dimensions);
+    }
+
+    // 2. Classic CAs on the native bit-packed/tiled kernels.
+    let sim = Simulator::native_only();
+    let mut rng = Rng::new(0);
+    println!("\nclassic CAs (native path, {} worker threads):",
+             sim.native().threads());
+    for ca in ["eca", "life", "lenia"] {
+        let t = Timer::start();
+        let (steps, out) = match ca {
+            "eca" => {
+                let state =
+                    Simulator::random_binary_state(&[32, 1024], &mut rng);
+                (256,
+                 sim.run_eca(Path::Native, &state, WolframRule::new(30),
+                             256)?)
+            }
+            "life" => {
+                let state =
+                    Simulator::random_binary_state(&[8, 256, 256], &mut rng);
+                (256, sim.run_life(Path::Native, &state, 256)?)
+            }
+            _ => {
+                let state =
+                    Simulator::random_binary_state(&[4, 128, 128], &mut rng);
+                (64, sim.run_lenia(Path::Native, &state, 64)?)
+            }
+        };
+        println!("  {ca:<6} {steps:>4} steps in {:>8.1} ms  (mean state \
+                  {:.4})", t.elapsed_ms(), out.mean());
+    }
+
+    // 3. A few native BPTT train steps (growing NCA + sample pool).
+    println!("\ngrowing NCA — 10 native train steps with the sample pool:");
+    let backend = cax::backend::NativeTrainBackend::new();
+    let cfg = TrainCfg { steps: 10, seed: 0, log_every: 5, out_dir: None };
+    let (run, pool) = experiments::train_growing(&backend, &cfg, 32)?;
+    println!("  loss {:.5} -> {:.5}  (pool writes: {})",
+             run.history.values()[0],
+             run.history.last().unwrap(),
+             pool.writes());
+
+    println!("\nnext steps:");
+    println!("  cax list / cax sim life --render / cax train growing");
+    println!("  cax serve --port 7878    # multi-session HTTP service");
+    println!("  cargo run --release --example quickstart -- --backend pjrt");
+    Ok(())
+}
+
+/// The artifact tour (fused XLA rollouts through PJRT).
+#[cfg(feature = "pjrt")]
+fn tour_pjrt() -> Result<()> {
+    use cax::runtime::Engine;
+
     // 1. Load the artifacts produced by `make artifacts`.
     let artifacts = std::env::var("CAX_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".into());
@@ -23,17 +100,10 @@ fn main() -> Result<()> {
     println!("engine up on {} — {} artifacts\n", engine.platform(),
              engine.manifest().artifacts.len());
 
-    // 2. The Table-1 catalogue.
-    println!("Table 1 registry:");
-    for e in registry::table1() {
-        println!("  {:<12} {:<46} {:<10} {}", e.key, e.label,
-                 e.ca_type.name(), e.dimensions);
-    }
-
-    // 3. Classic CAs on the fused path (one XLA program per rollout).
+    // 2. Classic CAs on the fused path (one XLA program per rollout).
     let sim = Simulator::new(&engine);
     let mut rng = Rng::new(0);
-    println!("\nclassic CAs (fused path):");
+    println!("classic CAs (fused path):");
     for (ca, artifact) in [("eca", "eca_rollout"), ("life", "life_rollout"),
                            ("lenia", "lenia_rollout")] {
         let steps = engine.manifest().artifact(artifact)?
@@ -50,7 +120,7 @@ fn main() -> Result<()> {
                   {:.4})", t.elapsed_ms(), out.mean());
     }
 
-    // 4. A few NCA training steps (growing NCA + sample pool).
+    // 3. A few NCA training steps (growing NCA + sample pool).
     println!("\ngrowing NCA — 10 fused train steps with the sample pool:");
     let cfg = TrainCfg { steps: 10, seed: 0, log_every: 5, out_dir: None };
     let (run, pool) = experiments::train_growing(&engine, &cfg, 32)?;
@@ -63,4 +133,12 @@ fn main() -> Result<()> {
     println!("  cax list / cax sim life --render / cax train growing");
     println!("  cax-tables all --quick   # regenerate the paper's tables");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn tour_pjrt() -> Result<()> {
+    anyhow::bail!(
+        "this build has no pjrt feature; run with --backend native or \
+         rebuild with --features pjrt"
+    )
 }

@@ -3,25 +3,99 @@
 //! recipe, log the loss curve, render growth frames, and verify the final
 //! pattern.
 //!
-//!   cargo run --release --example train_growing_nca -- [--steps N]
-//!       [--pool P] [--seed S] [--out DIR]
+//! Backend-selectable: the default build trains hermetically on the
+//! native BPTT backend and renders the growth strip through the native
+//! NCA forward kernel (`CaProgram::Nca` from the trained parameters);
+//! `--backend pjrt` drives the fused train-step + rollout artifacts
+//! (needs `--features pjrt` + `make artifacts`). The training loop,
+//! sample pool and loss bookkeeping are one code path through the
+//! `ProgramBackend` trait.
 //!
-//! Writes out/growing_loss.csv, out/growing_growth.ppm (development strip)
-//! and out/growing.params.bin. Recorded in EXPERIMENTS.md §E10.
+//!   cargo run --release --example train_growing_nca -- [--steps N]
+//!       [--pool P] [--seed S] [--out DIR] [--backend native|pjrt]
+//!
+//! Writes out/growing_train_step.loss.csv, out/growing_growth.ppm
+//! (development strip) and out/growing_train_step.params.bin.
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Result};
 
-use cax::coordinator::trainer::TrainCfg;
+use cax::backend::ProgramBackend;
 use cax::coordinator::experiments;
-use cax::runtime::{Engine, Value};
+use cax::coordinator::trainer::TrainCfg;
 use cax::viz::ppm::Image;
 use cax::viz::spacetime;
+use cax::Tensor;
 
 fn arg(name: &str) -> Option<String> {
     let args: Vec<String> = std::env::args().collect();
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+/// The chosen execution backend behind the shared `ProgramBackend`
+/// contract.
+fn backend(choice: &str) -> Result<Box<dyn ProgramBackend>> {
+    match choice {
+        "native" => {
+            Ok(Box::new(cax::backend::NativeTrainBackend::new()))
+        }
+        #[cfg(feature = "pjrt")]
+        "pjrt" => {
+            use anyhow::Context;
+            let artifacts = std::env::var("CAX_ARTIFACTS")
+                .unwrap_or_else(|_| "artifacts".into());
+            let engine =
+                cax::runtime::Engine::load(std::path::Path::new(&artifacts))
+                    .context("run `make artifacts` first")?;
+            Ok(Box::new(engine))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!(
+            "this build has no pjrt feature; use --backend native or \
+             rebuild with --features pjrt"
+        ),
+        other => bail!("unknown --backend {other:?} (native|pjrt)"),
+    }
+}
+
+/// Development trajectory `[T, H, W, C]` of the trained cell, on
+/// whichever backend is active. The native path forward-rolls exactly
+/// `steps` updates and includes the seed state as frame 0
+/// (`T = steps + 1`); the artifact path returns the `growing_rollout`
+/// program's baked-in horizon, whose frame 0 is already one step
+/// developed — callers must index by the returned `shape()[0]`, not by
+/// `steps` (the rendering below does).
+fn growth_trajectory(engine: &dyn ProgramBackend, choice: &str,
+                     params: &Tensor, seed_state: Tensor, seed: u32,
+                     steps: usize) -> Result<Tensor> {
+    if choice == "native" {
+        // Forward-roll the trained parameters through the native NCA
+        // kernel, capturing every intermediate state.
+        use cax::backend::native::nca::NcaModel;
+        use cax::backend::native::train::NcaTrainSpec;
+        use cax::backend::{Backend, CaProgram, NativeBackend};
+        let spec = NcaTrainSpec::growing();
+        let model = NcaModel::from_flat(spec.channels, spec.hidden, spec.dt,
+                                        params.data());
+        let backend = NativeBackend::new();
+        let prog = CaProgram::Nca(model);
+        let mut cur = Tensor::stack(&[seed_state])?;
+        let mut frames = vec![cur.index_axis0(0)];
+        for _ in 0..steps {
+            cur = backend.rollout(&prog, &cur, 1)?;
+            frames.push(cur.index_axis0(0));
+        }
+        return Tensor::stack(&frames);
+    }
+    // Artifact path: the fused rollout program records the trajectory.
+    let mut out = engine.execute(
+        "growing_rollout",
+        &[cax::backend::Value::F32(params.clone()),
+          cax::backend::Value::F32(seed_state),
+          cax::backend::Value::U32(seed)],
+    )?;
+    Ok(out.pop().unwrap())
 }
 
 fn main() -> Result<()> {
@@ -32,14 +106,15 @@ fn main() -> Result<()> {
     let seed: u32 = arg("--seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let out = PathBuf::from(arg("--out").unwrap_or_else(|| "out".into()));
     std::fs::create_dir_all(&out)?;
+    let choice = arg("--backend").unwrap_or_else(|| {
+        if cfg!(feature = "pjrt") { "pjrt".into() } else { "native".into() }
+    });
 
-    let artifacts = std::env::var("CAX_ARTIFACTS")
-        .unwrap_or_else(|_| "artifacts".into());
-    let engine = Engine::load(std::path::Path::new(&artifacts))
-        .context("run `make artifacts` first")?;
+    let engine = backend(&choice)?;
+    let engine: &dyn ProgramBackend = engine.as_ref();
 
     println!("== growing NCA: {steps} train steps, pool {pool_size}, seed \
-              {seed} ==");
+              {seed}, {choice} backend ==");
     let cfg = TrainCfg {
         steps,
         seed,
@@ -47,7 +122,7 @@ fn main() -> Result<()> {
         out_dir: Some(out.clone()),
     };
     let t = std::time::Instant::now();
-    let (run, pool) = experiments::train_growing(&engine, &cfg, pool_size)?;
+    let (run, pool) = experiments::train_growing(engine, &cfg, pool_size)?;
     let secs = t.elapsed().as_secs_f64();
     let (first, last) = run.history.window_means(20);
     println!(
@@ -59,14 +134,9 @@ fn main() -> Result<()> {
     );
 
     // Render the development trajectory of the trained NCA.
-    let seed_state = experiments::growing_seed(&engine)?;
-    let mut out_t = engine.execute(
-        "growing_rollout",
-        &[Value::F32(run.state.params.clone()), Value::F32(seed_state),
-          Value::U32(seed)],
-    )?;
-    let traj = out_t.pop().unwrap(); // [T, H, W, C]
-    let final_state = out_t.pop().unwrap();
+    let seed_state = experiments::growing_seed(engine)?;
+    let traj = growth_trajectory(engine, &choice, &run.state.params,
+                                 seed_state, seed, 32)?;
     let t_len = traj.shape()[0];
     let mut frames = Vec::new();
     for k in 0..6 {
@@ -78,7 +148,8 @@ fn main() -> Result<()> {
     strip.upscale(4).write_ppm(&strip_path)?;
 
     // Verify against the target.
-    let target = experiments::growing_target(&engine)?;
+    let final_state = traj.index_axis0(t_len - 1);
+    let target = experiments::growing_target(engine)?;
     let (h, w) = (target.shape()[0], target.shape()[1]);
     let mut mse = 0.0f64;
     for y in 0..h {

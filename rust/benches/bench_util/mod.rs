@@ -55,13 +55,15 @@ pub fn push(rows: &mut Vec<cax::metrics::BenchRow>, label: &str,
     });
 }
 
-/// Print one result row: name, median, mean, p95, throughput.
+/// Print one result row: name, median, mean, p95, throughput (the
+/// rate math lives in `cax::metrics::per_second`, shared with the sim
+/// and serve surfaces).
 #[allow(dead_code)]
 pub fn row(name: &str, stats: &Stats, items: f64) {
     println!(
         "{:<40} median {:>10.4}s  mean {:>10.4}s  p95 {:>10.4}s  {:>12.3e}/s",
         name, stats.median, stats.mean, stats.p95,
-        items / stats.median.max(1e-12)
+        cax::metrics::per_second(items, stats.median)
     );
 }
 

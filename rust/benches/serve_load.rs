@@ -1,0 +1,227 @@
+//! Serve-layer load generator: coalesced multi-session stepping vs the
+//! same sessions stepped solo.
+//!
+//! The serving claim of `cax::serve` is that N sessions running the
+//! same program should ride ONE batched backend launch per tick (kept
+//! backend-resident between ticks), instead of N solo `rollout` calls
+//! that each re-cross the f32 boundary and run single-board. This
+//! bench drives the real [`Coalescer`] (queue, grouping, scatter — no
+//! HTTP) against that solo baseline and emits `BENCH_serve.json`.
+//!
+//! Run: cargo bench --bench serve_load [-- --quick]
+//! Acceptance anchor: >= 5x aggregate session-steps/sec for 64
+//! coalesced Life 256x256 sessions vs the same sessions stepped solo.
+
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use cax::automata::lenia::LeniaParams;
+use cax::automata::WolframRule;
+use cax::backend::{Backend, CaProgram, NativeBackend};
+use cax::metrics::{write_bench_report, BenchRow};
+use cax::serve::{Coalescer, ProgramSpec, ServeConfig, StepRequest};
+use cax::tensor::Tensor;
+use cax::util::rng::Rng;
+
+mod bench_util;
+use bench_util::{bench, header, push, quick};
+
+/// Submit one step request per session, tick until all are served, and
+/// drain the replies — one coalesced "frame" of the service.
+fn coalesced_round(c: &Coalescer, ids: &[u64], steps: usize) {
+    let (tx, rx) = channel();
+    for &id in ids {
+        c.submit(StepRequest { session: id, steps, reply: tx.clone() })
+            .expect("submit");
+    }
+    drop(tx);
+    let mut served = 0;
+    while served < ids.len() {
+        served += c.tick();
+    }
+    for _ in 0..ids.len() {
+        rx.recv().expect("reply").expect("step ok");
+    }
+}
+
+/// Step every board through its own single-board backend call — the
+/// pre-serve cost structure (fresh f32 boundary + allocation per call,
+/// no cross-session batching).
+fn solo_round(backend: &NativeBackend, prog: &CaProgram,
+              boards: &mut [Tensor], steps: usize) {
+    for board in boards.iter_mut() {
+        *board = backend.rollout(prog, board, steps).expect("solo rollout");
+    }
+}
+
+fn sessions(c: &Coalescer, spec: &ProgramSpec, n: usize) -> Vec<u64> {
+    let mut reg = c.registry().lock().unwrap();
+    (0..n)
+        .map(|_| reg.create(c.backend(), spec.clone(), None).unwrap())
+        .collect()
+}
+
+fn main() {
+    let cfg = ServeConfig {
+        max_sessions: 256,
+        max_batch: 64,
+        max_pending: 4096,
+        tick_window: Duration::ZERO,
+        seed: 42,
+        ..ServeConfig::default()
+    };
+    let coalescer = Coalescer::new(&cfg);
+    let backend = NativeBackend::new();
+    let mut rng = Rng::new(42);
+    let mut rows: Vec<BenchRow> = vec![];
+    let (warm, iters, rounds) = if quick() { (1, 3, 2) } else { (1, 5, 8) };
+    println!(
+        "serve load generator: {} worker threads, max batch {}",
+        coalescer.backend().threads(),
+        cfg.max_batch
+    );
+
+    // ------------------------------------------------- Life (anchor)
+    let speedup = {
+        let (n, h, w) = (64, 256, 256);
+        header(&format!(
+            "serve — {n} Life {h}x{w} sessions, 1 step/request \
+             (coalesced vs solo)"
+        ));
+        let spec = ProgramSpec::Life { height: h, width: w };
+        let ids = sessions(&coalescer, &spec, n);
+        let steps_per_iter = (n * rounds) as f64;
+
+        let coalesced = bench(warm, iters, || {
+            for _ in 0..rounds {
+                coalesced_round(&coalescer, &ids, 1);
+            }
+        });
+
+        let prog = CaProgram::Life;
+        let mut boards: Vec<Tensor> = (0..n)
+            .map(|_| {
+                Tensor::new(vec![1, h, w], rng.binary_vec(h * w, 0.5))
+                    .unwrap()
+            })
+            .collect();
+        let solo = bench(warm, iters.min(3), || {
+            for _ in 0..rounds {
+                solo_round(&backend, &prog, &mut boards, 1);
+            }
+        });
+
+        // A third arm for context: one batched rollout call over a
+        // [64, H, W] tensor — batching without residency (pays the
+        // boundary once per call, but for all boards).
+        let mut big = Tensor::new(
+            vec![n, h, w],
+            rng.binary_vec(n * h * w, 0.5),
+        )
+        .unwrap();
+        let batched = bench(warm, iters.min(3), || {
+            for _ in 0..rounds {
+                big = backend.rollout(&prog, &big, 1).unwrap();
+            }
+        });
+
+        push(&mut rows, "serve/life-64x256x256/coalesced", &coalesced,
+             steps_per_iter);
+        push(&mut rows, "serve/life-64x256x256/solo", &solo,
+             steps_per_iter);
+        push(&mut rows, "serve/life-64x256x256/batched-rollout", &batched,
+             steps_per_iter);
+        let speedup = solo.median / coalesced.median;
+        println!(
+            "  speedup: coalesced resident stepping is {speedup:.1}x vs \
+             solo (acceptance target: >= 5x)"
+        );
+        speedup
+    };
+
+    // ------------------------------------------------------ ECA rows
+    {
+        let (n, w) = (64, 1024);
+        header(&format!(
+            "serve — {n} ECA rule-30 width-{w} sessions, 4 steps/request"
+        ));
+        let spec = ProgramSpec::Eca { rule: 30, width: w };
+        let ids = sessions(&coalescer, &spec, n);
+        let steps_per_iter = (n * rounds * 4) as f64;
+        let coalesced = bench(warm, iters, || {
+            for _ in 0..rounds {
+                coalesced_round(&coalescer, &ids, 4);
+            }
+        });
+        let prog = CaProgram::Eca { rule: WolframRule::new(30) };
+        let mut boards: Vec<Tensor> = (0..n)
+            .map(|_| {
+                Tensor::new(vec![1, w], rng.binary_vec(w, 0.5)).unwrap()
+            })
+            .collect();
+        let solo = bench(warm, iters.min(3), || {
+            for _ in 0..rounds {
+                solo_round(&backend, &prog, &mut boards, 4);
+            }
+        });
+        push(&mut rows, "serve/eca-64x1024/coalesced", &coalesced,
+             steps_per_iter);
+        push(&mut rows, "serve/eca-64x1024/solo", &solo, steps_per_iter);
+        println!("  speedup: {:.1}x", solo.median / coalesced.median);
+    }
+
+    // -------------------------------------- spectral Lenia plan reuse
+    {
+        // Radius 32 at 128x128 runs the FFT kernel: a solo call builds
+        // the spectral plan per session per call; the coalesced tick
+        // builds it once per batch.
+        let (n, size, radius) = (16, 128, 32);
+        header(&format!(
+            "serve — {n} Lenia r{radius} {size}x{size} sessions (fft \
+             path), 1 step/request"
+        ));
+        let spec = ProgramSpec::Lenia {
+            radius,
+            height: size,
+            width: size,
+        };
+        let ids = sessions(&coalescer, &spec, n);
+        let steps_per_iter = (n * rounds) as f64;
+        let coalesced = bench(warm, iters.min(3), || {
+            for _ in 0..rounds {
+                coalesced_round(&coalescer, &ids, 1);
+            }
+        });
+        let prog = CaProgram::Lenia {
+            params: LeniaParams { radius, ..Default::default() },
+        };
+        let mut boards: Vec<Tensor> = (0..n)
+            .map(|_| {
+                Tensor::new(vec![1, size, size],
+                            rng.binary_vec(size * size, 0.5))
+                .unwrap()
+            })
+            .collect();
+        let solo = bench(warm, iters.min(2), || {
+            for _ in 0..rounds {
+                solo_round(&backend, &prog, &mut boards, 1);
+            }
+        });
+        push(&mut rows, "serve/lenia-16xr32x128/coalesced", &coalesced,
+             steps_per_iter);
+        push(&mut rows, "serve/lenia-16xr32x128/solo", &solo,
+             steps_per_iter);
+        println!("  speedup: {:.1}x", solo.median / coalesced.median);
+    }
+
+    let out = std::path::Path::new("BENCH_serve.json");
+    write_bench_report("serve_load", &rows, out).unwrap();
+    println!("\nwrote {}", out.display());
+
+    assert!(
+        speedup >= 5.0,
+        "acceptance anchor: coalesced Life sessions must be >= 5x solo \
+         (got {speedup:.2}x)"
+    );
+    println!("acceptance anchor OK: {speedup:.1}x >= 5x");
+}

@@ -123,6 +123,53 @@ impl CaProgram {
     }
 }
 
+/// A single CA board held in a backend's *internal* representation
+/// between calls — the session currency of the `serve` layer.
+///
+/// `step`/`rollout` cross the f32 tensor boundary on every call; for a
+/// long-lived session stepped a few updates at a time that boundary
+/// (pack/unpack, allocation) dominates the actual kernel work. A
+/// `Resident` stays in whatever form the backend steps fastest — bit
+/// planes for the discrete CAs, flat kernel-layout f32 for the
+/// continuous ones — and only materializes a [`Tensor`] when a caller
+/// asks to read it.
+///
+/// The shape carried here is the *un-batched* board shape (one rank
+/// below [`CaProgram::state_rank`]): `[W]` for ECA, `[H, W]` for
+/// Life/Lenia, `[C, H, W]` for Lenia worlds, `[H, W, C]` for NCA.
+#[derive(Clone, Debug)]
+pub enum Resident {
+    /// Host tensor — the fallback representation every backend can
+    /// serve via the default trait methods.
+    Host(Tensor),
+    /// Bit-packed discrete state (native ECA/Life): 64 cells per u64,
+    /// LSB-first, rows padded to whole words (`native::bits`).
+    Bits { words: Vec<u64>, shape: Vec<usize> },
+    /// Flat f32 state in kernel layout (native Lenia/NCA boards).
+    Board { data: Vec<f32>, shape: Vec<usize> },
+}
+
+impl Resident {
+    /// The un-batched board shape.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Resident::Host(t) => t.shape(),
+            Resident::Bits { shape, .. } | Resident::Board { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    /// Short name of the representation (error messages).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Resident::Host(_) => "host",
+            Resident::Bits { .. } => "bits",
+            Resident::Board { .. } => "board",
+        }
+    }
+}
+
 /// An execution backend for classic-CA programs.
 ///
 /// `step`/`rollout` take and return batched f32 tensors (the host data
@@ -132,6 +179,14 @@ impl CaProgram {
 /// calls to `step`. States are validated against the program
 /// ([`validate_state`]) before dispatch, so shape bugs surface as
 /// errors, not kernel panics.
+///
+/// The `admit`/`read_resident`/`step_resident` family is the
+/// session-resident entry the `serve` layer batches through: a state is
+/// admitted ONCE into the backend's internal representation, stepped in
+/// place (many sessions per launch), and only unpacked when read. The
+/// default implementations round-trip through `rollout`, so every
+/// backend supports residents; [`NativeBackend`] overrides them with
+/// true packed residency.
 pub trait Backend {
     /// Short stable name (CLI surface, bench rows).
     fn name(&self) -> &'static str;
@@ -158,6 +213,48 @@ pub trait Backend {
             "backend {:?} cannot run train-step program {program:?}",
             self.name()
         )
+    }
+
+    /// Admit one un-batched board into this backend's resident
+    /// representation. The board is validated against `prog` (same
+    /// contract as [`validate_state`], minus the batch axis).
+    fn admit(&self, prog: &CaProgram, board: &Tensor) -> Result<Resident> {
+        validate_board(prog, board)?;
+        Ok(Resident::Host(board.clone()))
+    }
+
+    /// Materialize a resident back into a host tensor (un-batched).
+    fn read_resident(&self, prog: &CaProgram, resident: &Resident)
+        -> Result<Tensor> {
+        let _ = prog;
+        match resident {
+            Resident::Host(t) => Ok(t.clone()),
+            other => bail!(
+                "backend {:?} cannot read resident representation {:?}",
+                self.name(),
+                other.kind()
+            ),
+        }
+    }
+
+    /// Step a *uniform* batch of residents in place: every entry must
+    /// run the same `prog` and carry the same board shape (the caller —
+    /// the serve coalescer — groups by that shape class). Backends are
+    /// free to pack the batch into one internal launch; each board's
+    /// trajectory must be bitwise identical to stepping it alone
+    /// through [`rollout`](Backend::rollout).
+    ///
+    /// The default implementation round-trips every resident through
+    /// `rollout` one by one — correct everywhere, coalesced nowhere.
+    fn step_resident(&self, prog: &CaProgram, batch: &mut [&mut Resident],
+                     steps: usize) -> Result<()> {
+        for resident in batch.iter_mut() {
+            let board = self.read_resident(prog, resident)?;
+            let stacked = Tensor::stack(&[board])?;
+            let out = self.rollout(prog, &stacked, steps)?;
+            **resident = self.admit(prog, &out.index_axis0(0))?;
+        }
+        Ok(())
     }
 }
 
@@ -227,33 +324,50 @@ pub fn lenia_kernel_fft(program: &dyn ProgramBackend) -> Result<Tensor> {
     Tensor::new(spec.shape.clone(), data)
 }
 
+/// Validate one *un-batched* board against a program — the
+/// [`validate_state`] contract minus the batch axis (the resident /
+/// serve-session form).
+pub fn validate_board(prog: &CaProgram, board: &Tensor) -> Result<()> {
+    let mut shape = vec![1];
+    shape.extend_from_slice(board.shape());
+    validate_state_shape(prog, &shape)
+}
+
 /// Validate a state tensor against a program before dispatch, so shape
 /// bugs surface as precise errors rather than kernel panics.
 pub fn validate_state(prog: &CaProgram, state: &Tensor) -> Result<()> {
+    validate_state_shape(prog, state.shape())
+}
+
+/// The shape-only core of [`validate_state`] — callers that have no
+/// tensor yet (or do not want to touch its data) validate against the
+/// would-be batched shape directly.
+pub fn validate_state_shape(prog: &CaProgram, shape: &[usize])
+    -> Result<()> {
     let rank = prog.state_rank();
-    if state.shape().len() != rank {
+    if shape.len() != rank {
         bail!(
             "program {:?} wants a rank-{rank} batched state, got shape {:?}",
             prog.name(),
-            state.shape()
+            shape
         );
     }
-    if state.shape().iter().any(|&d| d == 0) {
+    if shape.iter().any(|&d| d == 0) {
         bail!(
             "program {:?}: empty dimension in state shape {:?}",
             prog.name(),
-            state.shape()
+            shape
         );
     }
     match prog {
         CaProgram::Nca(model) => {
-            let c = *state.shape().last().unwrap();
+            let c = *shape.last().unwrap();
             if c != model.channels {
                 bail!(
                     "nca model has {} channels but state shape {:?} \
                      carries {c}",
                     model.channels,
-                    state.shape()
+                    shape
                 );
             }
         }
@@ -269,7 +383,7 @@ pub fn validate_state(prog: &CaProgram, state: &Tensor) -> Result<()> {
             }
             // The wrap index `(y + h + r - ky) % h` (shared with the
             // naive oracle) needs h, w >= radius to stay non-negative.
-            let (h, w) = (state.shape()[1], state.shape()[2]);
+            let (h, w) = (shape[1], shape[2]);
             if h < params.radius || w < params.radius {
                 bail!(
                     "lenia radius {r} needs a board of at least {r}x{r}, \
@@ -280,14 +394,13 @@ pub fn validate_state(prog: &CaProgram, state: &Tensor) -> Result<()> {
         }
         CaProgram::LeniaMulti(world) => {
             world.validate()?;
-            let (c, h, w) =
-                (state.shape()[1], state.shape()[2], state.shape()[3]);
+            let (c, h, w) = (shape[1], shape[2], shape[3]);
             if c != world.channels {
                 bail!(
                     "lenia world has {} channels but state shape {:?} \
                      carries {c}",
                     world.channels,
-                    state.shape()
+                    shape
                 );
             }
             let r = world.max_radius();
@@ -359,6 +472,31 @@ mod tests {
             &Tensor::zeros(&[1, 2, 16, 16])
         )
         .is_err());
+    }
+
+    #[test]
+    fn validate_board_drops_the_batch_axis() {
+        let prog = CaProgram::Life;
+        assert!(validate_board(&prog, &Tensor::zeros(&[8, 8])).is_ok());
+        assert!(validate_board(&prog, &Tensor::zeros(&[2, 8, 8])).is_err());
+        let lenia = CaProgram::Lenia {
+            params: LeniaParams { radius: 10, ..Default::default() },
+        };
+        assert!(validate_board(&lenia, &Tensor::zeros(&[8, 8])).is_err());
+        assert!(validate_board(&lenia, &Tensor::zeros(&[32, 32])).is_ok());
+    }
+
+    #[test]
+    fn resident_shape_and_kind() {
+        let host = Resident::Host(Tensor::zeros(&[4, 4]));
+        assert_eq!(host.shape(), &[4, 4]);
+        assert_eq!(host.kind(), "host");
+        let bits = Resident::Bits { words: vec![0; 2], shape: vec![70] };
+        assert_eq!(bits.shape(), &[70]);
+        assert_eq!(bits.kind(), "bits");
+        let board =
+            Resident::Board { data: vec![0.0; 6], shape: vec![2, 3] };
+        assert_eq!(board.kind(), "board");
     }
 
     #[test]

@@ -31,11 +31,12 @@ pub mod nca_grad;
 pub mod opt;
 pub mod train;
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 use crate::backend::workers::WorkerPool;
 use crate::backend::{
-    validate_state, Backend, CaProgram, ProgramBackend, Value,
+    validate_board, validate_state, Backend, CaProgram, ProgramBackend,
+    Resident, Value,
 };
 use crate::tensor::Tensor;
 
@@ -183,6 +184,46 @@ impl NativeBackend {
         Tensor::new(shape, data)
     }
 
+    /// Pull the mutable inner buffers of a uniform resident batch,
+    /// refusing mixed representations — the shared preamble of
+    /// [`step_resident`](Backend::step_resident).
+    fn resident_bits<'a>(&self, prog: &CaProgram,
+                         batch: &'a mut [&mut Resident])
+                         -> Result<Vec<&'a mut Vec<u64>>> {
+        let mut rows = Vec::with_capacity(batch.len());
+        for r in batch.iter_mut() {
+            match &mut **r {
+                Resident::Bits { words, .. } => rows.push(words),
+                other => bail!(
+                    "native step_resident({}): wants a bits resident, \
+                     got {:?} (admit the state through this backend)",
+                    prog.name(),
+                    other.kind()
+                ),
+            }
+        }
+        Ok(rows)
+    }
+
+    fn resident_boards<'a>(&self, prog: &CaProgram,
+                           batch: &'a mut [&mut Resident])
+                           -> Result<Vec<&'a mut Vec<f32>>> {
+        let mut boards = Vec::with_capacity(batch.len());
+        for r in batch.iter_mut() {
+            match &mut **r {
+                Resident::Board { data, .. } => boards.push(data),
+                other => bail!(
+                    "native step_resident({}): wants an f32 board \
+                     resident, got {:?} (admit the state through this \
+                     backend)",
+                    prog.name(),
+                    other.kind()
+                ),
+            }
+        }
+        Ok(boards)
+    }
+
     fn nca_rollout(&self, model: &nca::NcaModel, state: &Tensor,
                    steps: usize) -> Result<Tensor> {
         let shape = state.shape();
@@ -231,6 +272,148 @@ impl Backend for NativeBackend {
         let tb = train::NativeTrainBackend::for_call(
             self.threads(), program, inputs)?;
         tb.execute(program, inputs)
+    }
+
+    /// Admit a board into the native representation: bit planes for the
+    /// discrete CAs (ECA/Life — the f32 boundary is paid exactly once),
+    /// flat kernel-layout f32 for the continuous/neural ones.
+    fn admit(&self, prog: &CaProgram, board: &Tensor) -> Result<Resident> {
+        validate_board(prog, board)?;
+        let shape = board.shape().to_vec();
+        Ok(match prog {
+            CaProgram::Eca { .. } => {
+                let mut words = vec![0u64; bits::words_for(shape[0])];
+                bits::pack_row(board.data(), &mut words);
+                Resident::Bits { words, shape }
+            }
+            CaProgram::Life => {
+                let (h, w) = (shape[0], shape[1]);
+                let mut words = vec![0u64; h * bits::words_for(w)];
+                life::pack_board(board.data(), h, w, &mut words);
+                Resident::Bits { words, shape }
+            }
+            CaProgram::Lenia { .. }
+            | CaProgram::LeniaMulti(_)
+            | CaProgram::Nca(_) => {
+                Resident::Board { data: board.data().to_vec(), shape }
+            }
+        })
+    }
+
+    fn read_resident(&self, prog: &CaProgram, resident: &Resident)
+        -> Result<Tensor> {
+        match (prog, resident) {
+            (CaProgram::Eca { .. }, Resident::Bits { words, shape }) => {
+                let mut out = vec![0.0f32; shape[0]];
+                bits::unpack_row(words, &mut out);
+                Tensor::new(shape.clone(), out)
+            }
+            (CaProgram::Life, Resident::Bits { words, shape }) => {
+                let (h, w) = (shape[0], shape[1]);
+                let mut out = vec![0.0f32; h * w];
+                life::unpack_board(words, h, w, &mut out);
+                Tensor::new(shape.clone(), out)
+            }
+            (_, Resident::Board { data, shape }) => {
+                Tensor::new(shape.clone(), data.clone())
+            }
+            (_, Resident::Host(t)) => Ok(t.clone()),
+            (p, r) => bail!(
+                "native backend: program {:?} cannot read a {:?} resident",
+                p.name(),
+                r.kind()
+            ),
+        }
+    }
+
+    /// One batched in-place launch over the worker pool — the coalesced
+    /// fast path of the serve layer. Runs the exact same kernels (and,
+    /// for Lenia, the same [`lenia::select_path`] crossover) as
+    /// [`rollout`](Backend::rollout), so each board's trajectory is
+    /// bitwise identical to stepping it solo; it just never crosses the
+    /// f32 boundary and never reallocates per call.
+    fn step_resident(&self, prog: &CaProgram, batch: &mut [&mut Resident],
+                     steps: usize) -> Result<()> {
+        if batch.is_empty() || steps == 0 {
+            return Ok(());
+        }
+        let shape = batch[0].shape().to_vec();
+        ensure!(
+            shape.len() + 1 == prog.state_rank(),
+            "step_resident({}): board rank {} does not fit the program \
+             (want {})",
+            prog.name(),
+            shape.len(),
+            prog.state_rank() - 1
+        );
+        for r in batch.iter() {
+            ensure!(
+                r.shape() == shape,
+                "step_resident({}): mixed shapes in one batch ({:?} vs \
+                 {:?}) — group by shape class first",
+                prog.name(),
+                r.shape(),
+                shape
+            );
+        }
+        match prog {
+            CaProgram::Eca { rule } => {
+                let w = shape[0];
+                let mut rows = self.resident_bits(prog, batch)?;
+                self.pool.for_each_chunk(&mut rows, 1, |_, item| {
+                    eca::rollout_row(rule, item[0].as_mut_slice(), w,
+                                     steps);
+                });
+            }
+            CaProgram::Life => {
+                let (h, w) = (shape[0], shape[1]);
+                let mut grids = self.resident_bits(prog, batch)?;
+                self.pool.for_each_chunk(&mut grids, 1, |_, item| {
+                    let mut kern = life::LifeKernel::new(h, w);
+                    kern.rollout(item[0].as_mut_slice(), steps);
+                });
+            }
+            CaProgram::Lenia { params } => {
+                let (h, w) = (shape[0], shape[1]);
+                let mut boards = self.resident_boards(prog, batch)?;
+                match lenia::select_path(params.radius, h, w) {
+                    lenia::LeniaPath::SparseTap => {
+                        let kernel = lenia::LeniaKernel::new(*params);
+                        self.pool.for_each_chunk(&mut boards, 1,
+                                                 |_, item| {
+                            let mut scratch = vec![0.0f32; h * w];
+                            kernel.rollout(item[0].as_mut_slice(),
+                                           &mut scratch, h, w, steps);
+                        });
+                    }
+                    lenia::LeniaPath::Fft => {
+                        let plan = lenia::LeniaFft::new(*params, h, w)?;
+                        self.pool.for_each_chunk(&mut boards, 1,
+                                                 |_, item| {
+                            plan.rollout(item[0].as_mut_slice(), steps);
+                        });
+                    }
+                }
+            }
+            CaProgram::LeniaMulti(world) => {
+                let (h, w) = (shape[1], shape[2]);
+                let plan = lenia::LeniaFft::for_world(world.clone(), h, w)?;
+                let mut boards = self.resident_boards(prog, batch)?;
+                self.pool.for_each_chunk(&mut boards, 1, |_, item| {
+                    plan.rollout(item[0].as_mut_slice(), steps);
+                });
+            }
+            CaProgram::Nca(model) => {
+                let (h, w, c) = (shape[0], shape[1], shape[2]);
+                let mut boards = self.resident_boards(prog, batch)?;
+                self.pool.for_each_chunk(&mut boards, 1, |_, item| {
+                    let mut scratch = vec![0.0f32; h * w * c];
+                    model.rollout(item[0].as_mut_slice(), &mut scratch, h,
+                                  w, steps);
+                });
+            }
+        }
+        Ok(())
     }
 }
 
@@ -303,5 +486,87 @@ mod tests {
         let backend = NativeBackend::new();
         let state = Tensor::zeros(&[4, 4]);
         assert!(backend.rollout(&CaProgram::Life, &state, 1).is_err());
+    }
+
+    #[test]
+    fn resident_roundtrip_is_exact() {
+        let backend = NativeBackend::with_threads(2);
+        let mut rng = Rng::new(0x51D);
+        // Discrete programs pack to bits; continuous stay f32 — all read
+        // back bitwise.
+        let eca_prog = CaProgram::Eca { rule: WolframRule::new(30) };
+        let row = Tensor::new(vec![70], rng.binary_vec(70, 0.5)).unwrap();
+        let r = backend.admit(&eca_prog, &row).unwrap();
+        assert_eq!(r.kind(), "bits");
+        assert!(backend.read_resident(&eca_prog, &r).unwrap().bit_eq(&row));
+
+        let lenia_prog = CaProgram::Lenia {
+            params: crate::automata::lenia::LeniaParams::default(),
+        };
+        let board =
+            Tensor::new(vec![16, 16], rng.vec_f32(256)).unwrap();
+        let r = backend.admit(&lenia_prog, &board).unwrap();
+        assert_eq!(r.kind(), "board");
+        assert!(backend
+            .read_resident(&lenia_prog, &r)
+            .unwrap()
+            .bit_eq(&board));
+    }
+
+    #[test]
+    fn step_resident_matches_solo_rollout() {
+        let backend = NativeBackend::with_threads(2);
+        let mut rng = Rng::new(0xBA7C);
+        let prog = CaProgram::Life;
+        let boards: Vec<Tensor> = (0..5)
+            .map(|_| {
+                Tensor::new(vec![9, 33], rng.binary_vec(9 * 33, 0.4))
+                    .unwrap()
+            })
+            .collect();
+        let mut residents: Vec<Resident> = boards
+            .iter()
+            .map(|b| backend.admit(&prog, b).unwrap())
+            .collect();
+        // Two resident ticks of 3 steps == one solo rollout of 6.
+        for _ in 0..2 {
+            let mut refs: Vec<&mut Resident> =
+                residents.iter_mut().collect();
+            backend.step_resident(&prog, &mut refs, 3).unwrap();
+        }
+        for (b, r) in boards.iter().zip(&residents) {
+            let solo = backend
+                .rollout(&prog, &Tensor::stack(&[b.clone()]).unwrap(), 6)
+                .unwrap()
+                .index_axis0(0);
+            assert!(backend
+                .read_resident(&prog, r)
+                .unwrap()
+                .bit_eq(&solo));
+        }
+    }
+
+    #[test]
+    fn step_resident_rejects_mixed_batches() {
+        let backend = NativeBackend::with_threads(1);
+        let prog = CaProgram::Life;
+        let mut a = backend.admit(&prog, &Tensor::zeros(&[8, 8])).unwrap();
+        let mut b = backend.admit(&prog, &Tensor::zeros(&[8, 16])).unwrap();
+        let err = backend
+            .step_resident(&prog, &mut [&mut a, &mut b], 1)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("mixed shapes"));
+        // Wrong representation for the program is refused too.
+        let lenia = CaProgram::Lenia {
+            params: crate::automata::lenia::LeniaParams::default(),
+        };
+        let mut c = backend
+            .admit(&lenia, &Tensor::zeros(&[32, 32]))
+            .unwrap();
+        let err = backend
+            .step_resident(&CaProgram::Life, &mut [&mut c], 1)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("bits"),
+                "wanted a repr complaint, got {err:#}");
     }
 }

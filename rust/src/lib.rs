@@ -28,10 +28,18 @@
 //!   program catalogue and its calling convention live on the
 //!   [`backend::ProgramBackend`] docs.
 //!
-//! Entry points: the `cax` CLI (`sim`, `train`, `eval`), the
-//! `examples/` directory (`native_rollout`, `native_train`, `arc_1d`),
-//! and the [`coordinator::experiments`] drivers the integration tests
-//! and benches share.
+//! Above both contracts sits [`serve`]: a std-only multi-session
+//! simulation service (`cax serve`) that keeps each session's board
+//! backend-*resident* ([`backend::Resident`]) and coalesces pending
+//! step requests into one batched launch per shape class per tick —
+//! bitwise identical to stepping each session alone, measured >= 5x
+//! faster in aggregate by `benches/serve_load.rs`.
+//!
+//! Entry points: the `cax` CLI (`sim`, `train`, `eval`, `serve`), the
+//! `examples/` directory (`native_rollout`, `native_train`, `arc_1d`,
+//! `quickstart`, `train_growing_nca`), and the
+//! [`coordinator::experiments`] drivers the integration tests and
+//! benches share.
 //!
 //! See `rust/README.md` for the architecture (layer diagram, backend
 //! feature matrix, how to enable `pjrt`) and the experiment index.
@@ -48,6 +56,7 @@ pub mod datasets;
 pub mod metrics;
 pub mod pool;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 pub mod viz;

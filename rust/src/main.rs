@@ -10,6 +10,8 @@
 //!                                growing, mnist, arc; all keys [pjrt])
 //!   eval <arc|mnist|autoenc3d>   evaluate a trained neural CA (native:
 //!                                arc; the rest need [pjrt])
+//!   serve ...                    multi-session simulation service with
+//!                                a coalescing scheduler (HTTP/1.1)
 //!
 //! Global flags: --artifacts DIR  --out DIR  --seed N  --config FILE
 //!               --backend native|pjrt
@@ -68,10 +70,18 @@ COMMANDS:
                               exact-match vs the paper's GPT-4 row;
                               --task all reproduces Table 2);
                               mnist/autoenc3d need                [pjrt]
+    serve                     multi-session simulation service: sessions
+        [--port P]            step through a coalescing scheduler (one
+        [--threads T]         batched launch per shape class per tick);
+        [--max-sessions N]    HTTP/1.1 on 127.0.0.1, JSON + PPM
+        [--max-batch B]       snapshots; SIGTERM/ctrl-c drains and
+        [--max-pending Q]     exits 0 (see rust/README.md for the curl
+        [--max-steps S]       quickstart)
+        [--tick-us U]
 
 The default build runs everything marked-free above hermetically on the
-native backend (incl. `train growing|mnist|arc` and `eval arc`); [pjrt]
-commands need `--features pjrt` plus artifacts."
+native backend (incl. `train growing|mnist|arc`, `eval arc` and
+`serve`); [pjrt] commands need `--features pjrt` plus artifacts."
 }
 
 struct Cli {
@@ -153,6 +163,7 @@ fn run() -> Result<()> {
         "sim" => cmd_sim(&cli),
         "train" => cmd_train(&cli),
         "eval" => cmd_eval(&cli),
+        "serve" => cmd_serve(&cli),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
             Ok(())
@@ -388,8 +399,9 @@ fn cmd_sim_lenia_local(cli: &Cli, path: SimPath) -> Result<()> {
     let updates = state.numel() as f64 * steps as f64;
     println!(
         "lenia [{}] radius {radius}, {steps} steps on {:?}: {:.3}s  \
-         ({:.2e} cells/s)  kernel path: {kpath}  final mean {:.4}",
-        path.name(), state.shape(), dt, updates / dt.max(1e-12), out.mean()
+         ({})  kernel path: {kpath}  final mean {:.4}",
+        path.name(), state.shape(), dt,
+        cax::metrics::rate_str(updates, dt, "cells"), out.mean()
     );
 
     if cli.has("--render") {
@@ -429,9 +441,9 @@ fn cmd_sim_local(cli: &Cli, ca: &str, path: SimPath) -> Result<()> {
     let dt = t.elapsed_secs();
     let updates = state.numel() as f64 * steps as f64;
     println!(
-        "{ca} [{}] {steps} steps on {:?}: {:.3}s  ({:.2e} cell updates/s)  \
-         final mean {:.4}",
-        path.name(), shape, dt, updates / dt.max(1e-12), out.mean()
+        "{ca} [{}] {steps} steps on {:?}: {:.3}s  ({})  final mean {:.4}",
+        path.name(), shape, dt,
+        cax::metrics::rate_str(updates, dt, "cell updates"), out.mean()
     );
 
     if cli.has("--render") {
@@ -492,8 +504,9 @@ fn cmd_sim_xla(cli: &Cli, ca: &str, path: SimPath) -> Result<()> {
     let dt = t.elapsed_secs();
     let updates = sim.cell_updates(artifact, steps)?;
     println!(
-        "{ca} [{}] {} steps: {:.3}s  ({:.2e} cell updates/s)  final mean {:.4}",
-        path.name(), steps, dt, updates / dt.max(1e-12), out.mean()
+        "{ca} [{}] {} steps: {:.3}s  ({})  final mean {:.4}",
+        path.name(), steps, dt,
+        cax::metrics::rate_str(updates, dt, "cell updates"), out.mean()
     );
 
     if cli.has("--render") {
@@ -613,6 +626,34 @@ fn cmd_train_pjrt(_cli: &Cli, key: &str) -> Result<()> {
          and needs a --features pjrt build; this build trains natively: \
          `cax train {key} --backend native`"
     )
+}
+
+// ----------------------------------------------------------------- serve
+
+/// The coalescing multi-session simulation service (`cax::serve`).
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let defaults = cax::serve::ServeConfig::default();
+    let cfg = cax::serve::ServeConfig {
+        port: match cli.flag("--port") {
+            Some(p) => p
+                .parse()
+                .with_context(|| format!("--port wants a u16, got {p:?}"))?,
+            None => defaults.port,
+        },
+        threads: cli.flag_usize("--threads", defaults.threads)?,
+        max_sessions: cli
+            .flag_usize("--max-sessions", defaults.max_sessions)?,
+        max_batch: cli.flag_usize("--max-batch", defaults.max_batch)?,
+        max_pending: cli.flag_usize("--max-pending", defaults.max_pending)?,
+        max_steps: cli.flag_usize("--max-steps", defaults.max_steps)?,
+        seed: cli.cfg.seed,
+        tick_window: std::time::Duration::from_micros(
+            cli.flag_usize("--tick-us",
+                           defaults.tick_window.as_micros() as usize)?
+                as u64,
+        ),
+    };
+    cax::serve::run(&cfg)
 }
 
 // ------------------------------------------------------------------ eval

@@ -96,6 +96,24 @@ impl History {
     }
 }
 
+/// Items (cells, steps, requests) per second, guarded against an empty
+/// or zero denominator — THE throughput formula. Every surface that
+/// prints a rate (`cax sim` cells/sec, `cax serve` steps/sec, the bench
+/// rows) divides here instead of rolling its own guard.
+pub fn per_second(items: f64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        0.0
+    } else {
+        items / seconds
+    }
+}
+
+/// Human-readable rate, e.g. `rate_str(6.4e8, 2.0, "cells")` ->
+/// `"3.20e8 cells/s"`.
+pub fn rate_str(items: f64, seconds: f64, what: &str) -> String {
+    format!("{:.2e} {what}/s", per_second(items, seconds))
+}
+
 /// Throughput aggregator: items (cells, steps, requests) per second.
 #[derive(Clone, Debug, Default)]
 pub struct Throughput {
@@ -110,11 +128,7 @@ impl Throughput {
     }
 
     pub fn per_second(&self) -> f64 {
-        if self.seconds == 0.0 {
-            0.0
-        } else {
-            self.items / self.seconds
-        }
+        per_second(self.items, self.seconds)
     }
 
     pub fn total_items(&self) -> f64 {
@@ -133,11 +147,7 @@ pub struct BenchRow {
 
 impl BenchRow {
     pub fn throughput(&self) -> f64 {
-        if self.stats.mean == 0.0 {
-            0.0
-        } else {
-            self.items_per_iter / self.stats.mean
-        }
+        per_second(self.items_per_iter, self.stats.mean)
     }
 
     pub fn to_json(&self) -> Json {
@@ -214,6 +224,14 @@ mod tests {
         assert_eq!(t.per_second(), 100.0);
         assert_eq!(t.total_items(), 400.0);
         assert_eq!(Throughput::default().per_second(), 0.0);
+    }
+
+    #[test]
+    fn per_second_guards_bad_denominators() {
+        assert_eq!(per_second(100.0, 4.0), 25.0);
+        assert_eq!(per_second(100.0, 0.0), 0.0);
+        assert_eq!(per_second(100.0, -1.0), 0.0);
+        assert_eq!(rate_str(6.4e8, 2.0, "cells"), "3.20e8 cells/s");
     }
 
     #[test]

@@ -1,0 +1,739 @@
+//! Minimal std-only HTTP/1.1 front end for the serve layer.
+//!
+//! One accept loop (non-blocking listener polled against the shutdown
+//! flag), one thread per connection with keep-alive, bounded request
+//! sizes, JSON request/response bodies through `util::json`, and PPM
+//! snapshot responses through `viz::ppm`. No TLS, no chunked encoding,
+//! no routing table — a deliberate ~300-line surface that curl and the
+//! load generator can drive.
+//!
+//! # Routes
+//!
+//! | method + path | body | effect |
+//! |---|---|---|
+//! | `GET /healthz` | — | liveness + session/queue counts |
+//! | `GET /stats` | — | scheduler counters, steps/sec |
+//! | `POST /sessions` | [`ProgramSpec`] JSON | create session (201) |
+//! | `GET /sessions/<id>` | — | status: program, shape, steps, mean |
+//! | `POST /sessions/<id>/step` | `{"steps": N}` (default 1) | coalesced step |
+//! | `POST /sessions/<id>/reset` | — | rewind to the seeded initial board |
+//! | `DELETE /sessions/<id>` | — | destroy |
+//! | `GET /sessions/<id>/snapshot.ppm` | — | P6 image of the board |
+//! | `POST /shutdown` | — | graceful drain + exit |
+//!
+//! # Graceful shutdown
+//!
+//! SIGINT/ctrl-c and SIGTERM set a process-wide flag (`POST /shutdown`
+//! sets a per-server one); the accept loop stops taking connections,
+//! the scheduler drains every queued step request (each gets its
+//! reply), live connections finish their in-flight request, and `run`
+//! returns `Ok` — so the CLI exits 0 with no leaked worker threads.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics;
+use crate::serve::scheduler::{Coalescer, StepRequest};
+use crate::serve::session::{fmt_id, parse_id, ProgramSpec};
+use crate::serve::ServeConfig;
+use crate::tensor::Tensor;
+use crate::util::json::{obj, Json};
+use crate::viz::ppm::Image;
+use crate::viz::spacetime;
+
+/// Set by the SIGINT/SIGTERM handler; observed by every accept loop.
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_signal(_sig: i32) {
+    // One atomic store: async-signal-safe.
+    SIGNALLED.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT (ctrl-c) and SIGTERM into [`SIGNALLED`]. Declared
+/// against the C runtime every Rust binary on unix already links — no
+/// crate dependency.
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// Whether the process received a shutdown signal.
+pub fn signalled() -> bool {
+    SIGNALLED.load(Ordering::SeqCst)
+}
+
+// ----------------------------------------------------------- plumbing
+
+const MAX_LINE: usize = 8 * 1024;
+const MAX_HEADERS: usize = 64;
+/// Request bodies are small JSON documents; `read_body` pre-allocates
+/// `Content-Length` bytes, so this also bounds per-connection memory.
+const MAX_BODY: usize = 1024 * 1024;
+/// Thread-per-connection cap; connections beyond it get an immediate
+/// 503 instead of an unbounded thread pile-up.
+const MAX_CONNS: usize = 64;
+/// Keep-alive connections idle longer than this are closed.
+const KEEPALIVE_IDLE: Duration = Duration::from_secs(60);
+const READ_POLL: Duration = Duration::from_millis(250);
+/// How long a step handler waits for the scheduler's reply. The
+/// launch is NOT cancelled on timeout — the steps may still be applied.
+const STEP_REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+enum ReadOutcome {
+    Request(Request),
+    /// Peer closed cleanly.
+    Closed,
+    /// Read timeout with no bytes consumed — poll the shutdown flag
+    /// and listen again.
+    Idle,
+}
+
+fn is_timeout(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// `read_line` with a hard length cap: at most `MAX_LINE + 1` bytes are
+/// pulled per call, so a peer streaming bytes without a newline cannot
+/// grow server memory unboundedly. Over-long lines surface as
+/// `InvalidData`.
+fn read_line_bounded(reader: &mut BufReader<TcpStream>, line: &mut String)
+                     -> std::io::Result<usize> {
+    let before = line.len();
+    let n = reader
+        .by_ref()
+        .take((MAX_LINE + 1) as u64)
+        .read_line(line)?;
+    if line.len() > MAX_LINE && !line[before..].ends_with('\n') {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("line exceeds the {MAX_LINE}-byte limit"),
+        ));
+    }
+    Ok(n)
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<ReadOutcome> {
+    let mut line = String::new();
+    // A started request line is read through timeouts (it may arrive
+    // split across segments); only a timeout with zero bytes is Idle.
+    let mut line_deadline: Option<Instant> = None;
+    loop {
+        match read_line_bounded(reader, &mut line) {
+            Ok(0) if line.is_empty() => return Ok(ReadOutcome::Closed),
+            Ok(0) => bail!("connection closed mid-request-line"),
+            Ok(_) => break,
+            Err(e) if is_timeout(e.kind()) => {
+                if line.is_empty() {
+                    return Ok(ReadOutcome::Idle);
+                }
+                let deadline = *line_deadline.get_or_insert_with(|| {
+                    Instant::now() + Duration::from_secs(10)
+                });
+                if Instant::now() > deadline {
+                    bail!("timed out reading the request line");
+                }
+            }
+            Err(e) => return Err(e).context("reading request line"),
+        }
+    }
+    if line.len() > MAX_LINE {
+        bail!("request line too long");
+    }
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(),
+                                         parts.next()) {
+        (Some(m), Some(p), Some(v)) => {
+            (m.to_string(), p.to_string(), v.to_string())
+        }
+        _ => bail!("malformed request line {line:?}"),
+    };
+
+    let mut content_length = 0usize;
+    let mut keep_alive = version != "HTTP/1.0";
+    let deadline = Instant::now() + Duration::from_secs(10);
+    for _ in 0..MAX_HEADERS {
+        let mut header = String::new();
+        loop {
+            match read_line_bounded(reader, &mut header) {
+                Ok(0) => bail!("connection closed mid-headers"),
+                Ok(_) => break,
+                // A request is in flight: keep reading through timeouts
+                // (but not past a stalled client).
+                Err(e) if is_timeout(e.kind()) => {
+                    if Instant::now() > deadline {
+                        bail!("timed out reading headers");
+                    }
+                }
+                Err(e) => return Err(e).context("reading header"),
+            }
+        }
+        let header = header.trim();
+        if header.is_empty() {
+            let body = read_body(reader, content_length)?;
+            return Ok(ReadOutcome::Request(Request {
+                method,
+                path,
+                body,
+                keep_alive,
+            }));
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .parse()
+                    .with_context(|| format!("content-length {value:?}"))?;
+                if content_length > MAX_BODY {
+                    bail!("body too large ({content_length} bytes)");
+                }
+            } else if name.eq_ignore_ascii_case("connection") {
+                keep_alive = !value.eq_ignore_ascii_case("close");
+            }
+        }
+    }
+    bail!("too many headers")
+}
+
+fn read_body(reader: &mut BufReader<TcpStream>, len: usize)
+             -> Result<Vec<u8>> {
+    let mut body = vec![0u8; len];
+    let mut got = 0;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while got < len {
+        match reader.read(&mut body[got..]) {
+            Ok(0) => bail!("connection closed mid-body"),
+            Ok(n) => got += n,
+            Err(e) if is_timeout(e.kind()) => {
+                if Instant::now() > deadline {
+                    bail!("timed out reading request body");
+                }
+            }
+            Err(e) => return Err(e).context("reading body"),
+        }
+    }
+    Ok(body)
+}
+
+struct Response {
+    status: u16,
+    content_type: &'static str,
+    body: Vec<u8>,
+}
+
+impl Response {
+    fn json(status: u16, value: &Json) -> Response {
+        let mut body = value.to_string_pretty().into_bytes();
+        body.push(b'\n');
+        Response { status, content_type: "application/json", body }
+    }
+
+    fn error(status: u16, msg: &str) -> Response {
+        Response::json(status, &obj(vec![("error", Json::from(msg))]))
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+fn respond(stream: &mut TcpStream, resp: &Response, close: bool)
+           -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+         Connection: {}\r\n\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if close { "close" } else { "keep-alive" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+// ------------------------------------------------------------- routes
+
+struct Ctx {
+    coalescer: Arc<Coalescer>,
+    /// Per-server shutdown flag (`POST /shutdown`); signals use the
+    /// process-wide [`SIGNALLED`].
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Ctx {
+    fn stopping(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || signalled()
+    }
+}
+
+/// Map an internal error message onto an HTTP status.
+fn error_status(msg: &str) -> u16 {
+    if msg.contains("no session") {
+        404
+    } else if msg.contains("queue full")
+        || msg.contains("shutting down")
+        || msg.contains("busy")
+    {
+        503
+    } else {
+        400
+    }
+}
+
+fn parse_body_json(body: &[u8]) -> Result<Json> {
+    if body.is_empty() {
+        return Ok(obj(vec![]));
+    }
+    let text = std::str::from_utf8(body).context("body is not UTF-8")?;
+    Json::parse(text).map_err(|e| anyhow!("body is not JSON: {e}"))
+}
+
+fn route(ctx: &Ctx, req: &Request) -> Response {
+    let segments: Vec<&str> =
+        req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => handle_healthz(ctx),
+        ("GET", ["stats"]) => handle_stats(ctx),
+        ("POST", ["shutdown"]) => {
+            ctx.shutdown.store(true, Ordering::SeqCst);
+            Response::json(200, &obj(vec![("draining", Json::Bool(true))]))
+        }
+        ("POST", ["sessions"]) => handle_create(ctx, &req.body),
+        (method, ["sessions", id, rest @ ..]) => {
+            let Some(id) = parse_id(id) else {
+                return Response::error(404, &format!("bad session id {id:?}"));
+            };
+            match (method, rest) {
+                ("GET", []) => handle_status(ctx, id),
+                ("DELETE", []) => handle_destroy(ctx, id),
+                ("POST", ["step"]) => handle_step(ctx, id, &req.body),
+                ("POST", ["reset"]) => handle_reset(ctx, id),
+                ("GET", ["snapshot.ppm"]) => handle_snapshot(ctx, id),
+                _ => Response::error(404, "no such route"),
+            }
+        }
+        _ => Response::error(404, "no such route"),
+    }
+}
+
+fn handle_healthz(ctx: &Ctx) -> Response {
+    let sessions = ctx.coalescer.registry().lock().expect("registry").len();
+    Response::json(
+        200,
+        &obj(vec![
+            ("ok", Json::Bool(true)),
+            ("sessions", Json::from(sessions)),
+            ("pending", Json::from(ctx.coalescer.pending())),
+        ]),
+    )
+}
+
+fn handle_stats(ctx: &Ctx) -> Response {
+    let stats = ctx.coalescer.stats();
+    let load = |c: &std::sync::atomic::AtomicU64| {
+        c.load(Ordering::Relaxed) as usize
+    };
+    let session_steps = load(&stats.session_steps);
+    let secs = ctx.coalescer.uptime_secs();
+    let registry = ctx.coalescer.registry().lock().expect("registry");
+    Response::json(
+        200,
+        &obj(vec![
+            ("sessions", Json::from(registry.len())),
+            ("max_sessions", Json::from(registry.max_sessions())),
+            ("pending", Json::from(ctx.coalescer.pending())),
+            ("requests", Json::from(load(&stats.requests))),
+            ("rejected", Json::from(load(&stats.rejected))),
+            ("ticks", Json::from(load(&stats.ticks))),
+            ("batches", Json::from(load(&stats.batches))),
+            ("session_steps", Json::from(session_steps)),
+            ("peak_batch", Json::from(load(&stats.peak_batch))),
+            ("uptime_s", Json::Num(secs)),
+            (
+                "steps_per_s",
+                Json::Num(metrics::per_second(session_steps as f64, secs)),
+            ),
+        ]),
+    )
+}
+
+fn handle_create(ctx: &Ctx, body: &[u8]) -> Response {
+    let json = match parse_body_json(body) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let spec = match ProgramSpec::from_json(&json) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let seed = match crate::serve::session::opt_usize(&json, "seed") {
+        Ok(s) => s.map(|v| v as u64),
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let created = {
+        let mut registry =
+            ctx.coalescer.registry().lock().expect("registry");
+        registry.create(ctx.coalescer.backend(), spec.clone(), seed)
+    };
+    match created {
+        Ok(id) => Response::json(
+            201,
+            &obj(vec![
+                ("id", Json::from(fmt_id(id).as_str())),
+                ("spec", spec.to_json()),
+            ]),
+        ),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let status =
+                if msg.contains("session limit") { 503 } else { 400 };
+            Response::error(status, &msg)
+        }
+    }
+}
+
+fn handle_status(ctx: &Ctx, id: u64) -> Response {
+    let registry = ctx.coalescer.registry().lock().expect("registry");
+    if registry.is_busy(id) {
+        return Response::error(
+            503,
+            &format!("session {} is busy (stepping); retry", fmt_id(id)),
+        );
+    }
+    let Some(session) = registry.get(id) else {
+        return Response::error(404, &format!("no session {}", fmt_id(id)));
+    };
+    let board = registry.read_board(ctx.coalescer.backend(), id);
+    let mean = match board {
+        Ok(b) => b.mean() as f64,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    Response::json(
+        200,
+        &obj(vec![
+            ("id", Json::from(fmt_id(id).as_str())),
+            ("spec", session.spec.to_json()),
+            ("steps_done", Json::from(session.steps_done as usize)),
+            ("mean", Json::Num(mean)),
+        ]),
+    )
+}
+
+fn handle_step(ctx: &Ctx, id: u64, body: &[u8]) -> Response {
+    let json = match parse_body_json(body) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let steps = match crate::serve::session::opt_usize(&json, "steps") {
+        Ok(s) => s.unwrap_or(1),
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let (tx, rx) = channel();
+    if let Err(e) =
+        ctx.coalescer.submit(StepRequest { session: id, steps, reply: tx })
+    {
+        let msg = format!("{e:#}");
+        return Response::error(error_status(&msg), &msg);
+    }
+    // The scheduler thread owns execution; wait for the scatter.
+    match rx.recv_timeout(STEP_REPLY_TIMEOUT) {
+        Ok(Ok(done)) => Response::json(
+            200,
+            &obj(vec![
+                ("id", Json::from(fmt_id(id).as_str())),
+                ("steps_done", Json::from(done.steps_done as usize)),
+                ("batch", Json::from(done.batch)),
+            ]),
+        ),
+        Ok(Err(msg)) => Response::error(error_status(&msg), &msg),
+        Err(_) => Response::error(
+            503,
+            "timed out waiting for the step reply — the launch is not \
+             cancelled and the steps may still be applied; check \
+             steps_done before retrying",
+        ),
+    }
+}
+
+fn handle_reset(ctx: &Ctx, id: u64) -> Response {
+    let mut registry = ctx.coalescer.registry().lock().expect("registry");
+    match registry.reset(ctx.coalescer.backend(), id) {
+        Ok(()) => Response::json(
+            200,
+            &obj(vec![
+                ("id", Json::from(fmt_id(id).as_str())),
+                ("steps_done", Json::from(0usize)),
+            ]),
+        ),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            Response::error(error_status(&msg), &msg)
+        }
+    }
+}
+
+fn handle_destroy(ctx: &Ctx, id: u64) -> Response {
+    let mut registry = ctx.coalescer.registry().lock().expect("registry");
+    match registry.destroy(id) {
+        Ok(()) => Response::json(
+            200,
+            &obj(vec![("deleted", Json::from(fmt_id(id).as_str()))]),
+        ),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            Response::error(error_status(&msg), &msg)
+        }
+    }
+}
+
+fn handle_snapshot(ctx: &Ctx, id: u64) -> Response {
+    let (spec, board) = {
+        let registry = ctx.coalescer.registry().lock().expect("registry");
+        if registry.is_busy(id) {
+            return Response::error(
+                503,
+                &format!("session {} is busy (stepping); retry",
+                         fmt_id(id)),
+            );
+        }
+        let Some(session) = registry.get(id) else {
+            return Response::error(404,
+                                   &format!("no session {}", fmt_id(id)));
+        };
+        let spec = session.spec.clone();
+        match registry.read_board(ctx.coalescer.backend(), id) {
+            Ok(b) => (spec, b),
+            Err(e) => return Response::error(400, &format!("{e:#}")),
+        }
+    };
+    match render_board(&spec, &board).and_then(|img| img.ppm_bytes()) {
+        Ok(bytes) => Response {
+            status: 200,
+            content_type: "image/x-portable-pixmap",
+            body: bytes,
+        },
+        Err(e) => Response::error(400, &format!("render: {e:#}")),
+    }
+}
+
+/// Render one session board as an image, per program geometry.
+fn render_board(spec: &ProgramSpec, board: &Tensor) -> Result<Image> {
+    match spec {
+        ProgramSpec::Eca { .. } => {
+            let w = board.shape()[0];
+            spacetime::render_field(
+                &board.clone().reshape(vec![1, w])?,
+            )
+        }
+        ProgramSpec::Life { .. } | ProgramSpec::Lenia { .. } => {
+            spacetime::render_field(board)
+        }
+        // Channel 0 of a multi-channel world.
+        ProgramSpec::LeniaMulti { .. } => {
+            spacetime::render_field(&board.index_axis0(0))
+        }
+        ProgramSpec::NcaGrowing => spacetime::render_rgba_state(board),
+    }
+}
+
+// ------------------------------------------------------------- server
+
+/// A running serve instance: accept loop + scheduler thread.
+pub struct Server {
+    addr: SocketAddr,
+    handle: std::thread::JoinHandle<()>,
+    coalescer: Arc<Coalescer>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn coalescer(&self) -> &Arc<Coalescer> {
+        &self.coalescer
+    }
+
+    /// Request a graceful shutdown (same path as `POST /shutdown`).
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Wait for the accept loop to drain and exit.
+    pub fn join(self) -> Result<()> {
+        self.handle
+            .join()
+            .map_err(|_| anyhow!("serve accept loop panicked"))
+    }
+}
+
+/// Bind and spawn a server over a fresh coalescer.
+pub fn start(cfg: &ServeConfig) -> Result<Server> {
+    start_with(cfg, Arc::new(Coalescer::new(cfg)))
+}
+
+/// Bind and spawn a server over an existing coalescer (tests drive the
+/// coalescer directly and via HTTP at once).
+pub fn start_with(cfg: &ServeConfig, coalescer: Arc<Coalescer>)
+                  -> Result<Server> {
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+        .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+    let addr = listener.local_addr()?;
+    listener
+        .set_nonblocking(true)
+        .context("non-blocking listener")?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let scheduler = Coalescer::spawn(&coalescer);
+    let ctx = Arc::new(Ctx {
+        coalescer: Arc::clone(&coalescer),
+        shutdown: Arc::clone(&shutdown),
+    });
+    let handle = std::thread::Builder::new()
+        .name("cax-serve-accept".into())
+        .spawn(move || accept_loop(listener, ctx, scheduler))
+        .context("spawning accept loop")?;
+    Ok(Server { addr, handle, coalescer, shutdown })
+}
+
+fn accept_loop(listener: TcpListener, ctx: Arc<Ctx>,
+               scheduler: std::thread::JoinHandle<()>) {
+    let active = Arc::new(AtomicUsize::new(0));
+    while !ctx.stopping() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Thread-per-connection with a hard cap: refuse fast
+                // rather than pile up OS threads.
+                if active.load(Ordering::SeqCst) >= MAX_CONNS {
+                    let mut stream = stream;
+                    let resp =
+                        Response::error(503, "too many connections");
+                    let _ = respond(&mut stream, &resp, true);
+                    continue;
+                }
+                let ctx = Arc::clone(&ctx);
+                let active = Arc::clone(&active);
+                active.fetch_add(1, Ordering::SeqCst);
+                let spawned = std::thread::Builder::new()
+                    .name("cax-serve-conn".into())
+                    .spawn(move || {
+                        let _ = handle_connection(stream, &ctx);
+                        active.fetch_sub(1, Ordering::SeqCst);
+                    });
+                if spawned.is_err() {
+                    active.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) if is_timeout(e.kind()) => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    // Graceful drain: stop accepting, serve every queued step request,
+    // let live connections finish their in-flight request.
+    println!("cax serve: shutdown requested — draining in-flight work");
+    ctx.coalescer.shutdown();
+    let _ = scheduler.join();
+    let deadline = Instant::now() + Duration::from_secs(3);
+    while active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    println!("cax serve: drained, exiting");
+}
+
+fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> Result<()> {
+    stream.set_read_timeout(Some(READ_POLL))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut last_activity = Instant::now();
+    loop {
+        if ctx.stopping() {
+            return Ok(());
+        }
+        let outcome = match read_request(&mut reader) {
+            Ok(o) => o,
+            Err(e) => {
+                // Best-effort 400 before dropping a broken connection.
+                let resp = Response::error(400, &format!("{e:#}"));
+                let _ = respond(&mut stream, &resp, true);
+                return Err(e);
+            }
+        };
+        match outcome {
+            ReadOutcome::Closed => return Ok(()),
+            ReadOutcome::Idle => {
+                // A keep-alive connection only holds its thread for so
+                // long without sending anything.
+                if last_activity.elapsed() > KEEPALIVE_IDLE {
+                    return Ok(());
+                }
+                continue;
+            }
+            ReadOutcome::Request(req) => {
+                last_activity = Instant::now();
+                let resp = route(ctx, &req);
+                let close = !req.keep_alive || ctx.stopping();
+                respond(&mut stream, &resp, close)
+                    .context("writing response")?;
+                if close {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+/// The blocking CLI entry: bind, announce, serve until a shutdown
+/// signal or `POST /shutdown`, drain, return `Ok` (exit code 0).
+pub fn run(cfg: &ServeConfig) -> Result<()> {
+    install_signal_handlers();
+    let server = start(cfg)?;
+    println!(
+        "cax serve listening on {} ({} worker threads, max {} sessions, \
+         max batch {})",
+        server.addr(),
+        cfg.threads,
+        cfg.max_sessions,
+        cfg.max_batch
+    );
+    std::io::stdout().flush().ok();
+    server.join()
+}

@@ -1,0 +1,104 @@
+//! `cax serve` — a coalescing multi-session simulation service.
+//!
+//! The paper's pitch is one accelerated substrate for many CA
+//! workloads; this layer makes the substrate *multi-tenant*. Many
+//! independent sessions (one live CA board each) are held
+//! backend-resident, and a coalescing scheduler packs their pending
+//! step requests into **one batched kernel launch per shape class per
+//! tick** — the CAT insight (throughput comes from packing work into
+//! large batched launches) applied to serving: N sessions stepping the
+//! same program ride one `Backend::step_resident` call, not N solo
+//! calls that each re-cross the f32/bit-plane boundary.
+//!
+//! Pieces (one module each):
+//!
+//! - [`session`]: [`ProgramSpec`] (what a session runs),
+//!   [`SessionRegistry`] (create/read/reset/destroy, admission control,
+//!   seeded-deterministic session ids).
+//! - [`scheduler`]: [`Coalescer`] — the FIFO coalescing scheduler with
+//!   its documented fairness/deadline policy and queue backpressure.
+//! - [`http`]: a std-only HTTP/1.1 front end over `TcpListener`
+//!   (JSON via `util::json`, PPM snapshots via `viz::ppm`), plus
+//!   graceful SIGINT/SIGTERM shutdown that drains in-flight work.
+//!
+//! Everything is std + this crate — no new dependencies, matching the
+//! repo's hermetic ethos. Start it from the CLI:
+//!
+//! ```sh
+//! cax serve --port 7878 --threads 4 --max-sessions 256
+//! ```
+//!
+//! and drive it with curl (see `rust/README.md` for the full tour):
+//!
+//! ```sh
+//! curl -s -X POST localhost:7878/sessions \
+//!      -d '{"program": "life", "size": 128}'          # -> {"id": "..."}
+//! curl -s -X POST localhost:7878/sessions/<id>/step \
+//!      -d '{"steps": 16}'
+//! curl -s localhost:7878/sessions/<id>/snapshot.ppm -o board.ppm
+//! ```
+
+pub mod http;
+pub mod scheduler;
+pub mod session;
+
+pub use http::{run, start, Server};
+pub use scheduler::{Coalescer, ServeStats, StepDone, StepReply, StepRequest};
+pub use session::{ProgramSpec, Session, SessionRegistry};
+
+use std::time::Duration;
+
+/// Service knobs; the CLI maps `cax serve` flags onto these.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// TCP port to bind on 127.0.0.1 (0 = pick an ephemeral port).
+    pub port: u16,
+    /// Worker threads of the batched backend.
+    pub threads: usize,
+    /// Session admission limit ([`SessionRegistry`]).
+    pub max_sessions: usize,
+    /// Largest number of sessions packed into one launch.
+    pub max_batch: usize,
+    /// Step-queue bound; submissions beyond it are rejected (503).
+    pub max_pending: usize,
+    /// Largest step count one request may ask for — bounds how long a
+    /// single batched launch can hold the registry lock.
+    pub max_steps: usize,
+    /// Service seed: session ids and default initial boards derive from
+    /// it deterministically.
+    pub seed: u64,
+    /// How long a woken scheduler waits for a request burst to
+    /// accumulate before packing a batch (latency traded for batch
+    /// size; zero = pack immediately).
+    pub tick_window: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            port: 7878,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            max_sessions: 256,
+            max_batch: 64,
+            max_pending: 1024,
+            max_steps: 10_000,
+            seed: 0,
+            tick_window: Duration::from_micros(300),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.threads >= 1);
+        assert!(cfg.max_batch >= 1 && cfg.max_sessions >= 1);
+        assert!(cfg.max_pending >= cfg.max_batch);
+    }
+}

@@ -1,0 +1,582 @@
+//! The coalescing scheduler: many sessions, few kernel launches.
+//!
+//! Every step request lands in one FIFO queue. Each *tick* the
+//! [`Coalescer`] walks the queue in arrival order and packs requests
+//! into per-shape-class batches (class = [`ProgramSpec::class_key`] +
+//! requested step count — everything that must be uniform for one
+//! batched launch), then runs **one** [`Backend::step_resident`] call
+//! per batch across the worker pool and scatters the results back to
+//! their sessions.
+//!
+//! # Fairness / deadline policy
+//!
+//! - Requests are admitted to batches strictly in arrival order; a
+//!   request is only deferred to the next tick when (a) its session is
+//!   already claimed by an earlier request this tick, (b) its shape
+//!   class already holds `max_batch` requests, or (c) an *earlier*
+//!   request of the same session was deferred this tick (deferral
+//!   blocks the session for the rest of the tick, so a session's
+//!   requests are always served in arrival order — never reordered
+//!   across classes). Deferred requests keep their queue position, so
+//!   a request at position `p` is served within at most `p + 1` ticks
+//!   — no starvation, no priority inversion. (These invariants are
+//!   property-checked over randomized workloads; see
+//!   `tests/serve_props.rs` and the unit tests below.)
+//! - Every tick with a non-empty queue serves at least the oldest
+//!   request (with a result or an error), so the queue always drains.
+//!
+//! # Admission control / backpressure
+//!
+//! The pending queue is bounded (`max_pending`); submissions beyond the
+//! bound are rejected immediately (HTTP 503) rather than queued without
+//! limit. Session admission itself is bounded by the registry's
+//! `max_sessions`.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::backend::{Backend, NativeBackend};
+use crate::serve::session::{fmt_id, SessionRegistry};
+use crate::serve::ServeConfig;
+
+/// A pending "step session S by N" request, with its reply channel.
+#[derive(Debug)]
+pub struct StepRequest {
+    pub session: u64,
+    pub steps: usize,
+    pub reply: Sender<StepReply>,
+}
+
+/// What a served request learns. `batch` is the number of sessions that
+/// rode the same launch — the coalescing observability hook.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepDone {
+    pub session: u64,
+    pub steps_done: u64,
+    pub batch: usize,
+}
+
+/// Reply to a step request; errors cross threads as strings.
+pub type StepReply = Result<StepDone, String>;
+
+/// Monotonic counters the `/stats` endpoint and the benches read.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Step requests accepted into the queue.
+    pub requests: AtomicU64,
+    /// Step requests refused by backpressure.
+    pub rejected: AtomicU64,
+    /// Scheduler ticks that served at least one request.
+    pub ticks: AtomicU64,
+    /// Batched kernel launches.
+    pub batches: AtomicU64,
+    /// Total session-steps executed (sum of steps x batch size).
+    pub session_steps: AtomicU64,
+    /// Largest batch packed so far.
+    pub peak_batch: AtomicU64,
+}
+
+impl ServeStats {
+    fn bump_peak(&self, batch: u64) {
+        self.peak_batch.fetch_max(batch, Ordering::Relaxed);
+    }
+}
+
+struct Queue {
+    pending: VecDeque<StepRequest>,
+    /// Set on shutdown: no new submissions, the run loop exits once the
+    /// queue is drained.
+    draining: bool,
+}
+
+/// The multi-session scheduler. Shared (`Arc`) between the HTTP
+/// handlers (submit + registry access) and the scheduler thread (tick).
+pub struct Coalescer {
+    backend: NativeBackend,
+    registry: Mutex<SessionRegistry>,
+    queue: Mutex<Queue>,
+    work: Condvar,
+    max_batch: usize,
+    max_pending: usize,
+    max_steps: usize,
+    /// How long a woken scheduler waits for a burst to accumulate
+    /// before packing (latency it trades for batch size).
+    tick_window: Duration,
+    stats: ServeStats,
+    started: Instant,
+}
+
+impl Coalescer {
+    pub fn new(cfg: &ServeConfig) -> Coalescer {
+        Coalescer {
+            backend: NativeBackend::with_threads(cfg.threads),
+            registry: Mutex::new(SessionRegistry::new(cfg.seed,
+                                                      cfg.max_sessions)),
+            queue: Mutex::new(Queue {
+                pending: VecDeque::new(),
+                draining: false,
+            }),
+            work: Condvar::new(),
+            max_batch: cfg.max_batch.max(1),
+            max_pending: cfg.max_pending.max(1),
+            max_steps: cfg.max_steps.max(1),
+            tick_window: cfg.tick_window,
+            stats: ServeStats::default(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn backend(&self) -> &NativeBackend {
+        &self.backend
+    }
+
+    /// The session registry (create/read/reset/destroy go straight
+    /// through; only *stepping* is coalesced).
+    pub fn registry(&self) -> &Mutex<SessionRegistry> {
+        &self.registry
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Seconds since this coalescer came up (throughput denominators).
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Number of requests waiting to be packed.
+    pub fn pending(&self) -> usize {
+        self.queue.lock().expect("serve queue").pending.len()
+    }
+
+    /// Enqueue a step request, honoring backpressure and shutdown.
+    pub fn submit(&self, req: StepRequest) -> Result<()> {
+        if req.steps == 0 {
+            bail!("step: steps must be >= 1");
+        }
+        // One launch runs under the registry lock; an unbounded step
+        // count would wedge every other endpoint behind it.
+        if req.steps > self.max_steps {
+            bail!(
+                "step: steps {} exceeds the per-request limit {}",
+                req.steps,
+                self.max_steps
+            );
+        }
+        let mut q = self.queue.lock().expect("serve queue");
+        if q.draining {
+            bail!("server is shutting down");
+        }
+        if q.pending.len() >= self.max_pending {
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "step queue full ({} pending) — retry later",
+                q.pending.len()
+            );
+        }
+        q.pending.push_back(req);
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.work.notify_one();
+        Ok(())
+    }
+
+    /// One scheduling round: drain the queue, pack shape-class batches
+    /// in FIFO order, launch each batch once, scatter replies. Returns
+    /// the number of requests answered (results + errors). Deferred
+    /// requests go back to the queue front with their order intact.
+    pub fn tick(&self) -> usize {
+        let taken: Vec<StepRequest> = {
+            let mut q = self.queue.lock().expect("serve queue");
+            q.pending.drain(..).collect()
+        };
+        if taken.is_empty() {
+            return 0;
+        }
+
+        // ---- plan: FIFO walk, group by (class key, steps) -----------
+        struct Group {
+            reqs: Vec<StepRequest>,
+        }
+        let mut groups: Vec<Group> = vec![];
+        let mut by_key: BTreeMap<(String, usize), usize> = BTreeMap::new();
+        let mut claimed: BTreeSet<u64> = BTreeSet::new();
+        // Sessions with a deferred request this tick: every later
+        // request of theirs must defer too, or a session's trajectory
+        // could be served out of arrival order.
+        let mut blocked: BTreeSet<u64> = BTreeSet::new();
+        let mut deferred: Vec<StepRequest> = vec![];
+        let mut served = 0usize;
+        {
+            let registry = self.registry.lock().expect("serve registry");
+            for req in taken {
+                // Defensive: a session detached into a still-running
+                // launch (possible if tick() ever runs concurrently)
+                // defers rather than erroring as unknown.
+                if registry.is_busy(req.session) {
+                    blocked.insert(req.session);
+                    deferred.push(req);
+                    continue;
+                }
+                let Some(session) = registry.get(req.session) else {
+                    let _ = req.reply.send(Err(format!(
+                        "no session {}",
+                        fmt_id(req.session)
+                    )));
+                    served += 1;
+                    continue;
+                };
+                if claimed.contains(&req.session)
+                    || blocked.contains(&req.session)
+                {
+                    blocked.insert(req.session);
+                    deferred.push(req);
+                    continue;
+                }
+                let key = (session.spec.class_key(), req.steps);
+                let slot = *by_key.entry(key).or_insert_with(|| {
+                    groups.push(Group { reqs: vec![] });
+                    groups.len() - 1
+                });
+                if groups[slot].reqs.len() >= self.max_batch {
+                    blocked.insert(req.session);
+                    deferred.push(req);
+                    continue;
+                }
+                claimed.insert(req.session);
+                groups[slot].reqs.push(req);
+            }
+        }
+
+        // ---- execute: one batched launch per group ------------------
+        for group in &groups {
+            let steps = group.reqs[0].steps;
+            // Detach the group's sessions (they become "busy"), then
+            // DROP the registry lock for the kernel launch — other
+            // endpoints keep working while the batch runs; touching a
+            // busy session fails fast with a retryable error.
+            let mut sessions = Vec::with_capacity(group.reqs.len());
+            let mut live = Vec::with_capacity(group.reqs.len());
+            {
+                let mut registry =
+                    self.registry.lock().expect("serve registry");
+                // A session may have been destroyed between planning
+                // and execution; those requests get an error, the rest
+                // still ride the launch.
+                for req in &group.reqs {
+                    match registry.take_for_step(req.session) {
+                        Some(s) => {
+                            sessions.push(s);
+                            live.push(req);
+                        }
+                        None => {
+                            let _ = req.reply.send(Err(format!(
+                                "no session {}",
+                                fmt_id(req.session)
+                            )));
+                            served += 1;
+                        }
+                    }
+                }
+            }
+            if sessions.is_empty() {
+                continue;
+            }
+            let batch = sessions.len();
+            let prog = sessions[0].prog.clone();
+            let outcome = {
+                let mut refs: Vec<&mut crate::backend::Resident> =
+                    sessions.iter_mut().map(|s| &mut s.resident).collect();
+                self.backend.step_resident(&prog, &mut refs, steps)
+            };
+            if outcome.is_ok() {
+                for s in &mut sessions {
+                    s.steps_done += steps as u64;
+                }
+            }
+            let replies: Vec<StepReply> = match &outcome {
+                Ok(()) => sessions
+                    .iter()
+                    .map(|s| {
+                        Ok(StepDone {
+                            session: s.id,
+                            steps_done: s.steps_done,
+                            batch,
+                        })
+                    })
+                    .collect(),
+                Err(e) => {
+                    live.iter().map(|_| Err(format!("{e:#}"))).collect()
+                }
+            };
+            {
+                let mut registry =
+                    self.registry.lock().expect("serve registry");
+                for s in sessions {
+                    registry.restore(s);
+                }
+            }
+            if outcome.is_ok() {
+                self.stats.batches.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .session_steps
+                    .fetch_add((steps * batch) as u64, Ordering::Relaxed);
+                self.stats.bump_peak(batch as u64);
+            }
+            for (req, reply) in live.iter().zip(replies) {
+                let _ = req.reply.send(reply);
+                served += 1;
+            }
+        }
+
+        if !deferred.is_empty() {
+            let mut q = self.queue.lock().expect("serve queue");
+            for req in deferred.into_iter().rev() {
+                q.pending.push_front(req);
+            }
+        }
+        if served > 0 {
+            self.stats.ticks.fetch_add(1, Ordering::Relaxed);
+        }
+        served
+    }
+
+    /// Reject new work and let the run loop drain what is queued.
+    pub fn shutdown(&self) {
+        let mut q = self.queue.lock().expect("serve queue");
+        q.draining = true;
+        self.work.notify_all();
+    }
+
+    /// Whether shutdown has been requested.
+    pub fn draining(&self) -> bool {
+        self.queue.lock().expect("serve queue").draining
+    }
+
+    /// The scheduler loop: sleep until work arrives, optionally wait
+    /// `tick_window` for a burst to coalesce, tick. Exits once shutdown
+    /// is requested AND the queue is fully drained — in-flight requests
+    /// always get their reply.
+    pub fn run(&self) {
+        loop {
+            {
+                let mut q = self.queue.lock().expect("serve queue");
+                while q.pending.is_empty() && !q.draining {
+                    q = self.work.wait(q).expect("serve queue");
+                }
+                if q.pending.is_empty() && q.draining {
+                    return;
+                }
+            }
+            if !self.tick_window.is_zero() && !self.draining() {
+                std::thread::sleep(self.tick_window);
+            }
+            self.tick();
+        }
+    }
+
+    /// Spawn the scheduler thread over a shared coalescer.
+    pub fn spawn(this: &Arc<Coalescer>) -> std::thread::JoinHandle<()> {
+        let that = Arc::clone(this);
+        std::thread::Builder::new()
+            .name("cax-serve-scheduler".into())
+            .spawn(move || that.run())
+            .expect("spawn scheduler thread")
+    }
+}
+
+impl std::fmt::Debug for Coalescer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Coalescer")
+            .field("max_batch", &self.max_batch)
+            .field("max_pending", &self.max_pending)
+            .field("pending", &self.pending())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::session::ProgramSpec;
+    use std::sync::mpsc::channel;
+
+    fn coalescer(max_batch: usize, max_pending: usize) -> Coalescer {
+        Coalescer::new(&ServeConfig {
+            threads: 2,
+            max_batch,
+            max_pending,
+            tick_window: Duration::ZERO,
+            ..ServeConfig::default()
+        })
+    }
+
+    fn create(c: &Coalescer, spec: ProgramSpec) -> u64 {
+        c.registry()
+            .lock()
+            .unwrap()
+            .create(c.backend(), spec, None)
+            .unwrap()
+    }
+
+    #[test]
+    fn one_tick_packs_one_class_into_one_batch() {
+        let c = coalescer(64, 64);
+        let ids: Vec<u64> = (0..5)
+            .map(|_| create(&c, ProgramSpec::Life { height: 16, width: 16 }))
+            .collect();
+        let (tx, rx) = channel();
+        for &id in &ids {
+            c.submit(StepRequest { session: id, steps: 2, reply: tx.clone() })
+                .unwrap();
+        }
+        assert_eq!(c.tick(), 5);
+        for _ in 0..5 {
+            let done = rx.recv().unwrap().unwrap();
+            assert_eq!(done.batch, 5, "all five should ride one launch");
+            assert_eq!(done.steps_done, 2);
+        }
+        assert_eq!(c.stats().batches.load(Ordering::Relaxed), 1);
+        assert_eq!(c.stats().session_steps.load(Ordering::Relaxed), 10);
+        assert_eq!(c.stats().peak_batch.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn distinct_classes_get_distinct_batches() {
+        let c = coalescer(64, 64);
+        let a = create(&c, ProgramSpec::Life { height: 16, width: 16 });
+        let b = create(&c, ProgramSpec::Life { height: 16, width: 32 });
+        let e = create(&c, ProgramSpec::Eca { rule: 30, width: 64 });
+        let (tx, rx) = channel();
+        for id in [a, b, e] {
+            c.submit(StepRequest { session: id, steps: 1, reply: tx.clone() })
+                .unwrap();
+        }
+        // A second request for a claimed session defers one tick, so a
+        // session's trajectory order is never reordered inside a batch.
+        c.submit(StepRequest { session: a, steps: 1, reply: tx.clone() })
+            .unwrap();
+        let served = c.tick();
+        assert_eq!(served, 3, "a's duplicate must defer to the next tick");
+        for _ in 0..3 {
+            assert_eq!(rx.recv().unwrap().unwrap().batch, 1);
+        }
+        assert_eq!(c.tick(), 1, "deferred duplicate served next tick");
+        assert_eq!(rx.recv().unwrap().unwrap().steps_done, 2);
+        assert_eq!(c.stats().batches.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn max_batch_splits_across_ticks_fifo() {
+        let c = coalescer(2, 64);
+        let ids: Vec<u64> = (0..5)
+            .map(|_| create(&c, ProgramSpec::Eca { rule: 90, width: 32 }))
+            .collect();
+        let (tx, rx) = channel();
+        for &id in &ids {
+            c.submit(StepRequest { session: id, steps: 1, reply: tx.clone() })
+                .unwrap();
+        }
+        // 5 requests, cap 2: ticks serve 2, 2, 1 — in arrival order.
+        assert_eq!(c.tick(), 2);
+        let first: Vec<u64> = (0..2)
+            .map(|_| rx.recv().unwrap().unwrap().session)
+            .collect();
+        assert_eq!(first, ids[0..2].to_vec(), "FIFO order preserved");
+        assert_eq!(c.tick(), 2);
+        assert_eq!(c.tick(), 1);
+        assert_eq!(c.tick(), 0, "queue drained");
+    }
+
+    #[test]
+    fn deferral_blocks_the_session_for_the_rest_of_the_tick() {
+        // Regression (found by the randomized planning model): if a
+        // session's request is deferred because its class batch is
+        // full, a LATER request of the same session — even in another
+        // class — must defer too, or the session's trajectory would be
+        // served out of arrival order.
+        let c = coalescer(1, 64); // max_batch 1
+        let filler = create(&c, ProgramSpec::Eca { rule: 30, width: 32 });
+        let victim = create(&c, ProgramSpec::Eca { rule: 30, width: 32 });
+        let (tx, rx) = channel();
+        // 1) filler claims the only eca:r30:w32 slot (1 step).
+        c.submit(StepRequest { session: filler, steps: 1,
+                               reply: tx.clone() })
+            .unwrap();
+        // 2) victim, same class -> batch full -> deferred.
+        c.submit(StepRequest { session: victim, steps: 1,
+                               reply: tx.clone() })
+            .unwrap();
+        // 3) victim again with steps: 2 — a DIFFERENT class key; must
+        //    NOT overtake the deferred request.
+        c.submit(StepRequest { session: victim, steps: 2,
+                               reply: tx.clone() })
+            .unwrap();
+        assert_eq!(c.tick(), 1, "only filler served in tick 1");
+        assert_eq!(rx.recv().unwrap().unwrap().session, filler);
+        assert_eq!(c.tick(), 1, "victim's FIRST request served next");
+        assert_eq!(rx.recv().unwrap().unwrap().steps_done, 1);
+        assert_eq!(c.tick(), 1);
+        assert_eq!(rx.recv().unwrap().unwrap().steps_done, 3,
+                   "1-step then 2-step, in arrival order");
+    }
+
+    #[test]
+    fn backpressure_rejects_beyond_max_pending() {
+        let c = coalescer(8, 2);
+        let id = create(&c, ProgramSpec::Eca { rule: 30, width: 16 });
+        let (tx, _rx) = channel();
+        c.submit(StepRequest { session: id, steps: 1, reply: tx.clone() })
+            .unwrap();
+        c.submit(StepRequest { session: id, steps: 1, reply: tx.clone() })
+            .unwrap();
+        let err = c
+            .submit(StepRequest { session: id, steps: 1, reply: tx.clone() })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("queue full"));
+        assert_eq!(c.stats().rejected.load(Ordering::Relaxed), 1);
+        assert!(c
+            .submit(StepRequest { session: id, steps: 0, reply: tx.clone() })
+            .is_err());
+        // Per-request step counts are bounded too (one launch holds the
+        // registry lock for its whole duration).
+        let err = c
+            .submit(StepRequest { session: id, steps: 10_001, reply: tx })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("per-request limit"));
+    }
+
+    #[test]
+    fn unknown_sessions_get_error_replies() {
+        let c = coalescer(8, 8);
+        let (tx, rx) = channel();
+        c.submit(StepRequest { session: 0xDEAD, steps: 1, reply: tx })
+            .unwrap();
+        assert_eq!(c.tick(), 1);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("no session"));
+    }
+
+    #[test]
+    fn shutdown_rejects_submissions_and_run_drains() {
+        let c = Arc::new(coalescer(8, 8));
+        let id = create(&c, ProgramSpec::Life { height: 8, width: 8 });
+        let (tx, rx) = channel();
+        c.submit(StepRequest { session: id, steps: 3, reply: tx.clone() })
+            .unwrap();
+        let handle = Coalescer::spawn(&c);
+        c.shutdown();
+        handle.join().unwrap();
+        // The in-flight request was drained, not dropped.
+        assert_eq!(rx.recv().unwrap().unwrap().steps_done, 3);
+        let err = c
+            .submit(StepRequest { session: id, steps: 1, reply: tx })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("shutting down"));
+    }
+}

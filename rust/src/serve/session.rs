@@ -1,0 +1,589 @@
+//! Sessions: program specs, per-session resident state, the registry.
+//!
+//! A *session* is one live CA board owned by one client: a
+//! [`ProgramSpec`] (what to run), a [`CaProgram`] built from it, and a
+//! backend-[`Resident`] state stepped in place between reads. The
+//! [`SessionRegistry`] owns every session, enforces the admission limit
+//! (`max_sessions`), and mints **seeded-deterministic ids**: for a fixed
+//! service seed, the n-th created session always gets the same id and
+//! the same initial board, so a whole multi-session workload replays
+//! exactly.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Context, Result};
+
+use crate::automata::lenia::{LeniaParams, LeniaWorld};
+use crate::automata::WolframRule;
+use crate::backend::native::nca::NcaModel;
+use crate::backend::native::train::NcaTrainSpec;
+use crate::backend::{
+    Backend, CaProgram, NativeBackend, NativeTrainBackend, ProgramBackend,
+    Resident,
+};
+use crate::tensor::Tensor;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+/// What a session runs — the parseable, comparable description a create
+/// request carries. Every variant maps to exactly one [`CaProgram`] and
+/// one board geometry, so two sessions with equal specs are guaranteed
+/// batchable (same kernels, same shapes).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProgramSpec {
+    /// Elementary CA: a `[W]` ring under one Wolfram rule.
+    Eca { rule: u8, width: usize },
+    /// Conway's Game of Life on an `[H, W]` torus.
+    Life { height: usize, width: usize },
+    /// Single-kernel Lenia on an `[H, W]` torus (paper-default
+    /// mu/sigma/dt; the radius picks sparse-tap vs spectral).
+    Lenia { radius: usize, height: usize, width: usize },
+    /// Multi-kernel spectral Lenia demo world (`LeniaWorld::demo`):
+    /// K kernels cross-mixing `max(2, ceil(K/2))` channels.
+    LeniaMulti { kernels: usize, radius: usize, height: usize, width: usize },
+    /// The growing-NCA forward cell, wired from the native manifest
+    /// programs: geometry from [`NcaTrainSpec::growing`], parameters
+    /// from the `growing_params` blob, initial board from the
+    /// `growing_seed` program.
+    NcaGrowing,
+}
+
+/// Optional non-negative-integer JSON field: absent is `None`, present
+/// with the wrong type is an ERROR — silently defaulting on a typo'd
+/// `{"size": "512"}` would hand the client a board they did not ask
+/// for. Shared by the create and step request parsers.
+pub fn opt_usize(body: &Json, name: &str) -> Result<Option<usize>> {
+    match body.get(name) {
+        None => Ok(None),
+        Some(v) => v.as_usize().map(Some).with_context(|| {
+            format!("{name:?} wants a non-negative integer")
+        }),
+    }
+}
+
+/// Largest board axis a create request may ask for.
+pub const MAX_DIM: usize = 8192;
+/// Largest total cell count per session board (bounds the per-session
+/// allocation a single unauthenticated request can trigger).
+pub const MAX_CELLS: usize = 1 << 22;
+/// Largest kernel count for a `lenia-multi` world (each kernel
+/// precomputes an `H x W` spectrum per batch launch).
+pub const MAX_KERNELS: usize = 16;
+
+impl ProgramSpec {
+    /// Parse a create-request JSON body, e.g.
+    /// `{"program": "life", "height": 128, "width": 128}`.
+    ///
+    /// Geometry is bounded here ([`MAX_DIM`] per axis, [`MAX_CELLS`]
+    /// total, [`MAX_KERNELS`] kernels) so a single request can never
+    /// ask the server to allocate an unbounded board — the check runs
+    /// before any allocation or registry lock.
+    pub fn from_json(body: &Json) -> Result<ProgramSpec> {
+        let kind = body
+            .get("program")
+            .and_then(Json::as_str)
+            .context("create: body wants a \"program\" string \
+                      (eca|life|lenia|lenia-multi|nca)")?;
+        let dim = |name: &str, default: usize| -> Result<usize> {
+            let value = match opt_usize(body, name)? {
+                Some(v) => v,
+                None => opt_usize(body, "size")?.unwrap_or(default),
+            };
+            if value > MAX_DIM {
+                bail!("create: {name} {value} exceeds the {MAX_DIM} limit");
+            }
+            Ok(value)
+        };
+        let spec = Self::parse_kind(body, kind, &dim)?;
+        let cells: usize = spec.board_shape().iter().product();
+        if cells > MAX_CELLS {
+            bail!(
+                "create: board of {cells} cells exceeds the {MAX_CELLS} \
+                 limit"
+            );
+        }
+        Ok(spec)
+    }
+
+    fn parse_kind(body: &Json, kind: &str,
+                  dim: &dyn Fn(&str, usize) -> Result<usize>)
+                  -> Result<ProgramSpec> {
+        Ok(match kind {
+            "eca" => ProgramSpec::Eca {
+                rule: match opt_usize(body, "rule")? {
+                    None => 30,
+                    Some(r) if r <= 255 => r as u8,
+                    Some(r) => bail!("create: eca rule {r} > 255"),
+                },
+                width: dim("width", 256)?,
+            },
+            "life" => ProgramSpec::Life {
+                height: dim("height", 64)?,
+                width: dim("width", 64)?,
+            },
+            "lenia" => ProgramSpec::Lenia {
+                radius: opt_usize(body, "radius")?
+                    .unwrap_or(LeniaParams::default().radius),
+                height: dim("height", 64)?,
+                width: dim("width", 64)?,
+            },
+            "lenia-multi" => {
+                let kernels = opt_usize(body, "kernels")?.unwrap_or(2);
+                if !(1..=MAX_KERNELS).contains(&kernels) {
+                    bail!(
+                        "create: kernels {kernels} outside 1..={MAX_KERNELS}"
+                    );
+                }
+                ProgramSpec::LeniaMulti {
+                    kernels,
+                    radius: opt_usize(body, "radius")?.unwrap_or(8),
+                    height: dim("height", 64)?,
+                    width: dim("width", 64)?,
+                }
+            }
+            "nca" => ProgramSpec::NcaGrowing,
+            other => bail!(
+                "create: unknown program {other:?} \
+                 (eca|life|lenia|lenia-multi|nca)"
+            ),
+        })
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ProgramSpec::Eca { .. } => "eca",
+            ProgramSpec::Life { .. } => "life",
+            ProgramSpec::Lenia { .. } => "lenia",
+            ProgramSpec::LeniaMulti { .. } => "lenia-multi",
+            ProgramSpec::NcaGrowing => "nca",
+        }
+    }
+
+    /// The shape-class key the coalescer groups by. Equal keys imply
+    /// identical programs *and* identical board shapes (every field the
+    /// kernels depend on is spelled into the key), so any two sessions
+    /// in one class can ride one batched launch.
+    pub fn class_key(&self) -> String {
+        match self {
+            ProgramSpec::Eca { rule, width } => format!("eca:r{rule}:w{width}"),
+            ProgramSpec::Life { height, width } => {
+                format!("life:{height}x{width}")
+            }
+            ProgramSpec::Lenia { radius, height, width } => {
+                format!("lenia:r{radius}:{height}x{width}")
+            }
+            ProgramSpec::LeniaMulti { kernels, radius, height, width } => {
+                format!("lenia-multi:k{kernels}:r{radius}:{height}x{width}")
+            }
+            ProgramSpec::NcaGrowing => "nca:growing".to_string(),
+        }
+    }
+
+    /// Build the [`CaProgram`] this spec runs. Pure in the spec: equal
+    /// specs always produce identical programs (the `nca` cell is
+    /// rebuilt from the deterministic `growing_params` manifest blob).
+    pub fn program(&self) -> Result<CaProgram> {
+        Ok(match self {
+            ProgramSpec::Eca { rule, .. } => {
+                CaProgram::Eca { rule: WolframRule::new(*rule) }
+            }
+            ProgramSpec::Life { .. } => CaProgram::Life,
+            ProgramSpec::Lenia { radius, .. } => CaProgram::Lenia {
+                params: LeniaParams { radius: *radius, ..Default::default() },
+            },
+            ProgramSpec::LeniaMulti { kernels, radius, .. } => {
+                CaProgram::LeniaMulti(LeniaWorld::demo(*kernels, *radius))
+            }
+            ProgramSpec::NcaGrowing => {
+                let spec = NcaTrainSpec::growing();
+                let tb = NativeTrainBackend::new();
+                let params = tb.load_params("growing_params")?;
+                CaProgram::Nca(NcaModel::from_flat(
+                    spec.channels,
+                    spec.hidden,
+                    spec.dt,
+                    params.data(),
+                ))
+            }
+        })
+    }
+
+    /// Un-batched board shape of one session of this spec.
+    pub fn board_shape(&self) -> Vec<usize> {
+        match self {
+            ProgramSpec::Eca { width, .. } => vec![*width],
+            ProgramSpec::Life { height, width }
+            | ProgramSpec::Lenia { height, width, .. } => {
+                vec![*height, *width]
+            }
+            ProgramSpec::LeniaMulti { kernels, radius, height, width } => {
+                let world = LeniaWorld::demo(*kernels, *radius);
+                vec![world.channels, *height, *width]
+            }
+            ProgramSpec::NcaGrowing => {
+                let spec = NcaTrainSpec::growing();
+                vec![spec.height, spec.width, spec.channels]
+            }
+        }
+    }
+
+    /// Deterministic initial board for a session seed: a density-0.5
+    /// binary soup for the classic CAs (the `cax sim` convention), the
+    /// single-seed-cell `growing_seed` state for the NCA.
+    pub fn initial_board(&self, seed: u64) -> Result<Tensor> {
+        if let ProgramSpec::NcaGrowing = self {
+            let tb = NativeTrainBackend::new();
+            let out = tb.execute("growing_seed", &[])?;
+            return Ok(out.into_iter().next().unwrap());
+        }
+        let shape = self.board_shape();
+        let numel: usize = shape.iter().product();
+        let mut rng = Rng::new(seed);
+        Tensor::new(shape, rng.binary_vec(numel, 0.5))
+    }
+
+    /// JSON description (session status responses).
+    pub fn to_json(&self) -> Json {
+        let shape = self.board_shape();
+        let mut fields = vec![
+            ("program", Json::from(self.kind())),
+            ("class", Json::from(self.class_key().as_str())),
+            ("shape", Json::Arr(shape.into_iter().map(Json::from).collect())),
+        ];
+        // Surface which native kernel this session's geometry selects
+        // (the coordinator's crossover heuristic), so operators can see
+        // why two Lenia sessions land in different batches.
+        if let ProgramSpec::Lenia { radius, height, width } = self {
+            fields.push((
+                "kernel",
+                Json::from(crate::coordinator::Simulator::lenia_native_path(
+                    LeniaParams { radius: *radius, ..Default::default() },
+                    *height,
+                    *width,
+                )),
+            ));
+        }
+        obj(fields)
+    }
+}
+
+/// One live session: spec, compiled program, resident state, counters.
+#[derive(Clone, Debug)]
+pub struct Session {
+    pub id: u64,
+    pub spec: ProgramSpec,
+    pub prog: CaProgram,
+    pub resident: Resident,
+    /// Seed of the initial board (kept so `reset` replays it exactly).
+    pub seed: u64,
+    pub steps_done: u64,
+}
+
+impl Session {
+    /// The wire form of a session id (16 hex digits).
+    pub fn id_str(&self) -> String {
+        fmt_id(self.id)
+    }
+}
+
+pub fn fmt_id(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+pub fn parse_id(text: &str) -> Option<u64> {
+    (text.len() == 16).then(|| u64::from_str_radix(text, 16).ok())?
+}
+
+/// All live sessions, with admission control and deterministic ids.
+///
+/// While the coalescer runs a batched launch, the launched sessions are
+/// *detached* ([`take_for_step`](Self::take_for_step)) and marked busy,
+/// so the registry lock is NOT held across kernel execution — other
+/// endpoints keep working, and accesses to a busy session fail fast
+/// with a retryable "busy" error instead of blocking.
+#[derive(Debug)]
+pub struct SessionRegistry {
+    seed: u64,
+    counter: u64,
+    max_sessions: usize,
+    sessions: BTreeMap<u64, Session>,
+    /// Sessions currently detached into a batched launch.
+    busy: BTreeSet<u64>,
+}
+
+impl SessionRegistry {
+    pub fn new(seed: u64, max_sessions: usize) -> SessionRegistry {
+        SessionRegistry {
+            seed,
+            counter: 0,
+            max_sessions: max_sessions.max(1),
+            sessions: BTreeMap::new(),
+            busy: BTreeSet::new(),
+        }
+    }
+
+    /// Live sessions, including ones detached into a running launch.
+    pub fn len(&self) -> usize {
+        self.sessions.len() + self.busy.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn max_sessions(&self) -> usize {
+        self.max_sessions
+    }
+
+    /// Admit a new session, or refuse when the registry is full. The id
+    /// and (absent an explicit `seed`) the initial board derive from
+    /// `(service seed, creation counter)` only.
+    pub fn create(&mut self, backend: &NativeBackend, spec: ProgramSpec,
+                  seed: Option<u64>) -> Result<u64> {
+        if self.sessions.len() >= self.max_sessions {
+            bail!(
+                "session limit reached ({} live); destroy a session first",
+                self.max_sessions
+            );
+        }
+        let counter = self.counter;
+        self.counter += 1;
+        let mut id_rng = Rng::new(self.seed).fold_in(counter);
+        let mut id = id_rng.next_u64();
+        while id == 0
+            || self.sessions.contains_key(&id)
+            || self.busy.contains(&id)
+        {
+            id = id_rng.next_u64();
+        }
+        let session_seed = seed.unwrap_or_else(|| {
+            let mut r = Rng::new(self.seed).fold_in(counter ^ 0x5E55);
+            r.next_u64()
+        });
+        let prog = spec.program()?;
+        let board = spec.initial_board(session_seed)?;
+        let resident = backend.admit(&prog, &board)?;
+        self.sessions.insert(
+            id,
+            Session {
+                id,
+                spec,
+                prog,
+                resident,
+                seed: session_seed,
+                steps_done: 0,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Whether a session is detached into a running launch.
+    pub fn is_busy(&self, id: u64) -> bool {
+        self.busy.contains(&id)
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
+    pub fn ids(&self) -> Vec<u64> {
+        self.sessions.keys().copied().collect()
+    }
+
+    /// Error for accesses that must wait until the current launch
+    /// restores the session.
+    fn check_not_busy(&self, id: u64) -> Result<()> {
+        if self.is_busy(id) {
+            bail!("session {} is busy (stepping); retry", fmt_id(id));
+        }
+        Ok(())
+    }
+
+    /// Materialize a session's board as a host tensor.
+    pub fn read_board(&self, backend: &NativeBackend, id: u64)
+                      -> Result<Tensor> {
+        self.check_not_busy(id)?;
+        let s = self
+            .sessions
+            .get(&id)
+            .with_context(|| format!("no session {}", fmt_id(id)))?;
+        backend.read_resident(&s.prog, &s.resident)
+    }
+
+    /// Rewind a session to its (seed-deterministic) initial board.
+    pub fn reset(&mut self, backend: &NativeBackend, id: u64) -> Result<()> {
+        self.check_not_busy(id)?;
+        let s = self
+            .sessions
+            .get_mut(&id)
+            .with_context(|| format!("no session {}", fmt_id(id)))?;
+        let board = s.spec.initial_board(s.seed)?;
+        s.resident = backend.admit(&s.prog, &board)?;
+        s.steps_done = 0;
+        Ok(())
+    }
+
+    pub fn destroy(&mut self, id: u64) -> Result<()> {
+        self.check_not_busy(id)?;
+        self.sessions
+            .remove(&id)
+            .map(|_| ())
+            .with_context(|| format!("no session {}", fmt_id(id)))
+    }
+
+    /// Detach a session for a batched step: it leaves the map and is
+    /// marked busy, so the coalescer can drop the registry lock while
+    /// the launch runs. [`restore`](Self::restore) brings it back.
+    pub fn take_for_step(&mut self, id: u64) -> Option<Session> {
+        let session = self.sessions.remove(&id)?;
+        self.busy.insert(id);
+        Some(session)
+    }
+
+    pub fn restore(&mut self, session: Session) {
+        self.busy.remove(&session.id);
+        self.sessions.insert(session.id, session);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_keys() {
+        let spec = ProgramSpec::from_json(
+            &Json::parse(r#"{"program": "life", "size": 32}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec, ProgramSpec::Life { height: 32, width: 32 });
+        assert_eq!(spec.class_key(), "life:32x32");
+        assert_eq!(spec.board_shape(), vec![32, 32]);
+
+        let eca = ProgramSpec::from_json(
+            &Json::parse(r#"{"program": "eca", "rule": 110, "width": 70}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(eca, ProgramSpec::Eca { rule: 110, width: 70 });
+        assert_eq!(eca.board_shape(), vec![70]);
+
+        assert!(ProgramSpec::from_json(
+            &Json::parse(r#"{"program": "warp"}"#).unwrap()
+        )
+        .is_err());
+        assert!(ProgramSpec::from_json(
+            &Json::parse(r#"{"program": "eca", "rule": 300}"#).unwrap()
+        )
+        .is_err());
+        assert!(ProgramSpec::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn create_geometry_is_bounded() {
+        let parse = |text: &str| {
+            ProgramSpec::from_json(&Json::parse(text).unwrap())
+        };
+        // Per-axis cap.
+        let err = parse(r#"{"program": "eca", "width": 1000000}"#)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"));
+        // Total-cell cap (each axis individually legal).
+        let err = parse(r#"{"program": "life", "size": 3000}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("cells"));
+        // Kernel-count cap.
+        let err = parse(r#"{"program": "lenia-multi", "kernels": 100}"#)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("kernels"));
+        // The biggest legal Life board still parses.
+        assert!(parse(r#"{"program": "life", "size": 2048}"#).is_ok());
+    }
+
+    #[test]
+    fn explicit_height_width_beat_size() {
+        let spec = ProgramSpec::from_json(
+            &Json::parse(
+                r#"{"program": "lenia", "size": 64, "height": 32,
+                    "width": 48, "radius": 5}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            spec,
+            ProgramSpec::Lenia { radius: 5, height: 32, width: 48 }
+        );
+        // Lenia status JSON surfaces the crossover-selected kernel.
+        let j = spec.to_json();
+        assert_eq!(j.get("kernel").and_then(Json::as_str),
+                   Some("sparse-tap"));
+    }
+
+    #[test]
+    fn registry_ids_are_seed_deterministic() {
+        let backend = NativeBackend::with_threads(1);
+        let spec = ProgramSpec::Life { height: 8, width: 8 };
+        let mut a = SessionRegistry::new(7, 16);
+        let mut b = SessionRegistry::new(7, 16);
+        for _ in 0..3 {
+            let ia = a.create(&backend, spec.clone(), None).unwrap();
+            let ib = b.create(&backend, spec.clone(), None).unwrap();
+            assert_eq!(ia, ib);
+            // Same seed stream => identical initial boards too.
+            assert!(a
+                .read_board(&backend, ia)
+                .unwrap()
+                .bit_eq(&b.read_board(&backend, ib).unwrap()));
+        }
+        let mut c = SessionRegistry::new(8, 16);
+        let ic = c.create(&backend, spec, None).unwrap();
+        assert_ne!(a.ids()[0], ic);
+    }
+
+    #[test]
+    fn registry_enforces_admission_and_destroy_frees() {
+        let backend = NativeBackend::with_threads(1);
+        let spec = ProgramSpec::Eca { rule: 30, width: 16 };
+        let mut reg = SessionRegistry::new(0, 2);
+        let a = reg.create(&backend, spec.clone(), None).unwrap();
+        let _b = reg.create(&backend, spec.clone(), None).unwrap();
+        let err = reg.create(&backend, spec.clone(), None).unwrap_err();
+        assert!(format!("{err:#}").contains("session limit"));
+        reg.destroy(a).unwrap();
+        assert!(reg.create(&backend, spec, None).is_ok());
+        assert!(reg.destroy(a).is_err(), "double destroy must fail");
+    }
+
+    #[test]
+    fn reset_replays_the_initial_board() {
+        let backend = NativeBackend::with_threads(1);
+        let mut reg = SessionRegistry::new(3, 4);
+        let id = reg
+            .create(&backend, ProgramSpec::Life { height: 12, width: 12 },
+                    Some(0xFEED))
+            .unwrap();
+        let initial = reg.read_board(&backend, id).unwrap();
+        // Step it a few times out-of-band, then reset. While detached
+        // the session is busy: reads/reset/destroy fail fast.
+        let mut s = reg.take_for_step(id).unwrap();
+        assert!(reg.is_busy(id));
+        assert!(reg.read_board(&backend, id).is_err());
+        assert!(reg.destroy(id).is_err());
+        let prog = s.prog.clone();
+        backend.step_resident(&prog, &mut [&mut s.resident], 5).unwrap();
+        reg.restore(s);
+        assert!(!reg.is_busy(id));
+        assert!(!reg.read_board(&backend, id).unwrap().bit_eq(&initial));
+        reg.reset(&backend, id).unwrap();
+        assert!(reg.read_board(&backend, id).unwrap().bit_eq(&initial));
+    }
+
+    #[test]
+    fn id_wire_format_roundtrips() {
+        assert_eq!(parse_id(&fmt_id(0xABCDEF)), Some(0xABCDEF));
+        assert_eq!(parse_id("zz"), None);
+        assert_eq!(parse_id(""), None);
+        assert_eq!(parse_id("0123456789abcdef"), Some(0x0123456789abcdef));
+        assert_eq!(parse_id("0123456789abcdef0"), None, "too long");
+    }
+}

@@ -40,20 +40,26 @@ impl Image {
         out
     }
 
-    /// Write binary P6.
-    pub fn write_ppm(&self, path: &Path) -> Result<()> {
+    /// Serialize as binary P6 bytes (HTTP snapshot responses and
+    /// [`write_ppm`](Self::write_ppm) share this encoder).
+    pub fn ppm_bytes(&self) -> Result<Vec<u8>> {
         if self.width == 0 || self.height == 0 {
-            bail!("write_ppm: empty image");
+            bail!("ppm_bytes: empty image");
         }
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)
-                .with_context(|| format!("creating {}", dir.display()))?;
-        }
-        let mut buf =
-            Vec::with_capacity(32 + self.pixels.len() * 3);
+        let mut buf = Vec::with_capacity(32 + self.pixels.len() * 3);
         write!(buf, "P6\n{} {}\n255\n", self.width, self.height)?;
         for px in &self.pixels {
             buf.extend_from_slice(px);
+        }
+        Ok(buf)
+    }
+
+    /// Write binary P6.
+    pub fn write_ppm(&self, path: &Path) -> Result<()> {
+        let buf = self.ppm_bytes()?;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
         }
         std::fs::write(path, buf)
             .with_context(|| format!("writing {}", path.display()))?;
@@ -131,5 +137,16 @@ mod tests {
     fn empty_image_rejected() {
         let img = Image::new(0, 0);
         assert!(img.write_ppm(Path::new("/tmp/should_not_exist.ppm")).is_err());
+        assert!(img.ppm_bytes().is_err());
+    }
+
+    #[test]
+    fn ppm_bytes_match_file_output() {
+        let mut img = Image::new(2, 2);
+        img.set(1, 1, [9, 8, 7]);
+        let bytes = img.ppm_bytes().unwrap();
+        assert!(bytes.starts_with(b"P6\n2 2\n255\n"));
+        assert_eq!(bytes.len(), "P6\n2 2\n255\n".len() + 12);
+        assert_eq!(&bytes[bytes.len() - 3..], &[9, 8, 7]);
     }
 }
