@@ -28,6 +28,16 @@ pub fn quick() -> bool {
         || std::env::args().any(|a| a == "--quick")
 }
 
+/// Soft mode (CAX_BENCH_SOFT=1 or `--soft`) downgrades performance
+/// acceptance asserts to warnings — for noisy shared CI runners where
+/// the numbers are still worth recording but not worth failing on.
+/// Correctness asserts (counters, histogram shapes) stay hard.
+#[allow(dead_code)]
+pub fn soft() -> bool {
+    std::env::var("CAX_BENCH_SOFT").is_ok()
+        || std::env::args().any(|a| a == "--soft")
+}
+
 /// Time `f` with warmup; returns wall-clock stats over `iters` runs.
 #[allow(dead_code)]
 pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
@@ -55,14 +65,15 @@ pub fn push(rows: &mut Vec<cax::metrics::BenchRow>, label: &str,
     });
 }
 
-/// Print one result row: name, median, mean, p95, throughput (the
+/// Print one result row: name, median, mean, p95, p99, throughput (the
 /// rate math lives in `cax::metrics::per_second`, shared with the sim
 /// and serve surfaces).
 #[allow(dead_code)]
 pub fn row(name: &str, stats: &Stats, items: f64) {
     println!(
-        "{:<40} median {:>10.4}s  mean {:>10.4}s  p95 {:>10.4}s  {:>12.3e}/s",
-        name, stats.median, stats.mean, stats.p95,
+        "{:<40} median {:>10.4}s  mean {:>10.4}s  p95 {:>10.4}s  \
+         p99 {:>10.4}s  {:>12.3e}/s",
+        name, stats.median, stats.mean, stats.p95, stats.p99,
         cax::metrics::per_second(items, stats.median)
     );
 }

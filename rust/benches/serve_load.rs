@@ -8,10 +8,20 @@
 //! bench drives the real [`Coalescer`] (queue, grouping, scatter — no
 //! HTTP) against that solo baseline and emits `BENCH_serve.json`.
 //!
-//! Run: cargo bench --bench serve_load [-- --quick]
+//! Two non-throughput scenarios ride along:
+//!
+//! - **obs overhead**: the same Life rollout with `cax::obs` span
+//!   recording off vs on — the observability contract says
+//!   instrumentation costs < 2% (soft-able via `--soft`).
+//! - **overload**: a tiny coalescer (max_pending 16) is driven past its
+//!   queue bound; the 503 counter, queue-depth high-water mark and
+//!   wait-latency histogram must all report the abuse exactly.
+//!
+//! Run: cargo bench --bench serve_load [-- --quick] [-- --soft]
 //! Acceptance anchor: >= 5x aggregate session-steps/sec for 64
 //! coalesced Life 256x256 sessions vs the same sessions stepped solo.
 
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::time::Duration;
 
@@ -19,19 +29,20 @@ use cax::automata::lenia::LeniaParams;
 use cax::automata::WolframRule;
 use cax::backend::{Backend, CaProgram, NativeBackend};
 use cax::metrics::{write_bench_report, BenchRow};
+use cax::obs;
 use cax::serve::{Coalescer, ProgramSpec, ServeConfig, StepRequest};
 use cax::tensor::Tensor;
 use cax::util::rng::Rng;
 
 mod bench_util;
-use bench_util::{bench, header, push, quick};
+use bench_util::{bench, header, push, quick, soft};
 
 /// Submit one step request per session, tick until all are served, and
 /// drain the replies — one coalesced "frame" of the service.
 fn coalesced_round(c: &Coalescer, ids: &[u64], steps: usize) {
     let (tx, rx) = channel();
     for &id in ids {
-        c.submit(StepRequest { session: id, steps, reply: tx.clone() })
+        c.submit(StepRequest::new(id, steps, tx.clone()))
             .expect("submit");
     }
     drop(tx);
@@ -80,6 +91,58 @@ fn main() {
         coalescer.backend().threads(),
         cfg.max_batch
     );
+
+    // ---------------------------------------- obs span overhead row
+    // The observability contract (rust/src/obs) promises that span
+    // recording perturbs kernel timing by < 2%. Measure the same Life
+    // rollout with recording globally off, then on (the default).
+    {
+        let (h, w, calls) = (256, 256, 32);
+        header(&format!(
+            "obs — span overhead on Life {h}x{w}, {calls} rollouts/iter \
+             (recording off vs on)"
+        ));
+        let prog = CaProgram::Life;
+        let mut board =
+            Tensor::new(vec![1, h, w], rng.binary_vec(h * w, 0.5)).unwrap();
+
+        obs::set_recording(false);
+        let off = bench(warm, iters, || {
+            for _ in 0..calls {
+                board = backend.rollout(&prog, &board, 1).unwrap();
+            }
+        });
+        obs::set_recording(true);
+        let on = bench(warm, iters, || {
+            for _ in 0..calls {
+                board = backend.rollout(&prog, &board, 1).unwrap();
+            }
+        });
+
+        push(&mut rows, "obs/life-256x256/recording-off", &off,
+             calls as f64);
+        push(&mut rows, "obs/life-256x256/recording-on", &on,
+             calls as f64);
+        let overhead = on.median / off.median - 1.0;
+        println!(
+            "  span overhead: {:.3}% of kernel time (target: < 2%)",
+            overhead * 100.0
+        );
+        if soft() {
+            if overhead >= 0.02 {
+                println!(
+                    "  WARN (soft mode): overhead {:.3}% >= 2%",
+                    overhead * 100.0
+                );
+            }
+        } else {
+            assert!(
+                overhead < 0.02,
+                "obs span overhead must stay < 2% (got {:.3}%)",
+                overhead * 100.0
+            );
+        }
+    }
 
     // ------------------------------------------------- Life (anchor)
     let speedup = {
@@ -214,14 +277,111 @@ fn main() {
         println!("  speedup: {:.1}x", solo.median / coalesced.median);
     }
 
+    // --------------------------------------------- overload scenario
+    // Drive a deliberately tiny queue past max_pending and check the
+    // backpressure accounting end to end: the 503 counter, the
+    // queue-depth high-water mark and the request-wait histogram must
+    // all agree with what we actually submitted. These asserts are
+    // correctness, not performance — they stay hard even under --soft.
+    {
+        header("serve — overload: 32 submissions into max_pending=16");
+        let small = ServeConfig {
+            max_sessions: 16,
+            max_batch: 4,
+            max_pending: 16,
+            tick_window: Duration::ZERO,
+            seed: 7,
+            ..ServeConfig::default()
+        };
+        let c = Coalescer::new(&small);
+        let spec = ProgramSpec::Eca { rule: 110, width: 256 };
+        let ids = sessions(&c, &spec, 8);
+
+        let (tx, rx) = channel();
+        let (mut accepted, mut rejected) = (0usize, 0usize);
+        for _round in 0..4 {
+            for &id in &ids {
+                match c.submit(StepRequest::new(id, 1, tx.clone())) {
+                    Ok(()) => accepted += 1,
+                    Err(_) => rejected += 1,
+                }
+            }
+        }
+        drop(tx);
+        assert_eq!(accepted, 16, "max_pending=16 admits exactly 16");
+        assert_eq!(rejected, 16, "the other 16 submissions bounce");
+
+        let mut served = 0;
+        let mut ticks = 0;
+        while served < accepted {
+            served += c.tick();
+            ticks += 1;
+            assert!(ticks <= 64, "overload drain did not converge");
+        }
+        for _ in 0..accepted {
+            rx.recv().expect("reply").expect("step ok");
+        }
+
+        let stats = c.stats();
+        assert_eq!(
+            stats.rejected.load(Ordering::Relaxed),
+            rejected as u64,
+            "503 counter must match the bounced submissions"
+        );
+        assert_eq!(
+            stats.queue_depth().high_water(),
+            16,
+            "queue-depth high-water mark must reach max_pending"
+        );
+        assert_eq!(stats.queue_depth().get(), 0, "queue drains to empty");
+        let wait = stats.wait().snapshot();
+        assert_eq!(
+            wait.count, accepted as u64,
+            "every accepted request records a wait sample"
+        );
+        assert!(
+            wait.quantile(0.99) >= wait.quantile(0.50),
+            "wait percentiles must be monotone"
+        );
+        assert!(
+            stats.deferred.load(Ordering::Relaxed) > 0,
+            "re-stepping the same sessions must defer some requests"
+        );
+        let batch = stats.batch_size().snapshot();
+        assert!(
+            batch.max <= 4,
+            "no batch may exceed max_batch=4 (got {})",
+            batch.max
+        );
+        println!(
+            "  overload OK: {accepted} served over {ticks} ticks, \
+             {rejected} rejected, wait p50 {:.1}us p99 {:.1}us, \
+             high-water {}",
+            wait.quantile(0.50) / 1e3,
+            wait.quantile(0.99) / 1e3,
+            stats.queue_depth().high_water()
+        );
+    }
+
     let out = std::path::Path::new("BENCH_serve.json");
     write_bench_report("serve_load", &rows, out).unwrap();
     println!("\nwrote {}", out.display());
 
-    assert!(
-        speedup >= 5.0,
-        "acceptance anchor: coalesced Life sessions must be >= 5x solo \
-         (got {speedup:.2}x)"
-    );
-    println!("acceptance anchor OK: {speedup:.1}x >= 5x");
+    if soft() {
+        if speedup < 5.0 {
+            println!(
+                "WARN (soft mode): speedup {speedup:.2}x below the 5x \
+                 acceptance anchor"
+            );
+        } else {
+            println!("acceptance anchor OK: {speedup:.1}x >= 5x");
+        }
+    } else {
+        assert!(
+            speedup >= 5.0,
+            "acceptance anchor: coalesced Life sessions must be >= 5x solo \
+             (got {speedup:.2}x)"
+        );
+        println!("acceptance anchor OK: {speedup:.1}x >= 5x");
+    }
 }

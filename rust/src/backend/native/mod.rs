@@ -38,6 +38,7 @@ use crate::backend::{
     validate_board, validate_state, Backend, CaProgram, ProgramBackend,
     Resident, Value,
 };
+use crate::obs;
 use crate::tensor::Tensor;
 
 /// Wrapped (periodic-boundary) index `(i + plus - minus) mod n` without
@@ -102,6 +103,7 @@ impl NativeBackend {
 
     fn eca_rollout(&self, rule: &crate::automata::WolframRule,
                    state: &Tensor, steps: usize) -> Result<Tensor> {
+        let _span = obs::span("kernel_eca");
         let (b, w) = (state.shape()[0], state.shape()[1]);
         let nw = bits::words_for(w);
         let mut packed = vec![0u64; b * nw];
@@ -121,6 +123,7 @@ impl NativeBackend {
     }
 
     fn life_rollout(&self, state: &Tensor, steps: usize) -> Result<Tensor> {
+        let _span = obs::span("kernel_life");
         let (b, h, w) =
             (state.shape()[0], state.shape()[1], state.shape()[2]);
         let wpr = bits::words_for(w);
@@ -153,6 +156,7 @@ impl NativeBackend {
         let mut data = state.data().to_vec();
         match lenia::select_path(params.radius, h, w) {
             lenia::LeniaPath::SparseTap => {
+                let _span = obs::span("kernel_lenia_sparse");
                 let kernel = lenia::LeniaKernel::new(params);
                 self.pool.for_each_chunk(&mut data, h * w, |_, board| {
                     let mut scratch = vec![0.0f32; h * w];
@@ -160,6 +164,7 @@ impl NativeBackend {
                 });
             }
             lenia::LeniaPath::Fft => {
+                let _span = obs::span("kernel_lenia_fft");
                 let plan = lenia::LeniaFft::new(params, h, w)?;
                 self.pool.for_each_chunk(&mut data, h * w, |_, board| {
                     plan.rollout(board, steps);
@@ -174,6 +179,7 @@ impl NativeBackend {
     /// large/many kernels).
     fn lenia_world_rollout(&self, world: &crate::automata::lenia::LeniaWorld,
                            state: &Tensor, steps: usize) -> Result<Tensor> {
+        let _span = obs::span("kernel_lenia_world");
         let shape = state.shape().to_vec();
         let (c, h, w) = (shape[1], shape[2], shape[3]);
         let plan = lenia::LeniaFft::for_world(world.clone(), h, w)?;
@@ -226,6 +232,7 @@ impl NativeBackend {
 
     fn nca_rollout(&self, model: &nca::NcaModel, state: &Tensor,
                    steps: usize) -> Result<Tensor> {
+        let _span = obs::span("kernel_nca");
         let shape = state.shape();
         let (b, h, w, c) = (shape[0], shape[1], shape[2], shape[3]);
         let mut data = state.data().to_vec();
@@ -358,6 +365,7 @@ impl Backend for NativeBackend {
         }
         match prog {
             CaProgram::Eca { rule } => {
+                let _span = obs::span("kernel_eca");
                 let w = shape[0];
                 let mut rows = self.resident_bits(prog, batch)?;
                 self.pool.for_each_chunk(&mut rows, 1, |_, item| {
@@ -366,6 +374,7 @@ impl Backend for NativeBackend {
                 });
             }
             CaProgram::Life => {
+                let _span = obs::span("kernel_life");
                 let (h, w) = (shape[0], shape[1]);
                 let mut grids = self.resident_bits(prog, batch)?;
                 self.pool.for_each_chunk(&mut grids, 1, |_, item| {
@@ -378,6 +387,7 @@ impl Backend for NativeBackend {
                 let mut boards = self.resident_boards(prog, batch)?;
                 match lenia::select_path(params.radius, h, w) {
                     lenia::LeniaPath::SparseTap => {
+                        let _span = obs::span("kernel_lenia_sparse");
                         let kernel = lenia::LeniaKernel::new(*params);
                         self.pool.for_each_chunk(&mut boards, 1,
                                                  |_, item| {
@@ -387,6 +397,7 @@ impl Backend for NativeBackend {
                         });
                     }
                     lenia::LeniaPath::Fft => {
+                        let _span = obs::span("kernel_lenia_fft");
                         let plan = lenia::LeniaFft::new(*params, h, w)?;
                         self.pool.for_each_chunk(&mut boards, 1,
                                                  |_, item| {
@@ -396,6 +407,7 @@ impl Backend for NativeBackend {
                 }
             }
             CaProgram::LeniaMulti(world) => {
+                let _span = obs::span("kernel_lenia_world");
                 let (h, w) = (shape[1], shape[2]);
                 let plan = lenia::LeniaFft::for_world(world.clone(), h, w)?;
                 let mut boards = self.resident_boards(prog, batch)?;
@@ -404,6 +416,7 @@ impl Backend for NativeBackend {
                 });
             }
             CaProgram::Nca(model) => {
+                let _span = obs::span("kernel_nca");
                 let (h, w, c) = (shape[0], shape[1], shape[2]);
                 let mut boards = self.resident_boards(prog, batch)?;
                 self.pool.for_each_chunk(&mut boards, 1, |_, item| {

@@ -761,6 +761,15 @@ impl ProgramBackend for NativeTrainBackend {
     }
 
     fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        let _span = crate::obs::span(match name {
+            "growing_seed" => "train_growing_seed",
+            "growing_train_step" => "train_growing_step",
+            "mnist_train_step" => "train_mnist_step",
+            "arc_train_step" => "train_arc_step",
+            "arc_eval" => "train_arc_eval",
+            "arc_traj" => "train_arc_traj",
+            _ => "train_unknown",
+        });
         match name {
             "growing_seed" => Ok(vec![self.growing_seed_state()]),
             "growing_train_step" => self.growing_train_step(inputs),

@@ -151,8 +151,8 @@ where
             && (local % cfg.log_every == 0 || local + 1 == cfg.steps)
         {
             let ema = history.ema(0.1);
-            println!(
-                "  [{artifact}] step {:>5}  loss {loss:.6}  (ema {:.6})",
+            crate::log_info!(
+                "[{artifact}] step {:>5}  loss {loss:.6}  (ema {:.6})",
                 state.step,
                 ema.last().copied().unwrap_or(loss),
             );

@@ -35,6 +35,11 @@
 //! bitwise identical to stepping each session alone, measured >= 5x
 //! faster in aggregate by `benches/serve_load.rs`.
 //!
+//! Everything reports through [`obs`]: lock-free latency histograms,
+//! RAII kernel spans, Prometheus `/metrics` exposition and
+//! Chrome/Perfetto `--trace` capture — observation that never
+//! perturbs a trajectory (see the [`obs`] contract).
+//!
 //! Entry points: the `cax` CLI (`sim`, `train`, `eval`, `serve`), the
 //! `examples/` directory (`native_rollout`, `native_train`, `arc_1d`,
 //! `quickstart`, `train_growing_nca`), and the
@@ -54,6 +59,7 @@ pub mod config;
 pub mod coordinator;
 pub mod datasets;
 pub mod metrics;
+pub mod obs;
 pub mod pool;
 pub mod runtime;
 pub mod serve;

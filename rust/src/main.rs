@@ -14,7 +14,12 @@
 //!                                a coalescing scheduler (HTTP/1.1)
 //!
 //! Global flags: --artifacts DIR  --out DIR  --seed N  --config FILE
-//!               --backend native|pjrt
+//!               --backend native|pjrt  --trace FILE
+//!
+//! `--trace FILE` captures kernel spans, scheduler ticks and batch
+//! packing as Chrome/Perfetto trace-event JSON (open the file at
+//! <https://ui.perfetto.dev>). `CAX_LOG=error|warn|info|debug` filters
+//! the stderr logger.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -46,7 +51,12 @@ fn usage() -> &'static str {
 
 USAGE:
     cax [--artifacts DIR] [--out DIR] [--seed N] [--config FILE]
-        [--backend native|pjrt] <COMMAND>
+        [--backend native|pjrt] [--trace FILE] <COMMAND>
+
+    --trace FILE writes a Chrome/Perfetto trace (kernel spans,
+    scheduler ticks, batch packing) — open it at ui.perfetto.dev.
+    CAX_LOG=error|warn|info|debug filters the stderr logger (default
+    info).
 
 COMMANDS:
     list                      Table-1 registry and artifact status
@@ -87,12 +97,16 @@ native backend (incl. `train growing|mnist|arc`, `eval arc` and
 struct Cli {
     cfg: Config,
     args: Vec<String>,
+    /// `--trace FILE`: arm a Perfetto trace capture for the whole
+    /// command and write it here on exit.
+    trace: Option<PathBuf>,
 }
 
 impl Cli {
     fn parse() -> Result<Cli> {
         let mut cfg = Config::default();
         let mut args = vec![];
+        let mut trace = None;
         let mut it = std::env::args().skip(1);
         while let Some(a) = it.next() {
             match a.as_str() {
@@ -106,10 +120,13 @@ impl Cli {
                     let path = PathBuf::from(next(&mut it, "--config")?);
                     cfg = Config::from_file(&path)?;
                 }
+                "--trace" => {
+                    trace = Some(PathBuf::from(next(&mut it, "--trace")?))
+                }
                 _ => args.push(a),
             }
         }
-        Ok(Cli { cfg, args })
+        Ok(Cli { cfg, args, trace })
     }
 
     /// Value of `--flag` within the subcommand args, if present.
@@ -155,7 +172,10 @@ fn run() -> Result<()> {
         println!("{}", usage());
         return Ok(());
     };
-    match cmd {
+    if cli.trace.is_some() {
+        cax::obs::trace::start();
+    }
+    let result = match cmd {
         "list" => cmd_list(&cli),
         "info" => cmd_info(&cli),
         "backends" => cmd_backends(&cli),
@@ -169,7 +189,17 @@ fn run() -> Result<()> {
             Ok(())
         }
         other => bail!("unknown command {other:?}\n\n{}", usage()),
+    };
+    if let Some(path) = &cli.trace {
+        match cax::obs::trace::write(path) {
+            Ok(n) => println!(
+                "wrote {n} trace events to {} (open at ui.perfetto.dev)",
+                path.display()
+            ),
+            Err(e) => cax::log_warn!("trace: {e:#}"),
+        }
     }
+    result
 }
 
 fn load_manifest(cli: &Cli) -> Result<Manifest> {

@@ -156,6 +156,7 @@ impl BenchRow {
             ("mean_s", Json::Num(self.stats.mean)),
             ("median_s", Json::Num(self.stats.median)),
             ("p95_s", Json::Num(self.stats.p95)),
+            ("p99_s", Json::Num(self.stats.p99)),
             ("n", Json::from(self.stats.n)),
             ("items_per_iter", Json::Num(self.items_per_iter)),
             ("throughput_per_s", Json::Num(self.throughput())),
@@ -163,14 +164,52 @@ impl BenchRow {
     }
 }
 
-/// Write a named set of bench rows as a JSON report.
+/// `git describe --always --dirty --tags` of the working tree, if git
+/// and a repository are reachable — stamps bench reports with the code
+/// revision they measured.
+pub fn git_describe() -> Option<String> {
+    let out = std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty", "--tags"])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let text = String::from_utf8_lossy(&out.stdout).trim().to_string();
+    if text.is_empty() {
+        None
+    } else {
+        Some(text)
+    }
+}
+
+/// Write a named set of bench rows as a JSON report, stamped with
+/// schema metadata (`schema.version`, the bench name, the
+/// git-describe string when available and the host thread count) so
+/// `BENCH_*.json` files are comparable across revisions.
 pub fn write_bench_report(name: &str, rows: &[BenchRow], path: &Path)
                           -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let schema = obj(vec![
+        ("version", Json::from(2usize)),
+        ("name", Json::from(name)),
+        (
+            "git",
+            match git_describe() {
+                Some(g) => Json::from(g.as_str()),
+                None => Json::Null,
+            },
+        ),
+        ("threads", Json::from(threads)),
+    ]);
     let json = obj(vec![
         ("bench", Json::from(name)),
+        ("schema", schema),
         ("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
     ]);
     std::fs::write(path, json.to_string_pretty())
@@ -246,6 +285,32 @@ mod tests {
         assert_eq!(json.get("label").unwrap().as_str(), Some("fused"));
         assert_eq!(json.get("throughput_per_s").unwrap().as_f64(),
                    Some(100.0));
+        assert_eq!(json.get("p99_s").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn bench_report_stamps_schema_metadata() {
+        let dir = std::env::temp_dir()
+            .join(format!("cax_benchreport_{}", std::process::id()));
+        let path = dir.join("BENCH_x.json");
+        let rows = vec![BenchRow {
+            label: "row".into(),
+            stats: Stats::from_samples(&[0.25]),
+            items_per_iter: 10.0,
+        }];
+        write_bench_report("unit_bench", &rows, &path).unwrap();
+        let json =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(json.get("bench").unwrap().as_str(), Some("unit_bench"));
+        let schema = json.get("schema").unwrap();
+        assert_eq!(schema.get("version").unwrap().as_usize(), Some(2));
+        assert_eq!(schema.get("name").unwrap().as_str(), Some("unit_bench"));
+        assert!(schema.get("threads").unwrap().as_usize().unwrap() >= 1);
+        // git may be absent in a bare environment; the key must exist.
+        assert!(schema.get("git").is_some());
+        let row0 = &json.get("rows").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row0.get("p99_s").unwrap().as_f64(), Some(0.25));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,465 @@
+//! Lock-free log-bucketed histograms, counters and gauges, in a named
+//! [`Registry`].
+//!
+//! The histogram is HDR-style: values (u64, by convention nanoseconds
+//! for `*_seconds`-named metrics) land in log-linear buckets — 32
+//! sub-buckets per power of two — so recording is two atomic adds and
+//! the worst-case relative quantile error is bounded by half a
+//! sub-bucket width (< 1.6%). Buckets are `AtomicU64`s: many threads
+//! record concurrently with no locks, and histograms merge bucket-wise
+//! (merge is associative and commutative; property-checked in
+//! `tests/obs_props.rs`).
+//!
+//! Quantile queries go through the same rank convention
+//! ([`percentile_rank`]) as [`crate::util::timer::percentile`], so a
+//! `Stats::p99` over raw samples and a `Histogram::quantile(0.99)`
+//! over the same data agree up to bucket resolution.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::timer::percentile_rank;
+
+/// Sub-bucket resolution: each power of two splits into `2^SUB_BITS`
+/// linear sub-buckets.
+pub const SUB_BITS: u32 = 5;
+const SUB: u64 = 1 << SUB_BITS;
+/// Total bucket count covering the full u64 range: `SUB` linear buckets
+/// for values below `SUB`, then 32 sub-buckets for each of the
+/// remaining octaves.
+pub const NUM_BUCKETS: usize = (64 - SUB_BITS as usize + 1) * SUB as usize;
+
+/// Bucket index of a value; monotone in `v` and total over u64.
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB {
+        v as usize
+    } else {
+        let exp = 63 - v.leading_zeros();
+        let sub = ((v >> (exp - SUB_BITS)) - SUB) as usize;
+        ((exp - SUB_BITS) as usize + 1) * SUB as usize + sub
+    }
+}
+
+/// Half-open value range `[lo, hi)` covered by a bucket index.
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    let sub = SUB as usize;
+    if idx < sub {
+        (idx as u64, idx as u64 + 1)
+    } else {
+        let exp = (idx / sub - 1) as u32 + SUB_BITS;
+        let off = (idx % sub) as u64;
+        let width = 1u64 << (exp - SUB_BITS);
+        let lo = (SUB + off) * width;
+        (lo, lo.saturating_add(width))
+    }
+}
+
+/// A mergeable, lock-free latency/value histogram.
+///
+/// `record` is wait-free (five relaxed atomic ops) and safe from any
+/// thread; reads take a [`snapshot`](Self::snapshot) and query that.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let mut buckets = Vec::with_capacity(NUM_BUCKETS);
+        for _ in 0..NUM_BUCKETS {
+            buckets.push(AtomicU64::new(0));
+        }
+        Histogram {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds (the `*_seconds` convention:
+    /// stored as ns, exposed as seconds).
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Add every recorded value of `other` into `self`, bucket-wise.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum
+            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min
+            .fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max
+            .fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// A consistent-enough copy for queries (individual bucket loads
+    /// are relaxed; concurrent recording may skew totals by in-flight
+    /// records, which is fine for monitoring reads).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Convenience: quantile straight off a fresh snapshot.
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.snapshot().quantile(q)
+    }
+}
+
+/// Plain-value copy of a [`Histogram`] for queries and exposition.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate (`q` in `[0, 1]`), using the shared
+    /// [`percentile_rank`] convention over bucket representatives.
+    /// Empty histograms report 0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let (lo, hi, frac) = percentile_rank(self.count as usize, q);
+        let a = self.value_at_rank(lo as u64);
+        if frac == 0.0 || lo == hi {
+            return a;
+        }
+        let b = self.value_at_rank(hi as u64);
+        a * (1.0 - frac) + b * frac
+    }
+
+    /// Representative value of the `rank`-th (0-based) recorded sample
+    /// in sorted order: the midpoint of its bucket, clamped to the
+    /// observed min/max so the tails stay exact.
+    fn value_at_rank(&self, rank: u64) -> f64 {
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                let (lo, hi) = bucket_bounds(i);
+                let rep = (lo as f64 + (hi - 1) as f64) / 2.0;
+                return rep.clamp(self.min as f64, self.max as f64);
+            }
+        }
+        self.max as f64
+    }
+
+    /// How many recorded values are certainly `<= bound` (counts whole
+    /// buckets whose upper edge fits — the Prometheus `_bucket{le}`
+    /// cumulative, approximated at bucket resolution).
+    pub fn cumulative_le(&self, bound: u64) -> u64 {
+        let mut total = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            let (lo, hi) = bucket_bounds(i);
+            if hi - 1 <= bound {
+                total += c;
+            } else if lo > bound {
+                break;
+            }
+        }
+        total
+    }
+}
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge that also tracks its high-water mark.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+    high_water: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+        self.high_water.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn high_water(&self) -> u64 {
+        self.high_water.load(Ordering::Relaxed)
+    }
+}
+
+/// One named metric handle.
+#[derive(Clone, Debug)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Plain-value copy of one metric for exposition.
+#[derive(Clone, Debug)]
+pub enum MetricSnapshot {
+    Counter(u64),
+    Gauge { value: u64, high_water: u64 },
+    Histogram(HistogramSnapshot),
+}
+
+/// A named get-or-create metric store. Instantiable (the serve layer
+/// gives each [`crate::serve::Coalescer`] its own, so parallel test
+/// servers never share counters) with one process-wide
+/// [`global`](Self::global) instance that kernel spans record into.
+///
+/// Names follow the Prometheus base-name convention:
+/// `[a-z0-9_]`, `_seconds` suffix for ns-recorded duration histograms,
+/// `_total` suffix for counters. The `cax_` prefix is added at
+/// exposition time, not here.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The process-wide registry (kernel spans, CLI-level metrics).
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+        // A metrics registry must keep serving reads even if some
+        // thread panicked while holding the map.
+        self.metrics
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.lock();
+        if let Some(Metric::Counter(c)) = m.get(name) {
+            return Arc::clone(c);
+        }
+        assert!(
+            !m.contains_key(name),
+            "obs: metric {name:?} already registered with another kind"
+        );
+        let c = Arc::new(Counter::default());
+        m.insert(name.to_string(), Metric::Counter(Arc::clone(&c)));
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.lock();
+        if let Some(Metric::Gauge(g)) = m.get(name) {
+            return Arc::clone(g);
+        }
+        assert!(
+            !m.contains_key(name),
+            "obs: metric {name:?} already registered with another kind"
+        );
+        let g = Arc::new(Gauge::default());
+        m.insert(name.to_string(), Metric::Gauge(Arc::clone(&g)));
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.lock();
+        if let Some(Metric::Histogram(h)) = m.get(name) {
+            return Arc::clone(h);
+        }
+        assert!(
+            !m.contains_key(name),
+            "obs: metric {name:?} already registered with another kind"
+        );
+        let h = Arc::new(Histogram::new());
+        m.insert(name.to_string(), Metric::Histogram(Arc::clone(&h)));
+        h
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Name-sorted plain-value copy of every metric.
+    pub fn snapshot(&self) -> Vec<(String, MetricSnapshot)> {
+        self.lock()
+            .iter()
+            .map(|(name, metric)| {
+                let snap = match metric {
+                    Metric::Counter(c) => MetricSnapshot::Counter(c.get()),
+                    Metric::Gauge(g) => MetricSnapshot::Gauge {
+                        value: g.get(),
+                        high_water: g.high_water(),
+                    },
+                    Metric::Histogram(h) => {
+                        MetricSnapshot::Histogram(h.snapshot())
+                    }
+                };
+                (name.clone(), snap)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_covers_u64_monotonically() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(31), 31);
+        assert_eq!(bucket_index(32), 32);
+        assert!(bucket_index(u64::MAX) < NUM_BUCKETS);
+        let mut prev = 0;
+        for v in [0u64, 1, 31, 32, 33, 63, 64, 100, 1 << 20, u64::MAX] {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "index must be monotone in the value");
+            prev = idx;
+            let (lo, hi) = bucket_bounds(idx);
+            // The top bucket's upper edge saturates at u64::MAX.
+            assert!(lo <= v && (v < hi || hi == u64::MAX),
+                    "value {v} outside bucket [{lo}, {hi})");
+        }
+    }
+
+    #[test]
+    fn buckets_are_contiguous() {
+        for idx in 0..NUM_BUCKETS - 1 {
+            let (_, hi) = bucket_bounds(idx);
+            let (lo_next, _) = bucket_bounds(idx + 1);
+            assert_eq!(hi, lo_next, "gap between buckets {idx} and next");
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 3, 31] {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 6);
+        assert_eq!(snap.sum, 40);
+        assert_eq!(snap.min, 0);
+        assert_eq!(snap.max, 31);
+        assert_eq!(snap.quantile(0.0), 0.0);
+        assert_eq!(snap.quantile(1.0), 31.0);
+        assert_eq!(snap.cumulative_le(3), 5);
+        assert_eq!(snap.cumulative_le(1000), 6);
+    }
+
+    #[test]
+    fn quantiles_track_large_values_within_bucket_error() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v * 1000);
+        }
+        let snap = h.snapshot();
+        let p50 = snap.quantile(0.5);
+        let p99 = snap.quantile(0.99);
+        assert!((p50 - 5_000_500.0).abs() / 5_000_500.0 < 0.02, "{p50}");
+        assert!((p99 - 9_900_010.0).abs() / 9_900_010.0 < 0.02, "{p99}");
+    }
+
+    #[test]
+    fn registry_get_or_create_returns_the_same_metric() {
+        let reg = Registry::new();
+        let a = reg.counter("x_total");
+        let b = reg.counter("x_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.len(), 1);
+        reg.gauge("depth").set(7);
+        reg.histogram("lat_seconds").record(5);
+        assert_eq!(reg.snapshot().len(), 3);
+    }
+}

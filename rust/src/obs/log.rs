@@ -1,0 +1,117 @@
+//! A tiny leveled stderr logger with a `CAX_LOG` env filter.
+//!
+//! `CAX_LOG=error|warn|info|debug` picks the maximum level printed
+//! (default `info`). Output goes to stderr as `[cax:LEVEL] message`,
+//! keeping stdout clean for machine-parsed command output (e.g. the
+//! `cax serve` listening line). Use the crate-level macros:
+//!
+//! ```
+//! cax::log_info!("drained {} sessions", 3);
+//! cax::log_debug!("this prints only under CAX_LOG=debug");
+//! ```
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity; smaller = more severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    pub fn parse(text: &str) -> Option<Level> {
+        match text.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+const UNSET: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn decode(v: u8) -> Level {
+    match v {
+        0 => Level::Error,
+        1 => Level::Warn,
+        3 => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+/// The active maximum level, lazily read from `CAX_LOG` on first use.
+pub fn level() -> Level {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNSET {
+        return decode(v);
+    }
+    let from_env = std::env::var("CAX_LOG")
+        .ok()
+        .and_then(|t| Level::parse(&t))
+        .unwrap_or(Level::Info);
+    LEVEL.store(from_env as u8, Ordering::Relaxed);
+    from_env
+}
+
+/// Override the level programmatically (tests, embedding callers).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// The macro backend; prefer `log_error!`..`log_debug!`.
+pub fn write(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[cax:{}] {args}", l.name());
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Error,
+                                format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Warn,
+                                format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Info,
+                                format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Debug,
+                                format_args!($($t)*))
+    };
+}

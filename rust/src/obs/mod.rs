@@ -1,0 +1,51 @@
+//! `cax::obs` — the std-only process-wide observability layer.
+//!
+//! The paper's core claim is *measured speed*; this module is the
+//! measurement substrate every surface reports through:
+//!
+//! - [`histogram`]: lock-free log-bucketed latency [`Histogram`]s
+//!   (atomic buckets, mergeable, p50/p95/p99 queries), [`Counter`]s
+//!   and high-water [`Gauge`]s in a named get-or-create [`Registry`].
+//! - [`span`](mod@span): scoped RAII [`Span`] timers with static
+//!   labels — one guard instruments a kernel launch; a no-op when
+//!   recording is off.
+//! - [`trace`]: Chrome/Perfetto trace-event capture (`--trace
+//!   out.json` on the CLI) of kernel spans, scheduler ticks and batch
+//!   packing.
+//! - [`prometheus`]: text exposition for the serve layer's
+//!   `GET /metrics`.
+//! - [`log`](mod@log): the `CAX_LOG`-filtered leveled stderr logger
+//!   behind `log_error!` .. `log_debug!`.
+//!
+//! # The contract
+//!
+//! Observation must never perturb what it observes. Concretely:
+//!
+//! 1. **Bit-identity** — spans and metrics only read clocks and bump
+//!    atomics; they never touch kernel data. The serve bit-identity
+//!    suite runs with recording enabled to hold this.
+//! 2. **Bounded overhead** — span labels are `&'static str` (no
+//!    allocation on open), recording-off spans skip the clock
+//!    entirely, and `benches/serve_load.rs` asserts the instrumented
+//!    Life 256x256 anchor stays within 2% of uninstrumented.
+//! 3. **Bounded memory** — the histogram is a fixed 1920-bucket
+//!    array; the trace buffer is capped and counts drops instead of
+//!    growing.
+//!
+//! Metric naming: lowercase `[a-z0-9_]`, `_seconds` suffix for
+//! duration histograms (recorded in ns, exposed in seconds),
+//! `_total` suffix for counters; the Prometheus `cax_` prefix is
+//! added at exposition time.
+
+pub mod histogram;
+pub mod log;
+pub mod prometheus;
+pub mod span;
+pub mod trace;
+
+pub use histogram::{
+    Counter, Gauge, Histogram, HistogramSnapshot, Metric, MetricSnapshot,
+    Registry,
+};
+pub use prometheus::PromWriter;
+pub use span::{recording, set_recording, span, Span};

@@ -1,0 +1,145 @@
+//! Prometheus text exposition (format 0.0.4) over [`Registry`]
+//! snapshots — the `GET /metrics` body of `cax serve`.
+//!
+//! Conventions: every exposed name gets the `cax_` prefix here;
+//! histograms whose base name ends in `_seconds` were recorded in
+//! nanoseconds and are exposed in seconds (buckets, sum); other
+//! histograms (batch sizes, queue depths) expose raw values on a
+//! power-of-two `le` ladder. Cumulative `_bucket{le}` counts are
+//! computed from the log-bucketed histogram at its own resolution, so
+//! they are monotone and end exactly at `_count` for `le="+Inf"`.
+
+use crate::obs::histogram::{HistogramSnapshot, MetricSnapshot, Registry};
+
+/// The `Content-Type` of the text exposition format.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+const PREFIX: &str = "cax_";
+
+/// `le` ladder (in ns) for `_seconds` histograms: 1µs .. 60s.
+const SECONDS_BOUNDS_NS: [u64; 12] = [
+    1_000,
+    10_000,
+    100_000,
+    500_000,
+    1_000_000,
+    5_000_000,
+    10_000_000,
+    50_000_000,
+    100_000_000,
+    1_000_000_000,
+    10_000_000_000,
+    60_000_000_000,
+];
+
+/// `le` ladder for raw-valued histograms (batch sizes, depths).
+const VALUE_BOUNDS: [u64; 12] =
+    [1, 2, 4, 8, 16, 32, 64, 128, 256, 1024, 4096, 16384];
+
+/// Incremental writer for one exposition body.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter::default()
+    }
+
+    pub fn counter(&mut self, name: &str, value: u64) {
+        self.out.push_str(&format!(
+            "# TYPE {PREFIX}{name} counter\n{PREFIX}{name} {value}\n"
+        ));
+    }
+
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.out.push_str(&format!(
+            "# TYPE {PREFIX}{name} gauge\n{PREFIX}{name} {value}\n"
+        ));
+    }
+
+    pub fn histogram(&mut self, name: &str, snap: &HistogramSnapshot) {
+        let seconds = name.ends_with("_seconds");
+        let bounds: &[u64] =
+            if seconds { &SECONDS_BOUNDS_NS } else { &VALUE_BOUNDS };
+        self.out
+            .push_str(&format!("# TYPE {PREFIX}{name} histogram\n"));
+        for &b in bounds {
+            let le = if seconds {
+                format!("{}", b as f64 * 1e-9)
+            } else {
+                format!("{b}")
+            };
+            self.out.push_str(&format!(
+                "{PREFIX}{name}_bucket{{le=\"{le}\"}} {}\n",
+                snap.cumulative_le(b)
+            ));
+        }
+        self.out.push_str(&format!(
+            "{PREFIX}{name}_bucket{{le=\"+Inf\"}} {}\n",
+            snap.count
+        ));
+        let sum =
+            if seconds { snap.sum as f64 * 1e-9 } else { snap.sum as f64 };
+        self.out
+            .push_str(&format!("{PREFIX}{name}_sum {sum}\n"));
+        self.out
+            .push_str(&format!("{PREFIX}{name}_count {}\n", snap.count));
+    }
+
+    /// Append every metric of a registry, in name order. Gauges also
+    /// expose their high-water mark as `{name}_high_water`.
+    pub fn registry(&mut self, reg: &Registry) {
+        for (name, metric) in reg.snapshot() {
+            match metric {
+                MetricSnapshot::Counter(v) => self.counter(&name, v),
+                MetricSnapshot::Gauge { value, high_water } => {
+                    self.gauge(&name, value as f64);
+                    self.gauge(&format!("{name}_high_water"),
+                               high_water as f64);
+                }
+                MetricSnapshot::Histogram(s) => self.histogram(&name, &s),
+            }
+        }
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn exposition_shape() {
+        let reg = Registry::new();
+        reg.counter("reqs_total").add(7);
+        reg.gauge("depth").set(3);
+        let h = reg.histogram("wait_seconds");
+        h.record_duration(Duration::from_micros(50));
+        h.record_duration(Duration::from_millis(20));
+        let mut w = PromWriter::new();
+        w.registry(&reg);
+        let text = w.finish();
+        assert!(text.contains("# TYPE cax_reqs_total counter\n"));
+        assert!(text.contains("cax_reqs_total 7\n"));
+        assert!(text.contains("cax_depth 3\n"));
+        assert!(text.contains("cax_depth_high_water 3\n"));
+        assert!(text.contains("# TYPE cax_wait_seconds histogram\n"));
+        assert!(text.contains("cax_wait_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("cax_wait_seconds_count 2\n"));
+        // 50µs fits under the 100µs bound; 20ms does not.
+        assert!(text.contains("cax_wait_seconds_bucket{le=\"0.0001\"} 1\n"));
+        // Bucket counts are monotone down the ladder.
+        let counts: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("cax_wait_seconds_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

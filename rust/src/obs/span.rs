@@ -1,0 +1,70 @@
+//! Scoped RAII span timers with a static-label discipline.
+//!
+//! Instrumenting a hot kernel is one guard:
+//!
+//! ```
+//! let _span = cax::obs::span("kernel_life");
+//! // ... the launch ...
+//! // drop records into the global `kernel_life_seconds` histogram
+//! // and, when a trace capture is active, emits a trace event.
+//! ```
+//!
+//! Labels are `&'static str` by type: span creation never allocates or
+//! formats, so the on-path cost is two relaxed atomic loads plus (when
+//! recording) two `Instant` reads and one histogram record. With
+//! recording off and no trace active a span is a no-op — no clock
+//! read at all. Spans only *time* work; they never touch the data a
+//! kernel computes, so instrumented trajectories stay bit-identical
+//! (asserted by the serve bit-identity suite, which runs with
+//! recording on).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use crate::obs::histogram::Registry;
+use crate::obs::trace;
+
+/// Recording defaults ON: a freshly started server reports metrics
+/// without opt-in. The overhead bench toggles it off to measure the
+/// no-op path.
+static RECORDING: AtomicBool = AtomicBool::new(true);
+
+/// Globally enable/disable span recording (trace capture is controlled
+/// separately by [`trace::start`]).
+pub fn set_recording(on: bool) {
+    RECORDING.store(on, Ordering::Relaxed);
+}
+
+pub fn recording() -> bool {
+    RECORDING.load(Ordering::Relaxed)
+}
+
+/// A live span; created by [`span`], records on drop.
+#[must_use = "a span times its scope — bind it: `let _span = obs::span(..)`"]
+pub struct Span {
+    label: &'static str,
+    start: Option<Instant>,
+}
+
+/// Open a span. `label` is the metric base name: drop records into the
+/// global registry's `{label}_seconds` histogram.
+pub fn span(label: &'static str) -> Span {
+    let armed = recording() || trace::active();
+    Span {
+        label,
+        start: if armed { Some(Instant::now()) } else { None },
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let dur = start.elapsed();
+        if recording() {
+            Registry::global()
+                .histogram(&format!("{}_seconds", self.label))
+                .record_duration(dur);
+        }
+        trace::record_complete(self.label, start, dur);
+    }
+}

@@ -1,0 +1,204 @@
+//! Chrome/Perfetto trace-event JSON capture.
+//!
+//! [`start`] arms a process-wide bounded capture buffer; every span
+//! that closes while it is armed ([`record_complete`], called from
+//! [`crate::obs::span`]'s drop) and every [`counter`] sample becomes
+//! one trace event. [`write`] serializes the capture as Trace Event
+//! Format JSON — open the file at <https://ui.perfetto.dev> or
+//! `chrome://tracing` to see per-launch kernel spans, scheduler ticks
+//! and batch packing on a shared timeline.
+//!
+//! Event names are the spans' static labels (plain identifiers, so the
+//! hand-rolled JSON writer needs no string escaping). Timestamps are
+//! microseconds relative to the capture start; thread lanes (`tid`)
+//! are small dense ids assigned in first-record order. The buffer is
+//! bounded ([`DEFAULT_CAPACITY`] events); once full, further events
+//! are counted as dropped rather than growing memory without limit.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// Default capture-buffer bound, in events (~100 bytes each on disk).
+pub const DEFAULT_CAPACITY: usize = 1 << 20;
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+#[derive(Clone, Debug)]
+struct Event {
+    name: &'static str,
+    /// `'X'` = complete span, `'C'` = counter sample.
+    ph: char,
+    ts_us: f64,
+    dur_us: f64,
+    tid: u64,
+    value: f64,
+}
+
+struct Capture {
+    t0: Instant,
+    events: Vec<Event>,
+    capacity: usize,
+    dropped: u64,
+}
+
+fn capture() -> &'static Mutex<Option<Capture>> {
+    static CAP: OnceLock<Mutex<Option<Capture>>> = OnceLock::new();
+    CAP.get_or_init(|| Mutex::new(None))
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Option<Capture>> {
+    capture()
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Small dense per-thread lane id (Perfetto's `tid`), assigned in
+/// first-record order.
+fn thread_lane() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static LANE: std::cell::Cell<u64> = std::cell::Cell::new(0);
+    }
+    LANE.with(|c| {
+        let mut v = c.get();
+        if v == 0 {
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+        }
+        v
+    })
+}
+
+/// Whether a capture is armed (checked by spans on the hot path).
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Arm a fresh capture with the default buffer bound. Any previous
+/// unwritten capture is discarded.
+pub fn start() {
+    start_with_capacity(DEFAULT_CAPACITY);
+}
+
+pub fn start_with_capacity(capacity: usize) {
+    let mut guard = lock();
+    *guard = Some(Capture {
+        t0: Instant::now(),
+        events: Vec::new(),
+        capacity: capacity.max(1),
+        dropped: 0,
+    });
+    ACTIVE.store(true, Ordering::Relaxed);
+}
+
+/// Disarm and drop the capture without writing; returns how many
+/// events it held.
+pub fn stop() -> usize {
+    ACTIVE.store(false, Ordering::Relaxed);
+    let mut guard = lock();
+    let n = guard.as_ref().map_or(0, |c| c.events.len());
+    *guard = None;
+    n
+}
+
+/// Record one completed span (`ph: "X"`). `name` must be a plain
+/// identifier-style label (no quotes or backslashes).
+pub fn record_complete(name: &'static str, start: Instant, dur: Duration) {
+    if !active() {
+        return;
+    }
+    let tid = thread_lane();
+    let mut guard = lock();
+    let Some(cap) = guard.as_mut() else { return };
+    if cap.events.len() >= cap.capacity {
+        cap.dropped += 1;
+        return;
+    }
+    let ts = start
+        .checked_duration_since(cap.t0)
+        .unwrap_or(Duration::ZERO);
+    cap.events.push(Event {
+        name,
+        ph: 'X',
+        ts_us: ts.as_secs_f64() * 1e6,
+        dur_us: dur.as_secs_f64() * 1e6,
+        tid,
+        value: 0.0,
+    });
+}
+
+/// Record one counter sample (`ph: "C"` — e.g. queue depth over time).
+pub fn counter(name: &'static str, value: f64) {
+    if !active() {
+        return;
+    }
+    let tid = thread_lane();
+    let now = Instant::now();
+    let mut guard = lock();
+    let Some(cap) = guard.as_mut() else { return };
+    if cap.events.len() >= cap.capacity {
+        cap.dropped += 1;
+        return;
+    }
+    let ts = now.checked_duration_since(cap.t0).unwrap_or(Duration::ZERO);
+    cap.events.push(Event {
+        name,
+        ph: 'C',
+        ts_us: ts.as_secs_f64() * 1e6,
+        dur_us: 0.0,
+        tid,
+        value,
+    });
+}
+
+/// Disarm the capture and write it as Trace Event Format JSON.
+/// Returns the number of events written. Errors if no capture was
+/// ever started.
+pub fn write(path: &Path) -> Result<usize> {
+    ACTIVE.store(false, Ordering::Relaxed);
+    let taken = lock().take();
+    let Some(cap) = taken else {
+        bail!("trace: no capture was started (call trace::start first)")
+    };
+    let mut out = String::with_capacity(cap.events.len() * 100 + 128);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, e) in cap.events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        match e.ph {
+            'C' => out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"cax\",\"ph\":\"C\",\
+                 \"pid\":1,\"tid\":{},\"ts\":{:.3},\
+                 \"args\":{{\"value\":{}}}}}",
+                e.name, e.tid, e.ts_us, e.value
+            )),
+            _ => out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"cax\",\"ph\":\"X\",\
+                 \"pid\":1,\"tid\":{},\"ts\":{:.3},\"dur\":{:.3}}}",
+                e.name, e.tid, e.ts_us, e.dur_us
+            )),
+        }
+    }
+    out.push_str("]}");
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, out)
+        .with_context(|| format!("writing trace {}", path.display()))?;
+    if cap.dropped > 0 {
+        crate::log_warn!(
+            "trace: buffer full — dropped {} events (capacity {})",
+            cap.dropped,
+            cap.capacity
+        );
+    }
+    Ok(cap.events.len())
+}

@@ -12,7 +12,8 @@
 //! | method + path | body | effect |
 //! |---|---|---|
 //! | `GET /healthz` | — | liveness + session/queue counts |
-//! | `GET /stats` | — | scheduler counters, steps/sec |
+//! | `GET /stats` | — | scheduler counters, latency percentiles, steps/sec |
+//! | `GET /metrics` | — | Prometheus text exposition (`cax_*`) |
 //! | `POST /sessions` | [`ProgramSpec`] JSON | create session (201) |
 //! | `GET /sessions/<id>` | — | status: program, shape, steps, mean |
 //! | `POST /sessions/<id>/step` | `{"steps": N}` (default 1) | coalesced step |
@@ -20,6 +21,11 @@
 //! | `DELETE /sessions/<id>` | — | destroy |
 //! | `GET /sessions/<id>/snapshot.ppm` | — | P6 image of the board |
 //! | `POST /shutdown` | — | graceful drain + exit |
+//!
+//! Every request is timed into a per-route latency histogram
+//! (`http_{route}_seconds` in the coalescer's metric registry, exposed
+//! by `/metrics`), and emits a trace span when `--trace` capture is
+//! armed.
 //!
 //! # Graceful shutdown
 //!
@@ -39,6 +45,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::metrics;
+use crate::obs::{self, prometheus, trace, HistogramSnapshot, PromWriter};
 use crate::serve::scheduler::{Coalescer, StepRequest};
 use crate::serve::session::{fmt_id, parse_id, ProgramSpec};
 use crate::serve::ServeConfig;
@@ -325,31 +332,63 @@ fn parse_body_json(body: &[u8]) -> Result<Json> {
     Json::parse(text).map_err(|e| anyhow!("body is not JSON: {e}"))
 }
 
+/// Dispatch plus per-route observation: every request lands in an
+/// `http_{route}_seconds` histogram (when recording is on) and a trace
+/// span (when capture is armed). Labels are static so the hot path
+/// allocates only the registry-lookup key.
 fn route(ctx: &Ctx, req: &Request) -> Response {
+    let start = Instant::now();
+    let (label, resp) = route_inner(ctx, req);
+    let dur = start.elapsed();
+    if obs::recording() {
+        ctx.coalescer
+            .stats()
+            .registry()
+            .histogram(&format!("{label}_seconds"))
+            .record_duration(dur);
+    }
+    trace::record_complete(label, start, dur);
+    resp
+}
+
+fn route_inner(ctx: &Ctx, req: &Request) -> (&'static str, Response) {
     let segments: Vec<&str> =
         req.path.split('/').filter(|s| !s.is_empty()).collect();
     match (req.method.as_str(), segments.as_slice()) {
-        ("GET", ["healthz"]) => handle_healthz(ctx),
-        ("GET", ["stats"]) => handle_stats(ctx),
+        ("GET", ["healthz"]) => ("http_healthz", handle_healthz(ctx)),
+        ("GET", ["stats"]) => ("http_stats", handle_stats(ctx)),
+        ("GET", ["metrics"]) => ("http_metrics", handle_metrics(ctx)),
         ("POST", ["shutdown"]) => {
             ctx.shutdown.store(true, Ordering::SeqCst);
-            Response::json(200, &obj(vec![("draining", Json::Bool(true))]))
+            let resp = Response::json(
+                200, &obj(vec![("draining", Json::Bool(true))]));
+            ("http_shutdown", resp)
         }
-        ("POST", ["sessions"]) => handle_create(ctx, &req.body),
+        ("POST", ["sessions"]) => {
+            ("http_create", handle_create(ctx, &req.body))
+        }
         (method, ["sessions", id, rest @ ..]) => {
             let Some(id) = parse_id(id) else {
-                return Response::error(404, &format!("bad session id {id:?}"));
+                let resp = Response::error(
+                    404, &format!("bad session id {id:?}"));
+                return ("http_other", resp);
             };
             match (method, rest) {
-                ("GET", []) => handle_status(ctx, id),
-                ("DELETE", []) => handle_destroy(ctx, id),
-                ("POST", ["step"]) => handle_step(ctx, id, &req.body),
-                ("POST", ["reset"]) => handle_reset(ctx, id),
-                ("GET", ["snapshot.ppm"]) => handle_snapshot(ctx, id),
-                _ => Response::error(404, "no such route"),
+                ("GET", []) => ("http_status", handle_status(ctx, id)),
+                ("DELETE", []) => {
+                    ("http_destroy", handle_destroy(ctx, id))
+                }
+                ("POST", ["step"]) => {
+                    ("http_step", handle_step(ctx, id, &req.body))
+                }
+                ("POST", ["reset"]) => ("http_reset", handle_reset(ctx, id)),
+                ("GET", ["snapshot.ppm"]) => {
+                    ("http_snapshot", handle_snapshot(ctx, id))
+                }
+                _ => ("http_other", Response::error(404, "no such route")),
             }
         }
-        _ => Response::error(404, "no such route"),
+        _ => ("http_other", Response::error(404, "no such route")),
     }
 }
 
@@ -365,6 +404,32 @@ fn handle_healthz(ctx: &Ctx) -> Response {
     )
 }
 
+/// ns-recorded latency histogram as a `{count, mean_ms, p50_ms,
+/// p95_ms, p99_ms, max_ms}` JSON object.
+fn hist_ms(snap: &HistogramSnapshot) -> Json {
+    let max_ms =
+        if snap.count == 0 { 0.0 } else { snap.max as f64 / 1e6 };
+    obj(vec![
+        ("count", Json::from(snap.count as usize)),
+        ("mean_ms", Json::Num(snap.mean() / 1e6)),
+        ("p50_ms", Json::Num(snap.quantile(0.5) / 1e6)),
+        ("p95_ms", Json::Num(snap.quantile(0.95) / 1e6)),
+        ("p99_ms", Json::Num(snap.quantile(0.99) / 1e6)),
+        ("max_ms", Json::Num(max_ms)),
+    ])
+}
+
+/// Raw-valued histogram (batch sizes, queue depths) as JSON.
+fn hist_raw(snap: &HistogramSnapshot) -> Json {
+    let max = if snap.count == 0 { 0 } else { snap.max as usize };
+    obj(vec![
+        ("count", Json::from(snap.count as usize)),
+        ("mean", Json::Num(snap.mean())),
+        ("p50", Json::Num(snap.quantile(0.5))),
+        ("max", Json::from(max)),
+    ])
+}
+
 fn handle_stats(ctx: &Ctx) -> Response {
     let stats = ctx.coalescer.stats();
     let load = |c: &std::sync::atomic::AtomicU64| {
@@ -372,6 +437,11 @@ fn handle_stats(ctx: &Ctx) -> Response {
     };
     let session_steps = load(&stats.session_steps);
     let secs = ctx.coalescer.uptime_secs();
+    let families: Vec<(&str, Json)> = stats
+        .family_requests()
+        .into_iter()
+        .map(|(f, n)| (f, Json::from(n as usize)))
+        .collect();
     let registry = ctx.coalescer.registry().lock().expect("registry");
     Response::json(
         200,
@@ -381,6 +451,7 @@ fn handle_stats(ctx: &Ctx) -> Response {
             ("pending", Json::from(ctx.coalescer.pending())),
             ("requests", Json::from(load(&stats.requests))),
             ("rejected", Json::from(load(&stats.rejected))),
+            ("deferred", Json::from(load(&stats.deferred))),
             ("ticks", Json::from(load(&stats.ticks))),
             ("batches", Json::from(load(&stats.batches))),
             ("session_steps", Json::from(session_steps)),
@@ -390,8 +461,61 @@ fn handle_stats(ctx: &Ctx) -> Response {
                 "steps_per_s",
                 Json::Num(metrics::per_second(session_steps as f64, secs)),
             ),
+            ("request_wait", hist_ms(&stats.wait().snapshot())),
+            ("step_latency", hist_ms(&stats.step_latency().snapshot())),
+            ("tick", hist_ms(&stats.tick_duration().snapshot())),
+            ("batch_size", hist_raw(&stats.batch_size().snapshot())),
+            (
+                "queue_depth",
+                obj(vec![
+                    (
+                        "now",
+                        Json::from(stats.queue_depth().get() as usize),
+                    ),
+                    (
+                        "high_water",
+                        Json::from(
+                            stats.queue_depth().high_water() as usize,
+                        ),
+                    ),
+                    (
+                        "samples",
+                        hist_raw(&stats.queue_depth_samples().snapshot()),
+                    ),
+                ]),
+            ),
+            ("families", obj(families)),
         ]),
     )
+}
+
+/// `GET /metrics`: Prometheus text exposition of the scheduler's
+/// counters, this coalescer's latency/queue registry, and the
+/// process-global registry the kernel spans record into.
+fn handle_metrics(ctx: &Ctx) -> Response {
+    let stats = ctx.coalescer.stats();
+    let load =
+        |c: &std::sync::atomic::AtomicU64| c.load(Ordering::Relaxed);
+    let sessions =
+        ctx.coalescer.registry().lock().expect("registry").len();
+    let mut w = PromWriter::new();
+    w.counter("serve_requests_total", load(&stats.requests));
+    w.counter("serve_rejected_total", load(&stats.rejected));
+    w.counter("serve_deferred_total", load(&stats.deferred));
+    w.counter("serve_ticks_total", load(&stats.ticks));
+    w.counter("serve_batches_total", load(&stats.batches));
+    w.counter("serve_session_steps_total", load(&stats.session_steps));
+    w.gauge("serve_peak_batch", load(&stats.peak_batch) as f64);
+    w.gauge("serve_sessions", sessions as f64);
+    w.gauge("serve_pending", ctx.coalescer.pending() as f64);
+    w.gauge("serve_uptime_seconds", ctx.coalescer.uptime_secs());
+    w.registry(stats.registry());
+    w.registry(obs::Registry::global());
+    Response {
+        status: 200,
+        content_type: prometheus::CONTENT_TYPE,
+        body: w.finish().into_bytes(),
+    }
 }
 
 fn handle_create(ctx: &Ctx, body: &[u8]) -> Response {
@@ -466,9 +590,7 @@ fn handle_step(ctx: &Ctx, id: u64, body: &[u8]) -> Response {
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
     let (tx, rx) = channel();
-    if let Err(e) =
-        ctx.coalescer.submit(StepRequest { session: id, steps, reply: tx })
-    {
+    if let Err(e) = ctx.coalescer.submit(StepRequest::new(id, steps, tx)) {
         let msg = format!("{e:#}");
         return Response::error(error_status(&msg), &msg);
     }
@@ -654,7 +776,9 @@ fn accept_loop(listener: TcpListener, ctx: Arc<Ctx>,
                 let spawned = std::thread::Builder::new()
                     .name("cax-serve-conn".into())
                     .spawn(move || {
-                        let _ = handle_connection(stream, &ctx);
+                        if let Err(e) = handle_connection(stream, &ctx) {
+                            crate::log_debug!("serve connection: {e:#}");
+                        }
                         active.fetch_sub(1, Ordering::SeqCst);
                     });
                 if spawned.is_err() {
@@ -669,14 +793,14 @@ fn accept_loop(listener: TcpListener, ctx: Arc<Ctx>,
     }
     // Graceful drain: stop accepting, serve every queued step request,
     // let live connections finish their in-flight request.
-    println!("cax serve: shutdown requested — draining in-flight work");
+    crate::log_info!("serve: shutdown requested — draining in-flight work");
     ctx.coalescer.shutdown();
     let _ = scheduler.join();
     let deadline = Instant::now() + Duration::from_secs(3);
     while active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(5));
     }
-    println!("cax serve: drained, exiting");
+    crate::log_info!("serve: drained, exiting");
 }
 
 fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> Result<()> {

@@ -21,6 +21,13 @@
 //!   (JSON via `util::json`, PPM snapshots via `viz::ppm`), plus
 //!   graceful SIGINT/SIGTERM shutdown that drains in-flight work.
 //!
+//! The whole pipeline is instrumented through [`crate::obs`]: request
+//! wait / launch / tick latency histograms and queue gauges live in
+//! each coalescer's own [`ServeStats`] registry, `GET /stats` reports
+//! their p50/p95/p99, `GET /metrics` serves Prometheus text, and
+//! `--trace out.json` captures per-launch spans and queue-depth
+//! counters for <https://ui.perfetto.dev>.
+//!
 //! Everything is std + this crate — no new dependencies, matching the
 //! repo's hermetic ethos. Start it from the CLI:
 //!
@@ -44,7 +51,7 @@ pub mod session;
 
 pub use http::{run, start, Server};
 pub use scheduler::{Coalescer, ServeStats, StepDone, StepReply, StepRequest};
-pub use session::{ProgramSpec, Session, SessionRegistry};
+pub use session::{ProgramSpec, Session, SessionRegistry, FAMILIES};
 
 use std::time::Duration;
 

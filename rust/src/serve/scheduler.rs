@@ -41,15 +41,32 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::backend::{Backend, NativeBackend};
-use crate::serve::session::{fmt_id, SessionRegistry};
+use crate::obs::{trace, Counter, Gauge, Histogram, Registry};
+use crate::serve::session::{fmt_id, SessionRegistry, FAMILIES};
 use crate::serve::ServeConfig;
 
 /// A pending "step session S by N" request, with its reply channel.
+/// Built via [`StepRequest::new`], which stamps the enqueue time the
+/// request-wait histogram (`serve_wait_seconds`) measures from.
 #[derive(Debug)]
 pub struct StepRequest {
     pub session: u64,
     pub steps: usize,
     pub reply: Sender<StepReply>,
+    enqueued: Instant,
+}
+
+impl StepRequest {
+    pub fn new(session: u64, steps: usize, reply: Sender<StepReply>)
+               -> StepRequest {
+        StepRequest { session, steps, reply, enqueued: Instant::now() }
+    }
+
+    /// How long this request has existed (enqueue → now); recorded into
+    /// `serve_wait_seconds` at the moment its reply is sent.
+    pub fn waited(&self) -> Duration {
+        self.enqueued.elapsed()
+    }
 }
 
 /// What a served request learns. `batch` is the number of sessions that
@@ -64,8 +81,15 @@ pub struct StepDone {
 /// Reply to a step request; errors cross threads as strings.
 pub type StepReply = Result<StepDone, String>;
 
-/// Monotonic counters the `/stats` endpoint and the benches read.
-#[derive(Debug, Default)]
+/// Monotonic counters the `/stats` endpoint and the benches read, plus
+/// this coalescer's own metric [`Registry`] of latency histograms,
+/// cause counters and queue gauges.
+///
+/// Each coalescer owns an **isolated** registry so parallel test
+/// servers never share percentiles; kernel spans still record into the
+/// process-global [`Registry::global`], and `GET /metrics` exposes
+/// both.
+#[derive(Debug)]
 pub struct ServeStats {
     /// Step requests accepted into the queue.
     pub requests: AtomicU64,
@@ -79,11 +103,106 @@ pub struct ServeStats {
     pub session_steps: AtomicU64,
     /// Largest batch packed so far.
     pub peak_batch: AtomicU64,
+    /// Requests pushed to a later tick (busy / claimed / batch full).
+    pub deferred: AtomicU64,
+    wait: Arc<Histogram>,
+    step_latency: Arc<Histogram>,
+    tick_duration: Arc<Histogram>,
+    batch_size: Arc<Histogram>,
+    queue_depth_samples: Arc<Histogram>,
+    queue_depth: Arc<Gauge>,
+    rejected_draining: Arc<Counter>,
+    deferred_busy: Arc<Counter>,
+    deferred_claimed: Arc<Counter>,
+    deferred_batch_full: Arc<Counter>,
+    family: Vec<Arc<Counter>>,
+    registry: Registry,
+}
+
+impl Default for ServeStats {
+    fn default() -> ServeStats {
+        let registry = Registry::new();
+        ServeStats {
+            requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            ticks: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            session_steps: AtomicU64::new(0),
+            peak_batch: AtomicU64::new(0),
+            deferred: AtomicU64::new(0),
+            wait: registry.histogram("serve_wait_seconds"),
+            step_latency: registry.histogram("serve_step_seconds"),
+            tick_duration: registry.histogram("serve_tick_seconds"),
+            batch_size: registry.histogram("serve_batch_size"),
+            queue_depth_samples: registry
+                .histogram("serve_queue_depth_samples"),
+            queue_depth: registry.gauge("serve_queue_depth"),
+            rejected_draining: registry
+                .counter("serve_rejected_draining_total"),
+            deferred_busy: registry.counter("serve_deferred_busy_total"),
+            deferred_claimed: registry
+                .counter("serve_deferred_claimed_total"),
+            deferred_batch_full: registry
+                .counter("serve_deferred_batch_full_total"),
+            family: FAMILIES
+                .iter()
+                .map(|f| registry.counter(&format!(
+                    "serve_requests_{f}_total")))
+                .collect(),
+            registry,
+        }
+    }
 }
 
 impl ServeStats {
     fn bump_peak(&self, batch: u64) {
         self.peak_batch.fetch_max(batch, Ordering::Relaxed);
+    }
+
+    /// This coalescer's metric registry; `GET /metrics` exposes it
+    /// alongside the process-global one.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Enqueue → reply latency (`serve_wait_seconds`, ns).
+    pub fn wait(&self) -> &Histogram {
+        &self.wait
+    }
+
+    /// Batched `step_resident` launch latency (`serve_step_seconds`).
+    pub fn step_latency(&self) -> &Histogram {
+        &self.step_latency
+    }
+
+    /// Whole-tick duration (`serve_tick_seconds`).
+    pub fn tick_duration(&self) -> &Histogram {
+        &self.tick_duration
+    }
+
+    /// Sessions per batched launch (`serve_batch_size`).
+    pub fn batch_size(&self) -> &Histogram {
+        &self.batch_size
+    }
+
+    /// Current pending-queue depth with its high-water mark.
+    pub fn queue_depth(&self) -> &Gauge {
+        &self.queue_depth
+    }
+
+    /// Queue depth observed at each tick (`serve_queue_depth_samples`).
+    pub fn queue_depth_samples(&self) -> &Histogram {
+        &self.queue_depth_samples
+    }
+
+    /// `(family, accepted requests)` per program family, in
+    /// [`FAMILIES`] order.
+    pub fn family_requests(&self) -> Vec<(&'static str, u64)> {
+        FAMILIES
+            .iter()
+            .copied()
+            .zip(self.family.iter().map(|c| c.get()))
+            .collect()
     }
 }
 
@@ -171,6 +290,7 @@ impl Coalescer {
         }
         let mut q = self.queue.lock().expect("serve queue");
         if q.draining {
+            self.stats.rejected_draining.inc();
             bail!("server is shutting down");
         }
         if q.pending.len() >= self.max_pending {
@@ -181,6 +301,7 @@ impl Coalescer {
             );
         }
         q.pending.push_back(req);
+        self.stats.queue_depth.set(q.pending.len() as u64);
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         self.work.notify_one();
         Ok(())
@@ -191,13 +312,18 @@ impl Coalescer {
     /// the number of requests answered (results + errors). Deferred
     /// requests go back to the queue front with their order intact.
     pub fn tick(&self) -> usize {
+        let tick_start = Instant::now();
         let taken: Vec<StepRequest> = {
             let mut q = self.queue.lock().expect("serve queue");
-            q.pending.drain(..).collect()
+            let taken: Vec<StepRequest> = q.pending.drain(..).collect();
+            self.stats.queue_depth.set(q.pending.len() as u64);
+            taken
         };
         if taken.is_empty() {
             return 0;
         }
+        self.stats.queue_depth_samples.record(taken.len() as u64);
+        trace::counter("serve_queue_depth", taken.len() as f64);
 
         // ---- plan: FIFO walk, group by (class key, steps) -----------
         struct Group {
@@ -219,11 +345,14 @@ impl Coalescer {
                 // launch (possible if tick() ever runs concurrently)
                 // defers rather than erroring as unknown.
                 if registry.is_busy(req.session) {
+                    self.stats.deferred.fetch_add(1, Ordering::Relaxed);
+                    self.stats.deferred_busy.inc();
                     blocked.insert(req.session);
                     deferred.push(req);
                     continue;
                 }
                 let Some(session) = registry.get(req.session) else {
+                    self.stats.wait.record_duration(req.waited());
                     let _ = req.reply.send(Err(format!(
                         "no session {}",
                         fmt_id(req.session)
@@ -234,6 +363,8 @@ impl Coalescer {
                 if claimed.contains(&req.session)
                     || blocked.contains(&req.session)
                 {
+                    self.stats.deferred.fetch_add(1, Ordering::Relaxed);
+                    self.stats.deferred_claimed.inc();
                     blocked.insert(req.session);
                     deferred.push(req);
                     continue;
@@ -244,11 +375,14 @@ impl Coalescer {
                     groups.len() - 1
                 });
                 if groups[slot].reqs.len() >= self.max_batch {
+                    self.stats.deferred.fetch_add(1, Ordering::Relaxed);
+                    self.stats.deferred_batch_full.inc();
                     blocked.insert(req.session);
                     deferred.push(req);
                     continue;
                 }
                 claimed.insert(req.session);
+                self.stats.family[session.spec.family_index()].inc();
                 groups[slot].reqs.push(req);
             }
         }
@@ -275,6 +409,7 @@ impl Coalescer {
                             live.push(req);
                         }
                         None => {
+                            self.stats.wait.record_duration(req.waited());
                             let _ = req.reply.send(Err(format!(
                                 "no session {}",
                                 fmt_id(req.session)
@@ -289,11 +424,17 @@ impl Coalescer {
             }
             let batch = sessions.len();
             let prog = sessions[0].prog.clone();
+            self.stats.batch_size.record(batch as u64);
+            let launch_start = Instant::now();
             let outcome = {
                 let mut refs: Vec<&mut crate::backend::Resident> =
                     sessions.iter_mut().map(|s| &mut s.resident).collect();
                 self.backend.step_resident(&prog, &mut refs, steps)
             };
+            let launch_dur = launch_start.elapsed();
+            self.stats.step_latency.record_duration(launch_dur);
+            trace::record_complete("serve_launch", launch_start,
+                                   launch_dur);
             if outcome.is_ok() {
                 for s in &mut sessions {
                     s.steps_done += steps as u64;
@@ -329,6 +470,7 @@ impl Coalescer {
                 self.stats.bump_peak(batch as u64);
             }
             for (req, reply) in live.iter().zip(replies) {
+                self.stats.wait.record_duration(req.waited());
                 let _ = req.reply.send(reply);
                 served += 1;
             }
@@ -339,9 +481,13 @@ impl Coalescer {
             for req in deferred.into_iter().rev() {
                 q.pending.push_front(req);
             }
+            self.stats.queue_depth.set(q.pending.len() as u64);
         }
         if served > 0 {
             self.stats.ticks.fetch_add(1, Ordering::Relaxed);
+            let tick_dur = tick_start.elapsed();
+            self.stats.tick_duration.record_duration(tick_dur);
+            trace::record_complete("serve_tick", tick_start, tick_dur);
         }
         served
     }
@@ -432,7 +578,7 @@ mod tests {
             .collect();
         let (tx, rx) = channel();
         for &id in &ids {
-            c.submit(StepRequest { session: id, steps: 2, reply: tx.clone() })
+            c.submit(StepRequest::new(id, 2, tx.clone()))
                 .unwrap();
         }
         assert_eq!(c.tick(), 5);
@@ -454,12 +600,12 @@ mod tests {
         let e = create(&c, ProgramSpec::Eca { rule: 30, width: 64 });
         let (tx, rx) = channel();
         for id in [a, b, e] {
-            c.submit(StepRequest { session: id, steps: 1, reply: tx.clone() })
+            c.submit(StepRequest::new(id, 1, tx.clone()))
                 .unwrap();
         }
         // A second request for a claimed session defers one tick, so a
         // session's trajectory order is never reordered inside a batch.
-        c.submit(StepRequest { session: a, steps: 1, reply: tx.clone() })
+        c.submit(StepRequest::new(a, 1, tx.clone()))
             .unwrap();
         let served = c.tick();
         assert_eq!(served, 3, "a's duplicate must defer to the next tick");
@@ -479,7 +625,7 @@ mod tests {
             .collect();
         let (tx, rx) = channel();
         for &id in &ids {
-            c.submit(StepRequest { session: id, steps: 1, reply: tx.clone() })
+            c.submit(StepRequest::new(id, 1, tx.clone()))
                 .unwrap();
         }
         // 5 requests, cap 2: ticks serve 2, 2, 1 — in arrival order.
@@ -505,17 +651,14 @@ mod tests {
         let victim = create(&c, ProgramSpec::Eca { rule: 30, width: 32 });
         let (tx, rx) = channel();
         // 1) filler claims the only eca:r30:w32 slot (1 step).
-        c.submit(StepRequest { session: filler, steps: 1,
-                               reply: tx.clone() })
+        c.submit(StepRequest::new(filler, 1, tx.clone()))
             .unwrap();
         // 2) victim, same class -> batch full -> deferred.
-        c.submit(StepRequest { session: victim, steps: 1,
-                               reply: tx.clone() })
+        c.submit(StepRequest::new(victim, 1, tx.clone()))
             .unwrap();
         // 3) victim again with steps: 2 — a DIFFERENT class key; must
         //    NOT overtake the deferred request.
-        c.submit(StepRequest { session: victim, steps: 2,
-                               reply: tx.clone() })
+        c.submit(StepRequest::new(victim, 2, tx.clone()))
             .unwrap();
         assert_eq!(c.tick(), 1, "only filler served in tick 1");
         assert_eq!(rx.recv().unwrap().unwrap().session, filler);
@@ -531,22 +674,22 @@ mod tests {
         let c = coalescer(8, 2);
         let id = create(&c, ProgramSpec::Eca { rule: 30, width: 16 });
         let (tx, _rx) = channel();
-        c.submit(StepRequest { session: id, steps: 1, reply: tx.clone() })
+        c.submit(StepRequest::new(id, 1, tx.clone()))
             .unwrap();
-        c.submit(StepRequest { session: id, steps: 1, reply: tx.clone() })
+        c.submit(StepRequest::new(id, 1, tx.clone()))
             .unwrap();
         let err = c
-            .submit(StepRequest { session: id, steps: 1, reply: tx.clone() })
+            .submit(StepRequest::new(id, 1, tx.clone()))
             .unwrap_err();
         assert!(format!("{err:#}").contains("queue full"));
         assert_eq!(c.stats().rejected.load(Ordering::Relaxed), 1);
         assert!(c
-            .submit(StepRequest { session: id, steps: 0, reply: tx.clone() })
+            .submit(StepRequest::new(id, 0, tx.clone()))
             .is_err());
         // Per-request step counts are bounded too (one launch holds the
         // registry lock for its whole duration).
         let err = c
-            .submit(StepRequest { session: id, steps: 10_001, reply: tx })
+            .submit(StepRequest::new(id, 10_001, tx))
             .unwrap_err();
         assert!(format!("{err:#}").contains("per-request limit"));
     }
@@ -555,7 +698,7 @@ mod tests {
     fn unknown_sessions_get_error_replies() {
         let c = coalescer(8, 8);
         let (tx, rx) = channel();
-        c.submit(StepRequest { session: 0xDEAD, steps: 1, reply: tx })
+        c.submit(StepRequest::new(0xDEAD, 1, tx))
             .unwrap();
         assert_eq!(c.tick(), 1);
         let err = rx.recv().unwrap().unwrap_err();
@@ -563,11 +706,56 @@ mod tests {
     }
 
     #[test]
+    fn instrumentation_tracks_waits_batches_and_families() {
+        let c = coalescer(2, 64);
+        let life: Vec<u64> = (0..3)
+            .map(|_| create(&c, ProgramSpec::Life { height: 8, width: 8 }))
+            .collect();
+        let eca = create(&c, ProgramSpec::Eca { rule: 30, width: 32 });
+        let (tx, rx) = channel();
+        for &id in &life {
+            c.submit(StepRequest::new(id, 1, tx.clone())).unwrap();
+        }
+        c.submit(StepRequest::new(eca, 1, tx.clone())).unwrap();
+        let stats = c.stats();
+        assert_eq!(stats.queue_depth().get(), 4);
+        assert_eq!(stats.queue_depth().high_water(), 4);
+        // Tick 1: life batch of 2 (cap), eca batch of 1; 3rd life defers.
+        assert_eq!(c.tick(), 3);
+        assert_eq!(stats.deferred.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.deferred_batch_full.get(), 1);
+        // Tick 2 serves the deferred life request.
+        assert_eq!(c.tick(), 1);
+        for _ in 0..4 {
+            rx.recv().unwrap().unwrap();
+        }
+        // Every reply recorded a wait; every launch recorded a batch
+        // size and a step latency; every served tick a duration.
+        assert_eq!(stats.wait().count(), 4);
+        assert_eq!(stats.step_latency().count(), 3);
+        assert_eq!(stats.tick_duration().count(), 2);
+        let sizes = stats.batch_size().snapshot();
+        assert_eq!(sizes.count, 3);
+        assert_eq!(sizes.max, 2);
+        assert_eq!(stats.queue_depth_samples().count(), 2);
+        assert_eq!(stats.queue_depth().get(), 0, "queue drained");
+        let fams: std::collections::BTreeMap<_, _> =
+            stats.family_requests().into_iter().collect();
+        assert_eq!(fams["life"], 3);
+        assert_eq!(fams["eca"], 1);
+        assert_eq!(fams["lenia"], 0);
+        // The wait quantiles are well-formed and ordered.
+        let wait = stats.wait().snapshot();
+        assert!(wait.quantile(0.5) <= wait.quantile(0.99));
+        assert!(wait.quantile(0.99) <= wait.max as f64 + 1.0);
+    }
+
+    #[test]
     fn shutdown_rejects_submissions_and_run_drains() {
         let c = Arc::new(coalescer(8, 8));
         let id = create(&c, ProgramSpec::Life { height: 8, width: 8 });
         let (tx, rx) = channel();
-        c.submit(StepRequest { session: id, steps: 3, reply: tx.clone() })
+        c.submit(StepRequest::new(id, 3, tx.clone()))
             .unwrap();
         let handle = Coalescer::spawn(&c);
         c.shutdown();
@@ -575,7 +763,7 @@ mod tests {
         // The in-flight request was drained, not dropped.
         assert_eq!(rx.recv().unwrap().unwrap().steps_done, 3);
         let err = c
-            .submit(StepRequest { session: id, steps: 1, reply: tx })
+            .submit(StepRequest::new(id, 1, tx))
             .unwrap_err();
         assert!(format!("{err:#}").contains("shutting down"));
     }

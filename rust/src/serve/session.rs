@@ -61,6 +61,10 @@ pub fn opt_usize(body: &Json, name: &str) -> Result<Option<usize>> {
     }
 }
 
+/// The program families, in [`ProgramSpec::family_index`] order — the
+/// per-family request-counter labels (`serve_requests_{family}_total`).
+pub const FAMILIES: [&str; 5] = ["eca", "life", "lenia", "lenia_multi", "nca"];
+
 /// Largest board axis a create request may ask for.
 pub const MAX_DIM: usize = 8192;
 /// Largest total cell count per session board (bounds the per-session
@@ -156,6 +160,18 @@ impl ProgramSpec {
             ProgramSpec::Lenia { .. } => "lenia",
             ProgramSpec::LeniaMulti { .. } => "lenia-multi",
             ProgramSpec::NcaGrowing => "nca",
+        }
+    }
+
+    /// Index into [`FAMILIES`] — the metric-safe program-family label
+    /// (`lenia_multi`, not `lenia-multi`) the serve counters key on.
+    pub fn family_index(&self) -> usize {
+        match self {
+            ProgramSpec::Eca { .. } => 0,
+            ProgramSpec::Life { .. } => 1,
+            ProgramSpec::Lenia { .. } => 2,
+            ProgramSpec::LeniaMulti { .. } => 3,
+            ProgramSpec::NcaGrowing => 4,
         }
     }
 

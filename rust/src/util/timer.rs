@@ -34,6 +34,7 @@ pub struct Stats {
     pub min: f64,
     pub max: f64,
     pub p95: f64,
+    pub p99: f64,
     pub std_dev: f64,
 }
 
@@ -54,20 +55,34 @@ impl Stats {
             min: sorted[0],
             max: sorted[n - 1],
             p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
             std_dev: var.sqrt(),
         }
     }
 }
 
-fn percentile(sorted: &[f64], q: f64) -> f64 {
-    let n = sorted.len();
-    if n == 1 {
-        return sorted[0];
+/// THE percentile rank convention: for `n` sorted samples and quantile
+/// `q` in `[0, 1]`, the (possibly fractional) rank is `q * (n - 1)`.
+/// Returns `(lo, hi, frac)` — interpolate `sample[lo] * (1 - frac) +
+/// sample[hi] * frac`. Shared between [`Stats`] over raw samples and
+/// [`crate::obs::Histogram`] quantile queries, so both report the same
+/// statistic.
+pub fn percentile_rank(n: usize, q: f64) -> (usize, usize, f64) {
+    if n <= 1 {
+        return (0, 0, 0.0);
     }
-    let pos = q * (n - 1) as f64;
+    let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
     let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
-    let frac = pos - lo as f64;
+    let hi = (pos.ceil() as usize).min(n - 1);
+    (lo, hi, pos - lo as f64)
+}
+
+/// Interpolated percentile of pre-sorted samples (0 for empty input).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let (lo, hi, frac) = percentile_rank(sorted.len(), q);
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
@@ -111,6 +126,20 @@ mod tests {
         let sorted = [0.0, 10.0];
         assert_eq!(percentile(&sorted, 0.5), 5.0);
         assert_eq!(percentile(&sorted, 0.95), 9.5);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn p99_uses_the_shared_rank_convention() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Stats::from_samples(&samples);
+        // rank = 0.99 * 99 = 98.01 -> between 99.0 and 100.0.
+        assert!((s.p99 - 99.01).abs() < 1e-9, "p99 {}", s.p99);
+        assert!(s.p95 <= s.p99 && s.p99 <= s.max);
+        let (lo, hi, frac) = percentile_rank(100, 0.99);
+        assert_eq!((lo, hi), (98, 99));
+        assert!((frac - 0.01).abs() < 1e-9);
+        assert_eq!(percentile_rank(1, 0.99), (0, 0, 0.0));
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! Property and contract tests for `cax::obs` — the observability
+//! layer's promises, checked from outside the crate:
+//!
+//! - histogram percentiles track exact sorted-sample percentiles within
+//!   the documented log-bucket relative error;
+//! - `merge_from` is associative and commutative (snapshot-equal), so
+//!   per-thread histograms can be combined in any order;
+//! - spans record into the global registry when recording is on, are
+//!   no-ops when it is off, and cost little either way;
+//! - a trace capture round-trips through the Chrome Trace Event JSON
+//!   writer and parses back with `util::json`.
+//!
+//! Tests that touch process-global state (recording flag, trace
+//! capture, global registry, log level) serialize on one mutex so the
+//! default multi-threaded test runner cannot interleave them.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use cax::obs::{self, log, trace, Gauge, Histogram};
+use cax::util::json::Json;
+use cax::util::timer::percentile;
+
+/// Serializes tests that flip process-global obs state.
+static GLOBAL_STATE: Mutex<()> = Mutex::new(());
+
+fn global_lock() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_STATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Deterministic pseudo-random u64 stream (splitmix64) — no external
+/// rand crate, same values on every run.
+fn splitmix(seed: &mut u64) -> u64 {
+    *seed = seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *seed;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[test]
+fn histogram_percentiles_track_exact_percentiles() {
+    // Values spanning six decades — the regime latencies live in.
+    let mut seed = 7u64;
+    let mut values: Vec<u64> = (0..4000)
+        .map(|_| {
+            let magnitude = 1u64 << (10 + (splitmix(&mut seed) % 20));
+            magnitude + splitmix(&mut seed) % magnitude
+        })
+        .collect();
+    let h = Histogram::new();
+    for &v in &values {
+        h.record(v);
+    }
+    values.sort_unstable();
+    let exact: Vec<f64> = values.iter().map(|&v| v as f64).collect();
+
+    for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+        let approx = h.quantile(q);
+        let truth = percentile(&exact, q);
+        // Log-linear buckets with SUB_BITS=5 bound relative error by
+        // 2^-5 ≈ 3.1%; allow 5% for rank-interpolation differences.
+        let tol = truth * 0.05 + 1.0;
+        assert!(
+            (approx - truth).abs() <= tol,
+            "q={q}: histogram {approx} vs exact {truth} (tol {tol})"
+        );
+    }
+    assert_eq!(h.count(), 4000);
+}
+
+#[test]
+fn histogram_merge_is_associative_and_commutative() {
+    let make = |lo: u64, n: u64| {
+        let h = Histogram::new();
+        for i in 0..n {
+            h.record(lo + i * 17);
+        }
+        h
+    };
+    let (a, b, c) = (make(1, 100), make(1_000, 50), make(1 << 20, 200));
+
+    // (a ∪ b) ∪ c
+    let left = Histogram::new();
+    left.merge_from(&a);
+    left.merge_from(&b);
+    left.merge_from(&c);
+    // a ∪ (b ∪ c)
+    let bc = Histogram::new();
+    bc.merge_from(&b);
+    bc.merge_from(&c);
+    let right = Histogram::new();
+    right.merge_from(&a);
+    right.merge_from(&bc);
+    // c ∪ b ∪ a
+    let rev = Histogram::new();
+    rev.merge_from(&c);
+    rev.merge_from(&b);
+    rev.merge_from(&a);
+
+    assert_eq!(left.snapshot(), right.snapshot(), "associativity");
+    assert_eq!(left.snapshot(), rev.snapshot(), "commutativity");
+    assert_eq!(left.count(), 350);
+    let snap = left.snapshot();
+    assert_eq!(snap.min, 1);
+    assert_eq!(snap.max, (1 << 20) + 199 * 17);
+}
+
+#[test]
+fn empty_histogram_is_well_defined() {
+    let h = Histogram::new();
+    assert!(h.is_empty());
+    let snap = h.snapshot();
+    assert_eq!(snap.quantile(0.5), 0.0);
+    assert_eq!(snap.mean(), 0.0);
+    assert_eq!(snap.cumulative_le(u64::MAX), 0);
+}
+
+#[test]
+fn gauge_tracks_value_and_high_water() {
+    let g = Gauge::default();
+    g.set(3);
+    g.set(12);
+    g.set(5);
+    assert_eq!(g.get(), 5);
+    assert_eq!(g.high_water(), 12);
+}
+
+#[test]
+fn registry_interns_metrics_by_name() {
+    let reg = obs::Registry::new();
+    let a = reg.histogram("x_seconds");
+    let b = reg.histogram("x_seconds");
+    a.record(10);
+    assert_eq!(b.count(), 1, "same name must return the same histogram");
+    let c1 = reg.counter("hits_total");
+    reg.counter("hits_total").add(4);
+    assert_eq!(c1.get(), 4);
+    assert_eq!(reg.len(), 2);
+}
+
+#[test]
+fn span_records_into_the_global_registry() {
+    let _guard = global_lock();
+    obs::set_recording(true);
+    let hist = obs::Registry::global()
+        .histogram("obs_props_probe_seconds");
+    let before = hist.count();
+    {
+        let _span = obs::span("obs_props_probe");
+        std::hint::black_box(());
+    }
+    assert_eq!(hist.count(), before + 1);
+}
+
+#[test]
+fn span_is_a_noop_with_recording_off() {
+    let _guard = global_lock();
+    obs::set_recording(false);
+    let hist = obs::Registry::global()
+        .histogram("obs_props_noop_seconds");
+    let before = hist.count();
+    {
+        let _span = obs::span("obs_props_noop");
+    }
+    assert_eq!(hist.count(), before, "disabled spans must not record");
+    obs::set_recording(true);
+}
+
+#[test]
+fn span_overhead_smoke() {
+    let _guard = global_lock();
+    obs::set_recording(true);
+    let n = 10_000u32;
+    let t = Instant::now();
+    for _ in 0..n {
+        let _span = obs::span("obs_props_overhead");
+    }
+    let per_span = t.elapsed().as_secs_f64() / n as f64;
+    // Two Instant reads + one histogram record; generous bound so slow
+    // CI machines never flake (the real budget is the serve_load bench).
+    assert!(
+        per_span < 50e-6,
+        "span create/drop took {per_span:.2e}s each"
+    );
+}
+
+#[test]
+fn trace_capture_roundtrips_through_json() {
+    let _guard = global_lock();
+    trace::start_with_capacity(64);
+    assert!(trace::active());
+    let t0 = Instant::now();
+    trace::record_complete("obs_props_launch", t0,
+                           Duration::from_micros(250));
+    trace::counter("obs_props_depth", 3.0);
+    {
+        // An armed span must land in the capture too.
+        let _span = obs::span("obs_props_spanned");
+    }
+
+    let dir = std::env::temp_dir()
+        .join(format!("cax_obs_props_{}", std::process::id()));
+    let path = dir.join("trace.json");
+    let written = trace::write(&path).expect("trace write");
+    assert!(!trace::active(), "write must disarm the capture");
+    assert_eq!(written, 3);
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = Json::parse(&text).expect("trace JSON must parse");
+    assert_eq!(
+        doc.get("displayTimeUnit").and_then(Json::as_str),
+        Some("ms")
+    );
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert_eq!(events.len(), 3);
+    let names: Vec<&str> = events
+        .iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    assert!(names.contains(&"obs_props_launch"));
+    assert!(names.contains(&"obs_props_depth"));
+    assert!(names.contains(&"obs_props_spanned"));
+    let counter_ev = events
+        .iter()
+        .find(|e| e.get("ph").and_then(Json::as_str) == Some("C"))
+        .expect("counter event");
+    assert_eq!(
+        counter_ev
+            .get("args")
+            .and_then(|a| a.get("value"))
+            .and_then(Json::as_f64),
+        Some(3.0)
+    );
+    let span_ev = events
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str)
+                  == Some("obs_props_launch"))
+        .unwrap();
+    assert_eq!(span_ev.get("ph").and_then(Json::as_str), Some("X"));
+    let dur = span_ev.get("dur").and_then(Json::as_f64).unwrap();
+    assert!((dur - 250.0).abs() < 1.0, "dur is microseconds (got {dur})");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_buffer_bounds_drops_instead_of_growing() {
+    let _guard = global_lock();
+    trace::start_with_capacity(4);
+    let t0 = Instant::now();
+    for _ in 0..10 {
+        trace::record_complete("obs_props_flood", t0, Duration::ZERO);
+    }
+    let held = trace::stop();
+    assert_eq!(held, 4, "buffer must cap at its capacity");
+    assert!(!trace::active());
+}
+
+#[test]
+fn log_levels_parse_and_gate() {
+    let _guard = global_lock();
+    assert_eq!(log::Level::parse("debug"), Some(log::Level::Debug));
+    assert_eq!(log::Level::parse("WARN"), Some(log::Level::Warn));
+    assert_eq!(log::Level::parse("warning"), Some(log::Level::Warn));
+    assert_eq!(log::Level::parse("nope"), None);
+
+    let prev = log::level();
+    log::set_level(log::Level::Error);
+    assert!(log::enabled(log::Level::Error));
+    assert!(!log::enabled(log::Level::Info));
+    log::set_level(log::Level::Debug);
+    assert!(log::enabled(log::Level::Info));
+    log::set_level(prev);
+}

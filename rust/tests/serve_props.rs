@@ -38,7 +38,7 @@ fn test_config() -> ServeConfig {
 fn step_all(c: &Coalescer, ids: &[u64], steps: usize) -> Vec<usize> {
     let (tx, rx) = channel();
     for &id in ids {
-        c.submit(StepRequest { session: id, steps, reply: tx.clone() })
+        c.submit(StepRequest::new(id, steps, tx.clone()))
             .expect("submit");
     }
     drop(tx);
@@ -183,9 +183,7 @@ fn concurrent_clients_with_running_scheduler_stay_exact() {
             scope.spawn(move || {
                 for _ in 0..10 {
                     let (tx, rx) = channel();
-                    c.submit(StepRequest { session: id, steps: 1,
-                                           reply: tx })
-                        .unwrap();
+                    c.submit(StepRequest::new(id, 1, tx)).unwrap();
                     let done = rx
                         .recv_timeout(Duration::from_secs(20))
                         .expect("scheduler reply")
@@ -410,6 +408,91 @@ fn http_sessions_coalesce_across_connections() {
     server.join().expect("clean shutdown");
 }
 
+// ------------------------------------------- /stats and /metrics shape
+
+/// The observability surface: after known traffic, `/stats` must report
+/// wait/step percentiles and per-family counts that match what we sent,
+/// and `/metrics` must expose the same truth as Prometheus text.
+#[test]
+fn stats_and_metrics_expose_latency_shape() {
+    use cax::util::json::Json;
+
+    let cfg = ServeConfig {
+        max_sessions: 4,
+        tick_window: Duration::from_micros(100),
+        ..test_config()
+    };
+    let server = serve::start(&cfg).expect("start server");
+    let addr = server.addr();
+
+    let mut ids = vec![];
+    for _ in 0..2 {
+        let (status, body) = http(addr, "POST", "/sessions",
+                                  r#"{"program": "life", "size": 16}"#);
+        assert_eq!(status, 201, "{body}");
+        ids.push(json_str_field(&body, "id"));
+    }
+    // 3 sequential steps per session = 6 requests, 6 wait samples.
+    for id in &ids {
+        for _ in 0..3 {
+            let (status, body) =
+                http(addr, "POST", &format!("/sessions/{id}/step"),
+                     r#"{"steps": 2}"#);
+            assert_eq!(status, 200, "{body}");
+        }
+    }
+
+    let (status, body) = http(addr, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).expect("stats is JSON");
+    let num = |path: &[&str]| -> f64 {
+        let mut v = &doc;
+        for key in path {
+            v = v.get(key).unwrap_or_else(|| {
+                panic!("missing {path:?} in {body}")
+            });
+        }
+        v.as_f64().unwrap_or_else(|| panic!("{path:?} not a number"))
+    };
+    assert_eq!(num(&["requests"]), 6.0);
+    assert_eq!(num(&["request_wait", "count"]), 6.0);
+    let (p50, p95, p99) = (
+        num(&["request_wait", "p50_ms"]),
+        num(&["request_wait", "p95_ms"]),
+        num(&["request_wait", "p99_ms"]),
+    );
+    assert!(p50 <= p95 && p95 <= p99,
+            "percentiles must be monotone: {p50} {p95} {p99}");
+    assert!(num(&["step_latency", "count"]) >= 1.0);
+    assert!(num(&["step_latency", "p99_ms"]) > 0.0);
+    assert!(num(&["tick", "count"]) >= 1.0);
+    assert!(num(&["batch_size", "count"]) >= 1.0);
+    assert!(num(&["batch_size", "max"]) >= 1.0);
+    assert!(num(&["queue_depth", "high_water"]) >= 1.0);
+    assert_eq!(num(&["queue_depth", "now"]), 0.0);
+    assert_eq!(num(&["families", "life"]), 6.0);
+    assert_eq!(num(&["families", "eca"]), 0.0);
+
+    let (status, text) = http(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert!(text.contains("# TYPE cax_serve_requests_total counter"),
+            "{text}");
+    assert!(text.contains("cax_serve_requests_total 6\n"), "{text}");
+    assert!(text.contains("cax_serve_requests_life_total 6\n"), "{text}");
+    assert!(text.contains("cax_serve_requests_eca_total 0\n"), "{text}");
+    assert!(text.contains("cax_serve_wait_seconds_bucket{le=\"+Inf\"} 6\n"),
+            "{text}");
+    assert!(text.contains("cax_serve_wait_seconds_count 6\n"), "{text}");
+    assert!(text.contains("cax_serve_queue_depth_high_water"), "{text}");
+    // Kernel spans record into the process-global registry; stepping a
+    // Life session above guarantees this histogram exists and is
+    // exposed alongside the per-coalescer metrics.
+    assert!(text.contains("cax_kernel_life_seconds_count"), "{text}");
+
+    server.stop();
+    server.join().expect("clean shutdown");
+}
+
 // ------------------------------------------------- graceful SIGTERM
 
 /// `cax serve` must drain and exit 0 on SIGTERM (the ctrl-c/SIGINT path
@@ -421,11 +504,12 @@ fn sigterm_drains_and_exits_zero() {
         .args(["serve", "--port", "0", "--threads", "2", "--max-sessions",
                "8"])
         .stdout(std::process::Stdio::piped())
-        .stderr(std::process::Stdio::null())
+        .stderr(std::process::Stdio::piped())
         .spawn()
         .expect("spawn cax serve");
 
     let stdout = child.stdout.take().expect("child stdout");
+    let stderr = child.stderr.take().expect("child stderr");
     let mut reader = BufReader::new(stdout);
     let mut line = String::new();
     reader.read_line(&mut line).expect("read listening line");
@@ -471,8 +555,10 @@ fn sigterm_drains_and_exits_zero() {
     assert!(status.success(),
             "graceful shutdown must exit 0, got {status:?}");
 
-    let mut rest = String::new();
-    reader.read_to_string(&mut rest).expect("drain stdout");
-    assert!(rest.contains("draining"),
-            "expected the drain announcement, stdout tail: {rest:?}");
+    // The drain announcements go through the leveled logger, which
+    // writes to stderr (stdout stays machine-parseable).
+    let mut err = String::new();
+    BufReader::new(stderr).read_to_string(&mut err).expect("drain stderr");
+    assert!(err.contains("draining"),
+            "expected the drain announcement on stderr, got: {err:?}");
 }
