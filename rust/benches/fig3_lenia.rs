@@ -21,7 +21,7 @@ use cax::tensor::Tensor;
 use cax::util::rng::Rng;
 
 mod bench_util;
-use bench_util::{bench, header, push, quick};
+use bench_util::{bench, header, push, quick, soft};
 
 /// Batch of soup boards as one `[B, H, W]` buffer.
 fn soup(b: usize, size: usize, rng: &mut Rng) -> Tensor {
@@ -39,14 +39,20 @@ fn main() {
 
     let radii: &[usize] =
         if quick() { &[8, 32] } else { &[4, 8, 16, 32, 64] };
-    let mut at32 = (0.0f64, 0.0f64); // (sparse median, fft median)
+    // (scalar sparse median, fft median) at r=32 — the acceptance
+    // anchor compares the spectral kernel against the *scalar* sparse
+    // baseline, so the 5x target keeps its meaning whether or not the
+    // dispatching sparse arm takes the AVX2 path on this host.
+    let mut at32 = (0.0f64, 0.0f64);
+    let mut simd8 = (0.0f64, 0.0f64); // (scalar, dispatch) at r=8
 
     for &radius in radii {
         let params = LeniaParams { radius, ..Default::default() };
         header(&format!(
             "Lenia radius sweep — r={radius} ({b}x{size}x{size}, {steps} \
-             steps; crossover picks {})",
-            select_path(radius, size, size).name()
+             steps; crossover picks {}, simd {})",
+            select_path(radius, size, size).name(),
+            cax::backend::native::simd::status()
         ));
         let state = soup(b, size, &mut rng);
         let updates = (b * size * size * steps) as f64;
@@ -60,6 +66,21 @@ fn main() {
                                       steps);
             });
         });
+        // Forced-scalar sparse arm at the SIMD-comparison radius and
+        // the acceptance radius (everywhere would double sweep cost).
+        let sparse_scalar = (radius == 8 || radius == 32).then(|| {
+            bench(warm, iters, || {
+                let mut data = state.data().to_vec();
+                pool.for_each_chunk(&mut data, size * size, |_, board| {
+                    let mut scratch = vec![0.0f32; size * size];
+                    for _ in 0..steps {
+                        sparse_kernel
+                            .step_scalar(board, &mut scratch, size, size);
+                        board.copy_from_slice(&scratch);
+                    }
+                });
+            })
+        });
         let fft_kernel = LeniaFft::new(params, size, size).unwrap();
         let fft = bench(warm, iters, || {
             let mut data = state.data().to_vec();
@@ -69,11 +90,26 @@ fn main() {
         });
         push(&mut rows, &format!("lenia/r{radius}/sparse-tap"), &sparse,
              updates);
+        if let Some(scalar) = &sparse_scalar {
+            push(&mut rows, &format!("lenia/r{radius}/sparse-scalar"),
+                 scalar, updates);
+            println!("  speedup: dispatching sparse-tap is {:.1}x vs \
+                      forced-scalar", scalar.median / sparse.median);
+        }
         push(&mut rows, &format!("lenia/r{radius}/fft"), &fft, updates);
         let speedup = sparse.median / fft.median;
         println!("  speedup: fft is {speedup:.1}x vs sparse-tap");
+        if radius == 8 {
+            if let Some(scalar) = &sparse_scalar {
+                simd8 = (scalar.median, sparse.median);
+            }
+        }
         if radius == 32 {
-            at32 = (sparse.median, fft.median);
+            let baseline = sparse_scalar
+                .as_ref()
+                .map(|s| s.median)
+                .unwrap_or(sparse.median);
+            at32 = (baseline, fft.median);
         }
     }
 
@@ -130,13 +166,27 @@ fn main() {
     if at32.1 > 0.0 {
         let speedup = at32.0 / at32.1;
         println!(
-            "\nacceptance: fft vs sparse-tap at r=32 on {size}x{size}: \
-             {speedup:.1}x (target >= 5x)"
+            "\nacceptance: fft vs scalar sparse-tap at r=32 on \
+             {size}x{size}: {speedup:.1}x (target >= 5x)"
         );
         assert!(
             quick() || speedup >= 5.0,
             "spectral Lenia below the 5x acceptance anchor: {speedup:.2}x"
         );
+    }
+    // SIMD acceptance at r=8 (the sparse regime): the AVX2 sparse-tap
+    // kernel is >= 2x its forced-scalar form when avx2 dispatched.
+    if simd8.1 > 0.0 && cax::backend::native::simd::active() && !quick() {
+        let speedup = simd8.0 / simd8.1;
+        println!(
+            "acceptance: simd vs scalar sparse-tap at r=8: {speedup:.1}x \
+             (target >= 2x)"
+        );
+        if speedup < 2.0 {
+            assert!(soft(),
+                    "SIMD sparse-tap below the 2x target: {speedup:.2}x");
+            println!("  (soft mode: not failing on the 2x target)");
+        }
     }
     // Verify the crossover constant tells the truth on this machine:
     // the selected path must be the measured-faster one at the sweep's

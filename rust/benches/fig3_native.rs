@@ -18,7 +18,7 @@ use cax::tensor::Tensor;
 use cax::util::rng::Rng;
 
 mod bench_util;
-use bench_util::{bench, header, push, quick};
+use bench_util::{bench, header, push, quick, soft};
 
 fn main() {
     let backend = NativeBackend::new();
@@ -131,6 +131,117 @@ fn main() {
             backend.rollout(&prog, &state, steps).unwrap();
         });
         push(&mut rows, "nca/native-depthwise", &native, updates);
+    }
+
+    // ------------------------------------- SIMD vs scalar dispatch
+    // The three vectorized f32 hot loops against their always-compiled
+    // scalar references (bit-identical output — `native_simd_props`
+    // proves it; these rows measure what the identity costs/buys).
+    {
+        use cax::backend::native::lenia::{
+            update_stage, update_stage_scalar, LeniaKernel,
+        };
+        use cax::backend::native::simd;
+
+        header(&format!("SIMD vs scalar f32 kernels — dispatch: {}",
+                        simd::status()));
+
+        // Lenia growth/update stage (shared by the spectral path):
+        // 3 kernels mixing into one channel.
+        let hw = if quick() { 128 * 128 } else { 256 * 256 };
+        let reps = if quick() { 10 } else { 40 };
+        let wk = [0.5f32, 0.25, 0.25];
+        let gs_state = rng.vec_f32(hw);
+        let growths = rng.vec_f32(wk.len() * hw);
+        let mut next = vec![0.0f32; hw];
+        let dispatch = bench(warm, iters, || {
+            for _ in 0..reps {
+                update_stage(&gs_state, &growths, hw, &wk, 0.1, &mut next);
+            }
+        });
+        let scalar = bench(warm, iters, || {
+            for _ in 0..reps {
+                update_stage_scalar(&gs_state, &growths, hw, &wk, 0.1,
+                                    &mut next);
+            }
+        });
+        let updates = (hw * reps) as f64;
+        push(&mut rows, "lenia-growth/simd-dispatch", &dispatch, updates);
+        push(&mut rows, "lenia-growth/scalar", &scalar, updates);
+        let growth_speedup = scalar.median / dispatch.median;
+        println!("  speedup: dispatching growth stage is \
+                  {growth_speedup:.1}x vs scalar");
+
+        // Lenia sparse-tap convolution.
+        let (size, radius, steps) =
+            if quick() { (96, 8, 2) } else { (192, 10, 4) };
+        let kernel = LeniaKernel::new(LeniaParams {
+            radius,
+            ..Default::default()
+        });
+        let board0 = rng.vec_f32(size * size);
+        let conv_dispatch = bench(warm, iters, || {
+            let mut board = board0.clone();
+            let mut scratch = vec![0.0f32; board.len()];
+            kernel.rollout(&mut board, &mut scratch, size, size, steps);
+        });
+        let conv_scalar = bench(warm, iters, || {
+            let mut board = board0.clone();
+            let mut scratch = vec![0.0f32; board.len()];
+            for _ in 0..steps {
+                kernel.step_scalar(&board, &mut scratch, size, size);
+                board.copy_from_slice(&scratch);
+            }
+        });
+        let updates = (size * size * steps) as f64;
+        push(&mut rows, "lenia-sparse/simd-dispatch", &conv_dispatch,
+             updates);
+        push(&mut rows, "lenia-sparse/scalar", &conv_scalar, updates);
+        println!("  speedup: dispatching sparse-tap is {:.1}x vs scalar",
+                 conv_scalar.median / conv_dispatch.median);
+
+        // NCA perceive + MLP cell.
+        let (nh, nw, c, hidden, nsteps) = if quick() {
+            (32, 32, 8, 32, 2)
+        } else {
+            (64, 64, 16, 64, 4)
+        };
+        let model = NcaModel::random(c, hidden, &mut rng);
+        let nca_board = rng.vec_f32(nh * nw * c);
+        let nca_dispatch = bench(warm, iters, || {
+            let mut board = nca_board.clone();
+            let mut scratch = vec![0.0f32; board.len()];
+            model.rollout(&mut board, &mut scratch, nh, nw, nsteps);
+        });
+        let nca_scalar = bench(warm, iters, || {
+            let mut board = nca_board.clone();
+            let mut scratch = vec![0.0f32; board.len()];
+            for _ in 0..nsteps {
+                model.step_frozen_scalar(&board, &mut scratch, nh, nw, 0);
+                board.copy_from_slice(&scratch);
+            }
+        });
+        let updates = (nh * nw * nsteps) as f64;
+        push(&mut rows, "nca-cell/simd-dispatch", &nca_dispatch, updates);
+        push(&mut rows, "nca-cell/scalar", &nca_scalar, updates);
+        let nca_speedup = nca_scalar.median / nca_dispatch.median;
+        println!("  speedup: dispatching NCA cell is {nca_speedup:.1}x \
+                  vs scalar");
+
+        // Acceptance: the AVX2 growth stage and NCA cell are >= 2x
+        // their scalar forms (only meaningful when avx2 dispatched and
+        // iteration counts are not trimmed).
+        if simd::active() && !quick() {
+            let msg = format!(
+                "SIMD acceptance: growth {growth_speedup:.2}x, nca \
+                 {nca_speedup:.2}x (target >= 2x each)"
+            );
+            println!("  {msg}");
+            if growth_speedup < 2.0 || nca_speedup < 2.0 {
+                assert!(soft(), "{msg}");
+                println!("  (soft mode: not failing on the 2x target)");
+            }
+        }
     }
 
     // Fused XLA rows ride along when the build + artifacts allow it.

@@ -29,12 +29,22 @@
 //! [`select_path`] picks between the two per (radius, board): sparse-tap
 //! below the measured crossover, FFT above it.
 //!
+//! Both paths carry an AVX2 SIMD lane ([`super::simd`]): the sparse-tap
+//! convolution vectorizes 8 output cells per vector (one lane = one
+//! cell, scalar tap order per lane), and the shared growth/update stage
+//! vectorizes the kernel-weight mix + residual + clamp the same way.
+//! The growth `exp` stays scalar per lane, so SIMD results are
+//! bit-identical to the scalar code — `bit_exact_with_naive_oracle`
+//! below holds in both modes. `CAX_SIMD=off` forces scalar.
+//!
 //! Batch elements are independent; the backend parallelizes across
 //! them with the worker pool in both paths.
 
 use anyhow::{bail, Result};
 
 use super::fft::{Complex, Fft2};
+#[cfg(target_arch = "x86_64")]
+use super::simd::LANES;
 use super::wrap_shift;
 use crate::automata::lenia::{growth, ring_kernel, LeniaParams, LeniaWorld};
 
@@ -72,12 +82,30 @@ impl LeniaKernel {
     }
 
     /// One step on a single `[H, W]` board held as a row-major slice.
+    ///
+    /// Dispatches to the AVX2 path when [`super::simd::active`] and the
+    /// board has a full 8-lane wrap-free interior; otherwise (and for
+    /// the wrapped edge columns of the SIMD path itself) runs the
+    /// scalar per-cell code. Both produce bit-identical boards.
     pub fn step(&self, state: &[f32], next: &mut [f32], h: usize, w: usize) {
         debug_assert_eq!(state.len(), h * w);
         debug_assert_eq!(next.len(), h * w);
-        let r = self.params.radius;
-        let (mu, sigma, dt) = (self.params.mu, self.params.sigma,
-                               self.params.dt);
+        #[cfg(target_arch = "x86_64")]
+        if super::simd::active() && w >= 2 * self.params.radius + LANES {
+            // SAFETY: active() verified AVX2 at runtime.
+            unsafe { self.step_avx2(state, next, h, w) };
+            return;
+        }
+        self.step_scalar(state, next, h, w);
+    }
+
+    /// The always-compiled scalar step — the reference the SIMD path
+    /// must match bit for bit (the differential suite in
+    /// `tests/native_simd_props.rs` compares against it directly).
+    pub fn step_scalar(&self, state: &[f32], next: &mut [f32], h: usize,
+                       w: usize) {
+        debug_assert_eq!(state.len(), h * w);
+        debug_assert_eq!(next.len(), h * w);
         let mut ty = 0;
         while ty < h {
             let y_end = (ty + TILE).min(h);
@@ -86,20 +114,83 @@ impl LeniaKernel {
                 let x_end = (tx + TILE).min(w);
                 for y in ty..y_end {
                     for x in tx..x_end {
-                        let mut u = 0.0f32;
-                        for &(ky, kx, weight) in &self.taps {
-                            let sy = wrap_shift(y, h, r, ky);
-                            let sx = wrap_shift(x, w, r, kx);
-                            u += weight * state[sy * w + sx];
-                        }
-                        let g = growth(u, mu, sigma);
-                        let v = state[y * w + x] + dt * g;
-                        next[y * w + x] = v.clamp(0.0, 1.0);
+                        self.cell_scalar(state, next, h, w, y, x);
                     }
                 }
                 tx = x_end;
             }
             ty = y_end;
+        }
+    }
+
+    /// One output cell, scalar — the single copy of the per-cell math:
+    /// the tiled sweep above and the SIMD path's edge columns both call
+    /// it, so their accumulation order can never drift apart.
+    #[inline]
+    fn cell_scalar(&self, state: &[f32], next: &mut [f32], h: usize,
+                   w: usize, y: usize, x: usize) {
+        let r = self.params.radius;
+        let mut u = 0.0f32;
+        for &(ky, kx, weight) in &self.taps {
+            let sy = wrap_shift(y, h, r, ky);
+            let sx = wrap_shift(x, w, r, kx);
+            u += weight * state[sy * w + sx];
+        }
+        let g = growth(u, self.params.mu, self.params.sigma);
+        let v = state[y * w + x] + self.params.dt * g;
+        next[y * w + x] = v.clamp(0.0, 1.0);
+    }
+
+    /// AVX2 step: 8 consecutive output cells per vector across the
+    /// wrap-free interior columns `[r, w - r)`, scalar on the wrapped
+    /// edges. Lane `i` accumulates cell `x0 + i` in the exact scalar
+    /// tap order (`mul` + `add`, no FMA), and the growth mapping runs
+    /// scalar per lane, so the result is bit-identical to
+    /// [`step_scalar`](Self::step_scalar) — NaNs and denormals
+    /// included.
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available (guaranteed by [`super::simd::active`]).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn step_avx2(&self, state: &[f32], next: &mut [f32], h: usize,
+                        w: usize) {
+        use std::arch::x86_64::*;
+        let r = self.params.radius;
+        let (mu, sigma, dt) = (self.params.mu, self.params.sigma,
+                               self.params.dt);
+        debug_assert!(w >= 2 * r + LANES);
+        // Columns in [lo, hi) never wrap in x for any tap:
+        // x + r - kx stays in [x - r, x + r] ⊆ [0, w - 1].
+        let (lo, hi) = (r, w - r);
+        for y in 0..h {
+            for x in 0..lo {
+                self.cell_scalar(state, next, h, w, y, x);
+            }
+            let mut x0 = lo;
+            while x0 + LANES <= hi {
+                let mut u = _mm256_setzero_ps();
+                for &(ky, kx, weight) in &self.taps {
+                    let sy = wrap_shift(y, h, r, ky);
+                    let base = sy * w + (x0 + r - kx);
+                    let sv = _mm256_loadu_ps(state[base..].as_ptr());
+                    u = _mm256_add_ps(
+                        u, _mm256_mul_ps(_mm256_set1_ps(weight), sv));
+                }
+                let mut us = [0.0f32; LANES];
+                _mm256_storeu_ps(us.as_mut_ptr(), u);
+                for (i, &ui) in us.iter().enumerate() {
+                    let x = x0 + i;
+                    let g = growth(ui, mu, sigma);
+                    let v = state[y * w + x] + dt * g;
+                    next[y * w + x] = v.clamp(0.0, 1.0);
+                }
+                x0 += LANES;
+            }
+            for x in x0..w {
+                self.cell_scalar(state, next, h, w, y, x);
+            }
         }
     }
 
@@ -321,15 +412,13 @@ impl LeniaFft {
             }
         }
         let dt = self.world.dt;
+        let mut wk = vec![0.0f32; self.world.kernels.len()];
         for ch in 0..c {
-            for i in 0..hw {
-                let mut acc = 0.0f32;
-                for (k, spec) in self.world.kernels.iter().enumerate() {
-                    acc += spec.weights[ch] * scratch.growths[k * hw + i];
-                }
-                next[ch * hw + i] =
-                    (state[ch * hw + i] + dt * acc).clamp(0.0, 1.0);
+            for (k, spec) in self.world.kernels.iter().enumerate() {
+                wk[k] = spec.weights[ch];
             }
+            update_stage(&state[ch * hw..(ch + 1) * hw], &scratch.growths,
+                         hw, &wk, dt, &mut next[ch * hw..(ch + 1) * hw]);
         }
     }
 
@@ -347,6 +436,82 @@ impl LeniaFft {
             self.step_with(board, &mut next, &mut scratch);
             board.copy_from_slice(&next);
         }
+    }
+}
+
+// ------------------------------------------------- growth/update stage
+
+/// The shared f32 update stage of the spectral path for one channel:
+/// `next[i] = clamp(state[i] + dt * sum_k wk[k] * growths[k*hw + i])`.
+/// Dispatches to AVX2 when [`super::simd::active`]; bit-identical to
+/// [`update_stage_scalar`] either way (the growth mapping itself — the
+/// `exp` — happens before this stage and stays scalar).
+pub fn update_stage(state: &[f32], growths: &[f32], hw: usize, wk: &[f32],
+                    dt: f32, next: &mut [f32]) {
+    debug_assert_eq!(state.len(), hw);
+    debug_assert_eq!(next.len(), hw);
+    debug_assert!(growths.len() >= wk.len() * hw);
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::active() && hw >= LANES {
+        // SAFETY: active() verified AVX2 at runtime.
+        unsafe { update_stage_avx2(state, growths, hw, wk, dt, next) };
+        return;
+    }
+    update_stage_scalar(state, growths, hw, wk, dt, next);
+}
+
+/// Always-compiled scalar form of [`update_stage`] — the bit-identity
+/// reference for the differential suite.
+pub fn update_stage_scalar(state: &[f32], growths: &[f32], hw: usize,
+                           wk: &[f32], dt: f32, next: &mut [f32]) {
+    for (i, (n, &s)) in next.iter_mut().zip(state).enumerate() {
+        *n = update_cell_scalar(s, growths, hw, i, wk, dt);
+    }
+}
+
+/// One cell of the update stage — shared by the scalar sweep and the
+/// SIMD path's ragged tail.
+#[inline]
+fn update_cell_scalar(state_i: f32, growths: &[f32], hw: usize, i: usize,
+                      wk: &[f32], dt: f32) -> f32 {
+    let mut acc = 0.0f32;
+    for (k, &wkk) in wk.iter().enumerate() {
+        acc += wkk * growths[k * hw + i];
+    }
+    (state_i + dt * acc).clamp(0.0, 1.0)
+}
+
+/// AVX2 update stage: 8 cells per vector, scalar tap order per lane.
+/// The clamp is `min(1, max(0, v))` with the constant as the *first*
+/// operand so a NaN `v` propagates and `-0.0` survives — exactly the
+/// scalar `f32::clamp` semantics, bit for bit.
+///
+/// # Safety
+///
+/// AVX2 must be available (guaranteed by [`super::simd::active`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn update_stage_avx2(state: &[f32], growths: &[f32], hw: usize,
+                            wk: &[f32], dt: f32, next: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let zero = _mm256_setzero_ps();
+    let one = _mm256_set1_ps(1.0);
+    let dtv = _mm256_set1_ps(dt);
+    let mut i = 0usize;
+    while i + LANES <= hw {
+        let mut acc = _mm256_setzero_ps();
+        for (k, &wkk) in wk.iter().enumerate() {
+            let g = _mm256_loadu_ps(growths[k * hw + i..].as_ptr());
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(wkk), g));
+        }
+        let sv = _mm256_loadu_ps(state[i..].as_ptr());
+        let v = _mm256_add_ps(sv, _mm256_mul_ps(dtv, acc));
+        let v = _mm256_min_ps(one, _mm256_max_ps(zero, v));
+        _mm256_storeu_ps(next[i..].as_mut_ptr(), v);
+        i += LANES;
+    }
+    for i in i..hw {
+        next[i] = update_cell_scalar(state[i], growths, hw, i, wk, dt);
     }
 }
 

@@ -12,6 +12,7 @@
 //! - [`nca_grad`]: reverse-mode BPTT through the NCA cell (training),
 //!   parametric over the same grid geometries.
 //! - [`opt`]: Adam, gradient clipping and the lr schedule.
+//! - [`simd`]: runtime AVX2 dispatch for the f32 hot loops.
 //! - [`train`]: [`train::NativeTrainBackend`] — the native train/eval
 //!   programs (growing, MNIST, 1D-ARC) behind the
 //!   [`crate::backend::ProgramBackend`] contract.
@@ -20,6 +21,34 @@
 //! rollout and parallelizes across batch elements with the scoped
 //! worker pool, so `rollout(prog, state, T)` costs far less than `T`
 //! boundary crossings.
+//!
+//! # SIMD dispatch contract
+//!
+//! The f32 hot loops — the Lenia sparse-tap convolution, the shared
+//! Lenia growth/update stage, and the NCA perceive + MLP cell — carry
+//! explicit AVX2 paths behind a single runtime switch,
+//! [`simd::active`]: probed once per process
+//! (`is_x86_feature_detected!("avx2")`), overridable with
+//! `CAX_SIMD=off`, and logged through [`crate::obs`] logging the first
+//! time a backend is built (`CAX_LOG=info` to see it). The contract
+//! every SIMD path obeys:
+//!
+//! - **bit identity** — one vector lane computes one output cell in
+//!   the exact scalar accumulation order (`mul` + `add` pairs, never
+//!   FMA), transcendentals (`exp` in the Lenia growth) stay scalar per
+//!   lane, and wrapped boundary cells run the unchanged scalar code.
+//!   SIMD on/off therefore never changes a board, a NaN payload, a
+//!   denormal, or a training gradient (`nca_grad` replays
+//!   pre-activations scalar over SIMD forwards and stays exact).
+//! - **always-compiled fallback** — the scalar kernels remain the
+//!   source of truth (`step_scalar`, `step_frozen_scalar`,
+//!   `update_stage_scalar`) and run on non-x86_64 targets, on CPUs
+//!   without AVX2, under `CAX_SIMD=off`, and on boards too narrow for
+//!   a full 8-lane interior block.
+//!
+//! `tests/native_simd_props.rs` holds the differential fuzz battery;
+//! `benches/fig3_native.rs` / `fig3_lenia.rs` report SIMD-vs-scalar
+//! rows.
 
 pub mod bits;
 pub mod eca;
@@ -29,6 +58,7 @@ pub mod life;
 pub mod nca;
 pub mod nca_grad;
 pub mod opt;
+pub mod simd;
 pub mod train;
 
 use anyhow::{bail, ensure, Result};
@@ -89,16 +119,26 @@ pub struct NativeBackend {
 impl NativeBackend {
     /// Backend sized to the machine.
     pub fn new() -> NativeBackend {
+        // Resolve (and log) the SIMD dispatch decision eagerly so it
+        // lands at startup, not in the middle of the first launch.
+        simd::active();
         NativeBackend { pool: WorkerPool::new() }
     }
 
     /// Backend with an explicit worker count (1 = sequential).
     pub fn with_threads(threads: usize) -> NativeBackend {
+        simd::active();
         NativeBackend { pool: WorkerPool::with_threads(threads) }
     }
 
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Which f32 kernel path this backend's launches take: `"avx2"` or
+    /// `"scalar (...)"` with the reason (see [`simd::status`]).
+    pub fn simd_status(&self) -> &'static str {
+        simd::status()
     }
 
     fn eca_rollout(&self, rule: &crate::automata::WolframRule,

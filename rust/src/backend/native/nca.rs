@@ -12,12 +12,17 @@
 //!   support — the growing/MNIST cell. The kernel walks the grid
 //!   row-by-row with precomputed wrapped row indices, so the three
 //!   input rows a sweep touches stay in cache — the
-//!   depthwise-conv/update analogue of the tiled Lenia path.
+//!   depthwise-conv/update analogue of the tiled Lenia path. On AVX2
+//!   hosts the interior columns run 8 cells per vector (one lane = one
+//!   cell, scalar accumulation order — see [`super::simd`]), bit-exact
+//!   with the scalar cell.
 //! - [`Grid::D1`]: identity + gradient + laplacian over a wrapped
 //!   3-tap support — the 1D-ARC cell (§5.3). Three features per
 //!   channel in both cases, so the `[3C, hidden]` weight layout (and
 //!   every checkpoint/optimizer shape) is dimension-independent.
 
+#[cfg(target_arch = "x86_64")]
+use super::simd::LANES;
 use super::wrap3;
 use crate::util::rng::Rng;
 
@@ -141,8 +146,27 @@ impl NcaModel {
     /// residual delta is zeroed, so they pass through unchanged (the
     /// self-classifying-MNIST input channel, the 1D-ARC one-hot task
     /// encoding). They still feed perception.
+    ///
+    /// Dispatches to the AVX2 row kernel when [`super::simd::active`]
+    /// and the row has a full 8-lane wrap-free interior; the result is
+    /// bit-identical to [`step_frozen_scalar`](Self::step_frozen_scalar)
+    /// either way, so the BPTT recompute in [`super::nca_grad`] (which
+    /// replays pre-activations scalar) stays exact over SIMD forwards.
     pub fn step_frozen(&self, state: &[f32], next: &mut [f32], h: usize,
                        w: usize, frozen: usize) {
+        #[cfg(target_arch = "x86_64")]
+        if super::simd::active() && w >= LANES + 2 {
+            // SAFETY: active() verified AVX2 at runtime.
+            unsafe { self.step_frozen_avx2(state, next, h, w, frozen) };
+            return;
+        }
+        self.step_frozen_scalar(state, next, h, w, frozen);
+    }
+
+    /// The always-compiled scalar forward — the bit-identity reference
+    /// for the differential suite in `tests/native_simd_props.rs`.
+    pub fn step_frozen_scalar(&self, state: &[f32], next: &mut [f32],
+                              h: usize, w: usize, frozen: usize) {
         let c = self.channels;
         debug_assert!(frozen <= c);
         debug_assert_eq!(state.len(), h * w * c);
@@ -153,6 +177,123 @@ impl NcaModel {
         for y in 0..h {
             let rows = wrap3(y, h);
             for x in 0..w {
+                let cols = wrap3(x, w);
+                perceive_cell(state, w, c, &rows, &cols, &mut perception);
+                self.cell_update(state, next, (y * w + x) * c, &perception,
+                                 &mut hidden, frozen);
+            }
+        }
+    }
+
+    /// AVX2 forward: 8 consecutive cells of a row per vector across the
+    /// wrap-free interior columns `[1, w - 1)`, scalar on the wrapped
+    /// edge columns. Lane `i` is cell `x0 + i`; perception (strided
+    /// gathers over the channels-last board), the MLP (broadcast
+    /// weights, scalar accumulation order per lane, `mul` + `add`, no
+    /// FMA) and the residual all match the scalar cell exactly, and the
+    /// ReLU `max(acc, 0)` keeps the accumulator as the first operand so
+    /// a NaN accumulator folds to `0.0` exactly like `f32::max`. (The
+    /// one state `maxNum` leaves unspecified — an exactly `-0.0`
+    /// accumulator — is unreachable here: `b1` is `+0.0` in every
+    /// in-tree constructor and IEEE addition from a `+0.0` start never
+    /// produces `-0.0`.)
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available (guaranteed by [`super::simd::active`]).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn step_frozen_avx2(&self, state: &[f32], next: &mut [f32],
+                               h: usize, w: usize, frozen: usize) {
+        use std::arch::x86_64::*;
+
+        use super::simd::x86::{load8_strided, store8_strided};
+        let c = self.channels;
+        debug_assert!(frozen <= c);
+        debug_assert_eq!(state.len(), h * w * c);
+        debug_assert_eq!(next.len(), state.len());
+        debug_assert!(w >= LANES + 2);
+        let mut perception = vec![0.0f32; 3 * c];
+        let mut hidden = vec![0.0f32; self.hidden];
+        let zero = _mm256_setzero_ps();
+        let dtv = _mm256_set1_ps(self.dt);
+        // Per-lane-block SoA: perception vectors (3 per channel) and
+        // hidden activations, one __m256 per feature.
+        let mut pvec = vec![zero; 3 * c];
+        let mut hvec = vec![zero; self.hidden];
+
+        for y in 0..h {
+            let rows = wrap3(y, h);
+            // Wrapped edge columns x = 0 and x in [x0_end, w) run the
+            // unchanged scalar cell.
+            {
+                let cols = wrap3(0, w);
+                perceive_cell(state, w, c, &rows, &cols, &mut perception);
+                self.cell_update(state, next, (y * w) * c, &perception,
+                                 &mut hidden, frozen);
+            }
+            let mut x0 = 1usize;
+            while x0 + LANES <= w - 1 {
+                // Perceive: id / Sobel-x / Sobel-y per channel, taps in
+                // the scalar (ky outer, kx inner) order per lane.
+                for ch in 0..c {
+                    let mut gx = zero;
+                    let mut gy = zero;
+                    for (ky, &sy) in rows.iter().enumerate() {
+                        for kx in 0..3 {
+                            let base = (sy * w + x0 + kx - 1) * c + ch;
+                            let v = load8_strided(state, base, c);
+                            gx = _mm256_add_ps(
+                                gx,
+                                _mm256_mul_ps(
+                                    _mm256_set1_ps(SOBEL_X[ky][kx]), v));
+                            gy = _mm256_add_ps(
+                                gy,
+                                _mm256_mul_ps(
+                                    _mm256_set1_ps(SOBEL_X[kx][ky]), v));
+                        }
+                    }
+                    let base = (y * w + x0) * c + ch;
+                    pvec[ch * 3] = load8_strided(state, base, c);
+                    pvec[ch * 3 + 1] = gx;
+                    pvec[ch * 3 + 2] = gy;
+                }
+                // MLP hidden layer: relu(p . W1 + b1), scalar k order.
+                for (j, slot) in hvec.iter_mut().enumerate() {
+                    let mut acc = _mm256_set1_ps(self.b1[j]);
+                    for (k, &p) in pvec.iter().enumerate() {
+                        acc = _mm256_add_ps(
+                            acc,
+                            _mm256_mul_ps(
+                                p,
+                                _mm256_set1_ps(
+                                    self.w1[k * self.hidden + j])));
+                    }
+                    *slot = _mm256_max_ps(acc, zero);
+                }
+                // Residual update per channel; frozen channels store
+                // the state lanes unchanged.
+                for ch in 0..c {
+                    let base = (y * w + x0) * c + ch;
+                    let sv = load8_strided(state, base, c);
+                    let out = if ch < frozen {
+                        sv
+                    } else {
+                        let mut delta = zero;
+                        for (j, &hv) in hvec.iter().enumerate() {
+                            delta = _mm256_add_ps(
+                                delta,
+                                _mm256_mul_ps(
+                                    hv,
+                                    _mm256_set1_ps(self.w2[j * c + ch])));
+                        }
+                        _mm256_add_ps(sv, _mm256_mul_ps(dtv, delta))
+                    };
+                    store8_strided(next, base, c, out);
+                }
+                x0 += LANES;
+            }
+            for x in x0..w {
                 let cols = wrap3(x, w);
                 perceive_cell(state, w, c, &rows, &cols, &mut perception);
                 self.cell_update(state, next, (y * w + x) * c, &perception,

@@ -1,0 +1,160 @@
+//! Runtime SIMD dispatch for the native f32 kernels.
+//!
+//! The three scalar f32 hot loops — the Lenia sparse-tap convolution,
+//! the shared Lenia growth/update stage, and the NCA perceive + MLP
+//! cell — carry an explicit AVX2 path (stable `target_feature`
+//! intrinsics, no nightly `std::simd`). The scalar code stays compiled
+//! everywhere and remains the source of truth; the SIMD paths are a
+//! pure re-arrangement of the same arithmetic.
+//!
+//! # The dispatch contract
+//!
+//! - **One lane = one output cell.** Every vector lane computes one
+//!   cell with the *exact* scalar accumulation order (same tap order,
+//!   same `mul`-then-`add` pairs, never FMA — fused rounding would
+//!   change bits). SIMD and scalar therefore produce bit-identical
+//!   boards, including NaN payloads and denormals, and the existing
+//!   bit-identity / thread-determinism suites hold in both modes.
+//! - **Transcendentals stay scalar.** `exp` inside
+//!   [`crate::automata::lenia::growth`] has no lane-exact vector form,
+//!   so the growth mapping runs scalar per lane on the vector-computed
+//!   potentials.
+//! - **Edges stay scalar.** Wrapped boundary columns (and boards too
+//!   narrow for a full 8-lane interior block) run the unchanged scalar
+//!   per-cell code.
+//!
+//! # Detection
+//!
+//! [`active`] probes the CPU once per process (cached), honours the
+//! `CAX_SIMD=off` escape hatch, and logs the decision through
+//! [`crate::obs`] logging (`CAX_LOG=info`). Non-x86_64 targets always
+//! report scalar; the intrinsics are not even compiled there.
+
+use std::sync::OnceLock;
+
+/// f32 lanes per vector in the AVX2 paths (256 bits / 32 bits).
+pub const LANES: usize = 8;
+
+/// `(simd active, human-readable reason)` — computed once.
+fn detect() -> (bool, &'static str) {
+    if matches!(std::env::var("CAX_SIMD").as_deref(), Ok("off") | Ok("0")) {
+        return (false, "scalar (CAX_SIMD=off)");
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            (true, "avx2")
+        } else {
+            (false, "scalar (cpu lacks avx2)")
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        (false, "scalar (non-x86_64)")
+    }
+}
+
+fn cached() -> (bool, &'static str) {
+    static STATUS: OnceLock<(bool, &'static str)> = OnceLock::new();
+    *STATUS.get_or_init(|| {
+        let s = detect();
+        crate::log_info!("native simd dispatch: {}", s.1);
+        s
+    })
+}
+
+/// Whether the AVX2 paths are taken. Detected once per process:
+/// x86_64 + runtime AVX2 + `CAX_SIMD` not set to `off`/`0`.
+pub fn active() -> bool {
+    cached().0
+}
+
+/// Human-readable dispatch status: `"avx2"`, or `"scalar (...)"` with
+/// the reason. Stable strings — surfaced by `cax serve` startup and
+/// the bench reports.
+pub fn status() -> &'static str {
+    cached().1
+}
+
+/// Strided 8-lane load/store helpers shared by the AVX2 kernels in
+/// [`super::lenia`] and [`super::nca`]. Channels-last NCA boards put 8
+/// consecutive cells `stride = channels` floats apart, so lanes are
+/// gathered/scattered with scalar moves; contiguous Lenia rows use
+/// plain unaligned vector loads at the call sites.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Lane `i` = `data[base + i * stride]` for `i` in `0..8`.
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure AVX2 is available ([`super::active`]); the
+    /// slice accesses themselves are bounds-checked.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    pub unsafe fn load8_strided(data: &[f32], base: usize, stride: usize)
+                                -> __m256 {
+        _mm256_set_ps(
+            data[base + 7 * stride],
+            data[base + 6 * stride],
+            data[base + 5 * stride],
+            data[base + 4 * stride],
+            data[base + 3 * stride],
+            data[base + 2 * stride],
+            data[base + stride],
+            data[base],
+        )
+    }
+
+    /// `data[base + i * stride] = lane i` for `i` in `0..8`.
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure AVX2 is available ([`super::active`]); the
+    /// slice accesses themselves are bounds-checked.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    pub unsafe fn store8_strided(data: &mut [f32], base: usize,
+                                 stride: usize, v: __m256) {
+        let mut tmp = [0.0f32; 8];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), v);
+        for (i, t) in tmp.iter().enumerate() {
+            data[base + i * stride] = *t;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detection_is_cached_and_consistent() {
+        let first = (active(), status());
+        let second = (active(), status());
+        assert_eq!(first, second);
+        if first.0 {
+            assert_eq!(first.1, "avx2");
+        } else {
+            assert!(first.1.starts_with("scalar"), "got {:?}", first.1);
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn strided_helpers_roundtrip() {
+        if !active() {
+            return; // nothing to probe without avx2
+        }
+        let src: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut dst = vec![0.0f32; 64];
+        unsafe {
+            let v = x86::load8_strided(&src, 3, 4);
+            x86::store8_strided(&mut dst, 3, 4, v);
+        }
+        for i in 0..8 {
+            assert_eq!(dst[3 + i * 4], src[3 + i * 4]);
+        }
+    }
+}

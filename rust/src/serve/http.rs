@@ -338,7 +338,18 @@ fn parse_body_json(body: &[u8]) -> Result<Json> {
 /// allocates only the registry-lookup key.
 fn route(ctx: &Ctx, req: &Request) -> Response {
     let start = Instant::now();
-    let (label, resp) = route_inner(ctx, req);
+    // A panicking handler answers ITS request with one 500 and leaves
+    // the connection (and, via the poison-recovering locks, the
+    // registry) serviceable — never a process-wide cascade.
+    let (label, resp) = match std::panic::catch_unwind(
+        std::panic::AssertUnwindSafe(|| route_inner(ctx, req)),
+    ) {
+        Ok(routed) => routed,
+        Err(_) => (
+            "http_panic",
+            Response::error(500, "internal error: handler panicked"),
+        ),
+    };
     let dur = start.elapsed();
     if obs::recording() {
         ctx.coalescer
@@ -393,7 +404,7 @@ fn route_inner(ctx: &Ctx, req: &Request) -> (&'static str, Response) {
 }
 
 fn handle_healthz(ctx: &Ctx) -> Response {
-    let sessions = ctx.coalescer.registry().lock().expect("registry").len();
+    let sessions = super::lock_recover(ctx.coalescer.registry()).len();
     Response::json(
         200,
         &obj(vec![
@@ -405,12 +416,14 @@ fn handle_healthz(ctx: &Ctx) -> Response {
 }
 
 /// ns-recorded latency histogram as a `{count, mean_ms, p50_ms,
-/// p95_ms, p99_ms, max_ms}` JSON object.
+/// p95_ms, p99_ms, max_ms}` JSON object. Counters stay u64 all the
+/// way into JSON (`From<u64> for Json`) — casting through `usize`
+/// would silently truncate them at 2^32 on 32-bit targets.
 fn hist_ms(snap: &HistogramSnapshot) -> Json {
     let max_ms =
         if snap.count == 0 { 0.0 } else { snap.max as f64 / 1e6 };
     obj(vec![
-        ("count", Json::from(snap.count as usize)),
+        ("count", Json::from(snap.count)),
         ("mean_ms", Json::Num(snap.mean() / 1e6)),
         ("p50_ms", Json::Num(snap.quantile(0.5) / 1e6)),
         ("p95_ms", Json::Num(snap.quantile(0.95) / 1e6)),
@@ -421,9 +434,9 @@ fn hist_ms(snap: &HistogramSnapshot) -> Json {
 
 /// Raw-valued histogram (batch sizes, queue depths) as JSON.
 fn hist_raw(snap: &HistogramSnapshot) -> Json {
-    let max = if snap.count == 0 { 0 } else { snap.max as usize };
+    let max = if snap.count == 0 { 0u64 } else { snap.max };
     obj(vec![
-        ("count", Json::from(snap.count as usize)),
+        ("count", Json::from(snap.count)),
         ("mean", Json::Num(snap.mean())),
         ("p50", Json::Num(snap.quantile(0.5))),
         ("max", Json::from(max)),
@@ -432,17 +445,16 @@ fn hist_raw(snap: &HistogramSnapshot) -> Json {
 
 fn handle_stats(ctx: &Ctx) -> Response {
     let stats = ctx.coalescer.stats();
-    let load = |c: &std::sync::atomic::AtomicU64| {
-        c.load(Ordering::Relaxed) as usize
-    };
+    let load =
+        |c: &std::sync::atomic::AtomicU64| c.load(Ordering::Relaxed);
     let session_steps = load(&stats.session_steps);
     let secs = ctx.coalescer.uptime_secs();
     let families: Vec<(&str, Json)> = stats
         .family_requests()
         .into_iter()
-        .map(|(f, n)| (f, Json::from(n as usize)))
+        .map(|(f, n)| (f, Json::from(n)))
         .collect();
-    let registry = ctx.coalescer.registry().lock().expect("registry");
+    let registry = super::lock_recover(ctx.coalescer.registry());
     Response::json(
         200,
         &obj(vec![
@@ -468,15 +480,10 @@ fn handle_stats(ctx: &Ctx) -> Response {
             (
                 "queue_depth",
                 obj(vec![
-                    (
-                        "now",
-                        Json::from(stats.queue_depth().get() as usize),
-                    ),
+                    ("now", Json::from(stats.queue_depth().get())),
                     (
                         "high_water",
-                        Json::from(
-                            stats.queue_depth().high_water() as usize,
-                        ),
+                        Json::from(stats.queue_depth().high_water()),
                     ),
                     (
                         "samples",
@@ -497,7 +504,7 @@ fn handle_metrics(ctx: &Ctx) -> Response {
     let load =
         |c: &std::sync::atomic::AtomicU64| c.load(Ordering::Relaxed);
     let sessions =
-        ctx.coalescer.registry().lock().expect("registry").len();
+        super::lock_recover(ctx.coalescer.registry()).len();
     let mut w = PromWriter::new();
     w.counter("serve_requests_total", load(&stats.requests));
     w.counter("serve_rejected_total", load(&stats.rejected));
@@ -533,7 +540,7 @@ fn handle_create(ctx: &Ctx, body: &[u8]) -> Response {
     };
     let created = {
         let mut registry =
-            ctx.coalescer.registry().lock().expect("registry");
+            super::lock_recover(ctx.coalescer.registry());
         registry.create(ctx.coalescer.backend(), spec.clone(), seed)
     };
     match created {
@@ -554,7 +561,7 @@ fn handle_create(ctx: &Ctx, body: &[u8]) -> Response {
 }
 
 fn handle_status(ctx: &Ctx, id: u64) -> Response {
-    let registry = ctx.coalescer.registry().lock().expect("registry");
+    let registry = super::lock_recover(ctx.coalescer.registry());
     if registry.is_busy(id) {
         return Response::error(
             503,
@@ -574,7 +581,7 @@ fn handle_status(ctx: &Ctx, id: u64) -> Response {
         &obj(vec![
             ("id", Json::from(fmt_id(id).as_str())),
             ("spec", session.spec.to_json()),
-            ("steps_done", Json::from(session.steps_done as usize)),
+            ("steps_done", Json::from(session.steps_done)),
             ("mean", Json::Num(mean)),
         ]),
     )
@@ -600,7 +607,7 @@ fn handle_step(ctx: &Ctx, id: u64, body: &[u8]) -> Response {
             200,
             &obj(vec![
                 ("id", Json::from(fmt_id(id).as_str())),
-                ("steps_done", Json::from(done.steps_done as usize)),
+                ("steps_done", Json::from(done.steps_done)),
                 ("batch", Json::from(done.batch)),
             ]),
         ),
@@ -615,7 +622,7 @@ fn handle_step(ctx: &Ctx, id: u64, body: &[u8]) -> Response {
 }
 
 fn handle_reset(ctx: &Ctx, id: u64) -> Response {
-    let mut registry = ctx.coalescer.registry().lock().expect("registry");
+    let mut registry = super::lock_recover(ctx.coalescer.registry());
     match registry.reset(ctx.coalescer.backend(), id) {
         Ok(()) => Response::json(
             200,
@@ -632,7 +639,7 @@ fn handle_reset(ctx: &Ctx, id: u64) -> Response {
 }
 
 fn handle_destroy(ctx: &Ctx, id: u64) -> Response {
-    let mut registry = ctx.coalescer.registry().lock().expect("registry");
+    let mut registry = super::lock_recover(ctx.coalescer.registry());
     match registry.destroy(id) {
         Ok(()) => Response::json(
             200,
@@ -647,7 +654,7 @@ fn handle_destroy(ctx: &Ctx, id: u64) -> Response {
 
 fn handle_snapshot(ctx: &Ctx, id: u64) -> Response {
     let (spec, board) = {
-        let registry = ctx.coalescer.registry().lock().expect("registry");
+        let registry = super::lock_recover(ctx.coalescer.registry());
         if registry.is_busy(id) {
             return Response::error(
                 503,
@@ -755,6 +762,16 @@ pub fn start_with(cfg: &ServeConfig, coalescer: Arc<Coalescer>)
     Ok(Server { addr, handle, coalescer, shutdown })
 }
 
+/// Decrements the live-connection count on drop, so the slot is
+/// released even if a connection thread unwinds from a panic.
+struct ActiveGuard(Arc<AtomicUsize>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 fn accept_loop(listener: TcpListener, ctx: Arc<Ctx>,
                scheduler: std::thread::JoinHandle<()>) {
     let active = Arc::new(AtomicUsize::new(0));
@@ -771,18 +788,21 @@ fn accept_loop(listener: TcpListener, ctx: Arc<Ctx>,
                     continue;
                 }
                 let ctx = Arc::clone(&ctx);
-                let active = Arc::clone(&active);
                 active.fetch_add(1, Ordering::SeqCst);
+                let slot = ActiveGuard(Arc::clone(&active));
                 let spawned = std::thread::Builder::new()
                     .name("cax-serve-conn".into())
                     .spawn(move || {
+                        let _slot = slot;
                         if let Err(e) = handle_connection(stream, &ctx) {
                             crate::log_debug!("serve connection: {e:#}");
                         }
-                        active.fetch_sub(1, Ordering::SeqCst);
                     });
-                if spawned.is_err() {
-                    active.fetch_sub(1, Ordering::SeqCst);
+                // On spawn failure the closure is dropped unrun, and
+                // dropping it drops the guard — the slot is released
+                // either way, so there is nothing to undo here.
+                if let Err(e) = spawned {
+                    crate::log_warn!("serve: spawn failed: {e}");
                 }
             }
             Err(e) if is_timeout(e.kind()) => {
@@ -852,11 +872,12 @@ pub fn run(cfg: &ServeConfig) -> Result<()> {
     let server = start(cfg)?;
     println!(
         "cax serve listening on {} ({} worker threads, max {} sessions, \
-         max batch {})",
+         max batch {}, simd {})",
         server.addr(),
         cfg.threads,
         cfg.max_sessions,
-        cfg.max_batch
+        cfg.max_batch,
+        crate::backend::native::simd::status()
     );
     std::io::stdout().flush().ok();
     server.join()

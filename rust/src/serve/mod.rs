@@ -53,7 +53,39 @@ pub use http::{run, start, Server};
 pub use scheduler::{Coalescer, ServeStats, StepDone, StepReply, StepRequest};
 pub use session::{ProgramSpec, Session, SessionRegistry, FAMILIES};
 
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
+
+/// Unwrap a lock/condvar acquisition, recovering from poisoning. A
+/// connection thread that panics while holding the registry or queue
+/// mutex poisons it; without recovery every *subsequent* request would
+/// panic on `.lock().expect(..)` — one broken handler becoming a
+/// process-wide cascade. The serve-layer invariants survive an unwound
+/// holder (registry mutations are single `BTreeMap` inserts/removes,
+/// queue pushes are single `VecDeque` ops), so the right response is
+/// one 500 for the panicked request and business as usual after.
+pub(crate) fn recover<G>(result: Result<G, PoisonError<G>>) -> G {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static LOGGED: AtomicBool = AtomicBool::new(false);
+    match result {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            if !LOGGED.swap(true, Ordering::Relaxed) {
+                crate::log_warn!(
+                    "serve: recovered a poisoned lock (a handler thread \
+                     panicked); continuing"
+                );
+            }
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// [`recover`]-ing `Mutex::lock` — the serve layer's only way to take
+/// its registry/queue locks.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    recover(m.lock())
+}
 
 /// Service knobs; the CLI maps `cax serve` flags onto these.
 #[derive(Clone, Debug)]

@@ -271,7 +271,7 @@ impl Coalescer {
 
     /// Number of requests waiting to be packed.
     pub fn pending(&self) -> usize {
-        self.queue.lock().expect("serve queue").pending.len()
+        super::lock_recover(&self.queue).pending.len()
     }
 
     /// Enqueue a step request, honoring backpressure and shutdown.
@@ -288,7 +288,7 @@ impl Coalescer {
                 self.max_steps
             );
         }
-        let mut q = self.queue.lock().expect("serve queue");
+        let mut q = super::lock_recover(&self.queue);
         if q.draining {
             self.stats.rejected_draining.inc();
             bail!("server is shutting down");
@@ -314,7 +314,7 @@ impl Coalescer {
     pub fn tick(&self) -> usize {
         let tick_start = Instant::now();
         let taken: Vec<StepRequest> = {
-            let mut q = self.queue.lock().expect("serve queue");
+            let mut q = super::lock_recover(&self.queue);
             let taken: Vec<StepRequest> = q.pending.drain(..).collect();
             self.stats.queue_depth.set(q.pending.len() as u64);
             taken
@@ -339,7 +339,7 @@ impl Coalescer {
         let mut deferred: Vec<StepRequest> = vec![];
         let mut served = 0usize;
         {
-            let registry = self.registry.lock().expect("serve registry");
+            let registry = super::lock_recover(&self.registry);
             for req in taken {
                 // Defensive: a session detached into a still-running
                 // launch (possible if tick() ever runs concurrently)
@@ -398,7 +398,7 @@ impl Coalescer {
             let mut live = Vec::with_capacity(group.reqs.len());
             {
                 let mut registry =
-                    self.registry.lock().expect("serve registry");
+                    super::lock_recover(&self.registry);
                 // A session may have been destroyed between planning
                 // and execution; those requests get an error, the rest
                 // still ride the launch.
@@ -457,7 +457,7 @@ impl Coalescer {
             };
             {
                 let mut registry =
-                    self.registry.lock().expect("serve registry");
+                    super::lock_recover(&self.registry);
                 for s in sessions {
                     registry.restore(s);
                 }
@@ -477,7 +477,7 @@ impl Coalescer {
         }
 
         if !deferred.is_empty() {
-            let mut q = self.queue.lock().expect("serve queue");
+            let mut q = super::lock_recover(&self.queue);
             for req in deferred.into_iter().rev() {
                 q.pending.push_front(req);
             }
@@ -494,14 +494,14 @@ impl Coalescer {
 
     /// Reject new work and let the run loop drain what is queued.
     pub fn shutdown(&self) {
-        let mut q = self.queue.lock().expect("serve queue");
+        let mut q = super::lock_recover(&self.queue);
         q.draining = true;
         self.work.notify_all();
     }
 
     /// Whether shutdown has been requested.
     pub fn draining(&self) -> bool {
-        self.queue.lock().expect("serve queue").draining
+        super::lock_recover(&self.queue).draining
     }
 
     /// The scheduler loop: sleep until work arrives, optionally wait
@@ -511,9 +511,9 @@ impl Coalescer {
     pub fn run(&self) {
         loop {
             {
-                let mut q = self.queue.lock().expect("serve queue");
+                let mut q = super::lock_recover(&self.queue);
                 while q.pending.is_empty() && !q.draining {
-                    q = self.work.wait(q).expect("serve queue");
+                    q = super::recover(self.work.wait(q));
                 }
                 if q.pending.is_empty() && q.draining {
                     return;

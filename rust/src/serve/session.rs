@@ -283,6 +283,25 @@ impl ProgramSpec {
     }
 }
 
+/// Refuse a board containing NaN or ±inf *at admission*. The f32
+/// substrates are NaN-propagating (a single poisoned cell spreads to
+/// its whole neighborhood every step and never washes out), so the only
+/// safe place to stop one is before it becomes backend-resident. Both
+/// [`SessionRegistry::create`] and [`SessionRegistry::reset`] run every
+/// candidate board through this; the serve layer maps the error to a
+/// 400.
+pub fn ensure_finite(board: &Tensor) -> Result<()> {
+    for (i, &v) in board.data().iter().enumerate() {
+        if !v.is_finite() {
+            bail!(
+                "initial board is non-finite at flat index {i} ({v}); \
+                 refusing the session"
+            );
+        }
+    }
+    Ok(())
+}
+
 /// One live session: spec, compiled program, resident state, counters.
 #[derive(Clone, Debug)]
 pub struct Session {
@@ -378,6 +397,7 @@ impl SessionRegistry {
         });
         let prog = spec.program()?;
         let board = spec.initial_board(session_seed)?;
+        ensure_finite(&board).context("create")?;
         let resident = backend.admit(&prog, &board)?;
         self.sessions.insert(
             id,
@@ -434,6 +454,7 @@ impl SessionRegistry {
             .get_mut(&id)
             .with_context(|| format!("no session {}", fmt_id(id)))?;
         let board = s.spec.initial_board(s.seed)?;
+        ensure_finite(&board).context("reset")?;
         s.resident = backend.admit(&s.prog, &board)?;
         s.steps_done = 0;
         Ok(())
@@ -592,6 +613,20 @@ mod tests {
         assert!(!reg.read_board(&backend, id).unwrap().bit_eq(&initial));
         reg.reset(&backend, id).unwrap();
         assert!(reg.read_board(&backend, id).unwrap().bit_eq(&initial));
+    }
+
+    #[test]
+    fn admission_rejects_non_finite_boards() {
+        let ok = Tensor::new(vec![2, 2], vec![0.0, 1.0, 0.5, 1.0e-40])
+            .unwrap();
+        assert!(ensure_finite(&ok).is_ok(), "denormals are admissible");
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let t = Tensor::new(vec![2, 2], vec![0.0, bad, 0.5, 1.0])
+                .unwrap();
+            let err = ensure_finite(&t).unwrap_err();
+            assert!(format!("{err:#}").contains("non-finite"),
+                    "error names the failure: {err:#}");
+        }
     }
 
     #[test]

@@ -175,6 +175,15 @@ impl From<usize> for Json {
     }
 }
 
+/// `u64` counters (histogram counts, step totals) are emitted via
+/// `f64`, which is exact up to 2^53 — unlike a `usize` cast, which
+/// silently truncates on 32-bit targets.
+impl From<u64> for Json {
+    fn from(n: u64) -> Self {
+        Json::Num(n as f64)
+    }
+}
+
 fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(width) = indent {
         out.push('\n');

@@ -1,0 +1,225 @@
+//! Differential battery for the AVX2 SIMD paths: every vectorized
+//! kernel must be **bit-identical** to its always-compiled scalar
+//! reference — across radii, widths not divisible by the lane count,
+//! thread counts, and boards poisoned with NaN / infinity / denormals.
+//!
+//! On hosts where [`cax::backend::native::simd::active`] is false
+//! (non-x86_64, no AVX2, or `CAX_SIMD=off`) the dispatching entry
+//! points run the scalar code and these tests hold vacuously — the CI
+//! matrix runs the suite in both modes.
+
+use cax::automata::lenia::LeniaParams;
+use cax::backend::native::lenia::{
+    update_stage, update_stage_scalar, LeniaKernel,
+};
+use cax::backend::native::nca::NcaModel;
+use cax::backend::native::simd;
+use cax::backend::{Backend, CaProgram, NativeBackend};
+use cax::tensor::Tensor;
+use cax::util::rng::Rng;
+
+/// Bitwise slice comparison with a per-cell diagnostic.
+fn assert_bits_eq(a: &[f32], b: &[f32], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{label}: cell {i} diverged: {x} ({:#010x}) vs {y} ({:#010x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+/// Step a board `steps` times through `step` (dispatching) and
+/// `step_scalar` side by side, asserting bit identity after every step
+/// so a divergence is caught at its first occurrence.
+fn lenia_differential(kernel: &LeniaKernel, board: &[f32], h: usize,
+                      w: usize, steps: usize, label: &str) {
+    let mut cur = board.to_vec();
+    let mut cur_ref = board.to_vec();
+    let mut next = vec![0.0f32; board.len()];
+    let mut next_ref = vec![0.0f32; board.len()];
+    for step in 0..steps {
+        kernel.step(&cur, &mut next, h, w);
+        kernel.step_scalar(&cur_ref, &mut next_ref, h, w);
+        assert_bits_eq(&next, &next_ref, &format!("{label} step {step}"));
+        cur.copy_from_slice(&next);
+        cur_ref.copy_from_slice(&next_ref);
+    }
+}
+
+#[test]
+fn lenia_sparse_tap_bit_identical_across_radii() {
+    // Radii spanning tiny stencils to the FFT-crossover regime; widths
+    // are 2r + 13 so every board has a full 8-lane interior plus a
+    // ragged (non-multiple-of-8) vector tail and scalar edge columns.
+    for &radius in &[3usize, 4, 5, 7, 10, 13, 16, 24, 32] {
+        let params = LeniaParams { radius, ..Default::default() };
+        let kernel = LeniaKernel::new(params);
+        // Boards must be at least radius tall/wide (the wrap rule's
+        // contract); the width also guarantees a full 8-lane interior.
+        let (h, w) = (radius + 7, 2 * radius + 13);
+        let mut rng = Rng::new(0x51D0 + radius as u64);
+        let board = rng.vec_f32(h * w);
+        lenia_differential(&kernel, &board, h, w, 3,
+                           &format!("lenia r={radius}"));
+    }
+}
+
+#[test]
+fn lenia_sparse_tap_bit_identical_across_widths() {
+    // Widths straddling the dispatch threshold (w >= 2r + 8 = 16 for
+    // r=4) and exercising every tail length mod 8.
+    let params = LeniaParams { radius: 4, ..Default::default() };
+    let kernel = LeniaKernel::new(params);
+    for &w in &[9usize, 15, 16, 17, 19, 21, 26, 30, 33, 40] {
+        let h = 9;
+        let mut rng = Rng::new(0xA11 + w as u64);
+        let board = rng.vec_f32(h * w);
+        lenia_differential(&kernel, &board, h, w, 3,
+                           &format!("lenia w={w}"));
+    }
+}
+
+#[test]
+fn lenia_sparse_tap_bit_identical_on_poisoned_boards() {
+    // NaN payloads, infinities and denormals must flow through the
+    // SIMD lanes exactly as through the scalar taps — same propagation,
+    // same clamp semantics, bit for bit. One step only: the poison
+    // spreads to the whole neighborhood immediately.
+    let params = LeniaParams { radius: 5, ..Default::default() };
+    let kernel = LeniaKernel::new(params);
+    let (h, w) = (9, 27);
+    let mut rng = Rng::new(0xBAD);
+    let mut board = rng.vec_f32(h * w);
+    board[3] = f32::NAN;
+    board[40] = f32::from_bits(0x7FC0_1234); // NaN with a payload
+    board[77] = f32::INFINITY;
+    board[120] = f32::NEG_INFINITY;
+    board[150] = 1.0e-40; // denormal
+    board[151] = -1.0e-42;
+    board[200] = -0.0;
+    lenia_differential(&kernel, &board, h, w, 1, "lenia poisoned");
+}
+
+#[test]
+fn lenia_update_stage_bit_identical_with_poison() {
+    // The shared growth/update stage of the spectral path: hw = 67
+    // (8 full vectors + a 3-cell scalar tail), three kernels mixing
+    // into one channel, with NaN / inf / denormal growths and states.
+    let hw = 67;
+    let wk = [0.5f32, -0.25, 0.75];
+    let dt = 0.1f32;
+    let mut rng = Rng::new(0x57A6E);
+    let mut state = rng.vec_f32(hw);
+    let mut growths = rng.vec_f32(wk.len() * hw);
+    state[5] = f32::NAN;
+    state[13] = -0.0;
+    state[64] = 1.0e-41;
+    growths[9] = f32::NAN;
+    growths[hw + 20] = f32::INFINITY;
+    growths[2 * hw + 33] = f32::NEG_INFINITY;
+    growths[2 * hw + 66] = -1.0e-40;
+    let mut next = vec![0.0f32; hw];
+    let mut next_ref = vec![0.0f32; hw];
+    update_stage(&state, &growths, hw, &wk, dt, &mut next);
+    update_stage_scalar(&state, &growths, hw, &wk, dt, &mut next_ref);
+    assert_bits_eq(&next, &next_ref, "update_stage");
+}
+
+/// Step an NCA board through the dispatching and scalar kernels side by
+/// side, asserting bit identity after every step.
+fn nca_differential(model: &NcaModel, board: &[f32], h: usize, w: usize,
+                    frozen: usize, steps: usize, label: &str) {
+    let mut cur = board.to_vec();
+    let mut cur_ref = board.to_vec();
+    let mut next = vec![0.0f32; board.len()];
+    let mut next_ref = vec![0.0f32; board.len()];
+    for step in 0..steps {
+        model.step_frozen(&cur, &mut next, h, w, frozen);
+        model.step_frozen_scalar(&cur_ref, &mut next_ref, h, w, frozen);
+        assert_bits_eq(&next, &next_ref, &format!("{label} step {step}"));
+        cur.copy_from_slice(&next);
+        cur_ref.copy_from_slice(&next_ref);
+    }
+}
+
+#[test]
+fn nca_forward_bit_identical_across_geometries() {
+    // Channel counts around the growing/MNIST models, hidden sizes on
+    // both sides of a vector, widths from the dispatch threshold
+    // (w >= 10) up through ragged tails, frozen prefixes on and off.
+    for &(c, hidden) in &[(3usize, 5usize), (4, 16), (8, 16)] {
+        for &w in &[10usize, 13, 16, 23] {
+            for &frozen in &[0usize, 2] {
+                let mut rng = Rng::new((c * 100 + w * 10 + frozen) as u64);
+                let model = NcaModel::random(c, hidden, &mut rng);
+                let h = 7;
+                let board = rng.vec_f32(h * w * c);
+                nca_differential(
+                    &model, &board, h, w, frozen, 2,
+                    &format!("nca c={c} hid={hidden} w={w} fz={frozen}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn nca_forward_bit_identical_on_poisoned_boards() {
+    // NaN folds to 0.0 through the ReLU in both paths (max with the
+    // accumulator as the first operand), infinities and denormals
+    // propagate — all bit-identical to the scalar cell.
+    let mut rng = Rng::new(0xDEAD_BEEF);
+    let model = NcaModel::random(4, 8, &mut rng);
+    let (h, w, c) = (6, 14, 4);
+    let mut board = rng.vec_f32(h * w * c);
+    board[7] = f32::NAN;
+    board[50] = f32::from_bits(0x7FC0_00AB);
+    board[100] = f32::INFINITY;
+    board[161] = f32::NEG_INFINITY;
+    board[200] = 1.0e-40;
+    board[260] = -0.0;
+    nca_differential(&model, &board, h, w, 0, 1, "nca poisoned");
+    nca_differential(&model, &board, h, w, 2, 1, "nca poisoned frozen");
+}
+
+#[test]
+fn backend_rollouts_thread_invariant_in_current_mode() {
+    // Whatever mode this host dispatches to, the batched backend must
+    // stay bit-deterministic across worker counts (lane = cell keeps
+    // the per-cell accumulation order thread- and SIMD-independent).
+    let solo = NativeBackend::with_threads(1);
+    let pool = NativeBackend::with_threads(8);
+
+    let params = LeniaParams { radius: 5, ..Default::default() };
+    let mut rng = Rng::new(0x7EAD);
+    let lenia_state =
+        Tensor::new(vec![3, 12, 25], rng.binary_vec(3 * 12 * 25, 0.5))
+            .unwrap();
+    let prog = CaProgram::Lenia { params };
+    let a = solo.rollout(&prog, &lenia_state, 4).unwrap();
+    let b = pool.rollout(&prog, &lenia_state, 4).unwrap();
+    assert!(a.bit_eq(&b), "lenia rollout varies with thread count");
+
+    let model = NcaModel::random(4, 8, &mut rng);
+    let (h, w, c) = (9, 14, 4);
+    let nca_state =
+        Tensor::new(vec![2, h, w, c], rng.vec_f32(2 * h * w * c)).unwrap();
+    let prog = CaProgram::Nca(model);
+    let a = solo.rollout(&prog, &nca_state, 3).unwrap();
+    let b = pool.rollout(&prog, &nca_state, 3).unwrap();
+    assert!(a.bit_eq(&b), "nca rollout varies with thread count");
+}
+
+#[test]
+fn simd_status_is_reported_and_consistent() {
+    let backend = NativeBackend::with_threads(1);
+    let status = backend.simd_status();
+    assert_eq!(status, simd::status());
+    if simd::active() {
+        assert_eq!(status, "avx2");
+    } else {
+        assert!(status.starts_with("scalar"), "got {status:?}");
+    }
+}

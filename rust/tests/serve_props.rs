@@ -493,6 +493,77 @@ fn stats_and_metrics_expose_latency_shape() {
     server.join().expect("clean shutdown");
 }
 
+// ------------------------------------------- poisoned-lock recovery
+
+/// A handler thread that panics while holding the registry mutex
+/// poisons it. The serve layer must treat that as one failed request,
+/// not a process-wide cascade: every subsequent request (reads, steps
+/// through the scheduler, creates) must still succeed.
+#[test]
+fn poisoned_registry_does_not_cascade() {
+    let cfg = ServeConfig {
+        tick_window: Duration::from_micros(100),
+        ..test_config()
+    };
+    let c = Arc::new(Coalescer::new(&cfg));
+    let server = cax::serve::http::start_with(&cfg, Arc::clone(&c))
+        .expect("start server");
+    let addr = server.addr();
+
+    let (status, body) = http(addr, "POST", "/sessions",
+                              r#"{"program": "life", "size": 16}"#);
+    assert_eq!(status, 201, "{body}");
+    let id = json_str_field(&body, "id");
+
+    // Poison the registry lock exactly the way a panicking handler
+    // would: panic while holding the guard.
+    let poisoner = std::panic::catch_unwind(
+        std::panic::AssertUnwindSafe(|| {
+            let _guard = c.registry().lock().unwrap();
+            panic!("injected handler panic while holding the registry");
+        }),
+    );
+    assert!(poisoner.is_err(), "the injected panic must unwind");
+    assert!(c.registry().lock().is_err(), "registry must be poisoned");
+
+    // Every endpoint class keeps working over the poisoned lock.
+    let (status, body) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "healthz after poison: {body}");
+    let (status, body) =
+        http(addr, "POST", &format!("/sessions/{id}/step"),
+             r#"{"steps": 2}"#);
+    assert_eq!(status, 200, "step after poison: {body}");
+    assert!(body.contains("\"steps_done\": 2"), "{body}");
+    let (status, body) = http(addr, "GET", &format!("/sessions/{id}"), "");
+    assert_eq!(status, 200, "status after poison: {body}");
+    let (status, body) = http(addr, "POST", "/sessions",
+                              r#"{"program": "eca", "width": 32}"#);
+    assert_eq!(status, 201, "create after poison: {body}");
+    let (status, body) = http(addr, "GET", "/stats", "");
+    assert_eq!(status, 200, "stats after poison: {body}");
+
+    server.stop();
+    server.join().expect("clean shutdown despite poisoned lock");
+}
+
+/// Boards that would smuggle NaN into the resident substrate are
+/// refused at admission with a 400 — see `session::ensure_finite`. The
+/// stock programs always generate finite boards, so this exercises the
+/// validation seam directly.
+#[test]
+fn admission_validates_finiteness() {
+    use cax::serve::session::ensure_finite;
+    let good = Tensor::new(vec![4], vec![0.0, 1.0, 0.25, 1.0e-40]).unwrap();
+    assert!(ensure_finite(&good).is_ok());
+    let bad = Tensor::new(vec![4], vec![0.0, f32::NAN, 0.25, 1.0]).unwrap();
+    let msg = format!("{:#}", ensure_finite(&bad).unwrap_err());
+    assert!(msg.contains("non-finite"), "{msg}");
+    // The serve error mapping sends that message class to a 400.
+    // (`error_status` defaults non-"no session"/"busy"/"queue full"
+    // messages to 400 — asserted end to end in http_end_to_end_roundtrip
+    // for the other create-failure classes.)
+}
+
 // ------------------------------------------------- graceful SIGTERM
 
 /// `cax serve` must drain and exit 0 on SIGTERM (the ctrl-c/SIGINT path
