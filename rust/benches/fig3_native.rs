@@ -80,6 +80,69 @@ fn main() {
         );
     }
 
+    // ------------------------------- sparse occupancy (activity map)
+    // The anchor for the activity-tracked stepping: a lone Gosper
+    // glider gun on a 4096^2 torus — ~10^-5 occupancy, the regime the
+    // per-tile dirty maps exist for. Dense SWAR pays all 256Ki
+    // word-tiles every step; the sparse path recomputes only the
+    // gun/glider neighborhood after the first (dense, map-warming)
+    // step. HashLife rides along as the memoizing extreme.
+    {
+        use cax::backend::native::activity::ActivityMap;
+        use cax::backend::native::hashlife::LifeHash;
+        use cax::backend::native::life::LifeKernel;
+        use cax::backend::native::bits;
+
+        let size = 4096usize;
+        let steps = if quick() { 48 } else { 128 };
+        header(&format!("Sparse occupancy — Gosper glider gun \
+                         ({size}x{size}, {steps} steps, native)"));
+        const GUN: [(usize, usize); 36] = [
+            (0, 4), (0, 5), (1, 4), (1, 5), (10, 4), (10, 5), (10, 6),
+            (11, 3), (11, 7), (12, 2), (12, 8), (13, 2), (13, 8),
+            (14, 5), (15, 3), (15, 7), (16, 4), (16, 5), (16, 6),
+            (17, 5), (20, 2), (20, 3), (20, 4), (21, 2), (21, 3),
+            (21, 4), (22, 1), (22, 5), (24, 0), (24, 1), (24, 5),
+            (24, 6), (34, 2), (34, 3), (35, 2), (35, 3),
+        ];
+        let wpr = bits::words_for(size);
+        let mut gun = vec![0u64; size * wpr];
+        for &(x, y) in &GUN {
+            let (gx, gy) = (x + size / 2, y + size / 2);
+            gun[gy * wpr + gx / 64] |= 1 << (gx % 64);
+        }
+        let updates = (size * size * steps) as f64;
+
+        let dense = bench(warm.min(1), iters.min(4), || {
+            let mut grid = gun.clone();
+            let mut kern = LifeKernel::new(size, size);
+            kern.rollout(&mut grid, steps);
+        });
+        let sparse = bench(warm.min(1), iters.min(4), || {
+            let mut grid = gun.clone();
+            let mut kern = LifeKernel::new(size, size);
+            let mut map = ActivityMap::new(0, size, wpr);
+            kern.rollout_sparse(&mut grid, steps, &mut map);
+        });
+        let quad = bench(warm.min(1), iters.min(4), || {
+            let mut grid = gun.clone();
+            LifeHash::default().advance(&mut grid, size, steps);
+        });
+        push(&mut rows, "life-sparse/dense-swar", &dense, updates);
+        push(&mut rows, "life-sparse/activity-tracked", &sparse, updates);
+        push(&mut rows, "life-sparse/hashlife", &quad, updates);
+        let sparse_speedup = dense.median / sparse.median;
+        println!("  speedup: activity-tracked is {sparse_speedup:.1}x vs \
+                  dense SWAR (acceptance target: >= 10x), hashlife \
+                  {:.1}x", dense.median / quad.median);
+        if sparse_speedup < 10.0 {
+            assert!(soft(),
+                    "sparse acceptance: {sparse_speedup:.2}x < 10x on \
+                     the gun sweep");
+            println!("  (soft mode: not failing on the 10x target)");
+        }
+    }
+
     // --------------------------------------------------------- Lenia
     {
         let (b, size) = if quick() { (2, 64) } else { (4, 128) };

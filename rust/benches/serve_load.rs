@@ -277,6 +277,74 @@ fn main() {
         println!("  speedup: {:.1}x", solo.median / coalesced.median);
     }
 
+    // ------------------------------------------------ idle-fleet rows
+    // The serving regime activity tracking exists for: a fleet of
+    // parked sessions whose soups have burned down to still lifes and
+    // oscillators, re-stepped every tick. Dense stepping pays the full
+    // board per tick; the sparse path recomputes only the tiles around
+    // the surviving oscillators. The skipped-tile counter moving is a
+    // hard correctness assert; the CPU drop is the performance row.
+    {
+        use cax::backend::native::activity;
+
+        let (n, size) = (32, 256);
+        header(&format!(
+            "serve — idle fleet: {n} settled Life {size}x{size} sessions, \
+             1 step/request (dense vs activity-tracked)"
+        ));
+        let spec = ProgramSpec::Life { height: size, width: size };
+        let ids = sessions(&coalescer, &spec, n);
+        // Burn the soups down to their ash (still lifes + blinkers).
+        activity::set_override(Some(false));
+        for _ in 0..8 {
+            coalesced_round(&coalescer, &ids, 40);
+        }
+        let steps_per_iter = (n * rounds) as f64;
+        let dense = bench(warm, iters, || {
+            for _ in 0..rounds {
+                coalesced_round(&coalescer, &ids, 1);
+            }
+        });
+        activity::set_override(Some(true));
+        let skipped_before = activity::tiles_skipped_total();
+        let sparse = bench(warm, iters, || {
+            for _ in 0..rounds {
+                coalesced_round(&coalescer, &ids, 1);
+            }
+        });
+        let skipped_after = activity::tiles_skipped_total();
+        activity::set_override(None);
+        push(&mut rows, "serve/idle-32x256x256/dense", &dense,
+             steps_per_iter);
+        push(&mut rows, "serve/idle-32x256x256/activity-tracked", &sparse,
+             steps_per_iter);
+        assert!(
+            skipped_after > skipped_before,
+            "idle-fleet sparse ticks must skip tiles \
+             ({skipped_before} -> {skipped_after})"
+        );
+        let idle_speedup = dense.median / sparse.median;
+        println!(
+            "  speedup: activity-tracked idle ticks are {idle_speedup:.1}x \
+             vs dense ({} tiles skipped during the sparse leg)",
+            skipped_after - skipped_before
+        );
+        if idle_speedup <= 1.0 {
+            if soft() {
+                println!(
+                    "  WARN (soft mode): no CPU drop on the idle fleet \
+                     ({idle_speedup:.2}x)"
+                );
+            } else {
+                assert!(
+                    idle_speedup > 1.0,
+                    "settled sessions must step cheaper under activity \
+                     tracking (got {idle_speedup:.2}x)"
+                );
+            }
+        }
+    }
+
     // --------------------------------------------- overload scenario
     // Drive a deliberately tiny queue past max_pending and check the
     // backpressure accounting end to end: the 503 counter, the

@@ -143,10 +143,22 @@ pub enum Resident {
     /// serve via the default trait methods.
     Host(Tensor),
     /// Bit-packed discrete state (native ECA/Life): 64 cells per u64,
-    /// LSB-first, rows padded to whole words (`native::bits`).
-    Bits { words: Vec<u64>, shape: Vec<usize> },
-    /// Flat f32 state in kernel layout (native Lenia/NCA boards).
-    Board { data: Vec<f32>, shape: Vec<usize> },
+    /// LSB-first, rows padded to whole words (`native::bits`). The
+    /// activity map carries which tiles changed last step across calls
+    /// (sparse resident stepping); `None` until a sparse launch touches
+    /// the board, and cleared by any dense/HashLife launch.
+    Bits {
+        words: Vec<u64>,
+        shape: Vec<usize>,
+        activity: Option<native::activity::ActivityMap>,
+    },
+    /// Flat f32 state in kernel layout (native Lenia/NCA boards), with
+    /// the same cross-call activity map as [`Resident::Bits`].
+    Board {
+        data: Vec<f32>,
+        shape: Vec<usize>,
+        activity: Option<native::activity::ActivityMap>,
+    },
 }
 
 impl Resident {
@@ -491,11 +503,18 @@ mod tests {
         let host = Resident::Host(Tensor::zeros(&[4, 4]));
         assert_eq!(host.shape(), &[4, 4]);
         assert_eq!(host.kind(), "host");
-        let bits = Resident::Bits { words: vec![0; 2], shape: vec![70] };
+        let bits = Resident::Bits {
+            words: vec![0; 2],
+            shape: vec![70],
+            activity: None,
+        };
         assert_eq!(bits.shape(), &[70]);
         assert_eq!(bits.kind(), "bits");
-        let board =
-            Resident::Board { data: vec![0.0; 6], shape: vec![2, 3] };
+        let board = Resident::Board {
+            data: vec![0.0; 6],
+            shape: vec![2, 3],
+            activity: None,
+        };
         assert_eq!(board.kind(), "board");
     }
 

@@ -1,0 +1,504 @@
+//! Activity tracking: per-tile dirty bitmaps that let a step skip any
+//! tile whose halo neighborhood is unchanged, plus the cost model that
+//! picks between the dense, sparse and HashLife step paths.
+//!
+//! # The skip rule
+//!
+//! A "tile" is the unit the kernels already work in — one u64 word of
+//! 64 cells for the bit-packed automata (ECA/Life), one 32x32 cache
+//! tile for the f32 automata (Lenia/NCA). After every step the kernel
+//! records which tiles *changed* (`dirty`). Before the next step the
+//! map dilates `dirty` by the rule's halo (1 tile for a 3x3 stencil,
+//! `radius/32` tiles for a Lenia kernel) into `needs`: the set of tiles
+//! whose inputs might differ from last step. Every other tile would be
+//! recomputed from bit-identical inputs by a deterministic local rule,
+//! so skipping it reproduces the dense result *exactly* — there is no
+//! approximation anywhere in this module.
+//!
+//! For ECA/Life that argument is bitwise by construction. For the f32
+//! automata the dirty mask itself is exact: a recomputed cell is
+//! compared against its previous value as raw `f32` bits, so a tile is
+//! clean only when every one of its cells came out bit-identical.
+//!
+//! A fresh map starts all-dirty, so the first step after admission (or
+//! after a dense/HashLife step invalidated the map) is a full dense
+//! step in disguise; the savings come from every step after it.
+//!
+//! # The escape hatch
+//!
+//! `CAX_SPARSE=off` (or `0`) pins every path selection to `Dense`,
+//! mirroring the `CAX_SIMD` hatch. Tests and benches can also force the
+//! decision in-process with [`set_override`], which wins over the
+//! environment.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::{bits, lenia};
+use crate::backend::CaProgram;
+
+// ------------------------------------------------------------ dispatch
+
+/// Read the `CAX_SPARSE` escape hatch once.
+fn detect() -> (bool, &'static str) {
+    match std::env::var("CAX_SPARSE") {
+        Ok(v) if v == "off" || v == "0" => {
+            (false, "dense only (CAX_SPARSE=off)")
+        }
+        _ => (true, "sparse+hashlife"),
+    }
+}
+
+fn cached() -> (bool, &'static str) {
+    static STATUS: OnceLock<(bool, &'static str)> = OnceLock::new();
+    *STATUS.get_or_init(|| {
+        let s = detect();
+        crate::log_info!("native activity tracking: {}", s.1);
+        s
+    })
+}
+
+/// In-process override: 0 = follow the environment, 1 = force on,
+/// 2 = force off. Exists so one process (tests, `serve_load`) can
+/// compare sparse-on vs sparse-off without re-execing; the env hatch
+/// is a `OnceLock` and cannot toggle.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Force activity tracking on/off for this process (`None` returns to
+/// the `CAX_SPARSE` environment setting). Test/bench hook.
+pub fn set_override(force: Option<bool>) {
+    let v = match force {
+        None => 0,
+        Some(true) => 1,
+        Some(false) => 2,
+    };
+    OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Whether sparse/HashLife paths may be selected at all.
+pub fn enabled() -> bool {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => cached().0,
+    }
+}
+
+/// Human-readable dispatch status for CLI/status surfaces.
+pub fn status() -> &'static str {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => "sparse+hashlife (forced)",
+        2 => "dense only (forced)",
+        _ => cached().1,
+    }
+}
+
+// ----------------------------------------------------------- cost model
+
+/// Which stepping strategy a launch takes. Selected per call by
+/// [`select_step_path`] the same way PR 4's `select_path` picks
+/// sparse-tap vs FFT Lenia.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPath {
+    /// Recompute every cell (the pre-activity behavior).
+    Dense,
+    /// Dirty-tile tracking: recompute only tiles whose halo changed.
+    Sparse,
+    /// Memoizing quadtree (Life) / binary tree (ECA) — superspeed
+    /// power-of-two macro-steps on big structured boards.
+    HashLife,
+}
+
+impl StepPath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepPath::Dense => "dense",
+            StepPath::Sparse => "sparse",
+            StepPath::HashLife => "hashlife",
+        }
+    }
+}
+
+/// HashLife needs enough cells and enough steps per call to amortize
+/// tree construction + interning; below these it loses to the SWAR
+/// kernels even on empty boards. Boards also must be square (2D) with
+/// power-of-two sides for the torus-wrap trick.
+pub const HASHLIFE_MIN_LIFE_CELLS: usize = 1 << 22; // 2048 x 2048
+pub const HASHLIFE_MIN_ECA_WIDTH: usize = 1 << 16;
+pub const HASHLIFE_MIN_STEPS: usize = 256;
+
+/// Pick the step path for one launch of `prog` on an unbatched board
+/// of `shape`, advancing `steps`. Deterministic in its inputs: geometry
+/// and horizon, never board content — so the reported path is the
+/// executed path.
+pub fn select_step_path(prog: &CaProgram, shape: &[usize], steps: usize)
+    -> StepPath {
+    if !enabled() {
+        return StepPath::Dense;
+    }
+    match prog {
+        CaProgram::Eca { .. } => {
+            let w = shape[shape.len() - 1];
+            if w.is_power_of_two()
+                && w >= HASHLIFE_MIN_ECA_WIDTH
+                && steps >= HASHLIFE_MIN_STEPS
+            {
+                StepPath::HashLife
+            } else {
+                StepPath::Sparse
+            }
+        }
+        CaProgram::Life => {
+            let (h, w) = (shape[shape.len() - 2], shape[shape.len() - 1]);
+            if h == w
+                && h.is_power_of_two()
+                && h * w >= HASHLIFE_MIN_LIFE_CELLS
+                && steps >= HASHLIFE_MIN_STEPS
+            {
+                StepPath::HashLife
+            } else {
+                StepPath::Sparse
+            }
+        }
+        // The sparse-tap kernel recomputes per cell, so dirty tiles
+        // compose with it; the FFT path is global (every output cell
+        // reads every input cell) and stays dense.
+        CaProgram::Lenia { params } => {
+            let (h, w) = (shape[shape.len() - 2], shape[shape.len() - 1]);
+            match lenia::select_path(params.radius, h, w) {
+                lenia::LeniaPath::SparseTap => StepPath::Sparse,
+                lenia::LeniaPath::Fft => StepPath::Dense,
+            }
+        }
+        // Multi-kernel worlds run the spectral plan — global, dense.
+        CaProgram::LeniaMulti(_) => StepPath::Dense,
+        CaProgram::Nca(_) => StepPath::Sparse,
+    }
+}
+
+// ------------------------------------------------------------- counters
+
+/// Bump the `step_path_*_total` obs counter for one launch.
+pub fn note_path(path: StepPath) {
+    let name = match path {
+        StepPath::Dense => "step_path_dense_total",
+        StepPath::Sparse => "step_path_sparse_total",
+        StepPath::HashLife => "step_path_hashlife_total",
+    };
+    crate::obs::Registry::global().counter(name).inc();
+}
+
+/// Record a launch's tile accounting in the global registry.
+pub fn note_tiles(recomputed: u64, skipped: u64) {
+    let reg = crate::obs::Registry::global();
+    reg.counter("sparse_tiles_recomputed_total").add(recomputed);
+    reg.counter("sparse_tiles_skipped_total").add(skipped);
+}
+
+/// Current skipped-tile counter value (bench/test hook).
+pub fn tiles_skipped_total() -> u64 {
+    crate::obs::Registry::global()
+        .counter("sparse_tiles_skipped_total")
+        .get()
+}
+
+// ----------------------------------------------------- program identity
+
+/// Fingerprint of the *rule* a resident's activity map was built under.
+/// A map is only valid while the rule is unchanged (the serve scheduler
+/// never mutates a session's program, but the `Resident` API does not
+/// enforce that) — on mismatch the map resets to all-dirty.
+pub fn prog_key(prog: &CaProgram) -> u64 {
+    // FNV-1a over the rule's defining bits; no hashing dependency.
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(PRIME);
+    };
+    match prog {
+        CaProgram::Eca { rule } => {
+            mix(1);
+            mix(rule.number as u64);
+        }
+        CaProgram::Life => mix(2),
+        CaProgram::Lenia { params } => {
+            mix(3);
+            mix(params.radius as u64);
+            mix(params.mu.to_bits() as u64);
+            mix(params.sigma.to_bits() as u64);
+            mix(params.dt.to_bits() as u64);
+        }
+        CaProgram::LeniaMulti(world) => {
+            mix(4);
+            mix(world.channels as u64);
+            mix(world.kernels.len() as u64);
+        }
+        CaProgram::Nca(model) => {
+            mix(5);
+            for v in model.flatten() {
+                mix(v.to_bits() as u64);
+            }
+        }
+    }
+    h
+}
+
+/// Reuse `slot`'s map when it matches this rule + geometry; otherwise
+/// install a fresh all-dirty map.
+pub fn ensure_map<'a>(
+    slot: &'a mut Option<ActivityMap>,
+    key: u64,
+    rows: usize,
+    cols: usize,
+) -> &'a mut ActivityMap {
+    let stale = match slot {
+        Some(m) => !m.matches(key, rows, cols),
+        None => true,
+    };
+    if stale {
+        *slot = Some(ActivityMap::new(key, rows, cols));
+    }
+    slot.as_mut().expect("activity map just installed")
+}
+
+// ------------------------------------------------------------ the map
+
+/// A bit-packed `rows x cols` tile-activity bitmap with the
+/// dirty -> dilate -> needs -> recompute -> re-mark protocol described
+/// in the module docs. Both axes wrap (every kernel here is toroidal).
+#[derive(Clone, Debug)]
+pub struct ActivityMap {
+    key: u64,
+    rows: usize,
+    cols: usize,
+    /// Words per bitmap row (`cols.div_ceil(64)`).
+    wpr: usize,
+    /// Tiles that changed during the last executed step.
+    dirty: Vec<u64>,
+    /// Tiles the *next* step must recompute (dirty dilated by halo).
+    needs: Vec<u64>,
+    /// Scratch rows for the dilation passes.
+    scratch: Vec<u64>,
+    /// True until the first `begin_step`: everything needs recompute.
+    fresh: bool,
+}
+
+impl ActivityMap {
+    /// A fresh map: every tile dirty, so the first step is dense.
+    pub fn new(key: u64, rows: usize, cols: usize) -> ActivityMap {
+        assert!(rows > 0 && cols > 0, "activity map with no tiles");
+        let wpr = bits::words_for(cols);
+        ActivityMap {
+            key,
+            rows,
+            cols,
+            wpr,
+            dirty: vec![0; rows * wpr],
+            needs: vec![0; rows * wpr],
+            scratch: vec![0; 2 * wpr.max(1)],
+            fresh: true,
+        }
+    }
+
+    pub fn matches(&self, key: u64, rows: usize, cols: usize) -> bool {
+        self.key == key && self.rows == rows && self.cols == cols
+    }
+
+    /// Total tiles tracked.
+    pub fn tiles(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn words_per_row(&self) -> usize {
+        self.wpr
+    }
+
+    /// Start a step: fill `needs` with `dirty` dilated by
+    /// (`halo_y`, `halo_x`) tiles (wrapping both axes), clear `dirty`
+    /// for the kernel to re-mark, and return how many tiles need
+    /// recompute. A fresh map needs everything.
+    pub fn begin_step(&mut self, halo_y: usize, halo_x: usize) -> usize {
+        if self.fresh {
+            self.fresh = false;
+            for row in self.needs.chunks_mut(self.wpr) {
+                row.fill(u64::MAX);
+                bits::mask_tail(row, self.cols);
+            }
+            self.dirty.fill(0);
+            return self.tiles();
+        }
+        self.needs.copy_from_slice(&self.dirty);
+        self.dirty.fill(0);
+        // Chebyshev dilation is separable: dilate x then y.
+        for _ in 0..halo_x {
+            let (up, down) = self.scratch.split_at_mut(self.wpr);
+            for row in self.needs.chunks_mut(self.wpr) {
+                bits::rot_up(row, up, self.cols);
+                bits::rot_down(row, down, self.cols);
+                for (w, (&u, &d)) in
+                    row.iter_mut().zip(up.iter().zip(down.iter()))
+                {
+                    *w |= u | d;
+                }
+            }
+        }
+        for _ in 0..halo_y {
+            let prev = self.needs.clone();
+            for r in 0..self.rows {
+                let above = (r + self.rows - 1) % self.rows;
+                let below = (r + 1) % self.rows;
+                for i in 0..self.wpr {
+                    self.needs[r * self.wpr + i] |= prev
+                        [above * self.wpr + i]
+                        | prev[below * self.wpr + i];
+                }
+            }
+        }
+        self.needs.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// One word of the `needs` bitmap — kernels scan these with
+    /// `trailing_zeros` so iteration and [`mark`](Self::mark) don't
+    /// fight the borrow checker.
+    pub fn needs_word(&self, row: usize, word: usize) -> u64 {
+        self.needs[row * self.wpr + word]
+    }
+
+    /// Whether any tile in bitmap row `row` needs recompute.
+    pub fn row_needed(&self, row: usize) -> bool {
+        self.needs[row * self.wpr..(row + 1) * self.wpr]
+            .iter()
+            .any(|&w| w != 0)
+    }
+
+    pub fn needs(&self, row: usize, col: usize) -> bool {
+        self.needs[row * self.wpr + col / 64] >> (col % 64) & 1 == 1
+    }
+
+    /// Record that tile (`row`, `col`) changed during this step.
+    pub fn mark(&mut self, row: usize, col: usize) {
+        self.dirty[row * self.wpr + col / 64] |= 1 << (col % 64);
+    }
+
+    /// Mark every tile dirty (used after a dense fallback step diffs
+    /// nothing, or by tests).
+    pub fn mark_all(&mut self) {
+        for row in self.dirty.chunks_mut(self.wpr) {
+            row.fill(u64::MAX);
+            bits::mask_tail(row, self.cols);
+        }
+    }
+
+    /// Tiles currently marked dirty (i.e. changed during the last
+    /// executed step).
+    pub fn dirty_count(&self) -> usize {
+        self.dirty.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::WolframRule;
+
+    #[test]
+    fn fresh_map_needs_everything_once() {
+        let mut m = ActivityMap::new(7, 3, 70);
+        assert_eq!(m.begin_step(1, 1), 3 * 70);
+        // Nothing marked dirty -> next step needs nothing.
+        assert_eq!(m.begin_step(1, 1), 0);
+    }
+
+    #[test]
+    fn dilation_wraps_both_axes() {
+        let mut m = ActivityMap::new(0, 4, 4);
+        m.begin_step(1, 1);
+        m.mark(0, 0);
+        let needed = m.begin_step(1, 1);
+        assert_eq!(needed, 9, "3x3 halo around a corner tile");
+        for (r, c) in [(3, 3), (3, 0), (3, 1), (0, 3), (1, 1)] {
+            assert!(m.needs(r, c), "tile ({r},{c}) in wrapped halo");
+        }
+        assert!(!m.needs(2, 2));
+    }
+
+    #[test]
+    fn wider_halo_dilates_further() {
+        let mut m = ActivityMap::new(0, 8, 8);
+        m.begin_step(1, 1);
+        m.mark(4, 4);
+        assert_eq!(m.begin_step(2, 2), 25, "5x5 halo");
+    }
+
+    #[test]
+    fn one_dimensional_map_dilates_in_x_only() {
+        let mut m = ActivityMap::new(0, 1, 130);
+        m.begin_step(0, 1);
+        m.mark(0, 129);
+        let needed = m.begin_step(0, 1);
+        assert_eq!(needed, 3);
+        assert!(m.needs(0, 128) && m.needs(0, 129) && m.needs(0, 0));
+    }
+
+    #[test]
+    fn ensure_map_resets_on_rule_or_shape_change() {
+        let mut slot = None;
+        let m = ensure_map(&mut slot, 1, 4, 4);
+        m.begin_step(1, 1); // no longer fresh
+        assert_eq!(ensure_map(&mut slot, 1, 4, 4).begin_step(1, 1), 0);
+        // Different rule key -> fresh all-dirty map.
+        assert_eq!(ensure_map(&mut slot, 2, 4, 4).begin_step(1, 1), 16);
+    }
+
+    #[test]
+    fn prog_keys_distinguish_rules() {
+        let r30 = CaProgram::Eca { rule: WolframRule::new(30) };
+        let r110 = CaProgram::Eca { rule: WolframRule::new(110) };
+        assert_ne!(prog_key(&r30), prog_key(&r110));
+        assert_eq!(prog_key(&r30), prog_key(&r30));
+        assert_ne!(prog_key(&r30), prog_key(&CaProgram::Life));
+    }
+
+    /// The override is process-global; tests that flip it take this
+    /// lock so they cannot interleave.
+    static OVERRIDE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn override_beats_environment() {
+        let _guard = OVERRIDE_LOCK.lock().unwrap();
+        // Only exercises the override plumbing; the env default is
+        // covered by whichever leg CI runs this under.
+        set_override(Some(false));
+        assert!(!enabled());
+        assert_eq!(status(), "dense only (forced)");
+        set_override(Some(true));
+        assert!(enabled());
+        set_override(None);
+    }
+
+    #[test]
+    fn selector_honours_geometry_gates() {
+        let _guard = OVERRIDE_LOCK.lock().unwrap();
+        set_override(Some(true));
+        let life = CaProgram::Life;
+        assert_eq!(select_step_path(&life, &[256, 256], 1000),
+                   StepPath::Sparse);
+        assert_eq!(select_step_path(&life, &[4096, 4096], 1000),
+                   StepPath::HashLife);
+        assert_eq!(select_step_path(&life, &[4096, 4096], 16),
+                   StepPath::Sparse, "short horizons stay sparse");
+        assert_eq!(select_step_path(&life, &[4096, 2048], 1000),
+                   StepPath::Sparse, "non-square stays sparse");
+        let eca = CaProgram::Eca { rule: WolframRule::new(30) };
+        assert_eq!(select_step_path(&eca, &[1024], 1000),
+                   StepPath::Sparse);
+        assert_eq!(select_step_path(&eca, &[1 << 17], 1000),
+                   StepPath::HashLife);
+        set_override(Some(false));
+        assert_eq!(select_step_path(&life, &[4096, 4096], 1000),
+                   StepPath::Dense, "escape hatch pins dense");
+        set_override(None);
+    }
+}

@@ -10,7 +10,26 @@
 //! `table[4l + 2c + r]`, periodic boundary).
 
 use crate::automata::WolframRule;
+use crate::backend::native::activity::ActivityMap;
 use crate::backend::native::bits;
+
+/// The rule applied to one word — the single source of truth both the
+/// dense and the sparse stepper go through, so sparse stepping is
+/// bit-identical by construction. Complemented boards set bits past the
+/// row width; callers mask the tail word.
+#[inline]
+fn eca_word(number: u8, l: u64, c: u64, r: u64) -> u64 {
+    let mut next = 0u64;
+    for p in 0..8u8 {
+        if (number >> p) & 1 == 1 {
+            let a = if p & 4 != 0 { l } else { !l };
+            let b = if p & 2 != 0 { c } else { !c };
+            let d = if p & 1 != 0 { r } else { !r };
+            next |= a & b & d;
+        }
+    }
+    next
+}
 
 /// One rule application on a packed row; `left`/`right` are scratch
 /// buffers of the same word length.
@@ -25,20 +44,53 @@ pub fn step_row(
     bits::rot_down(row, right, w);
     let number = rule.number;
     for i in 0..row.len() {
-        let (l, c, r) = (left[i], row[i], right[i]);
-        let mut next = 0u64;
-        for p in 0..8u8 {
-            if (number >> p) & 1 == 1 {
-                let a = if p & 4 != 0 { l } else { !l };
-                let b = if p & 2 != 0 { c } else { !c };
-                let d = if p & 1 != 0 { r } else { !r };
-                next |= a & b & d;
-            }
-        }
-        row[i] = next;
+        row[i] = eca_word(number, left[i], row[i], right[i]);
     }
     // Complemented boards set tail bits; restore the invariant.
     bits::mask_tail(row, w);
+}
+
+/// One activity-tracked rule application: recompute only the words the
+/// map's halo says might change (tile = one u64 word = 64 cells), mark
+/// the ones that did. Returns `(recomputed, skipped)` word counts.
+/// Bit-identical to [`step_row`] — skipped words provably cannot
+/// change, recomputed words go through the same [`eca_word`].
+pub fn step_row_sparse(
+    rule: &WolframRule,
+    row: &mut [u64],
+    left: &mut [u64],
+    right: &mut [u64],
+    w: usize,
+    map: &mut ActivityMap,
+) -> (u64, u64) {
+    let nw = row.len();
+    let total = nw as u64;
+    let needed = map.begin_step(0, 1) as u64;
+    if needed == 0 {
+        return (0, total);
+    }
+    // Whole-row rotation is O(nw) shifts — cheap next to the per-word
+    // rule algebra, and it keeps the wrap carries exact.
+    bits::rot_up(row, left, w);
+    bits::rot_down(row, right, w);
+    let number = rule.number;
+    let rem = w % 64;
+    for wi in 0..map.words_per_row() {
+        let mut tiles = map.needs_word(0, wi);
+        while tiles != 0 {
+            let i = wi * 64 + tiles.trailing_zeros() as usize;
+            tiles &= tiles - 1;
+            let mut next = eca_word(number, left[i], row[i], right[i]);
+            if i == nw - 1 && rem != 0 {
+                next &= (1u64 << rem) - 1;
+            }
+            if next != row[i] {
+                map.mark(0, i);
+                row[i] = next;
+            }
+        }
+    }
+    (needed, total - needed)
 }
 
 /// Run `steps` rule applications on one packed row.
@@ -49,6 +101,24 @@ pub fn rollout_row(rule: &WolframRule, row: &mut [u64], w: usize,
     for _ in 0..steps {
         step_row(rule, row, &mut left, &mut right, w);
     }
+}
+
+/// Run `steps` activity-tracked rule applications; the map carries
+/// dirty state across steps (and across calls, for resident rows).
+/// Returns summed `(recomputed, skipped)` word-tile counts.
+pub fn rollout_row_sparse(rule: &WolframRule, row: &mut [u64], w: usize,
+                          steps: usize, map: &mut ActivityMap)
+    -> (u64, u64) {
+    let mut left = vec![0u64; row.len()];
+    let mut right = vec![0u64; row.len()];
+    let (mut recomputed, mut skipped) = (0, 0);
+    for _ in 0..steps {
+        let (r, s) =
+            step_row_sparse(rule, row, &mut left, &mut right, w, map);
+        recomputed += r;
+        skipped += s;
+    }
+    (recomputed, skipped)
 }
 
 #[cfg(test)]

@@ -1,0 +1,727 @@
+//! HashLife: memoizing tree-compressed stepping for Life and ECA.
+//!
+//! The classic Gosper algorithm — states are hash-consed quadtrees
+//! (binary trees in 1D) so identical regions share one node, and the
+//! "advance the centre of this node 2^j steps" function is memoized on
+//! the canonical node id. On structured boards (guns, oscillators,
+//! large dead regions) whole subtrees repeat, every repeated macro-cell
+//! is a cache hit, and superspeed power-of-two steps come almost free.
+//!
+//! Two departures from textbook HashLife keep it a drop-in for the
+//! dense kernels here:
+//!
+//! - **Torus wrap.** The SWAR kernels are periodic; classic HashLife is
+//!   infinite-plane. A board `T` of side `S = 2^k` is advanced by
+//!   `2^j <= S/2` steps as the centre of the 2x2 tiling
+//!   `[[T,T],[T,T]]` — the periodic tiling evolves exactly like the
+//!   torus, and the centre's dependency cone never leaves the tiling.
+//!   The result is the torus shifted by `(S/2, S/2)`, un-shifted by a
+//!   diagonal quadrant swap. Arbitrary step counts are walked as a sum
+//!   of powers of two.
+//! - **Bounded memory.** The interner + memo table are wiped whenever
+//!   the node arena passes `node_cap`: the current root is serialized
+//!   back to a packed grid and re-interned from scratch. Chaotic soups
+//!   (where memoization cannot win) therefore plateau instead of
+//!   growing without limit — `native_hashlife_props` pins this.
+//!
+//! Node ids below `2^16` *are* the leaf bitmap (a 4x4 `u16` in 2D, 16
+//! cells in 1D), so leaves need no arena slots and no interning.
+//! Results are bit-identical to the SWAR kernels on every board — the
+//! differential battery proves it over step counts 1..=257.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+use super::bits;
+
+/// Ids below this are leaves; the id *is* the 16-bit cell bitmap.
+const LEAF_BASE: u32 = 1 << 16;
+
+/// Default arena bound: ~1M nodes (tens of MB with tables) before the
+/// wipe-and-rebuild GC kicks in.
+pub const DEFAULT_NODE_CAP: usize = 1 << 20;
+
+/// FNV-ish 64-bit hasher for the small fixed-size keys here — the
+/// SipHash default costs more than the table lookups it protects.
+#[derive(Default)]
+struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn mix(&mut self, v: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ v)
+            .wrapping_mul(0x517c_c1b7_2722_0a95);
+    }
+}
+
+impl Hasher for FxHasher {
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.mix(b as u64);
+        }
+    }
+    fn write_u8(&mut self, n: u8) {
+        self.mix(n as u64);
+    }
+    fn write_u32(&mut self, n: u32) {
+        self.mix(n as u64);
+    }
+    fn write_u64(&mut self, n: u64) {
+        self.mix(n);
+    }
+    fn write_usize(&mut self, n: usize) {
+        self.mix(n as u64);
+    }
+}
+
+type FxMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+// ================================================================ Life
+
+/// Quadtree node: children in `[nw, ne, sw, se]` order. A node of
+/// level `L` covers a `2^L x 2^L` square; leaves are level 2.
+#[derive(Clone, Debug)]
+struct Node {
+    kids: [u32; 4],
+    level: u8,
+}
+
+/// Memoizing HashLife engine for Conway's Game of Life on a square
+/// power-of-two torus. Reusable across calls; keeps its caches warm.
+#[derive(Debug)]
+pub struct LifeHash {
+    nodes: Vec<Node>,
+    intern: FxMap<[u32; 4], u32>,
+    memo: FxMap<(u32, u8), u32>,
+    node_cap: usize,
+    hits: u64,
+}
+
+impl Default for LifeHash {
+    fn default() -> Self {
+        LifeHash::new(DEFAULT_NODE_CAP)
+    }
+}
+
+impl LifeHash {
+    /// An engine whose arena is wiped and rebuilt past `node_cap`
+    /// interned nodes.
+    pub fn new(node_cap: usize) -> LifeHash {
+        LifeHash {
+            nodes: Vec::new(),
+            intern: FxMap::default(),
+            memo: FxMap::default(),
+            node_cap: node_cap.max(64),
+            hits: 0,
+        }
+    }
+
+    /// Interned (non-leaf) nodes currently alive.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Memo-table hits since construction.
+    pub fn memo_hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Advance a packed Life board (`size` rows of `words_for(size)`
+    /// u64 words, torus) by `steps`. Requires `size` to be a power of
+    /// two, at least 4. Bit-identical to `LifeKernel::rollout`.
+    pub fn advance(&mut self, grid: &mut [u64], size: usize, steps: usize) {
+        assert!(size >= 4 && size.is_power_of_two(),
+                "hashlife needs a power-of-two board side >= 4, got {size}");
+        let wpr = bits::words_for(size);
+        assert_eq!(grid.len(), size * wpr, "grid length mismatch");
+        if steps == 0 {
+            return;
+        }
+        let k = size.trailing_zeros() as u8;
+        let mut root = self.build(grid, size);
+        let mut remaining = steps;
+        while remaining > 0 {
+            // Largest power-of-two chunk the torus trick allows.
+            let jmax = u32::from(k) - 1;
+            let j = (usize::BITS - 1 - remaining.leading_zeros()).min(jmax);
+            let wrapped = self.join([root, root, root, root]);
+            let shifted = self.step(wrapped, j as u8);
+            root = self.unshift(shifted);
+            remaining -= 1usize << j;
+            if self.nodes.len() >= self.node_cap && remaining > 0 {
+                root = self.gc(root, grid, size);
+            }
+        }
+        self.expand(root, grid, size);
+        if self.nodes.len() >= self.node_cap {
+            self.wipe();
+        }
+    }
+
+    // ---------------------------------------------------- tree algebra
+
+    fn level_of(&self, id: u32) -> u8 {
+        if id < LEAF_BASE {
+            2
+        } else {
+            self.nodes[(id - LEAF_BASE) as usize].level
+        }
+    }
+
+    fn kids(&self, id: u32) -> [u32; 4] {
+        debug_assert!(id >= LEAF_BASE, "leaf has no kids");
+        self.nodes[(id - LEAF_BASE) as usize].kids
+    }
+
+    fn join(&mut self, kids: [u32; 4]) -> u32 {
+        if let Some(&id) = self.intern.get(&kids) {
+            return id;
+        }
+        let level = self.level_of(kids[0]) + 1;
+        debug_assert!(kids.iter().all(|&c| self.level_of(c) + 1 == level));
+        assert!(self.nodes.len() < (u32::MAX - LEAF_BASE) as usize,
+                "hashlife arena overflow");
+        let id = LEAF_BASE + self.nodes.len() as u32;
+        self.nodes.push(Node { kids, level });
+        self.intern.insert(kids, id);
+        id
+    }
+
+    /// Horizontal middle of two side-by-side same-level nodes.
+    fn hmid(&mut self, a: u32, b: u32) -> u32 {
+        if a < LEAF_BASE {
+            leaf_hmid(a as u16, b as u16) as u32
+        } else {
+            let (ka, kb) = (self.kids(a), self.kids(b));
+            self.join([ka[1], kb[0], ka[3], kb[2]])
+        }
+    }
+
+    /// Vertical middle of two stacked same-level nodes.
+    fn vmid(&mut self, t: u32, b: u32) -> u32 {
+        if t < LEAF_BASE {
+            leaf_vmid(t as u16, b as u16) as u32
+        } else {
+            let (kt, kb) = (self.kids(t), self.kids(b));
+            self.join([kt[2], kt[3], kb[0], kb[1]])
+        }
+    }
+
+    /// Centre sub-node (one level down) of a level >= 3 node.
+    fn centre(&mut self, id: u32) -> u32 {
+        let k = self.kids(id);
+        if self.level_of(id) == 3 {
+            leaf_centre(k[0] as u16, k[1] as u16, k[2] as u16, k[3] as u16)
+                as u32
+        } else {
+            let (nw, ne) = (self.kids(k[0]), self.kids(k[1]));
+            let (sw, se) = (self.kids(k[2]), self.kids(k[3]));
+            self.join([nw[3], ne[2], sw[1], se[0]])
+        }
+    }
+
+    /// THE HashLife function: centre of `id` (level `L`) advanced
+    /// `2^j` steps, `j <= L-2`; result has level `L-1`. Memoized on the
+    /// canonical id, which is where all the speed comes from.
+    fn step(&mut self, id: u32, j: u8) -> u32 {
+        if let Some(&r) = self.memo.get(&(id, j)) {
+            self.hits += 1;
+            return r;
+        }
+        let level = self.level_of(id);
+        debug_assert!(level >= 3 && j <= level - 2);
+        let result = if level == 3 {
+            let mut b = self.bits8(id);
+            for _ in 0..1u32 << j {
+                b = life8(b);
+            }
+            centre8(b) as u32
+        } else {
+            let k = self.kids(id);
+            // Nine overlapping pseudo-children, one level down.
+            let n = [
+                k[0],
+                self.hmid(k[0], k[1]),
+                k[1],
+                self.vmid(k[0], k[2]),
+                self.centre(id),
+                self.vmid(k[1], k[3]),
+                k[2],
+                self.hmid(k[2], k[3]),
+                k[3],
+            ];
+            let full = j == level - 2;
+            let j1 = if full { level - 3 } else { j };
+            let mut t = [0u32; 9];
+            for (ti, &ni) in t.iter_mut().zip(n.iter()) {
+                *ti = self.step(ni, j1);
+            }
+            let q = [
+                self.join([t[0], t[1], t[3], t[4]]),
+                self.join([t[1], t[2], t[4], t[5]]),
+                self.join([t[3], t[4], t[6], t[7]]),
+                self.join([t[4], t[5], t[7], t[8]]),
+            ];
+            let mut r = [0u32; 4];
+            for (ri, &qi) in r.iter_mut().zip(q.iter()) {
+                *ri = if full {
+                    // Second half of the 2^(L-2) advance.
+                    self.step(qi, level - 3)
+                } else {
+                    // Already advanced far enough: just re-centre.
+                    self.centre(qi)
+                };
+            }
+            self.join(r)
+        };
+        self.memo.insert((id, j), result);
+        result
+    }
+
+    /// Undo the `(S/2, S/2)` torus shift: swap quadrants diagonally.
+    fn unshift(&mut self, id: u32) -> u32 {
+        if id < LEAF_BASE {
+            leaf_swap(id as u16) as u32
+        } else {
+            let k = self.kids(id);
+            self.join([k[3], k[2], k[1], k[0]])
+        }
+    }
+
+    /// 8x8 bitmap (bit `y*8+x`) of a level-3 node.
+    fn bits8(&self, id: u32) -> u64 {
+        let k = self.kids(id);
+        let mut b = 0u64;
+        for dy in 0..4 {
+            let nw = (k[0] >> (4 * dy)) & 0xF;
+            let ne = (k[1] >> (4 * dy)) & 0xF;
+            let sw = (k[2] >> (4 * dy)) & 0xF;
+            let se = (k[3] >> (4 * dy)) & 0xF;
+            b |= ((nw as u64) | ((ne as u64) << 4)) << (8 * dy);
+            b |= ((sw as u64) | ((se as u64) << 4)) << (8 * (dy + 4));
+        }
+        b
+    }
+
+    // ------------------------------------------------- grid conversion
+
+    fn build(&mut self, grid: &[u64], size: usize) -> u32 {
+        let wpr = bits::words_for(size);
+        self.build_rec(grid, wpr, 0, 0, size)
+    }
+
+    fn build_rec(&mut self, grid: &[u64], wpr: usize, y0: usize,
+                 x0: usize, sz: usize) -> u32 {
+        if sz == 4 {
+            let mut leaf = 0u16;
+            for dy in 0..4 {
+                let nib = (grid[(y0 + dy) * wpr + x0 / 64] >> (x0 % 64))
+                    & 0xF;
+                leaf |= (nib as u16) << (4 * dy);
+            }
+            leaf as u32
+        } else {
+            let h = sz / 2;
+            let nw = self.build_rec(grid, wpr, y0, x0, h);
+            let ne = self.build_rec(grid, wpr, y0, x0 + h, h);
+            let sw = self.build_rec(grid, wpr, y0 + h, x0, h);
+            let se = self.build_rec(grid, wpr, y0 + h, x0 + h, h);
+            self.join([nw, ne, sw, se])
+        }
+    }
+
+    fn expand(&self, root: u32, grid: &mut [u64], size: usize) {
+        let wpr = bits::words_for(size);
+        grid.fill(0);
+        self.expand_rec(root, grid, wpr, 0, 0, size);
+    }
+
+    fn expand_rec(&self, id: u32, grid: &mut [u64], wpr: usize,
+                  y0: usize, x0: usize, sz: usize) {
+        if sz == 4 {
+            for dy in 0..4 {
+                let nib = ((id >> (4 * dy)) & 0xF) as u64;
+                grid[(y0 + dy) * wpr + x0 / 64] |= nib << (x0 % 64);
+            }
+        } else {
+            let h = sz / 2;
+            let k = self.kids(id);
+            self.expand_rec(k[0], grid, wpr, y0, x0, h);
+            self.expand_rec(k[1], grid, wpr, y0, x0 + h, h);
+            self.expand_rec(k[2], grid, wpr, y0 + h, x0, h);
+            self.expand_rec(k[3], grid, wpr, y0 + h, x0 + h, h);
+        }
+    }
+
+    fn wipe(&mut self) {
+        self.nodes.clear();
+        self.intern.clear();
+        self.memo.clear();
+    }
+
+    /// Serialize `root`, wipe every table, re-intern from the grid.
+    /// `grid` is the caller's buffer, used as scratch — it is rewritten
+    /// by the final `expand` anyway.
+    fn gc(&mut self, root: u32, grid: &mut [u64], size: usize) -> u32 {
+        self.expand(root, grid, size);
+        self.wipe();
+        self.build(grid, size)
+    }
+}
+
+// 4x4 leaf bitmaps: bit `y*4+x`, row-major, LSB first.
+
+/// Columns 2..6 of the 4x8 strip `[a | b]`.
+fn leaf_hmid(a: u16, b: u16) -> u16 {
+    let mut out = 0u16;
+    for y in 0..4 {
+        let ar = (a >> (4 * y)) & 0xF;
+        let br = (b >> (4 * y)) & 0xF;
+        out |= (((ar >> 2) | (br << 2)) & 0xF) << (4 * y);
+    }
+    out
+}
+
+/// Rows 2..6 of the 8x4 strip `[t / b]`.
+fn leaf_vmid(t: u16, b: u16) -> u16 {
+    (t >> 8) | (b << 8)
+}
+
+/// Centre 4x4 of the 8x8 square assembled from four leaves.
+fn leaf_centre(nw: u16, ne: u16, sw: u16, se: u16) -> u16 {
+    leaf_vmid(leaf_hmid(nw, ne), leaf_hmid(sw, se))
+}
+
+/// Torus-shift a leaf by (2, 2): swap quadrants diagonally.
+fn leaf_swap(v: u16) -> u16 {
+    let mut out = 0u16;
+    for y in 0..4 {
+        let row = (v >> (4 * ((y + 2) % 4))) & 0xF;
+        out |= (((row >> 2) | (row << 2)) & 0xF) << (4 * y);
+    }
+    out
+}
+
+/// One Life step of an 8x8 bitmap with dead cells outside — only the
+/// shrinking centre cone is trusted by callers.
+fn life8(b: u64) -> u64 {
+    let mut out = 0u64;
+    for y in 0..8i32 {
+        for x in 0..8i32 {
+            let mut n = 0;
+            for dy in -1..=1i32 {
+                for dx in -1..=1i32 {
+                    if dy == 0 && dx == 0 {
+                        continue;
+                    }
+                    let (yy, xx) = (y + dy, x + dx);
+                    if (0..8).contains(&yy) && (0..8).contains(&xx) {
+                        n += (b >> (yy * 8 + xx)) & 1;
+                    }
+                }
+            }
+            let alive = (b >> (y * 8 + x)) & 1 == 1;
+            if n == 3 || (n == 2 && alive) {
+                out |= 1 << (y * 8 + x);
+            }
+        }
+    }
+    out
+}
+
+/// Centre 4x4 of an 8x8 bitmap.
+fn centre8(b: u64) -> u16 {
+    let mut out = 0u16;
+    for dy in 0..4 {
+        out |= (((b >> ((dy + 2) * 8 + 2)) & 0xF) as u16) << (4 * dy);
+    }
+    out
+}
+
+// ================================================================= ECA
+
+/// Binary-tree node for the 1D engine: `[left, right]`. A level-`L`
+/// node covers `2^L` cells; leaves are level 4 (16 cells in the id).
+#[derive(Clone, Debug)]
+struct Node1 {
+    kids: [u32; 2],
+    level: u8,
+}
+
+/// The 1D HashLife analogue for elementary CAs on a power-of-two ring.
+#[derive(Debug)]
+pub struct EcaHash {
+    rule: u8,
+    nodes: Vec<Node1>,
+    intern: FxMap<[u32; 2], u32>,
+    memo: FxMap<(u32, u8), u32>,
+    node_cap: usize,
+    hits: u64,
+}
+
+impl EcaHash {
+    pub fn new(rule: u8, node_cap: usize) -> EcaHash {
+        EcaHash {
+            rule,
+            nodes: Vec::new(),
+            intern: FxMap::default(),
+            memo: FxMap::default(),
+            node_cap: node_cap.max(64),
+            hits: 0,
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn memo_hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Advance a packed ECA row (width `w`, torus) by `steps`.
+    /// Requires `w` to be a power of two, at least 16. Bit-identical to
+    /// `eca::rollout_row`.
+    pub fn advance(&mut self, row: &mut [u64], w: usize, steps: usize) {
+        assert!(w >= 16 && w.is_power_of_two(),
+                "1D hashlife needs a power-of-two width >= 16, got {w}");
+        assert_eq!(row.len(), bits::words_for(w), "row length mismatch");
+        if steps == 0 {
+            return;
+        }
+        let m = w.trailing_zeros() as u8;
+        let mut root = self.build(row, w);
+        let mut remaining = steps;
+        while remaining > 0 {
+            let jmax = u32::from(m) - 1;
+            let j = (usize::BITS - 1 - remaining.leading_zeros()).min(jmax);
+            let wrapped = self.join([root, root]);
+            let shifted = self.step(wrapped, j as u8);
+            root = self.unshift(shifted);
+            remaining -= 1usize << j;
+            if self.nodes.len() >= self.node_cap && remaining > 0 {
+                root = self.gc(root, row, w);
+            }
+        }
+        self.expand(root, row, w);
+        if self.nodes.len() >= self.node_cap {
+            self.wipe();
+        }
+    }
+
+    fn level_of(&self, id: u32) -> u8 {
+        if id < LEAF_BASE {
+            4
+        } else {
+            self.nodes[(id - LEAF_BASE) as usize].level
+        }
+    }
+
+    fn kids(&self, id: u32) -> [u32; 2] {
+        self.nodes[(id - LEAF_BASE) as usize].kids
+    }
+
+    fn join(&mut self, kids: [u32; 2]) -> u32 {
+        if let Some(&id) = self.intern.get(&kids) {
+            return id;
+        }
+        let level = self.level_of(kids[0]) + 1;
+        debug_assert_eq!(self.level_of(kids[1]) + 1, level);
+        assert!(self.nodes.len() < (u32::MAX - LEAF_BASE) as usize,
+                "hashlife arena overflow");
+        let id = LEAF_BASE + self.nodes.len() as u32;
+        self.nodes.push(Node1 { kids, level });
+        self.intern.insert(kids, id);
+        id
+    }
+
+    /// Middle half of two adjacent same-level nodes.
+    fn mid(&mut self, l: u32, r: u32) -> u32 {
+        if l < LEAF_BASE {
+            ((l >> 8) | (r << 8)) as u16 as u32
+        } else {
+            let (kl, kr) = (self.kids(l), self.kids(r));
+            self.join([kl[1], kr[0]])
+        }
+    }
+
+    fn centre(&mut self, id: u32) -> u32 {
+        let k = self.kids(id);
+        self.mid(k[0], k[1])
+    }
+
+    /// Centre half of `id` (level `L`) advanced `2^j` steps,
+    /// `j <= L-2`; result level `L-1`. Memoized.
+    fn step(&mut self, id: u32, j: u8) -> u32 {
+        if let Some(&r) = self.memo.get(&(id, j)) {
+            self.hits += 1;
+            return r;
+        }
+        let level = self.level_of(id);
+        debug_assert!(level >= 5 && j <= level - 2);
+        let result = if level == 5 {
+            let k = self.kids(id);
+            let mut x = k[0] | (k[1] << 16);
+            for _ in 0..1u32 << j {
+                x = step32(self.rule, x);
+            }
+            (x >> 8) as u16 as u32
+        } else {
+            let k = self.kids(id);
+            let m = self.mid(k[0], k[1]);
+            let full = j == level - 2;
+            let j1 = if full { level - 3 } else { j };
+            let t0 = self.step(k[0], j1);
+            let t1 = self.step(m, j1);
+            let t2 = self.step(k[1], j1);
+            let ql = self.join([t0, t1]);
+            let qr = self.join([t1, t2]);
+            let (rl, rr) = if full {
+                (self.step(ql, level - 3), self.step(qr, level - 3))
+            } else {
+                (self.centre(ql), self.centre(qr))
+            };
+            self.join([rl, rr])
+        };
+        self.memo.insert((id, j), result);
+        result
+    }
+
+    /// Undo the `w/2` torus shift: swap halves.
+    fn unshift(&mut self, id: u32) -> u32 {
+        if id < LEAF_BASE {
+            let v = id as u16;
+            ((v >> 8) | (v << 8)) as u32
+        } else {
+            let k = self.kids(id);
+            self.join([k[1], k[0]])
+        }
+    }
+
+    fn build(&mut self, row: &[u64], w: usize) -> u32 {
+        self.build_rec(row, 0, w)
+    }
+
+    fn build_rec(&mut self, row: &[u64], p0: usize, sz: usize) -> u32 {
+        if sz == 16 {
+            ((row[p0 / 64] >> (p0 % 64)) & 0xFFFF) as u32
+        } else {
+            let h = sz / 2;
+            let l = self.build_rec(row, p0, h);
+            let r = self.build_rec(row, p0 + h, h);
+            self.join([l, r])
+        }
+    }
+
+    fn expand(&self, root: u32, row: &mut [u64], w: usize) {
+        row.fill(0);
+        self.expand_rec(root, row, 0, w);
+    }
+
+    fn expand_rec(&self, id: u32, row: &mut [u64], p0: usize, sz: usize) {
+        if sz == 16 {
+            row[p0 / 64] |= ((id & 0xFFFF) as u64) << (p0 % 64);
+        } else {
+            let h = sz / 2;
+            let k = self.kids(id);
+            self.expand_rec(k[0], row, p0, h);
+            self.expand_rec(k[1], row, p0 + h, h);
+        }
+    }
+
+    fn wipe(&mut self) {
+        self.nodes.clear();
+        self.intern.clear();
+        self.memo.clear();
+    }
+
+    fn gc(&mut self, root: u32, row: &mut [u64], w: usize) -> u32 {
+        self.expand(root, row, w);
+        self.wipe();
+        self.build(row, w)
+    }
+}
+
+/// One ECA step of 32 cells with dead cells outside; callers trust only
+/// the shrinking centre cone.
+fn step32(rule: u8, x: u32) -> u32 {
+    let mut out = 0u32;
+    for i in 0..32u32 {
+        let l = if i == 0 { 0 } else { (x >> (i - 1)) & 1 };
+        let c = (x >> i) & 1;
+        let r = if i == 31 { 0 } else { (x >> (i + 1)) & 1 };
+        let p = (l << 2) | (c << 1) | r;
+        out |= ((u32::from(rule) >> p) & 1) << i;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaf_swap_is_an_involution() {
+        for v in [0u16, 0x8421, 0xFFFF, 0x1234, 0x0F0F] {
+            assert_eq!(leaf_swap(leaf_swap(v)), v);
+        }
+        // Bit (0,0) moves to (2,2) = bit 10.
+        assert_eq!(leaf_swap(1), 1 << 10);
+    }
+
+    #[test]
+    fn life_grid_roundtrips_through_the_tree() {
+        let size = 16;
+        let wpr = bits::words_for(size);
+        let mut grid = vec![0u64; size * wpr];
+        for (i, word) in grid.iter_mut().enumerate() {
+            *word = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        for row in grid.chunks_mut(wpr) {
+            bits::mask_tail(row, size);
+        }
+        let orig = grid.clone();
+        let mut hl = LifeHash::new(1 << 12);
+        let root = hl.build(&grid, size);
+        grid.fill(0);
+        hl.expand(root, &mut grid, size);
+        assert_eq!(grid, orig);
+    }
+
+    #[test]
+    fn eca_row_roundtrips_through_the_tree() {
+        let w = 128;
+        let mut row = vec![0xDEAD_BEEF_CAFE_F00Du64, 0x0123_4567_89AB_CDEF];
+        let orig = row.clone();
+        let mut hl = EcaHash::new(30, 1 << 12);
+        let root = hl.build(&row, w);
+        row.fill(0);
+        hl.expand(root, &mut row, w);
+        assert_eq!(row, orig);
+    }
+
+    #[test]
+    fn blinker_oscillates_with_period_two() {
+        // A horizontal blinker at rows 3, cols 2..5 of an 8x8 torus.
+        let size = 8;
+        let mut grid = vec![0u64; size];
+        grid[3] = 0b0011_1000;
+        let orig = grid.clone();
+        let mut hl = LifeHash::default();
+        hl.advance(&mut grid, size, 1);
+        let mut vertical = vec![0u64; size];
+        vertical[2] = 0b0001_0000;
+        vertical[3] = 0b0001_0000;
+        vertical[4] = 0b0001_0000;
+        assert_eq!(grid, vertical, "after one step");
+        hl.advance(&mut grid, size, 1);
+        assert_eq!(grid, orig, "after two steps");
+        hl.advance(&mut grid, size, 2);
+        assert_eq!(grid, orig, "one macro-step of two");
+    }
+}

@@ -203,6 +203,134 @@ impl LeniaKernel {
             board.copy_from_slice(scratch);
         }
     }
+
+    /// Activity-map tile grid for an `h x w` board (TILE-edge tiles,
+    /// matching the cache tiles of [`step_scalar`](Self::step_scalar)).
+    pub fn tile_dims(h: usize, w: usize) -> (usize, usize) {
+        (h.div_ceil(TILE), w.div_ceil(TILE))
+    }
+
+    /// Dirty-dilation halo in tiles: `radius` cells rounded up.
+    pub fn halo_tiles(&self) -> usize {
+        self.params.radius.div_ceil(TILE).max(1)
+    }
+
+    /// One activity-tracked step: recompute only tiles whose
+    /// radius-halo changed last step, then commit + re-mark by exact
+    /// f32 *bit* comparison (so the changed-mask is exact, `-0.0` vs
+    /// `+0.0` and NaN included). Two passes keep read-before-write: all
+    /// recomputes read `board` (old), write `scratch`; the commit pass
+    /// copies back. Returns `(recomputed, skipped)` tile counts.
+    ///
+    /// Bit-identical to [`step`](Self::step): skipped tiles provably
+    /// cannot change, recomputed cells run the same
+    /// [`cell_scalar`](Self::cell_scalar) the dense sweep runs (and the
+    /// AVX2 lanes match bit for bit — `native_simd_props`).
+    ///
+    /// When most tiles are active the per-cell scalar recompute would
+    /// lose to the dense AVX2 sweep, so past ~60% occupancy this falls
+    /// back to one dense step plus a full diff — the worst case costs a
+    /// dense step plus one compare per cell, never more.
+    pub fn step_sparse(&self, board: &mut [f32], scratch: &mut [f32],
+                       h: usize, w: usize, map: &mut super::activity::ActivityMap)
+        -> (u64, u64) {
+        let (tr, tc) = Self::tile_dims(h, w);
+        let total = (tr * tc) as u64;
+        let halo = self.halo_tiles();
+        let needed = map.begin_step(halo, halo) as u64;
+        if needed == 0 {
+            return (0, total);
+        }
+        if needed * 8 > total * 5 {
+            // > 62.5% of tiles active: dense step + exact diff.
+            self.step(board, scratch, h, w);
+            for ty in 0..tr {
+                for tx in 0..tc {
+                    if tile_bits_differ(board, scratch, h, w, ty, tx) {
+                        map.mark(ty, tx);
+                    }
+                }
+            }
+            board.copy_from_slice(scratch);
+            return (total, 0);
+        }
+        // Pass 1: recompute needed tiles into scratch; `board` stays
+        // the old state throughout, so tiles can be done in any order.
+        for ty in 0..tr {
+            if !map.row_needed(ty) {
+                continue;
+            }
+            for wi in 0..map.words_per_row() {
+                let mut tiles = map.needs_word(ty, wi);
+                while tiles != 0 {
+                    let tx = wi * 64 + tiles.trailing_zeros() as usize;
+                    tiles &= tiles - 1;
+                    let (y1, x1) = (((ty + 1) * TILE).min(h),
+                                    ((tx + 1) * TILE).min(w));
+                    for y in ty * TILE..y1 {
+                        for x in tx * TILE..x1 {
+                            self.cell_scalar(board, scratch, h, w, y, x);
+                        }
+                    }
+                }
+            }
+        }
+        // Pass 2: commit recomputed tiles, marking exact bit changes.
+        for ty in 0..tr {
+            if !map.row_needed(ty) {
+                continue;
+            }
+            for wi in 0..map.words_per_row() {
+                let mut tiles = map.needs_word(ty, wi);
+                while tiles != 0 {
+                    let tx = wi * 64 + tiles.trailing_zeros() as usize;
+                    tiles &= tiles - 1;
+                    if tile_bits_differ(board, scratch, h, w, ty, tx) {
+                        map.mark(ty, tx);
+                    }
+                    let (y1, x1) = (((ty + 1) * TILE).min(h),
+                                    ((tx + 1) * TILE).min(w));
+                    for y in ty * TILE..y1 {
+                        let (a, b) = (y * w + tx * TILE, y * w + x1);
+                        board[a..b].copy_from_slice(&scratch[a..b]);
+                    }
+                }
+            }
+        }
+        (needed, total - needed)
+    }
+
+    /// Run `steps` activity-tracked updates; the map carries dirty
+    /// state across steps (and calls). Returns summed
+    /// `(recomputed, skipped)` tile counts.
+    pub fn rollout_sparse(&self, board: &mut [f32], scratch: &mut [f32],
+                          h: usize, w: usize, steps: usize,
+                          map: &mut super::activity::ActivityMap)
+        -> (u64, u64) {
+        let (mut recomputed, mut skipped) = (0, 0);
+        for _ in 0..steps {
+            let (r, s) = self.step_sparse(board, scratch, h, w, map);
+            recomputed += r;
+            skipped += s;
+        }
+        (recomputed, skipped)
+    }
+}
+
+/// Whether any cell of tile (`ty`, `tx`) differs between `a` and `b`
+/// as raw f32 bits — the exactness the activity contract needs
+/// (`==` would call `-0.0` unchanged and NaN changed-forever).
+fn tile_bits_differ(a: &[f32], b: &[f32], h: usize, w: usize, ty: usize,
+                    tx: usize) -> bool {
+    let (y1, x1) = (((ty + 1) * TILE).min(h), ((tx + 1) * TILE).min(w));
+    for y in ty * TILE..y1 {
+        for x in tx * TILE..x1 {
+            if a[y * w + x].to_bits() != b[y * w + x].to_bits() {
+                return true;
+            }
+        }
+    }
+    false
 }
 
 // ----------------------------------------------------- path selection

@@ -8,7 +8,35 @@
 //! `c1 & !c2 & !c3 & (c0 | alive)`. 64 cells per word, bit-exact with
 //! [`crate::automata::LifeSim`] (same periodic Moore neighbourhood).
 
+use crate::backend::native::activity::ActivityMap;
 use crate::backend::native::bits;
+
+/// B3/S23 applied to one word given its eight neighbour planes — the
+/// single source of truth for both the dense and the sparse stepper,
+/// so sparse stepping is bit-identical by construction. Tail bits stay
+/// clean: every plane has a clean tail and the carry-save chain only
+/// ANDs/XORs/ORs them.
+#[inline]
+fn life_word(planes: [u64; 8], alive: u64) -> u64 {
+    // Carry-save accumulation into binary counter planes (0..8 fits
+    // in 4 bits).
+    let (mut c0, mut c1, mut c2, mut c3) = (0u64, 0u64, 0u64, 0u64);
+    for plane in planes {
+        let mut carry = plane;
+        let t0 = c0 & carry;
+        c0 ^= carry;
+        carry = t0;
+        let t1 = c1 & carry;
+        c1 ^= carry;
+        carry = t1;
+        let t2 = c2 & carry;
+        c2 ^= carry;
+        carry = t2;
+        c3 |= carry;
+    }
+    // n == 3 -> born/survive; n == 2 -> survive if alive.
+    c1 & !c2 & !c3 & (c0 | alive)
+}
 
 /// Reusable per-board scratch (rotated row planes + next grid).
 pub struct LifeKernel {
@@ -18,6 +46,8 @@ pub struct LifeKernel {
     left: Vec<u64>,
     right: Vec<u64>,
     next: Vec<u64>,
+    /// Rows the sparse stepper must snapshot+rotate this step.
+    row_in: Vec<bool>,
 }
 
 impl LifeKernel {
@@ -30,6 +60,7 @@ impl LifeKernel {
             left: vec![0; h * wpr],
             right: vec![0; h * wpr],
             next: vec![0; h * wpr],
+            row_in: vec![false; h],
         }
     }
 
@@ -62,24 +93,8 @@ impl LifeKernel {
                     grid[down * wpr + i],
                     self.right[down * wpr + i],
                 ];
-                // Carry-save accumulation into binary counter planes.
-                let (mut c0, mut c1, mut c2, mut c3) = (0u64, 0u64, 0u64, 0u64);
-                for plane in planes {
-                    let mut carry = plane;
-                    let t0 = c0 & carry;
-                    c0 ^= carry;
-                    carry = t0;
-                    let t1 = c1 & carry;
-                    c1 ^= carry;
-                    carry = t1;
-                    let t2 = c2 & carry;
-                    c2 ^= carry;
-                    carry = t2;
-                    c3 |= carry;
-                }
                 let alive = grid[y * wpr + i];
-                // n == 3 -> born/survive; n == 2 -> survive if alive.
-                self.next[y * wpr + i] = c1 & !c2 & !c3 & (c0 | alive);
+                self.next[y * wpr + i] = life_word(planes, alive);
             }
             bits::mask_tail(&mut self.next[y * wpr..(y + 1) * wpr], w);
         }
@@ -92,6 +107,99 @@ impl LifeKernel {
         for _ in 0..steps {
             self.step(grid);
         }
+    }
+
+    /// One activity-tracked Life step: recompute only word-tiles whose
+    /// 1-tile halo changed last step (the map's protocol), mark the
+    /// tiles that changed now. Quiescent rows cost nothing — not even
+    /// the rotation pass. Returns `(recomputed, skipped)` tile counts.
+    /// Bit-identical to [`step`](Self::step): skipped tiles provably
+    /// cannot change, recomputed ones go through the same
+    /// [`life_word`].
+    pub fn step_sparse(&mut self, grid: &mut [u64],
+                       map: &mut ActivityMap) -> (u64, u64) {
+        let (h, w, wpr) = (self.h, self.w, self.wpr);
+        debug_assert_eq!(grid.len(), h * wpr);
+        let total = (h * wpr) as u64;
+        let needed = map.begin_step(1, 1) as u64;
+        if needed == 0 {
+            return (0, total);
+        }
+
+        // Input rows: every row a needed tile reads (needed rows
+        // dilated one row with wrap). Only these get snapshotted and
+        // rotated.
+        self.row_in.fill(false);
+        for y in 0..h {
+            if map.row_needed(y) {
+                self.row_in[(y + h - 1) % h] = true;
+                self.row_in[y] = true;
+                self.row_in[(y + 1) % h] = true;
+            }
+        }
+        // Snapshot old centres into `next` (reused as the old-value
+        // plane so in-place writes below can't corrupt reads) and
+        // build the rotated planes for input rows.
+        for y in 0..h {
+            if !self.row_in[y] {
+                continue;
+            }
+            let row = &grid[y * wpr..(y + 1) * wpr];
+            self.next[y * wpr..(y + 1) * wpr].copy_from_slice(row);
+            bits::rot_up(row, &mut self.left[y * wpr..(y + 1) * wpr], w);
+            bits::rot_down(row, &mut self.right[y * wpr..(y + 1) * wpr],
+                           w);
+        }
+
+        let rem = w % 64;
+        for y in 0..h {
+            if !map.row_needed(y) {
+                continue;
+            }
+            let up = (y + h - 1) % h;
+            let down = (y + 1) % h;
+            for wi in 0..map.words_per_row() {
+                let mut tiles = map.needs_word(y, wi);
+                while tiles != 0 {
+                    let i = wi * 64 + tiles.trailing_zeros() as usize;
+                    tiles &= tiles - 1;
+                    let planes = [
+                        self.left[up * wpr + i],
+                        self.next[up * wpr + i],
+                        self.right[up * wpr + i],
+                        self.left[y * wpr + i],
+                        self.right[y * wpr + i],
+                        self.left[down * wpr + i],
+                        self.next[down * wpr + i],
+                        self.right[down * wpr + i],
+                    ];
+                    let alive = self.next[y * wpr + i];
+                    let mut out = life_word(planes, alive);
+                    if i == wpr - 1 && rem != 0 {
+                        out &= (1u64 << rem) - 1;
+                    }
+                    if out != alive {
+                        map.mark(y, i);
+                        grid[y * wpr + i] = out;
+                    }
+                }
+            }
+        }
+        (needed, total - needed)
+    }
+
+    /// Run `steps` activity-tracked updates; the map carries dirty
+    /// state across steps (and across calls, for resident boards).
+    /// Returns summed `(recomputed, skipped)` tile counts.
+    pub fn rollout_sparse(&mut self, grid: &mut [u64], steps: usize,
+                          map: &mut ActivityMap) -> (u64, u64) {
+        let (mut recomputed, mut skipped) = (0, 0);
+        for _ in 0..steps {
+            let (r, s) = self.step_sparse(grid, map);
+            recomputed += r;
+            skipped += s;
+        }
+        (recomputed, skipped)
     }
 }
 

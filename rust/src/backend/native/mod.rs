@@ -1,8 +1,13 @@
 //! The native execution backend: pure-Rust kernels, no XLA, no Python.
 //!
+//! - [`activity`]: per-tile dirty bitmaps (the sparse step paths) and
+//!   the dense/sparse/hashlife cost model, with the `CAX_SPARSE=off`
+//!   escape hatch.
 //! - [`bits`]: bit-packed row substrate (64 cells per u64, periodic).
 //! - [`eca`]: SWAR elementary-CA kernel.
 //! - [`life`]: SWAR Game-of-Life kernel (carry-save neighbour counts).
+//! - [`hashlife`]: memoizing quadtree (Life) / binary-tree (ECA)
+//!   engines for superspeed power-of-two macro-steps on big boards.
 //! - [`fft`]: in-tree FFTs (iterative Cooley–Tukey + Bluestein).
 //! - [`lenia`]: cache-tiled sparse-tap Lenia kernel, the spectral
 //!   FFT kernel (single- and multi-kernel worlds), and the
@@ -50,9 +55,11 @@
 //! `benches/fig3_native.rs` / `fig3_lenia.rs` report SIMD-vs-scalar
 //! rows.
 
+pub mod activity;
 pub mod bits;
 pub mod eca;
 pub mod fft;
+pub mod hashlife;
 pub mod lenia;
 pub mod life;
 pub mod nca;
@@ -61,8 +68,11 @@ pub mod opt;
 pub mod simd;
 pub mod train;
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::{bail, ensure, Result};
 
+use self::activity::{ActivityMap, StepPath};
 use crate::backend::workers::WorkerPool;
 use crate::backend::{
     validate_board, validate_state, Backend, CaProgram, ProgramBackend,
@@ -119,15 +129,18 @@ pub struct NativeBackend {
 impl NativeBackend {
     /// Backend sized to the machine.
     pub fn new() -> NativeBackend {
-        // Resolve (and log) the SIMD dispatch decision eagerly so it
-        // lands at startup, not in the middle of the first launch.
+        // Resolve (and log) the SIMD + activity dispatch decisions
+        // eagerly so they land at startup, not in the middle of the
+        // first launch.
         simd::active();
+        activity::enabled();
         NativeBackend { pool: WorkerPool::new() }
     }
 
     /// Backend with an explicit worker count (1 = sequential).
     pub fn with_threads(threads: usize) -> NativeBackend {
         simd::active();
+        activity::enabled();
         NativeBackend { pool: WorkerPool::with_threads(threads) }
     }
 
@@ -141,19 +154,51 @@ impl NativeBackend {
         simd::status()
     }
 
+    /// Whether launches may take the sparse/HashLife step paths (see
+    /// [`activity::status`]).
+    pub fn activity_status(&self) -> &'static str {
+        activity::status()
+    }
+
     fn eca_rollout(&self, rule: &crate::automata::WolframRule,
                    state: &Tensor, steps: usize) -> Result<Tensor> {
         let _span = obs::span("kernel_eca");
         let (b, w) = (state.shape()[0], state.shape()[1]);
+        let prog = CaProgram::Eca { rule: *rule };
+        let path = activity::select_step_path(&prog, state.shape(), steps);
+        activity::note_path(path);
         let nw = bits::words_for(w);
         let mut packed = vec![0u64; b * nw];
         for i in 0..b {
             bits::pack_row(&state.data()[i * w..(i + 1) * w],
                            &mut packed[i * nw..(i + 1) * nw]);
         }
-        self.pool.for_each_chunk(&mut packed, nw, |_, row| {
-            eca::rollout_row(rule, row, w, steps);
-        });
+        match path {
+            StepPath::Dense => {
+                self.pool.for_each_chunk(&mut packed, nw, |_, row| {
+                    eca::rollout_row(rule, row, w, steps);
+                });
+            }
+            StepPath::Sparse => {
+                let (rec, skp) = (AtomicU64::new(0), AtomicU64::new(0));
+                self.pool.for_each_chunk(&mut packed, nw, |_, row| {
+                    let mut map = ActivityMap::new(0, 1, nw);
+                    let (r, s) =
+                        eca::rollout_row_sparse(rule, row, w, steps,
+                                                &mut map);
+                    rec.fetch_add(r, Ordering::Relaxed);
+                    skp.fetch_add(s, Ordering::Relaxed);
+                });
+                activity::note_tiles(rec.into_inner(), skp.into_inner());
+            }
+            StepPath::HashLife => {
+                self.pool.for_each_chunk(&mut packed, nw, |_, row| {
+                    let mut hl = hashlife::EcaHash::new(
+                        rule.number, hashlife::DEFAULT_NODE_CAP);
+                    hl.advance(row, w, steps);
+                });
+            }
+        }
         let mut out = vec![0.0f32; b * w];
         for i in 0..b {
             bits::unpack_row(&packed[i * nw..(i + 1) * nw],
@@ -166,6 +211,9 @@ impl NativeBackend {
         let _span = obs::span("kernel_life");
         let (b, h, w) =
             (state.shape()[0], state.shape()[1], state.shape()[2]);
+        let path = activity::select_step_path(&CaProgram::Life,
+                                              state.shape(), steps);
+        activity::note_path(path);
         let wpr = bits::words_for(w);
         let words = h * wpr;
         let mut packed = vec![0u64; b * words];
@@ -173,10 +221,31 @@ impl NativeBackend {
             life::pack_board(&state.data()[i * h * w..(i + 1) * h * w], h, w,
                              &mut packed[i * words..(i + 1) * words]);
         }
-        self.pool.for_each_chunk(&mut packed, words, |_, grid| {
-            let mut kern = life::LifeKernel::new(h, w);
-            kern.rollout(grid, steps);
-        });
+        match path {
+            StepPath::Dense => {
+                self.pool.for_each_chunk(&mut packed, words, |_, grid| {
+                    let mut kern = life::LifeKernel::new(h, w);
+                    kern.rollout(grid, steps);
+                });
+            }
+            StepPath::Sparse => {
+                let (rec, skp) = (AtomicU64::new(0), AtomicU64::new(0));
+                self.pool.for_each_chunk(&mut packed, words, |_, grid| {
+                    let mut kern = life::LifeKernel::new(h, w);
+                    let mut map = ActivityMap::new(0, h, wpr);
+                    let (r, s) = kern.rollout_sparse(grid, steps, &mut map);
+                    rec.fetch_add(r, Ordering::Relaxed);
+                    skp.fetch_add(s, Ordering::Relaxed);
+                });
+                activity::note_tiles(rec.into_inner(), skp.into_inner());
+            }
+            StepPath::HashLife => {
+                self.pool.for_each_chunk(&mut packed, words, |_, grid| {
+                    let mut hl = hashlife::LifeHash::default();
+                    hl.advance(grid, w, steps);
+                });
+            }
+        }
         let mut out = vec![0.0f32; b * h * w];
         for i in 0..b {
             life::unpack_board(&packed[i * words..(i + 1) * words], h, w,
@@ -194,6 +263,25 @@ impl NativeBackend {
         let (b, h, w) =
             (state.shape()[0], state.shape()[1], state.shape()[2]);
         let mut data = state.data().to_vec();
+        let prog = CaProgram::Lenia { params };
+        let path = activity::select_step_path(&prog, state.shape(), steps);
+        activity::note_path(path);
+        if path == StepPath::Sparse {
+            let _span = obs::span("kernel_lenia_sparse");
+            let kernel = lenia::LeniaKernel::new(params);
+            let (tr, tc) = lenia::LeniaKernel::tile_dims(h, w);
+            let (rec, skp) = (AtomicU64::new(0), AtomicU64::new(0));
+            self.pool.for_each_chunk(&mut data, h * w, |_, board| {
+                let mut scratch = vec![0.0f32; h * w];
+                let mut map = ActivityMap::new(0, tr, tc);
+                let (r, s) = kernel.rollout_sparse(board, &mut scratch, h,
+                                                   w, steps, &mut map);
+                rec.fetch_add(r, Ordering::Relaxed);
+                skp.fetch_add(s, Ordering::Relaxed);
+            });
+            activity::note_tiles(rec.into_inner(), skp.into_inner());
+            return Tensor::new(vec![b, h, w], data);
+        }
         match lenia::select_path(params.radius, h, w) {
             lenia::LeniaPath::SparseTap => {
                 let _span = obs::span("kernel_lenia_sparse");
@@ -230,16 +318,21 @@ impl NativeBackend {
         Tensor::new(shape, data)
     }
 
-    /// Pull the mutable inner buffers of a uniform resident batch,
-    /// refusing mixed representations — the shared preamble of
+    /// Pull the mutable inner buffers (and their cross-call activity
+    /// maps) of a uniform resident batch, refusing mixed
+    /// representations — the shared preamble of
     /// [`step_resident`](Backend::step_resident).
+    #[allow(clippy::type_complexity)]
     fn resident_bits<'a>(&self, prog: &CaProgram,
                          batch: &'a mut [&mut Resident])
-                         -> Result<Vec<&'a mut Vec<u64>>> {
+                         -> Result<Vec<(&'a mut Vec<u64>,
+                                        &'a mut Option<ActivityMap>)>> {
         let mut rows = Vec::with_capacity(batch.len());
         for r in batch.iter_mut() {
             match &mut **r {
-                Resident::Bits { words, .. } => rows.push(words),
+                Resident::Bits { words, activity, .. } => {
+                    rows.push((words, activity));
+                }
                 other => bail!(
                     "native step_resident({}): wants a bits resident, \
                      got {:?} (admit the state through this backend)",
@@ -251,13 +344,17 @@ impl NativeBackend {
         Ok(rows)
     }
 
+    #[allow(clippy::type_complexity)]
     fn resident_boards<'a>(&self, prog: &CaProgram,
                            batch: &'a mut [&mut Resident])
-                           -> Result<Vec<&'a mut Vec<f32>>> {
+                           -> Result<Vec<(&'a mut Vec<f32>,
+                                          &'a mut Option<ActivityMap>)>> {
         let mut boards = Vec::with_capacity(batch.len());
         for r in batch.iter_mut() {
             match &mut **r {
-                Resident::Board { data, .. } => boards.push(data),
+                Resident::Board { data, activity, .. } => {
+                    boards.push((data, activity));
+                }
                 other => bail!(
                     "native step_resident({}): wants an f32 board \
                      resident, got {:?} (admit the state through this \
@@ -275,11 +372,33 @@ impl NativeBackend {
         let _span = obs::span("kernel_nca");
         let shape = state.shape();
         let (b, h, w, c) = (shape[0], shape[1], shape[2], shape[3]);
+        // NCA's selector is just the on/off gate — no need to clone the
+        // model into a CaProgram to ask it.
+        let path = if activity::enabled() {
+            StepPath::Sparse
+        } else {
+            StepPath::Dense
+        };
+        activity::note_path(path);
         let mut data = state.data().to_vec();
-        self.pool.for_each_chunk(&mut data, h * w * c, |_, board| {
-            let mut scratch = vec![0.0f32; h * w * c];
-            model.rollout(board, &mut scratch, h, w, steps);
-        });
+        if path == StepPath::Sparse {
+            let (tr, tc) = nca::NcaModel::tile_dims(h, w);
+            let (rec, skp) = (AtomicU64::new(0), AtomicU64::new(0));
+            self.pool.for_each_chunk(&mut data, h * w * c, |_, board| {
+                let mut scratch = vec![0.0f32; h * w * c];
+                let mut map = ActivityMap::new(0, tr, tc);
+                let (r, s) = model.rollout_sparse(board, &mut scratch, h,
+                                                  w, steps, &mut map);
+                rec.fetch_add(r, Ordering::Relaxed);
+                skp.fetch_add(s, Ordering::Relaxed);
+            });
+            activity::note_tiles(rec.into_inner(), skp.into_inner());
+        } else {
+            self.pool.for_each_chunk(&mut data, h * w * c, |_, board| {
+                let mut scratch = vec![0.0f32; h * w * c];
+                model.rollout(board, &mut scratch, h, w, steps);
+            });
+        }
         Tensor::new(shape.to_vec(), data)
     }
 }
@@ -331,37 +450,39 @@ impl Backend for NativeBackend {
             CaProgram::Eca { .. } => {
                 let mut words = vec![0u64; bits::words_for(shape[0])];
                 bits::pack_row(board.data(), &mut words);
-                Resident::Bits { words, shape }
+                Resident::Bits { words, shape, activity: None }
             }
             CaProgram::Life => {
                 let (h, w) = (shape[0], shape[1]);
                 let mut words = vec![0u64; h * bits::words_for(w)];
                 life::pack_board(board.data(), h, w, &mut words);
-                Resident::Bits { words, shape }
+                Resident::Bits { words, shape, activity: None }
             }
             CaProgram::Lenia { .. }
             | CaProgram::LeniaMulti(_)
-            | CaProgram::Nca(_) => {
-                Resident::Board { data: board.data().to_vec(), shape }
-            }
+            | CaProgram::Nca(_) => Resident::Board {
+                data: board.data().to_vec(),
+                shape,
+                activity: None,
+            },
         })
     }
 
     fn read_resident(&self, prog: &CaProgram, resident: &Resident)
         -> Result<Tensor> {
         match (prog, resident) {
-            (CaProgram::Eca { .. }, Resident::Bits { words, shape }) => {
+            (CaProgram::Eca { .. }, Resident::Bits { words, shape, .. }) => {
                 let mut out = vec![0.0f32; shape[0]];
                 bits::unpack_row(words, &mut out);
                 Tensor::new(shape.clone(), out)
             }
-            (CaProgram::Life, Resident::Bits { words, shape }) => {
+            (CaProgram::Life, Resident::Bits { words, shape, .. }) => {
                 let (h, w) = (shape[0], shape[1]);
                 let mut out = vec![0.0f32; h * w];
                 life::unpack_board(words, h, w, &mut out);
                 Tensor::new(shape.clone(), out)
             }
-            (_, Resident::Board { data, shape }) => {
+            (_, Resident::Board { data, shape, .. }) => {
                 Tensor::new(shape.clone(), data.clone())
             }
             (_, Resident::Host(t)) => Ok(t.clone()),
@@ -407,63 +528,182 @@ impl Backend for NativeBackend {
             CaProgram::Eca { rule } => {
                 let _span = obs::span("kernel_eca");
                 let w = shape[0];
+                let path = activity::select_step_path(prog, &shape, steps);
+                activity::note_path(path);
                 let mut rows = self.resident_bits(prog, batch)?;
-                self.pool.for_each_chunk(&mut rows, 1, |_, item| {
-                    eca::rollout_row(rule, item[0].as_mut_slice(), w,
-                                     steps);
-                });
+                match path {
+                    StepPath::Dense => {
+                        self.pool.for_each_chunk(&mut rows, 1, |_, item| {
+                            let (words, act) = &mut item[0];
+                            **act = None;
+                            eca::rollout_row(rule, words.as_mut_slice(), w,
+                                             steps);
+                        });
+                    }
+                    StepPath::Sparse => {
+                        let key = activity::prog_key(prog);
+                        let nw = bits::words_for(w);
+                        let (rec, skp) =
+                            (AtomicU64::new(0), AtomicU64::new(0));
+                        self.pool.for_each_chunk(&mut rows, 1, |_, item| {
+                            let (words, act) = &mut item[0];
+                            let map =
+                                activity::ensure_map(*act, key, 1, nw);
+                            let (r, s) = eca::rollout_row_sparse(
+                                rule, words.as_mut_slice(), w, steps, map);
+                            rec.fetch_add(r, Ordering::Relaxed);
+                            skp.fetch_add(s, Ordering::Relaxed);
+                        });
+                        activity::note_tiles(rec.into_inner(),
+                                             skp.into_inner());
+                    }
+                    StepPath::HashLife => {
+                        self.pool.for_each_chunk(&mut rows, 1, |_, item| {
+                            let (words, act) = &mut item[0];
+                            **act = None;
+                            let mut hl = hashlife::EcaHash::new(
+                                rule.number, hashlife::DEFAULT_NODE_CAP);
+                            hl.advance(words.as_mut_slice(), w, steps);
+                        });
+                    }
+                }
             }
             CaProgram::Life => {
                 let _span = obs::span("kernel_life");
                 let (h, w) = (shape[0], shape[1]);
+                let path = activity::select_step_path(prog, &shape, steps);
+                activity::note_path(path);
                 let mut grids = self.resident_bits(prog, batch)?;
-                self.pool.for_each_chunk(&mut grids, 1, |_, item| {
-                    let mut kern = life::LifeKernel::new(h, w);
-                    kern.rollout(item[0].as_mut_slice(), steps);
-                });
+                match path {
+                    StepPath::Dense => {
+                        self.pool.for_each_chunk(&mut grids, 1, |_, item| {
+                            let (words, act) = &mut item[0];
+                            **act = None;
+                            let mut kern = life::LifeKernel::new(h, w);
+                            kern.rollout(words.as_mut_slice(), steps);
+                        });
+                    }
+                    StepPath::Sparse => {
+                        let key = activity::prog_key(prog);
+                        let wpr = bits::words_for(w);
+                        let (rec, skp) =
+                            (AtomicU64::new(0), AtomicU64::new(0));
+                        self.pool.for_each_chunk(&mut grids, 1, |_, item| {
+                            let (words, act) = &mut item[0];
+                            let map =
+                                activity::ensure_map(*act, key, h, wpr);
+                            let mut kern = life::LifeKernel::new(h, w);
+                            let (r, s) = kern.rollout_sparse(
+                                words.as_mut_slice(), steps, map);
+                            rec.fetch_add(r, Ordering::Relaxed);
+                            skp.fetch_add(s, Ordering::Relaxed);
+                        });
+                        activity::note_tiles(rec.into_inner(),
+                                             skp.into_inner());
+                    }
+                    StepPath::HashLife => {
+                        self.pool.for_each_chunk(&mut grids, 1, |_, item| {
+                            let (words, act) = &mut item[0];
+                            **act = None;
+                            let mut hl = hashlife::LifeHash::default();
+                            hl.advance(words.as_mut_slice(), w, steps);
+                        });
+                    }
+                }
             }
             CaProgram::Lenia { params } => {
                 let (h, w) = (shape[0], shape[1]);
+                let path = activity::select_step_path(prog, &shape, steps);
+                activity::note_path(path);
                 let mut boards = self.resident_boards(prog, batch)?;
-                match lenia::select_path(params.radius, h, w) {
-                    lenia::LeniaPath::SparseTap => {
-                        let _span = obs::span("kernel_lenia_sparse");
-                        let kernel = lenia::LeniaKernel::new(*params);
-                        self.pool.for_each_chunk(&mut boards, 1,
-                                                 |_, item| {
-                            let mut scratch = vec![0.0f32; h * w];
-                            kernel.rollout(item[0].as_mut_slice(),
-                                           &mut scratch, h, w, steps);
-                        });
-                    }
-                    lenia::LeniaPath::Fft => {
-                        let _span = obs::span("kernel_lenia_fft");
-                        let plan = lenia::LeniaFft::new(*params, h, w)?;
-                        self.pool.for_each_chunk(&mut boards, 1,
-                                                 |_, item| {
-                            plan.rollout(item[0].as_mut_slice(), steps);
-                        });
+                if path == StepPath::Sparse {
+                    let _span = obs::span("kernel_lenia_sparse");
+                    let kernel = lenia::LeniaKernel::new(*params);
+                    let key = activity::prog_key(prog);
+                    let (tr, tc) = lenia::LeniaKernel::tile_dims(h, w);
+                    let (rec, skp) = (AtomicU64::new(0), AtomicU64::new(0));
+                    self.pool.for_each_chunk(&mut boards, 1, |_, item| {
+                        let (data, act) = &mut item[0];
+                        let map = activity::ensure_map(*act, key, tr, tc);
+                        let mut scratch = vec![0.0f32; h * w];
+                        let (r, s) = kernel.rollout_sparse(
+                            data.as_mut_slice(), &mut scratch, h, w, steps,
+                            map);
+                        rec.fetch_add(r, Ordering::Relaxed);
+                        skp.fetch_add(s, Ordering::Relaxed);
+                    });
+                    activity::note_tiles(rec.into_inner(),
+                                         skp.into_inner());
+                } else {
+                    match lenia::select_path(params.radius, h, w) {
+                        lenia::LeniaPath::SparseTap => {
+                            let _span = obs::span("kernel_lenia_sparse");
+                            let kernel = lenia::LeniaKernel::new(*params);
+                            self.pool.for_each_chunk(&mut boards, 1,
+                                                     |_, item| {
+                                let (data, act) = &mut item[0];
+                                **act = None;
+                                let mut scratch = vec![0.0f32; h * w];
+                                kernel.rollout(data.as_mut_slice(),
+                                               &mut scratch, h, w, steps);
+                            });
+                        }
+                        lenia::LeniaPath::Fft => {
+                            let _span = obs::span("kernel_lenia_fft");
+                            let plan = lenia::LeniaFft::new(*params, h, w)?;
+                            self.pool.for_each_chunk(&mut boards, 1,
+                                                     |_, item| {
+                                let (data, act) = &mut item[0];
+                                **act = None;
+                                plan.rollout(data.as_mut_slice(), steps);
+                            });
+                        }
                     }
                 }
             }
             CaProgram::LeniaMulti(world) => {
                 let _span = obs::span("kernel_lenia_world");
+                activity::note_path(StepPath::Dense);
                 let (h, w) = (shape[1], shape[2]);
                 let plan = lenia::LeniaFft::for_world(world.clone(), h, w)?;
                 let mut boards = self.resident_boards(prog, batch)?;
                 self.pool.for_each_chunk(&mut boards, 1, |_, item| {
-                    plan.rollout(item[0].as_mut_slice(), steps);
+                    let (data, act) = &mut item[0];
+                    **act = None;
+                    plan.rollout(data.as_mut_slice(), steps);
                 });
             }
             CaProgram::Nca(model) => {
                 let _span = obs::span("kernel_nca");
                 let (h, w, c) = (shape[0], shape[1], shape[2]);
+                let path = activity::select_step_path(prog, &shape, steps);
+                activity::note_path(path);
                 let mut boards = self.resident_boards(prog, batch)?;
-                self.pool.for_each_chunk(&mut boards, 1, |_, item| {
-                    let mut scratch = vec![0.0f32; h * w * c];
-                    model.rollout(item[0].as_mut_slice(), &mut scratch, h,
-                                  w, steps);
-                });
+                if path == StepPath::Sparse {
+                    let key = activity::prog_key(prog);
+                    let (tr, tc) = nca::NcaModel::tile_dims(h, w);
+                    let (rec, skp) = (AtomicU64::new(0), AtomicU64::new(0));
+                    self.pool.for_each_chunk(&mut boards, 1, |_, item| {
+                        let (data, act) = &mut item[0];
+                        let map = activity::ensure_map(*act, key, tr, tc);
+                        let mut scratch = vec![0.0f32; h * w * c];
+                        let (r, s) = model.rollout_sparse(
+                            data.as_mut_slice(), &mut scratch, h, w, steps,
+                            map);
+                        rec.fetch_add(r, Ordering::Relaxed);
+                        skp.fetch_add(s, Ordering::Relaxed);
+                    });
+                    activity::note_tiles(rec.into_inner(),
+                                         skp.into_inner());
+                } else {
+                    self.pool.for_each_chunk(&mut boards, 1, |_, item| {
+                        let (data, act) = &mut item[0];
+                        **act = None;
+                        let mut scratch = vec![0.0f32; h * w * c];
+                        model.rollout(data.as_mut_slice(), &mut scratch, h,
+                                      w, steps);
+                    });
+                }
             }
         }
         Ok(())

@@ -26,6 +26,10 @@ use super::simd::LANES;
 use super::wrap3;
 use crate::util::rng::Rng;
 
+/// Activity-tile edge for the sparse stepper (cells per side; all
+/// channels of a cell share its tile).
+const TILE: usize = 32;
+
 /// Sobel-x, normalized by 8 as in the reference NCA perceive step.
 /// Shared with the backward pass in [`super::nca_grad`].
 pub(crate) const SOBEL_X: [[f32; 3]; 3] = [
@@ -368,6 +372,138 @@ impl NcaModel {
             board.copy_from_slice(scratch);
         }
     }
+
+    /// Activity-map tile grid for an `h x w` board (32-cell tiles, all
+    /// channels of a cell belong to its tile).
+    pub fn tile_dims(h: usize, w: usize) -> (usize, usize) {
+        (h.div_ceil(TILE), w.div_ceil(TILE))
+    }
+
+    /// One activity-tracked forward update: recompute only tiles whose
+    /// 1-tile halo changed (the 3x3 perceive reads one cell out), then
+    /// commit + re-mark by exact f32 bit comparison across all
+    /// channels. Two passes keep read-before-write. Returns
+    /// `(recomputed, skipped)` tile counts.
+    ///
+    /// Bit-identical to [`step_frozen`](Self::step_frozen): recomputed
+    /// cells run the same [`perceive_cell`] + `cell_update` pair, and
+    /// the AVX2 lanes match the scalar cell bit for bit
+    /// (`native_simd_props`). Past ~60% tile occupancy this falls back
+    /// to one dense step plus a full diff so a fully-active board never
+    /// pays more than dense + one compare per float.
+    pub fn step_sparse(&self, board: &mut [f32], scratch: &mut [f32],
+                       h: usize, w: usize, frozen: usize,
+                       map: &mut super::activity::ActivityMap)
+        -> (u64, u64) {
+        let c = self.channels;
+        let (tr, tcols) = Self::tile_dims(h, w);
+        let total = (tr * tcols) as u64;
+        let needed = map.begin_step(1, 1) as u64;
+        if needed == 0 {
+            return (0, total);
+        }
+        if needed * 8 > total * 5 {
+            self.step_frozen(board, scratch, h, w, frozen);
+            for ty in 0..tr {
+                for tx in 0..tcols {
+                    if nca_tile_bits_differ(board, scratch, h, w, c, ty,
+                                            tx) {
+                        map.mark(ty, tx);
+                    }
+                }
+            }
+            board.copy_from_slice(scratch);
+            return (total, 0);
+        }
+        let mut perception = vec![0.0f32; 3 * c];
+        let mut hidden = vec![0.0f32; self.hidden];
+        // Pass 1: recompute needed tiles into scratch, reading only
+        // the old `board`.
+        for ty in 0..tr {
+            if !map.row_needed(ty) {
+                continue;
+            }
+            for wi in 0..map.words_per_row() {
+                let mut tiles = map.needs_word(ty, wi);
+                while tiles != 0 {
+                    let tx = wi * 64 + tiles.trailing_zeros() as usize;
+                    tiles &= tiles - 1;
+                    let (y1, x1) = (((ty + 1) * TILE).min(h),
+                                    ((tx + 1) * TILE).min(w));
+                    for y in ty * TILE..y1 {
+                        let rows = wrap3(y, h);
+                        for x in tx * TILE..x1 {
+                            let cols = wrap3(x, w);
+                            perceive_cell(board, w, c, &rows, &cols,
+                                          &mut perception);
+                            self.cell_update(board, scratch,
+                                             (y * w + x) * c, &perception,
+                                             &mut hidden, frozen);
+                        }
+                    }
+                }
+            }
+        }
+        // Pass 2: commit recomputed tiles, marking exact bit changes.
+        for ty in 0..tr {
+            if !map.row_needed(ty) {
+                continue;
+            }
+            for wi in 0..map.words_per_row() {
+                let mut tiles = map.needs_word(ty, wi);
+                while tiles != 0 {
+                    let tx = wi * 64 + tiles.trailing_zeros() as usize;
+                    tiles &= tiles - 1;
+                    if nca_tile_bits_differ(board, scratch, h, w, c, ty,
+                                            tx) {
+                        map.mark(ty, tx);
+                    }
+                    let (y1, x1) = (((ty + 1) * TILE).min(h),
+                                    ((tx + 1) * TILE).min(w));
+                    for y in ty * TILE..y1 {
+                        let (a, b) = ((y * w + tx * TILE) * c,
+                                      (y * w + x1 - 1) * c + c);
+                        board[a..b].copy_from_slice(&scratch[a..b]);
+                    }
+                }
+            }
+        }
+        (needed, total - needed)
+    }
+
+    /// Run `steps` activity-tracked updates (no frozen channels, like
+    /// [`rollout`](Self::rollout)); the map carries dirty state across
+    /// steps and calls. Returns summed `(recomputed, skipped)` counts.
+    pub fn rollout_sparse(&self, board: &mut [f32], scratch: &mut [f32],
+                          h: usize, w: usize, steps: usize,
+                          map: &mut super::activity::ActivityMap)
+        -> (u64, u64) {
+        let (mut recomputed, mut skipped) = (0, 0);
+        for _ in 0..steps {
+            let (r, s) = self.step_sparse(board, scratch, h, w, 0, map);
+            recomputed += r;
+            skipped += s;
+        }
+        (recomputed, skipped)
+    }
+}
+
+/// Whether any channel of any cell of tile (`ty`, `tx`) differs
+/// between `a` and `b` as raw f32 bits.
+fn nca_tile_bits_differ(a: &[f32], b: &[f32], h: usize, w: usize,
+                        c: usize, ty: usize, tx: usize) -> bool {
+    let (y1, x1) = (((ty + 1) * TILE).min(h), ((tx + 1) * TILE).min(w));
+    for y in ty * TILE..y1 {
+        let (s, e) = ((y * w + tx * TILE) * c, (y * w + x1 - 1) * c + c);
+        if a[s..e]
+            .iter()
+            .zip(b[s..e].iter())
+            .any(|(x, y)| x.to_bits() != y.to_bits())
+        {
+            return true;
+        }
+    }
+    false
 }
 
 /// Depthwise perceive at one cell: identity, Sobel-x, Sobel-y per

@@ -312,6 +312,19 @@ impl<'e> Simulator<'e> {
             .name()
     }
 
+    /// Which step path (`dense` / `sparse` / `hashlife`) the native
+    /// backend's activity cost model picks for one launch of `prog` on
+    /// an unbatched board of `shape` advancing `steps` — the stepping
+    /// analogue of [`lenia_native_path`](Self::lenia_native_path),
+    /// surfaced the same way through `cax sim` and serve session
+    /// status.
+    pub fn native_step_path(prog: &CaProgram, shape: &[usize],
+                            steps: usize) -> &'static str {
+        crate::backend::native::activity::select_step_path(prog, shape,
+                                                           steps)
+            .name()
+    }
+
     /// Generalized multi-channel / multi-kernel Lenia on `[B, C, H, W]`
     /// states. `Native` runs the spectral path; `Naive` runs the scalar
     /// reference oracle; the XLA paths have no artifact for worlds.
@@ -474,6 +487,20 @@ mod tests {
         assert_eq!(Simulator::lenia_native_path(small, 128, 128),
                    "sparse-tap");
         assert_eq!(Simulator::lenia_native_path(big, 128, 128), "fft");
+    }
+
+    #[test]
+    fn native_step_path_reports_the_cost_model() {
+        use crate::automata::WolframRule;
+        // Geometry gates (power-of-two, size, horizon) are pinned in
+        // activity's own unit tests; here we only check the surface
+        // wiring under the ambient (default-on) dispatch.
+        let life = Simulator::native_step_path(&CaProgram::Life,
+                                               &[256, 256], 8);
+        assert!(life == "sparse" || life == "dense");
+        let eca = Simulator::native_step_path(
+            &CaProgram::Eca { rule: WolframRule::new(30) }, &[1024], 8);
+        assert!(eca == "sparse" || eca == "dense");
     }
 
     #[test]

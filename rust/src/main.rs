@@ -28,7 +28,7 @@ use anyhow::{bail, Context, Result};
 
 use cax::automata::lenia::{LeniaParams, LeniaWorld};
 use cax::automata::WolframRule;
-use cax::backend::{NativeBackend, NativeTrainBackend};
+use cax::backend::{CaProgram, NativeBackend, NativeTrainBackend};
 use cax::config::Config;
 use cax::coordinator::evaluator;
 use cax::coordinator::trainer::TrainCfg;
@@ -291,8 +291,9 @@ fn cmd_backends(_cli: &Cli) -> Result<()> {
     println!("{:<8} {:<10} detail", "BACKEND", "STATUS");
     println!(
         "{:<8} {:<10} bit-packed SWAR (ECA/Life), tiled f32 (Lenia/NCA), \
-         {} worker threads",
-        "native", "ready", native.threads()
+         {} worker threads, simd {}, stepping {}",
+        "native", "ready", native.threads(), native.simd_status(),
+        native.activity_status()
     );
     #[cfg(feature = "pjrt")]
     println!("{:<8} {:<10} XLA artifacts via PJRT (needs `make artifacts`)",
@@ -470,8 +471,20 @@ fn cmd_sim_local(cli: &Cli, ca: &str, path: SimPath) -> Result<()> {
     };
     let dt = t.elapsed_secs();
     let updates = state.numel() as f64 * steps as f64;
+    // The unbatched board shape drives the cost model (mirrors the
+    // Lenia `kernel path:` line — the executed path, not a guess).
+    let prog = match ca {
+        "eca" => CaProgram::Eca { rule },
+        _ => CaProgram::Life,
+    };
+    let spath = if path == SimPath::Native {
+        Simulator::native_step_path(&prog, &shape[1..], steps)
+    } else {
+        "dense (naive)"
+    };
     println!(
-        "{ca} [{}] {steps} steps on {:?}: {:.3}s  ({})  final mean {:.4}",
+        "{ca} [{}] {steps} steps on {:?}: {:.3}s  ({})  step path: \
+         {spath}  final mean {:.4}",
         path.name(), shape, dt,
         cax::metrics::rate_str(updates, dt, "cell updates"), out.mean()
     );

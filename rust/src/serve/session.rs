@@ -279,7 +279,56 @@ impl ProgramSpec {
                 )),
             ));
         }
+        fields.push(("step_path", Json::from(self.step_path())));
         obj(fields)
+    }
+
+    /// Which step path (`dense` / `sparse` / `hashlife`) the native
+    /// activity cost model picks for one coalesced single-step tick of
+    /// this session — the stepping analogue of the Lenia `kernel`
+    /// field. Longer rollouts on big power-of-two boards may upgrade to
+    /// `hashlife`; this reports the steps=1 decision, which is what the
+    /// scheduler's ticks run.
+    pub fn step_path(&self) -> &'static str {
+        use crate::backend::native::activity;
+        let shape = self.board_shape();
+        match self {
+            ProgramSpec::Eca { rule, .. } => {
+                crate::coordinator::Simulator::native_step_path(
+                    &CaProgram::Eca { rule: WolframRule::new(*rule) },
+                    &shape,
+                    1,
+                )
+            }
+            ProgramSpec::Life { .. } => {
+                crate::coordinator::Simulator::native_step_path(
+                    &CaProgram::Life, &shape, 1)
+            }
+            ProgramSpec::Lenia { radius, .. } => {
+                crate::coordinator::Simulator::native_step_path(
+                    &CaProgram::Lenia {
+                        params: LeniaParams {
+                            radius: *radius,
+                            ..Default::default()
+                        },
+                    },
+                    &shape,
+                    1,
+                )
+            }
+            // The spectral world plan is global — always dense (the
+            // selector says so without needing the built world).
+            ProgramSpec::LeniaMulti { .. } => "dense",
+            // NCA's selector is the on/off gate; answering from it
+            // avoids loading the trained weights just for status.
+            ProgramSpec::NcaGrowing => {
+                if activity::enabled() {
+                    "sparse"
+                } else {
+                    "dense"
+                }
+            }
+        }
     }
 }
 
@@ -554,6 +603,27 @@ mod tests {
         let j = spec.to_json();
         assert_eq!(j.get("kernel").and_then(Json::as_str),
                    Some("sparse-tap"));
+        // ... and the activity cost model's step path, for every family.
+        let spath = j.get("step_path").and_then(Json::as_str).unwrap();
+        assert!(spath == "sparse" || spath == "dense", "got {spath}");
+        for (text, want_any) in [
+            (r#"{"program": "eca", "width": 64}"#,
+             &["sparse", "dense"][..]),
+            (r#"{"program": "life", "size": 32}"#, &["sparse", "dense"]),
+            (r#"{"program": "lenia-multi", "kernels": 2, "size": 32}"#,
+             &["dense"]),
+        ] {
+            let spec =
+                ProgramSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+            let got = spec
+                .to_json()
+                .get("step_path")
+                .and_then(Json::as_str)
+                .unwrap()
+                .to_string();
+            assert!(want_any.contains(&got.as_str()),
+                    "{text}: step_path {got}");
+        }
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Equivalence battery for the memoizing quadtree arm: `LifeHash` /
+//! `EcaHash` must be **bit-identical** to the SWAR kernels on every
+//! board and every horizon — including every non-power-of-two step
+//! count in `1..=257` (each one exercises a different largest-pow2
+//! decomposition), long-horizon structured patterns (the Gosper gun,
+//! the rule-90 Sierpinski gasket), chaotic soups, and a deliberately
+//! tiny interner cap that forces mid-flight GC rebuilds.
+//!
+//! These tests bypass the dispatcher entirely, so they hold on both
+//! `CAX_SPARSE` CI legs.
+
+use cax::automata::WolframRule;
+use cax::backend::native::hashlife::{EcaHash, LifeHash, DEFAULT_NODE_CAP};
+use cax::backend::native::life::LifeKernel;
+use cax::backend::native::{bits, eca};
+use cax::util::rng::Rng;
+
+/// The Gosper glider gun (36 cells, period 30), as `(x, y)` offsets.
+const GOSPER_GUN: [(usize, usize); 36] = [
+    (0, 4), (0, 5), (1, 4), (1, 5), (10, 4), (10, 5), (10, 6), (11, 3),
+    (11, 7), (12, 2), (12, 8), (13, 2), (13, 8), (14, 5), (15, 3),
+    (15, 7), (16, 4), (16, 5), (16, 6), (17, 5), (20, 2), (20, 3),
+    (20, 4), (21, 2), (21, 3), (21, 4), (22, 1), (22, 5), (24, 0),
+    (24, 1), (24, 5), (24, 6), (34, 2), (34, 3), (35, 2), (35, 3),
+];
+
+/// Pack the gun into a `size`×`size` torus at offset `(ox, oy)`.
+fn gun_grid(size: usize, ox: usize, oy: usize) -> Vec<u64> {
+    let wpr = bits::words_for(size);
+    let mut grid = vec![0u64; size * wpr];
+    for &(x, y) in &GOSPER_GUN {
+        let (gx, gy) = (ox + x, oy + y);
+        assert!(gx < size && gy < size, "gun out of bounds");
+        grid[gy * wpr + gx / 64] |= 1 << (gx % 64);
+    }
+    grid
+}
+
+fn random_square(size: usize, density: f32, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    let wpr = bits::words_for(size);
+    let mut grid = vec![0u64; size * wpr];
+    let cells = rng.binary_vec(size * size, density);
+    cax::backend::native::life::pack_board(&cells, size, size, &mut grid);
+    grid
+}
+
+// ----------------------------------------------------------------- Life
+
+#[test]
+fn hashlife_matches_swar_on_the_gosper_gun() {
+    // One engine across all horizons: later advances must reuse the
+    // memo table built by earlier ones and still stay exact.
+    let size = 64;
+    let start = gun_grid(size, 4, 8);
+    let mut hl = LifeHash::default();
+    let mut horizons: Vec<usize> = (1..=17).collect();
+    horizons.extend([30, 64, 100, 256, 300]);
+    for steps in horizons {
+        let mut dense = start.clone();
+        let mut kern = LifeKernel::new(size, size);
+        kern.rollout(&mut dense, steps);
+        let mut quad = start.clone();
+        hl.advance(&mut quad, size, steps);
+        assert_eq!(dense, quad, "gosper gun diverged at {steps} steps");
+    }
+    assert!(hl.memo_hits() > 0,
+            "repeated gun advances must hit the memo table");
+}
+
+#[test]
+fn hashlife_matches_swar_for_every_step_count_up_to_257() {
+    // 1..=257 covers every binary-decomposition shape through 2^8 + 1.
+    // The dense side advances incrementally (one step per horizon);
+    // the quadtree side restarts from t=0 each time.
+    let size = 32;
+    let start = random_square(size, 0.35, 0xD1CE);
+    let mut dense = start.clone();
+    let mut kern = LifeKernel::new(size, size);
+    let mut hl = LifeHash::default();
+    for steps in 1..=257usize {
+        kern.rollout(&mut dense, 1);
+        let mut quad = start.clone();
+        hl.advance(&mut quad, size, steps);
+        assert_eq!(dense, quad, "soup diverged at {steps} steps");
+    }
+}
+
+#[test]
+fn hashlife_soup_sweep_across_densities_and_sizes() {
+    for &size in &[4usize, 8, 16, 128] {
+        for &density in &[0.1f32, 0.5, 0.9] {
+            let start = random_square(size, density,
+                                      size as u64 ^ 0xF00D);
+            let mut dense = start.clone();
+            let mut kern = LifeKernel::new(size, size);
+            kern.rollout(&mut dense, 70);
+            let mut quad = start.clone();
+            LifeHash::default().advance(&mut quad, size, 70);
+            assert_eq!(dense, quad,
+                       "{size}x{size} density {density} diverged");
+        }
+    }
+}
+
+#[test]
+fn hashlife_interner_stays_bounded_and_exact_under_a_tiny_cap() {
+    // A cap far below what a chaotic 64x64 soup wants forces the GC
+    // (expand -> wipe -> rebuild) mid-advance; results must not change
+    // and the arena must respect the bound at every observation point.
+    let cap = 1 << 12;
+    let size = 64;
+    let start = random_square(size, 0.4, 0xCA9);
+    let mut capped = LifeHash::new(cap);
+    let mut dense = start.clone();
+    let mut kern = LifeKernel::new(size, size);
+    let mut total = 0usize;
+    for round in 0..6 {
+        let steps = 37 + round; // odd horizons: many GC-spanning chunks
+        kern.rollout(&mut dense, steps);
+        total += steps;
+        // Recompute the whole horizon from t=0 through the capped
+        // engine; GC rebuilds along the way must not change the answer.
+        let mut quad = start.clone();
+        capped.advance(&mut quad, size, total);
+        assert_eq!(dense, quad,
+                   "capped engine diverged after {total} total steps");
+        assert!(capped.node_count() < cap,
+                "arena exceeded its cap: {} >= {cap}",
+                capped.node_count());
+    }
+}
+
+// ------------------------------------------------------------------ ECA
+
+#[test]
+fn eca_hashlife_draws_the_rule_90_sierpinski_gasket() {
+    // A single seed under rule 90 at power-of-two horizons: the
+    // classic memoization best case — and the easiest place to catch
+    // an off-by-one in the torus shift/unshift algebra.
+    let w = 1024;
+    let nw = bits::words_for(w);
+    let rule = WolframRule::new(90);
+    let mut start = vec![0u64; nw];
+    start[(w / 2) / 64] |= 1 << ((w / 2) % 64);
+    let mut hl = EcaHash::new(90, DEFAULT_NODE_CAP);
+    for &steps in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let mut dense = start.clone();
+        eca::rollout_row(&rule, &mut dense, w, steps);
+        let mut quad = start.clone();
+        hl.advance(&mut quad, w, steps);
+        assert_eq!(dense, quad, "rule 90 diverged at {steps} steps");
+        // Power-of-two horizons of rule 90 from one seed are exactly
+        // two cells: seed ± steps (XOR light cone).
+        let alive: u32 = quad.iter().map(|v| v.count_ones()).sum();
+        assert_eq!(alive, 2, "rule 90 gasket rows at 2^k have 2 cells");
+    }
+}
+
+#[test]
+fn eca_hashlife_matches_swar_on_soups() {
+    let w = 128;
+    let nw = bits::words_for(w);
+    for &rule_no in &[30u8, 90, 110] {
+        let rule = WolframRule::new(rule_no);
+        let mut rng = Rng::new(rule_no as u64);
+        let cells = rng.binary_vec(w, 0.5);
+        let mut start = vec![0u64; nw];
+        bits::pack_row(&cells, &mut start);
+        let mut hl = EcaHash::new(rule_no, DEFAULT_NODE_CAP);
+        let mut dense = start.clone();
+        for steps in 1..=65usize {
+            eca::rollout_row(&rule, &mut dense, w, 1);
+            let mut quad = start.clone();
+            hl.advance(&mut quad, w, steps);
+            assert_eq!(dense, quad,
+                       "rule {rule_no} diverged at {steps} steps");
+        }
+    }
+}
+
+#[test]
+fn eca_hashlife_interner_stays_bounded_under_a_tiny_cap() {
+    let cap = 1 << 10;
+    let w = 256;
+    let nw = bits::words_for(w);
+    let rule = WolframRule::new(30); // chaotic: memoization cannot win
+    let mut rng = Rng::new(3);
+    let cells = rng.binary_vec(w, 0.5);
+    let mut start = vec![0u64; nw];
+    bits::pack_row(&cells, &mut start);
+    let mut capped = EcaHash::new(30, cap);
+    for &steps in &[5usize, 40, 129, 200] {
+        let mut dense = start.clone();
+        eca::rollout_row(&rule, &mut dense, w, steps);
+        let mut quad = start.clone();
+        capped.advance(&mut quad, w, steps);
+        assert_eq!(dense, quad, "capped eca diverged at {steps} steps");
+        assert!(capped.node_count() < cap,
+                "arena exceeded its cap: {} >= {cap}",
+                capped.node_count());
+    }
+}

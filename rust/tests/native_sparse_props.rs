@@ -1,0 +1,416 @@
+//! Differential battery for activity-tracked sparse stepping: every
+//! sparse kernel must be **bit-identical** to its dense counterpart —
+//! random soups, gliders crossing word/tile boundaries and wrap edges,
+//! fully-quiescent and fully-active boards, ragged widths
+//! (`w % 64 != 0`, `w % 32 != 0`), and 1-vs-8-thread launches.
+//!
+//! The kernel-level tests drive the sparse steppers directly, so they
+//! hold on both CI legs (`CAX_SPARSE` default and `off`) — the sparse
+//! code paths are exercised regardless of what the dispatcher would
+//! pick. The backend-level tests force both sides of the dispatch
+//! in-process via [`activity::set_override`].
+
+use std::sync::Mutex;
+
+use cax::automata::lenia::LeniaParams;
+use cax::automata::WolframRule;
+use cax::backend::native::activity::{self, ActivityMap};
+use cax::backend::native::lenia::LeniaKernel;
+use cax::backend::native::life::{self, LifeKernel};
+use cax::backend::native::nca::NcaModel;
+use cax::backend::native::{bits, eca};
+use cax::backend::{Backend, CaProgram, NativeBackend};
+use cax::tensor::Tensor;
+use cax::util::rng::Rng;
+
+/// The in-process dispatch override is global; tests that flip it
+/// serialize here so the harness's parallel threads cannot interleave.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+fn assert_bits_eq(a: &[f32], b: &[f32], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{label}: cell {i} diverged: {x} ({:#010x}) vs {y} ({:#010x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+// ------------------------------------------------------------------ ECA
+
+/// Dense vs sparse ECA, asserting after every step so a divergence is
+/// caught at its first occurrence. Returns the summed tile counts.
+fn eca_differential(rule_no: u8, w: usize, steps: usize, seed: u64,
+                    density: f32) -> (u64, u64) {
+    let rule = WolframRule::new(rule_no);
+    let nw = bits::words_for(w);
+    let mut rng = Rng::new(seed);
+    let cells = rng.binary_vec(w, density);
+    let mut dense = vec![0u64; nw];
+    bits::pack_row(&cells, &mut dense);
+    let mut sparse = dense.clone();
+    let mut map = ActivityMap::new(0, 1, nw);
+    let (mut rec, mut skp) = (0, 0);
+    for step in 0..steps {
+        eca::rollout_row(&rule, &mut dense, w, 1);
+        let (r, s) = eca::rollout_row_sparse(&rule, &mut sparse, w, 1,
+                                             &mut map);
+        rec += r;
+        skp += s;
+        assert_eq!(dense, sparse,
+                   "rule {rule_no} w={w} diverged at step {step}");
+    }
+    assert_eq!(rec + skp, (steps * nw) as u64,
+               "tile accounting must cover every word every step");
+    (rec, skp)
+}
+
+#[test]
+fn eca_sparse_matches_dense_across_rules_and_widths() {
+    for (i, &rule) in [30u8, 90, 110, 184].iter().enumerate() {
+        for &w in &[63usize, 64, 65, 130, 256, 1024] {
+            eca_differential(rule, w, 48, 7_000 + i as u64, 0.5);
+        }
+    }
+}
+
+#[test]
+fn eca_sparse_skips_quiet_regions_of_a_single_seed() {
+    // One live cell in 4096: rule 30's light cone grows ~1 cell/step,
+    // so most of the row's 64 words stay quiescent and must be skipped
+    // (the first step is the all-dirty fresh step).
+    let w = 4096;
+    let nw = bits::words_for(w);
+    let rule = WolframRule::new(30);
+    let mut dense = vec![0u64; nw];
+    dense[nw / 2] = 1;
+    let mut sparse = dense.clone();
+    let mut map = ActivityMap::new(0, 1, nw);
+    let (mut rec, mut skp) = (0, 0);
+    for _ in 0..32 {
+        eca::rollout_row(&rule, &mut dense, w, 1);
+        let (r, s) =
+            eca::rollout_row_sparse(&rule, &mut sparse, w, 1, &mut map);
+        rec += r;
+        skp += s;
+    }
+    assert_eq!(dense, sparse);
+    assert!(skp > rec,
+            "a single seed must skip most words (rec={rec} skp={skp})");
+}
+
+#[test]
+fn eca_sparse_handles_quiescent_and_saturated_rows() {
+    // All-dead and all-alive rows are fixed points or near-fixed under
+    // many rules; both extremes of the activity map must stay exact.
+    for &(rule, density) in &[(0u8, 0.0f32), (30, 0.0), (30, 1.0),
+                              (204, 0.5), (255, 1.0)] {
+        let (rec, _skp) = eca_differential(rule, 130, 24, 11, density);
+        // Rule 204 is the identity: after the fresh first step nothing
+        // changes, so nothing may be recomputed again.
+        if rule == 204 {
+            assert_eq!(rec, bits::words_for(130) as u64,
+                       "identity rule recomputes only the fresh step");
+        }
+    }
+}
+
+// ----------------------------------------------------------------- Life
+
+fn life_differential(h: usize, w: usize, steps: usize, grid: Vec<u64>)
+    -> (u64, u64) {
+    let wpr = bits::words_for(w);
+    assert_eq!(grid.len(), h * wpr);
+    let mut dense = grid.clone();
+    let mut sparse = grid;
+    let mut dk = LifeKernel::new(h, w);
+    let mut sk = LifeKernel::new(h, w);
+    let mut map = ActivityMap::new(0, h, wpr);
+    let (mut rec, mut skp) = (0, 0);
+    for step in 0..steps {
+        dk.rollout(&mut dense, 1);
+        let (r, s) = sk.rollout_sparse(&mut sparse, 1, &mut map);
+        rec += r;
+        skp += s;
+        assert_eq!(dense, sparse, "{h}x{w} diverged at step {step}");
+    }
+    assert_eq!(rec + skp, (steps * h * wpr) as u64);
+    (rec, skp)
+}
+
+fn random_grid(h: usize, w: usize, density: f32, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    let cells = rng.binary_vec(h * w, density);
+    let mut grid = vec![0u64; h * bits::words_for(w)];
+    life::pack_board(&cells, h, w, &mut grid);
+    grid
+}
+
+#[test]
+fn life_sparse_matches_dense_on_random_soups() {
+    for (i, &(h, w)) in [(8usize, 8usize), (5, 63), (7, 64), (6, 65),
+                         (9, 100), (3, 130), (16, 128), (32, 192)]
+        .iter()
+        .enumerate()
+    {
+        for &density in &[0.1f32, 0.4] {
+            let grid = random_grid(h, w, density, 5_000 + i as u64);
+            life_differential(h, w, 24, grid);
+        }
+    }
+}
+
+#[test]
+fn life_sparse_handles_quiescent_and_saturated_boards() {
+    // Empty board: after the fresh step, every tile must be skipped.
+    let (h, w) = (24, 130);
+    let wpr = bits::words_for(w);
+    let (rec, skp) = life_differential(h, w, 16, vec![0u64; h * wpr]);
+    assert_eq!(rec, (h * wpr) as u64,
+               "an empty board recomputes only the fresh first step");
+    assert_eq!(skp, (15 * h * wpr) as u64);
+    // Saturated board: everything dies in one step, then quiesces.
+    life_differential(h, w, 8, random_grid(h, w, 1.0, 0));
+}
+
+#[test]
+fn life_glider_crosses_word_boundaries_and_wrap_edges() {
+    // A glider on a 48x192 torus: it crosses the x=64 and x=128 word
+    // boundaries and wraps both edges over 800 steps (diagonal period
+    // 4, one cell per period; 800 steps move it 200 cells).
+    let (h, w) = (48usize, 192usize);
+    let wpr = bits::words_for(w);
+    let mut grid = vec![0u64; h * wpr];
+    // Glider heading south-east, head near the first word boundary.
+    for &(y, x) in &[(10usize, 60usize), (11, 61), (12, 59), (12, 60),
+                     (12, 61)] {
+        grid[y * wpr + x / 64] |= 1 << (x % 64);
+    }
+    let (rec, skp) = life_differential(h, w, 800, grid);
+    // Word-granular tiles with a ±1-word halo keep ~5 of 48 rows hot,
+    // so the skip ratio is bounded by geometry, not by luck.
+    assert!(skp > 5 * rec,
+            "a lone glider must skip the overwhelming majority of \
+             tiles (rec={rec} skp={skp})");
+}
+
+// ------------------------------------------------------- f32 substrates
+
+#[test]
+fn lenia_sparse_matches_dense_from_patch_and_soup() {
+    let params = LeniaParams { radius: 5, ..Default::default() };
+    let kernel = LeniaKernel::new(params);
+    // Ragged (non-multiple-of-32) boards; the patch case starts
+    // localized in a corner so its influence crosses the wrap edges.
+    for &(h, w) in &[(33usize, 47usize), (48, 64), (40, 33)] {
+        let mut rng = Rng::new((h * w) as u64);
+        for patch_only in [true, false] {
+            let mut board = if patch_only {
+                let mut b = vec![0.0f32; h * w];
+                for y in 0..6 {
+                    for v in &mut b[y * w..y * w + 6] {
+                        *v = rng.next_f32();
+                    }
+                }
+                b
+            } else {
+                rng.vec_f32(h * w)
+            };
+            let mut sparse = board.clone();
+            let mut scratch = vec![0.0f32; h * w];
+            let mut smap_scratch = vec![0.0f32; h * w];
+            let (tr, tc) = LeniaKernel::tile_dims(h, w);
+            let mut map = ActivityMap::new(0, tr, tc);
+            for step in 0..10 {
+                kernel.rollout(&mut board, &mut scratch, h, w, 1);
+                kernel.rollout_sparse(&mut sparse, &mut smap_scratch, h, w,
+                                      1, &mut map);
+                assert_bits_eq(
+                    &board,
+                    &sparse,
+                    &format!("lenia {h}x{w} patch={patch_only} \
+                              step {step}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lenia_sparse_skips_tiles_on_a_quiescent_board() {
+    let params = LeniaParams { radius: 5, ..Default::default() };
+    let kernel = LeniaKernel::new(params);
+    let (h, w) = (64usize, 96usize);
+    let mut board = vec![0.0f32; h * w];
+    let mut scratch = vec![0.0f32; h * w];
+    let (tr, tc) = LeniaKernel::tile_dims(h, w);
+    let mut map = ActivityMap::new(0, tr, tc);
+    // Fresh step is dense; the all-zero board is a Lenia fixed point
+    // here only if growth(0) <= 0 — with paper-default mu it is.
+    let (r0, _) = kernel.rollout_sparse(&mut board, &mut scratch, h, w, 1,
+                                        &mut map);
+    assert_eq!(r0, (tr * tc) as u64);
+    let (r1, s1) = kernel.rollout_sparse(&mut board, &mut scratch, h, w, 4,
+                                         &mut map);
+    assert_eq!(r1, 0, "a fixed-point board must skip every tile");
+    assert_eq!(s1, (4 * tr * tc) as u64);
+    assert!(board.iter().all(|&v| v == 0.0));
+}
+
+fn random_nca(channels: usize, hidden: usize, seed: u64) -> NcaModel {
+    let mut rng = Rng::new(seed);
+    let n = NcaModel::param_count(channels, hidden);
+    // Small weights keep the residual update stable over many steps.
+    let flat: Vec<f32> =
+        rng.vec_f32(n).into_iter().map(|v| 0.2 * (v - 0.5)).collect();
+    NcaModel::from_flat(channels, hidden, 0.5, &flat)
+}
+
+#[test]
+fn nca_sparse_matches_dense_on_soup_and_seed() {
+    let model = random_nca(4, 8, 42);
+    for &(h, w) in &[(20usize, 36usize), (33, 32)] {
+        let c = 4;
+        let mut rng = Rng::new((h + w) as u64);
+        for seed_only in [true, false] {
+            let mut board = if seed_only {
+                let mut b = vec![0.0f32; h * w * c];
+                let seed = ((h / 2) * w + w / 2) * c;
+                b[seed..seed + c].fill(1.0);
+                b
+            } else {
+                rng.vec_f32(h * w * c)
+            };
+            let mut sparse = board.clone();
+            let mut scratch = vec![0.0f32; h * w * c];
+            let mut sscratch = vec![0.0f32; h * w * c];
+            let (tr, tc) = NcaModel::tile_dims(h, w);
+            let mut map = ActivityMap::new(0, tr, tc);
+            for step in 0..8 {
+                model.rollout(&mut board, &mut scratch, h, w, 1);
+                model.rollout_sparse(&mut sparse, &mut sscratch, h, w, 1,
+                                     &mut map);
+                assert_bits_eq(
+                    &board,
+                    &sparse,
+                    &format!("nca {h}x{w} seed={seed_only} step {step}"),
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------- backend-level dispatch
+
+/// Rollout under a forced dispatch setting, restoring the environment
+/// default afterwards. Callers hold [`OVERRIDE_LOCK`].
+fn rollout_forced(backend: &NativeBackend, prog: &CaProgram,
+                  state: &Tensor, steps: usize, sparse: bool) -> Tensor {
+    activity::set_override(Some(sparse));
+    let out = backend.rollout(prog, state, steps).unwrap();
+    activity::set_override(None);
+    out
+}
+
+#[test]
+fn backend_rollouts_are_bit_identical_sparse_vs_dense() {
+    let _guard = OVERRIDE_LOCK.lock().unwrap();
+    let backend = NativeBackend::with_threads(2);
+    let mut rng = Rng::new(0xACE);
+    let cases: Vec<(CaProgram, Vec<usize>)> = vec![
+        (CaProgram::Eca { rule: WolframRule::new(110) }, vec![3, 200]),
+        (CaProgram::Life, vec![2, 36, 70]),
+        (
+            CaProgram::Lenia {
+                params: LeniaParams { radius: 5, ..Default::default() },
+            },
+            vec![2, 40, 40],
+        ),
+    ];
+    for (prog, shape) in cases {
+        let numel: usize = shape.iter().product();
+        let state =
+            Tensor::new(shape, rng.binary_vec(numel, 0.4)).unwrap();
+        let dense = rollout_forced(&backend, &prog, &state, 23, false);
+        let sparse = rollout_forced(&backend, &prog, &state, 23, true);
+        assert!(dense.bit_eq(&sparse),
+                "{} rollout diverged sparse vs dense", prog.name());
+    }
+    // NCA through the backend too (random small model).
+    let model = random_nca(4, 8, 9);
+    let prog = CaProgram::Nca(model);
+    let state = Tensor::new(vec![1, 16, 16, 4],
+                            rng.vec_f32(16 * 16 * 4)).unwrap();
+    let dense = rollout_forced(&backend, &prog, &state, 6, false);
+    let sparse = rollout_forced(&backend, &prog, &state, 6, true);
+    assert!(dense.bit_eq(&sparse), "nca rollout diverged");
+}
+
+#[test]
+fn step_resident_sparse_is_deterministic_across_thread_counts() {
+    let _guard = OVERRIDE_LOCK.lock().unwrap();
+    let prog = CaProgram::Life;
+    let mut rng = Rng::new(0xBEEF);
+    let boards: Vec<Tensor> = (0..5)
+        .map(|_| {
+            Tensor::new(vec![40, 70], rng.binary_vec(40 * 70, 0.35))
+                .unwrap()
+        })
+        .collect();
+
+    // Dense solo reference (forced off), single-threaded.
+    activity::set_override(Some(false));
+    let solo = NativeBackend::with_threads(1);
+    let expect: Vec<Tensor> = boards
+        .iter()
+        .map(|b| {
+            let batched = Tensor::stack(std::slice::from_ref(b)).unwrap();
+            solo.rollout(&prog, &batched, 9).unwrap().index_axis0(0)
+        })
+        .collect();
+
+    // Sparse resident stepping, 1 and 8 threads, ticked 3+3+3 so the
+    // activity maps carry dirty state across launches.
+    activity::set_override(Some(true));
+    for threads in [1usize, 8] {
+        let backend = NativeBackend::with_threads(threads);
+        let mut residents: Vec<_> = boards
+            .iter()
+            .map(|b| backend.admit(&prog, b).unwrap())
+            .collect();
+        for _ in 0..3 {
+            let mut batch: Vec<&mut _> = residents.iter_mut().collect();
+            backend.step_resident(&prog, &mut batch, 3).unwrap();
+        }
+        for (r, want) in residents.iter().zip(&expect) {
+            let got = backend.read_resident(&prog, r).unwrap();
+            assert!(got.bit_eq(want),
+                    "sparse resident stepping with {threads} thread(s) \
+                     diverged from dense solo");
+        }
+    }
+    activity::set_override(None);
+}
+
+#[test]
+fn sparse_launches_report_skipped_tiles() {
+    let _guard = OVERRIDE_LOCK.lock().unwrap();
+    let backend = NativeBackend::with_threads(1);
+    let prog = CaProgram::Life;
+    // A quiescent board: after the fresh first step every tile skips.
+    let board = Tensor::zeros(&[64, 128]);
+    activity::set_override(Some(true));
+    let mut resident = backend.admit(&prog, &board).unwrap();
+    let before = activity::tiles_skipped_total();
+    backend
+        .step_resident(&prog, &mut [&mut resident], 8)
+        .unwrap();
+    let after = activity::tiles_skipped_total();
+    activity::set_override(None);
+    assert!(after > before,
+            "a quiescent resident must report skipped tiles \
+             ({before} -> {after})");
+}

@@ -564,6 +564,63 @@ fn admission_validates_finiteness() {
     // for the other create-failure classes.)
 }
 
+// ------------------------------------------- sparse resident stepping
+
+/// A parked (idle, long-lived) Life session stepped through the
+/// activity-tracked sparse path must stay bitwise on the dense solo
+/// trajectory, and — once the soup has settled into still lifes and
+/// oscillators — the skipped-tile counter must actually move. This is
+/// the serve-layer contract behind the idle-fleet row in `serve_load`.
+#[test]
+fn parked_session_sparse_stepping_stays_exact_and_skips() {
+    use cax::backend::native::activity;
+
+    let c = Coalescer::new(&test_config());
+    let spec = ProgramSpec::Life { height: 48, width: 48 };
+    let id = c
+        .registry()
+        .lock()
+        .unwrap()
+        .create(c.backend(), spec.clone(), Some(7))
+        .unwrap();
+    let initial = c
+        .registry()
+        .lock()
+        .unwrap()
+        .read_board(c.backend(), id)
+        .unwrap();
+
+    // Burn the soup down (13 x 20 steps), then measure the final tick:
+    // by step 240 a 48x48 soup has settled enough that whole quiet
+    // rows are provably skippable.
+    activity::set_override(Some(true));
+    for _ in 0..13 {
+        step_all(&c, &[id], 20);
+    }
+    let skipped_before = activity::tiles_skipped_total();
+    step_all(&c, &[id], 20);
+    let skipped_after = activity::tiles_skipped_total();
+    let served = c
+        .registry()
+        .lock()
+        .unwrap()
+        .read_board(c.backend(), id)
+        .unwrap();
+    activity::set_override(Some(false));
+    let expect = NativeBackend::new()
+        .rollout(&spec.program().unwrap(),
+                 &Tensor::stack(&[initial]).unwrap(), 280)
+        .unwrap()
+        .index_axis0(0);
+    activity::set_override(None);
+
+    assert!(served.bit_eq(&expect),
+            "sparse-stepped parked session diverged from dense solo");
+    assert!(skipped_after > skipped_before,
+            "a settled session must skip tiles \
+             ({skipped_before} -> {skipped_after})");
+}
+
 // ------------------------------------------------- graceful SIGTERM
 
 /// `cax serve` must drain and exit 0 on SIGTERM (the ctrl-c/SIGINT path
