@@ -41,11 +41,10 @@ use crate::backend::CaProgram;
 
 /// Read the `CAX_SPARSE` escape hatch once.
 fn detect() -> (bool, &'static str) {
-    match std::env::var("CAX_SPARSE") {
-        Ok(v) if v == "off" || v == "0" => {
-            (false, "dense only (CAX_SPARSE=off)")
-        }
-        _ => (true, "sparse+hashlife"),
+    if super::env_disabled("CAX_SPARSE") {
+        (false, "dense only (CAX_SPARSE=off)")
+    } else {
+        (true, "sparse+hashlife")
     }
 }
 

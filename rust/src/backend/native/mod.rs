@@ -72,6 +72,16 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, ensure, Result};
 
+/// Shared parser for the backend's env escape hatches (`CAX_SIMD`,
+/// `CAX_SPARSE`): a feature is disabled iff the variable is set to
+/// `off` (any case) or exactly `0`. One helper so the hatches can
+/// never drift apart in what they accept — anything else (unset,
+/// empty, `on`, `1`, stray whitespace) leaves the feature on.
+pub fn env_disabled(name: &str) -> bool {
+    matches!(std::env::var(name),
+             Ok(v) if v.eq_ignore_ascii_case("off") || v == "0")
+}
+
 use self::activity::{ActivityMap, StepPath};
 use crate::backend::workers::WorkerPool;
 use crate::backend::{
@@ -861,5 +871,32 @@ mod tests {
             .unwrap_err();
         assert!(format!("{err:#}").contains("bits"),
                 "wanted a repr complaint, got {err:#}");
+    }
+
+    /// Pins the escape-hatch grammar shared by `CAX_SIMD` and
+    /// `CAX_SPARSE`: `off` in any case or exactly `0` disables;
+    /// everything else leaves the feature on. One unique variable per
+    /// assertion — env vars are process-global and other tests run
+    /// concurrently.
+    #[test]
+    fn env_disabled_accepts_one_token_set() {
+        let disabled = [("off", "A"), ("OFF", "B"), ("Off", "C"),
+                        ("0", "D")];
+        for (value, tag) in disabled {
+            let name = format!("CAX_TEST_ENV_DISABLED_{tag}");
+            std::env::set_var(&name, value);
+            assert!(env_disabled(&name), "{value:?} should disable");
+            std::env::remove_var(&name);
+        }
+        let enabled = [("", "E"), ("on", "F"), ("1", "G"), ("no", "H"),
+                       (" off ", "I"), ("false", "J")];
+        for (value, tag) in enabled {
+            let name = format!("CAX_TEST_ENV_DISABLED_{tag}");
+            std::env::set_var(&name, value);
+            assert!(!env_disabled(&name),
+                    "{value:?} should leave the feature on");
+            std::env::remove_var(&name);
+        }
+        assert!(!env_disabled("CAX_TEST_ENV_DISABLED_UNSET"));
     }
 }

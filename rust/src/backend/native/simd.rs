@@ -37,7 +37,7 @@ pub const LANES: usize = 8;
 
 /// `(simd active, human-readable reason)` — computed once.
 fn detect() -> (bool, &'static str) {
-    if matches!(std::env::var("CAX_SIMD").as_deref(), Ok("off") | Ok("0")) {
+    if super::env_disabled("CAX_SIMD") {
         return (false, "scalar (CAX_SIMD=off)");
     }
     #[cfg(target_arch = "x86_64")]

@@ -88,6 +88,16 @@ COMMANDS:
         [--max-pending Q]     exits 0 (see rust/README.md for the curl
         [--max-steps S]       quickstart)
         [--tick-us U]
+        [--state-dir DIR]     checkpoint/restore + LRU eviction: the
+                              session cap becomes a working-set cap,
+                              idle sessions park on disk and rehydrate
+                              bit-identically on next touch; SSE frames
+                              at GET /sessions/<id>/stream
+        [--shards N]          fleet mode: fork N worker processes and
+                              route sessions across them by id modulo N
+                              (workers take --shard-index/--shard-count
+                              internally; --state-dir shards as
+                              DIR/shard-<i>)
 
 The default build runs everything marked-free above hermetically on the
 native backend (incl. `train growing|mnist|arc`, `eval arc` and
@@ -695,7 +705,36 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                            defaults.tick_window.as_micros() as usize)?
                 as u64,
         ),
+        state_dir: cli.flag("--state-dir").map(PathBuf::from),
+        shards: cli.flag_usize("--shards", defaults.shards)?,
+        shard: match (cli.flag("--shard-index"), cli.flag("--shard-count"))
+        {
+            (Some(i), Some(n)) => {
+                let index: u64 = i.parse().with_context(|| {
+                    format!("--shard-index wants a u64, got {i:?}")
+                })?;
+                let count: u64 = n.parse().with_context(|| {
+                    format!("--shard-count wants a u64, got {n:?}")
+                })?;
+                if count == 0 || index >= count {
+                    bail!("--shard-index {index} out of range for \
+                           --shard-count {count}");
+                }
+                Some((index, count))
+            }
+            (None, None) => None,
+            _ => bail!(
+                "--shard-index and --shard-count go together"
+            ),
+        },
     };
+    if cfg.shards >= 2 {
+        if cfg.shard.is_some() {
+            bail!("--shards spawns workers itself; don't also pass \
+                   --shard-index/--shard-count");
+        }
+        return cax::serve::router::run(&cfg);
+    }
     cax::serve::run(&cfg)
 }
 

@@ -1,0 +1,500 @@
+//! Versioned on-disk checkpoints of serve sessions.
+//!
+//! One file per session, `<state-dir>/<id as 16 hex digits>.ckpt`,
+//! holding everything [`SessionRegistry`](super::SessionRegistry) needs
+//! to rebuild the session *exactly*: the [`ProgramSpec`], the session
+//! seed (so `reset` still replays the original board), the step
+//! counter, and the backend-[`Resident`] payload in its native layout —
+//! bit-planes as `u64` words for ECA/Life, kernel-layout `f32` blobs
+//! for Lenia/NCA. Floats are stored as raw IEEE-754 bits
+//! (`f32::to_bits`), never formatted, so a save/load round trip is a
+//! bitwise identity and a rehydrated trajectory cannot drift from a
+//! never-evicted one.
+//!
+//! # The contract
+//!
+//! - **Bit-identity.** `load(save(session))` rebuilds a session whose
+//!   resident payload, seed, and step counter are bitwise equal to the
+//!   original's. Stepping the rebuilt session N times must match
+//!   stepping the original N times, bit for bit — `tests/serve_props.rs`
+//!   asserts this for every program family.
+//! - **Activity maps are deliberately not serialized.** A rehydrated
+//!   resident comes back with `activity: None`, so its first sparse
+//!   launch rebuilds a fresh all-dirty map (dense-in-disguise). Stale
+//!   dirty-tile state can therefore never survive an evict/rehydrate
+//!   cycle — the same invalidation rule `reset` follows.
+//! - **Atomic replace.** Writes go to `<file>.tmp` in the same
+//!   directory and are renamed into place, so a crash mid-write leaves
+//!   either the old checkpoint or none — never a torn one. A trailing
+//!   FNV-1a checksum rejects truncated or corrupted files at load time.
+//! - **Versioned.** Every file starts with the [`MAGIC`] tag and a
+//!   little-endian [`VERSION`]; a mismatch is a load error naming both
+//!   versions, never a silent misparse.
+//!
+//! # File layout (version 1, all integers little-endian)
+//!
+//! ```text
+//! [0..6)   magic  b"CAXCKP"
+//! [6..8)   format version, u16
+//! u8       spec tag: 0 eca, 1 life, 2 lenia, 3 lenia-multi, 4 nca
+//! u64 * k  spec fields (tag-dependent; see `encode_spec`)
+//! u64      session id
+//! u64      session seed
+//! u64      steps done
+//! u8       resident tag: 0 bit-planes, 1 board blob, 2 host tensor
+//! u64      shape rank, then u64 * rank dims
+//! u64      payload length, then the payload:
+//!            tag 0 -> u64 words (LE); tags 1/2 -> f32::to_bits as u32
+//! u64      FNV-1a 64 checksum of every preceding byte
+//! ```
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::Resident;
+use crate::serve::session::{fmt_id, parse_id, ProgramSpec, Session};
+use crate::tensor::Tensor;
+
+/// File-format tag every checkpoint starts with.
+pub const MAGIC: &[u8; 6] = b"CAXCKP";
+/// Current file-format version (bump on any layout change).
+pub const VERSION: u16 = 1;
+/// On-disk extension of a live checkpoint (`.tmp` while being written).
+pub const EXTENSION: &str = "ckpt";
+
+/// Everything a checkpoint restores: the session minus its compiled
+/// program (rebuilt pure from the spec) and minus the registry-side
+/// bookkeeping (id, LRU recency).
+#[derive(Debug)]
+pub struct SessionState {
+    pub spec: ProgramSpec,
+    pub seed: u64,
+    pub steps_done: u64,
+    pub resident: Resident,
+}
+
+/// A directory of per-session checkpoint files (see the module docs for
+/// the format contract). All operations are keyed by session id; the
+/// file name is the id's wire form (16 hex digits).
+#[derive(Debug)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) a state directory.
+    pub fn open(dir: &Path) -> Result<CheckpointStore> {
+        fs::create_dir_all(dir).with_context(|| {
+            format!("state-dir {}: create failed", dir.display())
+        })?;
+        Ok(CheckpointStore { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("{}.{EXTENSION}", fmt_id(id)))
+    }
+
+    /// Atomically persist one session (temp file + rename).
+    pub fn save(&self, session: &Session) -> Result<()> {
+        let bytes = encode(session);
+        let path = self.path(session.id);
+        let tmp = path.with_extension("tmp");
+        fs::write(&tmp, &bytes)
+            .with_context(|| format!("checkpoint {}: write", tmp.display()))?;
+        fs::rename(&tmp, &path).with_context(|| {
+            format!("checkpoint {}: rename into place", path.display())
+        })
+    }
+
+    /// Load a session's checkpoint; `Ok(None)` when none exists.
+    pub fn load(&self, id: u64) -> Result<Option<SessionState>> {
+        let path = self.path(id);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None)
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("checkpoint {}: read", path.display())
+                })
+            }
+        };
+        decode(&bytes)
+            .map(Some)
+            .with_context(|| format!("checkpoint {}", path.display()))
+    }
+
+    /// Whether a checkpoint exists for this id.
+    pub fn contains(&self, id: u64) -> bool {
+        self.path(id).exists()
+    }
+
+    /// Delete a session's checkpoint; `Ok(false)` when none existed.
+    pub fn remove(&self, id: u64) -> Result<bool> {
+        let path = self.path(id);
+        match fs::remove_file(&path) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e).with_context(|| {
+                format!("checkpoint {}: remove", path.display())
+            }),
+        }
+    }
+
+    /// Ids of every checkpoint currently on disk.
+    pub fn ids(&self) -> Vec<u64> {
+        let Ok(entries) = fs::read_dir(&self.dir) else { return vec![] };
+        let mut ids: Vec<u64> = entries
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name();
+                let name = name.to_str()?;
+                let stem = name.strip_suffix(&format!(".{EXTENSION}"))?;
+                parse_id(stem)
+            })
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+// ---------------------------------------------------------------- codec
+
+fn w8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn w16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn encode_spec(out: &mut Vec<u8>, spec: &ProgramSpec) {
+    match spec {
+        ProgramSpec::Eca { rule, width } => {
+            w8(out, 0);
+            w64(out, *rule as u64);
+            w64(out, *width as u64);
+        }
+        ProgramSpec::Life { height, width } => {
+            w8(out, 1);
+            w64(out, *height as u64);
+            w64(out, *width as u64);
+        }
+        ProgramSpec::Lenia { radius, height, width } => {
+            w8(out, 2);
+            w64(out, *radius as u64);
+            w64(out, *height as u64);
+            w64(out, *width as u64);
+        }
+        ProgramSpec::LeniaMulti { kernels, radius, height, width } => {
+            w8(out, 3);
+            w64(out, *kernels as u64);
+            w64(out, *radius as u64);
+            w64(out, *height as u64);
+            w64(out, *width as u64);
+        }
+        ProgramSpec::NcaGrowing => w8(out, 4),
+    }
+}
+
+fn encode_f32s(out: &mut Vec<u8>, shape: &[usize], data: &[f32], tag: u8) {
+    w8(out, tag);
+    w64(out, shape.len() as u64);
+    for &d in shape {
+        w64(out, d as u64);
+    }
+    w64(out, data.len() as u64);
+    for &v in data {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Serialize a session to the version-1 byte layout (module docs).
+pub fn encode(session: &Session) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    w16(&mut out, VERSION);
+    encode_spec(&mut out, &session.spec);
+    w64(&mut out, session.id);
+    w64(&mut out, session.seed);
+    w64(&mut out, session.steps_done);
+    match &session.resident {
+        Resident::Bits { words, shape, .. } => {
+            w8(&mut out, 0);
+            w64(&mut out, shape.len() as u64);
+            for &d in shape {
+                w64(&mut out, d as u64);
+            }
+            w64(&mut out, words.len() as u64);
+            for &w in words {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        Resident::Board { data, shape, .. } => {
+            encode_f32s(&mut out, shape, data, 1);
+        }
+        Resident::Host(t) => encode_f32s(&mut out, t.shape(), t.data(), 2),
+    }
+    let sum = fnv1a(&out);
+    w64(&mut out, sum);
+    out
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated at byte {} (wanted {n} more of {})",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn dim(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).context("dimension overflows usize")
+    }
+
+    fn shape(&mut self) -> Result<Vec<usize>> {
+        let rank = self.dim()?;
+        if rank > 8 {
+            bail!("implausible shape rank {rank}");
+        }
+        (0..rank).map(|_| self.dim()).collect()
+    }
+}
+
+fn decode_spec(r: &mut Reader) -> Result<ProgramSpec> {
+    Ok(match r.u8()? {
+        0 => {
+            let rule = r.u64()?;
+            if rule > 255 {
+                bail!("eca rule {rule} > 255");
+            }
+            ProgramSpec::Eca { rule: rule as u8, width: r.dim()? }
+        }
+        1 => ProgramSpec::Life { height: r.dim()?, width: r.dim()? },
+        2 => ProgramSpec::Lenia {
+            radius: r.dim()?,
+            height: r.dim()?,
+            width: r.dim()?,
+        },
+        3 => ProgramSpec::LeniaMulti {
+            kernels: r.dim()?,
+            radius: r.dim()?,
+            height: r.dim()?,
+            width: r.dim()?,
+        },
+        4 => ProgramSpec::NcaGrowing,
+        other => bail!("unknown program tag {other}"),
+    })
+}
+
+/// Parse the version-1 byte layout back into a [`SessionState`]. The
+/// stored id is informational (the store keys files by name); the
+/// registry re-keys the rebuilt session under the id it looked up.
+pub fn decode(bytes: &[u8]) -> Result<SessionState> {
+    if bytes.len() < MAGIC.len() + 2 + 8 || &bytes[..MAGIC.len()] != MAGIC {
+        bail!("not a cax checkpoint (bad magic)");
+    }
+    let body = &bytes[..bytes.len() - 8];
+    let stored_sum =
+        u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let sum = fnv1a(body);
+    if sum != stored_sum {
+        bail!("checksum mismatch (got {sum:#018x}, file says \
+               {stored_sum:#018x}) — truncated or corrupted");
+    }
+    let mut r = Reader { buf: body, pos: MAGIC.len() };
+    let version = r.u16()?;
+    if version != VERSION {
+        bail!("format version {version} (this build reads {VERSION})");
+    }
+    let spec = decode_spec(&mut r)?;
+    let _id = r.u64()?;
+    let seed = r.u64()?;
+    let steps_done = r.u64()?;
+    let resident = match r.u8()? {
+        0 => {
+            let shape = r.shape()?;
+            let n = r.dim()?;
+            let mut words = Vec::with_capacity(n.min(1 << 24));
+            for _ in 0..n {
+                words.push(r.u64()?);
+            }
+            Resident::Bits { words, shape, activity: None }
+        }
+        1 => {
+            let shape = r.shape()?;
+            let n = r.dim()?;
+            let mut data = Vec::with_capacity(n.min(1 << 24));
+            for _ in 0..n {
+                data.push(f32::from_bits(r.u32()?));
+            }
+            Resident::Board { data, shape, activity: None }
+        }
+        2 => {
+            let shape = r.shape()?;
+            let n = r.dim()?;
+            let mut data = Vec::with_capacity(n.min(1 << 24));
+            for _ in 0..n {
+                data.push(f32::from_bits(r.u32()?));
+            }
+            Resident::Host(Tensor::new(shape, data)?)
+        }
+        other => bail!("unknown resident tag {other}"),
+    };
+    if r.pos != body.len() {
+        bail!("{} trailing bytes after the payload", body.len() - r.pos);
+    }
+    Ok(SessionState { spec, seed, steps_done, resident })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Backend, NativeBackend};
+
+    fn session(spec: ProgramSpec, seed: u64) -> Session {
+        let backend = NativeBackend::with_threads(1);
+        let prog = spec.program().unwrap();
+        let board = spec.initial_board(seed).unwrap();
+        let resident = backend.admit(&prog, &board).unwrap();
+        Session { id: 0xABCD, spec, prog, resident, seed, steps_done: 7 }
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_bits_and_boards() {
+        for spec in [
+            ProgramSpec::Eca { rule: 110, width: 70 },
+            ProgramSpec::Life { height: 24, width: 33 },
+            ProgramSpec::Lenia { radius: 5, height: 16, width: 16 },
+            ProgramSpec::LeniaMulti {
+                kernels: 2,
+                radius: 4,
+                height: 12,
+                width: 12,
+            },
+        ] {
+            let s = session(spec.clone(), 0xFEED);
+            let state = decode(&encode(&s)).unwrap();
+            assert_eq!(state.spec, spec);
+            assert_eq!(state.seed, 0xFEED);
+            assert_eq!(state.steps_done, 7);
+            match (&state.resident, &s.resident) {
+                (
+                    Resident::Bits { words: a, shape: sa, activity },
+                    Resident::Bits { words: b, shape: sb, .. },
+                ) => {
+                    assert_eq!(a, b);
+                    assert_eq!(sa, sb);
+                    assert!(activity.is_none(), "maps never round-trip");
+                }
+                (
+                    Resident::Board { data: a, shape: sa, activity },
+                    Resident::Board { data: b, shape: sb, .. },
+                ) => {
+                    // Bitwise, not approximate: to_bits on both sides.
+                    let bits =
+                        |v: &[f32]| -> Vec<u32> {
+                            v.iter().map(|x| x.to_bits()).collect()
+                        };
+                    assert_eq!(bits(a), bits(b));
+                    assert_eq!(sa, sb);
+                    assert!(activity.is_none(), "maps never round-trip");
+                }
+                other => panic!("resident kind changed: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_and_version_skew_are_load_errors() {
+        let s = session(ProgramSpec::Life { height: 8, width: 8 }, 1);
+        let good = encode(&s);
+        assert!(decode(&good).is_ok());
+        // Flip one payload byte: checksum must catch it.
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        let err = decode(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        // Truncate: also a checksum (or length) error, never a panic.
+        assert!(decode(&good[..good.len() - 3]).is_err());
+        assert!(decode(b"CA").is_err());
+        // Version bump: named in the error.
+        let mut skew = good.clone();
+        skew[6] = 0x7F;
+        let sum = fnv1a(&skew[..skew.len() - 8]);
+        let n = skew.len();
+        skew[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode(&skew).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
+    fn store_save_load_remove_and_scan() {
+        let dir = std::env::temp_dir()
+            .join(format!("cax-ckpt-unit-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let store = CheckpointStore::open(&dir).unwrap();
+        assert!(store.ids().is_empty());
+        let s = session(ProgramSpec::Eca { rule: 30, width: 40 }, 9);
+        assert!(!store.contains(s.id));
+        store.save(&s).unwrap();
+        assert!(store.contains(s.id));
+        assert_eq!(store.ids(), vec![s.id]);
+        let state = store.load(s.id).unwrap().unwrap();
+        assert_eq!(state.spec, s.spec);
+        assert!(store.load(0xDEAD).unwrap().is_none());
+        assert!(store.remove(s.id).unwrap());
+        assert!(!store.remove(s.id).unwrap(), "second remove is a no-op");
+        assert!(store.load(s.id).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -20,7 +20,13 @@
 //! | `POST /sessions/<id>/reset` | — | rewind to the seeded initial board |
 //! | `DELETE /sessions/<id>` | — | destroy |
 //! | `GET /sessions/<id>/snapshot.ppm` | — | P6 image of the board |
+//! | `GET /sessions/<id>/stream` | — | SSE frames per tick (chunked) |
 //! | `POST /shutdown` | — | graceful drain + exit |
+//!
+//! `/stream` is the one chunked-transfer route: the connection switches
+//! to `text/event-stream` and the handler relays frames from the
+//! [`super::stream::StreamHub`] until the client disconnects or the
+//! server drains (see [`handle_stream`]).
 //!
 //! Every request is timed into a per-route latency histogram
 //! (`http_{route}_seconds` in the coalescer's metric registry, exposed
@@ -67,7 +73,7 @@ extern "C" fn on_signal(_sig: i32) {
 /// against the C runtime every Rust binary on unix already links — no
 /// crate dependency.
 #[cfg(unix)]
-fn install_signal_handlers() {
+pub(crate) fn install_signal_handlers() {
     extern "C" {
         fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
     }
@@ -80,7 +86,7 @@ fn install_signal_handlers() {
 }
 
 #[cfg(not(unix))]
-fn install_signal_handlers() {}
+pub(crate) fn install_signal_handlers() {}
 
 /// Whether the process received a shutdown signal.
 pub fn signalled() -> bool {
@@ -99,19 +105,19 @@ const MAX_BODY: usize = 1024 * 1024;
 const MAX_CONNS: usize = 64;
 /// Keep-alive connections idle longer than this are closed.
 const KEEPALIVE_IDLE: Duration = Duration::from_secs(60);
-const READ_POLL: Duration = Duration::from_millis(250);
+pub(crate) const READ_POLL: Duration = Duration::from_millis(250);
 /// How long a step handler waits for the scheduler's reply. The
 /// launch is NOT cancelled on timeout — the steps may still be applied.
 const STEP_REPLY_TIMEOUT: Duration = Duration::from_secs(120);
 
-struct Request {
-    method: String,
-    path: String,
-    body: Vec<u8>,
-    keep_alive: bool,
+pub(crate) struct Request {
+    pub(crate) method: String,
+    pub(crate) path: String,
+    pub(crate) body: Vec<u8>,
+    pub(crate) keep_alive: bool,
 }
 
-enum ReadOutcome {
+pub(crate) enum ReadOutcome {
     Request(Request),
     /// Peer closed cleanly.
     Closed,
@@ -147,7 +153,8 @@ fn read_line_bounded(reader: &mut BufReader<TcpStream>, line: &mut String)
     Ok(n)
 }
 
-fn read_request(reader: &mut BufReader<TcpStream>) -> Result<ReadOutcome> {
+pub(crate) fn read_request(reader: &mut BufReader<TcpStream>)
+                           -> Result<ReadOutcome> {
     let mut line = String::new();
     // A started request line is read through timeouts (it may arrive
     // split across segments); only a timeout with zero bytes is Idle.
@@ -249,20 +256,20 @@ fn read_body(reader: &mut BufReader<TcpStream>, len: usize)
     Ok(body)
 }
 
-struct Response {
+pub(crate) struct Response {
     status: u16,
     content_type: &'static str,
     body: Vec<u8>,
 }
 
 impl Response {
-    fn json(status: u16, value: &Json) -> Response {
+    pub(crate) fn json(status: u16, value: &Json) -> Response {
         let mut body = value.to_string_pretty().into_bytes();
         body.push(b'\n');
         Response { status, content_type: "application/json", body }
     }
 
-    fn error(status: u16, msg: &str) -> Response {
+    pub(crate) fn error(status: u16, msg: &str) -> Response {
         Response::json(status, &obj(vec![("error", Json::from(msg))]))
     }
 }
@@ -279,8 +286,8 @@ fn reason(status: u16) -> &'static str {
     }
 }
 
-fn respond(stream: &mut TcpStream, resp: &Response, close: bool)
-           -> std::io::Result<()> {
+pub(crate) fn respond(stream: &mut TcpStream, resp: &Response, close: bool)
+                      -> std::io::Result<()> {
     let head = format!(
         "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
          Connection: {}\r\n\r\n",
@@ -310,9 +317,14 @@ impl Ctx {
     }
 }
 
-/// Map an internal error message onto an HTTP status.
+/// Map an internal error message onto an HTTP status. Messages with
+/// the `internal:` prefix (backend invariant violations, e.g. an empty
+/// rollout batch) are the server's fault — 500, never a 4xx blaming
+/// the client.
 fn error_status(msg: &str) -> u16 {
-    if msg.contains("no session") {
+    if msg.contains("internal:") {
+        500
+    } else if msg.contains("no session") {
         404
     } else if msg.contains("queue full")
         || msg.contains("shutting down")
@@ -491,6 +503,36 @@ fn handle_stats(ctx: &Ctx) -> Response {
                     ),
                 ]),
             ),
+            (
+                "fleet",
+                obj(vec![
+                    ("evictions", Json::from(stats.evictions().get())),
+                    (
+                        "rehydrations",
+                        Json::from(stats.rehydrations().get()),
+                    ),
+                    ("evicted", Json::from(registry.evicted())),
+                    (
+                        "total_sessions",
+                        Json::from(registry.total_sessions()),
+                    ),
+                    (
+                        "resident_bytes",
+                        Json::from(registry.resident_bytes()),
+                    ),
+                ]),
+            ),
+            (
+                "stream",
+                obj(vec![
+                    ("frames", Json::from(stats.stream_frames().get())),
+                    ("dropped", Json::from(stats.stream_dropped().get())),
+                    (
+                        "subscribers",
+                        Json::from(stats.stream_subscribers().get()),
+                    ),
+                ]),
+            ),
             ("families", obj(families)),
         ]),
     )
@@ -561,15 +603,27 @@ fn handle_create(ctx: &Ctx, body: &[u8]) -> Response {
 }
 
 fn handle_status(ctx: &Ctx, id: u64) -> Response {
-    let registry = super::lock_recover(ctx.coalescer.registry());
+    let mut registry = super::lock_recover(ctx.coalescer.registry());
     if registry.is_busy(id) {
         return Response::error(
             503,
             &format!("session {} is busy (stepping); retry", fmt_id(id)),
         );
     }
-    let Some(session) = registry.get(id) else {
-        return Response::error(404, &format!("no session {}", fmt_id(id)));
+    // Lazily rehydrate an evicted session, then trim back to the
+    // working-set cap (this id was just touched, so it is never the
+    // trim victim).
+    if let Err(e) = registry.ensure_resident(id) {
+        let msg = format!("{e:#}");
+        return Response::error(error_status(&msg), &msg);
+    }
+    let _ = registry.trim_to_cap();
+    let (spec_json, steps_done) = match registry.get(id) {
+        Some(session) => (session.spec.to_json(), session.steps_done),
+        None => {
+            return Response::error(
+                404, &format!("no session {}", fmt_id(id)));
+        }
     };
     let board = registry.read_board(ctx.coalescer.backend(), id);
     let mean = match board {
@@ -580,8 +634,8 @@ fn handle_status(ctx: &Ctx, id: u64) -> Response {
         200,
         &obj(vec![
             ("id", Json::from(fmt_id(id).as_str())),
-            ("spec", session.spec.to_json()),
-            ("steps_done", Json::from(session.steps_done)),
+            ("spec", spec_json),
+            ("steps_done", Json::from(steps_done)),
             ("mean", Json::Num(mean)),
         ]),
     )
@@ -654,7 +708,7 @@ fn handle_destroy(ctx: &Ctx, id: u64) -> Response {
 
 fn handle_snapshot(ctx: &Ctx, id: u64) -> Response {
     let (spec, board) = {
-        let registry = super::lock_recover(ctx.coalescer.registry());
+        let mut registry = super::lock_recover(ctx.coalescer.registry());
         if registry.is_busy(id) {
             return Response::error(
                 503,
@@ -662,6 +716,11 @@ fn handle_snapshot(ctx: &Ctx, id: u64) -> Response {
                          fmt_id(id)),
             );
         }
+        if let Err(e) = registry.ensure_resident(id) {
+            let msg = format!("{e:#}");
+            return Response::error(error_status(&msg), &msg);
+        }
+        let _ = registry.trim_to_cap();
         let Some(session) = registry.get(id) else {
             return Response::error(404,
                                    &format!("no session {}", fmt_id(id)));
@@ -682,8 +741,10 @@ fn handle_snapshot(ctx: &Ctx, id: u64) -> Response {
     }
 }
 
-/// Render one session board as an image, per program geometry.
-fn render_board(spec: &ProgramSpec, board: &Tensor) -> Result<Image> {
+/// Render one session board as an image, per program geometry (shared
+/// with the SSE frame builder in [`super::stream`]).
+pub(crate) fn render_board(spec: &ProgramSpec, board: &Tensor)
+                           -> Result<Image> {
     match spec {
         ProgramSpec::Eca { .. } => {
             let w = board.shape()[0];
@@ -700,6 +761,131 @@ fn render_board(spec: &ProgramSpec, board: &Tensor) -> Result<Image> {
         }
         ProgramSpec::NcaGrowing => spacetime::render_rgba_state(board),
     }
+}
+
+// ---------------------------------------------------------- streaming
+
+/// Heartbeat cadence of an idle SSE connection (an `: keepalive` SSE
+/// comment), which doubles as the dead-client probe: the write fails
+/// once the peer is gone, and the subscriber is torn down.
+const STREAM_KEEPALIVE: Duration = Duration::from_secs(15);
+
+/// `GET /sessions/<id>/stream` with a well-formed id, or `None` (the
+/// request then flows through the normal router, which 404s bad ids).
+fn stream_route(req: &Request) -> Option<u64> {
+    if req.method != "GET" {
+        return None;
+    }
+    let segments: Vec<&str> =
+        req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match segments.as_slice() {
+        ["sessions", id, "stream"] => parse_id(id),
+        _ => None,
+    }
+}
+
+/// One chunk of an HTTP/1.1 chunked-transfer body.
+fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n", data.len())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()
+}
+
+/// The SSE route: subscribe to the session's frame stream and relay
+/// events until the client drops, the server drains, or the session's
+/// publisher disappears. The subscriber queue is bounded
+/// ([`super::stream::SUBSCRIBER_QUEUE`]); a client that reads slower
+/// than the tick rate loses frames (counted in `/stats`), never
+/// stalls the scheduler.
+fn handle_stream(mut stream: TcpStream, ctx: &Ctx, id: u64) -> Result<()> {
+    let start = Instant::now();
+    // The session must exist (rehydrating it if evicted) before the
+    // connection commits to the stream framing.
+    let known = {
+        let mut registry = super::lock_recover(ctx.coalescer.registry());
+        match registry.ensure_resident(id) {
+            Ok(known) => known || registry.is_busy(id),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let resp = Response::error(error_status(&msg), &msg);
+                let _ = respond(&mut stream, &resp, true);
+                return Ok(());
+            }
+        }
+    };
+    if !known {
+        let resp =
+            Response::error(404, &format!("no session {}", fmt_id(id)));
+        let _ = respond(&mut stream, &resp, true);
+        return Ok(());
+    }
+    let (token, rx) = ctx.coalescer.hub().subscribe(id);
+    let outcome = stream_events(&mut stream, ctx, id, &rx);
+    ctx.coalescer.hub().unsubscribe(id, token);
+    let dur = start.elapsed();
+    if obs::recording() {
+        ctx.coalescer
+            .stats()
+            .registry()
+            .histogram("http_stream_seconds")
+            .record_duration(dur);
+    }
+    trace::record_complete("http_stream", start, dur);
+    outcome
+}
+
+fn stream_events(stream: &mut TcpStream, ctx: &Ctx, id: u64,
+                 rx: &std::sync::mpsc::Receiver<String>) -> Result<()> {
+    use std::sync::mpsc::RecvTimeoutError;
+    stream
+        .write_all(
+            b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+              Cache-Control: no-cache\r\nTransfer-Encoding: chunked\r\n\
+              Connection: close\r\n\r\n",
+        )
+        .context("writing stream header")?;
+    // An immediate frame of the current board, so a subscriber sees
+    // state without waiting for the next step.
+    {
+        let mut registry = super::lock_recover(ctx.coalescer.registry());
+        let _ = registry.ensure_resident(id);
+        if let Some(session) = registry.get(id) {
+            if let Ok(event) = super::stream::frame_event(
+                ctx.coalescer.backend(),
+                session,
+                0,
+            ) {
+                write_chunk(stream, event.as_bytes())
+                    .context("writing initial frame")?;
+            }
+        }
+    }
+    let mut last_write = Instant::now();
+    loop {
+        if ctx.stopping() {
+            break;
+        }
+        match rx.recv_timeout(READ_POLL) {
+            Ok(event) => {
+                write_chunk(stream, event.as_bytes())
+                    .context("writing frame")?;
+                last_write = Instant::now();
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if last_write.elapsed() >= STREAM_KEEPALIVE {
+                    write_chunk(stream, b": keepalive\n\n")
+                        .context("writing keepalive")?;
+                    last_write = Instant::now();
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // Terminal chunk: a clean end of the chunked body.
+    let _ = stream.write_all(b"0\r\n\r\n");
+    let _ = stream.flush();
+    Ok(())
 }
 
 // ------------------------------------------------------------- server
@@ -736,7 +922,7 @@ impl Server {
 
 /// Bind and spawn a server over a fresh coalescer.
 pub fn start(cfg: &ServeConfig) -> Result<Server> {
-    start_with(cfg, Arc::new(Coalescer::new(cfg)))
+    start_with(cfg, Arc::new(Coalescer::try_new(cfg)?))
 }
 
 /// Bind and spawn a server over an existing coalescer (tests drive the
@@ -816,6 +1002,15 @@ fn accept_loop(listener: TcpListener, ctx: Arc<Ctx>,
     crate::log_info!("serve: shutdown requested — draining in-flight work");
     ctx.coalescer.shutdown();
     let _ = scheduler.join();
+    // With a state dir, park every resident session on disk so a
+    // restarted server resumes the same trajectories bit-identically.
+    match ctx.coalescer.checkpoint_all() {
+        Ok(0) => {}
+        Ok(n) => crate::log_info!("serve: checkpointed {n} sessions"),
+        Err(e) => {
+            crate::log_warn!("serve: final checkpoint failed: {e:#}");
+        }
+    }
     let deadline = Instant::now() + Duration::from_secs(3);
     while active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(5));
@@ -853,6 +1048,12 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> Result<()> {
             }
             ReadOutcome::Request(req) => {
                 last_activity = Instant::now();
+                // The one route that takes over the raw connection:
+                // `GET /sessions/:id/stream` switches to chunked
+                // text/event-stream and never returns to keep-alive.
+                if let Some(id) = stream_route(&req) {
+                    return handle_stream(stream, ctx, id);
+                }
                 let resp = route(ctx, &req);
                 let close = !req.keep_alive || ctx.stopping();
                 respond(&mut stream, &resp, close)
@@ -870,14 +1071,22 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> Result<()> {
 pub fn run(cfg: &ServeConfig) -> Result<()> {
     install_signal_handlers();
     let server = start(cfg)?;
+    let mut extras = String::new();
+    if let Some(dir) = &cfg.state_dir {
+        extras.push_str(&format!(", state-dir {}", dir.display()));
+    }
+    if let Some((index, count)) = cfg.shard {
+        extras.push_str(&format!(", shard {index}/{count}"));
+    }
     println!(
         "cax serve listening on {} ({} worker threads, max {} sessions, \
-         max batch {}, simd {})",
+         max batch {}, simd {}{})",
         server.addr(),
         cfg.threads,
         cfg.max_sessions,
         cfg.max_batch,
-        crate::backend::native::simd::status()
+        crate::backend::native::simd::status(),
+        extras
     );
     std::io::stdout().flush().ok();
     server.join()

@@ -20,6 +20,16 @@
 //! - [`http`]: a std-only HTTP/1.1 front end over `TcpListener`
 //!   (JSON via `util::json`, PPM snapshots via `viz::ppm`), plus
 //!   graceful SIGINT/SIGTERM shutdown that drains in-flight work.
+//! - [`checkpoint`]: versioned on-disk session state (`--state-dir`),
+//!   turning `max_sessions` into a working-set cap via LRU eviction
+//!   and bit-identical lazy rehydration.
+//! - [`stream`]: the SSE fan-out hub behind
+//!   `GET /sessions/:id/stream` — live frames per scheduler tick with
+//!   bounded per-subscriber queues (slow clients drop frames, never
+//!   stall a tick).
+//! - [`router`]: the `--shards N` front process — N forked workers,
+//!   sessions hashed across them by id, so the serving fleet scales
+//!   past one process while every invariant above stays cross-process.
 //!
 //! The whole pipeline is instrumented through [`crate::obs`]: request
 //! wait / launch / tick latency histograms and queue gauges live in
@@ -45,14 +55,20 @@
 //! curl -s localhost:7878/sessions/<id>/snapshot.ppm -o board.ppm
 //! ```
 
+pub mod checkpoint;
 pub mod http;
+pub mod router;
 pub mod scheduler;
 pub mod session;
+pub mod stream;
 
+pub use checkpoint::CheckpointStore;
 pub use http::{run, start, Server};
 pub use scheduler::{Coalescer, ServeStats, StepDone, StepReply, StepRequest};
 pub use session::{ProgramSpec, Session, SessionRegistry, FAMILIES};
+pub use stream::StreamHub;
 
+use std::path::PathBuf;
 use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
@@ -110,6 +126,21 @@ pub struct ServeConfig {
     /// accumulate before packing a batch (latency traded for batch
     /// size; zero = pack immediately).
     pub tick_window: Duration,
+    /// Durable session state directory (`--state-dir`). With one set,
+    /// `max_sessions` becomes a *working-set* cap: a full registry
+    /// evicts its LRU session to a [`checkpoint`] file instead of
+    /// refusing the create, and evicted sessions rehydrate lazily on
+    /// next touch — bit-identically (see [`checkpoint`] for the format
+    /// contract). Graceful shutdown checkpoints every resident session.
+    pub state_dir: Option<PathBuf>,
+    /// `cax serve --shards N`: with `N >= 2` the CLI starts the
+    /// [`router`] — N forked worker processes with sessions hashed
+    /// across them — instead of a single in-process server.
+    pub shards: usize,
+    /// Worker identity under the shard router (`index`, `count`):
+    /// session ids are minted with `id % count == index`, so the
+    /// router can route any `/sessions/:id/...` request statelessly.
+    pub shard: Option<(u64, u64)>,
 }
 
 impl Default for ServeConfig {
@@ -125,6 +156,9 @@ impl Default for ServeConfig {
             max_steps: 10_000,
             seed: 0,
             tick_window: Duration::from_micros(300),
+            state_dir: None,
+            shards: 1,
+            shard: None,
         }
     }
 }

@@ -1,0 +1,468 @@
+//! The `--shards N` front process: a thin std-only shard router.
+//!
+//! `cax serve --shards N` does not scale one scheduler across cores —
+//! it forks **N whole worker processes** (each a normal single-shard
+//! `cax serve` with its own registry, coalescer and metric registry)
+//! and puts this router in front of them. Sessions are *partitioned by
+//! id*: every worker mints session ids satisfying
+//! `id % shard_count == shard_index` (see
+//! [`SessionRegistry::set_shard`](super::SessionRegistry::set_shard)),
+//! so the router can route any `/sessions/:id/...` request statelessly
+//! by `parse_id(id) % N` — no routing table, no shared state, no
+//! rebalancing. Creates (`POST /sessions`) round-robin across workers.
+//!
+//! The router speaks the same HTTP surface as a worker:
+//!
+//! - `POST /sessions` → round-robin to a worker, relay the reply (the
+//!   returned id encodes its shard forever).
+//! - `/sessions/:id/...` (status, step, reset, destroy, snapshot,
+//!   **stream**) → proxy to shard `id % N`. Proxied responses are
+//!   relayed byte-for-byte until worker EOF, which transparently
+//!   covers the chunked SSE stream route.
+//! - `GET /healthz` → fan out, sum sessions/pending, AND the `ok`s.
+//! - `GET /stats` → fan out, reply `{"shards": [{shard, addr, stats},
+//!   ...]}` with each worker's full stats document embedded.
+//! - `POST /shutdown` (or SIGINT/SIGTERM) → broadcast `/shutdown` to
+//!   every worker, wait for each child to drain and exit, then exit.
+//!
+//! Workers bind ephemeral loopback ports; the router learns each
+//! address by parsing the worker's `listening on ADDR` stdout line
+//! (the same line the integration tests parse). Worker stdout is then
+//! forwarded to the router's *stderr* under a `[shard i]` prefix so
+//! the router's own stdout stays machine-parseable. With
+//! `--state-dir DIR`, worker `i` persists under `DIR/shard-i/` —
+//! checkpoint files never cross shards, keeping the bit-identity
+//! contract per worker.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::http::{self, ReadOutcome, Request, Response};
+use crate::serve::session::parse_id;
+use crate::serve::ServeConfig;
+use crate::util::json::{obj, Json};
+
+/// How long a worker gets to print its `listening on` line.
+const WORKER_START_TIMEOUT: Duration = Duration::from_secs(30);
+/// How long a worker gets to drain and exit after `/shutdown`.
+const WORKER_DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
+
+struct Worker {
+    index: usize,
+    addr: SocketAddr,
+    child: Child,
+}
+
+/// Spawn worker `index` as a child `cax serve` process on an ephemeral
+/// port and wait for it to report its address.
+fn spawn_worker(cfg: &ServeConfig, index: usize) -> Result<Worker> {
+    let exe = std::env::current_exe()
+        .context("resolving the cax binary for worker spawn")?;
+    let mut cmd = Command::new(exe);
+    cmd.arg("--seed")
+        .arg(cfg.seed.to_string())
+        .arg("serve")
+        .arg("--port")
+        .arg("0")
+        .arg("--threads")
+        .arg(cfg.threads.to_string())
+        .arg("--max-sessions")
+        .arg(cfg.max_sessions.to_string())
+        .arg("--max-batch")
+        .arg(cfg.max_batch.to_string())
+        .arg("--max-pending")
+        .arg(cfg.max_pending.to_string())
+        .arg("--max-steps")
+        .arg(cfg.max_steps.to_string())
+        .arg("--tick-us")
+        .arg(cfg.tick_window.as_micros().to_string())
+        .arg("--shard-index")
+        .arg(index.to_string())
+        .arg("--shard-count")
+        .arg(cfg.shards.to_string());
+    if let Some(dir) = &cfg.state_dir {
+        cmd.arg("--state-dir").arg(dir.join(format!("shard-{index}")));
+    }
+    cmd.stdin(Stdio::null()).stdout(Stdio::piped());
+    let mut child = cmd
+        .spawn()
+        .with_context(|| format!("spawning shard worker {index}"))?;
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = BufReader::new(stdout);
+    let deadline = Instant::now() + WORKER_START_TIMEOUT;
+    let addr = loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                let status = child.wait().ok();
+                bail!(
+                    "shard worker {index} exited before listening \
+                     (status {status:?})"
+                );
+            }
+            Ok(_) => {
+                if let Some(rest) = line.split("listening on ").nth(1) {
+                    let token =
+                        rest.split_whitespace().next().unwrap_or("");
+                    break token.parse::<SocketAddr>().with_context(|| {
+                        format!(
+                            "shard worker {index}: bad listen address \
+                             {token:?}"
+                        )
+                    })?;
+                }
+                eprint!("[shard {index}] {line}");
+            }
+            Err(e) => return Err(e).with_context(|| {
+                format!("reading shard worker {index} stdout")
+            }),
+        }
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            bail!("shard worker {index} did not report an address");
+        }
+    };
+    // Keep draining the worker's stdout (onto our stderr) so the child
+    // never blocks on a full pipe.
+    std::thread::spawn(move || {
+        for line in reader.lines() {
+            match line {
+                Ok(line) => eprintln!("[shard {index}] {line}"),
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(Worker { index, addr, child })
+}
+
+/// One-shot HTTP client against a worker: send, read to EOF, split
+/// status and body. Workers honor `Connection: close`, so EOF
+/// delimits the response.
+fn fetch(addr: SocketAddr, method: &str, path: &str, body: &[u8])
+         -> Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to shard at {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    send_request(&mut stream, addr, method, path, body)?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("reading shard response")?;
+    let header_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .context("shard response has no header terminator")?;
+    let head = std::str::from_utf8(&raw[..header_end])
+        .context("shard response head is not UTF-8")?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .context("shard response has no status code")?;
+    Ok((status, raw[header_end + 4..].to_vec()))
+}
+
+fn send_request(stream: &mut TcpStream, addr: SocketAddr, method: &str,
+                path: &str, body: &[u8]) -> Result<()> {
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Relay one request to `addr` and copy the response back
+/// byte-for-byte until the worker closes — content-length and chunked
+/// (SSE) responses alike, with per-chunk flushes so streamed frames
+/// reach the client promptly.
+fn proxy(client: &mut TcpStream, addr: SocketAddr, req: &Request)
+         -> Result<()> {
+    let mut upstream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => {
+            let resp = Response::error(
+                503,
+                &format!("shard at {addr} unreachable: {e}"),
+            );
+            let _ = http::respond(client, &resp, true);
+            return Ok(());
+        }
+    };
+    send_request(&mut upstream, addr, &req.method, &req.path, &req.body)?;
+    let mut buf = [0u8; 8192];
+    loop {
+        match upstream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                if client.write_all(&buf[..n]).is_err() {
+                    break; // client went away; drop the relay
+                }
+                let _ = client.flush();
+            }
+            Err(e) => {
+                crate::log_warn!("router: relay from {addr} failed: {e}");
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+struct RouterCtx {
+    addrs: Vec<SocketAddr>,
+    next: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+impl RouterCtx {
+    fn stopping(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || http::signalled()
+    }
+
+    fn shard_for(&self, id: u64) -> SocketAddr {
+        self.addrs[(id % self.addrs.len() as u64) as usize]
+    }
+}
+
+fn handle_healthz(ctx: &RouterCtx) -> Response {
+    let mut ok = true;
+    let (mut sessions, mut pending) = (0u64, 0u64);
+    for &addr in &ctx.addrs {
+        match fetch(addr, "GET", "/healthz", b"")
+            .ok()
+            .filter(|(status, _)| *status == 200)
+            .and_then(|(_, body)| {
+                Json::parse(std::str::from_utf8(&body).ok()?).ok()
+            }) {
+            Some(json) => {
+                ok &= json.get("ok").and_then(Json::as_bool)
+                    == Some(true);
+                let num = |key| {
+                    json.get(key)
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0) as u64
+                };
+                sessions += num("sessions");
+                pending += num("pending");
+            }
+            None => ok = false,
+        }
+    }
+    Response::json(
+        if ok { 200 } else { 503 },
+        &obj(vec![
+            ("ok", Json::Bool(ok)),
+            ("shards", Json::from(ctx.addrs.len())),
+            ("sessions", Json::from(sessions)),
+            ("pending", Json::from(pending)),
+        ]),
+    )
+}
+
+fn handle_stats(ctx: &RouterCtx) -> Response {
+    let mut shards = Vec::with_capacity(ctx.addrs.len());
+    for (index, &addr) in ctx.addrs.iter().enumerate() {
+        let stats = fetch(addr, "GET", "/stats", b"")
+            .ok()
+            .filter(|(status, _)| *status == 200)
+            .and_then(|(_, body)| {
+                Json::parse(std::str::from_utf8(&body).ok()?).ok()
+            })
+            .unwrap_or(Json::Null);
+        shards.push(obj(vec![
+            ("shard", Json::from(index)),
+            ("addr", Json::from(addr.to_string().as_str())),
+            ("stats", stats),
+        ]));
+    }
+    Response::json(
+        200,
+        &obj(vec![
+            ("router", Json::Bool(true)),
+            ("shards", Json::Arr(shards)),
+        ]),
+    )
+}
+
+/// Route one request: local aggregate endpoints answer here, anything
+/// session-scoped relays to its shard. Returns `None` when the
+/// response was already written (proxied).
+fn route(ctx: &RouterCtx, client: &mut TcpStream, req: &Request)
+         -> Result<Option<Response>> {
+    let segments: Vec<&str> =
+        req.path.split('/').filter(|s| !s.is_empty()).collect();
+    let resp = match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => handle_healthz(ctx),
+        ("GET", ["stats"]) => handle_stats(ctx),
+        ("POST", ["shutdown"]) => {
+            ctx.shutdown.store(true, Ordering::SeqCst);
+            Response::json(
+                200, &obj(vec![("draining", Json::Bool(true))]))
+        }
+        ("POST", ["sessions"]) => {
+            let pick = ctx.next.fetch_add(1, Ordering::Relaxed)
+                % ctx.addrs.len();
+            proxy(client, ctx.addrs[pick], req)?;
+            return Ok(None);
+        }
+        (_, ["sessions", id, ..]) => match parse_id(id) {
+            Some(id) => {
+                proxy(client, ctx.shard_for(id), req)?;
+                return Ok(None);
+            }
+            None => {
+                Response::error(404, &format!("bad session id {id:?}"))
+            }
+        },
+        _ => Response::error(404, "no such route on the shard router"),
+    };
+    Ok(Some(resp))
+}
+
+fn handle_connection(ctx: Arc<RouterCtx>, stream: TcpStream) {
+    let run = || -> Result<()> {
+        stream.set_read_timeout(Some(http::READ_POLL))?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        loop {
+            match http::read_request(&mut reader)? {
+                ReadOutcome::Closed => return Ok(()),
+                ReadOutcome::Idle => {
+                    if ctx.stopping() {
+                        return Ok(());
+                    }
+                }
+                ReadOutcome::Request(req) => {
+                    // One request per connection: proxied responses
+                    // end at worker EOF, so close unconditionally.
+                    if let Some(resp) = route(&ctx, &mut writer, &req)? {
+                        http::respond(&mut writer, &resp, true)?;
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    };
+    if let Err(e) = run() {
+        crate::log_warn!("router: connection error: {e:#}");
+    }
+}
+
+/// Broadcast `/shutdown` and wait for every worker to drain and exit.
+fn drain_workers(workers: &mut [Worker]) {
+    for worker in workers.iter() {
+        if let Err(e) =
+            fetch(worker.addr, "POST", "/shutdown", b"")
+        {
+            crate::log_warn!(
+                "router: shutdown of shard {} failed: {e:#}",
+                worker.index
+            );
+        }
+    }
+    for worker in workers.iter_mut() {
+        let deadline = Instant::now() + WORKER_DRAIN_TIMEOUT;
+        loop {
+            match worker.child.try_wait() {
+                Ok(Some(status)) => {
+                    if !status.success() {
+                        crate::log_warn!(
+                            "router: shard {} exited with {status}",
+                            worker.index
+                        );
+                    }
+                    break;
+                }
+                Ok(None) if Instant::now() > deadline => {
+                    crate::log_warn!(
+                        "router: shard {} did not drain; killing",
+                        worker.index
+                    );
+                    let _ = worker.child.kill();
+                    let _ = worker.child.wait();
+                    break;
+                }
+                Ok(None) => {
+                    std::thread::sleep(Duration::from_millis(20))
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "router: waiting on shard {}: {e}",
+                        worker.index
+                    );
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Run the shard router until `/shutdown` or a signal: spawn the
+/// workers, serve the routing front end, then drain the fleet.
+pub fn run(cfg: &ServeConfig) -> Result<()> {
+    if cfg.shards < 2 {
+        bail!("router wants --shards >= 2, got {}", cfg.shards);
+    }
+    http::install_signal_handlers();
+    let mut workers = Vec::with_capacity(cfg.shards);
+    for index in 0..cfg.shards {
+        match spawn_worker(cfg, index) {
+            Ok(worker) => workers.push(worker),
+            Err(e) => {
+                drain_workers(&mut workers);
+                return Err(e);
+            }
+        }
+    }
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+        .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let shard_list: Vec<String> =
+        workers.iter().map(|w| w.addr.to_string()).collect();
+    println!(
+        "cax serve router listening on {addr} ({} shards: {})",
+        cfg.shards,
+        shard_list.join(", ")
+    );
+    std::io::stdout().flush().ok();
+
+    let ctx = Arc::new(RouterCtx {
+        addrs: workers.iter().map(|w| w.addr).collect(),
+        next: AtomicUsize::new(0),
+        shutdown: AtomicBool::new(false),
+    });
+    while !ctx.stopping() {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let ctx = Arc::clone(&ctx);
+                std::thread::spawn(move || handle_connection(ctx, stream));
+            }
+            Err(e) if is_timeout(e.kind()) => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                crate::log_warn!("router: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    crate::log_info!("router: draining {} shards", workers.len());
+    drain_workers(&mut workers);
+    Ok(())
+}
+
+fn is_timeout(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}

@@ -42,7 +42,9 @@ use anyhow::{bail, Result};
 
 use crate::backend::{Backend, NativeBackend};
 use crate::obs::{trace, Counter, Gauge, Histogram, Registry};
+use crate::serve::checkpoint::CheckpointStore;
 use crate::serve::session::{fmt_id, SessionRegistry, FAMILIES};
+use crate::serve::stream::StreamHub;
 use crate::serve::ServeConfig;
 
 /// A pending "step session S by N" request, with its reply channel.
@@ -115,6 +117,11 @@ pub struct ServeStats {
     deferred_busy: Arc<Counter>,
     deferred_claimed: Arc<Counter>,
     deferred_batch_full: Arc<Counter>,
+    evictions: Arc<Counter>,
+    rehydrations: Arc<Counter>,
+    stream_frames: Arc<Counter>,
+    stream_dropped: Arc<Counter>,
+    stream_subscribers: Arc<Gauge>,
     family: Vec<Arc<Counter>>,
     registry: Registry,
 }
@@ -144,6 +151,11 @@ impl Default for ServeStats {
                 .counter("serve_deferred_claimed_total"),
             deferred_batch_full: registry
                 .counter("serve_deferred_batch_full_total"),
+            evictions: registry.counter("serve_evictions_total"),
+            rehydrations: registry.counter("serve_rehydrations_total"),
+            stream_frames: registry.counter("serve_stream_frames_total"),
+            stream_dropped: registry.counter("serve_stream_dropped_total"),
+            stream_subscribers: registry.gauge("serve_stream_subscribers"),
             family: FAMILIES
                 .iter()
                 .map(|f| registry.counter(&format!(
@@ -195,6 +207,36 @@ impl ServeStats {
         &self.queue_depth_samples
     }
 
+    /// Sessions checkpointed to disk to make room
+    /// (`serve_evictions_total`).
+    pub fn evictions(&self) -> &Counter {
+        &self.evictions
+    }
+
+    /// Evicted sessions lazily restored on touch
+    /// (`serve_rehydrations_total`).
+    pub fn rehydrations(&self) -> &Counter {
+        &self.rehydrations
+    }
+
+    /// SSE frames delivered to subscriber queues
+    /// (`serve_stream_frames_total`).
+    pub fn stream_frames(&self) -> &Counter {
+        &self.stream_frames
+    }
+
+    /// SSE frames dropped on slow clients whose bounded queue was full
+    /// (`serve_stream_dropped_total`).
+    pub fn stream_dropped(&self) -> &Counter {
+        &self.stream_dropped
+    }
+
+    /// Live SSE subscribers, with a high-water mark
+    /// (`serve_stream_subscribers`).
+    pub fn stream_subscribers(&self) -> &Gauge {
+        &self.stream_subscribers
+    }
+
     /// `(family, accepted requests)` per program family, in
     /// [`FAMILIES`] order.
     pub fn family_requests(&self) -> Vec<(&'static str, u64)> {
@@ -227,15 +269,40 @@ pub struct Coalescer {
     /// before packing (latency it trades for batch size).
     tick_window: Duration,
     stats: ServeStats,
+    hub: StreamHub,
     started: Instant,
 }
 
 impl Coalescer {
+    /// Build a coalescer, panicking on an unusable config (see
+    /// [`try_new`](Self::try_new) for the fallible path `cax serve`
+    /// uses — only an unopenable `--state-dir` can actually fail).
     pub fn new(cfg: &ServeConfig) -> Coalescer {
-        Coalescer {
+        Self::try_new(cfg).expect("serve: invalid config")
+    }
+
+    pub fn try_new(cfg: &ServeConfig) -> Result<Coalescer> {
+        let stats = ServeStats::default();
+        let mut registry = SessionRegistry::new(cfg.seed, cfg.max_sessions);
+        if let Some((index, count)) = cfg.shard {
+            registry.set_shard(index, count);
+        }
+        if let Some(dir) = &cfg.state_dir {
+            let store = CheckpointStore::open(dir)?;
+            registry.set_store(
+                store,
+                Arc::clone(&stats.evictions),
+                Arc::clone(&stats.rehydrations),
+            );
+        }
+        let hub = StreamHub::new(
+            Arc::clone(&stats.stream_frames),
+            Arc::clone(&stats.stream_dropped),
+            Arc::clone(&stats.stream_subscribers),
+        );
+        Ok(Coalescer {
             backend: NativeBackend::with_threads(cfg.threads),
-            registry: Mutex::new(SessionRegistry::new(cfg.seed,
-                                                      cfg.max_sessions)),
+            registry: Mutex::new(registry),
             queue: Mutex::new(Queue {
                 pending: VecDeque::new(),
                 draining: false,
@@ -245,13 +312,26 @@ impl Coalescer {
             max_pending: cfg.max_pending.max(1),
             max_steps: cfg.max_steps.max(1),
             tick_window: cfg.tick_window,
-            stats: ServeStats::default(),
+            stats,
+            hub,
             started: Instant::now(),
-        }
+        })
     }
 
     pub fn backend(&self) -> &NativeBackend {
         &self.backend
+    }
+
+    /// The SSE fan-out hub (`GET /sessions/:id/stream` subscribes
+    /// here; every batched launch publishes through it).
+    pub fn hub(&self) -> &StreamHub {
+        &self.hub
+    }
+
+    /// Checkpoint every resident session (the graceful-shutdown path
+    /// calls this after the scheduler drains). `0` without a state dir.
+    pub fn checkpoint_all(&self) -> Result<usize> {
+        super::lock_recover(&self.registry).checkpoint_all()
     }
 
     /// The session registry (create/read/reset/destroy go straight
@@ -339,7 +419,7 @@ impl Coalescer {
         let mut deferred: Vec<StepRequest> = vec![];
         let mut served = 0usize;
         {
-            let registry = super::lock_recover(&self.registry);
+            let mut registry = super::lock_recover(&self.registry);
             for req in taken {
                 // Defensive: a session detached into a still-running
                 // launch (possible if tick() ever runs concurrently)
@@ -349,6 +429,15 @@ impl Coalescer {
                     self.stats.deferred_busy.inc();
                     blocked.insert(req.session);
                     deferred.push(req);
+                    continue;
+                }
+                // Lazily rehydrate an evicted session before the lookup
+                // (may transiently overflow the working-set cap; the
+                // trim at the end of this tick restores it).
+                if let Err(e) = registry.ensure_resident(req.session) {
+                    self.stats.wait.record_duration(req.waited());
+                    let _ = req.reply.send(Err(format!("{e:#}")));
+                    served += 1;
                     continue;
                 }
                 let Some(session) = registry.get(req.session) else {
@@ -439,6 +528,10 @@ impl Coalescer {
                 for s in &mut sessions {
                     s.steps_done += steps as u64;
                 }
+                // Push a frame to any SSE subscribers while we still
+                // own the detached sessions (no registry lock held).
+                // Fast no-op when nobody is subscribed.
+                self.hub.publish_batch(&self.backend, &sessions, batch);
             }
             let replies: Vec<StepReply> = match &outcome {
                 Ok(()) => sessions
@@ -482,6 +575,14 @@ impl Coalescer {
                 q.pending.push_front(req);
             }
             self.stats.queue_depth.set(q.pending.len() as u64);
+        }
+        // Rehydrations may have overflowed the working-set cap this
+        // tick; evict back down to it now that every launch is done.
+        {
+            let mut registry = super::lock_recover(&self.registry);
+            if let Err(e) = registry.trim_to_cap() {
+                crate::log_warn!("serve: working-set trim failed: {e:#}");
+            }
         }
         if served > 0 {
             self.stats.ticks.fetch_add(1, Ordering::Relaxed);

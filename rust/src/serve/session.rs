@@ -10,6 +10,7 @@
 //! exactly.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -21,6 +22,8 @@ use crate::backend::{
     Backend, CaProgram, NativeBackend, NativeTrainBackend, ProgramBackend,
     Resident,
 };
+use crate::obs::Counter;
+use crate::serve::checkpoint::CheckpointStore;
 use crate::tensor::Tensor;
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
@@ -250,7 +253,7 @@ impl ProgramSpec {
         if let ProgramSpec::NcaGrowing = self {
             let tb = NativeTrainBackend::new();
             let out = tb.execute("growing_seed", &[])?;
-            return Ok(out.into_iter().next().unwrap());
+            return first_output(out, "growing_seed");
         }
         let shape = self.board_shape();
         let numel: usize = shape.iter().product();
@@ -332,6 +335,19 @@ impl ProgramSpec {
     }
 }
 
+/// First tensor of a program call's output batch, as a proper error
+/// when the batch comes back empty. A backend handing back zero outputs
+/// is an internal invariant violation, not a client mistake — the
+/// message carries the `internal:` prefix the HTTP layer maps to a 500
+/// (everything else defaults to 400), and the caller gets an `Err`
+/// instead of the panic an `unwrap` here once was.
+pub fn first_output(out: Vec<Tensor>, program: &str) -> Result<Tensor> {
+    let mut it = out.into_iter();
+    it.next().with_context(|| {
+        format!("internal: program {program:?} returned an empty output batch")
+    })
+}
+
 /// Refuse a board containing NaN or ±inf *at admission*. The f32
 /// substrates are NaN-propagating (a single poisoned cell spreads to
 /// its whole neighborhood every step and never washes out), so the only
@@ -385,6 +401,15 @@ pub fn parse_id(text: &str) -> Option<u64> {
 /// so the registry lock is NOT held across kernel execution — other
 /// endpoints keep working, and accesses to a busy session fail fast
 /// with a retryable "busy" error instead of blocking.
+///
+/// With a [`CheckpointStore`] attached ([`set_store`](Self::set_store)),
+/// `max_sessions` becomes a *working-set* cap instead of a hard limit:
+/// a full registry evicts its least-recently-touched session to disk to
+/// admit a new one, and any access to an evicted id lazily rehydrates
+/// it ([`ensure_resident`](Self::ensure_resident)). Checkpoints are
+/// bitwise round-trips (see [`crate::serve::checkpoint`]), so an
+/// evicted-and-rehydrated trajectory is indistinguishable from a
+/// never-evicted one.
 #[derive(Debug)]
 pub struct SessionRegistry {
     seed: u64,
@@ -393,6 +418,16 @@ pub struct SessionRegistry {
     sessions: BTreeMap<u64, Session>,
     /// Sessions currently detached into a batched launch.
     busy: BTreeSet<u64>,
+    /// LRU clock: bumped on every touch; per-id last-touch stamps.
+    clock: u64,
+    recency: BTreeMap<u64, u64>,
+    /// Durable home of evicted sessions; `None` = hard-cap behavior.
+    store: Option<CheckpointStore>,
+    /// Worker identity under the shard router: ids are minted so that
+    /// `id % count == index`, letting the router route by id alone.
+    shard: Option<(u64, u64)>,
+    evictions: Option<Arc<Counter>>,
+    rehydrations: Option<Arc<Counter>>,
 }
 
 impl SessionRegistry {
@@ -403,7 +438,35 @@ impl SessionRegistry {
             max_sessions: max_sessions.max(1),
             sessions: BTreeMap::new(),
             busy: BTreeSet::new(),
+            clock: 0,
+            recency: BTreeMap::new(),
+            store: None,
+            shard: None,
+            evictions: None,
+            rehydrations: None,
         }
+    }
+
+    /// Attach the durable checkpoint store (and the eviction /
+    /// rehydration counters it reports through), turning `max_sessions`
+    /// into a working-set cap.
+    pub fn set_store(&mut self, store: CheckpointStore,
+                     evictions: Arc<Counter>, rehydrations: Arc<Counter>) {
+        self.store = Some(store);
+        self.evictions = Some(evictions);
+        self.rehydrations = Some(rehydrations);
+    }
+
+    /// Constrain minted ids to `id % count == index` (shard-router
+    /// worker identity).
+    pub fn set_shard(&mut self, index: u64, count: u64) {
+        assert!(count >= 1 && index < count, "shard {index}/{count}");
+        self.shard = Some((index, count));
+    }
+
+    fn touch(&mut self, id: u64) {
+        self.clock += 1;
+        self.recency.insert(id, self.clock);
     }
 
     /// Live sessions, including ones detached into a running launch.
@@ -419,11 +482,16 @@ impl SessionRegistry {
         self.max_sessions
     }
 
-    /// Admit a new session, or refuse when the registry is full. The id
-    /// and (absent an explicit `seed`) the initial board derive from
+    /// Admit a new session. When the registry is full: with a store
+    /// attached, the LRU resident session is evicted to disk to make
+    /// room; without one, the create is refused. The id and (absent an
+    /// explicit `seed`) the initial board derive from
     /// `(service seed, creation counter)` only.
     pub fn create(&mut self, backend: &NativeBackend, spec: ProgramSpec,
                   seed: Option<u64>) -> Result<u64> {
+        if self.sessions.len() >= self.max_sessions {
+            self.evict_lru()?;
+        }
         if self.sessions.len() >= self.max_sessions {
             bail!(
                 "session limit reached ({} live); destroy a session first",
@@ -437,6 +505,8 @@ impl SessionRegistry {
         while id == 0
             || self.sessions.contains_key(&id)
             || self.busy.contains(&id)
+            || self.shard.is_some_and(|(i, n)| id % n != i)
+            || self.store.as_ref().is_some_and(|s| s.contains(id))
         {
             id = id_rng.next_u64();
         }
@@ -459,7 +529,155 @@ impl SessionRegistry {
                 steps_done: 0,
             },
         );
+        self.touch(id);
         Ok(id)
+    }
+
+    /// Evict the least-recently-touched resident session to the store.
+    /// A no-op `Ok(false)` without a store or with nothing resident;
+    /// busy (detached) sessions are not candidates — they are not in
+    /// the map while a launch holds them.
+    fn evict_lru(&mut self) -> Result<bool> {
+        let Some(store) = &self.store else { return Ok(false) };
+        let Some(id) = self
+            .sessions
+            .keys()
+            .map(|&id| (self.recency.get(&id).copied().unwrap_or(0), id))
+            .min()
+            .map(|(_, id)| id)
+        else {
+            return Ok(false);
+        };
+        let session = self.sessions.get(&id).expect("victim is resident");
+        store.save(session).context("evict")?;
+        self.sessions.remove(&id);
+        self.recency.remove(&id);
+        if let Some(c) = &self.evictions {
+            c.inc();
+        }
+        Ok(true)
+    }
+
+    /// Checkpoint-and-drop one session by id (operational/test hook for
+    /// the LRU policy `create` and `trim_to_cap` apply automatically).
+    pub fn evict(&mut self, id: u64) -> Result<()> {
+        self.check_not_busy(id)?;
+        let Some(store) = &self.store else {
+            bail!("no state-dir configured; cannot evict");
+        };
+        let session = self
+            .sessions
+            .get(&id)
+            .with_context(|| format!("no session {}", fmt_id(id)))?;
+        store.save(session).context("evict")?;
+        self.sessions.remove(&id);
+        self.recency.remove(&id);
+        if let Some(c) = &self.evictions {
+            c.inc();
+        }
+        Ok(())
+    }
+
+    /// Bring an evicted session back into RAM (a no-op for resident or
+    /// busy ids). `Ok(false)` means the id is unknown everywhere —
+    /// callers fall through to their usual "no session" error.
+    ///
+    /// Rehydration may transiently overflow `max_sessions` (evicting
+    /// here could victimize a session another request in the same tick
+    /// is about to step); the scheduler trims back to the cap at the
+    /// end of every tick via [`trim_to_cap`](Self::trim_to_cap).
+    pub fn ensure_resident(&mut self, id: u64) -> Result<bool> {
+        if self.sessions.contains_key(&id) || self.busy.contains(&id) {
+            self.touch(id);
+            return Ok(true);
+        }
+        let state = match &self.store {
+            None => return Ok(false),
+            Some(store) => match store.load(id)? {
+                None => return Ok(false),
+                Some(state) => state,
+            },
+        };
+        let prog = state.spec.program()?;
+        self.sessions.insert(
+            id,
+            Session {
+                id,
+                spec: state.spec,
+                prog,
+                // The decoded resident always carries `activity: None`:
+                // stale dirty-tile maps never survive rehydration.
+                resident: state.resident,
+                seed: state.seed,
+                steps_done: state.steps_done,
+            },
+        );
+        self.touch(id);
+        if let Some(c) = &self.rehydrations {
+            c.inc();
+        }
+        Ok(true)
+    }
+
+    /// Evict LRU sessions until the resident count is back within
+    /// `max_sessions`. Returns how many were evicted.
+    pub fn trim_to_cap(&mut self) -> Result<usize> {
+        let mut evicted = 0;
+        while self.sessions.len() > self.max_sessions {
+            if !self.evict_lru()? {
+                break;
+            }
+            evicted += 1;
+        }
+        Ok(evicted)
+    }
+
+    /// Checkpoint every resident session (graceful-shutdown hook); the
+    /// sessions stay resident. Returns how many were written, `0`
+    /// without a store.
+    pub fn checkpoint_all(&self) -> Result<usize> {
+        let Some(store) = &self.store else { return Ok(0) };
+        for session in self.sessions.values() {
+            store.save(session).context("final checkpoint")?;
+        }
+        Ok(self.sessions.len())
+    }
+
+    /// Whether this id is currently resident in RAM (not evicted, not
+    /// busy) — a test/observability hook.
+    pub fn in_ram(&self, id: u64) -> bool {
+        self.sessions.contains_key(&id)
+    }
+
+    /// Sessions evicted to disk and not currently resident.
+    pub fn evicted(&self) -> usize {
+        let Some(store) = &self.store else { return 0 };
+        store
+            .ids()
+            .into_iter()
+            .filter(|id| {
+                !self.sessions.contains_key(id) && !self.busy.contains(id)
+            })
+            .count()
+    }
+
+    /// Every session this registry answers for: resident + busy +
+    /// evicted-to-disk.
+    pub fn total_sessions(&self) -> usize {
+        self.len() + self.evicted()
+    }
+
+    /// Approximate bytes of backend-resident session state in RAM
+    /// (payload vectors only). This is what the working-set cap bounds.
+    pub fn resident_bytes(&self) -> usize {
+        self.sessions
+            .values()
+            .map(|s| match &s.resident {
+                Resident::Bits { words, .. } => words.len() * 8,
+                Resident::Board { data, .. } => data.len() * 4,
+                Resident::Host(t) => t.data().len() * 4,
+            })
+            .sum()
     }
 
     /// Whether a session is detached into a running launch.
@@ -484,10 +702,12 @@ impl SessionRegistry {
         Ok(())
     }
 
-    /// Materialize a session's board as a host tensor.
-    pub fn read_board(&self, backend: &NativeBackend, id: u64)
+    /// Materialize a session's board as a host tensor (rehydrating an
+    /// evicted one first).
+    pub fn read_board(&mut self, backend: &NativeBackend, id: u64)
                       -> Result<Tensor> {
         self.check_not_busy(id)?;
+        self.ensure_resident(id)?;
         let s = self
             .sessions
             .get(&id)
@@ -495,9 +715,13 @@ impl SessionRegistry {
         backend.read_resident(&s.prog, &s.resident)
     }
 
-    /// Rewind a session to its (seed-deterministic) initial board.
+    /// Rewind a session to its (seed-deterministic) initial board. The
+    /// fresh `admit` also discards any accumulated activity map — a
+    /// reset trajectory must re-observe the whole board, exactly as a
+    /// brand-new session would.
     pub fn reset(&mut self, backend: &NativeBackend, id: u64) -> Result<()> {
         self.check_not_busy(id)?;
+        self.ensure_resident(id)?;
         let s = self
             .sessions
             .get_mut(&id)
@@ -506,15 +730,26 @@ impl SessionRegistry {
         ensure_finite(&board).context("reset")?;
         s.resident = backend.admit(&s.prog, &board)?;
         s.steps_done = 0;
+        self.touch(id);
         Ok(())
     }
 
+    /// Remove a session everywhere it lives: RAM, and (when a store is
+    /// attached) its on-disk checkpoint — an evicted session can be
+    /// destroyed without rehydrating it first.
     pub fn destroy(&mut self, id: u64) -> Result<()> {
         self.check_not_busy(id)?;
-        self.sessions
-            .remove(&id)
-            .map(|_| ())
-            .with_context(|| format!("no session {}", fmt_id(id)))
+        let in_ram = self.sessions.remove(&id).is_some();
+        self.recency.remove(&id);
+        let on_disk = match &self.store {
+            Some(store) => store.remove(id)?,
+            None => false,
+        };
+        if in_ram || on_disk {
+            Ok(())
+        } else {
+            bail!("no session {}", fmt_id(id));
+        }
     }
 
     /// Detach a session for a batched step: it leaves the map and is
@@ -528,7 +763,9 @@ impl SessionRegistry {
 
     pub fn restore(&mut self, session: Session) {
         self.busy.remove(&session.id);
-        self.sessions.insert(session.id, session);
+        let id = session.id;
+        self.sessions.insert(id, session);
+        self.touch(id);
     }
 }
 
@@ -696,6 +933,78 @@ mod tests {
             let err = ensure_finite(&t).unwrap_err();
             assert!(format!("{err:#}").contains("non-finite"),
                     "error names the failure: {err:#}");
+        }
+    }
+
+    #[test]
+    fn empty_output_batch_is_an_internal_error_not_a_panic() {
+        // Regression: this used to be `out.into_iter().next().unwrap()`,
+        // so a backend returning an empty batch panicked the handler
+        // thread instead of producing a response.
+        let err = first_output(vec![], "growing_seed").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.starts_with("internal:"), "500-mapped prefix: {msg}");
+        assert!(msg.contains("growing_seed"), "names the program: {msg}");
+        let t = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        assert!(first_output(vec![t], "x").is_ok());
+    }
+
+    fn temp_store(tag: &str) -> (std::path::PathBuf, CheckpointStore) {
+        let dir = std::env::temp_dir()
+            .join(format!("cax-reg-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        (dir.clone(), CheckpointStore::open(&dir).unwrap())
+    }
+
+    fn counters() -> (Arc<Counter>, Arc<Counter>) {
+        let reg = crate::obs::Registry::new();
+        (reg.counter("ev"), reg.counter("re"))
+    }
+
+    #[test]
+    fn full_registry_evicts_lru_when_a_store_is_attached() {
+        let backend = NativeBackend::with_threads(1);
+        let spec = ProgramSpec::Life { height: 8, width: 8 };
+        let (dir, store) = temp_store("lru");
+        let (ev, re) = counters();
+        let mut reg = SessionRegistry::new(11, 2);
+        reg.set_store(store, ev.clone(), re.clone());
+        let a = reg.create(&backend, spec.clone(), Some(1)).unwrap();
+        let b = reg.create(&backend, spec.clone(), Some(2)).unwrap();
+        // Touch `a` so `b` is the LRU victim of the third create.
+        let board_a = reg.read_board(&backend, a).unwrap();
+        let c = reg.create(&backend, spec.clone(), Some(3)).unwrap();
+        assert_eq!(ev.get(), 1);
+        assert!(reg.in_ram(a) && reg.in_ram(c) && !reg.in_ram(b));
+        assert_eq!(reg.evicted(), 1);
+        assert_eq!(reg.total_sessions(), 3);
+        // Touching the evicted session rehydrates it (and overflows the
+        // cap until trim).
+        assert!(reg.read_board(&backend, b).is_ok());
+        assert_eq!(re.get(), 1);
+        assert_eq!(reg.trim_to_cap().unwrap(), 1);
+        assert_eq!(reg.len(), 2);
+        // Rehydrated state is byte-equal where it matters.
+        assert!(reg.read_board(&backend, a).unwrap().bit_eq(&board_a));
+        // Destroy reaches evicted sessions on disk without rehydrating.
+        for id in [a, b, c] {
+            reg.destroy(id).unwrap();
+        }
+        assert_eq!(reg.total_sessions(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn minted_ids_respect_shard_identity() {
+        let backend = NativeBackend::with_threads(1);
+        let spec = ProgramSpec::Eca { rule: 30, width: 16 };
+        for index in 0..3u64 {
+            let mut reg = SessionRegistry::new(5, 16);
+            reg.set_shard(index, 3);
+            for _ in 0..4 {
+                let id = reg.create(&backend, spec.clone(), None).unwrap();
+                assert_eq!(id % 3, index, "id {id:#x} off-shard");
+            }
         }
     }
 

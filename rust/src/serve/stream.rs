@@ -1,0 +1,273 @@
+//! SSE frame streaming: push session boards as the coalescer ticks.
+//!
+//! `GET /sessions/:id/stream` subscribes a client to a session; every
+//! batched launch that steps the session publishes one *frame event*
+//! through the [`StreamHub`] — a `text/event-stream` record whose JSON
+//! payload carries the step counter, the batch size it rode, and the
+//! rendered board as a base64 PPM. Clients observe a live trajectory
+//! instead of polling `snapshot.ppm`.
+//!
+//! # Backpressure
+//!
+//! Each subscriber owns a bounded queue of [`SUBSCRIBER_QUEUE`]
+//! already-formatted events. The publisher (the scheduler tick) only
+//! ever `try_send`s: a slow client's full queue drops the frame for
+//! that subscriber — counted in `serve_stream_dropped_total`, surfaced
+//! in `/stats` — and never blocks the tick or any other subscriber.
+//! Frames are ephemeral renderings, so dropping under pressure is
+//! loss-free for correctness: session state itself lives in the
+//! registry, not the stream.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::backend::{Backend, NativeBackend};
+use crate::obs::{Counter, Gauge};
+use crate::serve::session::{fmt_id, ProgramSpec, Session};
+use crate::tensor::Tensor;
+use crate::util::json::{obj, Json};
+
+/// Bound of each subscriber's event queue; the publisher drops frames
+/// (never blocks) once a slow client falls this far behind.
+pub const SUBSCRIBER_QUEUE: usize = 8;
+
+struct Subscriber {
+    token: u64,
+    tx: SyncSender<String>,
+}
+
+/// Fan-out point between the scheduler tick (publisher) and the SSE
+/// connection handlers (subscribers). Shared via the owning
+/// [`Coalescer`](super::Coalescer).
+pub struct StreamHub {
+    subs: Mutex<BTreeMap<u64, Vec<Subscriber>>>,
+    next_token: AtomicU64,
+    frames: Arc<Counter>,
+    dropped: Arc<Counter>,
+    subscribers: Arc<Gauge>,
+}
+
+impl StreamHub {
+    pub(crate) fn new(frames: Arc<Counter>, dropped: Arc<Counter>,
+                      subscribers: Arc<Gauge>) -> StreamHub {
+        StreamHub {
+            subs: Mutex::new(BTreeMap::new()),
+            next_token: AtomicU64::new(1),
+            frames,
+            dropped,
+            subscribers,
+        }
+    }
+
+    /// Register a subscriber for one session. The token identifies it
+    /// to [`unsubscribe`](Self::unsubscribe); dropping the receiver
+    /// also works (the publisher prunes disconnected queues lazily).
+    pub fn subscribe(&self, id: u64) -> (u64, Receiver<String>) {
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = sync_channel(SUBSCRIBER_QUEUE);
+        let mut subs = super::lock_recover(&self.subs);
+        subs.entry(id).or_default().push(Subscriber { token, tx });
+        self.subscribers.set(Self::count(&subs));
+        (token, rx)
+    }
+
+    pub fn unsubscribe(&self, id: u64, token: u64) {
+        let mut subs = super::lock_recover(&self.subs);
+        if let Some(list) = subs.get_mut(&id) {
+            list.retain(|s| s.token != token);
+            if list.is_empty() {
+                subs.remove(&id);
+            }
+        }
+        self.subscribers.set(Self::count(&subs));
+    }
+
+    fn count(subs: &BTreeMap<u64, Vec<Subscriber>>) -> u64 {
+        subs.values().map(|l| l.len() as u64).sum()
+    }
+
+    /// Current subscriber total (tests/stats).
+    pub fn subscriber_count(&self) -> u64 {
+        Self::count(&super::lock_recover(&self.subs))
+    }
+
+    /// Deliver one already-formatted event to a session's subscribers:
+    /// `try_send` per queue, dropping on full, pruning on disconnect.
+    pub fn publish(&self, id: u64, event: &str) {
+        let mut subs = super::lock_recover(&self.subs);
+        let Some(list) = subs.get_mut(&id) else { return };
+        list.retain(|s| match s.tx.try_send(event.to_string()) {
+            Ok(()) => {
+                self.frames.inc();
+                true
+            }
+            Err(TrySendError::Full(_)) => {
+                self.dropped.inc();
+                true
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        });
+        if list.is_empty() {
+            subs.remove(&id);
+        }
+        self.subscribers.set(Self::count(&subs));
+    }
+
+    /// Publish a frame for every just-stepped session that has
+    /// subscribers. Called by the scheduler with the detached sessions
+    /// (no registry lock held); a cheap no-op when nobody streams.
+    pub(crate) fn publish_batch(&self, backend: &NativeBackend,
+                                sessions: &[Session], batch: usize) {
+        let wanted: Vec<u64> = {
+            let subs = super::lock_recover(&self.subs);
+            if subs.is_empty() {
+                return;
+            }
+            sessions
+                .iter()
+                .map(|s| s.id)
+                .filter(|id| subs.contains_key(id))
+                .collect()
+        };
+        for session in sessions.iter().filter(|s| wanted.contains(&s.id)) {
+            match frame_event(backend, session, batch) {
+                Ok(event) => self.publish(session.id, &event),
+                Err(e) => crate::log_warn!(
+                    "serve: stream frame for {} failed: {e:#}",
+                    session.id_str()
+                ),
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for StreamHub {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamHub")
+            .field("subscribers", &self.subscriber_count())
+            .finish()
+    }
+}
+
+/// Format one SSE frame event for a session's current board.
+pub(crate) fn frame_event(backend: &NativeBackend, session: &Session,
+                          batch: usize) -> Result<String> {
+    let board = backend.read_resident(&session.prog, &session.resident)?;
+    build_event(&session.spec, &board, session.id, session.steps_done, batch)
+}
+
+/// The SSE wire form: `event: frame` + one compact-JSON `data:` line.
+pub(crate) fn build_event(spec: &ProgramSpec, board: &Tensor, id: u64,
+                          steps_done: u64, batch: usize) -> Result<String> {
+    let mean = if board.data().is_empty() {
+        0.0
+    } else {
+        board.data().iter().map(|&v| v as f64).sum::<f64>()
+            / board.data().len() as f64
+    };
+    let ppm = super::http::render_board(spec, board)?.ppm_bytes()?;
+    let payload = obj(vec![
+        ("id", Json::from(fmt_id(id).as_str())),
+        ("steps_done", Json::from(steps_done)),
+        ("batch", Json::from(batch)),
+        (
+            "shape",
+            Json::Arr(board.shape().iter().map(|&d| Json::from(d)).collect()),
+        ),
+        ("mean", Json::Num(mean)),
+        ("ppm_base64", Json::from(base64(&ppm).as_str())),
+    ]);
+    Ok(format!("event: frame\ndata: {}\n\n", payload.to_string_compact()))
+}
+
+/// Standard base64 (RFC 4648, with padding) — std-only, for the PPM
+/// payload inside the frame JSON.
+pub fn base64(bytes: &[u8]) -> String {
+    const ALPHABET: &[u8; 64] =
+        b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+    let mut out = String::with_capacity(bytes.len().div_ceil(3) * 4);
+    for chunk in bytes.chunks(3) {
+        let b = [
+            chunk[0],
+            chunk.get(1).copied().unwrap_or(0),
+            chunk.get(2).copied().unwrap_or(0),
+        ];
+        let n = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
+        out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            ALPHABET[(n >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            ALPHABET[n as usize & 63] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Registry;
+
+    fn hub() -> (StreamHub, Arc<Counter>, Arc<Counter>) {
+        let reg = Registry::new();
+        let frames = reg.counter("f");
+        let dropped = reg.counter("d");
+        let hub = StreamHub::new(
+            Arc::clone(&frames),
+            Arc::clone(&dropped),
+            reg.gauge("s"),
+        );
+        (hub, frames, dropped)
+    }
+
+    #[test]
+    fn base64_matches_known_vectors() {
+        assert_eq!(base64(b""), "");
+        assert_eq!(base64(b"f"), "Zg==");
+        assert_eq!(base64(b"fo"), "Zm8=");
+        assert_eq!(base64(b"foo"), "Zm9v");
+        assert_eq!(base64(b"foobar"), "Zm9vYmFy");
+        assert_eq!(base64(&[0xFF, 0x00, 0xAB]), "/wCr");
+    }
+
+    #[test]
+    fn slow_subscribers_drop_frames_without_blocking() {
+        let (hub, frames, dropped) = hub();
+        let (token, rx) = hub.subscribe(7);
+        assert_eq!(hub.subscriber_count(), 1);
+        // Fill the bounded queue, then keep publishing: the overflow is
+        // dropped and counted, the publisher never blocks.
+        for i in 0..SUBSCRIBER_QUEUE + 3 {
+            hub.publish(7, &format!("event {i}"));
+        }
+        assert_eq!(frames.get(), SUBSCRIBER_QUEUE as u64);
+        assert_eq!(dropped.get(), 3);
+        // The frames that did queue arrive in order.
+        assert_eq!(rx.recv().unwrap(), "event 0");
+        hub.unsubscribe(7, token);
+        assert_eq!(hub.subscriber_count(), 0);
+        // Publishing to a session with no subscribers is a no-op.
+        hub.publish(7, "nobody listens");
+        assert_eq!(frames.get(), SUBSCRIBER_QUEUE as u64);
+    }
+
+    #[test]
+    fn dropped_receivers_are_pruned_on_publish() {
+        let (hub, frames, _) = hub();
+        let (_token, rx) = hub.subscribe(1);
+        drop(rx);
+        hub.publish(1, "x");
+        assert_eq!(hub.subscriber_count(), 0, "pruned lazily");
+        assert_eq!(frames.get(), 0);
+    }
+}

@@ -19,7 +19,8 @@ use cax::backend::native::lenia::LeniaKernel;
 use cax::backend::native::life::{self, LifeKernel};
 use cax::backend::native::nca::NcaModel;
 use cax::backend::native::{bits, eca};
-use cax::backend::{Backend, CaProgram, NativeBackend};
+use cax::backend::{Backend, CaProgram, NativeBackend, Resident};
+use cax::serve::{CheckpointStore, ProgramSpec, SessionRegistry};
 use cax::tensor::Tensor;
 use cax::util::rng::Rng;
 
@@ -413,4 +414,90 @@ fn sparse_launches_report_skipped_tiles() {
     assert!(after > before,
             "a quiescent resident must report skipped tiles \
              ({before} -> {after})");
+}
+
+/// A session's persistent activity map must die with the state it
+/// described: both `reset` (the board rewinds, the map must not claim
+/// anything is clean) and checkpoint rehydration (maps are never
+/// serialized) hand back `activity: None`, and the next sparse steps
+/// stay bit-identical to a dense solo rollout. Regression for a stale
+/// map surviving reset and silently skipping tiles the rewound board
+/// had re-dirtied.
+#[test]
+fn registry_reset_and_rehydration_invalidate_activity_maps() {
+    let _guard = OVERRIDE_LOCK.lock().unwrap();
+    let backend = NativeBackend::with_threads(1);
+    let spec = ProgramSpec::Life { height: 40, width: 70 };
+    let seed = 0xD00D;
+
+    let assert_fresh_map = |reg: &SessionRegistry, id: u64, label: &str| {
+        match &reg.get(id).unwrap().resident {
+            Resident::Bits { activity, .. }
+            | Resident::Board { activity, .. } => {
+                assert!(activity.is_none(),
+                        "{label}: stale activity map survived");
+            }
+            Resident::Host(_) => panic!("{label}: unexpected host state"),
+        }
+    };
+    // Dense solo reference rollouts from the session's initial board.
+    let dense_after = |steps: usize| {
+        activity::set_override(Some(false));
+        let initial = spec.initial_board(seed).unwrap();
+        let batched = Tensor::stack(std::slice::from_ref(&initial)).unwrap();
+        let out = backend
+            .rollout(&CaProgram::Life, &batched, steps)
+            .unwrap()
+            .index_axis0(0);
+        activity::set_override(Some(true));
+        out
+    };
+    let step_sparse = |reg: &mut SessionRegistry, id: u64, steps: usize| {
+        let mut s = reg.take_for_step(id).unwrap();
+        backend
+            .step_resident(&CaProgram::Life, &mut [&mut s.resident], steps)
+            .unwrap();
+        s.steps_done += steps as u64;
+        reg.restore(s);
+    };
+
+    activity::set_override(Some(true));
+    let dir = std::env::temp_dir()
+        .join(format!("cax-sparse-reset-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let obs = cax::obs::Registry::new();
+    let mut reg = SessionRegistry::new(3, 4);
+    reg.set_store(CheckpointStore::open(&dir).unwrap(), obs.counter("ev"),
+                  obs.counter("re"));
+    let id = reg.create(&backend, spec.clone(), Some(seed)).unwrap();
+
+    // Accumulate a dirty-tile map, then park the session and bring it
+    // back: the rehydrated resident starts with no map, and further
+    // sparse steps match the uninterrupted dense trajectory.
+    step_sparse(&mut reg, id, 6);
+    reg.evict(id).unwrap();
+    assert!(!reg.in_ram(id));
+    assert!(reg.ensure_resident(id).unwrap());
+    assert_fresh_map(&reg, id, "rehydrate");
+    step_sparse(&mut reg, id, 5);
+    assert!(reg
+        .read_board(&backend, id)
+        .unwrap()
+        .bit_eq(&dense_after(11)),
+            "sparse stepping across an evict/rehydrate diverged");
+
+    // Reset rewinds the board; the map from the pre-reset trajectory
+    // must go with it, and post-reset sparse steps replay exactly.
+    step_sparse(&mut reg, id, 4);
+    reg.reset(&backend, id).unwrap();
+    assert_fresh_map(&reg, id, "reset");
+    step_sparse(&mut reg, id, 9);
+    assert!(reg
+        .read_board(&backend, id)
+        .unwrap()
+        .bit_eq(&dense_after(9)),
+            "sparse stepping after reset diverged");
+
+    activity::set_override(None);
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -31,7 +31,23 @@ fn test_config() -> ServeConfig {
         max_steps: 10_000,
         seed: 9,
         tick_window: Duration::ZERO,
+        ..ServeConfig::default()
     }
+}
+
+/// A `test_config` with a fresh per-test checkpoint directory attached
+/// (fleet mode). The caller removes the directory when done.
+fn fleet_config(tag: &str, threads: usize)
+                -> (std::path::PathBuf, ServeConfig) {
+    let dir = std::env::temp_dir()
+        .join(format!("cax-serve-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = ServeConfig {
+        threads,
+        state_dir: Some(dir.clone()),
+        ..test_config()
+    };
+    (dir, cfg)
 }
 
 /// Submit one step request per session and run ticks until all served.
@@ -621,7 +637,296 @@ fn parked_session_sparse_stepping_stays_exact_and_skips() {
              ({skipped_before} -> {skipped_after})");
 }
 
-// ------------------------------------------------- graceful SIGTERM
+// ------------------------------------------- checkpoint/restore fleet
+
+/// The tentpole contract: an evicted-and-rehydrated session is
+/// bit-identical to a never-evicted one, for every program family and
+/// under multi-threaded stepping. Two sessions share one explicit seed
+/// (same initial board); one is checkpointed to disk mid-trajectory and
+/// lazily rehydrated by the next coalesced tick — after equal step
+/// counts their boards must be bitwise equal.
+#[test]
+fn evicted_sessions_rehydrate_bit_identically_across_families() {
+    let families: Vec<(&str, ProgramSpec)> = vec![
+        ("eca", ProgramSpec::Eca { rule: 110, width: 70 }),
+        ("life", ProgramSpec::Life { height: 24, width: 33 }),
+        ("lenia", ProgramSpec::Lenia { radius: 5, height: 32, width: 32 }),
+        (
+            "lenia-multi",
+            ProgramSpec::LeniaMulti {
+                kernels: 2,
+                radius: 4,
+                height: 24,
+                width: 24,
+            },
+        ),
+        ("nca", ProgramSpec::NcaGrowing),
+    ];
+    for threads in [2usize, 8] {
+        for (name, spec) in &families {
+            let (dir, cfg) =
+                fleet_config(&format!("rt-{name}-{threads}"), threads);
+            let c = Coalescer::try_new(&cfg).expect("state dir opens");
+            let (a, b) = {
+                let mut reg = c.registry().lock().unwrap();
+                let a = reg
+                    .create(c.backend(), spec.clone(), Some(0xC0FFEE))
+                    .unwrap();
+                let b = reg
+                    .create(c.backend(), spec.clone(), Some(0xC0FFEE))
+                    .unwrap();
+                (a, b)
+            };
+            step_all(&c, &[a, b], 3);
+            {
+                let mut reg = c.registry().lock().unwrap();
+                reg.evict(a).unwrap();
+                assert!(!reg.in_ram(a), "{name}: evict left it in RAM");
+                assert_eq!(reg.total_sessions(), 2);
+            }
+            // The next coalesced tick rehydrates `a` transparently.
+            step_all(&c, &[a, b], 4);
+            let board = |id: u64| {
+                c.registry()
+                    .lock()
+                    .unwrap()
+                    .read_board(c.backend(), id)
+                    .unwrap()
+            };
+            assert!(
+                board(a).bit_eq(&board(b)),
+                "{name} with {threads} threads: evicted-and-rehydrated \
+                 trajectory diverged from the never-evicted one"
+            );
+            {
+                let reg = c.registry().lock().unwrap();
+                assert_eq!(reg.get(a).unwrap().steps_done, 7);
+                assert_eq!(reg.get(b).unwrap().steps_done, 7);
+            }
+            assert_eq!(c.stats().evictions().get(), 1);
+            assert_eq!(c.stats().rehydrations().get(), 1);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+/// Checkpoints are durable across a whole server restart: a fresh
+/// coalescer over the same state dir resumes the parked trajectory
+/// bitwise, and new creates never collide with on-disk ids.
+#[test]
+fn checkpoints_survive_a_coalescer_restart() {
+    let (dir, cfg) = fleet_config("restart", 2);
+    let spec = ProgramSpec::Life { height: 24, width: 33 };
+    let (id, initial) = {
+        let c = Coalescer::try_new(&cfg).unwrap();
+        let id = c
+            .registry()
+            .lock()
+            .unwrap()
+            .create(c.backend(), spec.clone(), Some(42))
+            .unwrap();
+        let initial = c
+            .registry()
+            .lock()
+            .unwrap()
+            .read_board(c.backend(), id)
+            .unwrap();
+        step_all(&c, &[id], 3);
+        assert_eq!(c.checkpoint_all().unwrap(), 1);
+        (id, initial)
+    };
+
+    let c = Coalescer::try_new(&cfg).unwrap();
+    {
+        let reg = c.registry().lock().unwrap();
+        assert!(!reg.in_ram(id), "restart starts with an empty registry");
+        assert_eq!(reg.total_sessions(), 1, "the checkpoint is visible");
+    }
+    let other = c
+        .registry()
+        .lock()
+        .unwrap()
+        .create(c.backend(), spec.clone(), None)
+        .unwrap();
+    assert_ne!(other, id, "minting must avoid on-disk ids");
+    step_all(&c, &[id], 4);
+    let got = c
+        .registry()
+        .lock()
+        .unwrap()
+        .read_board(c.backend(), id)
+        .unwrap();
+    let expect = NativeBackend::new()
+        .rollout(&spec.program().unwrap(),
+                 &Tensor::stack(&[initial]).unwrap(), 7)
+        .unwrap()
+        .index_axis0(0);
+    assert!(got.bit_eq(&expect),
+            "restart-resumed trajectory diverged from uninterrupted solo");
+    assert_eq!(c.registry().lock().unwrap().get(id).unwrap().steps_done, 7);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Over HTTP, a full working set evicts LRU instead of 503ing, evicted
+/// sessions stay fully reachable (status rehydrates), `/stats` exposes
+/// the fleet counters, and destroy removes checkpoint files.
+#[test]
+fn http_working_set_cap_evicts_and_rehydrates() {
+    use cax::util::json::Json;
+
+    let (dir, fleet) = fleet_config("http-lru", 2);
+    let cfg = ServeConfig {
+        max_sessions: 2,
+        tick_window: Duration::from_micros(100),
+        ..fleet
+    };
+    let server = serve::start(&cfg).expect("start server");
+    let addr = server.addr();
+
+    // Three creates through a cap of two: the third evicts the LRU
+    // instead of rejecting (the pre-state-dir behavior was a 503).
+    let mut ids = vec![];
+    for _ in 0..3 {
+        let (status, body) = http(addr, "POST", "/sessions",
+                                  r#"{"program": "life", "size": 16}"#);
+        assert_eq!(status, 201, "create must evict, not reject: {body}");
+        ids.push(json_str_field(&body, "id"));
+    }
+
+    let (status, body) = http(addr, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).expect("stats is JSON");
+    let fleet_num = |key: &str| -> f64 {
+        doc.get("fleet")
+            .and_then(|f| f.get(key))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("missing fleet.{key} in {body}"))
+    };
+    assert!(fleet_num("evictions") >= 1.0);
+    assert_eq!(fleet_num("total_sessions"), 3.0);
+    assert_eq!(fleet_num("evicted"), 1.0);
+    assert!(fleet_num("resident_bytes") > 0.0);
+
+    // Every session answers, evicted or not; each GET may itself evict
+    // another (the cap holds), so this loops the whole working set
+    // through disk.
+    for id in &ids {
+        let (status, body) =
+            http(addr, "GET", &format!("/sessions/{id}"), "");
+        assert_eq!(status, 200, "evicted session unreachable: {body}");
+        let (status, body) =
+            http(addr, "POST", &format!("/sessions/{id}/step"),
+                 r#"{"steps": 2}"#);
+        assert_eq!(status, 200, "stepping after eviction: {body}");
+        assert!(body.contains("\"steps_done\": 2"), "{body}");
+    }
+
+    // Destroy reaches disk too: no checkpoint files survive.
+    for id in &ids {
+        let (status, body) =
+            http(addr, "DELETE", &format!("/sessions/{id}"), "");
+        assert_eq!(status, 200, "{body}");
+    }
+    let leftovers = std::fs::read_dir(&dir)
+        .map(|it| {
+            it.filter_map(|e| e.ok())
+                .filter(|e| {
+                    e.path().extension().is_some_and(|x| x == "ckpt")
+                })
+                .count()
+        })
+        .unwrap_or(0);
+    assert_eq!(leftovers, 0, "destroyed sessions left checkpoints");
+
+    server.stop();
+    server.join().expect("clean shutdown");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------------------- SSE frame stream
+
+/// `GET /sessions/:id/stream` speaks chunked `text/event-stream`: an
+/// initial frame on subscribe, then one frame per coalesced launch,
+/// with the delivery counted in `/stats`.
+#[test]
+fn sse_stream_pushes_frames_per_tick() {
+    let cfg = ServeConfig {
+        tick_window: Duration::from_micros(100),
+        ..test_config()
+    };
+    let server = serve::start(&cfg).expect("start server");
+    let addr = server.addr();
+    let (status, body) = http(addr, "POST", "/sessions",
+                              r#"{"program": "life", "size": 16}"#);
+    assert_eq!(status, 201, "{body}");
+    let id = json_str_field(&body, "id");
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(20)))
+        .unwrap();
+    write!(stream,
+           "GET /sessions/{id}/stream HTTP/1.1\r\nHost: cax\r\n\
+            Connection: close\r\n\r\n")
+        .expect("send stream request");
+
+    // Read until a predicate holds (the response arrives as chunks).
+    let mut buf: Vec<u8> = Vec::new();
+    let mut read_until = |buf: &mut Vec<u8>, what: &str| {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut chunk = [0u8; 4096];
+        while !String::from_utf8_lossy(buf).contains(what) {
+            assert!(Instant::now() < deadline,
+                    "timed out waiting for {what:?} in {:?}",
+                    String::from_utf8_lossy(buf));
+            match stream.read(&mut chunk) {
+                Ok(0) => panic!("stream closed before {what:?}"),
+                Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                Err(e) => panic!("stream read failed: {e}"),
+            }
+        }
+    };
+
+    // Headers: chunked SSE, then the initial frame event.
+    read_until(&mut buf, "\r\n\r\n");
+    let head = String::from_utf8_lossy(&buf).to_string();
+    assert!(head.contains("200 OK"), "{head}");
+    assert!(head.contains("text/event-stream"), "{head}");
+    assert!(head.to_ascii_lowercase().contains("chunked"), "{head}");
+    read_until(&mut buf, "event: frame");
+    read_until(&mut buf, "\"steps_done\":0");
+
+    // A step from another connection publishes a frame into the stream.
+    let (status, body) =
+        http(addr, "POST", &format!("/sessions/{id}/step"),
+             r#"{"steps": 3}"#);
+    assert_eq!(status, 200, "{body}");
+    read_until(&mut buf, "\"steps_done\":3");
+    let text = String::from_utf8_lossy(&buf).to_string();
+    assert!(text.contains("\"ppm_base64\":\""), "frame carries a board");
+    assert!(text.contains("\"batch\":1"), "{text}");
+
+    // The delivery shows up in /stats.
+    let (status, stats) = http(addr, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    assert!(stats.contains("\"stream\""), "{stats}");
+    let frames_pat = "\"frames\": ";
+    let start = stats.find(frames_pat).expect("stream.frames") +
+        frames_pat.len();
+    let end = stats[start..]
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap() + start;
+    let frames: u64 = stats[start..end].parse().unwrap();
+    // The initial frame is written by the handler directly; only
+    // tick-published deliveries count here.
+    assert!(frames >= 1, "per-tick frame deliveries, got {frames}");
+
+    drop(stream);
+    server.stop();
+    server.join().expect("clean shutdown with a live stream");
+}
+
+// ------------------------------------------------- shard router (e2e)
 
 /// `cax serve` must drain and exit 0 on SIGTERM (the ctrl-c/SIGINT path
 /// shares the same handler and flag).
@@ -689,4 +994,109 @@ fn sigterm_drains_and_exits_zero() {
     BufReader::new(stderr).read_to_string(&mut err).expect("drain stderr");
     assert!(err.contains("draining"),
             "expected the drain announcement on stderr, got: {err:?}");
+}
+
+/// `--shards 2` end to end: the router forks two worker processes,
+/// spreads creates across them, routes every `/sessions/:id/...` by id,
+/// and bit-identity holds across the process boundary — a snapshot
+/// served by a worker matches an in-process solo rollout byte for byte.
+#[test]
+fn shard_router_routes_sessions_across_worker_processes() {
+    let exe = env!("CARGO_BIN_EXE_cax");
+    let mut child = std::process::Command::new(exe)
+        .args(["serve", "--port", "0", "--shards", "2", "--threads", "2",
+               "--max-sessions", "8", "--tick-us", "100"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn cax serve --shards 2");
+    let stdout = child.stdout.take().expect("child stdout");
+    drop(child.stderr.take()); // workers chatter here; let it flow to null
+
+    // Worker stdout is forwarded to the router's stderr, so the first
+    // (and only) stdout line is the router's own listening line.
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read listening line");
+    assert!(line.contains("router listening on"), "first line: {line:?}");
+    assert!(line.contains("2 shards"), "first line: {line:?}");
+    let addr: SocketAddr = line
+        .split("listening on ")
+        .nth(1)
+        .unwrap()
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .parse()
+        .expect("parse router address");
+
+    // Round-robin creates: two sessions land on the two shards, which
+    // is visible in their minted ids (id % shards == shard index).
+    let (status, body) = http(
+        addr, "POST", "/sessions",
+        r#"{"program": "life", "size": 24, "seed": 123}"#,
+    );
+    assert_eq!(status, 201, "{body}");
+    let seeded = json_str_field(&body, "id");
+    let (status, body) = http(addr, "POST", "/sessions",
+                              r#"{"program": "life", "size": 24}"#);
+    assert_eq!(status, 201, "{body}");
+    let other = json_str_field(&body, "id");
+    let parity = |hex: &str| {
+        u64::from_str_radix(hex, 16).expect("hex session id") % 2
+    };
+    assert_ne!(parity(&seeded), parity(&other),
+               "round-robin must spread sessions across both shards");
+
+    // Step on whichever shard owns the seeded session, then compare its
+    // snapshot bytes against an in-process rollout of the same seed:
+    // bit-identity across the process boundary.
+    let (status, body) =
+        http(addr, "POST", &format!("/sessions/{seeded}/step"),
+             r#"{"steps": 5}"#);
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"steps_done\": 5"), "{body}");
+    let (status, got) = http_bytes(
+        addr, "GET", &format!("/sessions/{seeded}/snapshot.ppm"), "",
+    );
+    assert_eq!(status, 200);
+    let spec = ProgramSpec::Life { height: 24, width: 24 };
+    let expected = NativeBackend::new()
+        .rollout(
+            &spec.program().unwrap(),
+            &Tensor::stack(&[spec.initial_board(123).unwrap()]).unwrap(),
+            5,
+        )
+        .unwrap()
+        .index_axis0(0);
+    let want = cax::viz::spacetime::render_field(&expected)
+        .unwrap()
+        .ppm_bytes()
+        .unwrap();
+    assert_eq!(got, want,
+               "worker-served snapshot diverged from the solo rollout");
+
+    // Fan-out routes see both shards.
+    let (status, body) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"shards\": 2"), "{body}");
+    let (status, body) = http(addr, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"router\": true"), "{body}");
+    assert!(body.contains("\"shard\": 1"), "{body}");
+
+    // Drain: the router shuts its workers down and exits 0.
+    let (status, body) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("draining"), "{body}");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let status = loop {
+        if let Some(st) = child.try_wait().expect("try_wait") {
+            break st;
+        }
+        assert!(Instant::now() < deadline,
+                "shard router did not exit within 30s of /shutdown");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(status.success(), "router drain must exit 0, got {status:?}");
 }
