@@ -81,3 +81,80 @@ pub fn row(name: &str, stats: &Stats, items: f64) {
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
 }
+
+/// The committed bench baselines (`BENCH_*.json` seeds the `cax bench
+/// compare` gate diffs against).
+#[allow(dead_code)]
+pub fn baselines_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("benches/baselines")
+}
+
+/// `--update-baseline` (or CAX_BENCH_UPDATE_BASELINE=1): the ONLY way
+/// a run may overwrite a committed baseline.
+#[allow(dead_code)]
+pub fn update_baseline() -> bool {
+    std::env::var("CAX_BENCH_UPDATE_BASELINE").is_ok()
+        || std::env::args().any(|a| a == "--update-baseline")
+}
+
+/// Write the bench report (which also appends the run to
+/// `BENCH_history.jsonl` next to it), then reconcile with the
+/// committed baseline at `benches/baselines/<file>`:
+///
+/// - under [`update_baseline`], the fresh report replaces the
+///   baseline (explicitly, never silently);
+/// - otherwise the baseline is left untouched and the run is diffed
+///   against it, printing per-row drift — informational here; the
+///   hard/soft gate is `cax bench compare` in CI.
+#[allow(dead_code)]
+pub fn finish(name: &str, rows: &[cax::metrics::BenchRow],
+              out: &std::path::Path) {
+    use cax::metrics::bench_history;
+    cax::metrics::write_bench_report(name, rows, out)
+        .expect("writing bench report");
+    println!("\nwrote {}", out.display());
+    let baseline =
+        baselines_dir().join(out.file_name().expect("report filename"));
+    if update_baseline() {
+        std::fs::create_dir_all(baselines_dir())
+            .expect("creating baselines dir");
+        std::fs::copy(out, &baseline).expect("updating baseline");
+        println!("updated baseline {}", baseline.display());
+        return;
+    }
+    if !baseline.exists() {
+        println!(
+            "no committed baseline at {} (pass --update-baseline to \
+             seed one)",
+            baseline.display()
+        );
+        return;
+    }
+    match bench_history::compare_files(out, &baseline) {
+        Ok(cmp) => {
+            let t = bench_history::DEFAULT_THRESHOLD;
+            for d in cmp.regressions(t) {
+                println!(
+                    "WARN: {} median {:.6}s vs baseline {:.6}s \
+                     ({:+.1}%)",
+                    d.label, d.current_s, d.baseline_s,
+                    100.0 * d.slowdown()
+                );
+            }
+            for label in &cmp.missing {
+                println!(
+                    "WARN: baseline row {label:?} missing from this run"
+                );
+            }
+            if cmp.passed(t) {
+                println!(
+                    "baseline check: {} rows within +{:.0}% of {}",
+                    cmp.deltas.len(),
+                    100.0 * t,
+                    baseline.display()
+                );
+            }
+        }
+        Err(e) => println!("WARN: baseline compare failed: {e:#}"),
+    }
+}

@@ -16,12 +16,12 @@ use cax::backend::native::lenia::{
     select_path, LeniaFft, LeniaKernel, LeniaPath,
 };
 use cax::backend::WorkerPool;
-use cax::metrics::{write_bench_report, BenchRow};
+use cax::metrics::BenchRow;
 use cax::tensor::Tensor;
 use cax::util::rng::Rng;
 
 mod bench_util;
-use bench_util::{bench, header, push, quick, soft};
+use bench_util::{bench, finish, header, push, quick, soft};
 
 /// Batch of soup boards as one `[B, H, W]` buffer.
 fn soup(b: usize, size: usize, rng: &mut Rng) -> Tensor {
@@ -195,6 +195,5 @@ fn main() {
     assert_eq!(select_path(64, size, size), LeniaPath::Fft);
 
     let out = std::path::Path::new("BENCH_lenia_fft.json");
-    write_bench_report("fig3_lenia", &rows, out).unwrap();
-    println!("\nwrote {}", out.display());
+    finish("fig3_lenia", &rows, out);
 }

@@ -13,12 +13,12 @@ use cax::automata::lenia::LeniaParams;
 use cax::automata::{EcaSim, LeniaSim, LifeSim, WolframRule};
 use cax::backend::native::nca::NcaModel;
 use cax::backend::{Backend, CaProgram, NativeBackend};
-use cax::metrics::{write_bench_report, BenchRow};
+use cax::metrics::BenchRow;
 use cax::tensor::Tensor;
 use cax::util::rng::Rng;
 
 mod bench_util;
-use bench_util::{bench, header, push, quick, soft};
+use bench_util::{bench, finish, header, push, quick, soft};
 
 fn main() {
     let backend = NativeBackend::new();
@@ -350,6 +350,5 @@ fn main() {
     }
 
     let out = std::path::Path::new("BENCH_native.json");
-    write_bench_report("fig3_native", &rows, out).unwrap();
-    println!("\nwrote {}", out.display());
+    finish("fig3_native", &rows, out);
 }

@@ -14,11 +14,11 @@
 use cax::backend::{NativeTrainBackend, ProgramBackend, Value};
 use cax::coordinator::trainer::TrainState;
 use cax::datasets::mnist::{self, MnistConfig};
-use cax::metrics::{write_bench_report, BenchRow};
+use cax::metrics::BenchRow;
 use cax::tensor::Tensor;
 
 mod bench_util;
-use bench_util::{bench, header, quick, row};
+use bench_util::{bench, finish, header, quick, row};
 
 /// One native train step: execute + fold the updated (params, m, v)
 /// back into the state.
@@ -105,8 +105,7 @@ fn main() {
     });
 
     let out = std::path::Path::new("BENCH_nca_train_native.json");
-    write_bench_report("fig3_nca_train_native", &rows, out).unwrap();
-    println!("\nwrote {}", out.display());
+    finish("fig3_nca_train_native", &rows, out);
 
     // ------------------------------------- fused XLA arm (pjrt builds)
     #[cfg(feature = "pjrt")]

@@ -28,14 +28,14 @@ use std::time::Duration;
 use cax::automata::lenia::LeniaParams;
 use cax::automata::WolframRule;
 use cax::backend::{Backend, CaProgram, NativeBackend};
-use cax::metrics::{write_bench_report, BenchRow};
+use cax::metrics::BenchRow;
 use cax::obs;
 use cax::serve::{Coalescer, ProgramSpec, ServeConfig, StepRequest};
 use cax::tensor::Tensor;
 use cax::util::rng::Rng;
 
 mod bench_util;
-use bench_util::{bench, header, push, quick, soft};
+use bench_util::{bench, finish, header, push, quick, soft};
 
 /// Submit one step request per session, tick until all are served, and
 /// drain the replies — one coalesced "frame" of the service.
@@ -583,8 +583,7 @@ fn main() {
     }
 
     let out = std::path::Path::new("BENCH_serve.json");
-    write_bench_report("serve_load", &rows, out).unwrap();
-    println!("\nwrote {}", out.display());
+    finish("serve_load", &rows, out);
 
     if soft() {
         if speedup < 5.0 {

@@ -13,12 +13,12 @@
 use cax::backend::{NativeTrainBackend, ProgramBackend, Value};
 use cax::coordinator::trainer::TrainState;
 use cax::datasets::arc1d::{one_hot_batch, Task};
-use cax::metrics::{write_bench_report, BenchRow};
+use cax::metrics::BenchRow;
 use cax::tensor::Tensor;
 use cax::util::rng::Rng;
 
 mod bench_util;
-use bench_util::{bench, header, quick, row};
+use bench_util::{bench, finish, header, quick, row};
 
 /// One native ARC train step: execute + fold (params, m, v) back.
 fn native_step(backend: &NativeTrainBackend, st: &mut TrainState,
@@ -138,8 +138,7 @@ fn main() {
     });
 
     let out = std::path::Path::new("BENCH_arc_native.json");
-    write_bench_report("table2_arc_native", &rows, out).unwrap();
-    println!("\nwrote {}", out.display());
+    finish("table2_arc_native", &rows, out);
 
     // ------------------------------------- artifact arm (pjrt builds)
     #[cfg(feature = "pjrt")]

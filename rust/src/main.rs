@@ -12,6 +12,10 @@
 //!                                arc; the rest need [pjrt])
 //!   serve ...                    multi-session simulation service with
 //!                                a coalescing scheduler (HTTP/1.1)
+//!   top ...                      live fleet dashboard: polls a serve
+//!                                (router or worker) `/metrics.json`
+//!   bench compare ...            regression gate over BENCH_*.json
+//!                                reports (rows matched by label)
 //!
 //! Global flags: --artifacts DIR  --out DIR  --seed N  --config FILE
 //!               --backend native|pjrt  --trace FILE
@@ -34,7 +38,9 @@ use cax::coordinator::evaluator;
 use cax::coordinator::trainer::TrainCfg;
 use cax::coordinator::{experiments, Path as SimPath, Simulator};
 use cax::datasets::arc1d::Task;
+use cax::obs::MetricSnapshot;
 use cax::runtime::Manifest;
+use cax::util::json::Json;
 use cax::util::rng::Rng;
 use cax::util::timer::Timer;
 use cax::viz::spacetime;
@@ -97,7 +103,23 @@ COMMANDS:
                               route sessions across them by id modulo N
                               (workers take --shard-index/--shard-count
                               internally; --state-dir shards as
-                              DIR/shard-<i>)
+                              DIR/shard-<i>); the router scrapes every
+                              worker's /metrics.json and serves one
+                              exact fleet-wide /metrics page; with
+                              --trace FILE it merges worker captures
+                              into one Perfetto file on drain
+    top                       live terminal dashboard: polls a serve
+        [--addr A]            /metrics.json (router or single worker;
+        [--interval-ms MS]    default addr 127.0.0.1:7878, interval
+        [--iterations N]      1000 ms) and redraws sessions, queue
+                              depth now/high-water, exact p99 wait/step
+                              and step-path counters per shard; N = 0
+                              (the default) polls until interrupted
+    bench compare             regression gate over BENCH_*.json reports
+        --current FILE        rows matched by label on median_s; fails
+        --baseline FILE       when current/baseline - 1 exceeds
+        [--threshold R]       --threshold (default 0.25); --soft
+        [--soft]              reports but never fails (the CI default)
 
 The default build runs everything marked-free above hermetically on the
 native backend (incl. `train growing|mnist|arc`, `eval arc` and
@@ -194,6 +216,8 @@ fn run() -> Result<()> {
         "train" => cmd_train(&cli),
         "eval" => cmd_eval(&cli),
         "serve" => cmd_serve(&cli),
+        "top" => cmd_top(&cli),
+        "bench" => cmd_bench(&cli),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
             Ok(())
@@ -201,12 +225,18 @@ fn run() -> Result<()> {
         other => bail!("unknown command {other:?}\n\n{}", usage()),
     };
     if let Some(path) = &cli.trace {
-        match cax::obs::trace::write(path) {
-            Ok(n) => println!(
-                "wrote {n} trace events to {} (open at ui.perfetto.dev)",
-                path.display()
-            ),
-            Err(e) => cax::log_warn!("trace: {e:#}"),
+        // Fleet runs already wrote the merged trace (the router takes
+        // the capture in `write_merged`); only write when one is
+        // still pending.
+        if cax::obs::trace::pending() {
+            match cax::obs::trace::write(path) {
+                Ok(n) => println!(
+                    "wrote {n} trace events to {} (open at \
+                     ui.perfetto.dev)",
+                    path.display()
+                ),
+                Err(e) => cax::log_warn!("trace: {e:#}"),
+            }
         }
     }
     result
@@ -733,9 +763,272 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             bail!("--shards spawns workers itself; don't also pass \
                    --shard-index/--shard-count");
         }
-        return cax::serve::router::run(&cfg);
+        return cax::serve::router::run(&cfg, cli.trace.as_deref());
     }
     cax::serve::run(&cfg)
+}
+
+// ------------------------------------------------------------------- top
+
+/// One-shot `GET` returning the parsed JSON body (`Connection:
+/// close`, EOF-delimited — the same framing the shard router's
+/// scraper uses).
+fn http_get_json(addr: &str, path: &str) -> Result<Json> {
+    use std::io::{Read as _, Write as _};
+    let timeout = std::time::Duration::from_secs(5);
+    let sock: std::net::SocketAddr = addr
+        .parse()
+        .with_context(|| format!("--addr wants HOST:PORT, got {addr:?}"))?;
+    let mut stream = std::net::TcpStream::connect_timeout(&sock, timeout)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    write!(
+        stream,
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+    )?;
+    let mut text = String::new();
+    stream.read_to_string(&mut text)?;
+    let status = text.lines().next().unwrap_or("").to_string();
+    let body =
+        text.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    if !status.contains(" 200") {
+        bail!("GET {path} on {addr}: {status:?}");
+    }
+    Ok(Json::parse(body)?)
+}
+
+fn parse_metrics(json: Option<&Json>) -> Vec<(String, MetricSnapshot)> {
+    json.and_then(|j| cax::obs::metrics_from_json(j).ok())
+        .unwrap_or_default()
+}
+
+fn metric_of<'a>(metrics: &'a [(String, MetricSnapshot)], name: &str)
+                 -> Option<&'a MetricSnapshot> {
+    metrics.iter().find(|(n, _)| n == name).map(|(_, m)| m)
+}
+
+fn counter_of(metrics: &[(String, MetricSnapshot)], name: &str) -> u64 {
+    match metric_of(metrics, name) {
+        Some(MetricSnapshot::Counter(v)) => *v,
+        _ => 0,
+    }
+}
+
+fn gauge_of(metrics: &[(String, MetricSnapshot)], name: &str)
+            -> (u64, u64) {
+    match metric_of(metrics, name) {
+        Some(MetricSnapshot::Gauge { value, high_water }) => {
+            (*value, *high_water)
+        }
+        _ => (0, 0),
+    }
+}
+
+/// Exact p99 of an ns-recorded latency histogram, rendered in ms
+/// (`"-"` when the histogram is empty or absent).
+fn p99_ms(metrics: &[(String, MetricSnapshot)], name: &str) -> String {
+    match metric_of(metrics, name) {
+        Some(MetricSnapshot::Histogram(h)) if !h.is_empty() => {
+            format!("{:.2}ms", h.quantile(0.99) / 1e6)
+        }
+        _ => "-".to_string(),
+    }
+}
+
+fn num_of(json: &Json, key: &str) -> u64 {
+    json.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
+}
+
+fn top_header() -> String {
+    format!(
+        "{:<8} {:<5} {:>5} {:>5} {:>9} {:>10} {:>10} {:>10} {:>8} \
+         {:>8} {:>8} {:>13}\n",
+        "SHARD", "", "SESS", "PEND", "QUEUE", "p99 wait", "p99 step",
+        "STEPS", "dense", "sparse", "hlife", "tiles rc/sk"
+    )
+}
+
+/// One dashboard row from a worker-shaped metric set.
+fn top_row(label: &str, ok: bool, sessions: u64, pending: u64,
+           metrics: &[(String, MetricSnapshot)]) -> String {
+    let (q_now, q_hw) = gauge_of(metrics, "serve_queue_depth");
+    format!(
+        "{:<8} {:<5} {:>5} {:>5} {:>9} {:>10} {:>10} {:>10} {:>8} \
+         {:>8} {:>8} {:>13}\n",
+        label,
+        if ok { "up" } else { "stale" },
+        sessions,
+        pending,
+        format!("{q_now}/{q_hw}"),
+        p99_ms(metrics, "serve_wait_seconds"),
+        p99_ms(metrics, "serve_step_seconds"),
+        counter_of(metrics, "serve_session_steps_total"),
+        counter_of(metrics, "step_path_dense_total"),
+        counter_of(metrics, "step_path_sparse_total"),
+        counter_of(metrics, "step_path_hashlife_total"),
+        format!(
+            "{}/{}",
+            counter_of(metrics, "sparse_tiles_recomputed_total"),
+            counter_of(metrics, "sparse_tiles_skipped_total")
+        ),
+    )
+}
+
+/// Render one `cax top` frame from a `/metrics.json` document —
+/// per-shard rows plus the exact merged FLEET row against a router,
+/// one row against a single worker.
+fn top_frame(addr: &str) -> Result<String> {
+    let json = http_get_json(addr, "/metrics.json")?;
+    let mut out = String::new();
+    if json.get("router").and_then(Json::as_bool) == Some(true) {
+        let shards =
+            json.get("shards").and_then(Json::as_arr).unwrap_or(&[]);
+        out.push_str(&format!(
+            "cax top — {addr} (router, {} shards)\n\n",
+            shards.len()
+        ));
+        out.push_str(&top_header());
+        for s in shards {
+            let metrics = parse_metrics(s.get("metrics"));
+            let label = s
+                .get("shard")
+                .and_then(Json::as_usize)
+                .map_or("?".to_string(), |i| i.to_string());
+            let ok = s.get("ok").and_then(Json::as_bool) != Some(false);
+            out.push_str(&top_row(&label, ok, num_of(s, "sessions"),
+                                  num_of(s, "pending"), &metrics));
+        }
+        if let Some(merged) = json.get("merged") {
+            let metrics = parse_metrics(merged.get("metrics"));
+            out.push_str(&top_row("FLEET", true,
+                                  num_of(merged, "sessions"),
+                                  num_of(merged, "pending"), &metrics));
+        }
+    } else {
+        let metrics = parse_metrics(json.get("metrics"));
+        let label = json
+            .get("shard")
+            .and_then(Json::as_usize)
+            .map_or("solo".to_string(), |i| i.to_string());
+        out.push_str(&format!(
+            "cax top — {addr} (worker, uptime {:.1}s)\n\n",
+            json.get("uptime_s").and_then(Json::as_f64).unwrap_or(0.0)
+        ));
+        out.push_str(&top_header());
+        out.push_str(&top_row(&label, true, num_of(&json, "sessions"),
+                              num_of(&json, "pending"), &metrics));
+    }
+    Ok(out)
+}
+
+/// `cax top`: a std-only live dashboard over `GET /metrics.json`.
+fn cmd_top(cli: &Cli) -> Result<()> {
+    let addr = cli.flag("--addr").unwrap_or("127.0.0.1:7878").to_string();
+    let interval = std::time::Duration::from_millis(
+        cli.flag_usize("--interval-ms", 1000)? as u64,
+    );
+    let iterations = cli.flag_usize("--iterations", 0)?;
+    let mut done = 0usize;
+    loop {
+        let frame = match top_frame(&addr) {
+            Ok(f) => f,
+            Err(e) => format!("cax top — {addr}: {e:#}\n"),
+        };
+        // ANSI clear + home keeps the redraw flicker-free.
+        print!("\x1b[2J\x1b[H{frame}");
+        std::io::Write::flush(&mut std::io::stdout())?;
+        done += 1;
+        if iterations != 0 && done >= iterations {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+// ----------------------------------------------------------------- bench
+
+/// `cax bench ...`: BENCH-report tooling (today: `compare`).
+fn cmd_bench(cli: &Cli) -> Result<()> {
+    match cli.args.get(1).map(String::as_str) {
+        Some("compare") => cmd_bench_compare(cli),
+        Some(other) => {
+            bail!("unknown bench subcommand {other:?} (try `compare`)")
+        }
+        None => bail!(
+            "bench: compare --current FILE --baseline FILE \
+             [--threshold R] [--soft]"
+        ),
+    }
+}
+
+/// The bench-history regression gate: diff a fresh `BENCH_*.json`
+/// against a committed baseline, row by row on `median_s`.
+fn cmd_bench_compare(cli: &Cli) -> Result<()> {
+    use cax::metrics::bench_history;
+    let current = PathBuf::from(
+        cli.flag("--current")
+            .context("bench compare: --current FILE")?,
+    );
+    let baseline = PathBuf::from(
+        cli.flag("--baseline")
+            .context("bench compare: --baseline FILE")?,
+    );
+    let threshold = match cli.flag("--threshold") {
+        Some(t) => t.parse::<f64>().with_context(|| {
+            format!("--threshold wants a ratio, got {t:?}")
+        })?,
+        None => bench_history::DEFAULT_THRESHOLD,
+    };
+    let soft = cli.has("--soft");
+    let cmp = bench_history::compare_files(&current, &baseline)?;
+    println!(
+        "bench compare: {} vs baseline {} (threshold +{:.0}%)",
+        current.display(),
+        baseline.display(),
+        100.0 * threshold
+    );
+    for d in &cmp.deltas {
+        let slow = d.slowdown();
+        let mark = if slow > threshold {
+            "REGRESSED"
+        } else if slow < -threshold {
+            "improved"
+        } else {
+            "ok"
+        };
+        println!(
+            "  {:<44} median {:.6}s -> {:.6}s  ({:+.1}%)  {mark}",
+            d.label, d.baseline_s, d.current_s, 100.0 * slow
+        );
+    }
+    for label in &cmp.missing {
+        println!("  {label:<44} MISSING from current run");
+    }
+    for label in &cmp.added {
+        println!("  {label:<44} new row (no baseline)");
+    }
+    if cmp.passed(threshold) {
+        println!(
+            "bench compare: OK ({} rows within +{:.0}%)",
+            cmp.deltas.len(),
+            100.0 * threshold
+        );
+        return Ok(());
+    }
+    let n = cmp.regressions(threshold).len() + cmp.missing.len();
+    if soft {
+        cax::log_warn!(
+            "bench compare: {n} regression(s) beyond +{:.0}% — soft \
+             gate, not failing",
+            100.0 * threshold
+        );
+        return Ok(());
+    }
+    bail!(
+        "bench compare: {n} regression(s) beyond +{:.0}%",
+        100.0 * threshold
+    )
 }
 
 // ------------------------------------------------------------------ eval

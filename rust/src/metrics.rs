@@ -213,7 +213,173 @@ pub fn write_bench_report(name: &str, rows: &[BenchRow], path: &Path)
         ("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
     ]);
     std::fs::write(path, json.to_string_pretty())
-        .with_context(|| format!("writing {}", path.display()))
+        .with_context(|| format!("writing {}", path.display()))?;
+    // Every written report also lands in the append-only history
+    // ledger next to it, so regressions stay diagnosable across runs.
+    if let Err(e) = bench_history::append(path, &json) {
+        crate::log_warn!("bench history: {e:#}");
+    }
+    Ok(())
+}
+
+/// The bench-history ledger and the `cax bench compare` regression
+/// gate.
+///
+/// Every [`write_bench_report`] call appends its report as one
+/// compact JSONL line (stamped `unix_s`) to `BENCH_history.jsonl`
+/// next to the report, so a directory of `BENCH_*.json` files carries
+/// its own time series. [`compare`] diffs two reports row by row
+/// (matched by `label`, gated on the `median_s` ratio) — the engine
+/// behind `cax bench compare --current F --baseline F`.
+pub mod bench_history {
+    use std::path::{Path, PathBuf};
+    use std::time::{SystemTime, UNIX_EPOCH};
+
+    use anyhow::{Context, Result};
+
+    use crate::util::json::{obj, Json};
+
+    /// Ledger filename, kept next to the reports it records.
+    pub const HISTORY_FILE: &str = "BENCH_history.jsonl";
+
+    /// Default regression threshold: fail when a row's `median_s`
+    /// grows beyond `baseline * (1 + 0.25)`.
+    pub const DEFAULT_THRESHOLD: f64 = 0.25;
+
+    /// Where the ledger for a report at `report_path` lives.
+    pub fn history_path(report_path: &Path) -> PathBuf {
+        match report_path.parent() {
+            Some(dir) if !dir.as_os_str().is_empty() => {
+                dir.join(HISTORY_FILE)
+            }
+            _ => PathBuf::from(HISTORY_FILE),
+        }
+    }
+
+    /// Append one report to the ledger next to it as a single compact
+    /// JSONL line stamped with the wall-clock second. Returns the
+    /// ledger path.
+    pub fn append(report_path: &Path, report: &Json) -> Result<PathBuf> {
+        let unix_s = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let line = match report {
+            Json::Obj(m) => {
+                let mut m = m.clone();
+                m.insert("unix_s".to_string(), Json::from(unix_s));
+                Json::Obj(m)
+            }
+            other => obj(vec![
+                ("unix_s", Json::from(unix_s)),
+                ("report", other.clone()),
+            ]),
+        };
+        let path = history_path(report_path);
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        writeln!(f, "{}", line.to_string_compact())
+            .with_context(|| format!("appending {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// One matched row pair in a comparison.
+    #[derive(Clone, Debug)]
+    pub struct RowDelta {
+        pub label: String,
+        pub baseline_s: f64,
+        pub current_s: f64,
+    }
+
+    impl RowDelta {
+        /// Fractional slowdown, `current/baseline - 1` (positive =
+        /// slower than baseline).
+        pub fn slowdown(&self) -> f64 {
+            if self.baseline_s <= 0.0 {
+                0.0
+            } else {
+                self.current_s / self.baseline_s - 1.0
+            }
+        }
+    }
+
+    /// The row-by-row diff of two bench reports.
+    #[derive(Clone, Debug, Default)]
+    pub struct Comparison {
+        pub deltas: Vec<RowDelta>,
+        /// Baseline labels absent from the current run — a gate
+        /// failure (a silently dropped row is how regressions hide).
+        pub missing: Vec<String>,
+        /// Current labels with no baseline yet; reported, not gated.
+        pub added: Vec<String>,
+    }
+
+    impl Comparison {
+        pub fn regressions(&self, threshold: f64) -> Vec<&RowDelta> {
+            self.deltas
+                .iter()
+                .filter(|d| d.slowdown() > threshold)
+                .collect()
+        }
+
+        pub fn passed(&self, threshold: f64) -> bool {
+            self.regressions(threshold).is_empty()
+                && self.missing.is_empty()
+        }
+    }
+
+    fn rows_of(report: &Json) -> Vec<(String, f64)> {
+        report
+            .get("rows")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|r| {
+                Some((
+                    r.get("label")?.as_str()?.to_string(),
+                    r.get("median_s")?.as_f64()?,
+                ))
+            })
+            .collect()
+    }
+
+    /// Diff two parsed reports; rows match by `label`.
+    pub fn compare(current: &Json, baseline: &Json) -> Comparison {
+        let cur = rows_of(current);
+        let base = rows_of(baseline);
+        let mut cmp = Comparison::default();
+        for (label, baseline_s) in &base {
+            match cur.iter().find(|(l, _)| l == label) {
+                Some((_, current_s)) => cmp.deltas.push(RowDelta {
+                    label: label.clone(),
+                    baseline_s: *baseline_s,
+                    current_s: *current_s,
+                }),
+                None => cmp.missing.push(label.clone()),
+            }
+        }
+        for (label, _) in &cur {
+            if !base.iter().any(|(l, _)| l == label) {
+                cmp.added.push(label.clone());
+            }
+        }
+        cmp
+    }
+
+    /// [`compare`] over two report files on disk.
+    pub fn compare_files(current: &Path, baseline: &Path)
+                         -> Result<Comparison> {
+        let read = |p: &Path| -> Result<Json> {
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("reading {}", p.display()))?;
+            Ok(Json::parse(&text)?)
+        };
+        Ok(compare(&read(current)?, &read(baseline)?))
+    }
 }
 
 #[cfg(test)]
@@ -310,6 +476,56 @@ mod tests {
         assert!(schema.get("git").is_some());
         let row0 = &json.get("rows").unwrap().as_arr().unwrap()[0];
         assert_eq!(row0.get("p99_s").unwrap().as_f64(), Some(0.25));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_history_ledger_and_compare_gate() {
+        let dir = std::env::temp_dir()
+            .join(format!("cax_benchhist_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base_path = dir.join("BENCH_base.json");
+        let cur_path = dir.join("BENCH_cur.json");
+        let rows = |median: f64| {
+            vec![BenchRow {
+                label: "anchor".into(),
+                stats: Stats::from_samples(&[median]),
+                items_per_iter: 1.0,
+            }]
+        };
+        write_bench_report("gate", &rows(0.100), &base_path).unwrap();
+        write_bench_report("gate", &rows(0.120), &cur_path).unwrap();
+
+        // Both writes appended to the shared ledger, stamped unix_s.
+        let hist = std::fs::read_to_string(
+            bench_history::history_path(&base_path),
+        )
+        .unwrap();
+        let lines: Vec<&str> = hist.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert!(first.get("unix_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(first.get("bench").unwrap().as_str(), Some("gate"));
+
+        // +20% passes the default gate, fails a tight one.
+        let cmp =
+            bench_history::compare_files(&cur_path, &base_path).unwrap();
+        assert_eq!(cmp.deltas.len(), 1);
+        assert!((cmp.deltas[0].slowdown() - 0.2).abs() < 1e-9);
+        assert!(cmp.passed(bench_history::DEFAULT_THRESHOLD));
+        assert!(!cmp.passed(0.1));
+        assert_eq!(cmp.regressions(0.1).len(), 1);
+
+        // A dropped row fails the gate regardless of threshold.
+        let dropped = bench_history::compare(
+            &Json::parse(r#"{"rows": []}"#).unwrap(),
+            &Json::parse(
+                r#"{"rows": [{"label": "anchor", "median_s": 0.1}]}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(dropped.missing, vec!["anchor".to_string()]);
+        assert!(!dropped.passed(10.0));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -20,7 +20,24 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{obj, Json};
 use crate::util::timer::percentile_rank;
+
+/// Read a u64 out of a JSON number. `util::json` stores numbers as
+/// f64, which is exact for integers below 2^53 — ns sums stay exact
+/// for ~104 days of accumulated time, and counts effectively forever.
+fn json_u64(json: &Json, key: &str) -> Result<u64> {
+    let v = json
+        .get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("metric snapshot: missing {key:?}"))?;
+    if !(0.0..=9.007_199_254_740_992e15).contains(&v) {
+        bail!("metric snapshot: {key} = {v} outside exact u64 range");
+    }
+    Ok(v as u64)
+}
 
 /// Sub-bucket resolution: each power of two splits into `2^SUB_BITS`
 /// linear sub-buckets.
@@ -151,6 +168,25 @@ impl Histogram {
     pub fn quantile(&self, q: f64) -> f64 {
         self.snapshot().quantile(q)
     }
+
+    /// Rebuild a live histogram from a plain-value snapshot (the
+    /// receiving half of the fleet scrape: a worker's `/metrics.json`
+    /// snapshot becomes a mergeable histogram again). Rebuilding then
+    /// [`merge_from`](Self::merge_from)-ing is bit-identical to having
+    /// merged the original histograms directly (`tests/obs_props.rs`).
+    pub fn from_snapshot(snap: &HistogramSnapshot) -> Histogram {
+        let h = Histogram::new();
+        for (mine, &theirs) in h.buckets.iter().zip(&snap.buckets) {
+            if theirs > 0 {
+                mine.store(theirs, Ordering::Relaxed);
+            }
+        }
+        h.count.store(snap.count, Ordering::Relaxed);
+        h.sum.store(snap.sum, Ordering::Relaxed);
+        h.min.store(snap.min, Ordering::Relaxed);
+        h.max.store(snap.max, Ordering::Relaxed);
+        h
+    }
 }
 
 /// Plain-value copy of a [`Histogram`] for queries and exposition.
@@ -223,6 +259,86 @@ impl HistogramSnapshot {
         }
         total
     }
+
+    /// Bucket-wise merge on plain values — identical semantics to
+    /// [`Histogram::merge_from`], for merging scraped snapshots
+    /// without going back through atomics. Because the merge is on
+    /// raw bucket counts, fleet quantiles computed from the merged
+    /// snapshot are *exact* (equal to the quantiles of the union of
+    /// the shards' samples at bucket resolution) — never an average
+    /// of per-shard percentiles.
+    pub fn merge_from(&mut self, other: &HistogramSnapshot) {
+        for (mine, &theirs) in
+            self.buckets.iter_mut().zip(&other.buckets)
+        {
+            *mine += theirs;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Exact JSON form: the raw bucket counts (sparse `[index, count]`
+    /// pairs), count, sum and the observed min/max. `min`/`max` are
+    /// omitted for an empty histogram (whose internal sentinels,
+    /// `u64::MAX`/`0`, are not exactly representable as JSON numbers).
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                Json::Arr(vec![Json::from(i), Json::Num(c as f64)])
+            })
+            .collect();
+        let mut fields = vec![
+            ("type", Json::from("histogram")),
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum as f64)),
+        ];
+        if self.count > 0 {
+            fields.push(("min", Json::Num(self.min as f64)));
+            fields.push(("max", Json::Num(self.max as f64)));
+        }
+        fields.push(("buckets", Json::Arr(buckets)));
+        obj(fields)
+    }
+
+    /// Parse the [`to_json`](Self::to_json) form back. Round-tripping
+    /// a snapshot through JSON is bit-identical (`PartialEq`) for all
+    /// values below 2^53 (property-checked in `tests/obs_props.rs`).
+    pub fn from_json(json: &Json) -> Result<HistogramSnapshot> {
+        let count = json_u64(json, "count")?;
+        let sum = json_u64(json, "sum")?;
+        let (min, max) = if count == 0 {
+            (u64::MAX, 0)
+        } else {
+            (json_u64(json, "min")?, json_u64(json, "max")?)
+        };
+        let mut buckets = vec![0u64; NUM_BUCKETS];
+        let pairs = json
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .context("histogram snapshot: missing buckets array")?;
+        for pair in pairs {
+            let pair =
+                pair.as_arr().context("bucket entry is not a pair")?;
+            let (idx, c) = match pair.as_slice() {
+                [i, c] => (
+                    i.as_usize().context("bucket index")?,
+                    c.as_f64().context("bucket count")? as u64,
+                ),
+                _ => bail!("bucket entry is not an [index, count] pair"),
+            };
+            if idx >= NUM_BUCKETS {
+                bail!("bucket index {idx} out of range");
+            }
+            buckets[idx] += c;
+        }
+        Ok(HistogramSnapshot { buckets, count, sum, min, max })
+    }
 }
 
 /// Monotonic event counter.
@@ -276,11 +392,112 @@ pub enum Metric {
 }
 
 /// Plain-value copy of one metric for exposition.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum MetricSnapshot {
     Counter(u64),
     Gauge { value: u64, high_water: u64 },
     Histogram(HistogramSnapshot),
+}
+
+impl MetricSnapshot {
+    /// Exact JSON form, tagged by `type` (the `/metrics.json` wire
+    /// format the shard router scrapes and merges).
+    pub fn to_json(&self) -> Json {
+        match self {
+            MetricSnapshot::Counter(v) => obj(vec![
+                ("type", Json::from("counter")),
+                ("value", Json::Num(*v as f64)),
+            ]),
+            MetricSnapshot::Gauge { value, high_water } => obj(vec![
+                ("type", Json::from("gauge")),
+                ("value", Json::Num(*value as f64)),
+                ("high_water", Json::Num(*high_water as f64)),
+            ]),
+            MetricSnapshot::Histogram(s) => s.to_json(),
+        }
+    }
+
+    pub fn from_json(json: &Json) -> Result<MetricSnapshot> {
+        let kind = json
+            .get("type")
+            .and_then(Json::as_str)
+            .context("metric snapshot: missing type tag")?;
+        Ok(match kind {
+            "counter" => MetricSnapshot::Counter(json_u64(json, "value")?),
+            "gauge" => MetricSnapshot::Gauge {
+                value: json_u64(json, "value")?,
+                high_water: json_u64(json, "high_water")?,
+            },
+            "histogram" => {
+                MetricSnapshot::Histogram(HistogramSnapshot::from_json(json)?)
+            }
+            other => bail!("metric snapshot: unknown type {other:?}"),
+        })
+    }
+
+    /// Fleet-merge semantics, metric by metric: counters add,
+    /// histograms merge bucket-wise (exact — see
+    /// [`HistogramSnapshot::merge_from`]), gauges add their current
+    /// values (fleet sessions = sum of shard sessions) and take the
+    /// max of their high-water marks. Kind mismatches keep `self`.
+    pub fn merge_from(&mut self, other: &MetricSnapshot) {
+        match (self, other) {
+            (MetricSnapshot::Counter(a), MetricSnapshot::Counter(b)) => {
+                *a += b;
+            }
+            (
+                MetricSnapshot::Gauge { value, high_water },
+                MetricSnapshot::Gauge { value: v, high_water: hw },
+            ) => {
+                *value += v;
+                *high_water = (*high_water).max(*hw);
+            }
+            (
+                MetricSnapshot::Histogram(a),
+                MetricSnapshot::Histogram(b),
+            ) => a.merge_from(b),
+            _ => {}
+        }
+    }
+}
+
+/// Serialize a name-sorted metric list (one [`Registry::snapshot`], or
+/// several merged) as one JSON object — the `metrics` field of
+/// `/metrics.json`.
+pub fn metrics_to_json(metrics: &[(String, MetricSnapshot)]) -> Json {
+    obj(metrics
+        .iter()
+        .map(|(name, snap)| (name.as_str(), snap.to_json()))
+        .collect())
+}
+
+/// Parse a `metrics` JSON object back into plain-value metrics.
+pub fn metrics_from_json(json: &Json)
+                         -> Result<Vec<(String, MetricSnapshot)>> {
+    let map = match json {
+        Json::Obj(map) => map,
+        _ => bail!("metrics must be a JSON object"),
+    };
+    let mut out = Vec::with_capacity(map.len());
+    for (name, value) in map {
+        let snap = MetricSnapshot::from_json(value)
+            .with_context(|| format!("metric {name:?}"))?;
+        out.push((name.clone(), snap));
+    }
+    Ok(out)
+}
+
+/// Merge one metric into a named accumulator map with
+/// [`MetricSnapshot::merge_from`] semantics (the shard router's
+/// fleet-wide roll-up).
+pub fn merge_metric(into: &mut BTreeMap<String, MetricSnapshot>,
+                    name: &str, snap: &MetricSnapshot) {
+    match into.get_mut(name) {
+        Some(existing) => existing.merge_from(snap),
+        None => {
+            into.insert(name.to_string(), snap.clone());
+        }
+    }
 }
 
 /// A named get-or-create metric store. Instantiable (the serve layer

@@ -10,7 +10,7 @@
 //! cax::log_debug!("this prints only under CAX_LOG=debug");
 //! ```
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
 
 /// Log severity; smaller = more severe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -73,6 +73,26 @@ pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+const SHARD_UNSET: u64 = u64::MAX;
+static SHARD: AtomicU64 = AtomicU64::new(SHARD_UNSET);
+
+/// Stamp this process's shard index into the logger: every stderr
+/// line gains a `[shard i]` prefix. Fleet workers call this at
+/// startup so direct worker stderr (crash logs, `--state-dir`
+/// recovery messages) stays attributable even when it doesn't flow
+/// through the router's stdout-forwarding prefix.
+pub fn set_shard(index: u64) {
+    SHARD.store(index, Ordering::Relaxed);
+}
+
+/// The shard index stamped by [`set_shard`], if any.
+pub fn shard() -> Option<u64> {
+    match SHARD.load(Ordering::Relaxed) {
+        SHARD_UNSET => None,
+        i => Some(i),
+    }
+}
+
 pub fn enabled(l: Level) -> bool {
     l <= level()
 }
@@ -80,7 +100,10 @@ pub fn enabled(l: Level) -> bool {
 /// The macro backend; prefer `log_error!`..`log_debug!`.
 pub fn write(l: Level, args: std::fmt::Arguments<'_>) {
     if enabled(l) {
-        eprintln!("[cax:{}] {args}", l.name());
+        match shard() {
+            Some(i) => eprintln!("[shard {i}] [cax:{}] {args}", l.name()),
+            None => eprintln!("[cax:{}] {args}", l.name()),
+        }
     }
 }
 

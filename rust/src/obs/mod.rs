@@ -31,6 +31,23 @@
 //! 3. **Bounded memory** — the histogram is a fixed 1920-bucket
 //!    array; the trace buffer is capped and counts drops instead of
 //!    growing.
+//! 4. **Exact aggregation** — a metric snapshot serializes to JSON
+//!    (`GET /metrics.json`) and parses back bit-identically
+//!    ([`HistogramSnapshot`] round-trips are `PartialEq`-equal for
+//!    values below 2^53), and fleet merging is raw-bucket-wise
+//!    ([`HistogramSnapshot::merge_from`]): a quantile of the merged
+//!    histogram equals the quantile of the union of the shards'
+//!    samples at bucket resolution. The router never averages
+//!    per-shard percentiles. Scraping reads snapshots only, so
+//!    invariant 1 holds with fleet scraping armed.
+//!
+//! Trace context crosses the process boundary by id, not by buffer:
+//! the router stamps each proxied request with an `X-Cax-Trace` id
+//! and times it under its own Perfetto `pid`; workers adopt the id
+//! into their spans ([`span::span_with_id`]) under a per-shard `pid`
+//! ([`trace::set_pid`]), and `trace::write_merged` aligns the
+//! captures on a shared wall-clock timebase — so one request is one
+//! `args.trace` id across router → queue → batch → kernel rows.
 //!
 //! Metric naming: lowercase `[a-z0-9_]`, `_seconds` suffix for
 //! duration histograms (recorded in ns, exposed in seconds),
@@ -44,8 +61,8 @@ pub mod span;
 pub mod trace;
 
 pub use histogram::{
-    Counter, Gauge, Histogram, HistogramSnapshot, Metric, MetricSnapshot,
-    Registry,
+    merge_metric, metrics_from_json, metrics_to_json, Counter, Gauge,
+    Histogram, HistogramSnapshot, Metric, MetricSnapshot, Registry,
 };
 pub use prometheus::PromWriter;
-pub use span::{recording, set_recording, span, Span};
+pub use span::{recording, set_recording, span, span_with_id, Span};

@@ -47,24 +47,59 @@ impl PromWriter {
         PromWriter::default()
     }
 
+    fn type_line(&mut self, name: &str, kind: &str) {
+        self.out
+            .push_str(&format!("# TYPE {PREFIX}{name} {kind}\n"));
+    }
+
+    /// One sample line: `cax_{name} v` or `cax_{name}{labels} v`.
+    fn sample(&mut self, name: &str, labels: &str, value: &str) {
+        if labels.is_empty() {
+            self.out.push_str(&format!("{PREFIX}{name} {value}\n"));
+        } else {
+            self.out
+                .push_str(&format!("{PREFIX}{name}{{{labels}}} {value}\n"));
+        }
+    }
+
     pub fn counter(&mut self, name: &str, value: u64) {
-        self.out.push_str(&format!(
-            "# TYPE {PREFIX}{name} counter\n{PREFIX}{name} {value}\n"
-        ));
+        self.type_line(name, "counter");
+        self.counter_series(name, "", value);
+    }
+
+    /// One labeled counter sample with no `# TYPE` line. `labels` is
+    /// pre-formatted (`shard="0"`); call only after
+    /// [`counter`](Self::counter) / [`metric`](Self::metric) has
+    /// opened the family, so every family keeps a single `# TYPE`.
+    pub fn counter_series(&mut self, name: &str, labels: &str, value: u64) {
+        self.sample(name, labels, &format!("{value}"));
     }
 
     pub fn gauge(&mut self, name: &str, value: f64) {
-        self.out.push_str(&format!(
-            "# TYPE {PREFIX}{name} gauge\n{PREFIX}{name} {value}\n"
-        ));
+        self.type_line(name, "gauge");
+        self.gauge_series(name, "", value);
+    }
+
+    /// Labeled gauge sample, no `# TYPE` (see
+    /// [`counter_series`](Self::counter_series)).
+    pub fn gauge_series(&mut self, name: &str, labels: &str, value: f64) {
+        self.sample(name, labels, &format!("{value}"));
     }
 
     pub fn histogram(&mut self, name: &str, snap: &HistogramSnapshot) {
+        self.type_line(name, "histogram");
+        self.histogram_series(name, "", snap);
+    }
+
+    /// Labeled histogram series (`_bucket{labels,le=..}`, `_sum`,
+    /// `_count`), no `# TYPE` (see
+    /// [`counter_series`](Self::counter_series)).
+    pub fn histogram_series(&mut self, name: &str, labels: &str,
+                            snap: &HistogramSnapshot) {
         let seconds = name.ends_with("_seconds");
         let bounds: &[u64] =
             if seconds { &SECONDS_BOUNDS_NS } else { &VALUE_BOUNDS };
-        self.out
-            .push_str(&format!("# TYPE {PREFIX}{name} histogram\n"));
+        let comma = if labels.is_empty() { "" } else { "," };
         for &b in bounds {
             let le = if seconds {
                 format!("{}", b as f64 * 1e-9)
@@ -72,35 +107,88 @@ impl PromWriter {
                 format!("{b}")
             };
             self.out.push_str(&format!(
-                "{PREFIX}{name}_bucket{{le=\"{le}\"}} {}\n",
+                "{PREFIX}{name}_bucket{{{labels}{comma}le=\"{le}\"}} {}\n",
                 snap.cumulative_le(b)
             ));
         }
         self.out.push_str(&format!(
-            "{PREFIX}{name}_bucket{{le=\"+Inf\"}} {}\n",
+            "{PREFIX}{name}_bucket{{{labels}{comma}le=\"+Inf\"}} {}\n",
             snap.count
         ));
         let sum =
             if seconds { snap.sum as f64 * 1e-9 } else { snap.sum as f64 };
-        self.out
-            .push_str(&format!("{PREFIX}{name}_sum {sum}\n"));
-        self.out
-            .push_str(&format!("{PREFIX}{name}_count {}\n", snap.count));
+        self.sample(&format!("{name}_sum"), labels, &format!("{sum}"));
+        self.sample(&format!("{name}_count"), labels,
+                    &format!("{}", snap.count));
+    }
+
+    /// One complete family from a plain-value snapshot (`# TYPE` plus
+    /// the unlabeled samples; gauges also expose `{name}_high_water`).
+    pub fn metric(&mut self, name: &str, snap: &MetricSnapshot) {
+        match snap {
+            MetricSnapshot::Counter(v) => self.counter(name, *v),
+            MetricSnapshot::Gauge { value, high_water } => {
+                self.gauge(name, *value as f64);
+                self.gauge(&format!("{name}_high_water"),
+                           *high_water as f64);
+            }
+            MetricSnapshot::Histogram(s) => self.histogram(name, s),
+        }
+    }
+
+    /// One fleet family: `# TYPE`, the merged (unlabeled) sample, then
+    /// a `shard="i"` series per shard — all grouped so the page stays
+    /// a single valid exposition (gauges keep their `_high_water`
+    /// companion family contiguous too). The merged sample comes from
+    /// raw-bucket merging, so its quantiles are exact fleet
+    /// quantiles, never averages of per-shard percentiles.
+    pub fn metric_fleet(&mut self, name: &str, merged: &MetricSnapshot,
+                        shards: &[(u64, MetricSnapshot)]) {
+        match merged {
+            MetricSnapshot::Counter(v) => {
+                self.counter(name, *v);
+                for (i, shard) in shards {
+                    if let MetricSnapshot::Counter(v) = shard {
+                        self.counter_series(name, &format!("shard=\"{i}\""),
+                                            *v);
+                    }
+                }
+            }
+            MetricSnapshot::Gauge { value, high_water } => {
+                self.gauge(name, *value as f64);
+                for (i, shard) in shards {
+                    if let MetricSnapshot::Gauge { value, .. } = shard {
+                        self.gauge_series(name, &format!("shard=\"{i}\""),
+                                          *value as f64);
+                    }
+                }
+                let hw_name = format!("{name}_high_water");
+                self.gauge(&hw_name, *high_water as f64);
+                for (i, shard) in shards {
+                    if let MetricSnapshot::Gauge { high_water, .. } = shard {
+                        self.gauge_series(&hw_name,
+                                          &format!("shard=\"{i}\""),
+                                          *high_water as f64);
+                    }
+                }
+            }
+            MetricSnapshot::Histogram(s) => {
+                self.histogram(name, s);
+                for (i, shard) in shards {
+                    if let MetricSnapshot::Histogram(s) = shard {
+                        self.histogram_series(name,
+                                              &format!("shard=\"{i}\""), s);
+                    }
+                }
+            }
+        }
     }
 
     /// Append every metric of a registry, in name order. Gauges also
     /// expose their high-water mark as `{name}_high_water`.
     pub fn registry(&mut self, reg: &Registry) {
         for (name, metric) in reg.snapshot() {
-            match metric {
-                MetricSnapshot::Counter(v) => self.counter(&name, v),
-                MetricSnapshot::Gauge { value, high_water } => {
-                    self.gauge(&name, value as f64);
-                    self.gauge(&format!("{name}_high_water"),
-                               high_water as f64);
-                }
-                MetricSnapshot::Histogram(s) => self.histogram(&name, &s),
-            }
+            self.metric(&name, &metric);
         }
     }
 
@@ -141,5 +229,53 @@ mod tests {
             .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
             .collect();
         assert!(counts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn fleet_family_groups_merged_and_labeled_series() {
+        let a = Registry::new();
+        a.counter("reqs_total").add(3);
+        a.gauge("depth").set(2);
+        a.histogram("wait_seconds")
+            .record_duration(Duration::from_micros(50));
+        let b = Registry::new();
+        b.counter("reqs_total").add(4);
+        b.gauge("depth").set(5);
+        b.histogram("wait_seconds")
+            .record_duration(Duration::from_millis(20));
+
+        let mut w = PromWriter::new();
+        for ((name, snap_a), (_, snap_b)) in
+            a.snapshot().into_iter().zip(b.snapshot())
+        {
+            let mut merged = snap_a.clone();
+            merged.merge_from(&snap_b);
+            w.metric_fleet(&name, &merged, &[(0, snap_a), (1, snap_b)]);
+        }
+        let text = w.finish();
+        // Merged total plus one labeled series per shard.
+        assert!(text.contains("cax_reqs_total 7\n"));
+        assert!(text.contains("cax_reqs_total{shard=\"0\"} 3\n"));
+        assert!(text.contains("cax_reqs_total{shard=\"1\"} 4\n"));
+        // Gauges sum now-values and keep per-shard/_high_water series.
+        assert!(text.contains("cax_depth 7\n"));
+        assert!(text.contains("cax_depth{shard=\"1\"} 5\n"));
+        assert!(text.contains("cax_depth_high_water{shard=\"0\"} 2\n"));
+        // Histogram counts add; labeled buckets carry both labels.
+        assert!(text.contains("cax_wait_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains(
+            "cax_wait_seconds_bucket{shard=\"0\",le=\"+Inf\"} 1\n"
+        ));
+        assert!(text.contains("cax_wait_seconds_count{shard=\"1\"} 1\n"));
+        // Exactly one # TYPE line per family, ahead of all its samples.
+        for family in
+            ["cax_reqs_total", "cax_depth ", "cax_wait_seconds histogram"]
+        {
+            let n = text
+                .lines()
+                .filter(|l| l.starts_with("# TYPE") && l.contains(family))
+                .count();
+            assert_eq!(n, 1, "family {family:?} must keep a single TYPE");
+        }
     }
 }

@@ -44,15 +44,26 @@ pub fn recording() -> bool {
 pub struct Span {
     label: &'static str,
     start: Option<Instant>,
+    trace_id: Option<u64>,
 }
 
 /// Open a span. `label` is the metric base name: drop records into the
 /// global registry's `{label}_seconds` histogram.
 pub fn span(label: &'static str) -> Span {
+    span_with_id(label, None)
+}
+
+/// Open a span carrying a cross-process trace id (the `X-Cax-Trace`
+/// request id a worker adopted from the router). Metrics are
+/// unaffected; when a trace capture is armed the id rides in the
+/// event's `args.trace`, tying the worker's queue/batch/kernel spans
+/// to the router's proxy span for the same request.
+pub fn span_with_id(label: &'static str, trace_id: Option<u64>) -> Span {
     let armed = recording() || trace::active();
     Span {
         label,
         start: if armed { Some(Instant::now()) } else { None },
+        trace_id,
     }
 }
 
@@ -65,6 +76,7 @@ impl Drop for Span {
                 .histogram(&format!("{}_seconds", self.label))
                 .record_duration(dur);
         }
-        trace::record_complete(self.label, start, dur);
+        trace::record_complete_with_id(self.label, start, dur,
+                                       self.trace_id);
     }
 }

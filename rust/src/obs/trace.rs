@@ -15,17 +15,34 @@
 //! bounded ([`DEFAULT_CAPACITY`] events); once full, further events
 //! are counted as dropped rather than growing memory without limit.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
 
 /// Default capture-buffer bound, in events (~100 bytes each on disk).
 pub const DEFAULT_CAPACITY: usize = 1 << 20;
 
 static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// Perfetto `pid` lane stamped on every event this process records.
+/// Single-process runs and the shard router keep the default (1);
+/// workers stamp `shard_index + 2` at startup so a merged fleet trace
+/// shows one process row per shard.
+static PID: AtomicU64 = AtomicU64::new(1);
+
+/// Set this process's Perfetto `pid` lane (see [`PID`] docs).
+pub fn set_pid(pid: u64) {
+    PID.store(pid, Ordering::Relaxed);
+}
+
+pub fn pid() -> u64 {
+    PID.load(Ordering::Relaxed)
+}
 
 #[derive(Clone, Debug)]
 struct Event {
@@ -36,13 +53,26 @@ struct Event {
     dur_us: f64,
     tid: u64,
     value: f64,
+    /// Cross-process request id (`X-Cax-Trace`), emitted in `args`.
+    trace_id: Option<u64>,
 }
 
 struct Capture {
     t0: Instant,
+    /// Wall clock at `t0`, µs since the Unix epoch — the shared
+    /// timebase [`write_merged`] uses to align captures from
+    /// different processes.
+    start_unix_us: u64,
     events: Vec<Event>,
     capacity: usize,
     dropped: u64,
+}
+
+fn unix_us_now() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros().min(u64::MAX as u128) as u64)
+        .unwrap_or(0)
 }
 
 fn capture() -> &'static Mutex<Option<Capture>> {
@@ -88,11 +118,19 @@ pub fn start_with_capacity(capacity: usize) {
     let mut guard = lock();
     *guard = Some(Capture {
         t0: Instant::now(),
+        start_unix_us: unix_us_now(),
         events: Vec::new(),
         capacity: capacity.max(1),
         dropped: 0,
     });
     ACTIVE.store(true, Ordering::Relaxed);
+}
+
+/// Whether an unwritten capture exists ([`write`] wants one; the CLI
+/// uses this to skip the post-run write when the router already wrote
+/// the merged fleet trace).
+pub fn pending() -> bool {
+    lock().is_some()
 }
 
 /// Disarm and drop the capture without writing; returns how many
@@ -108,6 +146,15 @@ pub fn stop() -> usize {
 /// Record one completed span (`ph: "X"`). `name` must be a plain
 /// identifier-style label (no quotes or backslashes).
 pub fn record_complete(name: &'static str, start: Instant, dur: Duration) {
+    record_complete_with_id(name, start, dur, None);
+}
+
+/// Record one completed span carrying a cross-process trace id (the
+/// router's `X-Cax-Trace` request id) in its `args`, so one proxied
+/// request can be followed router → queue → batch → kernel across
+/// processes in the merged fleet trace.
+pub fn record_complete_with_id(name: &'static str, start: Instant,
+                               dur: Duration, trace_id: Option<u64>) {
     if !active() {
         return;
     }
@@ -128,6 +175,7 @@ pub fn record_complete(name: &'static str, start: Instant, dur: Duration) {
         dur_us: dur.as_secs_f64() * 1e6,
         tid,
         value: 0.0,
+        trace_id,
     });
 }
 
@@ -152,7 +200,45 @@ pub fn counter(name: &'static str, value: f64) {
         dur_us: 0.0,
         tid,
         value,
+        trace_id: None,
     });
+}
+
+/// Serialize one event, stamped with `pid`, timestamps shifted onto
+/// the merged timebase by `shift_us`.
+fn push_event(out: &mut String, e: &Event, pid: u64, shift_us: f64) {
+    match e.ph {
+        'C' => out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"cax\",\"ph\":\"C\",\
+             \"pid\":{pid},\"tid\":{},\"ts\":{:.3},\
+             \"args\":{{\"value\":{}}}}}",
+            e.name, e.tid, e.ts_us + shift_us, e.value
+        )),
+        _ => match e.trace_id {
+            Some(id) => out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"cax\",\"ph\":\"X\",\
+                 \"pid\":{pid},\"tid\":{},\"ts\":{:.3},\"dur\":{:.3},\
+                 \"args\":{{\"trace\":{id}}}}}",
+                e.name, e.tid, e.ts_us + shift_us, e.dur_us
+            )),
+            None => out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"cax\",\"ph\":\"X\",\
+                 \"pid\":{pid},\"tid\":{},\"ts\":{:.3},\"dur\":{:.3}}}",
+                e.name, e.tid, e.ts_us + shift_us, e.dur_us
+            )),
+        },
+    }
+}
+
+fn write_file(path: &Path, out: String) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, out)
+        .with_context(|| format!("writing trace {}", path.display()))
 }
 
 /// Disarm the capture and write it as Trace Event Format JSON.
@@ -165,34 +251,20 @@ pub fn write(path: &Path) -> Result<usize> {
         bail!("trace: no capture was started (call trace::start first)")
     };
     let mut out = String::with_capacity(cap.events.len() * 100 + 128);
-    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    out.push_str(&format!(
+        "{{\"displayTimeUnit\":\"ms\",\"captureStartUnixUs\":{},\
+         \"traceEvents\":[",
+        cap.start_unix_us
+    ));
+    let pid = pid();
     for (i, e) in cap.events.iter().enumerate() {
         if i > 0 {
             out.push(',');
         }
-        match e.ph {
-            'C' => out.push_str(&format!(
-                "{{\"name\":\"{}\",\"cat\":\"cax\",\"ph\":\"C\",\
-                 \"pid\":1,\"tid\":{},\"ts\":{:.3},\
-                 \"args\":{{\"value\":{}}}}}",
-                e.name, e.tid, e.ts_us, e.value
-            )),
-            _ => out.push_str(&format!(
-                "{{\"name\":\"{}\",\"cat\":\"cax\",\"ph\":\"X\",\
-                 \"pid\":1,\"tid\":{},\"ts\":{:.3},\"dur\":{:.3}}}",
-                e.name, e.tid, e.ts_us, e.dur_us
-            )),
-        }
+        push_event(&mut out, e, pid, 0.0);
     }
     out.push_str("]}");
-    if let Some(dir) = path.parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)
-                .with_context(|| format!("creating {}", dir.display()))?;
-        }
-    }
-    std::fs::write(path, out)
-        .with_context(|| format!("writing trace {}", path.display()))?;
+    write_file(path, out)?;
     if cap.dropped > 0 {
         crate::log_warn!(
             "trace: buffer full — dropped {} events (capacity {})",
@@ -201,4 +273,114 @@ pub fn write(path: &Path) -> Result<usize> {
         );
     }
     Ok(cap.events.len())
+}
+
+/// Disarm this process's capture and merge it with per-worker trace
+/// files (each produced by [`write`] inside a worker process) into
+/// one fleet Perfetto file. `workers` lists `(pid, process label,
+/// trace file)` per shard. Worker timestamps are re-based onto a
+/// shared wall-clock timebase (the minimum `captureStartUnixUs`
+/// across all captures) and every worker event is re-stamped with its
+/// shard's `pid`; `process_name` metadata rows label each lane.
+/// Worker tmp files are removed after a successful read; an
+/// unreadable file (crashed shard) is skipped with a warning, never
+/// fatal. Returns the total number of events written.
+pub fn write_merged(path: &Path,
+                    workers: &[(u64, String, PathBuf)]) -> Result<usize> {
+    ACTIVE.store(false, Ordering::Relaxed);
+    let taken = lock().take();
+    let Some(cap) = taken else {
+        bail!("trace: no capture was started (call trace::start first)")
+    };
+
+    let mut parsed: Vec<(u64, String, u64, Vec<Json>)> = Vec::new();
+    for (worker_pid, label, file) in workers {
+        let json = match std::fs::read_to_string(file)
+            .map_err(anyhow::Error::from)
+            .and_then(|text| Ok(Json::parse(&text)?))
+        {
+            Ok(j) => j,
+            Err(e) => {
+                crate::log_warn!(
+                    "trace: skipping {label} capture {}: {e}",
+                    file.display()
+                );
+                continue;
+            }
+        };
+        let start_unix = json
+            .get("captureStartUnixUs")
+            .and_then(Json::as_f64)
+            .unwrap_or(cap.start_unix_us as f64) as u64;
+        let events = json
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .map(<[Json]>::to_vec)
+            .unwrap_or_default();
+        let _ = std::fs::remove_file(file);
+        parsed.push((*worker_pid, label.clone(), start_unix, events));
+    }
+
+    let base = parsed
+        .iter()
+        .map(|p| p.2)
+        .chain(std::iter::once(cap.start_unix_us))
+        .min()
+        .unwrap_or(0);
+    let own_pid = pid();
+
+    let mut out = String::with_capacity(cap.events.len() * 100 + 4096);
+    out.push_str(&format!(
+        "{{\"displayTimeUnit\":\"ms\",\"captureStartUnixUs\":{base},\
+         \"traceEvents\":["
+    ));
+    let mut first = true;
+    let mut sep = |out: &mut String| {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+    };
+    let mut lanes = vec![(own_pid, "router".to_string())];
+    lanes.extend(parsed.iter().map(|p| (p.0, p.1.clone())));
+    for (lane_pid, label) in &lanes {
+        sep(&mut out);
+        out.push_str(&format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{lane_pid},\
+             \"args\":{{\"name\":\"{label}\"}}}}"
+        ));
+    }
+    let mut total = 0usize;
+    let own_shift = (cap.start_unix_us - base) as f64;
+    for e in &cap.events {
+        sep(&mut out);
+        push_event(&mut out, e, own_pid, own_shift);
+        total += 1;
+    }
+    for (worker_pid, _, start_unix, events) in &parsed {
+        let shift = (start_unix - base) as f64;
+        for ev in events {
+            let mut map = match ev {
+                Json::Obj(m) => m.clone(),
+                _ => continue,
+            };
+            if let Some(ts) = map.get("ts").and_then(Json::as_f64) {
+                map.insert("ts".to_string(), Json::Num(ts + shift));
+            }
+            map.insert("pid".to_string(), Json::from(*worker_pid));
+            sep(&mut out);
+            out.push_str(&Json::Obj(map).to_string_compact());
+            total += 1;
+        }
+    }
+    out.push_str("]}");
+    write_file(path, out)?;
+    if cap.dropped > 0 {
+        crate::log_warn!(
+            "trace: buffer full — dropped {} events (capacity {})",
+            cap.dropped,
+            cap.capacity
+        );
+    }
+    Ok(total)
 }

@@ -14,6 +14,7 @@
 //! | `GET /healthz` | — | liveness + session/queue counts |
 //! | `GET /stats` | — | scheduler counters, latency percentiles, steps/sec |
 //! | `GET /metrics` | — | Prometheus text exposition (`cax_*`) |
+//! | `GET /metrics.json` | — | exact metric snapshot (scrape/`cax top`) |
 //! | `POST /sessions` | [`ProgramSpec`] JSON | create session (201) |
 //! | `GET /sessions/<id>` | — | status: program, shape, steps, mean |
 //! | `POST /sessions/<id>/step` | `{"steps": N}` (default 1) | coalesced step |
@@ -115,6 +116,9 @@ pub(crate) struct Request {
     pub(crate) path: String,
     pub(crate) body: Vec<u8>,
     pub(crate) keep_alive: bool,
+    /// Cross-process trace id adopted from the router's `X-Cax-Trace`
+    /// header, so worker trace events tie back to the proxy span.
+    pub(crate) trace_id: Option<u64>,
 }
 
 pub(crate) enum ReadOutcome {
@@ -192,6 +196,7 @@ pub(crate) fn read_request(reader: &mut BufReader<TcpStream>)
 
     let mut content_length = 0usize;
     let mut keep_alive = version != "HTTP/1.0";
+    let mut trace_id: Option<u64> = None;
     let deadline = Instant::now() + Duration::from_secs(10);
     for _ in 0..MAX_HEADERS {
         let mut header = String::new();
@@ -217,6 +222,7 @@ pub(crate) fn read_request(reader: &mut BufReader<TcpStream>)
                 path,
                 body,
                 keep_alive,
+                trace_id,
             }));
         }
         if let Some((name, value)) = header.split_once(':') {
@@ -230,6 +236,8 @@ pub(crate) fn read_request(reader: &mut BufReader<TcpStream>)
                 }
             } else if name.eq_ignore_ascii_case("connection") {
                 keep_alive = !value.eq_ignore_ascii_case("close");
+            } else if name.eq_ignore_ascii_case("x-cax-trace") {
+                trace_id = value.parse().ok();
             }
         }
     }
@@ -370,7 +378,7 @@ fn route(ctx: &Ctx, req: &Request) -> Response {
             .histogram(&format!("{label}_seconds"))
             .record_duration(dur);
     }
-    trace::record_complete(label, start, dur);
+    trace::record_complete_with_id(label, start, dur, req.trace_id);
     resp
 }
 
@@ -381,6 +389,9 @@ fn route_inner(ctx: &Ctx, req: &Request) -> (&'static str, Response) {
         ("GET", ["healthz"]) => ("http_healthz", handle_healthz(ctx)),
         ("GET", ["stats"]) => ("http_stats", handle_stats(ctx)),
         ("GET", ["metrics"]) => ("http_metrics", handle_metrics(ctx)),
+        ("GET", ["metrics.json"]) => {
+            ("http_metrics_json", handle_metrics_json(ctx))
+        }
         ("POST", ["shutdown"]) => {
             ctx.shutdown.store(true, Ordering::SeqCst);
             let resp = Response::json(
@@ -431,7 +442,7 @@ fn handle_healthz(ctx: &Ctx) -> Response {
 /// p95_ms, p99_ms, max_ms}` JSON object. Counters stay u64 all the
 /// way into JSON (`From<u64> for Json`) — casting through `usize`
 /// would silently truncate them at 2^32 on 32-bit targets.
-fn hist_ms(snap: &HistogramSnapshot) -> Json {
+pub(crate) fn hist_ms(snap: &HistogramSnapshot) -> Json {
     let max_ms =
         if snap.count == 0 { 0.0 } else { snap.max as f64 / 1e6 };
     obj(vec![
@@ -538,33 +549,79 @@ fn handle_stats(ctx: &Ctx) -> Response {
     )
 }
 
+/// Every metric this worker exposes, one name-merged map: the
+/// scheduler's core counters/gauges, this coalescer's latency/queue
+/// registry, and the process-global registry the kernel spans record
+/// into — the shared basis of `GET /metrics` and `GET /metrics.json`.
+fn worker_metrics(ctx: &Ctx, sessions: usize)
+                  -> Vec<(String, obs::MetricSnapshot)> {
+    let stats = ctx.coalescer.stats();
+    let mut merged = std::collections::BTreeMap::new();
+    for (name, snap) in stats
+        .core_metrics(sessions, ctx.coalescer.pending())
+        .into_iter()
+        .chain(stats.registry().snapshot())
+        .chain(obs::Registry::global().snapshot())
+    {
+        obs::merge_metric(&mut merged, &name, &snap);
+    }
+    merged.into_iter().collect()
+}
+
 /// `GET /metrics`: Prometheus text exposition of the scheduler's
 /// counters, this coalescer's latency/queue registry, and the
 /// process-global registry the kernel spans record into.
 fn handle_metrics(ctx: &Ctx) -> Response {
-    let stats = ctx.coalescer.stats();
-    let load =
-        |c: &std::sync::atomic::AtomicU64| c.load(Ordering::Relaxed);
     let sessions =
         super::lock_recover(ctx.coalescer.registry()).len();
     let mut w = PromWriter::new();
-    w.counter("serve_requests_total", load(&stats.requests));
-    w.counter("serve_rejected_total", load(&stats.rejected));
-    w.counter("serve_deferred_total", load(&stats.deferred));
-    w.counter("serve_ticks_total", load(&stats.ticks));
-    w.counter("serve_batches_total", load(&stats.batches));
-    w.counter("serve_session_steps_total", load(&stats.session_steps));
-    w.gauge("serve_peak_batch", load(&stats.peak_batch) as f64);
-    w.gauge("serve_sessions", sessions as f64);
-    w.gauge("serve_pending", ctx.coalescer.pending() as f64);
+    // The scheduler's occupancy gauges are instantaneous readings
+    // (high_water is a serialization artifact) — expose them plain,
+    // with no `_high_water` companion family.
+    const INSTANT_GAUGES: [&str; 3] =
+        ["serve_peak_batch", "serve_sessions", "serve_pending"];
+    for (name, snap) in worker_metrics(ctx, sessions) {
+        match snap {
+            obs::MetricSnapshot::Gauge { value, .. }
+                if INSTANT_GAUGES.contains(&name.as_str()) =>
+            {
+                w.gauge(&name, value as f64);
+            }
+            other => w.metric(&name, &other),
+        }
+    }
     w.gauge("serve_uptime_seconds", ctx.coalescer.uptime_secs());
-    w.registry(stats.registry());
-    w.registry(obs::Registry::global());
     Response {
         status: 200,
         content_type: prometheus::CONTENT_TYPE,
         body: w.finish().into_bytes(),
     }
+}
+
+/// `GET /metrics.json`: the exact-snapshot twin of `GET /metrics` —
+/// raw histogram bucket counts, counters, gauge now/high-water —
+/// serialized via `util::json` for the shard router's
+/// scrape-and-merge and for `cax top`. Same metric names as the
+/// Prometheus page; merging these snapshots across shards with
+/// [`obs::MetricSnapshot::merge_from`] yields exact fleet quantiles.
+fn handle_metrics_json(ctx: &Ctx) -> Response {
+    let sessions =
+        super::lock_recover(ctx.coalescer.registry()).len();
+    let metrics = worker_metrics(ctx, sessions);
+    let shard = match obs::log::shard() {
+        Some(i) => Json::from(i),
+        None => Json::Null,
+    };
+    Response::json(
+        200,
+        &obj(vec![
+            ("shard", shard),
+            ("uptime_s", Json::Num(ctx.coalescer.uptime_secs())),
+            ("sessions", Json::from(sessions)),
+            ("pending", Json::from(ctx.coalescer.pending())),
+            ("metrics", obs::metrics_to_json(&metrics)),
+        ]),
+    )
 }
 
 fn handle_create(ctx: &Ctx, body: &[u8]) -> Response {
@@ -1070,6 +1127,13 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> Result<()> {
 /// signal or `POST /shutdown`, drain, return `Ok` (exit code 0).
 pub fn run(cfg: &ServeConfig) -> Result<()> {
     install_signal_handlers();
+    if let Some((index, _)) = cfg.shard {
+        // Direct worker stderr (crash logs, state-dir recovery) and
+        // Perfetto lanes carry the shard identity even when they
+        // bypass the router's forwarding prefix.
+        obs::log::set_shard(index);
+        trace::set_pid(index + 2);
+    }
     let server = start(cfg)?;
     let mut extras = String::new();
     if let Some(dir) = &cfg.state_dir {

@@ -21,9 +21,30 @@
 //!   covers the chunked SSE stream route.
 //! - `GET /healthz` → fan out, sum sessions/pending, AND the `ok`s.
 //! - `GET /stats` → fan out, reply `{"shards": [{shard, addr, stats},
-//!   ...]}` with each worker's full stats document embedded.
+//!   ...]}` with each worker's full stats document embedded, plus a
+//!   merged `fleet` roll-up (summed sessions/pending, max queue
+//!   high-water, exact merged percentiles) and the router's own
+//!   `proxy` stats.
+//! - `GET /metrics` → scrape every worker's `/metrics.json`, merge the
+//!   raw histogram buckets
+//!   ([`merge_from`](crate::obs::HistogramSnapshot::merge_from)
+//!   semantics), and serve one fleet-wide Prometheus page: merged
+//!   totals with **exact** fleet p50/p95/p99 plus per-shard
+//!   `shard="i"` labeled series, with the router's own proxy-latency
+//!   and scrape-failure metrics in the same exposition.
+//! - `GET /metrics.json` → the same scrape as JSON: per-shard exact
+//!   snapshots and the merged fleet view (what `cax top` polls).
 //! - `POST /shutdown` (or SIGINT/SIGTERM) → broadcast `/shutdown` to
 //!   every worker, wait for each child to drain and exit, then exit.
+//!
+//! A background thread re-scrapes the fleet once per tick-interval
+//! (floored at 250ms) to keep scrape-failure counters and the cached
+//! last-good snapshot fresh; the handlers always scrape live and fall
+//! back to the cache for a shard that fails mid-request. Every
+//! proxied request is stamped with an `X-Cax-Trace` id and timed into
+//! `router_proxy_seconds`; with `--trace FILE` armed, workers write
+//! per-shard capture files that [`run`] merges into one Perfetto
+//! timeline after the drain ([`trace::write_merged`]).
 //!
 //! Workers bind ephemeral loopback ports; the router learns each
 //! address by parsing the worker's `listening on ADDR` stdout line
@@ -34,16 +55,20 @@
 //! checkpoint files never cross shards, keeping the bit-identity
 //! contract per worker.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::serve::http::{self, ReadOutcome, Request, Response};
+use crate::obs::{self, prometheus, trace, MetricSnapshot, PromWriter,
+                 Registry};
+use crate::serve::http::{self, hist_ms, ReadOutcome, Request, Response};
 use crate::serve::session::parse_id;
 use crate::serve::ServeConfig;
 use crate::util::json::{obj, Json};
@@ -59,12 +84,24 @@ struct Worker {
     child: Child,
 }
 
+/// The per-shard trace tmp file workers write when fleet tracing is
+/// armed; [`run`] merges and removes them after the drain.
+fn shard_trace_path(trace: &Path, index: usize) -> PathBuf {
+    PathBuf::from(format!("{}.shard{index}.json", trace.display()))
+}
+
 /// Spawn worker `index` as a child `cax serve` process on an ephemeral
 /// port and wait for it to report its address.
-fn spawn_worker(cfg: &ServeConfig, index: usize) -> Result<Worker> {
+fn spawn_worker(cfg: &ServeConfig, index: usize, trace: Option<&Path>)
+                -> Result<Worker> {
     let exe = std::env::current_exe()
         .context("resolving the cax binary for worker spawn")?;
     let mut cmd = Command::new(exe);
+    if let Some(trace) = trace {
+        // Each worker captures its own buffer and writes it on drain;
+        // the router merges the per-shard files into one timeline.
+        cmd.arg("--trace").arg(shard_trace_path(trace, index));
+    }
     cmd.arg("--seed")
         .arg(cfg.seed.to_string())
         .arg("serve")
@@ -149,7 +186,7 @@ fn fetch(addr: SocketAddr, method: &str, path: &str, body: &[u8])
     let mut stream = TcpStream::connect(addr)
         .with_context(|| format!("connecting to shard at {addr}"))?;
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
-    send_request(&mut stream, addr, method, path, body)?;
+    send_request(&mut stream, addr, method, path, body, None)?;
     let mut raw = Vec::new();
     stream.read_to_end(&mut raw).context("reading shard response")?;
     let header_end = raw
@@ -167,10 +204,15 @@ fn fetch(addr: SocketAddr, method: &str, path: &str, body: &[u8])
 }
 
 fn send_request(stream: &mut TcpStream, addr: SocketAddr, method: &str,
-                path: &str, body: &[u8]) -> Result<()> {
+                path: &str, body: &[u8], trace_id: Option<u64>)
+                -> Result<()> {
+    let trace_header = match trace_id {
+        Some(id) => format!("X-Cax-Trace: {id}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\n{trace_header}Connection: close\r\n\r\n",
         body.len()
     );
     stream.write_all(head.as_bytes())?;
@@ -182,12 +224,18 @@ fn send_request(stream: &mut TcpStream, addr: SocketAddr, method: &str,
 /// Relay one request to `addr` and copy the response back
 /// byte-for-byte until the worker closes — content-length and chunked
 /// (SSE) responses alike, with per-chunk flushes so streamed frames
-/// reach the client promptly.
-fn proxy(client: &mut TcpStream, addr: SocketAddr, req: &Request)
-         -> Result<()> {
+/// reach the client promptly. The request is stamped with a fresh
+/// `X-Cax-Trace` id (the worker adopts it into its spans) and the
+/// whole relay — including any SSE stream lifetime — is timed into
+/// `router_proxy_seconds`.
+fn proxy(ctx: &RouterCtx, client: &mut TcpStream, addr: SocketAddr,
+         req: &Request) -> Result<()> {
+    let trace_id = ctx.trace_seq.fetch_add(1, Ordering::Relaxed) + 1;
+    let start = Instant::now();
     let mut upstream = match TcpStream::connect(addr) {
         Ok(s) => s,
         Err(e) => {
+            ctx.registry.counter("router_proxy_errors_total").inc();
             let resp = Response::error(
                 503,
                 &format!("shard at {addr} unreachable: {e}"),
@@ -196,7 +244,8 @@ fn proxy(client: &mut TcpStream, addr: SocketAddr, req: &Request)
             return Ok(());
         }
     };
-    send_request(&mut upstream, addr, &req.method, &req.path, &req.body)?;
+    send_request(&mut upstream, addr, &req.method, &req.path, &req.body,
+                 Some(trace_id))?;
     let mut buf = [0u8; 8192];
     loop {
         match upstream.read(&mut buf) {
@@ -213,6 +262,15 @@ fn proxy(client: &mut TcpStream, addr: SocketAddr, req: &Request)
             }
         }
     }
+    let dur = start.elapsed();
+    ctx.registry.counter("router_proxied_total").inc();
+    if obs::recording() {
+        ctx.registry
+            .histogram("router_proxy_seconds")
+            .record_duration(dur);
+    }
+    trace::record_complete_with_id("router_proxy", start, dur,
+                                   Some(trace_id));
     Ok(())
 }
 
@@ -220,6 +278,15 @@ struct RouterCtx {
     addrs: Vec<SocketAddr>,
     next: AtomicUsize,
     shutdown: AtomicBool,
+    /// Router-side metrics: `router_proxy_seconds`,
+    /// `router_proxied_total`, `router_scrape_failures_total` and the
+    /// per-shard `router_scrape_failures_shard_{i}_total` counters.
+    registry: Registry,
+    /// Monotone `X-Cax-Trace` id source for proxied requests.
+    trace_seq: AtomicU64,
+    /// Last good scrape per shard; handlers fall back to it when a
+    /// live scrape fails mid-request.
+    cache: Mutex<Vec<Option<ShardScrape>>>,
 }
 
 impl RouterCtx {
@@ -229,6 +296,124 @@ impl RouterCtx {
 
     fn shard_for(&self, id: u64) -> SocketAddr {
         self.addrs[(id % self.addrs.len() as u64) as usize]
+    }
+
+    fn cache(&self)
+             -> std::sync::MutexGuard<'_, Vec<Option<ShardScrape>>> {
+        self.cache
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+// --------------------------------------------------- fleet scraping
+
+/// One worker's exact metric snapshot, as scraped from its
+/// `GET /metrics.json`.
+#[derive(Clone)]
+struct ShardScrape {
+    shard: usize,
+    addr: SocketAddr,
+    /// Whether this data came from a live scrape (`false` = cached
+    /// fallback after a failed scrape, or no data at all).
+    ok: bool,
+    sessions: u64,
+    pending: u64,
+    uptime_s: f64,
+    metrics: Vec<(String, MetricSnapshot)>,
+}
+
+fn scrape_shard(shard: usize, addr: SocketAddr) -> Result<ShardScrape> {
+    let (status, body) = fetch(addr, "GET", "/metrics.json", b"")?;
+    if status != 200 {
+        bail!("shard at {addr}: GET /metrics.json returned {status}");
+    }
+    let text = std::str::from_utf8(&body)
+        .context("metrics.json body is not UTF-8")?;
+    let json = Json::parse(text)?;
+    let num = |key: &str| {
+        json.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    let metrics = obs::metrics_from_json(
+        json.get("metrics")
+            .context("metrics.json: missing metrics object")?,
+    )?;
+    Ok(ShardScrape {
+        shard,
+        addr,
+        ok: true,
+        sessions: num("sessions") as u64,
+        pending: num("pending") as u64,
+        uptime_s: num("uptime_s"),
+        metrics,
+    })
+}
+
+/// Scrape every worker's `/metrics.json` live, refreshing the cache
+/// on success; a failed shard bumps the scrape-failure counters and
+/// falls back to its last good snapshot (flagged `ok: false`).
+fn scrape_fleet(ctx: &RouterCtx) -> Vec<ShardScrape> {
+    let mut out = Vec::with_capacity(ctx.addrs.len());
+    for (index, &addr) in ctx.addrs.iter().enumerate() {
+        match scrape_shard(index, addr) {
+            Ok(scrape) => {
+                ctx.cache()[index] = Some(scrape.clone());
+                out.push(scrape);
+            }
+            Err(e) => {
+                ctx.registry
+                    .counter("router_scrape_failures_total")
+                    .inc();
+                ctx.registry
+                    .counter(&format!(
+                        "router_scrape_failures_shard_{index}_total"
+                    ))
+                    .inc();
+                crate::log_warn!(
+                    "router: scraping shard {index} at {addr} failed: {e:#}"
+                );
+                let cached = ctx.cache()[index].clone();
+                out.push(match cached {
+                    Some(mut stale) => {
+                        stale.ok = false;
+                        stale
+                    }
+                    None => ShardScrape {
+                        shard: index,
+                        addr,
+                        ok: false,
+                        sessions: 0,
+                        pending: 0,
+                        uptime_s: 0.0,
+                        metrics: Vec::new(),
+                    },
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Name-merge every scraped metric with
+/// [`MetricSnapshot::merge_from`] fleet semantics — counters add,
+/// gauges sum now / max high-water, histograms merge raw buckets, so
+/// fleet quantiles are exact.
+fn merge_scrapes(scrapes: &[ShardScrape])
+                 -> BTreeMap<String, MetricSnapshot> {
+    let mut merged = BTreeMap::new();
+    for scrape in scrapes {
+        for (name, snap) in &scrape.metrics {
+            obs::merge_metric(&mut merged, name, snap);
+        }
+    }
+    merged
+}
+
+fn merged_hist_ms(merged: &BTreeMap<String, MetricSnapshot>, name: &str)
+                  -> Json {
+    match merged.get(name) {
+        Some(MetricSnapshot::Histogram(s)) => hist_ms(s),
+        _ => Json::Null,
     }
 }
 
@@ -283,11 +468,144 @@ fn handle_stats(ctx: &RouterCtx) -> Response {
             ("stats", stats),
         ]));
     }
+    // Merged roll-up from the exact metric snapshots — the fleet p99s
+    // here come from merged raw buckets, not averaged percentiles.
+    let scrapes = scrape_fleet(ctx);
+    let merged = merge_scrapes(&scrapes);
+    let queue_high_water = match merged.get("serve_queue_depth") {
+        Some(MetricSnapshot::Gauge { high_water, .. }) => *high_water,
+        _ => 0,
+    };
+    let fleet = obj(vec![
+        (
+            "sessions",
+            Json::from(scrapes.iter().map(|s| s.sessions).sum::<u64>()),
+        ),
+        (
+            "pending",
+            Json::from(scrapes.iter().map(|s| s.pending).sum::<u64>()),
+        ),
+        ("queue_high_water", Json::from(queue_high_water)),
+        ("request_wait", merged_hist_ms(&merged, "serve_wait_seconds")),
+        ("step_latency", merged_hist_ms(&merged, "serve_step_seconds")),
+        (
+            "scraped_ok",
+            Json::from(
+                scrapes.iter().filter(|s| s.ok).count(),
+            ),
+        ),
+    ]);
+    let proxy_hist = ctx
+        .registry
+        .histogram("router_proxy_seconds")
+        .snapshot();
+    let proxy = obj(vec![
+        (
+            "proxied",
+            Json::from(ctx.registry.counter("router_proxied_total").get()),
+        ),
+        (
+            "errors",
+            Json::from(
+                ctx.registry.counter("router_proxy_errors_total").get(),
+            ),
+        ),
+        (
+            "scrape_failures",
+            Json::from(
+                ctx.registry
+                    .counter("router_scrape_failures_total")
+                    .get(),
+            ),
+        ),
+        ("latency", hist_ms(&proxy_hist)),
+    ]);
+    Response::json(
+        200,
+        &obj(vec![
+            ("router", Json::Bool(true)),
+            ("fleet", fleet),
+            ("proxy", proxy),
+            ("shards", Json::Arr(shards)),
+        ]),
+    )
+}
+
+/// Router `GET /metrics`: one fleet-wide Prometheus page. The
+/// router's own registry leads, then every scraped family as merged
+/// totals plus per-shard `shard="i"` series.
+fn handle_metrics(ctx: &RouterCtx) -> Response {
+    let scrapes = scrape_fleet(ctx);
+    let merged = merge_scrapes(&scrapes);
+    let mut w = PromWriter::new();
+    w.gauge("router_shards", ctx.addrs.len() as f64);
+    w.registry(&ctx.registry);
+    for (name, snap) in &merged {
+        let shards: Vec<(u64, MetricSnapshot)> = scrapes
+            .iter()
+            .filter_map(|s| {
+                s.metrics
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map(|(_, m)| (s.shard as u64, m.clone()))
+            })
+            .collect();
+        w.metric_fleet(name, snap, &shards);
+    }
+    Response {
+        status: 200,
+        content_type: prometheus::CONTENT_TYPE,
+        body: w.finish().into_bytes(),
+    }
+}
+
+/// Router `GET /metrics.json`: per-shard exact snapshots plus the
+/// merged fleet view and the router's own metrics — the document
+/// `cax top` polls.
+fn handle_metrics_json(ctx: &RouterCtx) -> Response {
+    let scrapes = scrape_fleet(ctx);
+    let merged = merge_scrapes(&scrapes);
+    let merged_pairs: Vec<(String, MetricSnapshot)> =
+        merged.into_iter().collect();
+    let shards: Vec<Json> = scrapes
+        .iter()
+        .map(|s| {
+            obj(vec![
+                ("shard", Json::from(s.shard)),
+                ("addr", Json::from(s.addr.to_string().as_str())),
+                ("ok", Json::Bool(s.ok)),
+                ("sessions", Json::from(s.sessions)),
+                ("pending", Json::from(s.pending)),
+                ("uptime_s", Json::Num(s.uptime_s)),
+                ("metrics", obs::metrics_to_json(&s.metrics)),
+            ])
+        })
+        .collect();
+    let router_metrics = ctx.registry.snapshot();
     Response::json(
         200,
         &obj(vec![
             ("router", Json::Bool(true)),
             ("shards", Json::Arr(shards)),
+            (
+                "merged",
+                obj(vec![
+                    (
+                        "sessions",
+                        Json::from(
+                            scrapes.iter().map(|s| s.sessions).sum::<u64>(),
+                        ),
+                    ),
+                    (
+                        "pending",
+                        Json::from(
+                            scrapes.iter().map(|s| s.pending).sum::<u64>(),
+                        ),
+                    ),
+                    ("metrics", obs::metrics_to_json(&merged_pairs)),
+                ]),
+            ),
+            ("router_metrics", obs::metrics_to_json(&router_metrics)),
         ]),
     )
 }
@@ -302,6 +620,8 @@ fn route(ctx: &RouterCtx, client: &mut TcpStream, req: &Request)
     let resp = match (req.method.as_str(), segments.as_slice()) {
         ("GET", ["healthz"]) => handle_healthz(ctx),
         ("GET", ["stats"]) => handle_stats(ctx),
+        ("GET", ["metrics"]) => handle_metrics(ctx),
+        ("GET", ["metrics.json"]) => handle_metrics_json(ctx),
         ("POST", ["shutdown"]) => {
             ctx.shutdown.store(true, Ordering::SeqCst);
             Response::json(
@@ -310,12 +630,12 @@ fn route(ctx: &RouterCtx, client: &mut TcpStream, req: &Request)
         ("POST", ["sessions"]) => {
             let pick = ctx.next.fetch_add(1, Ordering::Relaxed)
                 % ctx.addrs.len();
-            proxy(client, ctx.addrs[pick], req)?;
+            proxy(ctx, client, ctx.addrs[pick], req)?;
             return Ok(None);
         }
         (_, ["sessions", id, ..]) => match parse_id(id) {
             Some(id) => {
-                proxy(client, ctx.shard_for(id), req)?;
+                proxy(ctx, client, ctx.shard_for(id), req)?;
                 return Ok(None);
             }
             None => {
@@ -406,15 +726,19 @@ fn drain_workers(workers: &mut [Worker]) {
 }
 
 /// Run the shard router until `/shutdown` or a signal: spawn the
-/// workers, serve the routing front end, then drain the fleet.
-pub fn run(cfg: &ServeConfig) -> Result<()> {
+/// workers, serve the routing front end, then drain the fleet. With
+/// `trace` set (the CLI's `--trace FILE`, already armed via
+/// [`trace::start`]), each worker writes a per-shard capture on drain
+/// and the router merges them — plus its own proxy spans — into one
+/// Perfetto file at `trace`.
+pub fn run(cfg: &ServeConfig, trace_out: Option<&Path>) -> Result<()> {
     if cfg.shards < 2 {
         bail!("router wants --shards >= 2, got {}", cfg.shards);
     }
     http::install_signal_handlers();
     let mut workers = Vec::with_capacity(cfg.shards);
     for index in 0..cfg.shards {
-        match spawn_worker(cfg, index) {
+        match spawn_worker(cfg, index, trace_out) {
             Ok(worker) => workers.push(worker),
             Err(e) => {
                 drain_workers(&mut workers);
@@ -439,7 +763,23 @@ pub fn run(cfg: &ServeConfig) -> Result<()> {
         addrs: workers.iter().map(|w| w.addr).collect(),
         next: AtomicUsize::new(0),
         shutdown: AtomicBool::new(false),
+        registry: Registry::new(),
+        trace_seq: AtomicU64::new(0),
+        cache: Mutex::new((0..cfg.shards).map(|_| None).collect()),
     });
+    // Background scrape loop: one fleet scrape per tick-interval
+    // (floored at 250ms) keeps the failure counters live and the
+    // per-shard cache warm for handler fallback.
+    {
+        let ctx = Arc::clone(&ctx);
+        let interval = cfg.tick_window.max(Duration::from_millis(250));
+        std::thread::spawn(move || {
+            while !ctx.stopping() {
+                let _ = scrape_fleet(&ctx);
+                std::thread::sleep(interval);
+            }
+        });
+    }
     while !ctx.stopping() {
         match listener.accept() {
             Ok((stream, _)) => {
@@ -457,6 +797,25 @@ pub fn run(cfg: &ServeConfig) -> Result<()> {
     }
     crate::log_info!("router: draining {} shards", workers.len());
     drain_workers(&mut workers);
+    if let Some(trace_path) = trace_out {
+        // Workers wrote their per-shard captures while draining; fold
+        // them (re-based and re-stamped) in with the router's own.
+        let worker_traces: Vec<(u64, String, PathBuf)> = (0..cfg.shards)
+            .map(|i| {
+                (i as u64 + 2, format!("shard {i}"),
+                 shard_trace_path(trace_path, i))
+            })
+            .collect();
+        match trace::write_merged(trace_path, &worker_traces) {
+            Ok(events) => crate::log_info!(
+                "router: wrote merged fleet trace {} ({events} events)",
+                trace_path.display()
+            ),
+            Err(e) => crate::log_warn!(
+                "router: merged trace write failed: {e:#}"
+            ),
+        }
+    }
     Ok(())
 }
 

@@ -41,7 +41,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::backend::{Backend, NativeBackend};
-use crate::obs::{trace, Counter, Gauge, Histogram, Registry};
+use crate::obs::{trace, Counter, Gauge, Histogram, MetricSnapshot, Registry};
 use crate::serve::checkpoint::CheckpointStore;
 use crate::serve::session::{fmt_id, SessionRegistry, FAMILIES};
 use crate::serve::stream::StreamHub;
@@ -245,6 +245,42 @@ impl ServeStats {
             .copied()
             .zip(self.family.iter().map(|c| c.get()))
             .collect()
+    }
+
+    /// Plain-value snapshots of the scheduler's top-level atomics
+    /// (counters the histogram [`registry`](Self::registry) doesn't
+    /// cover) plus the instantaneous session/pending occupancy gauges
+    /// — the shared basis of `GET /metrics` and `GET /metrics.json`,
+    /// so both pages expose identical names with fleet-mergeable
+    /// semantics (counters add; gauges sum now-values, max
+    /// high-waters).
+    pub fn core_metrics(&self, sessions: usize, pending: usize)
+                        -> Vec<(String, MetricSnapshot)> {
+        let counter = |name: &str, v: u64| {
+            (name.to_string(), MetricSnapshot::Counter(v))
+        };
+        let gauge = |name: &str, v: u64| {
+            (name.to_string(),
+             MetricSnapshot::Gauge { value: v, high_water: v })
+        };
+        vec![
+            counter("serve_requests_total",
+                    self.requests.load(Ordering::Relaxed)),
+            counter("serve_rejected_total",
+                    self.rejected.load(Ordering::Relaxed)),
+            counter("serve_deferred_total",
+                    self.deferred.load(Ordering::Relaxed)),
+            counter("serve_ticks_total",
+                    self.ticks.load(Ordering::Relaxed)),
+            counter("serve_batches_total",
+                    self.batches.load(Ordering::Relaxed)),
+            counter("serve_session_steps_total",
+                    self.session_steps.load(Ordering::Relaxed)),
+            gauge("serve_peak_batch",
+                  self.peak_batch.load(Ordering::Relaxed)),
+            gauge("serve_sessions", sessions as u64),
+            gauge("serve_pending", pending as u64),
+        ]
     }
 }
 

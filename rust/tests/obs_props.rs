@@ -17,7 +17,9 @@
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use cax::obs::{self, log, trace, Gauge, Histogram};
+use cax::obs::{
+    self, log, trace, Gauge, Histogram, HistogramSnapshot, MetricSnapshot,
+};
 use cax::util::json::Json;
 use cax::util::timer::percentile;
 
@@ -258,6 +260,125 @@ fn trace_buffer_bounds_drops_instead_of_growing() {
     let held = trace::stop();
     assert_eq!(held, 4, "buffer must cap at its capacity");
     assert!(!trace::active());
+}
+
+#[test]
+fn metric_snapshots_roundtrip_json_bit_identically() {
+    // Histogram: a wide spread of samples, round-tripped through the
+    // `/metrics.json` wire format, must come back `PartialEq`-equal —
+    // and a live histogram rebuilt from the parsed snapshot must
+    // merge identically to merging the original directly.
+    let mut seed = 11u64;
+    let h = Histogram::new();
+    for _ in 0..2500 {
+        let magnitude = 1u64 << (4 + (splitmix(&mut seed) % 30));
+        h.record(magnitude + splitmix(&mut seed) % magnitude);
+    }
+    let snap = h.snapshot();
+    let wire = snap.to_json().to_string_compact();
+    let back = HistogramSnapshot::from_json(&Json::parse(&wire).unwrap())
+        .expect("histogram from_json");
+    assert_eq!(snap, back, "snapshot -> JSON -> snapshot must be exact");
+
+    let rebuilt = Histogram::from_snapshot(&back);
+    let via_rebuilt = Histogram::new();
+    via_rebuilt.merge_from(&rebuilt);
+    let direct = Histogram::new();
+    direct.merge_from(&h);
+    assert_eq!(
+        via_rebuilt.snapshot(),
+        direct.snapshot(),
+        "merging a JSON-round-tripped histogram must be bit-identical \
+         to merging the original"
+    );
+
+    // Counter and gauge snapshots ride the same tagged encoding.
+    let scalars = [
+        MetricSnapshot::Counter(12_345),
+        MetricSnapshot::Gauge { value: 7, high_water: 40 },
+    ];
+    for m in &scalars {
+        let wire = m.to_json().to_string_compact();
+        let back =
+            MetricSnapshot::from_json(&Json::parse(&wire).unwrap())
+                .expect("metric from_json");
+        assert_eq!(*m, back);
+    }
+
+    // Empty histograms survive the trip: the internal min/max
+    // sentinels are not JSON-representable and must be restored.
+    let empty = Histogram::new().snapshot();
+    let wire = empty.to_json().to_string_compact();
+    assert_eq!(
+        empty,
+        HistogramSnapshot::from_json(&Json::parse(&wire).unwrap())
+            .unwrap()
+    );
+
+    // And the whole named-metric map round-trips in order.
+    let named = vec![
+        ("a_total".to_string(), MetricSnapshot::Counter(3)),
+        ("b_seconds".to_string(), MetricSnapshot::Histogram(snap)),
+    ];
+    let wire = obs::metrics_to_json(&named).to_string_compact();
+    let back = obs::metrics_from_json(&Json::parse(&wire).unwrap())
+        .expect("metrics_from_json");
+    assert_eq!(named, back);
+}
+
+#[test]
+fn fleet_merge_of_scraped_snapshots_is_exact() {
+    // Three "shards" record disjoint latency populations. Merging
+    // their JSON-round-tripped snapshots (exactly what the shard
+    // router does with scraped `/metrics.json` documents) must equal
+    // one histogram that saw every sample directly — so a fleet
+    // quantile is the quantile of the union of the shards' samples,
+    // never an average of per-shard percentiles.
+    let mut seed = 23u64;
+    let union = Histogram::new();
+    let mut merged: Option<HistogramSnapshot> = None;
+    for shard in 0..3u64 {
+        let h = Histogram::new();
+        for _ in 0..1000 {
+            let v = (1u64 << (6 + 4 * shard))
+                + splitmix(&mut seed) % 100_000;
+            h.record(v);
+            union.record(v);
+        }
+        let wire = h.snapshot().to_json().to_string_compact();
+        let snap =
+            HistogramSnapshot::from_json(&Json::parse(&wire).unwrap())
+                .unwrap();
+        match &mut merged {
+            None => merged = Some(snap),
+            Some(m) => m.merge_from(&snap),
+        }
+    }
+    let merged = merged.unwrap();
+    let union_snap = union.snapshot();
+    assert_eq!(merged, union_snap, "bucket-exact fleet merge");
+    for q in [0.0, 0.5, 0.9, 0.95, 0.99, 1.0] {
+        assert_eq!(
+            merged.quantile(q),
+            union_snap.quantile(q),
+            "fleet q={q} must equal the union's quantile exactly"
+        );
+    }
+
+    // The typed wrapper merges with the same semantics, and gauges
+    // aggregate as sum-of-now / max-of-high-water.
+    let mut a = MetricSnapshot::Histogram(merged.clone());
+    let b = MetricSnapshot::Histogram(union_snap.clone());
+    a.merge_from(&b);
+    match a {
+        MetricSnapshot::Histogram(h) => {
+            assert_eq!(h.count, 2 * union_snap.count)
+        }
+        _ => unreachable!(),
+    }
+    let mut g = MetricSnapshot::Gauge { value: 4, high_water: 9 };
+    g.merge_from(&MetricSnapshot::Gauge { value: 3, high_water: 7 });
+    assert_eq!(g, MetricSnapshot::Gauge { value: 7, high_water: 9 });
 }
 
 #[test]

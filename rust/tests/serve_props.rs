@@ -505,6 +505,48 @@ fn stats_and_metrics_expose_latency_shape() {
     // exposed alongside the per-coalescer metrics.
     assert!(text.contains("cax_kernel_life_seconds_count"), "{text}");
 
+    // `/metrics.json` is the scrape wire format: the raw snapshots the
+    // shard router merges. Its counts must be the exact numbers the
+    // Prometheus page rendered, and the document must round-trip
+    // through the snapshot parser.
+    let (status, body) = http(addr, "GET", "/metrics.json", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).expect("metrics.json parses");
+    assert_eq!(doc.get("shard"), Some(&Json::Null),
+               "unsharded worker must report a null shard: {body}");
+    assert_eq!(doc.get("sessions").and_then(Json::as_usize), Some(2),
+               "{body}");
+    assert_eq!(doc.get("pending").and_then(Json::as_usize), Some(0),
+               "{body}");
+    let metrics = cax::obs::metrics_from_json(
+        doc.get("metrics").expect("metrics map"),
+    )
+    .expect("metric snapshots parse");
+    let find = |name: &str| -> cax::obs::MetricSnapshot {
+        metrics
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, m)| m.clone())
+            .unwrap_or_else(|| panic!("missing {name} in {body}"))
+    };
+    assert_eq!(find("serve_requests_total"),
+               cax::obs::MetricSnapshot::Counter(6));
+    match find("serve_wait_seconds") {
+        cax::obs::MetricSnapshot::Histogram(h) => {
+            assert_eq!(h.count, 6,
+                       "raw wait buckets must carry all 6 samples");
+            assert!(h.quantile(0.99) >= h.quantile(0.5));
+        }
+        other => panic!("serve_wait_seconds was {other:?}"),
+    }
+    match find("serve_queue_depth") {
+        cax::obs::MetricSnapshot::Gauge { value, high_water } => {
+            assert_eq!(value, 0);
+            assert!(high_water >= 1);
+        }
+        other => panic!("serve_queue_depth was {other:?}"),
+    }
+
     server.stop();
     server.join().expect("clean shutdown");
 }
@@ -1084,6 +1126,77 @@ fn shard_router_routes_sessions_across_worker_processes() {
     assert_eq!(status, 200);
     assert!(body.contains("\"router\": true"), "{body}");
     assert!(body.contains("\"shard\": 1"), "{body}");
+
+    // The /stats roll-up sums sessions across shards exactly and
+    // carries the router's own proxy counters alongside.
+    use cax::util::json::Json;
+    let stats_doc = Json::parse(&body).expect("router stats parses");
+    let fleet = stats_doc.get("fleet").expect("fleet roll-up");
+    assert_eq!(fleet.get("sessions").and_then(Json::as_usize), Some(2),
+               "{body}");
+    assert_eq!(fleet.get("scraped_ok").and_then(Json::as_usize), Some(2),
+               "{body}");
+    let proxy = stats_doc.get("proxy").expect("proxy stats");
+    assert!(proxy.get("proxied").and_then(Json::as_f64).unwrap_or(0.0)
+                >= 4.0,
+            "creates + step + snapshot all proxied: {body}");
+    assert_eq!(proxy.get("errors").and_then(Json::as_usize), Some(0),
+               "{body}");
+
+    // Router /metrics: one fleet-wide Prometheus page — merged
+    // (unlabeled) totals plus per-shard `shard="i"` series, with a
+    // single `# TYPE` line per family.
+    let (status, text) = http(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert!(text.contains("cax_router_shards 2\n"), "{text}");
+    assert!(text.contains("cax_serve_requests_total{shard=\"0\"}"),
+            "{text}");
+    assert!(text.contains("cax_serve_requests_total{shard=\"1\"}"),
+            "{text}");
+    assert!(text.lines()
+                .any(|l| l.starts_with("cax_serve_requests_total ")),
+            "merged family line must sit beside the labeled series: \
+             {text}");
+    assert_eq!(
+        text.lines()
+            .filter(|l| *l == "# TYPE cax_serve_requests_total counter")
+            .count(),
+        1,
+        "exactly one TYPE line per family: {text}"
+    );
+    assert!(text.contains("cax_serve_wait_seconds_bucket{le=\"+Inf\"}"),
+            "merged raw wait buckets must be exposed: {text}");
+    assert!(text.contains("cax_router_proxied_total"), "{text}");
+
+    // Router /metrics.json: per-shard exact snapshots plus the merged
+    // fleet view. The merged requests counter must be the exact sum of
+    // the per-shard counters — aggregation, never averaging.
+    let (status, body) = http(addr, "GET", "/metrics.json", "");
+    assert_eq!(status, 200, "{body}");
+    let doc = Json::parse(&body).expect("router metrics.json parses");
+    assert_eq!(doc.get("router").and_then(Json::as_bool), Some(true),
+               "{body}");
+    let shards_arr =
+        doc.get("shards").and_then(Json::as_arr).expect("shards array");
+    assert_eq!(shards_arr.len(), 2, "{body}");
+    let requests_of = |metrics_json: &Json| -> u64 {
+        let metrics = cax::obs::metrics_from_json(metrics_json)
+            .expect("metric snapshots parse");
+        match metrics.iter().find(|(n, _)| n == "serve_requests_total") {
+            Some((_, cax::obs::MetricSnapshot::Counter(v))) => *v,
+            other => panic!("serve_requests_total was {other:?}"),
+        }
+    };
+    let shard_sum: u64 = shards_arr
+        .iter()
+        .map(|s| requests_of(s.get("metrics").expect("shard metrics")))
+        .sum();
+    let merged = doc.get("merged").expect("merged fleet view");
+    let merged_requests =
+        requests_of(merged.get("metrics").expect("merged metrics"));
+    assert_eq!(merged_requests, shard_sum,
+               "merged counter must equal the per-shard sum exactly");
+    assert!(merged_requests >= 1, "the step above was counted: {body}");
 
     // Drain: the router shuts its workers down and exits 0.
     let (status, body) = http(addr, "POST", "/shutdown", "");
